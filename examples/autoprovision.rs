@@ -1,0 +1,65 @@
+//! Auto-provisioning demo (Figure 8): predicted-latency ("preempt") vs
+//! observed-latency ("relief") triggers under an overloaded start.
+//!
+//! Run: `cargo run --release --example autoprovision`
+
+use block::cluster::{ClusterSim, SimOptions};
+use block::config::{ClusterConfig, SchedulerKind, WorkloadConfig, WorkloadKind};
+use block::metrics::render_table;
+use block::util::stats::{mean, percentile};
+use block::workload::generate;
+
+fn main() -> anyhow::Result<()> {
+    let workload = WorkloadConfig {
+        kind: WorkloadKind::ShareGpt,
+        qps: 12.0,          // ~120% of a 2-instance cluster's capacity
+        n_requests: 1500,
+        seed: 11,
+    };
+    let threshold = 40.0;
+
+    let mut rows = Vec::new();
+    for (name, enabled, predictive, initial) in [
+        ("preempt", true, true, 2usize),
+        ("relief", true, false, 2),
+        ("static-4", false, false, 4),
+    ] {
+        let mut cfg = ClusterConfig {
+            n_instances: initial,
+            scheduler: SchedulerKind::Block,
+            ..ClusterConfig::default()
+        };
+        cfg.provision.enabled = enabled;
+        cfg.provision.predictive = predictive;
+        cfg.provision.threshold = threshold;
+        cfg.provision.initial_instances = initial;
+        cfg.provision.max_instances = 4;
+        cfg.provision.cold_start = 30.0;
+
+        let requests = generate(&workload)?;
+        let res = ClusterSim::new(cfg, SimOptions::default()).run(&requests);
+        let e2e = res.metrics.e2es();
+        let over = e2e.iter().filter(|&&x| x > threshold).count();
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.1}", mean(&e2e)),
+            format!("{:.1}", percentile(&e2e, 99.0)),
+            format!("{over}"),
+            format!("{}", res.size_timeline.last().unwrap().1),
+            res.provision_events
+                .iter()
+                .map(|e| format!("{:.0}s", e.time))
+                .collect::<Vec<_>>()
+                .join(","),
+        ]);
+    }
+    println!("Auto-provisioning at {} QPS (threshold {}s, cold start 30s):\n",
+             workload.qps, threshold);
+    println!("{}", render_table(
+        &["strategy", "mean e2e", "p99 e2e", ">thresh", "final size",
+          "provision times"],
+        &rows));
+    println!("Preemptive provisioning (trigger on *predicted* latency) acts\n\
+              before the backlog forms; relief waits for damage already done.");
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! SLO capacity search (the Table-2 methodology): find the max QPS each
+//! scheduler sustains with TTFT P99 < 3 s on a small cluster.
+//!
+//! Run: `cargo run --release --example capacity_search`
+
+use block::cluster::{run_experiment, SimOptions};
+use block::config::{ClusterConfig, SchedulerKind, WorkloadConfig, WorkloadKind};
+use block::metrics::capacity::{search_capacity, DEFAULT_SLO_TTFT_P99};
+use block::metrics::render_table;
+
+fn main() -> anyhow::Result<()> {
+    let n_instances = 4;
+    let n_requests = 1200;
+    let mut rows = Vec::new();
+    for scheduler in [SchedulerKind::Random, SchedulerKind::RoundRobin,
+                      SchedulerKind::LlumnixMinus, SchedulerKind::Block] {
+        let result = search_capacity(
+            |qps| {
+                let cfg = ClusterConfig { n_instances, scheduler,
+                                          ..ClusterConfig::default() };
+                let wl = WorkloadConfig { kind: WorkloadKind::ShareGpt, qps,
+                                          n_requests, seed: 7 };
+                run_experiment(cfg, &wl,
+                               SimOptions { probes: false, sample_prob: 0.0 })
+                    .map(|r| r.metrics.summary().p99_ttft)
+                    .unwrap_or(f64::INFINITY)
+            },
+            DEFAULT_SLO_TTFT_P99,
+            8.0,
+            40.0,
+            0.25,
+        );
+        println!("{}: capacity {:.2} QPS ({} evaluations)",
+                 scheduler.name(), result.capacity, result.evaluations.len());
+        rows.push(vec![scheduler.name().to_string(),
+                       format!("{:.2}", result.capacity)]);
+    }
+    println!("\nCapacity under TTFT P99 < {DEFAULT_SLO_TTFT_P99}s \
+              ({n_instances} instances):");
+    println!("{}", render_table(&["scheduler", "max QPS"], &rows));
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Quickstart: simulate a small cluster under load and compare Block
+//! against round-robin — the paper's headline claim in 30 seconds.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use block::cluster::{run_experiment, SimOptions};
+use block::config::{ClusterConfig, SchedulerKind, WorkloadConfig, WorkloadKind};
+use block::metrics::render_table;
+
+fn main() -> anyhow::Result<()> {
+    let workload = WorkloadConfig {
+        kind: WorkloadKind::ShareGpt,
+        qps: 22.0,           // just past a 4-instance cluster's knee
+        n_requests: 2000,
+        seed: 7,
+    };
+
+    let mut rows = Vec::new();
+    for scheduler in [SchedulerKind::RoundRobin, SchedulerKind::LlumnixMinus,
+                      SchedulerKind::Block] {
+        let cfg = ClusterConfig { n_instances: 4, scheduler,
+                                  ..ClusterConfig::default() };
+        let res = run_experiment(cfg, &workload,
+                                 SimOptions { probes: false, sample_prob: 0.0 })?;
+        let s = res.metrics.summary();
+        rows.push(vec![
+            scheduler.name().to_string(),
+            format!("{:.3}", s.mean_ttft),
+            format!("{:.3}", s.p99_ttft),
+            format!("{:.2}", s.mean_e2e),
+            format!("{:.2}", s.p99_e2e),
+            format!("{:?}", res.wall_time),
+        ]);
+    }
+    println!("4x A30 instances serving LLaMA2-7B (simulated), ShareGPT-like \
+              load at {} QPS, {} requests:\n", workload.qps, workload.n_requests);
+    println!("{}", render_table(
+        &["scheduler", "mean TTFT(s)", "p99 TTFT(s)", "mean e2e(s)",
+          "p99 e2e(s)", "sim wall"],
+        &rows));
+    println!("Block's predictive dispatch cuts tail TTFT by routing each\n\
+              request to the instance whose *simulated future* finishes it\n\
+              fastest — see DESIGN.md for how the Predictor works.");
+    Ok(())
+}

@@ -1,0 +1,214 @@
+"""AOT compile path: lower every served computation to HLO text + manifest.
+
+Run once by ``make artifacts``.  Emits into ``artifacts/``:
+
+  * ``prefill.hlo.txt``                — prompt encoding (B=1)
+  * ``decode_b{1,2,4,8}.hlo.txt``      — one continuous-batching decode step
+                                         per batch-size bucket
+  * ``length_model.hlo.txt``           — response-length regressor (N=32)
+  * ``params/*.bin``                   — raw little-endian f32 weights
+  * ``sharegpt_synth.jsonl``           — synthetic ShareGPT corpus
+  * ``length_model_eval.json``         — Table-1 metrics on the eval split
+  * ``manifest.json``                  — shapes/dtypes/input order for Rust
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Python never runs on the request path — after this script, the Rust binary
+is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, length_model, model
+
+DECODE_BUCKETS = [1, 2, 4, 8]
+LENGTH_BATCH = 32
+CORPUS_N = 50_000
+TRAIN_N = 40_000          # first 40k train / last 10k eval (paper's split)
+
+# Serving config: small enough that CPU-PJRT interpret-mode Pallas decodes
+# at an interactive rate; structure identical to the full model.
+SERVING_CONFIG = model.ModelConfig(
+    vocab_size=512, d_model=256, n_layers=2, n_heads=8, head_dim=32,
+    d_ff=704, max_context=320, prefill_pad=256, attn_block_s=160,
+    prefill_block=128)
+
+GOLDEN_PROMPTS = [
+    "explain the theory of relativity in detail",
+    "hi there how are you",
+    "summarize the following text briefly the quick brown fox jumps",
+    "write a function to sort a list in python?",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(arr) -> dict:
+    return {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+
+
+def _write_hlo(out_dir, name, lowered, inputs, outputs):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  {name}.hlo.txt ({len(text) / 1e6:.1f} MB)")
+    return {"file": f"{name}.hlo.txt", "inputs": inputs, "outputs": outputs}
+
+
+def _save_params(params, out_dir, subdir):
+    os.makedirs(os.path.join(out_dir, subdir), exist_ok=True)
+    entries = []
+    for name in sorted(params):
+        arr = np.asarray(params[name], np.float32)
+        rel = f"{subdir}/{name}.bin"
+        arr.tofile(os.path.join(out_dir, rel))
+        entries.append({"name": name, "file": rel, "shape": list(arr.shape),
+                        "dtype": "f32"})
+    return entries
+
+
+def build(out_dir: str, quick: bool = False):
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = SERVING_CONFIG
+    manifest = {
+        "version": 1,
+        "model": {
+            "vocab_size": cfg.vocab_size, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim, "d_ff": cfg.d_ff,
+            "max_context": cfg.max_context, "prefill_pad": cfg.prefill_pad,
+            "eos_id": model.EOS_ID, "param_count": cfg.param_count,
+            "attn_block_s": cfg.attn_block_s,
+            "prefill_block": cfg.prefill_block,
+        },
+        "artifacts": {},
+    }
+
+    # ---- model params ----------------------------------------------------
+    print("initializing model params "
+          f"({cfg.param_count / 1e6:.1f}M, n_layers={cfg.n_layers})")
+    params = model.init_params(jax.random.PRNGKey(42), cfg)
+    manifest["params"] = _save_params(params, out_dir, "params")
+    param_inputs = [dict(name=f"param:{k}", **_spec(params[k]))
+                    for k in sorted(params)]
+
+    # ---- prefill ----------------------------------------------------------
+    print("lowering prefill")
+    tokens_spec = jax.ShapeDtypeStruct((cfg.prefill_pad,), jnp.int32)
+    len_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = jax.jit(functools.partial(model.prefill, cfg=cfg)).lower(
+        params, tokens_spec, len_spec)
+    manifest["artifacts"]["prefill"] = _write_hlo(
+        out_dir, "prefill", lowered,
+        param_inputs
+        + [{"name": "tokens", "shape": [cfg.prefill_pad], "dtype": "int32"},
+           {"name": "length", "shape": [], "dtype": "int32"}],
+        [{"name": "first_token", "shape": [], "dtype": "int32"},
+         {"name": "kv",
+          "shape": [cfg.n_layers, 2, cfg.prefill_pad, cfg.n_heads,
+                    cfg.head_dim], "dtype": "f32"}])
+
+    # ---- decode buckets ----------------------------------------------------
+    for b in DECODE_BUCKETS:
+        print(f"lowering decode_b{b}")
+        kv_spec = jax.ShapeDtypeStruct(
+            (cfg.n_layers, 2, b, cfg.max_context, cfg.n_heads, cfg.head_dim),
+            jnp.float32)
+        lens_spec = jax.ShapeDtypeStruct((b,), jnp.int32)
+        toks_spec = jax.ShapeDtypeStruct((b,), jnp.int32)
+        lowered = jax.jit(functools.partial(model.decode_step, cfg=cfg)).lower(
+            params, kv_spec, lens_spec, toks_spec)
+        manifest["artifacts"][f"decode_b{b}"] = _write_hlo(
+            out_dir, f"decode_b{b}", lowered,
+            param_inputs
+            + [dict(name="kv", **_spec(kv_spec)),
+               {"name": "lens", "shape": [b], "dtype": "int32"},
+               {"name": "tokens", "shape": [b], "dtype": "int32"}],
+            [{"name": "next_tokens", "shape": [b], "dtype": "int32"},
+             dict(name="kv_new", **_spec(kv_spec))])
+
+    # ---- corpus + length model --------------------------------------------
+    n = 2000 if quick else CORPUS_N
+    n_train = int(n * TRAIN_N / CORPUS_N)
+    print(f"generating synthetic ShareGPT corpus ({n} samples)")
+    samples = corpus.generate(n)
+    corpus.write_jsonl(samples, os.path.join(out_dir, "sharegpt_synth.jsonl"))
+
+    print("training length model "
+          f"({n_train} train / {n - n_train} eval samples)")
+    lm_params = length_model.train(samples[:n_train],
+                                   epochs=8 if quick else 60)
+    metrics = length_model.evaluate(lm_params, samples[n_train:])
+    print(f"  eval: avg_err={metrics['avg_error']:.1f} tok, "
+          f"rate={metrics['avg_error_rate'] * 100:.1f}%, "
+          f"acc50={metrics['acc50'] * 100:.1f}%, "
+          f"acc100={metrics['acc100'] * 100:.1f}%")
+    with open(os.path.join(out_dir, "length_model_eval.json"), "w") as f:
+        json.dump(metrics, f, indent=2)
+
+    manifest["length_params"] = _save_params(lm_params, out_dir,
+                                             "length_params")
+    print("lowering length_model")
+    feat_spec = jax.ShapeDtypeStruct((LENGTH_BATCH, length_model.N_FEATURES),
+                                     jnp.float32)
+    lowered = jax.jit(length_model.predict_lengths).lower(lm_params, feat_spec)
+    lm_param_inputs = [dict(name=f"param:{k}", **_spec(lm_params[k]))
+                       for k in sorted(lm_params)]
+    manifest["artifacts"]["length_model"] = _write_hlo(
+        out_dir, "length_model", lowered,
+        lm_param_inputs
+        + [{"name": "features",
+            "shape": [LENGTH_BATCH, length_model.N_FEATURES],
+            "dtype": "f32"}],
+        [{"name": "pred_lengths", "shape": [LENGTH_BATCH], "dtype": "f32"}])
+    manifest["length_model"] = {
+        "batch": LENGTH_BATCH,
+        "n_features": length_model.N_FEATURES,
+        "feature_names": length_model.FEATURE_NAMES,
+        "eval": metrics,
+        # Golden vectors keep the Rust feature extractor in sync.
+        "golden": [{"prompt": p,
+                    "features": length_model.extract_features(p),
+                    "pred": float(length_model.predict_lengths(
+                        lm_params,
+                        jnp.asarray([length_model.extract_features(p)],
+                                    jnp.float32))[0])}
+                   for p in GOLDEN_PROMPTS],
+    }
+    manifest["corpus"] = {"file": "sharegpt_synth.jsonl", "n": n,
+                          "train_n": n_train, "seed": 1234}
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest.json written to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="small corpus + few epochs (CI / tests)")
+    args = ap.parse_args()
+    build(args.out, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

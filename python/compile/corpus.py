@@ -1,0 +1,160 @@
+"""Synthetic ShareGPT-like corpus (the paper's dataset substitute).
+
+The real evaluation uses 52k ShareGPT conversations; we cannot ship those,
+so this module generates a deterministic synthetic corpus whose *scheduling-
+relevant* marginals match published ShareGPT statistics: heavy-tailed
+lognormal prompt/response token lengths (mean prompt ~160 tokens, mean
+response ~240 tokens), and — crucially for Block — a strong, learnable
+dependence of response length on prompt *context* (an "explain ..." prompt
+yields a long answer, "summarize ..." a short one).  That dependence is
+exactly the signal the paper's RoBERTa length tagger exploits.
+
+The corpus is written once at build time to ``artifacts/sharegpt_synth.jsonl``
+(prompt text + true token lengths) and is the single source of truth shared
+by the Python length-model trainer and the Rust Table-1 / tagger / serving
+code — no cross-language RNG matching required.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+
+# (name, weight, templates, filler-word range, response lognormal (mu, sigma))
+# Response means: greeting 20, qa 80, explain 400, code 250, summarize 60,
+# creative 500, translate 90, list 120 tokens.
+CATEGORIES = [
+    ("greeting", 8, [
+        "hi there how are you doing today",
+        "hello good morning nice to meet you",
+        "hey whats up",
+    ], (0, 6), (math.log(20.0), 0.35)),
+    ("qa", 22, [
+        "what is {} and who discovered it",
+        "what is the capital of {}",
+        "when did {} happen and why",
+        "who invented {} and what year was it",
+    ], (2, 18), (math.log(80.0), 0.35)),
+    ("explain", 18, [
+        "explain the theory of {} in detail",
+        "can you explain how {} works and describe the mechanism in detail",
+        "describe {} comprehensively and explain why it matters",
+    ], (2, 20), (math.log(400.0), 0.30)),
+    ("code", 14, [
+        "write a function to {} in python",
+        "implement a program that can {} efficiently",
+        "write code to {} and add tests",
+    ], (3, 24), (math.log(250.0), 0.35)),
+    ("summarize", 12, [
+        "summarize the following text briefly {}",
+        "give me a short tl;dr of this document {}",
+    ], (80, 420), (math.log(60.0), 0.30)),
+    ("creative", 10, [
+        "write a story about {}",
+        "write a long creative poem about {}",
+        "write an essay about {} with comprehensive detail",
+    ], (2, 14), (math.log(500.0), 0.40)),
+    ("translate", 8, [
+        "translate the following to french {}",
+        "translate this text into german {}",
+    ], (40, 260), (math.log(90.0), 0.30)),
+    ("list", 8, [
+        "list ten interesting facts about {}",
+        "list the main reasons why {} how many are there",
+    ], (2, 12), (math.log(120.0), 0.30)),
+]
+
+FILLER = ("the quick brown fox jumps over a lazy dog while autumn leaves "
+          "drift across the quiet river and distant mountains fade into "
+          "violet evening light as travelers recall half forgotten stories "
+          "about science history art music economics physics biology "
+          "medicine law engineering philosophy language culture trade "
+          "climate energy transport memory logic networks systems data "
+          "models markets cities oceans forests deserts islands empires "
+          "inventions discoveries journeys experiments equations theories").split()
+
+MAX_MODEL_LEN = 2048   # vLLM max_model_len analogue (prompt + response)
+MIN_RESPONSE = 4
+
+
+class SplitMix64:
+    """Deterministic 64-bit PRNG (same algorithm as rust/src/util/rng.rs)."""
+
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self.state = seed & self.MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & self.MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & self.MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & self.MASK
+        return z ^ (z >> 31)
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def randint(self, lo: int, hi: int) -> int:
+        """Uniform integer in [lo, hi]."""
+        return lo + self.next_u64() % (hi - lo + 1)
+
+    def lognormal(self, mu: float, sigma: float) -> float:
+        # Box-Muller
+        u1 = max(self.next_f64(), 1e-12)
+        u2 = self.next_f64()
+        z = math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+        return math.exp(mu + sigma * z)
+
+
+def prompt_token_len(text: str) -> int:
+    """Prompt length in 'tokens' — a simple chars/4 model shared with Rust
+    (`workload::tokenizer::approx_token_len`)."""
+    return max(4, (len(text) + 3) // 4)
+
+
+def sample(rng: SplitMix64) -> dict:
+    total_w = sum(c[1] for c in CATEGORIES)
+    r = rng.randint(0, total_w - 1)
+    for name, w, templates, (fmin, fmax), (mu, sigma) in CATEGORIES:
+        if r < w:
+            break
+        r -= w
+    tmpl = templates[rng.randint(0, len(templates) - 1)]
+    n_fill = rng.randint(fmin, fmax)
+    words = [FILLER[rng.randint(0, len(FILLER) - 1)] for _ in range(n_fill)]
+    prompt = tmpl.format(" ".join(words)) if "{}" in tmpl else tmpl
+    p_tokens = prompt_token_len(prompt)
+    max_resp = max(MIN_RESPONSE, MAX_MODEL_LEN - p_tokens)
+    resp = int(round(rng.lognormal(mu, sigma)))
+    resp = min(max(resp, MIN_RESPONSE), max_resp)
+    return {
+        "category": name,
+        "prompt": prompt,
+        "prompt_tokens": p_tokens,
+        "response_tokens": resp,
+    }
+
+
+def generate(n: int, seed: int = 1234) -> list[dict]:
+    rng = SplitMix64(seed)
+    return [sample(rng) for _ in range(n)]
+
+
+def write_jsonl(samples, path):
+    with open(path, "w") as f:
+        for s in samples:
+            f.write(json.dumps(s) + "\n")
+
+
+if __name__ == "__main__":
+    import sys
+
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 50000
+    out = sys.argv[2] if len(sys.argv) > 2 else "artifacts/sharegpt_synth.jsonl"
+    samples = generate(n)
+    write_jsonl(samples, out)
+    mean_p = sum(s["prompt_tokens"] for s in samples) / n
+    mean_r = sum(s["response_tokens"] for s in samples) / n
+    print(f"wrote {n} samples to {out}; mean prompt={mean_p:.1f} "
+          f"mean response={mean_r:.1f} tokens")

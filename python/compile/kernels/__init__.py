@@ -1,0 +1,1 @@
+from .attention import chunked_prefill_attention, decode_attention  # noqa: F401

@@ -1,0 +1,212 @@
+"""Layer-1 Pallas attention kernels for the Block serving stack.
+
+Two kernels cover the serving hot path:
+
+  * ``decode_attention`` — one query token per sequence attends over a
+    length-masked KV cache.  This is the flash-decoding split-KV schedule:
+    the grid iterates over (batch, kv-block); each program pulls one KV
+    block (a "page") from HBM into VMEM via its BlockSpec, computes partial
+    scores on the VPU/MXU, and folds them into an online-softmax
+    (m, l, acc) accumulator kept in VMEM scratch.  On a real TPU the
+    BlockSpec index maps express the HBM<->VMEM schedule that CUDA kernels
+    express with threadblocks + shared memory (see DESIGN.md
+    §Hardware-Adaptation).
+
+  * ``chunked_prefill_attention`` — causal flash attention over a prompt,
+    tiled (q-block x k-block) so the working set (q tile + k tile + v tile
+    + accumulators) fits the ~16 MiB VMEM budget.  Used by the Sarathi-style
+    chunked-prefill local scheduler: a prefill *chunk* is a contiguous range
+    of q rows, so the same kernel serves both full and chunked prefill.
+
+Both kernels are lowered with ``interpret=True``: the CPU PJRT client
+cannot execute Mosaic custom-calls, and correctness is what the CPU path
+validates (pytest + hypothesis against ``ref.py``).  Real-TPU efficiency is
+estimated from the block shapes in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Finite stand-in for -inf: exp(NEG - m) underflows to exactly 0.0 without
+# producing NaNs when an entire block is masked (m stays at NEG).
+NEG = -1e30
+
+
+def _iota(shape, dim):
+    return jax.lax.broadcasted_iota(jnp.int32, shape, dim)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (flash-decoding split-KV)
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, block_s: int, num_blocks: int, scale: float):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]          # [H, Dh]
+    k = k_ref[0]          # [block_s, H, Dh]
+    v = v_ref[0]          # [block_s, H, Dh]
+    ln = len_ref[0]       # scalar int32: valid KV length of this sequence
+
+    # Partial scores for this KV block, per head: [H, block_s].
+    scores = jnp.einsum("hd,shd->hs", q, k) * scale
+    pos = j * block_s + _iota(scores.shape, 1)
+    scores = jnp.where(pos < ln, scores, NEG)
+
+    # Online softmax update.
+    m_prev = m_ref[...]                         # [H]
+    m_new = jnp.maximum(m_prev, scores.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)             # 0 when m_prev == NEG
+    p = jnp.exp(scores - m_new[:, None])        # masked entries underflow to 0
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.einsum("hs,shd->hd", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(j == num_blocks - 1)
+    def _finalize():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-9)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k, v, lens, *, block_s: int = 128, interpret: bool = True):
+    """Single-token attention over a length-masked KV cache.
+
+    Args:
+      q:    [B, H, Dh] query for the token being decoded.
+      k, v: [B, S, H, Dh] KV cache (S is the padded max context).
+      lens: [B] int32 number of valid cache entries per sequence (>= 1).
+      block_s: KV block ("page") size; S must be a multiple of it.
+
+    Returns: [B, H, Dh] attention output.
+    """
+    b, h, dh = q.shape
+    s = k.shape[1]
+    if s % block_s != 0:
+        raise ValueError(f"context {s} not a multiple of block_s {block_s}")
+    nb = s // block_s
+    scale = 1.0 / (dh ** 0.5)
+    kernel = functools.partial(_decode_kernel, block_s=block_s, num_blocks=nb,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, block_s, h, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_s, h, dh), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lens)
+
+
+# ---------------------------------------------------------------------------
+# Chunked-prefill causal attention
+# ---------------------------------------------------------------------------
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+                    *, block_q: int, block_k: int, num_k_blocks: int,
+                    scale: float, q_offset_blocks: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]        # [block_q, H, Dh]
+    k = k_ref[...]        # [block_k, H, Dh]
+    v = v_ref[...]
+    ln = len_ref[0]
+
+    scores = jnp.einsum("qhd,khd->hqk", q, k) * scale   # [H, bq, bk]
+    qpos = (i + q_offset_blocks) * block_q + _iota(scores.shape, 1)
+    kpos = j * block_k + _iota(scores.shape, 2)
+    mask = (kpos <= qpos) & (kpos < ln)
+    scores = jnp.where(mask, scores, NEG)
+
+    m_prev = m_ref[...]                                  # [H, bq]
+    m_new = jnp.maximum(m_prev, scores.max(axis=2))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[:, :, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=2)
+    acc_ref[...] = acc_ref[...] * alpha[:, :, None] + jnp.einsum(
+        "hqk,khd->hqd", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(j == num_k_blocks - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-9)[:, :, None]
+        o_ref[...] = jnp.transpose(out, (1, 0, 2))       # [bq, H, Dh]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_q", "block_k", "q_offset",
+                                    "interpret"))
+def chunked_prefill_attention(q, k, v, length, *, block_q: int = 128,
+                              block_k: int = 128, q_offset: int = 0,
+                              interpret: bool = True):
+    """Causal flash attention over one prompt (or a chunk of it).
+
+    Args:
+      q:      [Sq, H, Dh] queries for the chunk being prefilled.
+      k, v:   [Sk, H, Dh] keys/values for all tokens up to and including
+              the chunk (Sk >= q_offset + Sq after padding).
+      length: scalar int32, number of valid tokens in k/v (padding beyond).
+      q_offset: absolute position of q[0] within the sequence — nonzero when
+              prefilling a later chunk against the already-cached prefix.
+
+    Returns: [Sq, H, Dh].
+    """
+    sq, h, dh = q.shape
+    sk = k.shape[0]
+    if sq % block_q != 0 or sk % block_k != 0 or q_offset % block_q != 0:
+        raise ValueError("shapes must be multiples of block sizes")
+    nq, nk = sq // block_q, sk // block_k
+    scale = 1.0 / (dh ** 0.5)
+    kernel = functools.partial(
+        _prefill_kernel, block_q=block_q, block_k=block_k, num_k_blocks=nk,
+        scale=scale, q_offset_blocks=q_offset // block_q)
+    length = jnp.asarray(length, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        kernel,
+        grid=(nq, nk),
+        in_specs=[
+            pl.BlockSpec((block_q, h, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_k, h, dh), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((block_k, h, dh), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_q, h, dh), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((sq, h, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, block_q), jnp.float32),
+            pltpu.VMEM((h, block_q), jnp.float32),
+            pltpu.VMEM((h, block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, length)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+These implement the mathematically obvious (materialize-everything) form of
+the two attention variants.  pytest + hypothesis assert the Pallas kernels
+match these within float32 tolerance across shapes, lengths and dtypes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def decode_attention_ref(q, k, v, lens):
+    """[B,H,Dh] x [B,S,H,Dh]^2 x [B] -> [B,H,Dh], masked at lens."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum("bhd,bshd->bhs", q, k) * scale
+    s = k.shape[1]
+    pos = jnp.arange(s)[None, None, :]
+    scores = jnp.where(pos < lens[:, None, None], scores, NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v)
+
+
+def causal_attention_ref(q, k, v, length, q_offset=0):
+    """[Sq,H,Dh] x [Sk,H,Dh]^2 -> [Sq,H,Dh]; causal + length mask.
+
+    q[i] sits at absolute position q_offset+i and may attend to k[j] iff
+    j <= q_offset+i and j < length.
+    """
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum("qhd,khd->hqk", q, k) * scale
+    sq, sk = q.shape[0], k.shape[0]
+    qpos = q_offset + jnp.arange(sq)[None, :, None]
+    kpos = jnp.arange(sk)[None, None, :]
+    mask = (kpos <= qpos) & (kpos < length)
+    scores = jnp.where(mask, scores, NEG)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", p, v)

@@ -1,0 +1,151 @@
+"""Response-length regressor — the paper's RoBERTa-125M stand-in.
+
+The paper fine-tunes a RoBERTa-base regression model to predict a request's
+response length from its prompt (Table 1: 24.4% average error rate, Acc-50
+69.9%, Acc-100 77.2%).  Shipping/fine-tuning RoBERTa is out of scope here,
+so we train a small MLP over 16 hand-crafted prompt features — the features
+capture exactly the "context" signal the paper's motivation cites (an
+"explain ..." prompt is short but yields a long answer; "summarize ..." the
+reverse).
+
+Feature extraction (``extract_features``) is mirrored byte-for-byte in Rust
+(`tagger/features.rs`); golden vectors in the manifest keep the two in sync.
+The trained model is AOT-lowered to HLO (``aot.py``) and served by the Rust
+tagger through PJRT — prediction happens on the request path with zero
+Python.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+N_FEATURES = 16
+KEYWORDS = [
+    ("explain", "describe"),
+    ("write",),
+    ("story", "poem", "essay"),
+    ("code", "function", "implement", "program"),
+    ("summarize", "tl;dr", "brief"),
+    ("list", "enumerate"),
+    ("translate",),
+    ("what",),
+    ("how",),
+    ("why",),
+    ("short", "one sentence"),
+    ("detail", "comprehensive", "long"),
+]
+
+FEATURE_NAMES = (
+    ["chars", "words", "qmarks", "avg_word_len"]
+    + ["kw_" + kws[0] for kws in KEYWORDS]
+)
+assert len(FEATURE_NAMES) == N_FEATURES
+
+
+def extract_features(text: str) -> list[float]:
+    """16 normalized features of a prompt.  Mirrored in Rust — keep in sync
+    with `rust/src/tagger/features.rs` (golden-tested via the manifest)."""
+    t = text.lower()
+    words = t.split()
+    n_chars = len(t)
+    n_words = len(words)
+    avg_wl = (sum(len(w) for w in words) / n_words) if n_words else 0.0
+    feats = [
+        min(n_chars, 2048) / 2048.0,
+        min(n_words, 400) / 400.0,
+        min(t.count("?"), 4) / 4.0,
+        min(avg_wl, 12.0) / 12.0,
+    ]
+    for kws in KEYWORDS:
+        feats.append(1.0 if any(k in t for k in kws) else 0.0)
+    return feats
+
+
+# ---------------------------------------------------------------------------
+# Model: MLP 16 -> 64 -> 64 -> 1 predicting log1p(response_tokens)
+# ---------------------------------------------------------------------------
+
+HIDDEN = 64
+
+
+def init_mlp(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s1, s2, s3 = (N_FEATURES ** -0.5), (HIDDEN ** -0.5), (HIDDEN ** -0.5)
+    return {
+        "w1": jax.random.normal(k1, (N_FEATURES, HIDDEN)) * s1,
+        "b1": jnp.zeros((HIDDEN,)),
+        "w2": jax.random.normal(k2, (HIDDEN, HIDDEN)) * s2,
+        "b2": jnp.zeros((HIDDEN,)),
+        "w3": jax.random.normal(k3, (HIDDEN, 1)) * s3,
+        "b3": jnp.zeros((1,)),
+    }
+
+
+def mlp_log_len(params, x):
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return (h @ params["w3"] + params["b3"])[..., 0]
+
+
+def predict_lengths(params, x):
+    """[N, 16] features -> [N] predicted response tokens (the AOT entry)."""
+    return jnp.maximum(jnp.expm1(mlp_log_len(params, x)), 1.0)
+
+
+def _loss(params, x, y_log):
+    return jnp.mean(jnp.square(mlp_log_len(params, x) - y_log))
+
+
+@jax.jit
+def _adam_step(params, m, v, t, x, y_log, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    g = jax.grad(_loss)(params, x, y_log)
+    m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+    v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+    mh = jax.tree.map(lambda a: a / (1 - b1 ** t), m)
+    vh = jax.tree.map(lambda a: a / (1 - b2 ** t), v)
+    params = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps),
+                          params, mh, vh)
+    return params, m, v
+
+
+def train(samples, *, epochs: int = 60, batch: int = 1024, seed: int = 7,
+          log=print):
+    """Train on corpus samples (list of dicts with prompt/response_tokens)."""
+    x = np.asarray([extract_features(s["prompt"]) for s in samples],
+                   np.float32)
+    y = np.log1p(np.asarray([s["response_tokens"] for s in samples],
+                            np.float32))
+    params = init_mlp(jax.random.PRNGKey(seed))
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    n = len(x)
+    rng = np.random.default_rng(seed)
+    t = 0
+    for ep in range(epochs):
+        perm = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            idx = perm[i:i + batch]
+            t += 1
+            params, m, v = _adam_step(params, m, v, t,
+                                      jnp.asarray(x[idx]), jnp.asarray(y[idx]))
+        if ep % 20 == 0 or ep == epochs - 1:
+            log(f"  length-model epoch {ep}: loss="
+                f"{float(_loss(params, jnp.asarray(x), jnp.asarray(y))):.4f}")
+    return params
+
+
+def evaluate(params, samples):
+    """Table-1 metrics: avg error (tokens), avg error rate, Acc-50, Acc-100."""
+    x = jnp.asarray([extract_features(s["prompt"]) for s in samples],
+                    jnp.float32)
+    y = np.asarray([s["response_tokens"] for s in samples], np.float64)
+    pred = np.asarray(predict_lengths(params, x), np.float64)
+    err = np.abs(pred - y)
+    return {
+        "avg_error": float(err.mean()),
+        "avg_error_rate": float((err / np.maximum(y, 1.0)).mean()),
+        "acc50": float((err < 50).mean()),
+        "acc100": float((err < 100).mean()),
+    }

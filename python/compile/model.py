@@ -1,0 +1,243 @@
+"""Layer-2 JAX model: a LLaMA-style decoder-only transformer.
+
+This is the compute graph the Rust coordinator serves.  Two entry points
+are AOT-lowered (see ``aot.py``):
+
+  * ``prefill(params, tokens[S_pad], length)`` — encode one prompt (the
+    prefill phase).  Uses the L1 ``chunked_prefill_attention`` kernel and
+    returns the first decoded token plus the prompt's KV cache.
+  * ``decode_step(params, kv, lens, tokens[B])`` — one continuous-batching
+    decode step for a batch of sequences at heterogeneous positions.  Uses
+    the L1 ``decode_attention`` kernel and returns the next token per
+    sequence plus the updated cache.
+
+Architecture: RMSNorm, rotary position embeddings, multi-head attention,
+SwiGLU MLP, tied input/output embedding — the same block structure as
+LLaMA2 (the paper's serving model), scaled down so the CPU PJRT client can
+actually serve it (see ``ModelConfig.tiny``).  Parameters are stacked along
+a leading layer axis so the layer loop is a ``lax.scan`` (one fused HLO
+while-loop rather than n_layers inlined copies).
+
+Python never runs at serving time: these functions exist to be lowered to
+HLO text once, at build time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import chunked_prefill_attention, decode_attention
+
+EOS_ID = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Dimensions of the served transformer."""
+
+    vocab_size: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    head_dim: int = 32
+    d_ff: int = 704
+    max_context: int = 640        # padded KV-cache length (S)
+    prefill_pad: int = 512        # padded prompt length for the prefill fn
+    rope_theta: float = 10000.0
+    attn_block_s: int = 128       # decode kernel KV block ("page") size
+    prefill_block: int = 128      # prefill kernel tile size
+
+    @staticmethod
+    def tiny() -> "ModelConfig":
+        return ModelConfig()
+
+    @property
+    def param_count(self) -> int:
+        c = self
+        per_layer = 4 * c.d_model * c.n_heads * c.head_dim \
+            + 3 * c.d_model * c.d_ff + 2 * c.d_model
+        return c.vocab_size * c.d_model + c.d_model + c.n_layers * per_layer
+
+
+# Parameter leaves, all stacked on a leading layer axis where applicable.
+# Sorted key order == flattened HLO input order (recorded in the manifest).
+PARAM_SHAPES = {
+    "attn_norm": lambda c: (c.n_layers, c.d_model),
+    "embed": lambda c: (c.vocab_size, c.d_model),
+    "final_norm": lambda c: (c.d_model,),
+    "mlp_norm": lambda c: (c.n_layers, c.d_model),
+    "w_down": lambda c: (c.n_layers, c.d_ff, c.d_model),
+    "w_gate": lambda c: (c.n_layers, c.d_model, c.d_ff),
+    "w_k": lambda c: (c.n_layers, c.d_model, c.n_heads * c.head_dim),
+    "w_o": lambda c: (c.n_layers, c.n_heads * c.head_dim, c.d_model),
+    "w_q": lambda c: (c.n_layers, c.d_model, c.n_heads * c.head_dim),
+    "w_up": lambda c: (c.n_layers, c.d_model, c.d_ff),
+    "w_v": lambda c: (c.n_layers, c.d_model, c.n_heads * c.head_dim),
+}
+
+
+def param_names():
+    return sorted(PARAM_SHAPES)
+
+
+def init_params(key, cfg: ModelConfig):
+    """Deterministic scaled-normal init (the 'small real model' weights)."""
+    params = {}
+    for name in param_names():
+        shape = PARAM_SHAPES[name](cfg)
+        key, sub = jax.random.split(key)
+        if "norm" in name:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            params[name] = (jax.random.normal(sub, shape, jnp.float32)
+                            / jnp.sqrt(fan_in))
+    return params
+
+
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, positions, theta):
+    """Rotary embedding. x: [..., H, Dh]; positions broadcastable to x[..., 0, 0]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None, None].astype(jnp.float32) * freqs  # [..., 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _layer_stack(params):
+    """xs pytree for lax.scan over layers."""
+    return {k: params[k] for k in param_names() if k not in ("embed", "final_norm")}
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, tokens, length, cfg: ModelConfig, *, interpret=True):
+    """Encode one prompt.
+
+    Args:
+      tokens: [prefill_pad] int32, right-padded prompt.
+      length: scalar int32, true prompt length (1..prefill_pad).
+
+    Returns:
+      first_token: [] int32 — greedy first decoded token.
+      kv: [L, 2, prefill_pad, H, Dh] float32 prompt KV cache.
+    """
+    c = cfg
+    s = c.prefill_pad
+    x = params["embed"][tokens]                      # [S, D]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    def layer(x, lp):
+        h = rmsnorm(x, lp["attn_norm"])
+        q = (h @ lp["w_q"]).reshape(s, c.n_heads, c.head_dim)
+        k = (h @ lp["w_k"]).reshape(s, c.n_heads, c.head_dim)
+        v = (h @ lp["w_v"]).reshape(s, c.n_heads, c.head_dim)
+        q = rope(q, positions, c.rope_theta)
+        k = rope(k, positions, c.rope_theta)
+        attn = chunked_prefill_attention(
+            q, k, v, length, block_q=c.prefill_block, block_k=c.prefill_block,
+            interpret=interpret)
+        x = x + attn.reshape(s, -1) @ lp["w_o"]
+        h = rmsnorm(x, lp["mlp_norm"])
+        x = x + (jax.nn.silu(h @ lp["w_gate"]) * (h @ lp["w_up"])) @ lp["w_down"]
+        return x, (k, v)
+
+    x, kvs = jax.lax.scan(layer, x, _layer_stack(params))
+    kv = jnp.stack(kvs, axis=1)                      # [L, 2, S, H, Dh]
+    x = rmsnorm(x, params["final_norm"])
+    last = x[length - 1]                             # [D]
+    logits = last @ params["embed"].T                # [V]
+    return jnp.argmax(logits).astype(jnp.int32), kv
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, kv, lens, tokens, cfg: ModelConfig, *, interpret=True):
+    """One decode step for a batch.
+
+    Args:
+      kv: [L, 2, B, S, H, Dh] cache; entries [0:lens[b]) are valid.
+      lens: [B] int32 current context length per slot (prompt + decoded).
+      tokens: [B] int32 the most recent token per slot (input to this step).
+
+    Returns:
+      next_tokens: [B] int32 greedy next tokens.
+      kv_new: cache with this step's K/V written at position lens[b].
+    """
+    c = cfg
+    b = tokens.shape[0]
+    x = params["embed"][tokens]                      # [B, D]
+    positions = lens                                 # new token sits at index lens[b]
+
+    def layer(x, carry):
+        lp, kv_l = carry
+        h = rmsnorm(x, lp["attn_norm"])
+        q = (h @ lp["w_q"]).reshape(b, c.n_heads, c.head_dim)
+        k = (h @ lp["w_k"]).reshape(b, c.n_heads, c.head_dim)
+        v = (h @ lp["w_v"]).reshape(b, c.n_heads, c.head_dim)
+        q = rope(q, positions, c.rope_theta)
+        k = rope(k, positions, c.rope_theta)
+        # Scatter this step's K/V into the cache at each slot's position.
+        k_cache = kv_l[0]                            # [B, S, H, Dh]
+        v_cache = kv_l[1]
+        onehot = (jnp.arange(c.max_context)[None, :] == positions[:, None])
+        k_cache = jnp.where(onehot[:, :, None, None], k[:, None], k_cache)
+        v_cache = jnp.where(onehot[:, :, None, None], v[:, None], v_cache)
+        attn = decode_attention(q, k_cache, v_cache, lens + 1,
+                                block_s=c.attn_block_s, interpret=interpret)
+        x = x + attn.reshape(b, -1) @ lp["w_o"]
+        h = rmsnorm(x, lp["mlp_norm"])
+        x = x + (jax.nn.silu(h @ lp["w_gate"]) * (h @ lp["w_up"])) @ lp["w_down"]
+        return x, jnp.stack([k_cache, v_cache])
+
+    x, kv_new = jax.lax.scan(layer, x, (_layer_stack(params), kv))
+    x = rmsnorm(x, params["final_norm"])
+    logits = x @ params["embed"].T                   # [B, V]
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), kv_new
+
+
+# ---------------------------------------------------------------------------
+# Reference serving loop (used by tests; Rust reimplements this loop)
+# ---------------------------------------------------------------------------
+
+
+def generate_greedy(params, prompt_tokens, max_new, cfg: ModelConfig,
+                    *, interpret=True):
+    """Single-sequence greedy generation: prefill + decode loop."""
+    c = cfg
+    pad = jnp.zeros(c.prefill_pad, jnp.int32)
+    length = len(prompt_tokens)
+    toks = pad.at[:length].set(jnp.asarray(prompt_tokens, jnp.int32))
+    first, kv_prompt = prefill(params, toks, jnp.int32(length), cfg,
+                               interpret=interpret)
+    # Place the prompt cache into a batch=1 serving cache.
+    kv = jnp.zeros((c.n_layers, 2, 1, c.max_context, c.n_heads, c.head_dim),
+                   jnp.float32)
+    kv = kv.at[:, :, 0, :c.prefill_pad].set(kv_prompt)
+    out = [int(first)]
+    lens = jnp.asarray([length], jnp.int32)
+    tok = jnp.asarray([int(first)], jnp.int32)
+    for _ in range(max_new - 1):
+        if out[-1] == EOS_ID:
+            break
+        tok, kv = decode_step(params, kv, lens, tok, cfg, interpret=interpret)
+        lens = lens + 1
+        out.append(int(tok[0]))
+    return out

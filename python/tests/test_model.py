@@ -1,0 +1,130 @@
+"""L2 model correctness: prefill/decode consistency and serving invariants."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels.ref import causal_attention_ref
+
+# Small config so interpret-mode tests stay fast.
+CFG = M.ModelConfig(vocab_size=64, d_model=32, n_layers=2, n_heads=2,
+                    head_dim=16, d_ff=64, max_context=128, prefill_pad=64,
+                    attn_block_s=64, prefill_block=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def ref_forward(params, tokens, cfg):
+    """Plain-jnp full forward over a whole sequence (no kernels, no cache):
+    the oracle for both prefill and incremental decode."""
+    s = len(tokens)
+    x = params["embed"][jnp.asarray(tokens)]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    for l in range(cfg.n_layers):
+        h = M.rmsnorm(x, params["attn_norm"][l])
+        q = (h @ params["w_q"][l]).reshape(s, cfg.n_heads, cfg.head_dim)
+        k = (h @ params["w_k"][l]).reshape(s, cfg.n_heads, cfg.head_dim)
+        v = (h @ params["w_v"][l]).reshape(s, cfg.n_heads, cfg.head_dim)
+        q = M.rope(q, positions, cfg.rope_theta)
+        k = M.rope(k, positions, cfg.rope_theta)
+        attn = causal_attention_ref(q, k, v, s)
+        x = x + attn.reshape(s, -1) @ params["w_o"][l]
+        h = M.rmsnorm(x, params["mlp_norm"][l])
+        x = x + (jax.nn.silu(h @ params["w_gate"][l])
+                 * (h @ params["w_up"][l])) @ params["w_down"][l]
+    x = M.rmsnorm(x, params["final_norm"])
+    return x @ params["embed"].T          # [S, V] logits
+
+
+def test_param_shapes_and_count(params):
+    total = sum(int(np.prod(p.shape)) for p in params.values())
+    assert total == CFG.param_count
+    for name, fn in M.PARAM_SHAPES.items():
+        assert params[name].shape == fn(CFG)
+
+
+def test_prefill_matches_ref_forward(params):
+    prompt = [3, 17, 5, 40, 9, 22, 7]
+    toks = jnp.zeros(CFG.prefill_pad, jnp.int32).at[:len(prompt)].set(
+        jnp.asarray(prompt))
+    first, kv = M.prefill(params, toks, jnp.int32(len(prompt)), CFG)
+    logits = ref_forward(params, prompt, CFG)
+    assert int(first) == int(jnp.argmax(logits[-1]))
+    assert kv.shape == (CFG.n_layers, 2, CFG.prefill_pad, CFG.n_heads,
+                        CFG.head_dim)
+
+
+def test_decode_step_matches_ref_forward(params):
+    """prefill + one decode step == full forward over prompt+token."""
+    prompt = [3, 17, 5, 40, 9]
+    toks = jnp.zeros(CFG.prefill_pad, jnp.int32).at[:len(prompt)].set(
+        jnp.asarray(prompt))
+    first, kvp = M.prefill(params, toks, jnp.int32(len(prompt)), CFG)
+
+    kv = jnp.zeros((CFG.n_layers, 2, 1, CFG.max_context, CFG.n_heads,
+                    CFG.head_dim), jnp.float32)
+    kv = kv.at[:, :, 0, :CFG.prefill_pad].set(kvp)
+    nxt, _ = M.decode_step(params, kv, jnp.asarray([len(prompt)], jnp.int32),
+                           jnp.asarray([int(first)], jnp.int32), CFG)
+
+    logits = ref_forward(params, prompt + [int(first)], CFG)
+    assert int(nxt[0]) == int(jnp.argmax(logits[-1]))
+
+
+def test_multi_step_decode_matches_ref(params):
+    """Three incremental decode steps track the no-cache reference."""
+    prompt = [1, 2, 3, 4]
+    seq = M.generate_greedy(params, prompt, 4, CFG)
+    cur = list(prompt)
+    for tok in seq:
+        logits = ref_forward(params, cur, CFG)
+        assert tok == int(jnp.argmax(logits[-1]))
+        cur.append(tok)
+        if tok == M.EOS_ID:
+            break
+
+
+def test_decode_batch_slots_independent(params):
+    """A batched decode step gives each slot the same result as running it
+    alone — continuous batching must not couple requests."""
+    b = 4
+    rng = np.random.default_rng(0)
+    kv = jnp.asarray(rng.standard_normal(
+        (CFG.n_layers, 2, b, CFG.max_context, CFG.n_heads, CFG.head_dim)),
+        jnp.float32) * 0.1
+    lens = jnp.asarray([3, 9, 27, 64], jnp.int32)
+    toks = jnp.asarray([5, 6, 7, 8], jnp.int32)
+    nt_full, kv_full = M.decode_step(params, kv, lens, toks, CFG)
+    for i in range(b):
+        nt_i, kv_i = M.decode_step(params, kv[:, :, i:i+1], lens[i:i+1],
+                                   toks[i:i+1], CFG)
+        assert int(nt_full[i]) == int(nt_i[0])
+        np.testing.assert_allclose(np.asarray(kv_full[:, :, i]),
+                                   np.asarray(kv_i[:, :, 0]), atol=1e-5)
+
+
+def test_decode_writes_cache_at_position(params):
+    b = 2
+    kv = jnp.zeros((CFG.n_layers, 2, b, CFG.max_context, CFG.n_heads,
+                    CFG.head_dim), jnp.float32)
+    lens = jnp.asarray([5, 10], jnp.int32)
+    toks = jnp.asarray([3, 4], jnp.int32)
+    _, kv2 = M.decode_step(params, kv, lens, toks, CFG)
+    for i, ln in enumerate([5, 10]):
+        written = np.asarray(kv2[:, :, i, ln])
+        assert np.abs(written).max() > 0, "new K/V row must be written"
+        untouched = np.asarray(kv2[:, :, i, ln + 1:])
+        assert np.abs(untouched).max() == 0, "rows beyond position untouched"
+
+
+def test_generate_deterministic(params):
+    a = M.generate_greedy(params, [9, 8, 7], 5, CFG)
+    b = M.generate_greedy(params, [9, 8, 7], 5, CFG)
+    assert a == b and len(a) <= 5

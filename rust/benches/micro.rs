@@ -1,0 +1,135 @@
+//! `cargo bench --bench micro` — microbenchmarks of the L3 hot paths:
+//! predictor forward simulation (with/without the latency cache), engine
+//! stepping, block-manager churn, event-queue throughput, scheduler
+//! decision latency, JSON parsing.
+//!
+//! Hand-rolled harness (criterion unavailable offline): warmup + timed
+//! iterations, reporting mean and p99 per op.
+
+use std::time::Instant;
+
+use block::config::{EngineConfig, OverheadConfig, SchedulerKind};
+use block::core::hw::{A30, LLAMA2_7B};
+use block::core::request::Request;
+use block::engine::InstanceEngine;
+use block::exec::roofline::RooflineModel;
+use block::predictor::{Predictor, TrueLengths};
+use block::scheduler::{build_scheduler, ClusterView};
+use block::util::rng::Rng;
+
+/// Time `iters` runs of `f`, printing mean and p99 microseconds.
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // Warmup.
+    for _ in 0..iters.div_ceil(10).min(50) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p99 = samples[(samples.len() as f64 * 0.99) as usize - 1];
+    println!("{name:<44} {mean:>10.2} us/op  p99 {p99:>10.2} us  ({iters} iters)");
+}
+
+fn loaded_engine(n: usize) -> InstanceEngine {
+    let cost = RooflineModel::from_profiles(&A30, &LLAMA2_7B);
+    let mut eng = InstanceEngine::new(EngineConfig::default(), 1056);
+    for i in 0..n {
+        eng.enqueue(&Request::new(i as u64, 0.0, 100 + (i as u32 * 37) % 500,
+                                  20 + (i as u32 * 13) % 300), 0.0);
+    }
+    for _ in 0..6 {
+        if eng.start_step(&cost).is_some() {
+            eng.finish_step();
+            eng.take_finished();
+        }
+    }
+    eng
+}
+
+fn main() {
+    let cost = RooflineModel::from_profiles(&A30, &LLAMA2_7B);
+
+    // Predictor forward simulation — the Block dispatch hot path.
+    for load in [8usize, 24, 48] {
+        let eng = loaded_engine(load);
+        let status = eng.snapshot();
+        let candidate = Request::new(9999, 0.0, 200, 80);
+        let mut pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
+        bench(&format!("predictor.predict (load={load}, cached)"), 200, || {
+            std::hint::black_box(
+                pred.predict(&status, &candidate, &cost, &TrueLengths));
+        });
+        let mut cold = Predictor::new(eng.cfg.clone(), eng.total_blocks());
+        bench(&format!("predictor.predict (load={load}, cold cache)"), 50, || {
+            cold = Predictor::new(eng.cfg.clone(), eng.total_blocks());
+            std::hint::black_box(
+                cold.predict(&status, &candidate, &cost, &TrueLengths));
+        });
+    }
+
+    // Engine step loop.
+    bench("engine.start_step+finish_step (batch ~40)", 300, || {
+        let mut eng = loaded_engine(40);
+        if eng.start_step(&cost).is_some() {
+            eng.finish_step();
+        }
+        std::hint::black_box(&eng);
+    });
+
+    // Snapshot export (the status API).
+    let eng = loaded_engine(48);
+    bench("engine.snapshot (48 seqs)", 2000, || {
+        std::hint::black_box(eng.snapshot());
+    });
+
+    // Block manager churn.
+    bench("block_manager alloc/grow/free cycle", 2000, || {
+        let mut bm = block::engine::block_manager::BlockManager::new(1056, 16, 0.01);
+        for i in 0..48u64 {
+            bm.allocate_seq(i, 300);
+        }
+        for i in 0..48u64 {
+            bm.grow_to(i, 400);
+        }
+        for i in 0..48u64 {
+            bm.free_seq(i);
+        }
+        std::hint::black_box(bm.free_blocks());
+    });
+
+    // Event queue throughput.
+    bench("event_queue push+pop x1000", 500, || {
+        use block::cluster::events::{Event, EventKind, EventQueue};
+        let mut q = EventQueue::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            q.push(Event { time: rng.next_f64(), kind: EventKind::InstanceReady });
+        }
+        while q.pop().is_some() {}
+    });
+
+    // Heuristic scheduler decision latency.
+    let statuses: Vec<_> = (0..12)
+        .map(|_| Some(loaded_engine(24).snapshot()))
+        .collect();
+    for kind in [SchedulerKind::RoundRobin, SchedulerKind::LlumnixMinus] {
+        let mut s = build_scheduler(kind, 12, &EngineConfig::default(), 1056,
+                                    &OverheadConfig::default(), 7);
+        let req = Request::new(1, 0.0, 100, 50);
+        bench(&format!("scheduler.pick ({})", kind.name()), 2000, || {
+            let view = ClusterView { now: 0.0, statuses: &statuses };
+            std::hint::black_box(s.pick(&req, &view, &cost));
+        });
+    }
+
+    // JSON parse of a corpus line.
+    let line = r#"{"category": "qa", "prompt": "what is the capital of the quick brown fox jumping over lazy dogs", "prompt_tokens": 24, "response_tokens": 87}"#;
+    bench("json.parse corpus line", 5000, || {
+        std::hint::black_box(block::util::json::Json::parse(line).unwrap());
+    });
+}

@@ -1,0 +1,33 @@
+//! `cargo bench --bench paper` — regenerate every paper table and figure
+//! at Quick scale (criterion is unavailable offline; this is a
+//! deterministic experiment driver, not a statistical sampler — each
+//! experiment prints the paper's rows/series and its wall time).
+//!
+//! Full-scale runs: `block experiment all --scale full`.
+
+use std::time::Instant;
+
+use block::experiments::{run, ExpContext, Scale};
+
+fn main() {
+    let ctx = ExpContext {
+        scale: Scale::Quick,
+        out_dir: "results/bench".into(),
+        seed: 7,
+    };
+    let mut failures = 0;
+    for name in ["tab1", "fig5", "fig6", "fig7", "fig8", "tab2"] {
+        println!("\n================ bench: {name} ================");
+        let t0 = Instant::now();
+        match run(name, &ctx) {
+            Ok(()) => println!("[{name} done in {:?}]", t0.elapsed()),
+            Err(e) => {
+                println!("[{name} FAILED: {e:#}]");
+                failures += 1;
+            }
+        }
+    }
+    if failures > 0 {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,127 @@
+//! Discrete-event queue with a total order over (time, sequence number).
+//!
+//! f64 timestamps are not `Ord`; we order by time bits (all times are
+//! finite and non-negative here) and break ties by insertion sequence so
+//! simultaneous events process in FIFO order — determinism matters for
+//! reproducible experiments.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// Request `idx` (into the run's request slice) reaches the global
+    /// scheduler.
+    Arrival(usize),
+    /// Request `idx` lands on instance `usize` after dispatch overhead.
+    Dispatch(usize, usize),
+    /// Instance finished its in-flight step.
+    StepDone(usize),
+    /// A provisioned instance finished cold start.
+    InstanceReady,
+}
+
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub time: f64,
+    pub kind: EventKind,
+}
+
+struct Entry {
+    time: f64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse: BinaryHeap is a max-heap, we want min-time first.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, event: Event) {
+        debug_assert!(event.time.is_finite() && event.time >= 0.0);
+        self.seq += 1;
+        self.heap.push(Entry { time: event.time, seq: self.seq, event });
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|e| e.event)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(Event { time: 3.0, kind: EventKind::StepDone(0) });
+        q.push(Event { time: 1.0, kind: EventKind::Arrival(0) });
+        q.push(Event { time: 2.0, kind: EventKind::InstanceReady });
+        let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
+        assert_eq!(times, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ties_fifo() {
+        let mut q = EventQueue::new();
+        q.push(Event { time: 1.0, kind: EventKind::Arrival(1) });
+        q.push(Event { time: 1.0, kind: EventKind::Arrival(2) });
+        q.push(Event { time: 1.0, kind: EventKind::Arrival(3) });
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|e| match e.kind {
+                EventKind::Arrival(i) => i,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn len_tracks() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(Event { time: 0.5, kind: EventKind::InstanceReady });
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,497 @@
+//! Typed configuration for clusters, engines, schedulers and workloads.
+//!
+//! Everything an experiment needs is captured in [`ClusterConfig`] +
+//! [`WorkloadConfig`]; both round-trip through JSON (`util::json`) so runs
+//! are fully describable from a config file (`block experiment --config`).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::core::hw::{self, GpuProfile, ModelProfile};
+use crate::util::json::{Json, JsonObj};
+
+/// Local (per-instance) scheduling policy — §2's batching strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LocalPolicy {
+    /// Original vLLM: prefill-priority, separate prefill/decode batches.
+    VllmPrefillPriority,
+    /// Sarathi-Serve chunked prefill with a per-step token budget.
+    SarathiChunked,
+}
+
+impl LocalPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "vllm" | "prefill-priority" => Ok(LocalPolicy::VllmPrefillPriority),
+            "sarathi" | "chunked" | "chunked-prefill" => Ok(LocalPolicy::SarathiChunked),
+            other => bail!("unknown local policy '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LocalPolicy::VllmPrefillPriority => "vllm",
+            LocalPolicy::SarathiChunked => "sarathi",
+        }
+    }
+}
+
+/// Global scheduler selection (§4.2/§5 baselines + Block).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    Random,
+    RoundRobin,
+    MinQpm,
+    InfaasPp,
+    LlumnixMinus,
+    /// Block with ground-truth lengths.
+    Block,
+    /// Block* with tagger-estimated lengths.
+    BlockStar,
+    /// Extension: Block restricted to power-of-two sampled candidates.
+    BlockPo2,
+}
+
+impl SchedulerKind {
+    pub const ALL: [SchedulerKind; 7] = [
+        SchedulerKind::Random,
+        SchedulerKind::RoundRobin,
+        SchedulerKind::MinQpm,
+        SchedulerKind::InfaasPp,
+        SchedulerKind::LlumnixMinus,
+        SchedulerKind::Block,
+        SchedulerKind::BlockStar,
+    ];
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "random" => Ok(SchedulerKind::Random),
+            "round-robin" | "rr" => Ok(SchedulerKind::RoundRobin),
+            "min-qpm" | "qpm" => Ok(SchedulerKind::MinQpm),
+            "infaas" | "infaas++" => Ok(SchedulerKind::InfaasPp),
+            "llumnix" | "llumnix-" => Ok(SchedulerKind::LlumnixMinus),
+            "block" => Ok(SchedulerKind::Block),
+            "block*" | "block-star" => Ok(SchedulerKind::BlockStar),
+            "block-po2" => Ok(SchedulerKind::BlockPo2),
+            other => bail!("unknown scheduler '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Random => "random",
+            SchedulerKind::RoundRobin => "round-robin",
+            SchedulerKind::MinQpm => "min-qpm",
+            SchedulerKind::InfaasPp => "infaas++",
+            SchedulerKind::LlumnixMinus => "llumnix-",
+            SchedulerKind::Block => "block",
+            SchedulerKind::BlockStar => "block*",
+            SchedulerKind::BlockPo2 => "block-po2",
+        }
+    }
+
+    /// Does this scheduler consult the Predictor service?
+    pub fn is_predictive(&self) -> bool {
+        matches!(self, SchedulerKind::Block | SchedulerKind::BlockStar
+                 | SchedulerKind::BlockPo2)
+    }
+
+    /// Does this scheduler plan with tagger-estimated lengths?
+    pub fn uses_estimates(&self) -> bool {
+        matches!(self, SchedulerKind::BlockStar)
+    }
+}
+
+/// Per-instance engine configuration (the vLLM knobs §6.1 fixes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineConfig {
+    pub policy: LocalPolicy,
+    /// Max sequences in the running batch (paper: 48).
+    pub max_batch_size: u32,
+    /// Sarathi per-step token budget (paper: 512).
+    pub chunk_size: u32,
+    /// Paged-attention block size in tokens (vLLM default 16).
+    pub block_size: u32,
+    /// Total KV blocks; None = derive from GPU/model profiles.
+    pub num_blocks: Option<u32>,
+    /// Admission watermark fraction (vLLM: 0.01).
+    pub watermark: f64,
+    /// Prompt+response cap (vLLM max_model_len).
+    pub max_model_len: u32,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            policy: LocalPolicy::SarathiChunked,
+            max_batch_size: 48,
+            chunk_size: 512,
+            block_size: 16,
+            num_blocks: None,
+            watermark: 0.01,
+            max_model_len: 2048,
+        }
+    }
+}
+
+/// Dispatcher overhead model (§6.3): Block pays simulation cost; the
+/// heuristics pay (smaller) probe/parse cost.  Seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverheadConfig {
+    /// Fixed per-dispatch cost of a heuristic scheduler (status probe +
+    /// JSON parse in the paper's FastAPI prototype).
+    pub heuristic_base: f64,
+    /// Fixed per-dispatch cost of a predictive dispatch (fan-out +
+    /// result merge).
+    pub predict_base: f64,
+    /// Additional cost per simulated step-sequence in the deepest
+    /// predictor (predictors run in parallel → max over instances).
+    pub predict_per_step: f64,
+}
+
+impl Default for OverheadConfig {
+    fn default() -> Self {
+        OverheadConfig {
+            heuristic_base: 0.012,
+            predict_base: 0.035,
+            predict_per_step: 6.0e-6,
+        }
+    }
+}
+
+/// Auto-provisioning (§6.5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProvisionConfig {
+    pub enabled: bool,
+    /// Latency trigger threshold, seconds (paper: 70).
+    pub threshold: f64,
+    /// true = "preempt" strategy (trigger on predicted latency);
+    /// false = "relief" (trigger on actual latency).
+    pub predictive: bool,
+    /// Instances available at start.
+    pub initial_instances: usize,
+    /// Hard cap (backup pool size).
+    pub max_instances: usize,
+    /// Cold-start delay before a provisioned instance serves, seconds
+    /// (model load + engine init).
+    pub cold_start: f64,
+    /// Minimum spacing between provisioning decisions, seconds.
+    pub cooldown: f64,
+}
+
+impl Default for ProvisionConfig {
+    fn default() -> Self {
+        ProvisionConfig {
+            enabled: false,
+            threshold: 70.0,
+            predictive: true,
+            initial_instances: 6,
+            max_instances: 10,
+            cold_start: 40.0,
+            cooldown: 15.0,
+        }
+    }
+}
+
+/// Whole-cluster configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub n_instances: usize,
+    pub gpu: GpuProfile,
+    pub model: ModelProfile,
+    pub engine: EngineConfig,
+    pub scheduler: SchedulerKind,
+    pub overhead: OverheadConfig,
+    pub provision: ProvisionConfig,
+    /// Predictor replicas per instance (paper: 16) — bounds parallel
+    /// prediction throughput in the serving-mode coordinator.
+    pub predictor_replicas: usize,
+    /// Latency-model noise applied by the *engine* execution (the gap the
+    /// predictor cannot see); 0 disables.
+    pub exec_noise: f64,
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            n_instances: 12,
+            gpu: hw::A30,
+            model: hw::LLAMA2_7B,
+            engine: EngineConfig::default(),
+            scheduler: SchedulerKind::Block,
+            overhead: OverheadConfig::default(),
+            provision: ProvisionConfig::default(),
+            predictor_replicas: 16,
+            exec_noise: 0.06,
+            seed: 42,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Resolved number of KV blocks per instance.
+    pub fn kv_blocks(&self) -> u32 {
+        self.engine.num_blocks.unwrap_or_else(|| {
+            hw::num_kv_blocks(&self.gpu, &self.model, self.engine.block_size, 0.9)
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_instances == 0 {
+            bail!("n_instances must be > 0");
+        }
+        if self.engine.max_batch_size == 0 {
+            bail!("max_batch_size must be > 0");
+        }
+        if self.engine.chunk_size == 0 {
+            bail!("chunk_size must be > 0");
+        }
+        if self.engine.block_size == 0 {
+            bail!("block_size must be > 0");
+        }
+        if !(0.0..1.0).contains(&self.engine.watermark) {
+            bail!("watermark must be in [0,1)");
+        }
+        if self.kv_blocks() < 4 {
+            bail!("kv blocks too small: {}", self.kv_blocks());
+        }
+        let max_len_blocks = self.engine.max_model_len.div_ceil(self.engine.block_size);
+        if max_len_blocks > self.kv_blocks() {
+            bail!("a max-length request cannot fit in KV memory");
+        }
+        if self.provision.enabled
+            && self.provision.max_instances < self.provision.initial_instances
+        {
+            bail!("max_instances < initial_instances");
+        }
+        Ok(())
+    }
+
+    // ---- JSON round-trip --------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("n_instances", self.n_instances);
+        o.insert("gpu", self.gpu.name);
+        o.insert("model", self.model.name);
+        o.insert("scheduler", self.scheduler.name());
+        let mut e = JsonObj::new();
+        e.insert("policy", self.engine.policy.name());
+        e.insert("max_batch_size", self.engine.max_batch_size as u64);
+        e.insert("chunk_size", self.engine.chunk_size as u64);
+        e.insert("block_size", self.engine.block_size as u64);
+        if let Some(n) = self.engine.num_blocks {
+            e.insert("num_blocks", n as u64);
+        }
+        e.insert("watermark", self.engine.watermark);
+        e.insert("max_model_len", self.engine.max_model_len as u64);
+        o.insert("engine", e);
+        let mut ov = JsonObj::new();
+        ov.insert("heuristic_base", self.overhead.heuristic_base);
+        ov.insert("predict_base", self.overhead.predict_base);
+        ov.insert("predict_per_step", self.overhead.predict_per_step);
+        o.insert("overhead", ov);
+        let mut p = JsonObj::new();
+        p.insert("enabled", self.provision.enabled);
+        p.insert("threshold", self.provision.threshold);
+        p.insert("predictive", self.provision.predictive);
+        p.insert("initial_instances", self.provision.initial_instances);
+        p.insert("max_instances", self.provision.max_instances);
+        p.insert("cold_start", self.provision.cold_start);
+        p.insert("cooldown", self.provision.cooldown);
+        o.insert("provision", p);
+        o.insert("predictor_replicas", self.predictor_replicas);
+        o.insert("exec_noise", self.exec_noise);
+        o.insert("seed", self.seed);
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = ClusterConfig::default();
+        if let Some(v) = j.opt("n_instances") {
+            c.n_instances = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("gpu") {
+            let name = v.as_str()?;
+            c.gpu = hw::gpu_by_name(name)
+                .ok_or_else(|| anyhow!("unknown gpu '{name}'"))?;
+        }
+        if let Some(v) = j.opt("model") {
+            let name = v.as_str()?;
+            c.model = hw::model_by_name(name)
+                .ok_or_else(|| anyhow!("unknown model '{name}'"))?;
+        }
+        if let Some(v) = j.opt("scheduler") {
+            c.scheduler = SchedulerKind::parse(v.as_str()?)?;
+        }
+        if let Some(e) = j.opt("engine") {
+            if let Some(v) = e.opt("policy") {
+                c.engine.policy = LocalPolicy::parse(v.as_str()?)?;
+            }
+            if let Some(v) = e.opt("max_batch_size") {
+                c.engine.max_batch_size = v.as_usize()? as u32;
+            }
+            if let Some(v) = e.opt("chunk_size") {
+                c.engine.chunk_size = v.as_usize()? as u32;
+            }
+            if let Some(v) = e.opt("block_size") {
+                c.engine.block_size = v.as_usize()? as u32;
+            }
+            if let Some(v) = e.opt("num_blocks") {
+                c.engine.num_blocks = Some(v.as_usize()? as u32);
+            }
+            if let Some(v) = e.opt("watermark") {
+                c.engine.watermark = v.as_f64()?;
+            }
+            if let Some(v) = e.opt("max_model_len") {
+                c.engine.max_model_len = v.as_usize()? as u32;
+            }
+        }
+        if let Some(ov) = j.opt("overhead") {
+            if let Some(v) = ov.opt("heuristic_base") {
+                c.overhead.heuristic_base = v.as_f64()?;
+            }
+            if let Some(v) = ov.opt("predict_base") {
+                c.overhead.predict_base = v.as_f64()?;
+            }
+            if let Some(v) = ov.opt("predict_per_step") {
+                c.overhead.predict_per_step = v.as_f64()?;
+            }
+        }
+        if let Some(p) = j.opt("provision") {
+            if let Some(v) = p.opt("enabled") {
+                c.provision.enabled = v.as_bool()?;
+            }
+            if let Some(v) = p.opt("threshold") {
+                c.provision.threshold = v.as_f64()?;
+            }
+            if let Some(v) = p.opt("predictive") {
+                c.provision.predictive = v.as_bool()?;
+            }
+            if let Some(v) = p.opt("initial_instances") {
+                c.provision.initial_instances = v.as_usize()?;
+            }
+            if let Some(v) = p.opt("max_instances") {
+                c.provision.max_instances = v.as_usize()?;
+            }
+            if let Some(v) = p.opt("cold_start") {
+                c.provision.cold_start = v.as_f64()?;
+            }
+            if let Some(v) = p.opt("cooldown") {
+                c.provision.cooldown = v.as_f64()?;
+            }
+        }
+        if let Some(v) = j.opt("predictor_replicas") {
+            c.predictor_replicas = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("exec_noise") {
+            c.exec_noise = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("seed") {
+            c.seed = v.as_usize()? as u64;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Workload selection for an experiment run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadKind {
+    /// Synthetic ShareGPT-like lengths (pure Rust generator).
+    ShareGpt,
+    /// Corpus-backed: real prompt text from artifacts/sharegpt_synth.jsonl.
+    Corpus { path: String },
+    /// BurstGPT-like bursty arrivals, shorter responses, lengths only.
+    BurstGpt,
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub kind: WorkloadKind,
+    /// Mean external arrival rate, queries per second.
+    pub qps: f64,
+    /// Number of requests to send.
+    pub n_requests: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            kind: WorkloadKind::ShareGpt,
+            qps: 24.0,
+            n_requests: 10_000,
+            seed: 7,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid_and_matches_paper() {
+        let c = ClusterConfig::default();
+        c.validate().unwrap();
+        assert_eq!(c.n_instances, 12);
+        assert_eq!(c.engine.max_batch_size, 48);
+        assert_eq!(c.engine.chunk_size, 512);
+        assert_eq!(c.kv_blocks(), 1056);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = ClusterConfig::default();
+        c.scheduler = SchedulerKind::LlumnixMinus;
+        c.engine.max_batch_size = 24;
+        c.provision.enabled = true;
+        c.provision.predictive = false;
+        let j = c.to_json();
+        let c2 = ClusterConfig::from_json(&j).unwrap();
+        assert_eq!(c2.scheduler, SchedulerKind::LlumnixMinus);
+        assert_eq!(c2.engine.max_batch_size, 24);
+        assert!(c2.provision.enabled && !c2.provision.predictive);
+        assert_eq!(c2.n_instances, c.n_instances);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = ClusterConfig::default();
+        c.n_instances = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.engine.num_blocks = Some(2);
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.provision.enabled = true;
+        c.provision.initial_instances = 12;
+        c.provision.max_instances = 6;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scheduler_parse_names() {
+        for k in SchedulerKind::ALL {
+            assert_eq!(SchedulerKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(SchedulerKind::parse("magic").is_err());
+    }
+
+    #[test]
+    fn predictive_flags() {
+        assert!(SchedulerKind::Block.is_predictive());
+        assert!(SchedulerKind::BlockStar.uses_estimates());
+        assert!(!SchedulerKind::Block.uses_estimates());
+        assert!(!SchedulerKind::LlumnixMinus.is_predictive());
+    }
+}

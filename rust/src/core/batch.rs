@@ -1,0 +1,144 @@
+//! Batch composition: what one engine step executes.
+//!
+//! A step of a continuous-batching engine runs a *hybrid batch*: zero or
+//! more prefill chunks (prompt token ranges) piggybacked with one decode
+//! token for every running sequence (Sarathi-style), or a pure
+//! prefill/decode batch (original vLLM).  The latency model consumes the
+//! [`BatchPlan::features`] summary; the executors consume the full plan.
+
+use crate::core::request::RequestId;
+
+/// One prompt chunk scheduled in this step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrefillChunk {
+    pub request: RequestId,
+    /// Tokens of prompt already processed before this step.
+    pub offset: u32,
+    /// Tokens of prompt processed in this step.
+    pub tokens: u32,
+}
+
+/// One decoding sequence scheduled in this step (generates one token).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodeSeq {
+    pub request: RequestId,
+    /// Context length the new token attends over (prompt + generated).
+    pub context: u32,
+}
+
+/// The work an engine step executes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BatchPlan {
+    pub prefill: Vec<PrefillChunk>,
+    pub decode: Vec<DecodeSeq>,
+}
+
+impl BatchPlan {
+    pub fn is_empty(&self) -> bool {
+        self.prefill.is_empty() && self.decode.is_empty()
+    }
+
+    /// Total prompt tokens processed this step.
+    pub fn prefill_tokens(&self) -> u32 {
+        self.prefill.iter().map(|c| c.tokens).sum()
+    }
+
+    /// Number of sequences generating a decode token this step.
+    pub fn decode_seqs(&self) -> u32 {
+        self.decode.len() as u32
+    }
+
+    /// Total tokens processed (prefill chunks + one per decode seq) — the
+    /// Sarathi token-budget quantity.
+    pub fn total_tokens(&self) -> u32 {
+        self.prefill_tokens() + self.decode_seqs()
+    }
+
+    /// Attention work of the prefill chunks: sum over chunks of
+    /// tokens * (offset + tokens/2) — the causal-triangle FLOP count in
+    /// token-pair units.
+    pub fn prefill_attn_work(&self) -> f64 {
+        self.prefill
+            .iter()
+            .map(|c| c.tokens as f64 * (c.offset as f64 + c.tokens as f64 / 2.0))
+            .sum()
+    }
+
+    /// Total KV context read by decode sequences this step.
+    pub fn decode_context_sum(&self) -> f64 {
+        self.decode.iter().map(|d| d.context as f64).sum()
+    }
+
+    /// Feature vector for the linear latency model:
+    /// [1, prefill_tokens, prefill_attn_work, decode_seqs, decode_ctx_sum].
+    pub fn features(&self) -> [f64; 5] {
+        [
+            1.0,
+            self.prefill_tokens() as f64,
+            self.prefill_attn_work(),
+            self.decode_seqs() as f64,
+            self.decode_context_sum(),
+        ]
+    }
+
+    /// A stable cache key for latency memoization (the paper's predictor
+    /// cache keys on "batch size and token count"; we key on the exact
+    /// feature tuple quantized to integers for a safer hit criterion).
+    pub fn cache_key(&self) -> (u32, u64, u32, u64) {
+        (
+            self.prefill_tokens(),
+            self.prefill_attn_work() as u64,
+            self.decode_seqs(),
+            self.decode_context_sum() as u64,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> BatchPlan {
+        BatchPlan {
+            prefill: vec![
+                PrefillChunk { request: 1, offset: 0, tokens: 100 },
+                PrefillChunk { request: 2, offset: 512, tokens: 50 },
+            ],
+            decode: vec![
+                DecodeSeq { request: 3, context: 700 },
+                DecodeSeq { request: 4, context: 100 },
+            ],
+        }
+    }
+
+    #[test]
+    fn token_accounting() {
+        let p = plan();
+        assert_eq!(p.prefill_tokens(), 150);
+        assert_eq!(p.decode_seqs(), 2);
+        assert_eq!(p.total_tokens(), 152);
+        assert_eq!(p.decode_context_sum(), 800.0);
+    }
+
+    #[test]
+    fn attn_work_counts_causal_triangle() {
+        let p = plan();
+        // chunk1: 100 * (0 + 50) = 5000 ; chunk2: 50 * (512 + 25) = 26850
+        assert!((p.prefill_attn_work() - 31850.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_plan() {
+        let p = BatchPlan::default();
+        assert!(p.is_empty());
+        assert_eq!(p.features(), [1.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn cache_key_distinguishes_composition() {
+        let a = plan();
+        let mut b = plan();
+        b.decode[0].context = 701;
+        assert_ne!(a.cache_key(), b.cache_key());
+    }
+}

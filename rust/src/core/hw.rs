@@ -1,0 +1,193 @@
+//! Hardware and model performance profiles.
+//!
+//! The paper's testbed is 12 CloudLab d7525 nodes (one NVIDIA A30 each)
+//! serving LLaMA2-7B / Qwen2-7B on vLLM.  We reproduce the *cost
+//! structure* of that stack with roofline-derived profiles: prefill is
+//! compute-bound (GEMM-dominated), decode is memory-bandwidth-bound
+//! (weight + KV streaming).  These profiles seed the linear batch-latency
+//! model (`exec::latency_model`) that both the simulated engine and the
+//! Block Predictor use — the same modeling approach Vidur validated to
+//! <9% error on real clusters.
+
+/// GPU device profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuProfile {
+    pub name: &'static str,
+    /// Dense fp16/bf16 tensor throughput, TFLOPs.
+    pub tflops: f64,
+    /// HBM bandwidth, GB/s.
+    pub hbm_gbps: f64,
+    /// Device memory, GB.
+    pub mem_gb: f64,
+    /// Achievable fraction of peak FLOPs on transformer GEMMs.
+    pub mfu: f64,
+    /// Achievable fraction of peak bandwidth on streaming reads.
+    pub mbu: f64,
+}
+
+pub const A30: GpuProfile = GpuProfile {
+    name: "a30",
+    tflops: 165.0,
+    hbm_gbps: 933.0,
+    mem_gb: 24.0,
+    mfu: 0.42,
+    mbu: 0.62,
+};
+
+pub const L40: GpuProfile = GpuProfile {
+    name: "l40",
+    tflops: 181.0,
+    hbm_gbps: 864.0,
+    mem_gb: 48.0,
+    mfu: 0.45,
+    mbu: 0.60,
+};
+
+pub const A100_40G: GpuProfile = GpuProfile {
+    name: "a100-40g",
+    tflops: 312.0,
+    hbm_gbps: 1555.0,
+    mem_gb: 40.0,
+    mfu: 0.45,
+    mbu: 0.65,
+};
+
+/// Served-model profile (the quantities that set serving cost).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    /// Total parameters (billions).
+    pub params_b: f64,
+    pub n_layers: u32,
+    pub hidden: u32,
+    /// Number of KV heads (GQA reduces this below the query-head count).
+    pub kv_heads: u32,
+    pub head_dim: u32,
+    /// Weight bytes per parameter (2 = fp16).
+    pub bytes_per_param: f64,
+    /// Max context the deployment allows (vLLM max_model_len).
+    pub max_model_len: u32,
+}
+
+impl ModelProfile {
+    /// KV-cache bytes per token (both K and V, all layers, fp16).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.n_layers as f64 * self.kv_heads as f64
+            * self.head_dim as f64 * 2.0
+    }
+
+    pub fn weight_gb(&self) -> f64 {
+        self.params_b * 1e9 * self.bytes_per_param / 1e9
+    }
+
+    /// Forward FLOPs per token (the standard 2*N approximation).
+    pub fn flops_per_token(&self) -> f64 {
+        2.0 * self.params_b * 1e9
+    }
+}
+
+/// LLaMA2-7B served in fp16 — the paper's primary model.
+pub const LLAMA2_7B: ModelProfile = ModelProfile {
+    name: "llama2-7b",
+    params_b: 6.74,
+    n_layers: 32,
+    hidden: 4096,
+    kv_heads: 32,          // MHA: no GQA
+    head_dim: 128,
+    bytes_per_param: 2.0,
+    max_model_len: 2048,
+};
+
+/// Qwen2-7B — GQA (4 KV heads): ~8x smaller KV cache per token, so far
+/// more sequences fit and capacity rises (Table 2's "qwen" column).
+pub const QWEN2_7B: ModelProfile = ModelProfile {
+    name: "qwen2-7b",
+    params_b: 7.62,
+    n_layers: 28,
+    hidden: 3584,
+    kv_heads: 4,
+    head_dim: 128,
+    bytes_per_param: 2.0,
+    max_model_len: 2048,
+};
+
+pub fn gpu_by_name(name: &str) -> Option<GpuProfile> {
+    match name {
+        "a30" => Some(A30),
+        "l40" => Some(L40),
+        "a100-40g" => Some(A100_40G),
+        _ => None,
+    }
+}
+
+pub fn model_by_name(name: &str) -> Option<ModelProfile> {
+    match name {
+        "llama2-7b" => Some(LLAMA2_7B),
+        "qwen2-7b" => Some(QWEN2_7B),
+        _ => None,
+    }
+}
+
+/// KV block geometry: how many paged-attention blocks fit on the device.
+///
+/// vLLM computes this as (gpu_memory_utilization * mem - weights -
+/// activation reserve) / block_bytes.  Device memory is in GiB (what CUDA
+/// reports), weights/reserve in bytes.  With the paper's setup (A30,
+/// LLaMA2-7B fp16, block_size 16) this lands on the paper's reported
+/// 1056 blocks.
+pub fn num_kv_blocks(gpu: &GpuProfile, model: &ModelProfile,
+                     block_size: u32, gpu_mem_util: f64) -> u32 {
+    const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+    let budget_bytes = gpu.mem_gb * GIB * gpu_mem_util
+        - model.weight_gb() * 1e9
+        - ACTIVATION_RESERVE_GB * 1e9;
+    let block_bytes = model.kv_bytes_per_token() * block_size as f64;
+    (budget_bytes.max(0.0) / block_bytes).floor() as u32
+}
+
+/// Activation/workspace reserve (GB) — calibrated so the A30 + LLaMA2-7B +
+/// block_size=16 configuration yields the paper's 1056 KV blocks.
+pub const ACTIVATION_RESERVE_GB: f64 = 0.85;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama_weight_size_matches_paper() {
+        // Paper: "total model weight occupies 12.5 GB".
+        let w = LLAMA2_7B.weight_gb();
+        assert!((w - 13.48).abs() < 0.1, "weight {w}");
+        // (13.48 GB raw fp16; the paper's 12.5 GB uses GiB units — both
+        // land on the same block count with the calibrated reserve.)
+    }
+
+    #[test]
+    fn a30_llama_block_count_matches_paper() {
+        let n = num_kv_blocks(&A30, &LLAMA2_7B, 16, 0.9);
+        assert_eq!(n, 1056, "paper reports 1056 KV blocks");
+    }
+
+    #[test]
+    fn qwen_kv_much_smaller() {
+        assert!(LLAMA2_7B.kv_bytes_per_token()
+                > 7.0 * QWEN2_7B.kv_bytes_per_token());
+        let nq = num_kv_blocks(&A30, &QWEN2_7B, 16, 0.9);
+        let nl = num_kv_blocks(&A30, &LLAMA2_7B, 16, 0.9);
+        assert!(nq > 5 * nl, "GQA model must fit far more blocks ({nq} vs {nl})");
+    }
+
+    #[test]
+    fn kv_bytes_per_token_llama() {
+        // 2 * 32 layers * 32 heads * 128 dim * 2 bytes = 524288 B/token
+        assert_eq!(LLAMA2_7B.kv_bytes_per_token(), 524288.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(gpu_by_name("a30").unwrap().name, "a30");
+        assert!(gpu_by_name("h100").is_none());
+        assert_eq!(model_by_name("qwen2-7b").unwrap().kv_heads, 4);
+        assert!(model_by_name("gpt-5").is_none());
+    }
+}

@@ -1,0 +1,8 @@
+//! Core domain types: requests, batches, hardware profiles.
+
+pub mod batch;
+pub mod hw;
+pub mod request;
+
+pub use batch::{BatchPlan, DecodeSeq, PrefillChunk};
+pub use request::{Phase, Request, RequestId, RequestMetrics};

@@ -1,0 +1,149 @@
+//! Request model: what the global scheduler sees and what instances track.
+
+/// Globally unique request id.
+pub type RequestId = u64;
+
+/// An inference request as it enters the cluster (the paper's "query").
+///
+/// `response_tokens` is the ground-truth decode length (known from the
+/// trace, like Vidur's replay traces); `predicted_tokens` is what the
+/// length tagger estimated — Block schedules on the prediction, the engine
+/// executes the truth.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Arrival time at the global scheduler (seconds).
+    pub arrival: f64,
+    pub prompt_tokens: u32,
+    /// Ground-truth response length in tokens.
+    pub response_tokens: u32,
+    /// Tagger estimate (None until tagged, or when running heuristics that
+    /// do not need predictions).
+    pub predicted_tokens: Option<u32>,
+    /// Workload category (synthetic corpus) — reporting only.
+    pub category: Option<String>,
+    /// Raw prompt text, when the workload carries text (corpus-backed
+    /// runs and the real-PJRT serving path).
+    pub prompt: Option<String>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, arrival: f64, prompt_tokens: u32,
+               response_tokens: u32) -> Self {
+        Request {
+            id,
+            arrival,
+            prompt_tokens,
+            response_tokens,
+            predicted_tokens: None,
+            category: None,
+            prompt: None,
+        }
+    }
+
+    /// Length the scheduler should plan with: the tagger estimate if
+    /// present, otherwise the ground truth (the paper's "Block" variant
+    /// plans with real lengths, "Block*" with predictions).
+    pub fn planning_tokens(&self) -> u32 {
+        self.predicted_tokens.unwrap_or(self.response_tokens)
+    }
+
+    pub fn total_tokens(&self) -> u32 {
+        self.prompt_tokens + self.response_tokens
+    }
+}
+
+/// Where a sequence is in its lifecycle on an instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// In the instance waiting queue (not yet prefilled).
+    Waiting,
+    /// Part of the running batch, prompt partially processed.
+    Prefilling,
+    /// Prompt done; generating tokens.
+    Decoding,
+    Finished,
+}
+
+/// Per-request timing/accounting record — the raw material of every
+/// figure in the paper's evaluation.
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    pub id: RequestId,
+    pub instance: usize,
+    pub prompt_tokens: u32,
+    pub response_tokens: u32,
+    /// Arrival at the global scheduler.
+    pub arrival: f64,
+    /// When the scheduling decision completed (incl. prediction overhead).
+    pub dispatched: f64,
+    /// When prefill started executing on the instance.
+    pub prefill_start: f64,
+    /// First output token produced (end of the step that completed the
+    /// prompt) — TTFT reference point.
+    pub first_token: f64,
+    /// Last token produced.
+    pub finish: f64,
+    pub preemptions: u32,
+    /// Predicted e2e latency at dispatch (Block schedulers), seconds.
+    pub predicted_latency: Option<f64>,
+    /// Scheduling overhead charged by the dispatcher (seconds).
+    pub sched_overhead: f64,
+}
+
+impl RequestMetrics {
+    /// Time to first token, measured from arrival (client view).
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+
+    /// End-to-end request latency.
+    pub fn e2e(&self) -> f64 {
+        self.finish - self.arrival
+    }
+
+    /// Queueing delay on the instance before prefill started.
+    pub fn queue_delay(&self) -> f64 {
+        self.prefill_start - self.dispatched
+    }
+
+    /// Normalized latency (s/token) — the Orca/vLLM reporting convention.
+    pub fn normalized_latency(&self) -> f64 {
+        self.e2e() / self.response_tokens.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planning_tokens_prefers_prediction() {
+        let mut r = Request::new(1, 0.0, 100, 200);
+        assert_eq!(r.planning_tokens(), 200);
+        r.predicted_tokens = Some(150);
+        assert_eq!(r.planning_tokens(), 150);
+    }
+
+    #[test]
+    fn metrics_derived_quantities() {
+        let m = RequestMetrics {
+            id: 1,
+            instance: 0,
+            prompt_tokens: 10,
+            response_tokens: 20,
+            arrival: 1.0,
+            dispatched: 1.1,
+            prefill_start: 1.5,
+            first_token: 2.0,
+            finish: 5.0,
+            preemptions: 0,
+            predicted_latency: None,
+            sched_overhead: 0.1,
+        };
+        assert!((m.ttft() - 1.0).abs() < 1e-12);
+        assert!((m.e2e() - 4.0).abs() < 1e-12);
+        assert!((m.queue_delay() - 0.4).abs() < 1e-12);
+        assert!((m.normalized_latency() - 0.2).abs() < 1e-12);
+    }
+}

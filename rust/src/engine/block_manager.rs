@@ -1,0 +1,212 @@
+//! Paged-attention KV block manager (the vLLM memory substrate, §2/Fig 1).
+//!
+//! GPU memory is divided into fixed-size blocks of `block_size` tokens; a
+//! per-sequence page table maps logical token positions to physical
+//! blocks.  The quantities the paper measures (Figure 7) are the free
+//! block count and its variance across instances; the behaviour it blames
+//! for heuristic schedulers' tail latency — preemption when an instance
+//! runs out of blocks mid-decode — originates here.
+
+use std::collections::HashMap;
+
+use crate::core::request::RequestId;
+
+/// Physical block index.
+pub type BlockId = u32;
+
+#[derive(Debug, Clone)]
+pub struct BlockManager {
+    block_size: u32,
+    total: u32,
+    free: Vec<BlockId>,
+    /// Page table: sequence -> physical blocks (in logical order).
+    tables: HashMap<RequestId, Vec<BlockId>>,
+    /// Admission watermark in blocks: keep this many free when admitting
+    /// new sequences (vLLM's guard against immediate preemption).
+    watermark_blocks: u32,
+}
+
+impl BlockManager {
+    pub fn new(total: u32, block_size: u32, watermark_frac: f64) -> Self {
+        assert!(block_size > 0 && total > 0);
+        BlockManager {
+            block_size,
+            total,
+            free: (0..total).rev().collect(),
+            tables: HashMap::new(),
+            watermark_blocks: ((total as f64 * watermark_frac).ceil() as u32).max(1),
+        }
+    }
+
+    pub fn block_size(&self) -> u32 {
+        self.block_size
+    }
+
+    pub fn total_blocks(&self) -> u32 {
+        self.total
+    }
+
+    pub fn free_blocks(&self) -> u32 {
+        self.free.len() as u32
+    }
+
+    pub fn used_blocks(&self) -> u32 {
+        self.total - self.free_blocks()
+    }
+
+    pub fn watermark_blocks(&self) -> u32 {
+        self.watermark_blocks
+    }
+
+    /// Blocks needed to hold `tokens` tokens.
+    pub fn blocks_for(&self, tokens: u32) -> u32 {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Blocks currently held by a sequence.
+    pub fn seq_blocks(&self, id: RequestId) -> u32 {
+        self.tables.get(&id).map_or(0, |t| t.len() as u32)
+    }
+
+    pub fn has_seq(&self, id: RequestId) -> bool {
+        self.tables.contains_key(&id)
+    }
+
+    /// Can a *new* sequence with `tokens` of prompt be admitted without
+    /// dipping below the watermark?
+    pub fn can_admit(&self, tokens: u32) -> bool {
+        let needed = self.blocks_for(tokens.max(1));
+        self.free_blocks() >= needed + self.watermark_blocks
+    }
+
+    /// Allocate the page table for a newly admitted sequence covering
+    /// `tokens` tokens.  Returns false (no change) if memory is short.
+    pub fn allocate_seq(&mut self, id: RequestId, tokens: u32) -> bool {
+        assert!(!self.tables.contains_key(&id), "sequence {id} already mapped");
+        let needed = self.blocks_for(tokens.max(1));
+        if (self.free.len() as u32) < needed {
+            return false;
+        }
+        let table: Vec<BlockId> =
+            (0..needed).map(|_| self.free.pop().unwrap()).collect();
+        self.tables.insert(id, table);
+        true
+    }
+
+    /// Ensure capacity for a sequence now holding `tokens` tokens
+    /// (grow-by-one as decode crosses block boundaries).  Returns false if
+    /// a needed block could not be allocated (caller must preempt).
+    pub fn grow_to(&mut self, id: RequestId, tokens: u32) -> bool {
+        let needed = self.blocks_for(tokens.max(1));
+        let table = self.tables.get_mut(&id).expect("sequence not mapped");
+        while (table.len() as u32) < needed {
+            match self.free.pop() {
+                Some(b) => table.push(b),
+                None => return false,
+            }
+        }
+        true
+    }
+
+    /// Release all blocks of a sequence (finish or preemption).
+    pub fn free_seq(&mut self, id: RequestId) {
+        if let Some(table) = self.tables.remove(&id) {
+            self.free.extend(table);
+        }
+    }
+
+    /// Invariant check: every block is either free or in exactly one page
+    /// table (used by property tests).
+    pub fn check_conservation(&self) -> bool {
+        let mut seen = vec![false; self.total as usize];
+        for &b in &self.free {
+            if seen[b as usize] {
+                return false;
+            }
+            seen[b as usize] = true;
+        }
+        for table in self.tables.values() {
+            for &b in table {
+                if seen[b as usize] {
+                    return false;
+                }
+                seen[b as usize] = true;
+            }
+        }
+        seen.into_iter().all(|s| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_grow_free_cycle() {
+        let mut bm = BlockManager::new(100, 16, 0.01);
+        assert!(bm.allocate_seq(1, 100)); // 7 blocks
+        assert_eq!(bm.seq_blocks(1), 7);
+        assert_eq!(bm.free_blocks(), 93);
+        assert!(bm.grow_to(1, 112)); // exactly 7 blocks — no growth
+        assert_eq!(bm.seq_blocks(1), 7);
+        assert!(bm.grow_to(1, 113)); // 8 blocks
+        assert_eq!(bm.seq_blocks(1), 8);
+        bm.free_seq(1);
+        assert_eq!(bm.free_blocks(), 100);
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn admission_respects_watermark() {
+        let mut bm = BlockManager::new(10, 16, 0.2); // watermark 2 blocks
+        assert!(bm.can_admit(16 * 8)); // 8 + 2 == 10 ok
+        assert!(!bm.can_admit(16 * 9)); // would leave < watermark
+        assert!(bm.allocate_seq(1, 16 * 8));
+        assert!(!bm.can_admit(16)); // 2 free == watermark, needs 1 more
+    }
+
+    #[test]
+    fn grow_fails_when_exhausted_but_keeps_state() {
+        let mut bm = BlockManager::new(4, 16, 0.01);
+        assert!(bm.allocate_seq(1, 48)); // 3 blocks
+        assert!(bm.allocate_seq(2, 16)); // 1 block
+        assert_eq!(bm.free_blocks(), 0);
+        assert!(!bm.grow_to(1, 49)); // needs a 4th block
+        assert!(bm.check_conservation());
+        // Preempt seq 2 and retry.
+        bm.free_seq(2);
+        assert!(bm.grow_to(1, 49));
+        assert!(bm.check_conservation());
+    }
+
+    #[test]
+    fn allocate_fails_atomically() {
+        let mut bm = BlockManager::new(4, 16, 0.01);
+        assert!(!bm.allocate_seq(1, 16 * 5));
+        assert_eq!(bm.free_blocks(), 4);
+        assert!(!bm.has_seq(1));
+    }
+
+    #[test]
+    fn zero_token_seq_gets_one_block() {
+        let mut bm = BlockManager::new(4, 16, 0.01);
+        assert!(bm.allocate_seq(1, 0));
+        assert_eq!(bm.seq_blocks(1), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "already mapped")]
+    fn double_allocate_panics() {
+        let mut bm = BlockManager::new(4, 16, 0.01);
+        bm.allocate_seq(1, 16);
+        bm.allocate_seq(1, 16);
+    }
+
+    #[test]
+    fn free_unknown_is_noop() {
+        let mut bm = BlockManager::new(4, 16, 0.01);
+        bm.free_seq(99);
+        assert_eq!(bm.free_blocks(), 4);
+        assert!(bm.check_conservation());
+    }
+}

@@ -1,0 +1,185 @@
+//! The `status` API (§4.1): the engine-state snapshot an inference
+//! framework exports for the Predictor sidecar and heuristic dispatchers.
+//!
+//! In the paper this is a new vLLM HTTP endpoint (154 LoC of integration);
+//! here it is a plain struct the in-process services consume directly, and
+//! the HTTP server (`server/`) serializes to JSON for the wire.
+
+use crate::core::batch::BatchPlan;
+use crate::core::request::RequestId;
+use crate::engine::SeqState;
+use crate::util::json::{Json, JsonObj};
+
+/// A sequence as seen through the status API.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeqSnapshot {
+    pub id: RequestId,
+    pub prompt_tokens: u32,
+    pub prefill_target: u32,
+    pub prefill_done: u32,
+    pub generated: u32,
+    /// Planning length: ground truth on the live engine; the Predictor
+    /// substitutes tagger estimates before simulating.
+    pub response_limit: u32,
+    pub enqueued: f64,
+    pub prefill_start: Option<f64>,
+    pub first_token: Option<f64>,
+    pub preemptions: u32,
+}
+
+impl SeqSnapshot {
+    pub fn from_seq(s: &SeqState) -> Self {
+        SeqSnapshot {
+            id: s.id,
+            prompt_tokens: s.prompt_tokens,
+            prefill_target: s.prefill_target,
+            prefill_done: s.prefill_done,
+            generated: s.generated,
+            response_limit: s.response_limit,
+            enqueued: s.enqueued,
+            prefill_start: s.prefill_start,
+            first_token: s.first_token,
+            preemptions: s.preemptions,
+        }
+    }
+
+    pub fn to_seq(&self) -> SeqState {
+        SeqState {
+            id: self.id,
+            prompt_tokens: self.prompt_tokens,
+            prefill_target: self.prefill_target,
+            prefill_done: self.prefill_done,
+            generated: self.generated,
+            response_limit: self.response_limit,
+            enqueued: self.enqueued,
+            prefill_start: self.prefill_start,
+            first_token: self.first_token,
+            preemptions: self.preemptions,
+        }
+    }
+}
+
+/// Full instance status export.
+#[derive(Debug, Clone)]
+pub struct InstanceStatus {
+    pub now: f64,
+    pub free_blocks: u32,
+    pub total_blocks: u32,
+    pub watermark_blocks: u32,
+    pub running: Vec<SeqSnapshot>,
+    pub waiting: Vec<SeqSnapshot>,
+    /// The step currently executing, if any (plan + completion time).
+    pub in_flight: Option<(BatchPlan, f64)>,
+    pub total_preemptions: u64,
+}
+
+impl InstanceStatus {
+    pub fn used_blocks(&self) -> u32 {
+        self.total_blocks - self.free_blocks
+    }
+
+    /// Running batch size (INFaaS++ denominator).
+    pub fn batch_size(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Blocks the waiting queue's prompts will need (Llumnix-'s
+    /// `prefillMemory` term), in tokens.
+    pub fn pending_prefill_tokens(&self) -> u64 {
+        self.waiting.iter().map(|s| s.prefill_target as u64).sum::<u64>()
+            + self
+                .running
+                .iter()
+                .map(|s| {
+                    (s.prefill_target - s.prefill_done.min(s.prefill_target)) as u64
+                })
+                .sum::<u64>()
+    }
+
+    /// Serialize for the HTTP status endpoint.
+    pub fn to_json(&self) -> Json {
+        fn seq(s: &SeqSnapshot) -> Json {
+            let mut o = JsonObj::new();
+            o.insert("id", s.id);
+            o.insert("prompt_tokens", s.prompt_tokens as u64);
+            o.insert("prefill_target", s.prefill_target as u64);
+            o.insert("prefill_done", s.prefill_done as u64);
+            o.insert("generated", s.generated as u64);
+            o.insert("response_limit", s.response_limit as u64);
+            o.insert("enqueued", s.enqueued);
+            o.insert("preemptions", s.preemptions as u64);
+            Json::Obj(o)
+        }
+        let mut o = JsonObj::new();
+        o.insert("now", self.now);
+        o.insert("free_blocks", self.free_blocks as u64);
+        o.insert("total_blocks", self.total_blocks as u64);
+        o.insert("running", Json::Arr(self.running.iter().map(seq).collect()));
+        o.insert("waiting", Json::Arr(self.waiting.iter().map(seq).collect()));
+        o.insert("total_preemptions", self.total_preemptions);
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(id: u64, target: u32, done: u32, generated: u32) -> SeqSnapshot {
+        SeqSnapshot {
+            id,
+            prompt_tokens: target,
+            prefill_target: target,
+            prefill_done: done,
+            generated,
+            response_limit: 100,
+            enqueued: 0.0,
+            prefill_start: None,
+            first_token: None,
+            preemptions: 0,
+        }
+    }
+
+    #[test]
+    fn pending_prefill_counts_waiting_and_partial() {
+        let st = InstanceStatus {
+            now: 0.0,
+            free_blocks: 10,
+            total_blocks: 20,
+            watermark_blocks: 1,
+            running: vec![snap(1, 500, 200, 0), snap(2, 100, 100, 5)],
+            waiting: vec![snap(3, 300, 0, 0)],
+            in_flight: None,
+            total_preemptions: 0,
+        };
+        // 300 (waiting) + 300 (running partial) + 0 (done)
+        assert_eq!(st.pending_prefill_tokens(), 600);
+        assert_eq!(st.used_blocks(), 10);
+        assert_eq!(st.batch_size(), 2);
+    }
+
+    #[test]
+    fn seq_snapshot_roundtrip() {
+        let s = snap(7, 128, 64, 3);
+        let back = SeqSnapshot::from_seq(&s.to_seq());
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn json_export_has_fields() {
+        let st = InstanceStatus {
+            now: 1.5,
+            free_blocks: 10,
+            total_blocks: 20,
+            watermark_blocks: 1,
+            running: vec![snap(1, 500, 200, 0)],
+            waiting: vec![],
+            in_flight: None,
+            total_preemptions: 3,
+        };
+        let j = st.to_json();
+        assert_eq!(j.field("free_blocks").unwrap().as_usize().unwrap(), 10);
+        assert_eq!(j.field("running").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(j.field("total_preemptions").unwrap().as_usize().unwrap(), 3);
+    }
+}

@@ -1,0 +1,168 @@
+//! Vidur-style fitted linear batch-latency model.
+//!
+//! Vidur profiles low-level operators on the target GPU and fits linear
+//! models that interpolate batch execution times (<9% error).  The paper's
+//! Predictor embeds exactly such a model.  Here the same machinery exists
+//! for two uses:
+//!
+//! * fit against the roofline ground truth (plus measurement noise) — the
+//!   experiment path, showing the Predictor works from *profiled* data
+//!   rather than by sharing code with the engine;
+//! * fit against **real PJRT step timings** of the tiny served model — the
+//!   real-serving path (`runtime::profile`).
+
+use crate::core::batch::{BatchPlan, DecodeSeq, PrefillChunk};
+use crate::exec::BatchCost;
+use crate::util::rng::Rng;
+use crate::util::stats::least_squares;
+
+/// Linear model over [`BatchPlan::features`]:
+/// t = b0 + b1*prefill_tokens + b2*prefill_attn_work + b3*decode_seqs
+///       + b4*decode_ctx_sum.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FittedModel {
+    pub coef: [f64; 5],
+}
+
+impl FittedModel {
+    /// Least-squares fit from (plan, seconds) samples.
+    pub fn fit(samples: &[(BatchPlan, f64)]) -> Option<FittedModel> {
+        if samples.len() < 8 {
+            return None;
+        }
+        let rows: Vec<Vec<f64>> =
+            samples.iter().map(|(p, _)| p.features().to_vec()).collect();
+        let ys: Vec<f64> = samples.iter().map(|(_, t)| *t).collect();
+        let coef = least_squares(&rows, &ys)?;
+        Some(FittedModel { coef: [coef[0], coef[1], coef[2], coef[3], coef[4]] })
+    }
+
+    /// Mean absolute percentage error on a sample set.
+    pub fn mape(&self, samples: &[(BatchPlan, f64)]) -> f64 {
+        if samples.is_empty() {
+            return f64::NAN;
+        }
+        samples
+            .iter()
+            .map(|(p, t)| ((self.batch_time(p) - t) / t.max(1e-9)).abs())
+            .sum::<f64>()
+            / samples.len() as f64
+    }
+}
+
+impl BatchCost for FittedModel {
+    fn batch_time(&self, plan: &BatchPlan) -> f64 {
+        if plan.is_empty() {
+            return 0.0;
+        }
+        let f = plan.features();
+        let t: f64 = self.coef.iter().zip(f.iter()).map(|(c, x)| c * x).sum();
+        t.max(1e-6)
+    }
+}
+
+/// Generate a profiling workload: a spread of batch plans covering the
+/// compositions the engine actually produces (pure prefill at several
+/// chunk sizes and offsets, pure decode at several batch sizes and
+/// contexts, hybrids).  `measure` is called once per plan (a real executor
+/// or a cost model + noise).
+pub fn profile_table(
+    rng: &mut Rng,
+    mut measure: impl FnMut(&BatchPlan) -> f64,
+) -> Vec<(BatchPlan, f64)> {
+    let mut out = Vec::new();
+    // Pure prefill sweeps.
+    for &tokens in &[64u32, 128, 256, 512, 1024, 2048] {
+        for &offset in &[0u32, 256, 1024] {
+            let plan = BatchPlan {
+                prefill: vec![PrefillChunk { request: 0, offset, tokens }],
+                decode: vec![],
+            };
+            let t = measure(&plan);
+            out.push((plan, t));
+        }
+    }
+    // Pure decode sweeps.
+    for &n in &[1usize, 4, 8, 16, 24, 32, 48] {
+        for &ctx in &[64u32, 256, 512, 1024, 1900] {
+            let plan = BatchPlan {
+                prefill: vec![],
+                decode: (0..n)
+                    .map(|i| DecodeSeq { request: i as u64, context: ctx })
+                    .collect(),
+            };
+            let t = measure(&plan);
+            out.push((plan, t));
+        }
+    }
+    // Random hybrids.
+    for _ in 0..60 {
+        let n_dec = rng.index(32);
+        let chunk = 16 + rng.index(512) as u32;
+        let plan = BatchPlan {
+            prefill: vec![PrefillChunk {
+                request: 0,
+                offset: rng.index(1024) as u32,
+                tokens: chunk,
+            }],
+            decode: (0..n_dec)
+                .map(|i| DecodeSeq {
+                    request: i as u64,
+                    context: 32 + rng.index(1800) as u32,
+                })
+                .collect(),
+        };
+        let t = measure(&plan);
+        out.push((plan, t));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::hw::{A30, LLAMA2_7B};
+    use crate::exec::roofline::RooflineModel;
+
+    #[test]
+    fn fit_recovers_roofline_within_vidur_error() {
+        let truth = RooflineModel::from_profiles(&A30, &LLAMA2_7B);
+        let mut rng = Rng::new(1);
+        let mut noise = Rng::new(2);
+        let table = profile_table(&mut rng, |p| {
+            truth.batch_time(p) * (1.0 + 0.02 * noise.normal())
+        });
+        let fitted = FittedModel::fit(&table).unwrap();
+        // Vidur reports <9% error on per-operator models; a single linear
+        // surrogate of a max() roofline over the whole plan space carries
+        // extra structural error — <25% MAPE on the full sweep is the
+        // acceptance bar here (the engine/predictor share the roofline
+        // model, so this fit is a demonstration path, not the truth).
+        let err = fitted.mape(&table);
+        assert!(err < 0.25, "mape {err}");
+    }
+
+    #[test]
+    fn fit_exact_linear_is_exact() {
+        let truth = FittedModel { coef: [0.004, 2e-4, 1e-8, 5e-4, 1e-6] };
+        let mut rng = Rng::new(3);
+        let table = profile_table(&mut rng, |p| truth.batch_time(p));
+        let fitted = FittedModel::fit(&table).unwrap();
+        for (a, b) in fitted.coef.iter().zip(truth.coef.iter()) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn too_few_samples_rejected() {
+        let plan = BatchPlan::default();
+        let samples = vec![(plan, 0.01); 3];
+        assert!(FittedModel::fit(&samples).is_none());
+    }
+
+    #[test]
+    fn empty_plan_is_free() {
+        let m = FittedModel { coef: [0.1; 5] };
+        assert_eq!(m.batch_time(&BatchPlan::default()), 0.0);
+    }
+}

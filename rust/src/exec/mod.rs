@@ -1,0 +1,38 @@
+//! Batch execution-time models.
+//!
+//! The engine (live execution) and the Predictor (forward simulation) both
+//! consume a [`BatchCost`]: given a [`BatchPlan`], how long does one step
+//! take on this (GPU, model) pair?  Two implementations:
+//!
+//! * [`roofline::RooflineModel`] — analytically derived from hardware
+//!   profiles (compute-bound prefill vs bandwidth-bound decode).
+//! * [`fitted::FittedModel`] — Vidur's approach: a linear model fitted by
+//!   least squares to profiled (plan, time) samples; this is what the
+//!   paper's Predictor uses, and what the PJRT path fits from real
+//!   measurements.
+
+pub mod fitted;
+pub mod roofline;
+
+use crate::core::batch::BatchPlan;
+
+/// Seconds to execute one engine step.
+///
+/// Deliberately not `Send + Sync`: single-threaded callers (the DES, the
+/// Predictor's memo cache) use interior mutability; concurrent callers
+/// wrap in `Arc<dyn BatchCost + Send + Sync>` where needed.
+pub trait BatchCost {
+    fn batch_time(&self, plan: &BatchPlan) -> f64;
+}
+
+impl<T: BatchCost + ?Sized> BatchCost for Box<T> {
+    fn batch_time(&self, plan: &BatchPlan) -> f64 {
+        (**self).batch_time(plan)
+    }
+}
+
+impl<T: BatchCost + ?Sized> BatchCost for std::sync::Arc<T> {
+    fn batch_time(&self, plan: &BatchPlan) -> f64 {
+        (**self).batch_time(plan)
+    }
+}

@@ -1,0 +1,175 @@
+//! Roofline-derived batch latency model.
+//!
+//! LLM serving cost structure (§2 of the paper): prefill is compute-bound
+//! (GEMMs over whole prompt chunks saturate the tensor cores), decode is
+//! memory-bandwidth-bound (every step streams the full weights plus each
+//! sequence's KV cache to produce one token per sequence).  A hybrid
+//! Sarathi batch pays the max of its compute and memory streams plus a
+//! fixed step overhead:
+//!
+//! ```text
+//! t(plan) = overhead
+//!         + max( flop_per_tok * (prefill_toks + decode_seqs)
+//!                  + attn_pair * prefill_attn_work,
+//!                weight_read * 1[work]
+//!                  + kv_tok * (decode_ctx_sum + prefill_ctx_reads) )
+//! ```
+//!
+//! This is the ground-truth cost the simulated engine charges; the
+//! Predictor may use either this model or a linear fit of it
+//! (`fitted::FittedModel`), mirroring how Vidur fits linear models to real
+//! device profiling.
+
+use crate::core::batch::BatchPlan;
+use crate::core::hw::{GpuProfile, ModelProfile};
+use crate::exec::BatchCost;
+
+#[derive(Debug, Clone)]
+pub struct RooflineModel {
+    /// Fixed per-step overhead: kernel launch, local-scheduler bookkeeping,
+    /// sampler (seconds).
+    pub overhead: f64,
+    /// Seconds of GEMM compute per processed token (prefill token or
+    /// decode token).
+    pub flop_per_tok: f64,
+    /// Seconds of attention compute per (query,key) token pair.
+    pub attn_pair: f64,
+    /// Seconds to stream the model weights once (paid by every non-empty
+    /// step; overlapped with — hence max'd against — compute).
+    pub weight_read: f64,
+    /// Seconds to stream one token's KV cache.
+    pub kv_tok: f64,
+}
+
+impl RooflineModel {
+    pub fn from_profiles(gpu: &GpuProfile, model: &ModelProfile) -> Self {
+        let eff_flops = gpu.tflops * 1e12 * gpu.mfu;
+        let eff_bw = gpu.hbm_gbps * 1e9 * gpu.mbu;
+        // Attention FLOPs per token pair: QK^T + PV, 2 FLOPs per MAC,
+        // over n_layers and the full hidden width of the KV heads.
+        let attn_flops_per_pair = 2.0 * 2.0 * model.n_layers as f64
+            * (model.kv_heads * model.head_dim) as f64;
+        RooflineModel {
+            overhead: 0.004,
+            flop_per_tok: model.flops_per_token() / eff_flops,
+            attn_pair: attn_flops_per_pair / eff_flops,
+            weight_read: model.weight_gb() * 1e9 / eff_bw,
+            kv_tok: model.kv_bytes_per_token() / eff_bw,
+        }
+    }
+}
+
+impl BatchCost for RooflineModel {
+    fn batch_time(&self, plan: &BatchPlan) -> f64 {
+        if plan.is_empty() {
+            return 0.0;
+        }
+        let compute = self.flop_per_tok
+            * (plan.prefill_tokens() as f64 + plan.decode_seqs() as f64)
+            + self.attn_pair * plan.prefill_attn_work();
+        // Prefill chunks also read the KV of their preceding context once.
+        let prefill_ctx_reads: f64 = plan
+            .prefill
+            .iter()
+            .map(|c| c.offset as f64)
+            .sum();
+        let memory = self.weight_read
+            + self.kv_tok * (plan.decode_context_sum() + prefill_ctx_reads);
+        self.overhead + compute.max(memory)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::batch::{DecodeSeq, PrefillChunk};
+    use crate::core::hw::{A30, LLAMA2_7B, QWEN2_7B};
+
+    fn model() -> RooflineModel {
+        RooflineModel::from_profiles(&A30, &LLAMA2_7B)
+    }
+
+    fn prefill_plan(tokens: u32) -> BatchPlan {
+        BatchPlan {
+            prefill: vec![PrefillChunk { request: 1, offset: 0, tokens }],
+            decode: vec![],
+        }
+    }
+
+    fn decode_plan(n: usize, ctx: u32) -> BatchPlan {
+        BatchPlan {
+            prefill: vec![],
+            decode: (0..n)
+                .map(|i| DecodeSeq { request: i as u64, context: ctx })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn empty_plan_costs_nothing() {
+        assert_eq!(model().batch_time(&BatchPlan::default()), 0.0);
+    }
+
+    #[test]
+    fn prefill_is_compute_bound_and_linear() {
+        let m = model();
+        let t256 = m.batch_time(&prefill_plan(256));
+        let t512 = m.batch_time(&prefill_plan(512));
+        // 512-token chunk on A30/7B lands in the ~100ms regime.
+        assert!((0.05..0.25).contains(&t512), "t512 {t512}");
+        // Roughly linear in chunk size (attention quadratic term is small).
+        let ratio = (t512 - m.overhead) / (t256 - m.overhead);
+        assert!((1.8..2.4).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn decode_is_memory_bound() {
+        let m = model();
+        // A single decode token still pays the full weight stream.
+        let t1 = m.batch_time(&decode_plan(1, 100));
+        assert!(t1 > m.weight_read, "t1 {t1} weight {}", m.weight_read);
+        // Batch of 48 at long context costs more, but far less than 48x.
+        let t48 = m.batch_time(&decode_plan(48, 500));
+        assert!(t48 < 4.0 * t1, "t48 {t48} t1 {t1}");
+        assert!(t48 > t1);
+        // Decode step magnitude sanity: tens of milliseconds.
+        assert!((0.02..0.15).contains(&t48), "t48 {t48}");
+    }
+
+    #[test]
+    fn hybrid_batch_at_least_each_part() {
+        let m = model();
+        let hybrid = BatchPlan {
+            prefill: vec![PrefillChunk { request: 1, offset: 0, tokens: 256 }],
+            decode: (0..20).map(|i| DecodeSeq { request: 10 + i, context: 400 }).collect(),
+        };
+        let t = m.batch_time(&hybrid);
+        let tp = m.batch_time(&prefill_plan(256));
+        let td = m.batch_time(&decode_plan(20, 400));
+        assert!(t >= tp.max(td) - 1e-12);
+        assert!(t <= tp + td);
+    }
+
+    #[test]
+    fn qwen_decode_cheaper_thanks_to_gqa() {
+        let ml = RooflineModel::from_profiles(&A30, &LLAMA2_7B);
+        let mq = RooflineModel::from_profiles(&A30, &QWEN2_7B);
+        let plan = decode_plan(48, 800);
+        assert!(mq.batch_time(&plan) < ml.batch_time(&plan));
+        assert!(mq.kv_tok < ml.kv_tok / 5.0);
+    }
+
+    #[test]
+    fn later_chunks_cost_more_via_context_reads() {
+        let m = model();
+        let first = BatchPlan {
+            prefill: vec![PrefillChunk { request: 1, offset: 0, tokens: 512 }],
+            decode: vec![],
+        };
+        let later = BatchPlan {
+            prefill: vec![PrefillChunk { request: 1, offset: 1536, tokens: 512 }],
+            decode: vec![],
+        };
+        assert!(m.batch_time(&later) > m.batch_time(&first));
+    }
+}

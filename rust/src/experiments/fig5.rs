@@ -1,0 +1,130 @@
+//! Figure 5 — latency-prediction quality of the online simulator.
+//!
+//! Three panels, as in the paper:
+//!
+//! 1. **Error rate vs QPS** (chunked vs prioritized prefill): mean
+//!    |predicted - actual| / actual over Block-scheduled requests.
+//!    Chunked prefill should predict better (no stall bubbles).
+//! 2. **Predicted-vs-actual scatter**: sampled requests' dispatch-time
+//!    prediction against their realized latency.
+//! 3. **Selected-instance rank**: for 1%-sampled arrivals (broadcast to
+//!    all instances, random placement — the paper's §6.2.2 protocol), the
+//!    rank of the min-predicted instance under a noise-perturbed
+//!    counterfactual execution of every instance.  High mass at rank 1 =
+//!    the predictor picks the actually-best instance.
+
+use anyhow::Result;
+
+use crate::cluster::{run_experiment, SimOptions};
+use crate::config::{LocalPolicy, SchedulerKind};
+use crate::core::batch::BatchPlan;
+use crate::exec::roofline::RooflineModel;
+use crate::exec::BatchCost;
+use crate::experiments::{paper_cluster, sharegpt_workload, ExpContext, Scale};
+use crate::metrics::render_table;
+use crate::predictor::{Predictor, TrueLengths};
+use crate::util::json::{Json, JsonObj};
+use crate::util::rng::Rng;
+
+/// Multiplicative-noise wrapper: the "actual execution" counterfactual.
+struct NoisyCost<'a> {
+    inner: &'a RooflineModel,
+    rng: std::cell::RefCell<Rng>,
+    sigma: f64,
+}
+
+impl BatchCost for NoisyCost<'_> {
+    fn batch_time(&self, plan: &BatchPlan) -> f64 {
+        let z = self.rng.borrow_mut().normal();
+        self.inner.batch_time(plan) * (1.0 + self.sigma * z).max(0.2)
+    }
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let qps_points = match ctx.scale {
+        Scale::Quick => vec![52.0, 64.0, 72.0],
+        Scale::Full => vec![48.0, 56.0, 62.0, 68.0, 72.0, 76.0],
+    };
+
+    // Panel 1: prediction error rate vs QPS, chunked vs prioritized.
+    let mut rows = Vec::new();
+    let mut out = JsonObj::new();
+    for policy in [LocalPolicy::SarathiChunked, LocalPolicy::VllmPrefillPriority] {
+        for &qps in &qps_points {
+            let n = ctx.scale.requests_for(qps);
+            let mut cfg = paper_cluster(SchedulerKind::Block);
+            cfg.engine.policy = policy;
+            let res = run_experiment(cfg, &sharegpt_workload(qps, n, ctx.seed),
+                                     SimOptions { probes: false,
+                                                  sample_prob: 0.0 })?;
+            let s = res.metrics.summary();
+            let err = s.pred_error_rate.unwrap_or(f64::NAN);
+            rows.push(vec![policy.name().into(), format!("{qps:.0}"),
+                           format!("{:.1}%", err * 100.0)]);
+            out.insert(format!("err_rate:{}@{qps}", policy.name()), err);
+        }
+    }
+    println!("Figure 5 (top) — prediction error rate vs QPS:");
+    println!("{}", render_table(&["local policy", "qps", "error rate"], &rows));
+
+    // Panels 2+3: sampled broadcast under the random scheduler.
+    let probe_qps = *qps_points.last().unwrap() * 0.85;
+    let n = ctx.scale.requests_for(probe_qps);
+    let cfg = paper_cluster(SchedulerKind::Random);
+    let res = run_experiment(cfg.clone(),
+                             &sharegpt_workload(probe_qps, n, ctx.seed),
+                             SimOptions { probes: false, sample_prob: 0.02 })?;
+    let cost = RooflineModel::from_profiles(&cfg.gpu, &cfg.model);
+    let mut predictor = Predictor::new(cfg.engine.clone(), cfg.kv_blocks());
+    let mut rank_hist = vec![0usize; cfg.n_instances];
+    let mut scatter = Vec::new();
+    for (si, s) in res.sampled.iter().enumerate() {
+        // Predictions per instance.
+        let preds: Vec<(usize, f64)> = s.statuses.iter()
+            .map(|(i, st)| {
+                (*i, predictor.predict(st, &s.request, &cost, &TrueLengths).e2e)
+            })
+            .collect();
+        // Counterfactual "actual" with execution noise.
+        let noisy = NoisyCost {
+            inner: &cost,
+            rng: std::cell::RefCell::new(Rng::new(ctx.seed ^ (si as u64) << 3)),
+            sigma: cfg.exec_noise,
+        };
+        let actuals: Vec<(usize, f64)> = s.statuses.iter()
+            .map(|(i, st)| {
+                (*i, predictor.predict(st, &s.request, &noisy, &TrueLengths).e2e)
+            })
+            .collect();
+        let best_pred = preds.iter()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap().0;
+        let mut order: Vec<usize> = (0..actuals.len()).collect();
+        order.sort_by(|&a, &b| actuals[a].1.partial_cmp(&actuals[b].1).unwrap());
+        let rank = order.iter()
+            .position(|&k| actuals[k].0 == best_pred).unwrap();
+        let idx = rank.min(rank_hist.len() - 1);
+        rank_hist[idx] += 1;
+        for ((i, p), (_, a)) in preds.iter().zip(&actuals) {
+            let _ = i;
+            scatter.push((*p, *a));
+        }
+    }
+    let total: usize = rank_hist.iter().sum();
+    println!("Figure 5 (bottom) — rank of min-predicted instance under \
+              counterfactual execution ({total} sampled broadcasts at QPS \
+              {probe_qps:.0}):");
+    let rank_rows: Vec<Vec<String>> = rank_hist.iter().enumerate()
+        .take(6)
+        .map(|(r, &c)| vec![format!("{}", r + 1),
+                            format!("{:.1}%", 100.0 * c as f64 / total.max(1) as f64)])
+        .collect();
+    println!("{}", render_table(&["rank", "fraction"], &rank_rows));
+
+    out.insert("rank_hist", Json::Arr(
+        rank_hist.iter().map(|&c| Json::Num(c as f64)).collect()));
+    out.insert("scatter", Json::Arr(
+        scatter.iter().take(2000)
+            .map(|&(p, a)| Json::Arr(vec![p.into(), a.into()])).collect()));
+    out.insert("probe_qps", probe_qps);
+    ctx.write_json("fig5", &Json::Obj(out))
+}

@@ -1,0 +1,95 @@
+//! Figure 6 (+ Figure 9 CDFs) — request metrics under varying QPS for all
+//! seven schedulers, plus SLO capacity (max QPS with TTFT P99 < 3 s).
+
+use anyhow::Result;
+
+use crate::cluster::{run_experiment, SimOptions};
+use crate::config::SchedulerKind;
+use crate::experiments::{fig6_qps_points, paper_cluster, sharegpt_workload,
+                         ExpContext, Scale};
+use crate::metrics::capacity::{search_capacity, DEFAULT_SLO_TTFT_P99};
+use crate::metrics::render_table;
+use crate::util::json::{Json, JsonObj};
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let qps_points = fig6_qps_points(ctx.scale);
+    let schedulers = SchedulerKind::ALL;
+
+    let mut out = JsonObj::new();
+    let mut rows = Vec::new();
+    for &qps in &qps_points {
+        let n = ctx.scale.requests_for(qps);
+        for kind in schedulers {
+            let res = run_experiment(
+                paper_cluster(kind),
+                &sharegpt_workload(qps, n, ctx.seed),
+                SimOptions { probes: false, sample_prob: 0.0 },
+            )?;
+            let s = res.metrics.summary();
+            rows.push(vec![
+                format!("{qps:.0}"),
+                kind.name().to_string(),
+                format!("{:.3}", s.mean_ttft),
+                format!("{:.3}", s.p99_ttft),
+                format!("{:.2}", s.mean_e2e),
+                format!("{:.2}", s.p99_e2e),
+                format!("{:.1}", s.mean_overhead * 1e3),
+                format!("{:.2}", s.throughput),
+            ]);
+            let mut j = s.to_json();
+            if let Json::Obj(o) = &mut j {
+                o.insert("qps", qps);
+                o.insert("scheduler", kind.name());
+                // Figure 9: CDFs at this point.
+                o.insert("cdf_ttft",
+                         Json::Arr(res.metrics.cdf_ttft(40).iter()
+                             .map(|&(v, p)| Json::Arr(vec![v.into(), p.into()]))
+                             .collect()));
+                o.insert("cdf_e2e",
+                         Json::Arr(res.metrics.cdf_e2e(40).iter()
+                             .map(|&(v, p)| Json::Arr(vec![v.into(), p.into()]))
+                             .collect()));
+            }
+            out.insert(format!("{}@{qps}", kind.name()), j);
+        }
+    }
+    println!("Figure 6 — request metrics under different QPS \
+              ({}s of load per point)", ctx.scale.duration());
+    println!("{}", render_table(
+        &["qps", "scheduler", "mean TTFT", "p99 TTFT", "mean e2e",
+          "p99 e2e", "overhead(ms)", "thpt"],
+        &rows));
+
+    // Capacity: max QPS under TTFT P99 < 3 s.
+    let (lo, hi, precision) = match ctx.scale {
+        Scale::Quick => (30.0, 110.0, 1.0),
+        Scale::Full => (30.0, 110.0, 0.1),
+    };
+    let mut cap_rows = Vec::new();
+    let mut caps = JsonObj::new();
+    for kind in [SchedulerKind::LlumnixMinus, SchedulerKind::Block,
+                 SchedulerKind::BlockStar] {
+        let result = search_capacity(
+            |qps| {
+                let cap_n = ctx.scale.requests_for(qps);
+                run_experiment(paper_cluster(kind),
+                               &sharegpt_workload(qps, cap_n, ctx.seed),
+                               SimOptions { probes: false, sample_prob: 0.0 })
+                    .map(|r| r.metrics.summary().p99_ttft)
+                    .unwrap_or(f64::INFINITY)
+            },
+            DEFAULT_SLO_TTFT_P99,
+            lo,
+            hi,
+            precision,
+        );
+        cap_rows.push(vec![kind.name().to_string(),
+                           format!("{:.1}", result.capacity)]);
+        caps.insert(kind.name(), result.capacity);
+    }
+    println!("Capacity (max QPS under TTFT P99 < {DEFAULT_SLO_TTFT_P99} s):");
+    println!("{}", render_table(&["scheduler", "capacity (QPS)"], &cap_rows));
+    out.insert("capacity", caps);
+
+    ctx.write_json("fig6", &Json::Obj(out))
+}

@@ -1,0 +1,81 @@
+//! Figure 7 — GPU memory utilization: average and variance of free KV
+//! blocks across instances (probed before each dispatch) and cumulative
+//! preemption counts, under increasing QPS.
+//!
+//! Expected shape: Block keeps cross-instance variance lowest and
+//! preempts least; heuristics show high variance (imbalance) and
+//! preemption storms once QPS passes capacity.
+
+use anyhow::Result;
+
+use crate::cluster::{run_experiment, SimOptions};
+use crate::config::SchedulerKind;
+use crate::experiments::{fig6_qps_points, paper_cluster, sharegpt_workload,
+                         ExpContext};
+use crate::metrics::render_table;
+use crate::util::json::{Json, JsonObj};
+use crate::util::stats::{gaussian_smooth, mean, variance};
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let qps_points = fig6_qps_points(ctx.scale);
+    let schedulers = [SchedulerKind::Random, SchedulerKind::InfaasPp,
+                      SchedulerKind::LlumnixMinus, SchedulerKind::Block];
+
+    let mut out = JsonObj::new();
+    let mut rows = Vec::new();
+    for &qps in &qps_points {
+        let n = ctx.scale.requests_for(qps);
+        for kind in schedulers {
+            let mut cfg = paper_cluster(kind);
+            // Memory-pressure emulation: our synthetic ShareGPT responses
+            // are lighter than the authors' sample, so the full 1056-block
+            // A30 budget never binds before compute does.  Shrinking the
+            // KV pool reproduces the paper's §6.4 regime where preemption
+            // storms appear once QPS passes capacity (documented in
+            // EXPERIMENTS.md).
+            cfg.engine.num_blocks = Some(640);
+            let res = run_experiment(
+                cfg,
+                &sharegpt_workload(qps, n, ctx.seed),
+                SimOptions { probes: true, sample_prob: 0.0 },
+            )?;
+            // Per-probe free-block average and cross-instance variance.
+            let avg_series: Vec<f64> = res.probes.iter()
+                .map(|p| mean(&p.free_blocks.iter().map(|&b| b as f64)
+                              .collect::<Vec<_>>()))
+                .collect();
+            let var_series: Vec<f64> = res.probes.iter()
+                .map(|p| variance(&p.free_blocks.iter().map(|&b| b as f64)
+                                  .collect::<Vec<_>>()))
+                .collect();
+            let preempt_series: Vec<f64> = res.probes.iter()
+                .map(|p| p.cum_preemptions as f64)
+                .collect();
+            let total_preempts = preempt_series.last().copied().unwrap_or(0.0);
+            rows.push(vec![
+                format!("{qps:.0}"),
+                kind.name().to_string(),
+                format!("{:.0}", mean(&avg_series)),
+                format!("{:.0}", mean(&var_series)),
+                format!("{total_preempts:.0}"),
+            ]);
+            // Paper smooths the plotted series with a Gaussian filter.
+            let mut j = JsonObj::new();
+            let smooth = |v: &[f64]| {
+                Json::Arr(gaussian_smooth(v, 25.0).iter().step_by(10)
+                          .map(|&x| Json::Num(x)).collect())
+            };
+            j.insert("avg_free_blocks", smooth(&avg_series));
+            j.insert("var_free_blocks", smooth(&var_series));
+            j.insert("cum_preemptions", smooth(&preempt_series));
+            out.insert(format!("{}@{qps}", kind.name()), j);
+        }
+    }
+    println!("Figure 7 — memory balance + preemptions \
+              ({}s of load per point)", ctx.scale.duration());
+    println!("{}", render_table(
+        &["qps", "scheduler", "mean free blocks", "mean variance",
+          "total preemptions"],
+        &rows));
+    ctx.write_json("fig7", &Json::Obj(out))
+}

@@ -1,0 +1,112 @@
+//! Figure 8 — auto-provisioning: `preempt` (predicted-latency trigger)
+//! vs `relief` (actual-latency trigger) vs a sufficient static cluster.
+//!
+//! Paper setup: start with 6 instances at QPS 24 (overloaded), threshold
+//! 70 s, backup pool up to 10, static-10 baseline.  Expected shape:
+//! preempt provisions earlier and fewer instances, cutting P99 ~20% and
+//! >threshold requests ~81% vs relief.
+
+use anyhow::Result;
+
+use crate::cluster::{ClusterSim, SimOptions};
+use crate::config::SchedulerKind;
+use crate::experiments::{paper_cluster, sharegpt_workload, ExpContext};
+use crate::metrics::render_table;
+use crate::util::json::{Json, JsonObj};
+use crate::util::stats::{mean, percentile, variance};
+use crate::workload::generate;
+
+/// Load chosen to overload the 6-instance starting cluster by ~35% (the
+/// paper's QPS 24 against a 12-instance capacity of ~28 is the same
+/// relative overload; our simulated capacity is ~77 QPS at 12 instances —
+/// see EXPERIMENTS.md §Calibration).
+const OVERLOAD_QPS: f64 = 52.0;
+
+struct Variant {
+    name: &'static str,
+    predictive: bool,
+    enabled: bool,
+    initial: usize,
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let n = (OVERLOAD_QPS * ctx.scale.duration() * 3.0) as usize;
+    // The latency threshold scales with run length: the paper's 70 s
+    // trigger assumes a ~10-minute overload window; a quick run only
+    // accumulates ~40 s of backlog.
+    let threshold = match ctx.scale {
+        crate::experiments::Scale::Quick => 25.0,
+        crate::experiments::Scale::Full => 70.0,
+    };
+    let variants = [
+        Variant { name: "preempt", predictive: true, enabled: true, initial: 6 },
+        Variant { name: "relief", predictive: false, enabled: true, initial: 6 },
+        Variant { name: "static-10", predictive: false, enabled: false,
+                  initial: 10 },
+    ];
+
+    let mut out = JsonObj::new();
+    let mut rows = Vec::new();
+    for v in &variants {
+        let mut cfg = paper_cluster(SchedulerKind::Block);
+        cfg.n_instances = v.initial;
+        cfg.provision.enabled = v.enabled;
+        cfg.provision.predictive = v.predictive;
+        cfg.provision.threshold = threshold;
+        cfg.provision.initial_instances = v.initial;
+        cfg.provision.max_instances = 10;
+        let requests = generate(&sharegpt_workload(OVERLOAD_QPS, n, ctx.seed))?;
+        let res = ClusterSim::new(cfg, SimOptions { probes: true,
+                                                    sample_prob: 0.0 })
+            .run(&requests);
+        let e2e = res.metrics.e2es();
+        let over: usize = e2e.iter().filter(|&&x| x > threshold).count();
+        let final_size = res.size_timeline.last().unwrap().1;
+        let var_series: Vec<f64> = res.probes.iter()
+            .map(|p| variance(&p.free_blocks.iter().map(|&b| b as f64)
+                              .collect::<Vec<_>>()))
+            .collect();
+        rows.push(vec![
+            v.name.into(),
+            format!("{:.1}", mean(&e2e)),
+            format!("{:.1}", percentile(&e2e, 99.0)),
+            format!("{over}"),
+            format!("{final_size}"),
+            format!("{}", res.provision_events.len()),
+            format!("{:.0}", mean(&var_series)),
+        ]);
+        let mut j = JsonObj::new();
+        j.insert("mean_e2e", mean(&e2e));
+        j.insert("p99_e2e", percentile(&e2e, 99.0));
+        j.insert("over_threshold", over);
+        j.insert("final_size", final_size);
+        j.insert("provision_events",
+                 Json::Arr(res.provision_events.iter().map(|e| {
+                     let mut o = JsonObj::new();
+                     o.insert("time", e.time);
+                     o.insert("instance", e.instance);
+                     o.insert("trigger_latency", e.trigger_latency);
+                     Json::Obj(o)
+                 }).collect()));
+        j.insert("size_timeline",
+                 Json::Arr(res.size_timeline.iter()
+                           .map(|&(t, s)| Json::Arr(vec![t.into(), s.into()]))
+                           .collect()));
+        // Latency-over-time for the timeline plot.
+        let mut lat: Vec<(f64, f64)> = res.metrics.records.iter()
+            .map(|m| (m.finish, m.e2e())).collect();
+        lat.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        j.insert("latency_timeline",
+                 Json::Arr(lat.iter().step_by((lat.len() / 200).max(1))
+                           .map(|&(t, l)| Json::Arr(vec![t.into(), l.into()]))
+                           .collect()));
+        out.insert(v.name, j);
+    }
+    println!("Figure 8 — auto-provisioning at QPS {OVERLOAD_QPS} \
+              (6 initial instances, threshold {threshold}s, {n} reqs)");
+    println!("{}", render_table(
+        &["strategy", "mean e2e", "p99 e2e", ">thresh reqs", "final size",
+          "provisions", "mean blocks var"],
+        &rows));
+    ctx.write_json("fig8", &Json::Obj(out))
+}

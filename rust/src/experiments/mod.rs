@@ -1,0 +1,146 @@
+//! Experiment harness: one entry per paper table/figure (see DESIGN.md's
+//! per-experiment index).  Each experiment prints the paper's rows/series
+//! and writes machine-readable JSON under `results/`.
+//!
+//! QPS points and request counts are scaled by `Scale`: the paper's
+//! 12-A30 testbed sweeps QPS 20-36 over 10k requests; `Scale::Quick`
+//! shrinks counts for CI while preserving every qualitative shape.
+
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod tab1;
+pub mod tab2;
+
+use anyhow::Result;
+
+use crate::config::{ClusterConfig, SchedulerKind, WorkloadConfig, WorkloadKind};
+use crate::util::json::Json;
+
+/// Experiment size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    /// CI-sized: minutes of wall time, hundreds of requests per point.
+    Quick,
+    /// Paper-sized sweep (thousands of requests per point).
+    Full,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Option<Scale> {
+        match s {
+            "quick" => Some(Scale::Quick),
+            "full" => Some(Scale::Full),
+            _ => None,
+        }
+    }
+
+    pub fn requests(&self, full: usize) -> usize {
+        match self {
+            Scale::Quick => (full / 10).max(200),
+            Scale::Full => full,
+        }
+    }
+
+    /// Workload duration in virtual seconds.  Sizing runs by *duration*
+    /// (n = qps * duration) rather than request count keeps high-QPS
+    /// points long enough for queues to reach steady state — a fixed
+    /// count at high QPS would end before saturation shows.
+    pub fn duration(&self) -> f64 {
+        match self {
+            Scale::Quick => 45.0,
+            Scale::Full => 180.0,
+        }
+    }
+
+    /// Requests for a QPS point at this scale.
+    pub fn requests_for(&self, qps: f64) -> usize {
+        ((qps * self.duration()) as usize).max(200)
+    }
+}
+
+/// Common experiment context.
+#[derive(Debug, Clone)]
+pub struct ExpContext {
+    pub scale: Scale,
+    pub out_dir: String,
+    pub seed: u64,
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        ExpContext { scale: Scale::Quick, out_dir: "results".into(), seed: 7 }
+    }
+}
+
+impl ExpContext {
+    pub fn write_json(&self, name: &str, value: &Json) -> Result<()> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = format!("{}/{name}.json", self.out_dir);
+        std::fs::write(&path, value.to_string_pretty())?;
+        println!("[written {path}]");
+        Ok(())
+    }
+}
+
+/// Baseline 12-instance cluster of the paper's §6.1 setup.
+pub fn paper_cluster(scheduler: SchedulerKind) -> ClusterConfig {
+    ClusterConfig { scheduler, ..ClusterConfig::default() }
+}
+
+/// ShareGPT workload at a QPS point.
+pub fn sharegpt_workload(qps: f64, n: usize, seed: u64) -> WorkloadConfig {
+    WorkloadConfig { kind: WorkloadKind::ShareGpt, qps, n_requests: n, seed }
+}
+
+/// The QPS sweep of Figure 6 (paper: 20..36 on 12 instances).
+/// Our simulated A30 cluster saturates around ~60 QPS at 12 instances
+/// (see EXPERIMENTS.md §Calibration), so the sweep covers the same
+/// *relative* region: from ~60% of capacity to just past it.
+pub fn fig6_qps_points(scale: Scale) -> Vec<f64> {
+    match scale {
+        Scale::Quick => vec![52.0, 64.0, 72.0, 78.0],
+        Scale::Full => vec![48.0, 56.0, 62.0, 66.0, 70.0, 74.0, 78.0, 82.0],
+    }
+}
+
+/// Run a named experiment.
+pub fn run(name: &str, ctx: &ExpContext) -> Result<()> {
+    match name {
+        "tab1" => tab1::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "fig6" => fig6::run(ctx),
+        "fig7" => fig7::run(ctx),
+        "fig8" => fig8::run(ctx),
+        "tab2" => tab2::run(ctx),
+        "all" => {
+            for n in ["tab1", "fig5", "fig6", "fig7", "fig8", "tab2"] {
+                println!("\n=============== {n} ===============");
+                run(n, ctx)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (tab1|fig5|fig6|fig7|fig8|tab2|all)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_parses() {
+        assert_eq!(Scale::parse("quick"), Some(Scale::Quick));
+        assert_eq!(Scale::parse("full"), Some(Scale::Full));
+        assert_eq!(Scale::parse("x"), None);
+        assert_eq!(Scale::Quick.requests(10_000), 1000);
+        assert_eq!(Scale::Full.requests(10_000), 10_000);
+    }
+
+    #[test]
+    fn unknown_experiment_errors() {
+        assert!(run("nope", &ExpContext::default()).is_err());
+    }
+}

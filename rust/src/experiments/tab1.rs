@@ -1,0 +1,105 @@
+//! Table 1 — query length prediction quality.
+//!
+//! Paper row (RoBERTa regressor): avg error 78.755 tok, avg error rate
+//! 24.4%, Acc-50 69.93%, Acc-100 77.15% (10k eval conversations).
+//!
+//! We evaluate (a) the real learned MLP regressor through the PJRT
+//! artifact on the held-out split of the build-time corpus, and (b) the
+//! calibrated noisy oracle the scheduling experiments use.
+
+use anyhow::Result;
+
+use crate::experiments::ExpContext;
+use crate::metrics::render_table;
+use crate::runtime::{ModelRuntime, RegressorTagger};
+use crate::tagger::{LengthTagger, NoisyOracleTagger};
+use crate::util::json::{Json, JsonObj};
+use crate::workload::sharegpt::load_corpus;
+
+struct Eval {
+    avg_error: f64,
+    avg_error_rate: f64,
+    acc50: f64,
+    acc100: f64,
+}
+
+fn evaluate(pairs: &[(f64, f64)]) -> Eval {
+    let n = pairs.len() as f64;
+    let errs: Vec<f64> = pairs.iter().map(|(p, t)| (p - t).abs()).collect();
+    Eval {
+        avg_error: errs.iter().sum::<f64>() / n,
+        avg_error_rate: pairs
+            .iter()
+            .map(|(p, t)| ((p - t) / t.max(1.0)).abs())
+            .sum::<f64>()
+            / n,
+        acc50: errs.iter().filter(|&&e| e < 50.0).count() as f64 / n,
+        acc100: errs.iter().filter(|&&e| e < 100.0).count() as f64 / n,
+    }
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let corpus = load_corpus("artifacts/sharegpt_synth.jsonl")?;
+    // Same split convention as python/compile/aot.py: last 20% is eval.
+    let split = corpus.len() * 4 / 5;
+    let eval_set = &corpus[split..];
+    let eval_set = match ctx.scale {
+        crate::experiments::Scale::Quick => &eval_set[..eval_set.len().min(2000)],
+        crate::experiments::Scale::Full => eval_set,
+    };
+
+    // (a) PJRT MLP regressor (the RoBERTa stand-in, served by Rust).
+    let rt = ModelRuntime::load("artifacts")?;
+    let tagger = RegressorTagger::new(&rt);
+    let prompts: Vec<&str> = eval_set.iter().map(|r| r.prompt.as_str()).collect();
+    let preds = tagger.tag_batch(&prompts)?;
+    let mlp_pairs: Vec<(f64, f64)> = preds
+        .iter()
+        .zip(eval_set)
+        .map(|(&p, r)| (p as f64, r.response_tokens as f64))
+        .collect();
+    let mlp = evaluate(&mlp_pairs);
+
+    // (b) Calibrated noisy oracle (used by the Block* scheduling runs).
+    let mut noisy = NoisyOracleTagger::new(0.244, ctx.seed);
+    let noisy_pairs: Vec<(f64, f64)> = eval_set
+        .iter()
+        .enumerate()
+        .map(|(i, r)| {
+            let req = crate::core::request::Request::new(
+                i as u64, 0.0, r.prompt_tokens, r.response_tokens);
+            (noisy.tag(&req) as f64, r.response_tokens as f64)
+        })
+        .collect();
+    let noisy_eval = evaluate(&noisy_pairs);
+
+    let rows = vec![
+        vec!["avg error (tok)".into(), format!("{:.1}", mlp.avg_error),
+             format!("{:.1}", noisy_eval.avg_error), "78.8".into()],
+        vec!["avg error rate".into(),
+             format!("{:.1}%", mlp.avg_error_rate * 100.0),
+             format!("{:.1}%", noisy_eval.avg_error_rate * 100.0),
+             "24.4%".into()],
+        vec!["Acc-50".into(), format!("{:.1}%", mlp.acc50 * 100.0),
+             format!("{:.1}%", noisy_eval.acc50 * 100.0), "69.9%".into()],
+        vec!["Acc-100".into(), format!("{:.1}%", mlp.acc100 * 100.0),
+             format!("{:.1}%", noisy_eval.acc100 * 100.0), "77.2%".into()],
+    ];
+    println!("Table 1 — length prediction quality ({} eval samples)",
+             eval_set.len());
+    println!("{}", render_table(
+        &["metric", "MLP regressor (PJRT)", "noisy oracle", "paper RoBERTa"],
+        &rows));
+
+    let mut o = JsonObj::new();
+    for (name, e) in [("mlp", &mlp), ("noisy_oracle", &noisy_eval)] {
+        let mut inner = JsonObj::new();
+        inner.insert("avg_error", e.avg_error);
+        inner.insert("avg_error_rate", e.avg_error_rate);
+        inner.insert("acc50", e.acc50);
+        inner.insert("acc100", e.acc100);
+        o.insert(name, inner);
+    }
+    o.insert("n_eval", eval_set.len());
+    ctx.write_json("tab1", &Json::Obj(o))
+}

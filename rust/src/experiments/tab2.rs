@@ -1,0 +1,151 @@
+//! Table 2 (+ Appendix B sweeps) — generality study: capacity of
+//! Block / Block* / Llumnix- under setting variants.
+//!
+//! Paper variants: batch size 24, chunk size 2048, Qwen2-7B, BurstGPT.
+//! Expected shape: sub-optimal engine settings *widen* Block's capacity
+//! gain; shorter-response workloads (Qwen/BurstGPT) raise absolute
+//! capacity and keep Block ahead; Block* cannot run on BurstGPT (length
+//! traces carry no prompt text to estimate from).
+
+use anyhow::Result;
+
+use crate::cluster::{run_experiment, SimOptions};
+use crate::config::{ClusterConfig, SchedulerKind, WorkloadConfig, WorkloadKind};
+use crate::core::hw;
+use crate::experiments::{paper_cluster, ExpContext, Scale};
+use crate::metrics::capacity::{search_capacity, DEFAULT_SLO_TTFT_P99};
+use crate::metrics::render_table;
+use crate::util::json::{Json, JsonObj};
+
+struct Variant {
+    name: &'static str,
+    make_cfg: fn(SchedulerKind) -> ClusterConfig,
+    workload: WorkloadKind,
+    /// Response-length scale (Qwen generates shorter responses on the
+    /// same prompts — §6.6).
+    response_scale: f64,
+    /// Search bracket.
+    hi: f64,
+    block_star: bool,
+}
+
+fn base(k: SchedulerKind) -> ClusterConfig {
+    paper_cluster(k)
+}
+
+fn bs24(k: SchedulerKind) -> ClusterConfig {
+    let mut c = paper_cluster(k);
+    c.engine.max_batch_size = 24;
+    c
+}
+
+fn cs2048(k: SchedulerKind) -> ClusterConfig {
+    let mut c = paper_cluster(k);
+    c.engine.chunk_size = 2048;
+    c
+}
+
+fn qwen(k: SchedulerKind) -> ClusterConfig {
+    let mut c = paper_cluster(k);
+    c.model = hw::QWEN2_7B;
+    c
+}
+
+const VARIANTS: &[Variant] = &[
+    Variant { name: "default", make_cfg: base, workload: WorkloadKind::ShareGpt,
+              response_scale: 1.0, hi: 90.0, block_star: true },
+    Variant { name: "bs=24", make_cfg: bs24, workload: WorkloadKind::ShareGpt,
+              response_scale: 1.0, hi: 90.0, block_star: true },
+    Variant { name: "cs=2048", make_cfg: cs2048, workload: WorkloadKind::ShareGpt,
+              response_scale: 1.0, hi: 90.0, block_star: true },
+    Variant { name: "qwen", make_cfg: qwen, workload: WorkloadKind::ShareGpt,
+              response_scale: 0.5, hi: 190.0, block_star: true },
+    Variant { name: "burstgpt", make_cfg: base, workload: WorkloadKind::BurstGpt,
+              response_scale: 1.0, hi: 190.0, block_star: false },
+];
+
+fn measure(cfg: ClusterConfig, wl: &WorkloadConfig, scale: f64) -> f64 {
+    let mut requests = match crate::workload::generate(wl) {
+        Ok(r) => r,
+        Err(_) => return f64::INFINITY,
+    };
+    if scale != 1.0 {
+        for r in &mut requests {
+            r.response_tokens = ((r.response_tokens as f64 * scale).round()
+                                 as u32).max(4);
+        }
+    }
+    if cfg.scheduler.uses_estimates() {
+        let mut tagger = crate::tagger::NoisyOracleTagger::new(0.244, wl.seed);
+        crate::tagger::tag_requests(&mut tagger, &mut requests);
+    }
+    crate::cluster::ClusterSim::new(
+        cfg, SimOptions { probes: false, sample_prob: 0.0 })
+        .run(&requests)
+        .metrics
+        .summary()
+        .p99_ttft
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let precision = match ctx.scale {
+        Scale::Quick => 2.0,
+        Scale::Full => 0.1,
+    };
+    let mut rows = Vec::new();
+    let mut out = JsonObj::new();
+    println!("Table 2 — scheduler capacities with setting variants \
+              ({}s of load per eval, TTFT P99 < {DEFAULT_SLO_TTFT_P99}s SLO)",
+             ctx.scale.duration());
+    for v in VARIANTS {
+        let mut caps = Vec::new();
+        let mut j = JsonObj::new();
+        for kind in [SchedulerKind::Block, SchedulerKind::BlockStar,
+                     SchedulerKind::LlumnixMinus] {
+            if kind == SchedulerKind::BlockStar && !v.block_star {
+                caps.push(None);
+                continue;
+            }
+            let r = search_capacity(
+                |qps| {
+                    let wl = WorkloadConfig {
+                        kind: v.workload.clone(),
+                        qps,
+                        n_requests: ctx.scale.requests_for(qps),
+                        seed: ctx.seed,
+                    };
+                    measure((v.make_cfg)(kind), &wl, v.response_scale)
+                },
+                DEFAULT_SLO_TTFT_P99, 10.0, v.hi, precision);
+            j.insert(kind.name(), r.capacity);
+            caps.push(Some(r.capacity));
+        }
+        let block = caps[0].unwrap_or(0.0);
+        let star = caps[1];
+        let llumnix = caps[2].unwrap_or(0.0);
+        let gain = if llumnix > 0.0 {
+            (block - llumnix) / llumnix * 100.0
+        } else {
+            f64::NAN
+        };
+        let gain_star = star.map(|s| (s - llumnix) / llumnix.max(1e-9) * 100.0);
+        rows.push(vec![
+            v.name.into(),
+            format!("{block:.1}"),
+            star.map_or("/".into(), |s| format!("{s:.1}")),
+            format!("{llumnix:.1}"),
+            match gain_star {
+                Some(g) => format!("{gain:.1}%/{g:.1}%"),
+                None => format!("{gain:.1}%"),
+            },
+        ]);
+        j.insert("gain_block_pct", gain);
+        if let Some(g) = gain_star {
+            j.insert("gain_blockstar_pct", g);
+        }
+        out.insert(v.name, j);
+    }
+    println!("{}", render_table(
+        &["variant", "Block", "Block*", "Llumnix-", "gain"], &rows));
+    ctx.write_json("tab2", &Json::Obj(out))
+}

@@ -1,0 +1,36 @@
+//! # Block — predictive load balancing for LLM serving
+//!
+//! Reproduction of *"Block: Balancing Load in LLM Serving with Context,
+//! Knowledge and Predictive Scheduling"* (Da & Kalyvianaki, CS.DC 2025) as
+//! a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a distributed,
+//!   stateless, *predictive* global scheduler for multi-instance LLM
+//!   serving, plus every substrate it needs (vLLM-like engines with paged
+//!   KV + continuous batching + chunked prefill, a Vidur-style per-instance
+//!   predictor, length taggers, auto-provisioning, a discrete-event cluster
+//!   runtime, baseline schedulers, and the full evaluation harness).
+//! * **L2/L1 (python/, build-time only)** — a LLaMA-style transformer with
+//!   Pallas attention kernels, AOT-lowered to HLO text and served from Rust
+//!   through PJRT (`runtime`); plus the response-length regressor the
+//!   tagger serves.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index,
+//! and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod cluster;
+pub mod config;
+pub mod core;
+pub mod engine;
+pub mod exec;
+pub mod experiments;
+pub mod metrics;
+pub mod predictor;
+pub mod provision;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod tagger;
+pub mod testutil;
+pub mod util;
+pub mod workload;

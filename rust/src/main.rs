@@ -1,0 +1,184 @@
+//! `block` — CLI for the Block predictive LLM-serving scheduler.
+//!
+//! Subcommands:
+//!
+//! * `block experiment <tab1|fig5|fig6|fig7|fig8|tab2|all> [--scale quick|full]
+//!    [--out DIR] [--seed N]` — regenerate a paper table/figure.
+//! * `block simulate [--scheduler S] [--qps Q] [--requests N]
+//!    [--instances K] [--workload sharegpt|burstgpt] [--config FILE]` —
+//!    one cluster simulation, summary to stdout.
+//! * `block serve [--addr HOST:PORT] [--artifacts DIR]` — HTTP serving of
+//!    the real PJRT model (endpoints: /generate /predict /status /health).
+//! * `block tag --prompt "..."` — run the length tagger on one prompt.
+//! * `block workload --out FILE [--qps Q] [--requests N]` — emit a trace.
+
+use anyhow::{bail, Context, Result};
+
+use block::cluster::{run_experiment, SimOptions};
+use block::config::{ClusterConfig, SchedulerKind, WorkloadConfig, WorkloadKind};
+use block::experiments::{self, ExpContext, Scale};
+use block::metrics::render_table;
+
+/// Minimal flag parser: `--key value` pairs after positional args.
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, String)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .with_context(|| format!("--{key} needs a value"))?;
+                flags.push((key.to_string(), val.clone()));
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn flag(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn flag_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid value for --{key}: {v}")),
+        }
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: block <command>\n\
+         \n\
+         commands:\n\
+         \x20 experiment <tab1|fig5|fig6|fig7|fig8|tab2|all> [--scale quick|full] [--out DIR] [--seed N]\n\
+         \x20 simulate [--scheduler S] [--qps Q] [--requests N] [--instances K]\n\
+         \x20          [--workload sharegpt|burstgpt] [--config FILE] [--seed N]\n\
+         \x20 serve    [--addr HOST:PORT] [--artifacts DIR] [--max-requests N]\n\
+         \x20 tag      --prompt TEXT [--artifacts DIR]\n\
+         \x20 workload --out FILE [--qps Q] [--requests N] [--seed N]"
+    );
+    std::process::exit(2);
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let name = args.positional.first().map(String::as_str).unwrap_or("all");
+    let scale = match args.flag("scale") {
+        None => Scale::Quick,
+        Some(s) => Scale::parse(s)
+            .with_context(|| format!("bad --scale '{s}'"))?,
+    };
+    let ctx = ExpContext {
+        scale,
+        out_dir: args.flag("out").unwrap_or("results").to_string(),
+        seed: args.flag_parse("seed", 7u64)?,
+    };
+    experiments::run(name, &ctx)
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let mut cfg = match args.flag("config") {
+        Some(path) => ClusterConfig::load(path)?,
+        None => ClusterConfig::default(),
+    };
+    if let Some(s) = args.flag("scheduler") {
+        cfg.scheduler = SchedulerKind::parse(s)?;
+    }
+    cfg.n_instances = args.flag_parse("instances", cfg.n_instances)?;
+    let workload = WorkloadConfig {
+        kind: match args.flag("workload").unwrap_or("sharegpt") {
+            "sharegpt" => WorkloadKind::ShareGpt,
+            "burstgpt" => WorkloadKind::BurstGpt,
+            other => bail!("unknown workload '{other}'"),
+        },
+        qps: args.flag_parse("qps", 48.0)?,
+        n_requests: args.flag_parse("requests", 2000usize)?,
+        seed: args.flag_parse("seed", 7u64)?,
+    };
+    let res = run_experiment(cfg.clone(), &workload,
+                             SimOptions { probes: false, sample_prob: 0.0 })?;
+    let s = res.metrics.summary();
+    println!("scheduler={} instances={} qps={} requests={} (wall {:?})",
+             cfg.scheduler.name(), cfg.n_instances, workload.qps, s.n,
+             res.wall_time);
+    let rows = vec![
+        vec!["mean TTFT (s)".into(), format!("{:.3}", s.mean_ttft)],
+        vec!["p99 TTFT (s)".into(), format!("{:.3}", s.p99_ttft)],
+        vec!["mean e2e (s)".into(), format!("{:.3}", s.mean_e2e)],
+        vec!["p99 e2e (s)".into(), format!("{:.3}", s.p99_e2e)],
+        vec!["sched overhead (ms)".into(), format!("{:.2}", s.mean_overhead * 1e3)],
+        vec!["throughput (req/s)".into(), format!("{:.2}", s.throughput)],
+        vec!["preemptions".into(), format!("{}", s.total_preemptions)],
+    ];
+    println!("{}", render_table(&["metric", "value"], &rows));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = args.flag("artifacts").unwrap_or("artifacts");
+    let addr = args.flag("addr").unwrap_or("127.0.0.1:8471");
+    let max = args.flag("max-requests").map(|v| v.parse()).transpose()?;
+    let runtime = block::runtime::ModelRuntime::load(artifacts)?;
+    println!("model: {} params, context {}",
+             runtime.dims().param_count, runtime.dims().max_context);
+    let state = block::server::ServerState::new(runtime);
+    block::server::serve(state, addr, max)
+}
+
+fn cmd_tag(args: &Args) -> Result<()> {
+    let prompt = args.flag("prompt").context("--prompt required")?;
+    let artifacts = args.flag("artifacts").unwrap_or("artifacts");
+    let runtime = block::runtime::ModelRuntime::load(artifacts)?;
+    let tagger = block::runtime::RegressorTagger::new(&runtime);
+    let pred = tagger.tag_batch(&[prompt])?[0];
+    println!("predicted response length: {pred} tokens");
+    Ok(())
+}
+
+fn cmd_workload(args: &Args) -> Result<()> {
+    let out = args.flag("out").context("--out required")?;
+    let workload = WorkloadConfig {
+        kind: WorkloadKind::ShareGpt,
+        qps: args.flag_parse("qps", 48.0)?,
+        n_requests: args.flag_parse("requests", 10_000usize)?,
+        seed: args.flag_parse("seed", 7u64)?,
+    };
+    let requests = block::workload::generate(&workload)?;
+    block::workload::trace::save_trace(out, &requests)?;
+    println!("wrote {} requests to {out}", requests.len());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        usage();
+    }
+    let args = Args::parse(&argv[1..])?;
+    match argv[0].as_str() {
+        "experiment" => cmd_experiment(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "tag" => cmd_tag(&args),
+        "workload" => cmd_workload(&args),
+        _ => usage(),
+    }
+}

@@ -1,0 +1,95 @@
+//! SLO capacity search (§6.1/§6.6): "capacity is defined as the maximum
+//! QPS meeting a predefined SLO ... TTFT P99 < 3 seconds", with the
+//! paper's coarse-integer-then-granular refinement.
+
+/// The paper's SLO: TTFT P99 under 3 seconds.
+pub const DEFAULT_SLO_TTFT_P99: f64 = 3.0;
+
+/// Result of a capacity search.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityResult {
+    /// Highest QPS (to `precision`) that met the SLO.
+    pub capacity: f64,
+    /// (qps, metric, met) points evaluated on the way.
+    pub evaluations: Vec<(f64, f64, bool)>,
+}
+
+/// Find the maximum QPS whose measured SLO metric stays under `slo`.
+///
+/// `measure(qps)` runs a workload at that rate and returns the SLO metric
+/// (e.g. TTFT P99).  Search: doubling scan for an upper bracket from
+/// `lo`, then bisection down to `precision` QPS (the paper's
+/// "granular search around integer QPS ... single-float precision").
+pub fn search_capacity(
+    mut measure: impl FnMut(f64) -> f64,
+    slo: f64,
+    lo: f64,
+    hi: f64,
+    precision: f64,
+) -> CapacityResult {
+    assert!(lo > 0.0 && hi > lo && precision > 0.0);
+    let mut evals = Vec::new();
+    let mut run = |qps: f64, evals: &mut Vec<(f64, f64, bool)>| {
+        let m = measure(qps);
+        let ok = m < slo;
+        evals.push((qps, m, ok));
+        ok
+    };
+
+    // Bracket: find failing upper bound.
+    let mut good = if run(lo, &mut evals) { lo } else { 0.0 };
+    if good == 0.0 {
+        return CapacityResult { capacity: 0.0, evaluations: evals };
+    }
+    let mut bad = hi;
+    if run(hi, &mut evals) {
+        // SLO met even at hi: report hi as a lower bound on capacity.
+        return CapacityResult { capacity: hi, evaluations: evals };
+    }
+
+    // Bisect.
+    while bad - good > precision {
+        let mid = 0.5 * (good + bad);
+        if run(mid, &mut evals) {
+            good = mid;
+        } else {
+            bad = mid;
+        }
+    }
+    CapacityResult { capacity: good, evaluations: evals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_threshold_of_monotone_metric() {
+        // Metric crosses the SLO (3.0) exactly at qps = 27.5.
+        let metric = |qps: f64| if qps <= 27.5 { 1.0 } else { 10.0 };
+        let r = search_capacity(metric, 3.0, 5.0, 60.0, 0.1);
+        assert!((r.capacity - 27.5).abs() < 0.1, "capacity {}", r.capacity);
+        assert!(r.evaluations.len() > 4);
+    }
+
+    #[test]
+    fn zero_when_even_lo_fails() {
+        let r = search_capacity(|_| 100.0, 3.0, 5.0, 60.0, 0.5);
+        assert_eq!(r.capacity, 0.0);
+    }
+
+    #[test]
+    fn hi_when_never_fails() {
+        let r = search_capacity(|_| 0.1, 3.0, 5.0, 60.0, 0.5);
+        assert_eq!(r.capacity, 60.0);
+    }
+
+    #[test]
+    fn precision_controls_evaluations() {
+        let metric = |qps: f64| if qps <= 30.0 { 1.0 } else { 10.0 };
+        let coarse = search_capacity(metric, 3.0, 5.0, 60.0, 1.0);
+        let fine = search_capacity(metric, 3.0, 5.0, 60.0, 0.05);
+        assert!(fine.evaluations.len() > coarse.evaluations.len());
+        assert!((fine.capacity - 30.0).abs() <= 0.05);
+    }
+}

@@ -1,0 +1,240 @@
+//! Metric collection and reporting: the reductions behind every figure.
+
+pub mod capacity;
+
+use crate::core::request::RequestMetrics;
+use crate::util::json::{Json, JsonObj};
+use crate::util::stats;
+
+/// Collects per-request records and produces the paper's aggregates.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsCollector {
+    pub records: Vec<RequestMetrics>,
+}
+
+/// Aggregates reported in Figure 6 (one row per scheduler x QPS point).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSummary {
+    pub n: usize,
+    pub mean_e2e: f64,
+    pub p50_e2e: f64,
+    pub p99_e2e: f64,
+    pub mean_ttft: f64,
+    pub p50_ttft: f64,
+    pub p99_ttft: f64,
+    pub mean_overhead: f64,
+    pub p99_overhead: f64,
+    /// Requests per second over the span from first arrival to last finish.
+    pub throughput: f64,
+    pub total_preemptions: u64,
+    /// Mean prediction error rate |pred - actual| / actual over requests
+    /// that carried a prediction (Figure 5 top row).
+    pub pred_error_rate: Option<f64>,
+}
+
+impl MetricsCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, m: RequestMetrics) {
+        self.records.push(m);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn e2es(&self) -> Vec<f64> {
+        self.records.iter().map(|m| m.e2e()).collect()
+    }
+
+    pub fn ttfts(&self) -> Vec<f64> {
+        self.records.iter().map(|m| m.ttft()).collect()
+    }
+
+    pub fn overheads(&self) -> Vec<f64> {
+        self.records.iter().map(|m| m.sched_overhead).collect()
+    }
+
+    pub fn summary(&self) -> RunSummary {
+        let e2e = self.e2es();
+        let ttft = self.ttfts();
+        let ov = self.overheads();
+        let span = self
+            .records
+            .iter()
+            .map(|m| m.finish)
+            .fold(0.0f64, f64::max)
+            - self.records.iter().map(|m| m.arrival).fold(f64::INFINITY, f64::min);
+        let preds: Vec<f64> = self
+            .records
+            .iter()
+            .filter_map(|m| {
+                m.predicted_latency
+                    .map(|p| ((p - m.e2e()) / m.e2e().max(1e-9)).abs())
+            })
+            .collect();
+        RunSummary {
+            n: self.records.len(),
+            mean_e2e: stats::mean(&e2e),
+            p50_e2e: stats::percentile(&e2e, 50.0),
+            p99_e2e: stats::percentile(&e2e, 99.0),
+            mean_ttft: stats::mean(&ttft),
+            p50_ttft: stats::percentile(&ttft, 50.0),
+            p99_ttft: stats::percentile(&ttft, 99.0),
+            mean_overhead: stats::mean(&ov),
+            p99_overhead: stats::percentile(&ov, 99.0),
+            throughput: if span > 0.0 {
+                self.records.len() as f64 / span
+            } else {
+                f64::NAN
+            },
+            total_preemptions: self
+                .records
+                .iter()
+                .map(|m| m.preemptions as u64)
+                .sum(),
+            pred_error_rate: if preds.is_empty() {
+                None
+            } else {
+                Some(stats::mean(&preds))
+            },
+        }
+    }
+
+    /// CDF series for the appendix figures.
+    pub fn cdf_e2e(&self, points: usize) -> Vec<(f64, f64)> {
+        stats::cdf(&self.e2es(), points)
+    }
+
+    pub fn cdf_ttft(&self, points: usize) -> Vec<(f64, f64)> {
+        stats::cdf(&self.ttfts(), points)
+    }
+}
+
+impl RunSummary {
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("n", self.n);
+        o.insert("mean_e2e", self.mean_e2e);
+        o.insert("p50_e2e", self.p50_e2e);
+        o.insert("p99_e2e", self.p99_e2e);
+        o.insert("mean_ttft", self.mean_ttft);
+        o.insert("p50_ttft", self.p50_ttft);
+        o.insert("p99_ttft", self.p99_ttft);
+        o.insert("mean_overhead", self.mean_overhead);
+        o.insert("p99_overhead", self.p99_overhead);
+        o.insert("throughput", self.throughput);
+        o.insert("total_preemptions", self.total_preemptions);
+        if let Some(e) = self.pred_error_rate {
+            o.insert("pred_error_rate", e);
+        }
+        Json::Obj(o)
+    }
+}
+
+/// Render aligned text tables for terminal reports.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, arrival: f64, first: f64, finish: f64,
+           pred: Option<f64>) -> RequestMetrics {
+        RequestMetrics {
+            id,
+            instance: 0,
+            prompt_tokens: 10,
+            response_tokens: 20,
+            arrival,
+            dispatched: arrival + 0.01,
+            prefill_start: arrival + 0.02,
+            first_token: first,
+            finish,
+            preemptions: 1,
+            predicted_latency: pred,
+            sched_overhead: 0.01,
+        }
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let mut c = MetricsCollector::new();
+        c.push(rec(1, 0.0, 1.0, 2.0, Some(2.0)));
+        c.push(rec(2, 1.0, 3.0, 5.0, Some(3.0)));
+        let s = c.summary();
+        assert_eq!(s.n, 2);
+        assert!((s.mean_e2e - 3.0).abs() < 1e-12); // (2 + 4) / 2
+        assert!((s.mean_ttft - 1.5).abs() < 1e-12); // (1 + 2) / 2
+        assert!((s.throughput - 2.0 / 5.0).abs() < 1e-12);
+        assert_eq!(s.total_preemptions, 2);
+        // errors: |2-2|/2 = 0 and |3-4|/4 = 0.25 -> mean 0.125
+        assert!((s.pred_error_rate.unwrap() - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_without_predictions() {
+        let mut c = MetricsCollector::new();
+        c.push(rec(1, 0.0, 1.0, 2.0, None));
+        assert!(c.summary().pred_error_rate.is_none());
+    }
+
+    #[test]
+    fn cdf_lengths() {
+        let mut c = MetricsCollector::new();
+        for i in 0..100 {
+            c.push(rec(i, 0.0, 1.0 + i as f64 * 0.1, 2.0 + i as f64 * 0.1, None));
+        }
+        assert_eq!(c.cdf_e2e(20).len(), 20);
+        assert_eq!(c.cdf_ttft(20).len(), 20);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            &["scheduler", "p99"],
+            &[vec!["block".into(), "1.5".into()],
+              vec!["round-robin".into(), "10.25".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("scheduler"));
+        assert!(lines[3].contains("10.25"));
+    }
+}

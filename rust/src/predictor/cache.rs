@@ -1,0 +1,128 @@
+//! Batch-latency memoization (§5): "a caching mechanism ... memoizes
+//! latency predictions for previously seen batch configurations ...
+//! substantially reducing the computational cost of the simulation."
+//!
+//! Keyed on the quantized feature tuple of the plan (a stricter key than
+//! the paper's (batch size, token count) — strictly fewer false hits).
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+use crate::core::batch::BatchPlan;
+use crate::exec::BatchCost;
+
+type Key = (u32, u64, u32, u64);
+
+#[derive(Default)]
+pub struct LatencyCache {
+    map: RefCell<HashMap<Key, f64>>,
+    hits: Cell<u64>,
+    misses: Cell<u64>,
+}
+
+impl LatencyCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.borrow().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.borrow().is_empty()
+    }
+
+    pub fn clear(&self) {
+        self.map.borrow_mut().clear();
+    }
+
+    /// Wrap a cost model so lookups go through this cache.
+    pub fn wrap<'a>(&'a self, inner: &'a dyn BatchCost) -> CachedCost<'a> {
+        CachedCost { cache: self, inner }
+    }
+}
+
+pub struct CachedCost<'a> {
+    cache: &'a LatencyCache,
+    inner: &'a dyn BatchCost,
+}
+
+impl BatchCost for CachedCost<'_> {
+    fn batch_time(&self, plan: &BatchPlan) -> f64 {
+        let key = plan.cache_key();
+        if let Some(&t) = self.cache.map.borrow().get(&key) {
+            self.cache.hits.set(self.cache.hits.get() + 1);
+            return t;
+        }
+        let t = self.inner.batch_time(plan);
+        self.cache.map.borrow_mut().insert(key, t);
+        self.cache.misses.set(self.cache.misses.get() + 1);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::batch::{DecodeSeq, PrefillChunk};
+
+    struct CountingCost(Cell<u64>);
+
+    impl BatchCost for CountingCost {
+        fn batch_time(&self, plan: &BatchPlan) -> f64 {
+            self.0.set(self.0.get() + 1);
+            plan.total_tokens() as f64 * 1e-3
+        }
+    }
+
+    fn plan(tokens: u32) -> BatchPlan {
+        BatchPlan {
+            prefill: vec![PrefillChunk { request: 0, offset: 0, tokens }],
+            decode: vec![DecodeSeq { request: 1, context: 100 }],
+        }
+    }
+
+    #[test]
+    fn second_lookup_hits() {
+        let counting = CountingCost(Cell::new(0));
+        let cache = LatencyCache::new();
+        let c = cache.wrap(&counting);
+        let a = c.batch_time(&plan(100));
+        let b = c.batch_time(&plan(100));
+        assert_eq!(a, b);
+        assert_eq!(counting.0.get(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+    }
+
+    #[test]
+    fn different_plans_miss() {
+        let counting = CountingCost(Cell::new(0));
+        let cache = LatencyCache::new();
+        let c = cache.wrap(&counting);
+        c.batch_time(&plan(100));
+        c.batch_time(&plan(200));
+        assert_eq!(counting.0.get(), 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let counting = CountingCost(Cell::new(0));
+        let cache = LatencyCache::new();
+        cache.wrap(&counting).batch_time(&plan(100));
+        cache.clear();
+        assert!(cache.is_empty());
+        cache.wrap(&counting).batch_time(&plan(100));
+        assert_eq!(counting.0.get(), 2);
+    }
+}

@@ -1,0 +1,221 @@
+//! Auto-provisioning (§6.5): grow the cluster when latency crosses a
+//! threshold.
+//!
+//! Two strategies from the paper:
+//!
+//! * **preempt** — trigger on *predicted* latency at dispatch time.  The
+//!   Predictor sees the backlog forming before any request actually
+//!   suffers, so instances come up earlier and fewer are needed.
+//! * **relief** — trigger on *actual* (observed) latency of completed
+//!   requests.  By the time a 70-second latency is observed, the backlog
+//!   is deep; newly added hosts cannot relieve queued requests (cold-start
+//!   asymmetry, §3), so provisioning cascades and over-shoots.
+//!
+//! The provisioner owns the active-instance set; a provisioned instance
+//! becomes schedulable after `cold_start` seconds (model load).
+
+use crate::config::ProvisionConfig;
+
+/// A provisioning event (for the Figure-8 timeline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProvisionEvent {
+    pub time: f64,
+    /// Instance index activated (ready at `time + cold_start`).
+    pub instance: usize,
+    /// The latency observation that triggered it.
+    pub trigger_latency: f64,
+}
+
+#[derive(Debug)]
+pub struct AutoProvisioner {
+    cfg: ProvisionConfig,
+    /// Per-instance active flag (ready to serve).
+    active: Vec<bool>,
+    /// Instances booting: (ready_time, index).
+    pending: Vec<(f64, usize)>,
+    last_trigger: f64,
+    pub events: Vec<ProvisionEvent>,
+}
+
+impl AutoProvisioner {
+    pub fn new(cfg: ProvisionConfig, total_instances: usize) -> Self {
+        assert!(cfg.max_instances <= total_instances);
+        let mut active = vec![false; total_instances];
+        for a in active.iter_mut().take(cfg.initial_instances) {
+            *a = true;
+        }
+        AutoProvisioner {
+            cfg,
+            active,
+            pending: Vec::new(),
+            last_trigger: f64::NEG_INFINITY,
+            events: Vec::new(),
+        }
+    }
+
+    /// Static cluster helper: everything active, no triggers.
+    pub fn static_cluster(n: usize) -> Self {
+        AutoProvisioner {
+            cfg: ProvisionConfig { enabled: false, ..ProvisionConfig::default() },
+            active: vec![true; n],
+            pending: Vec::new(),
+            last_trigger: f64::NEG_INFINITY,
+            events: Vec::new(),
+        }
+    }
+
+    pub fn active(&self) -> &[bool] {
+        &self.active
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.iter().filter(|&&a| a).count()
+    }
+
+    /// Observation from the dispatch path (predicted latency) — drives the
+    /// `preempt` strategy.
+    pub fn observe_predicted(&mut self, now: f64, predicted: f64) -> Option<f64> {
+        if self.cfg.enabled && self.cfg.predictive {
+            self.maybe_trigger(now, predicted)
+        } else {
+            None
+        }
+    }
+
+    /// Observation from the completion path (actual e2e latency) — drives
+    /// the `relief` strategy.
+    pub fn observe_actual(&mut self, now: f64, actual: f64) -> Option<f64> {
+        if self.cfg.enabled && !self.cfg.predictive {
+            self.maybe_trigger(now, actual)
+        } else {
+            None
+        }
+    }
+
+    /// Returns the ready time of a newly provisioned instance, if
+    /// triggered.
+    fn maybe_trigger(&mut self, now: f64, latency: f64) -> Option<f64> {
+        if latency < self.cfg.threshold {
+            return None;
+        }
+        if now - self.last_trigger < self.cfg.cooldown {
+            return None;
+        }
+        let provisioned =
+            self.active_count() + self.pending.len();
+        if provisioned >= self.cfg.max_instances {
+            return None;
+        }
+        // Next inactive, not-pending instance index.
+        let idx = (0..self.active.len()).find(|&i| {
+            !self.active[i] && !self.pending.iter().any(|&(_, p)| p == i)
+        })?;
+        let ready = now + self.cfg.cold_start;
+        self.pending.push((ready, idx));
+        self.last_trigger = now;
+        self.events.push(ProvisionEvent {
+            time: now,
+            instance: idx,
+            trigger_latency: latency,
+        });
+        Some(ready)
+    }
+
+    /// Activate instances whose cold start has elapsed.  Returns the
+    /// indices that just became ready.
+    pub fn activate_ready(&mut self, now: f64) -> Vec<usize> {
+        let mut ready = Vec::new();
+        self.pending.retain(|&(t, idx)| {
+            if t <= now + 1e-12 {
+                ready.push(idx);
+                false
+            } else {
+                true
+            }
+        });
+        for &i in &ready {
+            self.active[i] = true;
+        }
+        ready
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(predictive: bool) -> ProvisionConfig {
+        ProvisionConfig {
+            enabled: true,
+            threshold: 70.0,
+            predictive,
+            initial_instances: 6,
+            max_instances: 10,
+            cold_start: 40.0,
+            cooldown: 15.0,
+        }
+    }
+
+    #[test]
+    fn initial_active_set() {
+        let p = AutoProvisioner::new(cfg(true), 12);
+        assert_eq!(p.active_count(), 6);
+        assert!(p.active()[..6].iter().all(|&a| a));
+        assert!(!p.active()[6]);
+    }
+
+    #[test]
+    fn preempt_triggers_on_predicted_only() {
+        let mut p = AutoProvisioner::new(cfg(true), 12);
+        assert!(p.observe_actual(0.0, 100.0).is_none(), "relief path inert");
+        let ready = p.observe_predicted(10.0, 80.0).unwrap();
+        assert!((ready - 50.0).abs() < 1e-9);
+        assert_eq!(p.active_count(), 6, "not active until cold start elapses");
+        assert!(p.activate_ready(49.0).is_empty());
+        assert_eq!(p.activate_ready(50.0), vec![6]);
+        assert_eq!(p.active_count(), 7);
+    }
+
+    #[test]
+    fn relief_triggers_on_actual_only() {
+        let mut p = AutoProvisioner::new(cfg(false), 12);
+        assert!(p.observe_predicted(0.0, 100.0).is_none());
+        assert!(p.observe_actual(0.0, 71.0).is_some());
+    }
+
+    #[test]
+    fn below_threshold_no_trigger() {
+        let mut p = AutoProvisioner::new(cfg(true), 12);
+        assert!(p.observe_predicted(0.0, 69.9).is_none());
+        assert!(p.events.is_empty());
+    }
+
+    #[test]
+    fn cooldown_spaces_triggers() {
+        let mut p = AutoProvisioner::new(cfg(true), 12);
+        assert!(p.observe_predicted(0.0, 90.0).is_some());
+        assert!(p.observe_predicted(5.0, 90.0).is_none(), "inside cooldown");
+        assert!(p.observe_predicted(15.0, 90.0).is_some());
+        assert_eq!(p.events.len(), 2);
+    }
+
+    #[test]
+    fn capped_at_max_instances() {
+        let mut p = AutoProvisioner::new(cfg(true), 12);
+        let mut t = 0.0;
+        for _ in 0..20 {
+            p.observe_predicted(t, 90.0);
+            t += 20.0;
+            p.activate_ready(t);
+        }
+        assert_eq!(p.active_count(), 10, "max_instances is the cap");
+    }
+
+    #[test]
+    fn static_cluster_never_triggers() {
+        let mut p = AutoProvisioner::static_cluster(10);
+        assert_eq!(p.active_count(), 10);
+        assert!(p.observe_actual(0.0, 1000.0).is_none());
+        assert!(p.observe_predicted(0.0, 1000.0).is_none());
+    }
+}

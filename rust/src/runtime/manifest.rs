@@ -1,0 +1,181 @@
+//! AOT artifact manifest (written by `python -m compile.aot`).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_context: usize,
+    pub prefill_pad: usize,
+    pub eos_id: i32,
+    pub param_count: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub file: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct GoldenVector {
+    pub prompt: String,
+    pub features: Vec<f32>,
+    pub pred: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: String,
+    pub model: ModelDims,
+    pub params: Vec<ParamEntry>,
+    pub length_params: Vec<ParamEntry>,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub decode_buckets: Vec<usize>,
+    pub length_batch: usize,
+    pub n_features: usize,
+    pub golden: Vec<GoldenVector>,
+    pub corpus_file: Option<String>,
+}
+
+fn params_from(j: &Json) -> Result<Vec<ParamEntry>> {
+    j.as_arr()?
+        .iter()
+        .map(|p| {
+            Ok(ParamEntry {
+                name: p.field("name")?.as_str()?.to_string(),
+                file: p.field("file")?.as_str()?.to_string(),
+                shape: p
+                    .field("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| d.as_usize())
+                    .collect::<Result<_, _>>()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} (run `make artifacts`)"))?;
+        let j = Json::parse(&text)?;
+
+        let m = j.field("model")?;
+        let model = ModelDims {
+            vocab_size: m.field("vocab_size")?.as_usize()?,
+            d_model: m.field("d_model")?.as_usize()?,
+            n_layers: m.field("n_layers")?.as_usize()?,
+            n_heads: m.field("n_heads")?.as_usize()?,
+            head_dim: m.field("head_dim")?.as_usize()?,
+            d_ff: m.field("d_ff")?.as_usize()?,
+            max_context: m.field("max_context")?.as_usize()?,
+            prefill_pad: m.field("prefill_pad")?.as_usize()?,
+            eos_id: m.field("eos_id")?.as_i64()? as i32,
+            param_count: m.field("param_count")?.as_usize()?,
+        };
+
+        let mut artifacts = Vec::new();
+        let mut decode_buckets = Vec::new();
+        for (name, a) in j.field("artifacts")?.as_obj()?.iter() {
+            artifacts.push(ArtifactEntry {
+                name: name.clone(),
+                file: a.field("file")?.as_str()?.to_string(),
+                n_inputs: a.field("inputs")?.as_arr()?.len(),
+                n_outputs: a.field("outputs")?.as_arr()?.len(),
+            });
+            if let Some(b) = name.strip_prefix("decode_b") {
+                decode_buckets.push(b.parse::<usize>()?);
+            }
+        }
+        decode_buckets.sort_unstable();
+        if decode_buckets.is_empty() {
+            bail!("manifest has no decode buckets");
+        }
+
+        let lm = j.field("length_model")?;
+        let golden = lm
+            .field("golden")?
+            .as_arr()?
+            .iter()
+            .map(|g| {
+                Ok(GoldenVector {
+                    prompt: g.field("prompt")?.as_str()?.to_string(),
+                    features: g
+                        .field("features")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_f64().map(|x| x as f32))
+                        .collect::<Result<_, _>>()?,
+                    pred: g.field("pred")?.as_f64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            dir: dir.to_string(),
+            model,
+            params: params_from(j.field("params")?)?,
+            length_params: params_from(j.field("length_params")?)?,
+            artifacts,
+            decode_buckets,
+            length_batch: lm.field("batch")?.as_usize()?,
+            n_features: lm.field("n_features")?.as_usize()?,
+            golden,
+            corpus_file: j
+                .opt("corpus")
+                .and_then(|c| c.opt("file"))
+                .and_then(|f| f.as_str().ok().map(str::to_string)),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn path(&self, file: &str) -> String {
+        format!("{}/{file}", self.dir)
+    }
+
+    /// Load a raw f32 parameter file, verifying size against the shape.
+    pub fn read_param(&self, p: &ParamEntry) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.path(&p.file))
+            .with_context(|| format!("reading param {}", p.file))?;
+        if bytes.len() != p.numel() * 4 {
+            bail!("param {} size mismatch: {} bytes for shape {:?}",
+                  p.name, bytes.len(), p.shape);
+        }
+        let mut out = vec![0f32; p.numel()];
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,274 @@
+//! PJRT runtime: load the AOT artifacts (`make artifacts`) and execute
+//! them from the Rust request path — Python never runs at serving time.
+//!
+//! Interchange is HLO **text** (see `python/compile/aot.py` for why), and
+//! the contract (input order, shapes, dtypes) is pinned by
+//! `artifacts/manifest.json` ([`manifest::Manifest`]).
+//!
+//! [`ModelRuntime`] exposes three compiled computations:
+//!
+//! * `prefill`    — encode one prompt, returning the first token and the
+//!                  prompt KV cache;
+//! * `decode_b{N}` — one continuous-batching decode step per batch bucket;
+//! * `length_model` — the learned response-length regressor (the paper's
+//!                  RoBERTa stand-in) used by [`RegressorTagger`].
+//!
+//! Model weights are uploaded to the device once and passed as buffers to
+//! every call (`execute_b`), so a decode step moves only the KV cache and
+//! the token/length vectors.
+
+pub mod manifest;
+pub mod serving;
+
+use anyhow::{anyhow, bail, Result};
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+use crate::core::request::Request;
+use crate::tagger::features::{extract_features, N_FEATURES};
+use crate::tagger::LengthTagger;
+pub use manifest::Manifest;
+
+/// Compiled artifacts + device-resident weights.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    #[allow(dead_code)] // keeps the PJRT client alive for the executables
+    client: PjRtClient,
+    prefill: PjRtLoadedExecutable,
+    decode: Vec<(usize, PjRtLoadedExecutable)>, // (bucket, exe), ascending
+    length_model: PjRtLoadedExecutable,
+    // Host-resident weight literals, passed to every execute() call.
+    // (`execute_b` with device buffers crashes in xla 0.1.6 /
+    // xla_extension 0.5.1 — see DESIGN.md §Perf for the measured cost of
+    // the literal path.)
+    params: Vec<Literal>,
+    length_params: Vec<Literal>,
+}
+
+fn f32_literal(dims: &[usize], data: &[f32]) -> Literal {
+    Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        dims,
+        bytemuck_cast(data),
+    )
+    .expect("f32 literal")
+}
+
+fn i32_literal(dims: &[usize], data: &[i32]) -> Literal {
+    Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        dims,
+        bytemuck_cast_i32(data),
+    )
+    .expect("i32 literal")
+}
+
+fn bytemuck_cast(data: &[f32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    }
+}
+
+fn bytemuck_cast_i32(data: &[i32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    }
+}
+
+impl ModelRuntime {
+    /// Load and compile everything under `artifacts_dir`.
+    pub fn load(artifacts_dir: &str) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu()?;
+
+        let compile = |file: &str| -> Result<PjRtLoadedExecutable> {
+            let path = manifest.path(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {path}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path}: {e:?}"))
+        };
+
+        let prefill = compile(&manifest.artifact("prefill")?.file)?;
+        let mut decode = Vec::new();
+        for &b in &manifest.decode_buckets {
+            decode.push((b, compile(&manifest.artifact(&format!("decode_b{b}"))?.file)?));
+        }
+        let length_model = compile(&manifest.artifact("length_model")?.file)?;
+
+        let load_params = |entries: &[manifest::ParamEntry]| -> Result<Vec<Literal>> {
+            entries
+                .iter()
+                .map(|p| Ok(f32_literal(&p.shape, &manifest.read_param(p)?)))
+                .collect()
+        };
+        let params = load_params(&manifest.params)?;
+        let length_params = load_params(&manifest.length_params)?;
+
+        Ok(ModelRuntime {
+            manifest,
+            client,
+            prefill,
+            decode,
+            length_model,
+            params,
+            length_params,
+        })
+    }
+
+    pub fn dims(&self) -> &manifest::ModelDims {
+        &self.manifest.model
+    }
+
+    /// Smallest decode bucket that fits `n` sequences.
+    pub fn bucket_for(&self, n: usize) -> Result<usize> {
+        self.decode
+            .iter()
+            .map(|(b, _)| *b)
+            .find(|&b| b >= n)
+            .ok_or_else(|| anyhow!("no decode bucket >= {n}"))
+    }
+
+    pub fn buckets(&self) -> Vec<usize> {
+        self.decode.iter().map(|(b, _)| *b).collect()
+    }
+
+    /// Run prefill on one padded prompt.  Returns (first_token, prompt KV
+    /// cache flattened as [L, 2, prefill_pad, H, Dh]).
+    pub fn prefill(&self, tokens: &[i32], length: usize) -> Result<(i32, Vec<f32>)> {
+        let d = self.dims();
+        if tokens.len() > d.prefill_pad || length == 0 || length > tokens.len() {
+            bail!("prompt length {length} exceeds prefill pad {}", d.prefill_pad);
+        }
+        let mut padded = vec![0i32; d.prefill_pad];
+        padded[..tokens.len()].copy_from_slice(tokens);
+
+        let tok_lit = i32_literal(&[d.prefill_pad], &padded);
+        let len_lit = i32_literal(&[], &[length as i32]);
+        let mut refs: Vec<&Literal> = self.params.iter().collect();
+        refs.push(&tok_lit);
+        refs.push(&len_lit);
+
+        let result = self
+            .prefill
+            .execute(&refs)
+            .map_err(|e| anyhow!("prefill execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("prefill readback: {e:?}"))?;
+        let outs = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        let first = outs[0].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?[0];
+        let kv = outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((first, kv))
+    }
+
+    /// One decode step at bucket size `b` (kv length must match the
+    /// bucket).  Returns the next token per slot and the updated cache.
+    pub fn decode_step(
+        &self,
+        bucket: usize,
+        kv: &[f32],
+        lens: &[i32],
+        tokens: &[i32],
+    ) -> Result<(Vec<i32>, Vec<f32>)> {
+        let d = self.dims();
+        let kv_len = d.n_layers * 2 * bucket * d.max_context * d.n_heads * d.head_dim;
+        if kv.len() != kv_len || lens.len() != bucket || tokens.len() != bucket {
+            bail!("decode_step shape mismatch for bucket {bucket}");
+        }
+        let exe = &self
+            .decode
+            .iter()
+            .find(|(b, _)| *b == bucket)
+            .ok_or_else(|| anyhow!("no decode bucket {bucket}"))?
+            .1;
+        let kv_lit = f32_literal(
+            &[d.n_layers, 2, bucket, d.max_context, d.n_heads, d.head_dim],
+            kv,
+        );
+        let lens_lit = i32_literal(&[bucket], lens);
+        let toks_lit = i32_literal(&[bucket], tokens);
+        let mut refs: Vec<&Literal> = self.params.iter().collect();
+        refs.push(&kv_lit);
+        refs.push(&lens_lit);
+        refs.push(&toks_lit);
+
+        let result = exe
+            .execute(&refs)
+            .map_err(|e| anyhow!("decode execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("decode readback: {e:?}"))?;
+        let outs = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        let next = outs[0].to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+        let kv_new = outs[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((next, kv_new))
+    }
+
+    /// Predict response lengths for up to `length_batch` feature rows.
+    pub fn predict_lengths(&self, feats: &[[f32; N_FEATURES]]) -> Result<Vec<f32>> {
+        let batch = self.manifest.length_batch;
+        if feats.is_empty() || feats.len() > batch {
+            bail!("length batch must be 1..={batch}");
+        }
+        let mut flat = vec![0f32; batch * N_FEATURES];
+        for (i, row) in feats.iter().enumerate() {
+            flat[i * N_FEATURES..(i + 1) * N_FEATURES].copy_from_slice(row);
+        }
+        let feat_lit = f32_literal(&[batch, N_FEATURES], &flat);
+        let mut refs: Vec<&Literal> = self.length_params.iter().collect();
+        refs.push(&feat_lit);
+        let result = self
+            .length_model
+            .execute(&refs)
+            .map_err(|e| anyhow!("length model execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let outs = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        let preds = outs[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(preds[..feats.len()].to_vec())
+    }
+}
+
+/// Length tagger backed by the PJRT MLP regressor (the paper's learned
+/// estimator, served in-process with zero Python).
+pub struct RegressorTagger<'a> {
+    runtime: &'a ModelRuntime,
+}
+
+impl<'a> RegressorTagger<'a> {
+    pub fn new(runtime: &'a ModelRuntime) -> Self {
+        RegressorTagger { runtime }
+    }
+
+    /// Batched tagging (amortizes the PJRT call across requests).
+    pub fn tag_batch(&self, prompts: &[&str]) -> Result<Vec<u32>> {
+        let batch = self.runtime.manifest.length_batch;
+        let mut out = Vec::with_capacity(prompts.len());
+        for chunk in prompts.chunks(batch) {
+            let feats: Vec<[f32; N_FEATURES]> =
+                chunk.iter().map(|p| extract_features(p)).collect();
+            let preds = self.runtime.predict_lengths(&feats)?;
+            out.extend(preds.iter().map(|&p| p.round().max(1.0) as u32));
+        }
+        Ok(out)
+    }
+}
+
+impl LengthTagger for RegressorTagger<'_> {
+    fn tag(&mut self, req: &Request) -> u32 {
+        match &req.prompt {
+            Some(p) => self
+                .tag_batch(&[p.as_str()])
+                .map(|v| v[0])
+                .unwrap_or(req.response_tokens),
+            None => req.response_tokens, // no text, no estimate (BurstGPT)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-regressor"
+    }
+}

@@ -1,0 +1,187 @@
+//! Real-model continuous batching over the PJRT runtime.
+//!
+//! This is the end-to-end validation path: the same continuous-batching
+//! idea as `engine/` (admit new prompts as slots free up, one decode step
+//! advances every active sequence) but executing *real transformer
+//! compute* through the AOT artifacts instead of a cost model.  The
+//! serving example (`examples/serve_real_model.rs`) and the HTTP server
+//! drive this type.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime::ModelRuntime;
+use crate::workload::tokenizer;
+
+/// A request for real generation.
+#[derive(Debug, Clone)]
+pub struct ServingRequest {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new: usize,
+}
+
+/// Completed generation + timing.
+#[derive(Debug, Clone)]
+pub struct ServingResponse {
+    pub id: u64,
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub prompt_tokens: usize,
+    pub ttft: Duration,
+    pub e2e: Duration,
+    pub arrival_order: usize,
+}
+
+struct Slot {
+    id: u64,
+    /// Per-slot KV cache [L, 2, max_context, H, Dh], flattened.
+    kv: Vec<f32>,
+    len: usize,
+    last_token: i32,
+    generated: Vec<i32>,
+    max_new: usize,
+    started: Instant,
+    ttft: Duration,
+    arrival_order: usize,
+}
+
+/// Batched greedy serving over the PJRT artifacts.
+pub struct RealServer<'a> {
+    rt: &'a ModelRuntime,
+    pub decode_steps: u64,
+    pub prefills: u64,
+}
+
+impl<'a> RealServer<'a> {
+    pub fn new(rt: &'a ModelRuntime) -> Self {
+        RealServer { rt, decode_steps: 0, prefills: 0 }
+    }
+
+    fn slot_kv_len(&self) -> usize {
+        let d = self.rt.dims();
+        d.n_layers * 2 * d.max_context * d.n_heads * d.head_dim
+    }
+
+    /// Serve a closed batch of requests to completion (FCFS admission,
+    /// continuous batching).  Returns responses in completion order.
+    pub fn serve(&mut self, requests: &[ServingRequest]) -> Result<Vec<ServingResponse>> {
+        let d = self.rt.dims().clone();
+        let max_slots = *self.rt.buckets().last().unwrap();
+        let row = d.n_heads * d.head_dim; // floats per token per (layer, k/v)
+        let slot_kv = self.slot_kv_len();
+
+        let mut pending: Vec<(usize, &ServingRequest)> =
+            requests.iter().enumerate().rev().collect();
+        let mut slots: Vec<Slot> = Vec::new();
+        let mut done: Vec<ServingResponse> = Vec::new();
+
+        while !pending.is_empty() || !slots.is_empty() {
+            // Admit while capacity (prefill one prompt at a time: the
+            // prefill artifact is B=1, like a chunked-prefill engine
+            // admitting one chunk per step).
+            while slots.len() < max_slots {
+                let Some((order, req)) = pending.pop() else { break };
+                let started = Instant::now();
+                let mut ids = tokenizer::encode(&req.prompt);
+                ids.truncate(d.prefill_pad);
+                if ids.is_empty() {
+                    ids.push(tokenizer::BYTE_OFFSET);
+                }
+                let plen = ids.len();
+                let (first, prompt_kv) = self.rt.prefill(&ids, plen)?;
+                self.prefills += 1;
+                // Copy prompt KV [L,2,prefill_pad,row] into the slot cache
+                // [L,2,max_context,row].
+                let mut kv = vec![0f32; slot_kv];
+                for l in 0..d.n_layers {
+                    for k in 0..2 {
+                        let src_base = (l * 2 + k) * d.prefill_pad * row;
+                        let dst_base = (l * 2 + k) * d.max_context * row;
+                        let n = d.prefill_pad.min(d.max_context) * row;
+                        kv[dst_base..dst_base + n]
+                            .copy_from_slice(&prompt_kv[src_base..src_base + n]);
+                    }
+                }
+                let ttft = started.elapsed();
+                slots.push(Slot {
+                    id: req.id,
+                    kv,
+                    len: plen,
+                    last_token: first,
+                    generated: vec![first],
+                    max_new: req.max_new.max(1),
+                    started,
+                    ttft,
+                    arrival_order: order,
+                });
+            }
+
+            if slots.is_empty() {
+                continue;
+            }
+
+            // Retire finished sequences (EOS, budget, or context limit).
+            let mut i = 0;
+            while i < slots.len() {
+                let s = &slots[i];
+                let ctx_full = s.len + s.generated.len() >= d.max_context - 1;
+                if s.last_token == d.eos_id
+                    || s.generated.len() >= s.max_new
+                    || ctx_full
+                {
+                    let s = slots.remove(i);
+                    done.push(ServingResponse {
+                        id: s.id,
+                        text: tokenizer::decode(&s.generated),
+                        tokens: s.generated,
+                        prompt_tokens: s.len,
+                        ttft: s.ttft,
+                        e2e: s.started.elapsed(),
+                        arrival_order: s.arrival_order,
+                    });
+                } else {
+                    i += 1;
+                }
+            }
+            if slots.is_empty() {
+                continue;
+            }
+
+            // One decode step at the smallest bucket that fits.
+            let bucket = self.rt.bucket_for(slots.len())?;
+            let mut kv = vec![0f32; d.n_layers * 2 * bucket * d.max_context * row];
+            let mut lens = vec![0i32; bucket];
+            let mut toks = vec![0i32; bucket];
+            for (b, s) in slots.iter().enumerate() {
+                for l in 0..d.n_layers {
+                    for k in 0..2 {
+                        let src = (l * 2 + k) * d.max_context * row;
+                        let dst = ((l * 2 + k) * bucket + b) * d.max_context * row;
+                        kv[dst..dst + d.max_context * row]
+                            .copy_from_slice(&s.kv[src..src + d.max_context * row]);
+                    }
+                }
+                lens[b] = (s.len + s.generated.len() - 1) as i32;
+                toks[b] = s.last_token;
+            }
+            let (next, kv_new) = self.rt.decode_step(bucket, &kv, &lens, &toks)?;
+            self.decode_steps += 1;
+            for (b, s) in slots.iter_mut().enumerate() {
+                for l in 0..d.n_layers {
+                    for k in 0..2 {
+                        let src = ((l * 2 + k) * bucket + b) * d.max_context * row;
+                        let dst = (l * 2 + k) * d.max_context * row;
+                        s.kv[dst..dst + d.max_context * row]
+                            .copy_from_slice(&kv_new[src..src + d.max_context * row]);
+                    }
+                }
+                s.last_token = next[b];
+                s.generated.push(next[b]);
+            }
+        }
+
+        Ok(done)
+    }
+}

@@ -1,0 +1,602 @@
+//! Global schedulers (§4.2, §5): Block and the five baselines, behind one
+//! trait the cluster runtime drives.
+//!
+//! All schedulers are *dispatchers*: one-shot placement at arrival, no
+//! migration (the paper excludes Llumnix's live migration and evaluates
+//! only its improved dispatcher, `Llumnix-`).
+
+use std::collections::HashMap;
+
+use crate::config::{OverheadConfig, SchedulerKind};
+use crate::core::request::{Request, RequestId};
+use crate::engine::InstanceStatus;
+use crate::exec::BatchCost;
+use crate::predictor::{EstimatedLengths, Prediction, Predictor, TrueLengths};
+use crate::util::rng::Rng;
+
+/// What the dispatcher sees: the status of every *active* instance.
+pub struct ClusterView<'a> {
+    pub now: f64,
+    /// Index-aligned; `None` marks deactivated / not-yet-provisioned hosts.
+    pub statuses: &'a [Option<InstanceStatus>],
+}
+
+impl ClusterView<'_> {
+    pub fn active_indices(&self) -> Vec<usize> {
+        self.statuses
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|_| i))
+            .collect()
+    }
+}
+
+/// A dispatch decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decision {
+    pub instance: usize,
+    /// Scheduling overhead charged to the request (seconds).
+    pub overhead: f64,
+    /// Predicted e2e latency on the chosen instance (Block family).
+    pub predicted_e2e: Option<f64>,
+    pub predicted_ttft: Option<f64>,
+    /// Predictions for every active instance (diagnostics / Figure 5).
+    pub all_predictions: Vec<(usize, f64)>,
+}
+
+pub trait GlobalScheduler {
+    fn name(&self) -> &'static str;
+    fn pick(&mut self, req: &Request, view: &ClusterView,
+            cost: &dyn BatchCost) -> Decision;
+    /// Notify of a completed request (for feedback-driven taggers etc.).
+    fn on_finish(&mut self, _id: RequestId, _true_tokens: u32) {}
+}
+
+fn heuristic_decision(instance: usize, overhead: f64) -> Decision {
+    Decision {
+        instance,
+        overhead,
+        predicted_e2e: None,
+        predicted_ttft: None,
+        all_predictions: Vec::new(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Baselines
+// ---------------------------------------------------------------------------
+
+/// Uniform random placement.
+pub struct RandomScheduler {
+    rng: Rng,
+    overhead: f64,
+}
+
+impl RandomScheduler {
+    pub fn new(seed: u64, overhead: &OverheadConfig) -> Self {
+        RandomScheduler { rng: Rng::new(seed), overhead: overhead.heuristic_base }
+    }
+}
+
+impl GlobalScheduler for RandomScheduler {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn pick(&mut self, _req: &Request, view: &ClusterView,
+            _cost: &dyn BatchCost) -> Decision {
+        let active = view.active_indices();
+        heuristic_decision(active[self.rng.index(active.len())], self.overhead)
+    }
+}
+
+/// Round-robin over active instances (DeepSpeed-MII / Triton default).
+pub struct RoundRobinScheduler {
+    next: usize,
+    overhead: f64,
+}
+
+impl RoundRobinScheduler {
+    pub fn new(overhead: &OverheadConfig) -> Self {
+        RoundRobinScheduler { next: 0, overhead: overhead.heuristic_base }
+    }
+}
+
+impl GlobalScheduler for RoundRobinScheduler {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick(&mut self, _req: &Request, view: &ClusterView,
+            _cost: &dyn BatchCost) -> Decision {
+        let active = view.active_indices();
+        let pick = active[self.next % active.len()];
+        self.next = self.next.wrapping_add(1);
+        heuristic_decision(pick, self.overhead)
+    }
+}
+
+/// LiteLLM's default: route to the instance with the fewest queries
+/// dispatched to it in the trailing minute.
+pub struct MinQpmScheduler {
+    /// Dispatch timestamps per instance (pruned to the window).
+    history: Vec<Vec<f64>>,
+    window: f64,
+    overhead: f64,
+}
+
+impl MinQpmScheduler {
+    pub fn new(n_instances: usize, overhead: &OverheadConfig) -> Self {
+        MinQpmScheduler {
+            history: vec![Vec::new(); n_instances],
+            window: 60.0,
+            overhead: overhead.heuristic_base,
+        }
+    }
+
+    fn qpm(&mut self, instance: usize, now: f64) -> usize {
+        let h = &mut self.history[instance];
+        h.retain(|&t| now - t <= self.window);
+        h.len()
+    }
+}
+
+impl GlobalScheduler for MinQpmScheduler {
+    fn name(&self) -> &'static str {
+        "min-qpm"
+    }
+
+    fn pick(&mut self, _req: &Request, view: &ClusterView,
+            _cost: &dyn BatchCost) -> Decision {
+        let now = view.now;
+        let active = view.active_indices();
+        if self.history.len() < view.statuses.len() {
+            self.history.resize(view.statuses.len(), Vec::new());
+        }
+        let pick = active
+            .iter()
+            .copied()
+            .min_by_key(|&i| self.qpm(i, now))
+            .unwrap();
+        self.history[pick].push(now);
+        heuristic_decision(pick, self.overhead)
+    }
+}
+
+/// Pick the argmin by load with uniform random tie-breaking (avoids
+/// herding every idle-tie onto instance 0).
+fn min_load_pick(
+    candidates: &[usize],
+    rng: &mut Rng,
+    mut load: impl FnMut(usize) -> f64,
+) -> usize {
+    let mut best = f64::INFINITY;
+    let mut ties: Vec<usize> = Vec::new();
+    for &i in candidates {
+        let l = load(i);
+        if l < best - 1e-12 {
+            best = l;
+            ties.clear();
+            ties.push(i);
+        } else if (l - best).abs() <= 1e-12 {
+            ties.push(i);
+        }
+    }
+    ties[rng.index(ties.len())]
+}
+
+/// INFaaS++ (Llumnix's optimized INFaaS): load = usedMemory / batchSize.
+///
+/// Interpretation note: we read `batchSize` as the configured maximum
+/// batch size (a constant normalizer), not the instantaneous running-batch
+/// length — dividing by the live batch length rewards already-crowded
+/// instances (their denominator grows faster than used memory) and makes
+/// the baseline collapse below Random, contradicting the paper's Figure 6
+/// where INFaaS++ beats the basic schedulers at low QPS.
+pub struct InfaasScheduler {
+    overhead: f64,
+    max_batch: u32,
+    rng: Rng,
+}
+
+impl InfaasScheduler {
+    pub fn new(max_batch: u32, overhead: &OverheadConfig, seed: u64) -> Self {
+        InfaasScheduler {
+            overhead: overhead.heuristic_base,
+            max_batch,
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn load(&self, st: &InstanceStatus) -> f64 {
+        st.used_blocks() as f64 / self.max_batch.max(1) as f64
+    }
+}
+
+impl GlobalScheduler for InfaasScheduler {
+    fn name(&self) -> &'static str {
+        "infaas++"
+    }
+
+    fn pick(&mut self, _req: &Request, view: &ClusterView,
+            _cost: &dyn BatchCost) -> Decision {
+        let candidates = view.active_indices();
+        let statuses = view.statuses;
+        let max_batch = self.max_batch;
+        let pick = min_load_pick(&candidates, &mut self.rng, |i| {
+            let st = statuses[i].as_ref().unwrap();
+            st.used_blocks() as f64 / max_batch.max(1) as f64
+        });
+        let _ = self.load(statuses[pick].as_ref().unwrap());
+        heuristic_decision(pick, self.overhead)
+    }
+}
+
+/// Llumnix- dispatcher: INFaaS++ plus the prefill correction term —
+/// load = (usedMemory + prefillMemory) / batchSize (same normalizer
+/// reading as [`InfaasScheduler`]).
+pub struct LlumnixScheduler {
+    overhead: f64,
+    block_size: u32,
+    max_batch: u32,
+    rng: Rng,
+}
+
+impl LlumnixScheduler {
+    pub fn new(block_size: u32, max_batch: u32, overhead: &OverheadConfig,
+               seed: u64) -> Self {
+        LlumnixScheduler {
+            overhead: overhead.heuristic_base,
+            block_size,
+            max_batch,
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl GlobalScheduler for LlumnixScheduler {
+    fn name(&self) -> &'static str {
+        "llumnix-"
+    }
+
+    fn pick(&mut self, _req: &Request, view: &ClusterView,
+            _cost: &dyn BatchCost) -> Decision {
+        let candidates = view.active_indices();
+        let statuses = view.statuses;
+        let (block_size, max_batch) = (self.block_size, self.max_batch);
+        let pick = min_load_pick(&candidates, &mut self.rng, |i| {
+            let st = statuses[i].as_ref().unwrap();
+            let prefill_blocks =
+                (st.pending_prefill_tokens() as f64 / block_size as f64).ceil();
+            (st.used_blocks() as f64 + prefill_blocks)
+                / max_batch.max(1) as f64
+        });
+        heuristic_decision(pick, self.overhead)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Block
+// ---------------------------------------------------------------------------
+
+/// Block (§4): fan out to every instance's Predictor, dispatch to the
+/// minimum predicted e2e latency.  `use_estimates` switches Block* mode
+/// (plan with tagger predictions instead of ground truth).
+pub struct BlockScheduler {
+    predictor: Predictor,
+    overhead_cfg: OverheadConfig,
+    use_estimates: bool,
+    /// Tagger estimates of requests we dispatched (resident-sequence
+    /// planning lengths for Block*).
+    estimates: HashMap<RequestId, u32>,
+    /// Candidate sampling: Some(k) = predict only k random candidates
+    /// (the power-of-two extension); None = all instances (the paper).
+    sample_k: Option<usize>,
+    rng: Rng,
+}
+
+impl BlockScheduler {
+    pub fn new(predictor: Predictor, overhead: &OverheadConfig,
+               use_estimates: bool, seed: u64) -> Self {
+        BlockScheduler {
+            predictor,
+            overhead_cfg: overhead.clone(),
+            use_estimates,
+            estimates: HashMap::new(),
+            sample_k: None,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn with_sampling(mut self, k: usize) -> Self {
+        self.sample_k = Some(k.max(1));
+        self
+    }
+
+    pub fn cache_stats(&self) -> (u64, u64) {
+        self.predictor.cache_stats()
+    }
+
+    fn predict_on(&mut self, st: &InstanceStatus, req: &Request,
+                  cost: &dyn BatchCost) -> Prediction {
+        if self.use_estimates {
+            self.predictor.predict(st, req, cost,
+                                   &EstimatedLengths { estimates: &self.estimates })
+        } else {
+            self.predictor.predict(st, req, cost, &TrueLengths)
+        }
+    }
+}
+
+impl GlobalScheduler for BlockScheduler {
+    fn name(&self) -> &'static str {
+        if self.sample_k.is_some() {
+            "block-po2"
+        } else if self.use_estimates {
+            "block*"
+        } else {
+            "block"
+        }
+    }
+
+    fn pick(&mut self, req: &Request, view: &ClusterView,
+            cost: &dyn BatchCost) -> Decision {
+        // Block* plans with the tagger estimate; Block with ground truth.
+        let mut planning_req = req.clone();
+        if !self.use_estimates {
+            planning_req.predicted_tokens = None; // planning_tokens() = truth
+        }
+
+        let mut candidates = view.active_indices();
+        if let Some(k) = self.sample_k {
+            if candidates.len() > k {
+                let mut picked = Vec::with_capacity(k);
+                for _ in 0..k {
+                    let j = self.rng.index(candidates.len());
+                    picked.push(candidates.swap_remove(j));
+                }
+                candidates = picked;
+            }
+        }
+
+        let mut best: Option<(usize, Prediction)> = None;
+        let mut all = Vec::with_capacity(candidates.len());
+        let mut max_steps = 0u64;
+        for i in candidates {
+            let st = view.statuses[i].as_ref().unwrap();
+            let p = self.predict_on(st, &planning_req, cost);
+            max_steps = max_steps.max(p.sim_steps);
+            all.push((i, p.e2e));
+            let better = match &best {
+                None => true,
+                Some((_, b)) => p.e2e < b.e2e,
+            };
+            if better {
+                best = Some((i, p));
+            }
+        }
+        let (instance, pred) = best.expect("no active instances");
+
+        // §6.3 overhead model: predictors run in parallel across
+        // instances, so the charge follows the *deepest* simulation.
+        let overhead = self.overhead_cfg.predict_base
+            + self.overhead_cfg.predict_per_step * max_steps as f64;
+
+        if self.use_estimates {
+            self.estimates.insert(req.id, req.planning_tokens());
+        }
+
+        Decision {
+            instance,
+            overhead,
+            predicted_e2e: Some(pred.e2e + overhead),
+            predicted_ttft: Some(pred.ttft + overhead),
+            all_predictions: all,
+        }
+    }
+
+    fn on_finish(&mut self, id: RequestId, _true_tokens: u32) {
+        self.estimates.remove(&id);
+    }
+}
+
+/// Construct a scheduler by kind.
+pub fn build_scheduler(
+    kind: SchedulerKind,
+    n_instances: usize,
+    engine_cfg: &crate::config::EngineConfig,
+    num_blocks: u32,
+    overhead: &OverheadConfig,
+    seed: u64,
+) -> Box<dyn GlobalScheduler> {
+    match kind {
+        SchedulerKind::Random => Box::new(RandomScheduler::new(seed, overhead)),
+        SchedulerKind::RoundRobin => Box::new(RoundRobinScheduler::new(overhead)),
+        SchedulerKind::MinQpm => {
+            Box::new(MinQpmScheduler::new(n_instances, overhead))
+        }
+        SchedulerKind::InfaasPp => Box::new(InfaasScheduler::new(
+            engine_cfg.max_batch_size, overhead, seed)),
+        SchedulerKind::LlumnixMinus => Box::new(LlumnixScheduler::new(
+            engine_cfg.block_size, engine_cfg.max_batch_size, overhead, seed)),
+        SchedulerKind::Block => Box::new(BlockScheduler::new(
+            Predictor::new(engine_cfg.clone(), num_blocks), overhead, false, seed)),
+        SchedulerKind::BlockStar => Box::new(BlockScheduler::new(
+            Predictor::new(engine_cfg.clone(), num_blocks), overhead, true, seed)),
+        SchedulerKind::BlockPo2 => Box::new(
+            BlockScheduler::new(
+                Predictor::new(engine_cfg.clone(), num_blocks), overhead, false,
+                seed)
+            .with_sampling(2),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::core::hw::{A30, LLAMA2_7B};
+    use crate::engine::InstanceEngine;
+    use crate::exec::roofline::RooflineModel;
+
+    fn cost() -> RooflineModel {
+        RooflineModel::from_profiles(&A30, &LLAMA2_7B)
+    }
+
+    /// Build a view with engines of differing load.
+    fn make_statuses(loads: &[usize]) -> Vec<Option<InstanceStatus>> {
+        let c = cost();
+        loads
+            .iter()
+            .map(|&n| {
+                let mut eng = InstanceEngine::new(EngineConfig::default(), 1056);
+                for i in 0..n {
+                    eng.enqueue(&Request::new(1000 + i as u64, 0.0, 200, 100), 0.0);
+                }
+                if n > 0 {
+                    eng.start_step(&c);
+                }
+                Some(eng.snapshot())
+            })
+            .collect()
+    }
+
+    fn req() -> Request {
+        Request::new(1, 0.0, 100, 50)
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let statuses = make_statuses(&[0, 0, 0]);
+        let view = ClusterView { now: 0.0, statuses: &statuses };
+        let mut s = RoundRobinScheduler::new(&OverheadConfig::default());
+        let picks: Vec<usize> =
+            (0..6).map(|_| s.pick(&req(), &view, &cost()).instance).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn random_covers_all_instances() {
+        let statuses = make_statuses(&[0, 0, 0, 0]);
+        let view = ClusterView { now: 0.0, statuses: &statuses };
+        let mut s = RandomScheduler::new(1, &OverheadConfig::default());
+        let mut seen = [false; 4];
+        for _ in 0..100 {
+            seen[s.pick(&req(), &view, &cost()).instance] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn min_qpm_balances_dispatch_counts() {
+        let statuses = make_statuses(&[0, 0, 0]);
+        let view = ClusterView { now: 0.0, statuses: &statuses };
+        let mut s = MinQpmScheduler::new(3, &OverheadConfig::default());
+        let mut counts = [0usize; 3];
+        for _ in 0..30 {
+            counts[s.pick(&req(), &view, &cost()).instance] += 1;
+        }
+        assert_eq!(counts, [10, 10, 10]);
+    }
+
+    #[test]
+    fn infaas_prefers_low_memory_load() {
+        let statuses = make_statuses(&[20, 0, 20]);
+        let view = ClusterView { now: 0.0, statuses: &statuses };
+        let mut s = InfaasScheduler::new(48, &OverheadConfig::default(), 1);
+        assert_eq!(s.pick(&req(), &view, &cost()).instance, 1);
+    }
+
+    #[test]
+    fn llumnix_counts_pending_prefill() {
+        // Instance 0: no memory used but a deep waiting queue.
+        // Instance 1: modest used memory, empty queue.
+        // INFaaS++ prefers 0 (no used memory); Llumnix- sees the queue.
+        let c = cost();
+        let mut eng0 = InstanceEngine::new(EngineConfig::default(), 1056);
+        for i in 0..40 {
+            eng0.enqueue(&Request::new(100 + i, 0.0, 1200, 200), 0.0);
+        }
+        // (no step started: all 40 in waiting, zero used blocks)
+        let mut eng1 = InstanceEngine::new(EngineConfig::default(), 1056);
+        eng1.enqueue(&Request::new(900, 0.0, 300, 100), 0.0);
+        eng1.start_step(&c);
+        let statuses = vec![Some(eng0.snapshot()), Some(eng1.snapshot())];
+        let view = ClusterView { now: 0.0, statuses: &statuses };
+
+        let mut infaas = InfaasScheduler::new(48, &OverheadConfig::default(), 1);
+        assert_eq!(infaas.pick(&req(), &view, &cost()).instance, 0,
+                   "INFaaS++ is fooled by the empty memory");
+        let mut llumnix =
+            LlumnixScheduler::new(16, 48, &OverheadConfig::default(), 1);
+        assert_eq!(llumnix.pick(&req(), &view, &cost()).instance, 1,
+                   "Llumnix- sees the pending prefill load");
+    }
+
+    #[test]
+    fn block_picks_least_loaded_and_reports_predictions() {
+        let statuses = make_statuses(&[30, 0, 15]);
+        let view = ClusterView { now: 0.0, statuses: &statuses };
+        let mut s = BlockScheduler::new(
+            Predictor::new(EngineConfig::default(), 1056),
+            &OverheadConfig::default(), false, 1);
+        let d = s.pick(&req(), &view, &cost());
+        assert_eq!(d.instance, 1);
+        assert_eq!(d.all_predictions.len(), 3);
+        let p_idle = d.all_predictions.iter().find(|(i, _)| *i == 1).unwrap().1;
+        let p_busy = d.all_predictions.iter().find(|(i, _)| *i == 0).unwrap().1;
+        assert!(p_busy > p_idle);
+        assert!(d.predicted_e2e.unwrap() >= p_idle);
+        assert!(d.overhead > 0.0);
+    }
+
+    #[test]
+    fn block_overhead_grows_with_load() {
+        let idle = make_statuses(&[0, 0]);
+        let busy = make_statuses(&[40, 40]);
+        let mk = || BlockScheduler::new(
+            Predictor::new(EngineConfig::default(), 1056),
+            &OverheadConfig::default(), false, 1);
+        let o_idle = mk().pick(&req(), &ClusterView { now: 0.0, statuses: &idle },
+                               &cost()).overhead;
+        let o_busy = mk().pick(&req(), &ClusterView { now: 0.0, statuses: &busy },
+                               &cost()).overhead;
+        assert!(o_busy > o_idle, "{o_busy} vs {o_idle}");
+    }
+
+    #[test]
+    fn block_po2_predicts_subset() {
+        let statuses = make_statuses(&[0; 8]);
+        let view = ClusterView { now: 0.0, statuses: &statuses };
+        let mut s = BlockScheduler::new(
+            Predictor::new(EngineConfig::default(), 1056),
+            &OverheadConfig::default(), false, 3)
+            .with_sampling(2);
+        let d = s.pick(&req(), &view, &cost());
+        assert_eq!(d.all_predictions.len(), 2);
+    }
+
+    #[test]
+    fn inactive_instances_never_picked() {
+        let mut statuses = make_statuses(&[0, 0, 0]);
+        statuses[0] = None;
+        statuses[2] = None;
+        let view = ClusterView { now: 0.0, statuses: &statuses };
+        for kind in SchedulerKind::ALL {
+            let mut s = build_scheduler(kind, 3, &EngineConfig::default(), 1056,
+                                        &OverheadConfig::default(), 7);
+            let d = s.pick(&req(), &view, &cost());
+            assert_eq!(d.instance, 1, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn build_names_match_kind() {
+        for kind in SchedulerKind::ALL {
+            let s = build_scheduler(kind, 2, &EngineConfig::default(), 1056,
+                                    &OverheadConfig::default(), 7);
+            assert_eq!(s.name(), kind.name());
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Tiny HTTP/1.1 request parser + client (enough for the JSON API).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl HttpRequest {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Parse one request from a stream (request line, headers,
+/// Content-Length-delimited body).
+pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("method")?.to_string();
+    let path = parts.next().context("path")?.to_string();
+
+    let mut headers = Vec::new();
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).context("header")?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+    let len: usize = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.parse().ok())
+        .unwrap_or(0);
+    if len > 16 * 1024 * 1024 {
+        bail!("body too large");
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body).context("body")?;
+    Ok(HttpRequest {
+        method,
+        path,
+        headers,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
+}
+
+/// Blocking JSON-over-HTTP client call (used by tests and examples).
+pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>)
+               -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let body = body.unwrap_or("");
+    let msg = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(msg.as_bytes())?;
+    let mut response = String::new();
+    BufReader::new(stream).read_to_string(&mut response)?;
+    let status: u16 = response
+        .split_whitespace()
+        .nth(1)
+        .context("status")?
+        .parse()?;
+    let body = response
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn parse_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let req = read_request(&mut s).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/predict");
+            assert_eq!(req.body, r#"{"prompt":"hi"}"#);
+            assert!(req.header("content-type").unwrap().contains("json"));
+            s.write_all(b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\nok")
+                .unwrap();
+        });
+        let (status, body) = request(&addr.to_string(), "POST", "/predict",
+                                     Some(r#"{"prompt":"hi"}"#))
+            .unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "ok");
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,168 @@
+//! Minimal HTTP/1.1 server — the paper's FastAPI front end, in std Rust.
+//!
+//! Endpoints (JSON in/out):
+//!
+//! * `POST /generate` `{"prompt": "...", "max_new": 32}` — run real
+//!   generation through the PJRT runtime; returns text + timing.
+//! * `POST /predict` `{"prompt": "..."}` — the tagger path: estimated
+//!   response length from the learned regressor.
+//! * `GET  /status` — server counters (the instance `status` API).
+//! * `GET  /health` — liveness.
+//!
+//! Sequential accept loop over `std::net::TcpListener`: the PJRT client
+//! is `!Send` (single device, serialized execution), so one OS thread
+//! owns model + socket — the same single-GPU-instance model the paper's
+//! backend has.  (No tokio in this offline environment — see DESIGN.md
+//! substitutions.)
+
+pub mod http;
+
+use std::cell::Cell;
+use std::io::Write;
+use std::net::TcpListener;
+
+use anyhow::Result;
+
+use crate::runtime::serving::{RealServer, ServingRequest};
+use crate::runtime::ModelRuntime;
+use crate::util::json::{Json, JsonObj};
+use http::{read_request, HttpRequest};
+
+/// Server state (single-threaded owner of the PJRT runtime).
+pub struct ServerState {
+    pub runtime: ModelRuntime,
+    pub requests_served: Cell<u64>,
+    pub tokens_generated: Cell<u64>,
+    pub next_id: Cell<u64>,
+}
+
+impl ServerState {
+    pub fn new(runtime: ModelRuntime) -> Self {
+        ServerState {
+            runtime,
+            requests_served: Cell::new(0),
+            tokens_generated: Cell::new(0),
+            next_id: Cell::new(1),
+        }
+    }
+}
+
+fn json_response(status: u16, body: &Json) -> Vec<u8> {
+    let text = body.to_string_compact();
+    format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        status,
+        if status == 200 { "OK" } else { "Error" },
+        text.len(),
+        text
+    )
+    .into_bytes()
+}
+
+fn err_body(msg: &str) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("error", msg);
+    Json::Obj(o)
+}
+
+/// Route one parsed request.
+pub fn handle(state: &ServerState, req: &HttpRequest) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/health") => {
+            let mut o = JsonObj::new();
+            o.insert("ok", true);
+            (200, Json::Obj(o))
+        }
+        ("GET", "/status") => {
+            let mut o = JsonObj::new();
+            o.insert("requests_served", state.requests_served.get());
+            o.insert("tokens_generated", state.tokens_generated.get());
+            let d = state.runtime.dims();
+            o.insert("model_params", d.param_count);
+            o.insert("max_context", d.max_context);
+            (200, Json::Obj(o))
+        }
+        ("POST", "/predict") => {
+            let body = match Json::parse(&req.body) {
+                Ok(b) => b,
+                Err(e) => return (400, err_body(&e.to_string())),
+            };
+            let Some(prompt) = body
+                .opt("prompt")
+                .and_then(|p| p.as_str().ok().map(str::to_string))
+            else {
+                return (400, err_body("missing 'prompt'"));
+            };
+            let feats = crate::tagger::features::extract_features(&prompt);
+            match state.runtime.predict_lengths(&[feats]) {
+                Ok(pred) => {
+                    let mut o = JsonObj::new();
+                    o.insert("predicted_tokens", pred[0].round().max(1.0) as f64);
+                    (200, Json::Obj(o))
+                }
+                Err(e) => (500, err_body(&e.to_string())),
+            }
+        }
+        ("POST", "/generate") => {
+            let body = match Json::parse(&req.body) {
+                Ok(b) => b,
+                Err(e) => return (400, err_body(&e.to_string())),
+            };
+            let Some(prompt) = body
+                .opt("prompt")
+                .and_then(|p| p.as_str().ok().map(str::to_string))
+            else {
+                return (400, err_body("missing 'prompt'"));
+            };
+            let max_new = body
+                .opt("max_new")
+                .and_then(|v| v.as_usize().ok())
+                .unwrap_or(32)
+                .clamp(1, 256);
+            let id = state.next_id.get();
+            state.next_id.set(id + 1);
+            let mut srv = RealServer::new(&state.runtime);
+            match srv.serve(&[ServingRequest { id, prompt, max_new }]) {
+                Ok(mut out) => {
+                    let r = out.pop().unwrap();
+                    state.requests_served.set(state.requests_served.get() + 1);
+                    state.tokens_generated.set(
+                        state.tokens_generated.get() + r.tokens.len() as u64);
+                    let mut o = JsonObj::new();
+                    o.insert("id", r.id);
+                    o.insert("text", r.text.as_str());
+                    o.insert("prompt_tokens", r.prompt_tokens);
+                    o.insert("tokens", r.tokens.len());
+                    o.insert("ttft_ms", r.ttft.as_secs_f64() * 1e3);
+                    o.insert("e2e_ms", r.e2e.as_secs_f64() * 1e3);
+                    (200, Json::Obj(o))
+                }
+                Err(e) => (500, err_body(&e.to_string())),
+            }
+        }
+        _ => (404, err_body("not found")),
+    }
+}
+
+/// Serve on `addr` (e.g. "127.0.0.1:8471").  `max_requests` bounds the
+/// accept loop for tests (None = forever).
+pub fn serve(state: ServerState, addr: &str,
+             max_requests: Option<usize>) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    crate::log_info!("listening on {addr}");
+    let mut handled = 0usize;
+    for stream in listener.incoming() {
+        let mut stream = stream?;
+        if let Ok(req) = read_request(&mut stream) {
+            let (status, body) = handle(&state, &req);
+            let _ = stream.write_all(&json_response(status, &body));
+        }
+        handled += 1;
+        if let Some(max) = max_requests {
+            if handled >= max {
+                break;
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Prompt feature extraction for the learned length regressor.
+//!
+//! MUST stay in sync with `python/compile/length_model.py::extract_features`
+//! — the AOT manifest ships golden (prompt, features) vectors and the
+//! integration tests assert equality, so a drift fails the build.
+
+pub const N_FEATURES: usize = 16;
+
+/// Keyword groups, in feature order (indices 4..16).
+const KEYWORDS: [&[&str]; 12] = [
+    &["explain", "describe"],
+    &["write"],
+    &["story", "poem", "essay"],
+    &["code", "function", "implement", "program"],
+    &["summarize", "tl;dr", "brief"],
+    &["list", "enumerate"],
+    &["translate"],
+    &["what"],
+    &["how"],
+    &["why"],
+    &["short", "one sentence"],
+    &["detail", "comprehensive", "long"],
+];
+
+/// Extract the 16 normalized features of a prompt.
+pub fn extract_features(text: &str) -> [f32; N_FEATURES] {
+    let t = text.to_lowercase();
+    let words: Vec<&str> = t.split_whitespace().collect();
+    let n_chars = t.chars().count();
+    let n_words = words.len();
+    let avg_wl = if n_words > 0 {
+        words.iter().map(|w| w.chars().count()).sum::<usize>() as f64
+            / n_words as f64
+    } else {
+        0.0
+    };
+    let qmarks = t.matches('?').count();
+
+    let mut f = [0f32; N_FEATURES];
+    f[0] = (n_chars.min(2048) as f64 / 2048.0) as f32;
+    f[1] = (n_words.min(400) as f64 / 400.0) as f32;
+    f[2] = (qmarks.min(4) as f64 / 4.0) as f32;
+    f[3] = (avg_wl.min(12.0) / 12.0) as f32;
+    for (i, kws) in KEYWORDS.iter().enumerate() {
+        f[4 + i] = if kws.iter().any(|k| t.contains(k)) { 1.0 } else { 0.0 };
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_prompt_is_zero() {
+        assert_eq!(extract_features(""), [0.0; N_FEATURES]);
+    }
+
+    #[test]
+    fn ranges() {
+        for text in ["hi", "explain everything?", &"long word ".repeat(500)] {
+            for v in extract_features(text) {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn keyword_flags() {
+        let f = extract_features("please EXPLAIN this in detail");
+        assert_eq!(f[4], 1.0); // explain
+        assert_eq!(f[15], 1.0); // detail
+        assert_eq!(f[10], 0.0); // translate
+    }
+
+    #[test]
+    fn matches_python_formula_manual() {
+        // python: chars=20, words=4, avg_wl=(2+5+3+6)/4=4.25, q=1
+        let f = extract_features("hi there how works??");
+        assert!((f[0] - 20.0 / 2048.0).abs() < 1e-6);
+        assert!((f[1] - 4.0 / 400.0).abs() < 1e-6);
+        assert!((f[2] - 2.0 / 4.0).abs() < 1e-6);
+        // "how" keyword present
+        assert_eq!(f[12], 1.0);
+    }
+}

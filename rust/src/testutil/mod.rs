@@ -1,0 +1,4 @@
+//! Test utilities, including a minimal property-testing harness
+//! (`prop`) — the offline substitute for proptest (see DESIGN.md).
+
+pub mod prop;

@@ -1,0 +1,61 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! Deterministic: every case derives from a SplitMix64 stream seeded by
+//! (suite seed, case index), so failures reproduce exactly; the failing
+//! case index is reported in the panic message.
+
+use crate::util::rng::Rng;
+
+/// Run `cases` random cases of a property.  The closure receives a
+/// per-case RNG and the case index; it should panic (assert) on failure.
+pub fn check<F: FnMut(&mut Rng, usize)>(seed: u64, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let mut rng = Rng::new(seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng, case)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(String::as_str)
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Random vector helper.
+pub fn vec_u32(rng: &mut Rng, len: usize, lo: u32, hi: u32) -> Vec<u32> {
+    (0..len).map(|_| rng.randint(lo as i64, hi as i64) as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_pass() {
+        check(1, 50, |rng, _| {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failures_report_case() {
+        check(1, 50, |rng, _| {
+            assert!(rng.next_f64() < 0.5, "too big");
+        });
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut a = Vec::new();
+        check(9, 10, |rng, _| a.push(rng.next_u64()));
+        let mut b = Vec::new();
+        check(9, 10, |rng, _| b.push(rng.next_u64()));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,6 @@
+//! Foundation utilities: deterministic RNG, statistics, JSON, logging.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;

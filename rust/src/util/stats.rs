@@ -1,0 +1,338 @@
+//! Statistics helpers: summaries, percentiles, CDFs, histograms, smoothing.
+//!
+//! Every paper figure is ultimately a reduction of per-request metric
+//! records; these are the reductions (mean/P50/P99, CDF series, Gaussian
+//! smoothing for the Figure-7 style time series).
+
+/// Streaming mean/variance (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.m2 / self.n as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n;
+        self.m2 += other.m2 + d * d * self.n as f64 * other.n as f64 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Percentile of a sample (linear interpolation between order statistics).
+/// `p` in [0, 100]. Sorts a copy; use [`percentile_sorted`] on hot paths.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() { f64::NAN } else { xs.iter().sum::<f64>() / xs.len() as f64 }
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Empirical CDF evaluated at `points` evenly spaced quantiles.
+/// Returns (value, cumulative_probability) pairs.
+pub fn cdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
+    if xs.is_empty() || points == 0 {
+        return Vec::new();
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (0..points)
+        .map(|i| {
+            let q = (i as f64 + 1.0) / points as f64;
+            (percentile_sorted(&v, q * 100.0), q)
+        })
+        .collect()
+}
+
+/// Fixed-width histogram over [lo, hi) with `bins` buckets (+overflow in
+/// the last bucket).
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<u64> {
+    let mut h = vec![0u64; bins];
+    if bins == 0 || hi <= lo {
+        return h;
+    }
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let idx = (((x - lo) / w).floor().max(0.0) as usize).min(bins - 1);
+        h[idx] += 1;
+    }
+    h
+}
+
+/// Gaussian smoothing of a series (the paper smooths Figure-7 plots with a
+/// Gaussian filter "to enhance readability").  Truncated at 3 sigma.
+pub fn gaussian_smooth(xs: &[f64], sigma: f64) -> Vec<f64> {
+    if xs.is_empty() || sigma <= 0.0 {
+        return xs.to_vec();
+    }
+    let radius = (3.0 * sigma).ceil() as isize;
+    let weights: Vec<f64> = (-radius..=radius)
+        .map(|i| (-0.5 * (i as f64 / sigma).powi(2)).exp())
+        .collect();
+    let n = xs.len() as isize;
+    (0..n)
+        .map(|i| {
+            let mut acc = 0.0;
+            let mut wsum = 0.0;
+            for (wi, w) in weights.iter().enumerate() {
+                let j = i + wi as isize - radius;
+                if j >= 0 && j < n {
+                    acc += w * xs[j as usize];
+                    wsum += w;
+                }
+            }
+            acc / wsum
+        })
+        .collect()
+}
+
+/// Ordinary least squares: solve min ||X b - y||^2 via normal equations
+/// with Gaussian elimination (fine for the handful of latency-model
+/// features we fit).  Returns coefficient vector b with X: n rows x k cols.
+pub fn least_squares(x: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
+    let n = x.len();
+    if n == 0 || n != y.len() {
+        return None;
+    }
+    let k = x[0].len();
+    // Build X^T X (k x k) and X^T y (k).
+    let mut a = vec![vec![0.0; k + 1]; k];
+    for (row, &yi) in x.iter().zip(y) {
+        if row.len() != k {
+            return None;
+        }
+        for i in 0..k {
+            for j in 0..k {
+                a[i][j] += row[i] * row[j];
+            }
+            a[i][k] += row[i] * yi;
+        }
+    }
+    // Ridge epsilon for numerical safety.
+    for (i, row) in a.iter_mut().enumerate() {
+        row[i] += 1e-9;
+        let _ = i;
+    }
+    // Gaussian elimination with partial pivoting.
+    for col in 0..k {
+        let piv = (col..k).max_by(|&r1, &r2| {
+            a[r1][col].abs().partial_cmp(&a[r2][col].abs()).unwrap()
+        })?;
+        if a[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        let div = a[col][col];
+        for v in a[col].iter_mut() {
+            *v /= div;
+        }
+        for r in 0..k {
+            if r != col {
+                let f = a[r][col];
+                if f != 0.0 {
+                    for c2 in 0..=k {
+                        a[r][c2] -= f * a[col][c2];
+                    }
+                }
+            }
+        }
+    }
+    Some(a.iter().map(|row| row[k]).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut s = OnlineStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        assert!((s.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((s.variance() - variance(&xs)).abs() < 1e-9);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 10.0);
+    }
+
+    #[test]
+    fn online_stats_merge() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut a = OnlineStats::new();
+        let mut b = OnlineStats::new();
+        for &x in &xs[..40] {
+            a.push(x);
+        }
+        for &x in &xs[40..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((a.variance() - variance(&xs)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 99.0) - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        assert!(percentile(&[], 50.0).is_nan());
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let xs: Vec<f64> = (0..1000).map(|i| ((i * 37) % 100) as f64).collect();
+        let c = cdf(&xs, 50);
+        for w in c.windows(2) {
+            assert!(w[1].0 >= w[0].0);
+            assert!(w[1].1 > w[0].1);
+        }
+        assert!((c.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let xs = [0.5, 1.5, 2.5, 99.0, -5.0];
+        let h = histogram(&xs, 0.0, 3.0, 3);
+        assert_eq!(h, vec![2, 1, 2]); // -5 clamps low, 99 clamps high
+    }
+
+    #[test]
+    fn smooth_preserves_constant() {
+        let xs = vec![5.0; 20];
+        let s = gaussian_smooth(&xs, 2.0);
+        for v in s {
+            assert!((v - 5.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn smooth_reduces_noise_variance() {
+        let mut r = crate::util::rng::Rng::new(1);
+        let xs: Vec<f64> = (0..500).map(|_| r.normal()).collect();
+        let s = gaussian_smooth(&xs, 3.0);
+        assert!(variance(&s) < variance(&xs) * 0.5);
+    }
+
+    #[test]
+    fn least_squares_recovers_line() {
+        // y = 3 + 2a - 0.5b
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        let mut r = crate::util::rng::Rng::new(2);
+        for _ in 0..200 {
+            let a = r.uniform(0.0, 10.0);
+            let b = r.uniform(0.0, 10.0);
+            rows.push(vec![1.0, a, b]);
+            ys.push(3.0 + 2.0 * a - 0.5 * b);
+        }
+        let c = least_squares(&rows, &ys).unwrap();
+        assert!((c[0] - 3.0).abs() < 1e-6);
+        assert!((c[1] - 2.0).abs() < 1e-6);
+        assert!((c[2] + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn least_squares_degenerate() {
+        assert!(least_squares(&[], &[]).is_none());
+        assert!(least_squares(&[vec![1.0]], &[1.0, 2.0]).is_none());
+        // Singular (duplicate column): the ridge epsilon still yields a
+        // solution, and it must fit the data.
+        let rows = vec![vec![1.0, 1.0], vec![2.0, 2.0]];
+        let b = least_squares(&rows, &[1.0, 2.0]).unwrap();
+        for (row, y) in rows.iter().zip([1.0, 2.0]) {
+            let pred: f64 = row.iter().zip(&b).map(|(a, c)| a * c).sum();
+            assert!((pred - y).abs() < 1e-6);
+        }
+    }
+}

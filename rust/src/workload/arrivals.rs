@@ -1,0 +1,113 @@
+//! Arrival processes: when requests hit the global scheduler.
+//!
+//! The paper sends ShareGPT prompts "following the Poisson distribution
+//! under varying arrival rates" (external QPS); BurstGPT exhibits bursty,
+//! overdispersed arrivals which we model with a Gamma renewal process
+//! (CV > 1).
+
+use crate::util::rng::Rng;
+
+/// An inter-arrival process generating a monotone stream of timestamps.
+pub trait ArrivalProcess {
+    /// Next arrival time strictly after the previous one.
+    fn next_arrival(&mut self, rng: &mut Rng) -> f64;
+    fn name(&self) -> &'static str;
+}
+
+/// Poisson process: exponential inter-arrivals at rate `qps`.
+#[derive(Debug, Clone)]
+pub struct Poisson {
+    qps: f64,
+    t: f64,
+}
+
+impl Poisson {
+    pub fn new(qps: f64) -> Self {
+        assert!(qps > 0.0);
+        Poisson { qps, t: 0.0 }
+    }
+}
+
+impl ArrivalProcess for Poisson {
+    fn next_arrival(&mut self, rng: &mut Rng) -> f64 {
+        self.t += rng.exponential(self.qps);
+        self.t
+    }
+
+    fn name(&self) -> &'static str {
+        "poisson"
+    }
+}
+
+/// Gamma renewal process with squared coefficient of variation `cv2 > 1`
+/// (bursty).  Mean rate stays `qps`: shape k = 1/cv2, scale = cv2/qps.
+#[derive(Debug, Clone)]
+pub struct GammaBursty {
+    shape: f64,
+    scale: f64,
+    t: f64,
+}
+
+impl GammaBursty {
+    pub fn new(qps: f64, cv2: f64) -> Self {
+        assert!(qps > 0.0 && cv2 > 0.0);
+        GammaBursty { shape: 1.0 / cv2, scale: cv2 / qps, t: 0.0 }
+    }
+}
+
+impl ArrivalProcess for GammaBursty {
+    fn next_arrival(&mut self, rng: &mut Rng) -> f64 {
+        self.t += rng.gamma(self.shape, self.scale);
+        self.t
+    }
+
+    fn name(&self) -> &'static str {
+        "gamma-bursty"
+    }
+}
+
+/// Generate `n` arrival timestamps.
+pub fn arrival_times(p: &mut dyn ArrivalProcess, rng: &mut Rng, n: usize) -> Vec<f64> {
+    (0..n).map(|_| p.next_arrival(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_and_monotonicity() {
+        let mut rng = Rng::new(1);
+        let mut p = Poisson::new(20.0);
+        let ts = arrival_times(&mut p, &mut rng, 20_000);
+        for w in ts.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        let rate = ts.len() as f64 / ts.last().unwrap();
+        assert!((rate - 20.0).abs() / 20.0 < 0.05, "rate {rate}");
+    }
+
+    #[test]
+    fn poisson_interarrival_cv_about_one() {
+        let mut rng = Rng::new(2);
+        let mut p = Poisson::new(10.0);
+        let ts = arrival_times(&mut p, &mut rng, 20_000);
+        let gaps: Vec<f64> = ts.windows(2).map(|w| w[1] - w[0]).collect();
+        let m = crate::util::stats::mean(&gaps);
+        let cv2 = crate::util::stats::variance(&gaps) / (m * m);
+        assert!((cv2 - 1.0).abs() < 0.1, "cv2 {cv2}");
+    }
+
+    #[test]
+    fn gamma_bursty_overdispersed() {
+        let mut rng = Rng::new(3);
+        let mut p = GammaBursty::new(10.0, 4.0);
+        let ts = arrival_times(&mut p, &mut rng, 20_000);
+        let rate = ts.len() as f64 / ts.last().unwrap();
+        assert!((rate - 10.0).abs() / 10.0 < 0.08, "rate {rate}");
+        let gaps: Vec<f64> = ts.windows(2).map(|w| w[1] - w[0]).collect();
+        let m = crate::util::stats::mean(&gaps);
+        let cv2 = crate::util::stats::variance(&gaps) / (m * m);
+        assert!(cv2 > 2.5, "cv2 {cv2} should be ~4");
+    }
+}

@@ -1,0 +1,200 @@
+//! ShareGPT-like workload.
+//!
+//! Two sources:
+//!
+//! * [`ShareGptSynth`] — pure-Rust generator of (prompt_tokens,
+//!   response_tokens) pairs with the same category mixture and lognormal
+//!   parameters as `python/compile/corpus.py` (see that file and DESIGN.md
+//!   for the calibration to published ShareGPT statistics).  Used by the
+//!   large scheduling experiments where prompt *text* is irrelevant.
+//! * [`load_corpus`] — reads the build-time corpus JSONL (prompt text +
+//!   lengths) emitted by `make artifacts`; used by Table 1, the tagger and
+//!   the real-serving example so Rust and Python evaluate the *same* data.
+
+use anyhow::{Context, Result};
+
+use crate::core::request::Request;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Category mixture — keep in sync with python/compile/corpus.py.
+/// (name, weight, prompt-token lognormal (mu, sigma), response (mu, sigma))
+/// Prompt lengths here are fitted to the text templates' token counts.
+const CATEGORIES: &[(&str, f64, (f64, f64), (f64, f64))] = &[
+    ("greeting", 8.0, (2.2, 0.25), (2.9957, 0.35)),   // resp ~ 20
+    ("qa", 22.0, (2.6, 0.45), (4.3820, 0.35)),        // resp ~ 80
+    ("explain", 18.0, (2.9, 0.45), (5.9915, 0.30)),   // resp ~ 400
+    ("code", 14.0, (3.0, 0.50), (5.5215, 0.35)),      // resp ~ 250
+    ("summarize", 12.0, (5.8, 0.45), (4.0943, 0.30)), // resp ~ 60, long prompt
+    ("creative", 10.0, (2.5, 0.40), (6.2146, 0.40)),  // resp ~ 500
+    ("translate", 8.0, (5.2, 0.50), (4.4998, 0.30)),  // resp ~ 90, long prompt
+    ("list", 8.0, (2.7, 0.35), (4.7875, 0.30)),       // resp ~ 120
+];
+
+pub const MAX_MODEL_LEN: u32 = 2048;
+pub const MIN_RESPONSE: u32 = 4;
+pub const MIN_PROMPT: u32 = 4;
+
+/// One sampled (category, prompt_tokens, response_tokens) triple.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LengthSample {
+    pub category: &'static str,
+    pub prompt_tokens: u32,
+    pub response_tokens: u32,
+}
+
+/// Pure-Rust ShareGPT-like length generator.
+#[derive(Debug, Clone)]
+pub struct ShareGptSynth {
+    rng: Rng,
+}
+
+impl ShareGptSynth {
+    pub fn new(seed: u64) -> Self {
+        ShareGptSynth { rng: Rng::new(seed) }
+    }
+
+    pub fn sample(&mut self) -> LengthSample {
+        let weights: Vec<f64> = CATEGORIES.iter().map(|c| c.1).collect();
+        let idx = self.rng.weighted_index(&weights);
+        let (name, _, (pmu, psig), (rmu, rsig)) = CATEGORIES[idx];
+        let prompt = (self.rng.lognormal(pmu, psig).round() as u32)
+            .clamp(MIN_PROMPT, MAX_MODEL_LEN / 2);
+        let max_resp = (MAX_MODEL_LEN - prompt).max(MIN_RESPONSE);
+        let resp = (self.rng.lognormal(rmu, rsig).round() as u32)
+            .clamp(MIN_RESPONSE, max_resp);
+        LengthSample { category: name, prompt_tokens: prompt, response_tokens: resp }
+    }
+
+    /// Generate `n` requests with the given arrival times.
+    pub fn requests(&mut self, arrivals: &[f64]) -> Vec<Request> {
+        arrivals
+            .iter()
+            .enumerate()
+            .map(|(i, &t)| {
+                let s = self.sample();
+                let mut r = Request::new(i as u64, t, s.prompt_tokens,
+                                         s.response_tokens);
+                r.category = Some(s.category.to_string());
+                r
+            })
+            .collect()
+    }
+}
+
+/// A corpus record from artifacts/sharegpt_synth.jsonl.
+#[derive(Debug, Clone)]
+pub struct CorpusRecord {
+    pub category: String,
+    pub prompt: String,
+    pub prompt_tokens: u32,
+    pub response_tokens: u32,
+}
+
+/// Load the build-time corpus (written by `python -m compile.aot`).
+pub fn load_corpus(path: &str) -> Result<Vec<CorpusRecord>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading corpus {path} (run `make artifacts`)"))?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .with_context(|| format!("{path}:{}", lineno + 1))?;
+        out.push(CorpusRecord {
+            category: j.field("category")?.as_str()?.to_string(),
+            prompt: j.field("prompt")?.as_str()?.to_string(),
+            prompt_tokens: j.field("prompt_tokens")?.as_usize()? as u32,
+            response_tokens: j.field("response_tokens")?.as_usize()? as u32,
+        });
+    }
+    Ok(out)
+}
+
+/// Turn corpus records into requests with the given arrivals (cycling if
+/// the corpus is shorter than the arrival stream).
+pub fn corpus_requests(records: &[CorpusRecord], arrivals: &[f64]) -> Vec<Request> {
+    arrivals
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| {
+            let rec = &records[i % records.len()];
+            let mut r = Request::new(i as u64, t, rec.prompt_tokens,
+                                     rec.response_tokens);
+            r.category = Some(rec.category.clone());
+            r.prompt = Some(rec.prompt.clone());
+            r
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{mean, percentile};
+
+    #[test]
+    fn marginals_match_calibration() {
+        let mut g = ShareGptSynth::new(1);
+        let samples: Vec<LengthSample> = (0..20_000).map(|_| g.sample()).collect();
+        let mp = mean(&samples.iter().map(|s| s.prompt_tokens as f64).collect::<Vec<_>>());
+        let mr = mean(&samples.iter().map(|s| s.response_tokens as f64).collect::<Vec<_>>());
+        assert!((60.0..220.0).contains(&mp), "mean prompt {mp}");
+        assert!((150.0..360.0).contains(&mr), "mean response {mr}");
+    }
+
+    #[test]
+    fn heavy_tail_and_bounds() {
+        let mut g = ShareGptSynth::new(2);
+        let resp: Vec<f64> = (0..20_000)
+            .map(|_| g.sample().response_tokens as f64)
+            .collect();
+        let p50 = percentile(&resp, 50.0);
+        let p99 = percentile(&resp, 99.0);
+        assert!(p99 > 3.0 * p50, "p50 {p50} p99 {p99}");
+        let mut g = ShareGptSynth::new(3);
+        for _ in 0..20_000 {
+            let s = g.sample();
+            assert!(s.prompt_tokens + s.response_tokens <= MAX_MODEL_LEN);
+            assert!(s.response_tokens >= MIN_RESPONSE);
+        }
+    }
+
+    #[test]
+    fn category_conditional_means_ordered() {
+        let mut g = ShareGptSynth::new(4);
+        let mut sums: std::collections::HashMap<&str, (f64, f64)> =
+            Default::default();
+        for _ in 0..30_000 {
+            let s = g.sample();
+            let e = sums.entry(s.category).or_default();
+            e.0 += s.response_tokens as f64;
+            e.1 += 1.0;
+        }
+        let m = |c: &str| sums[c].0 / sums[c].1;
+        assert!(m("creative") > m("explain"));
+        assert!(m("explain") > m("code"));
+        assert!(m("qa") > m("summarize"));
+        assert!(m("summarize") > m("greeting"));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: Vec<LengthSample> =
+            (0..100).scan(ShareGptSynth::new(9), |g, _| Some(g.sample())).collect();
+        let b: Vec<LengthSample> =
+            (0..100).scan(ShareGptSynth::new(9), |g, _| Some(g.sample())).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn requests_carry_arrivals() {
+        let mut g = ShareGptSynth::new(5);
+        let reqs = g.requests(&[0.5, 1.5, 2.25]);
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(reqs[1].arrival, 1.5);
+        assert_eq!(reqs[2].id, 2);
+        assert!(reqs[0].category.is_some());
+    }
+}

@@ -1,0 +1,66 @@
+//! Tokenization helpers.
+//!
+//! Two layers of "tokenizer" exist in this system:
+//!
+//! * For *simulation* workloads only the token counts matter; we share the
+//!   chars/4 approximation with the Python corpus generator
+//!   (`corpus.prompt_token_len`).
+//! * For the *real PJRT serving* path the tiny transformer has a byte-level
+//!   vocabulary: ids 0 (pad) and 1 (EOS) are special, byte `b` maps to
+//!   `2 + b`.  Vocab 512 leaves headroom above 258 (matches the AOT
+//!   `vocab_size`).
+
+pub const PAD_ID: i32 = 0;
+pub const EOS_ID: i32 = 1;
+pub const BYTE_OFFSET: i32 = 2;
+
+/// chars/4 token-count approximation — MUST match
+/// `python/compile/corpus.py::prompt_token_len`.
+pub fn approx_token_len(text: &str) -> u32 {
+    ((text.len() + 3) / 4).max(4) as u32
+}
+
+/// Encode text for the tiny byte-level model.
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| BYTE_OFFSET + b as i32).collect()
+}
+
+/// Decode model output ids back to text (specials dropped, invalid ids
+/// rendered as '?').
+pub fn decode(ids: &[i32]) -> String {
+    ids.iter()
+        .filter(|&&id| id >= BYTE_OFFSET)
+        .map(|&id| {
+            let b = (id - BYTE_OFFSET) as u32;
+            if b < 256 { b as u8 as char } else { '?' }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_matches_python_formula() {
+        // python: max(4, (len+3)//4)
+        assert_eq!(approx_token_len(""), 4);
+        assert_eq!(approx_token_len("abcd"), 4);
+        assert_eq!(approx_token_len("abcde"), 4);
+        assert_eq!(approx_token_len(&"x".repeat(100)), 25);
+        assert_eq!(approx_token_len(&"x".repeat(101)), 26);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let text = "hello Block!";
+        let ids = encode(text);
+        assert!(ids.iter().all(|&i| (BYTE_OFFSET..BYTE_OFFSET + 256).contains(&i)));
+        assert_eq!(decode(&ids), text);
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        assert_eq!(decode(&[PAD_ID, EOS_ID, BYTE_OFFSET + b'a' as i32]), "a");
+    }
+}

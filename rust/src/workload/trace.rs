@@ -1,0 +1,107 @@
+//! Request-trace IO: save/load request streams as JSONL so experiments can
+//! be replayed exactly (Vidur-style replay traces).
+
+use anyhow::{Context, Result};
+
+use crate::core::request::Request;
+use crate::util::json::{Json, JsonObj};
+
+pub fn request_to_json(r: &Request) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("id", r.id);
+    o.insert("arrival", r.arrival);
+    o.insert("prompt_tokens", r.prompt_tokens as u64);
+    o.insert("response_tokens", r.response_tokens as u64);
+    if let Some(p) = r.predicted_tokens {
+        o.insert("predicted_tokens", p as u64);
+    }
+    if let Some(c) = &r.category {
+        o.insert("category", c.as_str());
+    }
+    if let Some(p) = &r.prompt {
+        o.insert("prompt", p.as_str());
+    }
+    Json::Obj(o)
+}
+
+pub fn request_from_json(j: &Json) -> Result<Request> {
+    let mut r = Request::new(
+        j.field("id")?.as_usize()? as u64,
+        j.field("arrival")?.as_f64()?,
+        j.field("prompt_tokens")?.as_usize()? as u32,
+        j.field("response_tokens")?.as_usize()? as u32,
+    );
+    if let Some(v) = j.opt("predicted_tokens") {
+        r.predicted_tokens = Some(v.as_usize()? as u32);
+    }
+    if let Some(v) = j.opt("category") {
+        r.category = Some(v.as_str()?.to_string());
+    }
+    if let Some(v) = j.opt("prompt") {
+        r.prompt = Some(v.as_str()?.to_string());
+    }
+    Ok(r)
+}
+
+pub fn save_trace(path: &str, requests: &[Request]) -> Result<()> {
+    let mut out = String::new();
+    for r in requests {
+        out.push_str(&request_to_json(r).to_string_compact());
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("writing trace {path}"))
+}
+
+pub fn load_trace(path: &str) -> Result<Vec<Request>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {path}"))?;
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line).with_context(|| format!("{path}:{}", lineno + 1))?;
+        out.push(request_from_json(&j)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut r = Request::new(3, 1.25, 100, 240);
+        r.predicted_tokens = Some(230);
+        r.category = Some("qa".into());
+        r.prompt = Some("what is rust".into());
+        let j = request_to_json(&r);
+        let r2 = request_from_json(&j).unwrap();
+        assert_eq!(r2.id, 3);
+        assert_eq!(r2.arrival, 1.25);
+        assert_eq!(r2.predicted_tokens, Some(230));
+        assert_eq!(r2.prompt.as_deref(), Some("what is rust"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("block_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let path = path.to_str().unwrap();
+        let reqs: Vec<Request> =
+            (0..10).map(|i| Request::new(i, i as f64 * 0.1, 10, 20)).collect();
+        save_trace(path, &reqs).unwrap();
+        let back = load_trace(path).unwrap();
+        assert_eq!(back.len(), 10);
+        assert_eq!(back[9].id, 9);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let j = Json::parse(r#"{"id": 1}"#).unwrap();
+        assert!(request_from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! Property tests over the cluster/scheduler layer: routing totality,
+//! metric sanity, provisioning monotonicity, workload invariants.
+
+use block::cluster::{run_experiment, ClusterSim, SimOptions};
+use block::config::{ClusterConfig, SchedulerKind, WorkloadConfig, WorkloadKind};
+use block::testutil::prop::check;
+use block::workload::generate;
+
+#[test]
+fn prop_every_scheduler_serves_all_requests() {
+    check(11, 12, |rng, case| {
+        let kind = SchedulerKind::ALL[case % SchedulerKind::ALL.len()];
+        let cfg = ClusterConfig {
+            n_instances: rng.randint(1, 6) as usize,
+            scheduler: kind,
+            ..ClusterConfig::default()
+        };
+        let wl = WorkloadConfig {
+            kind: if rng.bernoulli(0.3) {
+                WorkloadKind::BurstGpt
+            } else {
+                WorkloadKind::ShareGpt
+            },
+            qps: rng.uniform(2.0, 25.0),
+            n_requests: rng.randint(20, 150) as usize,
+            seed: rng.next_u64(),
+        };
+        let res = run_experiment(cfg, &wl,
+                                 SimOptions { probes: true, sample_prob: 0.05 })
+            .unwrap();
+        assert_eq!(res.metrics.len(), wl.n_requests);
+        let served: usize = res.instances.iter().map(|i| i.requests_served).sum();
+        assert_eq!(served, wl.n_requests);
+        for m in &res.metrics.records {
+            assert!(m.dispatched >= m.arrival, "{}", kind.name());
+            assert!(m.prefill_start >= m.dispatched - 1e-9);
+            assert!(m.first_token >= m.prefill_start - 1e-9);
+            assert!(m.finish >= m.first_token);
+            assert!(m.sched_overhead >= 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_workload_generation_invariants() {
+    check(22, 60, |rng, _| {
+        let wl = WorkloadConfig {
+            kind: if rng.bernoulli(0.5) {
+                WorkloadKind::ShareGpt
+            } else {
+                WorkloadKind::BurstGpt
+            },
+            qps: rng.uniform(0.5, 100.0),
+            n_requests: rng.randint(1, 400) as usize,
+            seed: rng.next_u64(),
+        };
+        let reqs = generate(&wl).unwrap();
+        assert_eq!(reqs.len(), wl.n_requests);
+        for w in reqs.windows(2) {
+            // Monotone (ties allowed: f64 addition of a tiny gap can be
+            // absorbed at high QPS; the DES breaks ties FIFO).
+            assert!(w[1].arrival >= w[0].arrival, "arrivals monotone");
+        }
+        for r in &reqs {
+            assert!(r.prompt_tokens + r.response_tokens <= 2048);
+            assert!(r.response_tokens >= 1);
+        }
+    });
+}
+
+#[test]
+fn prop_provisioning_never_exceeds_max() {
+    check(33, 10, |rng, _| {
+        let initial = rng.randint(1, 3) as usize;
+        let max = initial + rng.randint(1, 3) as usize;
+        let mut cfg = ClusterConfig {
+            n_instances: initial,
+            scheduler: SchedulerKind::Block,
+            ..ClusterConfig::default()
+        };
+        cfg.provision.enabled = true;
+        cfg.provision.predictive = rng.bernoulli(0.5);
+        cfg.provision.initial_instances = initial;
+        cfg.provision.max_instances = max;
+        cfg.provision.threshold = rng.uniform(5.0, 30.0);
+        cfg.provision.cold_start = rng.uniform(1.0, 20.0);
+        cfg.provision.cooldown = rng.uniform(0.5, 5.0);
+        let wl = WorkloadConfig {
+            kind: WorkloadKind::ShareGpt,
+            qps: rng.uniform(8.0, 20.0),
+            n_requests: 300,
+            seed: rng.next_u64(),
+        };
+        let requests = generate(&wl).unwrap();
+        let res = ClusterSim::new(cfg, SimOptions::default()).run(&requests);
+        assert_eq!(res.metrics.len(), 300);
+        for &(_, size) in &res.size_timeline {
+            assert!(size >= initial && size <= max,
+                    "size {size} outside [{initial}, {max}]");
+        }
+        for w in res.size_timeline.windows(2) {
+            assert!(w[1].1 >= w[0].1, "cluster never shrinks in this design");
+        }
+    });
+}
+
+#[test]
+fn prop_block_dispatch_matches_min_prediction() {
+    check(44, 8, |rng, _| {
+        let cfg = ClusterConfig {
+            n_instances: rng.randint(2, 6) as usize,
+            scheduler: SchedulerKind::Block,
+            ..ClusterConfig::default()
+        };
+        let wl = WorkloadConfig {
+            kind: WorkloadKind::ShareGpt,
+            qps: rng.uniform(5.0, 20.0),
+            n_requests: 120,
+            seed: rng.next_u64(),
+        };
+        let res = run_experiment(cfg, &wl,
+                                 SimOptions { probes: false, sample_prob: 0.3 })
+            .unwrap();
+        for s in &res.sampled {
+            let min = s
+                .decision
+                .all_predictions
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap();
+            assert_eq!(s.decision.instance, min.0,
+                       "block must dispatch to the min-predicted instance");
+        }
+    });
+}

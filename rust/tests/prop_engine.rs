@@ -1,0 +1,180 @@
+//! Property tests over the coordinator substrate invariants (the offline
+//! proptest substitute — see `block::testutil::prop`).
+
+use block::config::{EngineConfig, LocalPolicy};
+use block::core::hw::{A30, LLAMA2_7B};
+use block::core::request::Request;
+use block::engine::block_manager::BlockManager;
+use block::engine::InstanceEngine;
+use block::exec::roofline::RooflineModel;
+use block::testutil::prop::check;
+use block::util::rng::Rng;
+
+fn cost() -> RooflineModel {
+    RooflineModel::from_profiles(&A30, &LLAMA2_7B)
+}
+
+fn random_requests(rng: &mut Rng, n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| {
+            Request::new(
+                i as u64,
+                0.0,
+                rng.randint(4, 1500) as u32,
+                rng.randint(1, 500) as u32,
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn prop_block_manager_conserves_blocks() {
+    check(101, 200, |rng, _| {
+        let total = rng.randint(8, 256) as u32;
+        let mut bm = BlockManager::new(total, 16, 0.01);
+        let mut live: Vec<u64> = Vec::new();
+        for op in 0..200 {
+            match rng.index(4) {
+                0 => {
+                    let id = 1000 + op as u64;
+                    if !bm.has_seq(id) && bm.allocate_seq(id, rng.randint(1, 600) as u32) {
+                        live.push(id);
+                    }
+                }
+                1 => {
+                    if let Some(&id) = live.get(rng.index(live.len().max(1)).min(live.len().saturating_sub(1))) {
+                        bm.grow_to(id, rng.randint(1, 800) as u32);
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let id = live.swap_remove(rng.index(live.len()));
+                        bm.free_seq(id);
+                    }
+                }
+                _ => {
+                    bm.free_seq(rng.randint(0, 3000) as u64); // maybe unknown
+                    live.retain(|&id| bm.has_seq(id));
+                }
+            }
+            assert!(bm.check_conservation(), "conservation violated");
+            assert!(bm.free_blocks() <= bm.total_blocks());
+        }
+    });
+}
+
+#[test]
+fn prop_engine_serves_every_request_exactly_once() {
+    check(202, 30, |rng, _| {
+        let policy = if rng.bernoulli(0.5) {
+            LocalPolicy::SarathiChunked
+        } else {
+            LocalPolicy::VllmPrefillPriority
+        };
+        let cfg = EngineConfig {
+            policy,
+            max_batch_size: rng.randint(2, 48) as u32,
+            chunk_size: [128u32, 256, 512, 2048][rng.index(4)],
+            ..EngineConfig::default()
+        };
+        let blocks = rng.randint(140, 1056) as u32;
+        let mut eng = InstanceEngine::new(cfg, blocks);
+        let n = rng.randint(5, 60) as usize;
+        let reqs = random_requests(rng, n);
+        for r in &reqs {
+            eng.enqueue(r, 0.0);
+        }
+        let c = cost();
+        let mut finished = Vec::new();
+        for _ in 0..2_000_000u64 {
+            match eng.start_step(&c) {
+                Some(_) => {
+                    eng.finish_step();
+                    finished.extend(eng.take_finished());
+                }
+                None => break,
+            }
+        }
+        assert_eq!(finished.len(), n, "every request completes");
+        let mut ids: Vec<u64> = finished.iter().map(|f| f.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "no duplicate completions");
+        // Memory fully returned; timing sane.
+        assert_eq!(eng.free_blocks(), eng.total_blocks());
+        assert!(eng.block_manager().check_conservation());
+        for f in &finished {
+            assert!(f.first_token >= f.prefill_start - 1e-9);
+            assert!(f.finish >= f.first_token);
+        }
+    });
+}
+
+#[test]
+fn prop_sarathi_batches_respect_token_budget() {
+    check(303, 30, |rng, _| {
+        let chunk = [128u32, 256, 512][rng.index(3)];
+        let cfg = EngineConfig {
+            policy: LocalPolicy::SarathiChunked,
+            chunk_size: chunk,
+            ..EngineConfig::default()
+        };
+        let mut eng = InstanceEngine::new(cfg, 1056);
+        let n = rng.randint(3, 40) as usize;
+        for r in random_requests(rng, n) {
+            eng.enqueue(&r, 0.0);
+        }
+        let c = cost();
+        for _ in 0..300 {
+            match eng.start_step(&c) {
+                Some(_) => {
+                    let snap = eng.snapshot();
+                    let (plan, _) = snap.in_flight.as_ref().unwrap();
+                    assert!(plan.total_tokens() <= chunk,
+                            "budget {chunk} exceeded: {}", plan.total_tokens());
+                    eng.finish_step();
+                    eng.take_finished();
+                }
+                None => break,
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_snapshot_roundtrip_equivalence() {
+    check(404, 20, |rng, _| {
+        let mut eng = InstanceEngine::new(EngineConfig::default(), 600);
+        let n = rng.randint(4, 30) as usize;
+        for r in random_requests(rng, n) {
+            eng.enqueue(&r, 0.0);
+        }
+        let c = cost();
+        for _ in 0..rng.randint(0, 20) {
+            if eng.start_step(&c).is_some() {
+                eng.finish_step();
+                eng.take_finished();
+            }
+        }
+        let snap = eng.snapshot();
+        let mut clone = InstanceEngine::from_snapshot(
+            eng.cfg.clone(), eng.total_blocks(), &snap);
+        // Identical futures step by step.
+        for _ in 0..50 {
+            let a = eng.start_step(&c);
+            let b = clone.start_step(&c);
+            match (a, b) {
+                (None, None) => break,
+                (Some(ta), Some(tb)) => {
+                    assert!((ta - tb).abs() < 1e-9, "step times diverge");
+                    eng.finish_step();
+                    clone.finish_step();
+                    let fa = eng.take_finished();
+                    let fb = clone.take_finished();
+                    assert_eq!(fa.len(), fb.len());
+                }
+                _ => panic!("engines diverged in liveness"),
+            }
+        }
+    });
+}

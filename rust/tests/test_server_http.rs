@@ -1,0 +1,55 @@
+//! HTTP server integration: spin the real server on a loopback port and
+//! exercise every endpoint through the client.  Skips without artifacts.
+
+use block::server::http::request;
+use block::server::{serve, ServerState};
+use block::util::json::Json;
+
+#[test]
+fn endpoints_round_trip() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts/ missing — skipping server test");
+        return;
+    }
+    let addr = "127.0.0.1:18471";
+    let server = std::thread::spawn(move || {
+        let runtime = block::runtime::ModelRuntime::load("artifacts").unwrap();
+        serve(ServerState::new(runtime), addr, Some(5)).unwrap();
+    });
+    // Wait for bind.
+    let mut up = false;
+    for _ in 0..100 {
+        if request(addr, "GET", "/health", None).is_ok() {
+            up = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    assert!(up, "server did not come up");
+    // (health consumed request 1)
+
+    let (st, body) = request(addr, "GET", "/status", None).unwrap();
+    assert_eq!(st, 200);
+    let j = Json::parse(&body).unwrap();
+    assert!(j.field("model_params").unwrap().as_usize().unwrap() > 0);
+
+    let (st, body) = request(addr, "POST", "/predict",
+                             Some(r#"{"prompt": "explain rust in detail"}"#))
+        .unwrap();
+    assert_eq!(st, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert!(j.field("predicted_tokens").unwrap().as_f64().unwrap() >= 1.0);
+
+    let (st, body) = request(addr, "POST", "/generate",
+                             Some(r#"{"prompt": "hello", "max_new": 4}"#))
+        .unwrap();
+    assert_eq!(st, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert!(j.field("tokens").unwrap().as_usize().unwrap() <= 4);
+    assert!(j.field("e2e_ms").unwrap().as_f64().unwrap() > 0.0);
+
+    let (st, _) = request(addr, "GET", "/nope", None).unwrap();
+    assert_eq!(st, 404);
+
+    server.join().unwrap();
+}
