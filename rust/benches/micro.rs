@@ -29,7 +29,7 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
         f();
         samples.push(t0.elapsed().as_secs_f64() * 1e6);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(f64::total_cmp);
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let p99 = samples[(samples.len() as f64 * 0.99) as usize - 1];
     println!("{name:<44} {mean:>10.2} us/op  p99 {p99:>10.2} us  ({iters} iters)");
@@ -59,7 +59,7 @@ fn main() {
         let eng = loaded_engine(load);
         let status = eng.snapshot();
         let candidate = Request::new(9999, 0.0, 200, 80);
-        let mut pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
+        let pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
         bench(&format!("predictor.predict (load={load}, cached)"), 200, || {
             std::hint::black_box(
                 pred.predict(&status, &candidate, &cost, &TrueLengths));
@@ -119,12 +119,37 @@ fn main() {
         .collect();
     for kind in [SchedulerKind::RoundRobin, SchedulerKind::LlumnixMinus] {
         let mut s = build_scheduler(kind, 12, &EngineConfig::default(), 1056,
-                                    &OverheadConfig::default(), 7);
+                                    &OverheadConfig::default(), 7, 1);
         let req = Request::new(1, 0.0, 100, 50);
         bench(&format!("scheduler.pick ({})", kind.name()), 2000, || {
-            let view = ClusterView { now: 0.0, statuses: &statuses };
+            let view = ClusterView { now: 0.0, statuses: &statuses,
+                                     in_transit: &[] };
             std::hint::black_box(s.pick(&req, &view, &cost));
         });
+    }
+
+    // Block's per-candidate fan-out: serial vs parallel prediction at
+    // 4/8/16 candidate instances.  Every candidate carries real load so
+    // each forward simulation is deep enough to be worth a thread.
+    for n_cand in [4usize, 8, 16] {
+        let statuses: Vec<_> = (0..n_cand)
+            .map(|i| Some(loaded_engine(16 + 4 * (i % 5)).snapshot()))
+            .collect();
+        let req = Request::new(2, 0.0, 200, 80);
+        for jobs in [1usize, 4, 8] {
+            if jobs > n_cand {
+                continue;
+            }
+            let mut s = build_scheduler(
+                SchedulerKind::Block, n_cand, &EngineConfig::default(), 1056,
+                &OverheadConfig::default(), 7, jobs);
+            bench(&format!(
+                "block fan-out ({n_cand} candidates, jobs={jobs})"), 60, || {
+                let view = ClusterView { now: 0.0, statuses: &statuses,
+                                         in_transit: &[] };
+                std::hint::black_box(s.pick(&req, &view, &cost));
+            });
+        }
     }
 
     // JSON parse of a corpus line.

@@ -7,13 +7,14 @@
 
 use std::time::Instant;
 
-use block::experiments::{run, ExpContext, Scale};
+use block::experiments::{default_jobs, run, ExpContext, Scale};
 
 fn main() {
     let ctx = ExpContext {
         scale: Scale::Quick,
         out_dir: "results/bench".into(),
         seed: 7,
+        jobs: default_jobs(),
     };
     let mut failures = 0;
     for name in ["tab1", "fig5", "fig6", "fig7", "fig8", "tab2"] {

@@ -97,6 +97,12 @@ pub struct ClusterSim {
     scheduler: Box<dyn GlobalScheduler>,
     provisioner: AutoProvisioner,
     in_flight_meta: HashMap<RequestId, DispatchInfo>,
+    /// Per-instance requests dispatched but not yet enqueued (their
+    /// `Dispatch` event is still in the queue).  Engine snapshots cannot
+    /// see these, so the scheduler view carries them explicitly —
+    /// without this, simultaneous arrivals all observe the same idle
+    /// instance and herd onto it.
+    in_transit: Vec<Vec<Request>>,
     served_by: Vec<usize>,
     rng: Rng,
 }
@@ -119,7 +125,8 @@ impl ClusterSim {
             .collect();
         let cost = RooflineModel::from_profiles(&cfg.gpu, &cfg.model);
         let scheduler = build_scheduler(cfg.scheduler, total, &cfg.engine,
-                                        blocks, &cfg.overhead, cfg.seed ^ 0x5C);
+                                        blocks, &cfg.overhead, cfg.seed ^ 0x5C,
+                                        cfg.jobs);
         let provisioner = if cfg.provision.enabled {
             AutoProvisioner::new(cfg.provision.clone(), total)
         } else {
@@ -133,6 +140,7 @@ impl ClusterSim {
             scheduler,
             provisioner,
             in_flight_meta: HashMap::new(),
+            in_transit: vec![Vec::new(); total],
             served_by: vec![0; total],
             rng,
         }
@@ -177,7 +185,11 @@ impl ClusterSim {
                 EventKind::Arrival(idx) => {
                     let req = &requests[idx];
                     let statuses = self.statuses();
-                    let view = ClusterView { now, statuses: &statuses };
+                    let view = ClusterView {
+                        now,
+                        statuses: &statuses,
+                        in_transit: &self.in_transit,
+                    };
                     let decision = self.scheduler.pick(req, &view, &self.cost);
 
                     if self.opts.probes {
@@ -212,16 +224,26 @@ impl ClusterSim {
                     }
 
                     // Preemptive provisioning watches predicted latency.
+                    // A non-finite prediction (the Predictor's pessimistic
+                    // MAX_SIM_STEPS bail-out) carries no signal — feeding
+                    // INF downstream would trigger provisioning on
+                    // garbage and poison INF−INF metric arithmetic.
                     if let Some(pred) = decision.predicted_e2e {
-                        if let Some(ready) =
-                            self.provisioner.observe_predicted(now, pred)
-                        {
-                            queue.push(Event {
-                                time: ready,
-                                kind: EventKind::InstanceReady,
-                            });
+                        if pred.is_finite() {
+                            if let Some(ready) =
+                                self.provisioner.observe_predicted(now, pred)
+                            {
+                                queue.push(Event {
+                                    time: ready,
+                                    kind: EventKind::InstanceReady,
+                                });
+                            }
                         }
                     }
+
+                    // The request is now in transit to its instance until
+                    // the Dispatch event lands.
+                    self.in_transit[decision.instance].push(req.clone());
 
                     self.in_flight_meta.insert(req.id, DispatchInfo {
                         arrival: req.arrival,
@@ -239,6 +261,7 @@ impl ClusterSim {
                 }
                 EventKind::Dispatch(idx, instance) => {
                     let req = &requests[idx];
+                    self.in_transit[instance].retain(|r| r.id != req.id);
                     self.engines[instance].enqueue(req, now);
                     self.kick_engine(instance, &mut queue);
                 }
@@ -381,6 +404,57 @@ mod tests {
         assert_eq!(sa.n, sb.n);
         assert!((sa.mean_e2e - sb.mean_e2e).abs() < 1e-12);
         assert!((sa.p99_ttft - sb.p99_ttft).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_fanout_bit_identical_summaries() {
+        // The acceptance bar for the parallel prediction layer: any
+        // `jobs` setting must reproduce the serial run byte for byte.
+        let run = |jobs: usize| {
+            let mut cfg = small_cfg(SchedulerKind::Block);
+            cfg.jobs = jobs;
+            run_experiment(cfg, &small_workload(9.0, 250),
+                           SimOptions::default())
+                .unwrap()
+                .metrics
+                .summary()
+        };
+        let serial = run(1);
+        for jobs in [2, 4, 8] {
+            assert_eq!(run(jobs), serial, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn simultaneous_arrivals_do_not_herd() {
+        // Regression for in-transit dispatch blindness: two requests
+        // arriving at the same instant on an idle 2-instance cluster.
+        // The first decision's Dispatch event is still in flight when
+        // the second is made, so without in-transit tracking both see
+        // two idle instances and pile onto the same one.
+        for kind in [SchedulerKind::Block, SchedulerKind::BlockStar,
+                     SchedulerKind::LlumnixMinus, SchedulerKind::InfaasPp] {
+            let cfg = ClusterConfig {
+                n_instances: 2,
+                scheduler: kind,
+                ..ClusterConfig::default()
+            };
+            let mut requests = vec![
+                Request::new(1, 0.0, 300, 80),
+                Request::new(2, 0.0, 300, 80),
+            ];
+            if kind.uses_estimates() {
+                for r in &mut requests {
+                    r.predicted_tokens = Some(r.response_tokens);
+                }
+            }
+            let res = ClusterSim::new(cfg, SimOptions::default())
+                .run(&requests);
+            let served: Vec<usize> =
+                res.instances.iter().map(|s| s.requests_served).collect();
+            assert_eq!(served, vec![1, 1],
+                       "{} herded simultaneous arrivals", kind.name());
+        }
     }
 
     #[test]

@@ -205,6 +205,11 @@ pub struct ClusterConfig {
     /// Predictor replicas per instance (paper: 16) — bounds parallel
     /// prediction throughput in the serving-mode coordinator.
     pub predictor_replicas: usize,
+    /// Worker threads for Block's per-candidate prediction fan-out
+    /// (`--jobs`).  1 = serial; any value produces bit-identical
+    /// scheduling decisions — the argmin is ordered by
+    /// (predicted e2e, instance index).
+    pub jobs: usize,
     /// Latency-model noise applied by the *engine* execution (the gap the
     /// predictor cannot see); 0 disables.
     pub exec_noise: f64,
@@ -222,6 +227,7 @@ impl Default for ClusterConfig {
             overhead: OverheadConfig::default(),
             provision: ProvisionConfig::default(),
             predictor_replicas: 16,
+            jobs: 1,
             exec_noise: 0.06,
             seed: 42,
         }
@@ -264,6 +270,9 @@ impl ClusterConfig {
         {
             bail!("max_instances < initial_instances");
         }
+        if self.jobs == 0 {
+            bail!("jobs must be > 0 (1 = serial fan-out)");
+        }
         Ok(())
     }
 
@@ -301,6 +310,7 @@ impl ClusterConfig {
         p.insert("cooldown", self.provision.cooldown);
         o.insert("provision", p);
         o.insert("predictor_replicas", self.predictor_replicas);
+        o.insert("jobs", self.jobs);
         o.insert("exec_noise", self.exec_noise);
         o.insert("seed", self.seed);
         Json::Obj(o)
@@ -384,6 +394,9 @@ impl ClusterConfig {
         if let Some(v) = j.opt("predictor_replicas") {
             c.predictor_replicas = v.as_usize()?;
         }
+        if let Some(v) = j.opt("jobs") {
+            c.jobs = v.as_usize()?;
+        }
         if let Some(v) = j.opt("exec_noise") {
             c.exec_noise = v.as_f64()?;
         }
@@ -454,12 +467,14 @@ mod tests {
         c.engine.max_batch_size = 24;
         c.provision.enabled = true;
         c.provision.predictive = false;
+        c.jobs = 4;
         let j = c.to_json();
         let c2 = ClusterConfig::from_json(&j).unwrap();
         assert_eq!(c2.scheduler, SchedulerKind::LlumnixMinus);
         assert_eq!(c2.engine.max_batch_size, 24);
         assert!(c2.provision.enabled && !c2.provision.predictive);
         assert_eq!(c2.n_instances, c.n_instances);
+        assert_eq!(c2.jobs, 4);
     }
 
     #[test]
@@ -476,6 +491,10 @@ mod tests {
         c.provision.enabled = true;
         c.provision.initial_instances = 12;
         c.provision.max_instances = 6;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.jobs = 0;
         assert!(c.validate().is_err());
     }
 

@@ -18,10 +18,12 @@ use crate::core::batch::BatchPlan;
 
 /// Seconds to execute one engine step.
 ///
-/// Deliberately not `Send + Sync`: single-threaded callers (the DES, the
-/// Predictor's memo cache) use interior mutability; concurrent callers
-/// wrap in `Arc<dyn BatchCost + Send + Sync>` where needed.
-pub trait BatchCost {
+/// `Send + Sync` so one cost model can serve many predictor workers at
+/// once (Block's per-candidate fan-out runs on scoped threads, and the
+/// experiment harness runs whole sweep points concurrently).  Stateful
+/// implementations use sharded/atomic interior mutability — see
+/// `predictor::cache::LatencyCache` for the lock-striped memo cache.
+pub trait BatchCost: Send + Sync {
     fn batch_time(&self, plan: &BatchPlan) -> f64;
 }
 

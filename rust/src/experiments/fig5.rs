@@ -27,15 +27,17 @@ use crate::util::json::{Json, JsonObj};
 use crate::util::rng::Rng;
 
 /// Multiplicative-noise wrapper: the "actual execution" counterfactual.
+/// (`Mutex` rather than `RefCell` because `BatchCost` is `Send + Sync`;
+/// this wrapper is only ever driven by one simulation at a time.)
 struct NoisyCost<'a> {
     inner: &'a RooflineModel,
-    rng: std::cell::RefCell<Rng>,
+    rng: std::sync::Mutex<Rng>,
     sigma: f64,
 }
 
 impl BatchCost for NoisyCost<'_> {
     fn batch_time(&self, plan: &BatchPlan) -> f64 {
-        let z = self.rng.borrow_mut().normal();
+        let z = self.rng.lock().unwrap().normal();
         self.inner.batch_time(plan) * (1.0 + self.sigma * z).max(0.2)
     }
 }
@@ -75,7 +77,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
                              &sharegpt_workload(probe_qps, n, ctx.seed),
                              SimOptions { probes: false, sample_prob: 0.02 })?;
     let cost = RooflineModel::from_profiles(&cfg.gpu, &cfg.model);
-    let mut predictor = Predictor::new(cfg.engine.clone(), cfg.kv_blocks());
+    let predictor = Predictor::new(cfg.engine.clone(), cfg.kv_blocks());
     let mut rank_hist = vec![0usize; cfg.n_instances];
     let mut scatter = Vec::new();
     for (si, s) in res.sampled.iter().enumerate() {
@@ -88,18 +90,23 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         // Counterfactual "actual" with execution noise.
         let noisy = NoisyCost {
             inner: &cost,
-            rng: std::cell::RefCell::new(Rng::new(ctx.seed ^ (si as u64) << 3)),
+            rng: std::sync::Mutex::new(Rng::new(ctx.seed ^ (si as u64) << 3)),
             sigma: cfg.exec_noise,
         };
+        // Cache-bypassing predict: the memo cache is keyed only by batch
+        // plan, so the clean predictions above would otherwise be
+        // replayed verbatim and the "actual" execution would equal the
+        // prediction exactly (rank 1 everywhere, by construction).
         let actuals: Vec<(usize, f64)> = s.statuses.iter()
             .map(|(i, st)| {
-                (*i, predictor.predict(st, &s.request, &noisy, &TrueLengths).e2e)
+                (*i, predictor.predict_uncached(st, &s.request, &noisy,
+                                                &TrueLengths).e2e)
             })
             .collect();
         let best_pred = preds.iter()
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap()).unwrap().0;
+            .min_by(|a, b| a.1.total_cmp(&b.1)).unwrap().0;
         let mut order: Vec<usize> = (0..actuals.len()).collect();
-        order.sort_by(|&a, &b| actuals[a].1.partial_cmp(&actuals[b].1).unwrap());
+        order.sort_by(|&a, &b| actuals[a].1.total_cmp(&actuals[b].1));
         let rank = order.iter()
             .position(|&k| actuals[k].0 == best_pred).unwrap();
         let idx = rank.min(rank_hist.len() - 1);

@@ -1,57 +1,86 @@
 //! Figure 6 (+ Figure 9 CDFs) — request metrics under varying QPS for all
 //! seven schedulers, plus SLO capacity (max QPS with TTFT P99 < 3 s).
+//!
+//! Every (scheduler × QPS) point is an independent simulation, so the
+//! sweep fans out over `ctx.jobs` workers; the capacity searches (one
+//! bisection per scheduler) run concurrently the same way.  Each point
+//! derives its inputs only from `ctx`, so results are identical for any
+//! job count.
 
 use anyhow::Result;
 
 use crate::cluster::{run_experiment, SimOptions};
 use crate::config::SchedulerKind;
-use crate::experiments::{fig6_qps_points, paper_cluster, sharegpt_workload,
-                         ExpContext, Scale};
+use crate::experiments::{fig6_qps_points, paper_cluster, parallel_map,
+                         sharegpt_workload, ExpContext, Scale};
 use crate::metrics::capacity::{search_capacity, DEFAULT_SLO_TTFT_P99};
-use crate::metrics::render_table;
+use crate::metrics::{render_table, RunSummary};
 use crate::util::json::{Json, JsonObj};
+
+struct Point {
+    qps: f64,
+    kind: SchedulerKind,
+    summary: RunSummary,
+    cdf_ttft: Vec<(f64, f64)>,
+    cdf_e2e: Vec<(f64, f64)>,
+}
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
     let qps_points = fig6_qps_points(ctx.scale);
     let schedulers = SchedulerKind::ALL;
 
+    let mut grid = Vec::new();
+    for &qps in &qps_points {
+        for kind in schedulers {
+            grid.push((qps, kind));
+        }
+    }
+    let points = parallel_map(ctx.jobs, &grid, |&(qps, kind)| -> Result<Point> {
+        let n = ctx.scale.requests_for(qps);
+        let res = run_experiment(
+            paper_cluster(kind),
+            &sharegpt_workload(qps, n, ctx.seed),
+            SimOptions { probes: false, sample_prob: 0.0 },
+        )?;
+        Ok(Point {
+            qps,
+            kind,
+            summary: res.metrics.summary(),
+            cdf_ttft: res.metrics.cdf_ttft(40),
+            cdf_e2e: res.metrics.cdf_e2e(40),
+        })
+    });
+
     let mut out = JsonObj::new();
     let mut rows = Vec::new();
-    for &qps in &qps_points {
-        let n = ctx.scale.requests_for(qps);
-        for kind in schedulers {
-            let res = run_experiment(
-                paper_cluster(kind),
-                &sharegpt_workload(qps, n, ctx.seed),
-                SimOptions { probes: false, sample_prob: 0.0 },
-            )?;
-            let s = res.metrics.summary();
-            rows.push(vec![
-                format!("{qps:.0}"),
-                kind.name().to_string(),
-                format!("{:.3}", s.mean_ttft),
-                format!("{:.3}", s.p99_ttft),
-                format!("{:.2}", s.mean_e2e),
-                format!("{:.2}", s.p99_e2e),
-                format!("{:.1}", s.mean_overhead * 1e3),
-                format!("{:.2}", s.throughput),
-            ]);
-            let mut j = s.to_json();
-            if let Json::Obj(o) = &mut j {
-                o.insert("qps", qps);
-                o.insert("scheduler", kind.name());
-                // Figure 9: CDFs at this point.
-                o.insert("cdf_ttft",
-                         Json::Arr(res.metrics.cdf_ttft(40).iter()
-                             .map(|&(v, p)| Json::Arr(vec![v.into(), p.into()]))
-                             .collect()));
-                o.insert("cdf_e2e",
-                         Json::Arr(res.metrics.cdf_e2e(40).iter()
-                             .map(|&(v, p)| Json::Arr(vec![v.into(), p.into()]))
-                             .collect()));
-            }
-            out.insert(format!("{}@{qps}", kind.name()), j);
+    for point in points {
+        let p = point?;
+        let s = &p.summary;
+        rows.push(vec![
+            format!("{:.0}", p.qps),
+            p.kind.name().to_string(),
+            format!("{:.3}", s.mean_ttft),
+            format!("{:.3}", s.p99_ttft),
+            format!("{:.2}", s.mean_e2e),
+            format!("{:.2}", s.p99_e2e),
+            format!("{:.1}", s.mean_overhead * 1e3),
+            format!("{:.2}", s.throughput),
+        ]);
+        let mut j = s.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("qps", p.qps);
+            o.insert("scheduler", p.kind.name());
+            // Figure 9: CDFs at this point.
+            o.insert("cdf_ttft",
+                     Json::Arr(p.cdf_ttft.iter()
+                         .map(|&(v, pr)| Json::Arr(vec![v.into(), pr.into()]))
+                         .collect()));
+            o.insert("cdf_e2e",
+                     Json::Arr(p.cdf_e2e.iter()
+                         .map(|&(v, pr)| Json::Arr(vec![v.into(), pr.into()]))
+                         .collect()));
         }
+        out.insert(format!("{}@{}", p.kind.name(), p.qps), j);
     }
     println!("Figure 6 — request metrics under different QPS \
               ({}s of load per point)", ctx.scale.duration());
@@ -65,11 +94,10 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         Scale::Quick => (30.0, 110.0, 1.0),
         Scale::Full => (30.0, 110.0, 0.1),
     };
-    let mut cap_rows = Vec::new();
-    let mut caps = JsonObj::new();
-    for kind in [SchedulerKind::LlumnixMinus, SchedulerKind::Block,
-                 SchedulerKind::BlockStar] {
-        let result = search_capacity(
+    let cap_kinds = [SchedulerKind::LlumnixMinus, SchedulerKind::Block,
+                     SchedulerKind::BlockStar];
+    let capacities = parallel_map(ctx.jobs, &cap_kinds, |&kind| {
+        search_capacity(
             |qps| {
                 let cap_n = ctx.scale.requests_for(qps);
                 run_experiment(paper_cluster(kind),
@@ -82,7 +110,11 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             lo,
             hi,
             precision,
-        );
+        )
+    });
+    let mut cap_rows = Vec::new();
+    let mut caps = JsonObj::new();
+    for (kind, result) in cap_kinds.iter().zip(&capacities) {
         cap_rows.push(vec![kind.name().to_string(),
                            format!("{:.1}", result.capacity)]);
         caps.insert(kind.name(), result.capacity);

@@ -8,9 +8,10 @@
 
 use anyhow::Result;
 
-use crate::cluster::{ClusterSim, SimOptions};
+use crate::cluster::{ClusterSim, SimOptions, SimResult};
 use crate::config::SchedulerKind;
-use crate::experiments::{paper_cluster, sharegpt_workload, ExpContext};
+use crate::experiments::{parallel_map, paper_cluster, sharegpt_workload,
+                         ExpContext};
 use crate::metrics::render_table;
 use crate::util::json::{Json, JsonObj};
 use crate::util::stats::{mean, percentile, variance};
@@ -45,9 +46,9 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
                   initial: 10 },
     ];
 
-    let mut out = JsonObj::new();
-    let mut rows = Vec::new();
-    for v in &variants {
+    // The three provisioning strategies are independent runs over the
+    // same workload — fan them out.
+    let results = parallel_map(ctx.jobs, &variants, |v| -> Result<SimResult> {
         let mut cfg = paper_cluster(SchedulerKind::Block);
         cfg.n_instances = v.initial;
         cfg.provision.enabled = v.enabled;
@@ -56,9 +57,14 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         cfg.provision.initial_instances = v.initial;
         cfg.provision.max_instances = 10;
         let requests = generate(&sharegpt_workload(OVERLOAD_QPS, n, ctx.seed))?;
-        let res = ClusterSim::new(cfg, SimOptions { probes: true,
-                                                    sample_prob: 0.0 })
-            .run(&requests);
+        Ok(ClusterSim::new(cfg, SimOptions { probes: true, sample_prob: 0.0 })
+            .run(&requests))
+    });
+
+    let mut out = JsonObj::new();
+    let mut rows = Vec::new();
+    for (v, res) in variants.iter().zip(results) {
+        let res = res?;
         let e2e = res.metrics.e2es();
         let over: usize = e2e.iter().filter(|&&x| x > threshold).count();
         let final_size = res.size_timeline.last().unwrap().1;
@@ -95,7 +101,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         // Latency-over-time for the timeline plot.
         let mut lat: Vec<(f64, f64)> = res.metrics.records.iter()
             .map(|m| (m.finish, m.e2e())).collect();
-        lat.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        lat.sort_by(|a, b| a.0.total_cmp(&b.0));
         j.insert("latency_timeline",
                  Json::Arr(lat.iter().step_by((lat.len() / 200).max(1))
                            .map(|&(t, l)| Json::Arr(vec![t.into(), l.into()]))

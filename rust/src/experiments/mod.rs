@@ -5,6 +5,15 @@
 //! QPS points and request counts are scaled by `Scale`: the paper's
 //! 12-A30 testbed sweeps QPS 20-36 over 10k requests; `Scale::Quick`
 //! shrinks counts for CI while preserving every qualitative shape.
+//! (Our simulated cluster saturates near ~60 QPS rather than the paper's
+//! 20-36 — see EXPERIMENTS.md §Calibration for the accounting.)
+//!
+//! Sweeps are embarrassingly parallel: every (scheduler × QPS) point is
+//! an independent simulation with its own seed, so fig6/fig8/tab2 fan
+//! points out over [`parallel_map`] with `ExpContext::jobs` workers
+//! (`--jobs N` on the CLI).  Results are slotted back by input index and
+//! each point's seed depends only on `ctx.seed`, so output is identical
+//! for any job count — parallelism changes wall-clock, never numbers.
 
 pub mod fig5;
 pub mod fig6;
@@ -66,13 +75,30 @@ pub struct ExpContext {
     pub scale: Scale,
     pub out_dir: String,
     pub seed: u64,
+    /// Worker threads for sweep points (`--jobs`; default: all cores).
+    pub jobs: usize,
 }
 
 impl Default for ExpContext {
     fn default() -> Self {
-        ExpContext { scale: Scale::Quick, out_dir: "results".into(), seed: 7 }
+        ExpContext {
+            scale: Scale::Quick,
+            out_dir: "results".into(),
+            seed: 7,
+            jobs: default_jobs(),
+        }
     }
 }
+
+/// Default sweep parallelism: every core (sweep points are independent
+/// single-threaded simulations).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get())
+}
+
+/// Ordered scoped-thread fan-out (shared with the Block scheduler's
+/// prediction fan-out; implemented in [`crate::util::parallel`]).
+pub use crate::util::parallel::parallel_map;
 
 impl ExpContext {
     pub fn write_json(&self, name: &str, value: &Json) -> Result<()> {

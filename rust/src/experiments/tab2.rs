@@ -9,10 +9,10 @@
 
 use anyhow::Result;
 
-use crate::cluster::{run_experiment, SimOptions};
+use crate::cluster::SimOptions;
 use crate::config::{ClusterConfig, SchedulerKind, WorkloadConfig, WorkloadKind};
 use crate::core::hw;
-use crate::experiments::{paper_cluster, ExpContext, Scale};
+use crate::experiments::{parallel_map, paper_cluster, ExpContext, Scale};
 use crate::metrics::capacity::{search_capacity, DEFAULT_SLO_TTFT_P99};
 use crate::metrics::render_table;
 use crate::util::json::{Json, JsonObj};
@@ -97,28 +97,40 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
     println!("Table 2 — scheduler capacities with setting variants \
               ({}s of load per eval, TTFT P99 < {DEFAULT_SLO_TTFT_P99}s SLO)",
              ctx.scale.duration());
+    // Every (variant × scheduler) capacity search is independent: 15
+    // bisections fan out over ctx.jobs workers.
+    let kinds = [SchedulerKind::Block, SchedulerKind::BlockStar,
+                 SchedulerKind::LlumnixMinus];
+    let mut grid = Vec::new();
     for v in VARIANTS {
-        let mut caps = Vec::new();
+        for kind in kinds {
+            grid.push((v, kind));
+        }
+    }
+    let searched = parallel_map(ctx.jobs, &grid, |&(v, kind)| {
+        if kind == SchedulerKind::BlockStar && !v.block_star {
+            return None;
+        }
+        let r = search_capacity(
+            |qps| {
+                let wl = WorkloadConfig {
+                    kind: v.workload.clone(),
+                    qps,
+                    n_requests: ctx.scale.requests_for(qps),
+                    seed: ctx.seed,
+                };
+                measure((v.make_cfg)(kind), &wl, v.response_scale)
+            },
+            DEFAULT_SLO_TTFT_P99, 10.0, v.hi, precision);
+        Some(r.capacity)
+    });
+    for (vi, v) in VARIANTS.iter().enumerate() {
         let mut j = JsonObj::new();
-        for kind in [SchedulerKind::Block, SchedulerKind::BlockStar,
-                     SchedulerKind::LlumnixMinus] {
-            if kind == SchedulerKind::BlockStar && !v.block_star {
-                caps.push(None);
-                continue;
+        let caps = &searched[vi * kinds.len()..(vi + 1) * kinds.len()];
+        for (kind, cap) in kinds.iter().zip(caps) {
+            if let Some(c) = cap {
+                j.insert(kind.name(), *c);
             }
-            let r = search_capacity(
-                |qps| {
-                    let wl = WorkloadConfig {
-                        kind: v.workload.clone(),
-                        qps,
-                        n_requests: ctx.scale.requests_for(qps),
-                        seed: ctx.seed,
-                    };
-                    measure((v.make_cfg)(kind), &wl, v.response_scale)
-                },
-                DEFAULT_SLO_TTFT_P99, 10.0, v.hi, precision);
-            j.insert(kind.name(), r.capacity);
-            caps.push(Some(r.capacity));
         }
         let block = caps[0].unwrap_or(0.0);
         let star = caps[1];

@@ -3,10 +3,13 @@
 //! Subcommands:
 //!
 //! * `block experiment <tab1|fig5|fig6|fig7|fig8|tab2|all> [--scale quick|full]
-//!    [--out DIR] [--seed N]` — regenerate a paper table/figure.
+//!    [--out DIR] [--seed N] [--jobs N]` — regenerate a paper
+//!    table/figure; `--jobs` bounds the sweep-point worker threads
+//!    (default: all cores; results are identical for any value).
 //! * `block simulate [--scheduler S] [--qps Q] [--requests N]
-//!    [--instances K] [--workload sharegpt|burstgpt] [--config FILE]` —
-//!    one cluster simulation, summary to stdout.
+//!    [--instances K] [--workload sharegpt|burstgpt] [--config FILE]
+//!    [--jobs N]` — one cluster simulation, summary to stdout; `--jobs`
+//!    parallelizes Block's per-candidate prediction fan-out.
 //! * `block serve [--addr HOST:PORT] [--artifacts DIR]` — HTTP serving of
 //!    the real PJRT model (endpoints: /generate /predict /status /health).
 //! * `block tag --prompt "..."` — run the length tagger on one prompt.
@@ -69,9 +72,9 @@ fn usage() -> ! {
         "usage: block <command>\n\
          \n\
          commands:\n\
-         \x20 experiment <tab1|fig5|fig6|fig7|fig8|tab2|all> [--scale quick|full] [--out DIR] [--seed N]\n\
+         \x20 experiment <tab1|fig5|fig6|fig7|fig8|tab2|all> [--scale quick|full] [--out DIR] [--seed N] [--jobs N]\n\
          \x20 simulate [--scheduler S] [--qps Q] [--requests N] [--instances K]\n\
-         \x20          [--workload sharegpt|burstgpt] [--config FILE] [--seed N]\n\
+         \x20          [--workload sharegpt|burstgpt] [--config FILE] [--seed N] [--jobs N]\n\
          \x20 serve    [--addr HOST:PORT] [--artifacts DIR] [--max-requests N]\n\
          \x20 tag      --prompt TEXT [--artifacts DIR]\n\
          \x20 workload --out FILE [--qps Q] [--requests N] [--seed N]"
@@ -90,6 +93,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         scale,
         out_dir: args.flag("out").unwrap_or("results").to_string(),
         seed: args.flag_parse("seed", 7u64)?,
+        jobs: args.flag_parse("jobs", experiments::default_jobs())?.max(1),
     };
     experiments::run(name, &ctx)
 }
@@ -103,6 +107,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         cfg.scheduler = SchedulerKind::parse(s)?;
     }
     cfg.n_instances = args.flag_parse("instances", cfg.n_instances)?;
+    cfg.jobs = args.flag_parse("jobs", cfg.jobs)?.max(1);
     let workload = WorkloadConfig {
         kind: match args.flag("workload").unwrap_or("sharegpt") {
             "sharegpt" => WorkloadKind::ShareGpt,

@@ -4,20 +4,55 @@
 //!
 //! Keyed on the quantized feature tuple of the plan (a stricter key than
 //! the paper's (batch size, token count) — strictly fewer false hits).
+//!
+//! The cache is *concurrent*: the paper runs 16 predictor replicas per
+//! host against one shared memo table, and Block's dispatch fan-out
+//! simulates every candidate instance in parallel.  Lock striping keeps
+//! those workers from serializing on a single mutex — each `cache_key`
+//! hashes to one of [`N_SHARDS`] independently locked maps — and the
+//! hit/miss counters are atomics, so all methods take `&self` and the
+//! type is `Send + Sync`.
 
-use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::core::batch::BatchPlan;
 use crate::exec::BatchCost;
 
 type Key = (u32, u64, u32, u64);
 
-#[derive(Default)]
+/// Shard count: enough stripes that 16 predictor workers rarely collide,
+/// small enough that `len()`/`clear()` stay cheap.
+const N_SHARDS: usize = 16;
+
 pub struct LatencyCache {
-    map: RefCell<HashMap<Key, f64>>,
-    hits: Cell<u64>,
-    misses: Cell<u64>,
+    shards: Vec<Mutex<HashMap<Key, f64>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Default for LatencyCache {
+    fn default() -> Self {
+        LatencyCache {
+            shards: (0..N_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+}
+
+/// SplitMix64-style finalizer over the packed key fields — cheap and
+/// well-mixed, so shard choice is balanced even for near-identical plans.
+fn shard_of(key: &Key) -> usize {
+    let mut z = key
+        .0 as u64
+        ^ key.1.rotate_left(16)
+        ^ ((key.2 as u64) << 32)
+        ^ key.3.rotate_left(40);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    (z >> 32) as usize % N_SHARDS
 }
 
 impl LatencyCache {
@@ -26,23 +61,25 @@ impl LatencyCache {
     }
 
     pub fn hits(&self) -> u64 {
-        self.hits.get()
+        self.hits.load(Ordering::Relaxed)
     }
 
     pub fn misses(&self) -> u64 {
-        self.misses.get()
+        self.misses.load(Ordering::Relaxed)
     }
 
     pub fn len(&self) -> usize {
-        self.map.borrow().len()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.borrow().is_empty()
+        self.shards.iter().all(|s| s.lock().unwrap().is_empty())
     }
 
     pub fn clear(&self) {
-        self.map.borrow_mut().clear();
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
     }
 
     /// Wrap a cost model so lookups go through this cache.
@@ -59,13 +96,17 @@ pub struct CachedCost<'a> {
 impl BatchCost for CachedCost<'_> {
     fn batch_time(&self, plan: &BatchPlan) -> f64 {
         let key = plan.cache_key();
-        if let Some(&t) = self.cache.map.borrow().get(&key) {
-            self.cache.hits.set(self.cache.hits.get() + 1);
+        let shard = &self.cache.shards[shard_of(&key)];
+        if let Some(&t) = shard.lock().unwrap().get(&key) {
+            self.cache.hits.fetch_add(1, Ordering::Relaxed);
             return t;
         }
+        // Compute outside the lock: a racing worker may duplicate the
+        // evaluation, but the inner model is deterministic per plan, so
+        // both insert the same value — determinism is unaffected.
         let t = self.inner.batch_time(plan);
-        self.cache.map.borrow_mut().insert(key, t);
-        self.cache.misses.set(self.cache.misses.get() + 1);
+        shard.lock().unwrap().insert(key, t);
+        self.cache.misses.fetch_add(1, Ordering::Relaxed);
         t
     }
 }
@@ -74,12 +115,13 @@ impl BatchCost for CachedCost<'_> {
 mod tests {
     use super::*;
     use crate::core::batch::{DecodeSeq, PrefillChunk};
+    use std::sync::atomic::AtomicU64;
 
-    struct CountingCost(Cell<u64>);
+    struct CountingCost(AtomicU64);
 
     impl BatchCost for CountingCost {
         fn batch_time(&self, plan: &BatchPlan) -> f64 {
-            self.0.set(self.0.get() + 1);
+            self.0.fetch_add(1, Ordering::Relaxed);
             plan.total_tokens() as f64 * 1e-3
         }
     }
@@ -93,36 +135,77 @@ mod tests {
 
     #[test]
     fn second_lookup_hits() {
-        let counting = CountingCost(Cell::new(0));
+        let counting = CountingCost(AtomicU64::new(0));
         let cache = LatencyCache::new();
         let c = cache.wrap(&counting);
         let a = c.batch_time(&plan(100));
         let b = c.batch_time(&plan(100));
         assert_eq!(a, b);
-        assert_eq!(counting.0.get(), 1);
+        assert_eq!(counting.0.load(Ordering::Relaxed), 1);
         assert_eq!(cache.hits(), 1);
         assert_eq!(cache.misses(), 1);
     }
 
     #[test]
     fn different_plans_miss() {
-        let counting = CountingCost(Cell::new(0));
+        let counting = CountingCost(AtomicU64::new(0));
         let cache = LatencyCache::new();
         let c = cache.wrap(&counting);
         c.batch_time(&plan(100));
         c.batch_time(&plan(200));
-        assert_eq!(counting.0.get(), 2);
+        assert_eq!(counting.0.load(Ordering::Relaxed), 2);
         assert_eq!(cache.len(), 2);
     }
 
     #[test]
     fn clear_resets() {
-        let counting = CountingCost(Cell::new(0));
+        let counting = CountingCost(AtomicU64::new(0));
         let cache = LatencyCache::new();
         cache.wrap(&counting).batch_time(&plan(100));
         cache.clear();
         assert!(cache.is_empty());
         cache.wrap(&counting).batch_time(&plan(100));
-        assert_eq!(counting.0.get(), 2);
+        assert_eq!(counting.0.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn concurrent_readers_share_one_cache() {
+        let counting = CountingCost(AtomicU64::new(0));
+        let cache = LatencyCache::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let cache = &cache;
+                let counting = &counting;
+                s.spawn(move || {
+                    let c = cache.wrap(counting);
+                    for i in 0..64 {
+                        // Overlapping key ranges across threads.
+                        let v = c.batch_time(&plan(100 + (i + t * 16) % 96));
+                        assert!(v > 0.0);
+                    }
+                });
+            }
+        });
+        // 96 distinct plans; races may duplicate a few evaluations but
+        // the table must converge to exactly the distinct key set.
+        assert_eq!(cache.len(), 96);
+        assert_eq!(cache.hits() + cache.misses(), 4 * 64);
+        assert!(cache.misses() >= 96, "every distinct key misses at least once");
+    }
+
+    #[test]
+    fn shards_are_balanced() {
+        let cache = LatencyCache::new();
+        let counting = CountingCost(AtomicU64::new(0));
+        let c = cache.wrap(&counting);
+        for t in 0..512 {
+            c.batch_time(&plan(t + 1));
+        }
+        let sizes: Vec<usize> =
+            cache.shards.iter().map(|s| s.lock().unwrap().len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 512);
+        // No shard should hold more than 4x its fair share.
+        assert!(sizes.iter().all(|&n| n <= 4 * 512 / N_SHARDS),
+                "unbalanced shards: {sizes:?}");
     }
 }

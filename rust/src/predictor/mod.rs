@@ -18,7 +18,17 @@
 //!   (observed + 10) instead.
 //!
 //! The Predictor is stateless across calls (bar the cache, which is pure
-//! memoization): it can be replicated freely — the paper runs 16 per host.
+//! memoization): it can be replicated freely — the paper runs 16 per
+//! host.  Accordingly every method takes `&self` and the memo cache is
+//! concurrent ([`cache::LatencyCache`] is lock-striped), so one Predictor
+//! instance serves Block's parallel per-candidate fan-out directly.
+//!
+//! Forward simulations can also account for *in-transit* requests —
+//! requests the global scheduler has dispatched whose `Dispatch` event
+//! has not yet landed on the instance ([`Predictor::predict_with_pending`]).
+//! Without them, simultaneous arrivals all see the same idle instance and
+//! herd onto it (the in-transit blindness Llumnix's dispatcher guards
+//! against).
 
 pub mod cache;
 
@@ -51,7 +61,8 @@ pub struct Prediction {
 }
 
 /// Length substitution policy for the sequences already on the instance.
-pub trait LengthOracle {
+/// `Sync` so one oracle can be shared by the parallel prediction workers.
+pub trait LengthOracle: Sync {
     /// Planning response length for an existing sequence (by request id,
     /// with its ground-truth limit available for oracle use).
     fn planning_limit(&self, id: u64, true_limit: u32) -> u32;
@@ -98,11 +109,55 @@ impl Predictor {
     /// state `status` now.  `cost` is the batch latency model; `lengths`
     /// substitutes planning lengths for resident sequences.
     pub fn predict(
-        &mut self,
+        &self,
         status: &InstanceStatus,
         candidate: &Request,
         cost: &dyn BatchCost,
         lengths: &dyn LengthOracle,
+    ) -> Prediction {
+        self.predict_with_pending(status, candidate, cost, lengths, &[])
+    }
+
+    /// Like [`Self::predict`], but first enqueues `in_transit` — requests
+    /// already dispatched to this instance whose `Dispatch` event has not
+    /// landed yet.  They occupy the simulated queue ahead of the
+    /// candidate, so the prediction reflects the load the candidate will
+    /// actually find.
+    pub fn predict_with_pending(
+        &self,
+        status: &InstanceStatus,
+        candidate: &Request,
+        cost: &dyn BatchCost,
+        lengths: &dyn LengthOracle,
+        in_transit: &[Request],
+    ) -> Prediction {
+        self.simulate(status, candidate, cost, lengths, in_transit, true)
+    }
+
+    /// Cache-bypassing prediction for *stochastic* cost models (e.g. the
+    /// Figure-5 noisy execution counterfactual).  The memo cache is keyed
+    /// only by batch plan, so routing a noisy model through it would
+    /// replay previously cached (clean, or first-draw) latencies instead
+    /// of sampling fresh noise each step — silently turning the
+    /// counterfactual into a copy of the clean prediction.
+    pub fn predict_uncached(
+        &self,
+        status: &InstanceStatus,
+        candidate: &Request,
+        cost: &dyn BatchCost,
+        lengths: &dyn LengthOracle,
+    ) -> Prediction {
+        self.simulate(status, candidate, cost, lengths, &[], false)
+    }
+
+    fn simulate(
+        &self,
+        status: &InstanceStatus,
+        candidate: &Request,
+        cost: &dyn BatchCost,
+        lengths: &dyn LengthOracle,
+        in_transit: &[Request],
+        use_cache: bool,
     ) -> Prediction {
         // 1) Rebuild the engine with substituted planning lengths.
         let mut st = status.clone();
@@ -118,14 +173,26 @@ impl Predictor {
         let mut eng =
             InstanceEngine::from_snapshot(self.cfg.clone(), self.num_blocks, &st);
 
-        // 2) Enqueue the candidate with its planning length.
+        // 2) Enqueue in-transit requests (dispatch order), then the
+        //    candidate, each with its planning length.
+        for r in in_transit {
+            let mut seq = SeqState::from_request(r, status.now);
+            seq.response_limit = r.planning_tokens().max(1);
+            eng.enqueue_seq(seq);
+        }
         let mut cand_seq = SeqState::from_request(candidate, status.now);
         cand_seq.response_limit = candidate.planning_tokens().max(1);
         let cand_id = cand_seq.id;
         eng.enqueue_seq(cand_seq);
 
         // 3) Replay the local scheduler to candidate completion.
-        let cached = self.cache.wrap(cost);
+        let cached;
+        let cost: &dyn BatchCost = if use_cache {
+            cached = self.cache.wrap(cost);
+            &cached
+        } else {
+            cost
+        };
         let mut sim_work = 0u64;
         let mut sim_steps = 0u64;
         let mut ttft = None;
@@ -135,7 +202,7 @@ impl Predictor {
             eng.take_finished();
         }
         loop {
-            match eng.start_step(&cached) {
+            match eng.start_step(cost) {
                 Some(_) => {
                     sim_steps += 1;
                     if let Some(plan) = eng.in_flight_plan() {
@@ -215,7 +282,7 @@ mod tests {
         let status = eng.snapshot();
         let candidate = req(99, 200, 50);
 
-        let mut pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
+        let pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
         let p = pred.predict(&status, &candidate, &c, &TrueLengths);
 
         // Ground truth: actually run it.
@@ -246,7 +313,7 @@ mod tests {
         }
         busy.start_step(&c).unwrap();
         let candidate = req(99, 200, 50);
-        let mut pred = Predictor::new(idle.cfg.clone(), 1056);
+        let pred = Predictor::new(idle.cfg.clone(), 1056);
         idle.advance_clock(0.0);
         let p_idle = pred.predict(&idle.snapshot(), &candidate, &c, &TrueLengths);
         let p_busy = pred.predict(&busy.snapshot(), &candidate, &c, &TrueLengths);
@@ -269,7 +336,7 @@ mod tests {
         // Tagger grossly under-predicted seq 1 at 20 tokens (< generated).
         let mut est = std::collections::HashMap::new();
         est.insert(1u64, 20u32);
-        let mut pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
+        let pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
         let p = pred.predict(&status, &req(99, 50, 500), &c,
                              &EstimatedLengths { estimates: &est });
         // Without the +10 rule the simulated seq 1 would already be
@@ -283,6 +350,68 @@ mod tests {
     }
 
     #[test]
+    fn pending_requests_raise_prediction() {
+        // An idle instance with a long in-transit request must predict a
+        // higher candidate latency than a truly idle one.
+        let c = cost();
+        let mut eng = engine();
+        eng.advance_clock(0.0);
+        let status = eng.snapshot();
+        let pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
+        let candidate = req(99, 200, 50);
+        let clean = pred.predict(&status, &candidate, &c, &TrueLengths);
+        let transiting = vec![req(7, 800, 300)];
+        let loaded = pred.predict_with_pending(&status, &candidate, &c,
+                                               &TrueLengths, &transiting);
+        assert!(loaded.e2e > clean.e2e, "{} vs {}", loaded.e2e, clean.e2e);
+        assert!(loaded.ttft > clean.ttft);
+        // Both must be finite, well-formed simulations.
+        assert!(loaded.e2e.is_finite() && clean.e2e.is_finite());
+    }
+
+    #[test]
+    fn uncached_predict_samples_stochastic_cost() {
+        // Regression: the memo cache is keyed only by batch plan, so a
+        // noisy cost model routed through the cached path replays the
+        // clean latencies warmed by an earlier prediction.  The
+        // counterfactual path must bypass the cache and see fresh noise.
+        use crate::core::batch::BatchPlan;
+
+        struct Jitter {
+            inner: RooflineModel,
+            rng: std::sync::Mutex<crate::util::rng::Rng>,
+        }
+        impl BatchCost for Jitter {
+            fn batch_time(&self, plan: &BatchPlan) -> f64 {
+                let z = self.rng.lock().unwrap().next_f64();
+                self.inner.batch_time(plan) * (1.1 + 0.5 * z)
+            }
+        }
+
+        let c = cost();
+        let mut eng = engine();
+        for i in 0..6 {
+            eng.enqueue(&req(i, 200, 60), 0.0);
+        }
+        eng.start_step(&c).unwrap();
+        let status = eng.snapshot();
+        let candidate = req(99, 150, 40);
+        let pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
+        // Warm the cache with the clean model (the Figure-5 "preds" pass).
+        let clean = pred.predict(&status, &candidate, &c, &TrueLengths);
+        let noisy = Jitter {
+            inner: cost(),
+            rng: std::sync::Mutex::new(crate::util::rng::Rng::new(5)),
+        };
+        let actual = pred.predict_uncached(&status, &candidate, &noisy,
+                                           &TrueLengths);
+        // Jitter inflates every step by ≥10%, so if the noisy pass had
+        // hit the warmed cache the two results would be identical.
+        assert!(actual.e2e > clean.e2e * 1.05,
+                "noisy {} vs clean {}", actual.e2e, clean.e2e);
+    }
+
+    #[test]
     fn cache_reduces_cost_calls() {
         let c = cost();
         let mut eng = engine();
@@ -291,7 +420,7 @@ mod tests {
         }
         eng.start_step(&c).unwrap();
         let status = eng.snapshot();
-        let mut pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
+        let pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
         pred.predict(&status, &req(99, 128, 64), &c, &TrueLengths);
         let (h1, m1) = pred.cache_stats();
         // Second prediction on identical state: nearly all hits.
@@ -313,7 +442,7 @@ mod tests {
         let running_before = eng.running_len();
         let free_before = eng.free_blocks();
         let status = eng.snapshot();
-        let mut pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
+        let pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
         let a = pred.predict(&status, &req(99, 100, 10), &c, &TrueLengths);
         let b = pred.predict(&status, &req(99, 100, 10), &c, &TrueLengths);
         assert_eq!(a.ttft, b.ttft);

@@ -11,7 +11,8 @@ use crate::config::{OverheadConfig, SchedulerKind};
 use crate::core::request::{Request, RequestId};
 use crate::engine::InstanceStatus;
 use crate::exec::BatchCost;
-use crate::predictor::{EstimatedLengths, Prediction, Predictor, TrueLengths};
+use crate::predictor::{EstimatedLengths, LengthOracle, Prediction, Predictor,
+                       TrueLengths};
 use crate::util::rng::Rng;
 
 /// What the dispatcher sees: the status of every *active* instance.
@@ -19,6 +20,14 @@ pub struct ClusterView<'a> {
     pub now: f64,
     /// Index-aligned; `None` marks deactivated / not-yet-provisioned hosts.
     pub statuses: &'a [Option<InstanceStatus>],
+    /// Index-aligned in-transit requests: dispatched by the scheduler but
+    /// not yet enqueued on the instance (the `Dispatch` event is still in
+    /// flight, `now < dispatch time`).  Instance snapshots cannot see
+    /// them, so load-aware schedulers must add them in — otherwise
+    /// simultaneous arrivals all observe the same "idle" instance and
+    /// herd onto it.  May be shorter than `statuses` (missing ⇒ empty);
+    /// unit tests that do not exercise in-transit load pass `&[]`.
+    pub in_transit: &'a [Vec<Request>],
 }
 
 impl ClusterView<'_> {
@@ -28,6 +37,22 @@ impl ClusterView<'_> {
             .enumerate()
             .filter_map(|(i, s)| s.as_ref().map(|_| i))
             .collect()
+    }
+
+    /// In-transit requests headed for instance `i` (empty if untracked).
+    pub fn in_transit_for(&self, i: usize) -> &[Request] {
+        self.in_transit.get(i).map_or(&[], Vec::as_slice)
+    }
+
+    /// KV blocks the in-transit requests for instance `i` will claim on
+    /// arrival (prompt prefill footprint, rounded up to whole blocks).
+    pub fn in_transit_blocks(&self, i: usize, block_size: u32) -> f64 {
+        let toks: u64 = self
+            .in_transit_for(i)
+            .iter()
+            .map(|r| r.prompt_tokens as u64)
+            .sum();
+        (toks as f64 / block_size.max(1) as f64).ceil()
     }
 }
 
@@ -91,14 +116,19 @@ impl GlobalScheduler for RandomScheduler {
 }
 
 /// Round-robin over active instances (DeepSpeed-MII / Triton default).
+///
+/// The cursor is the *last-picked instance id*, not a position into the
+/// active list: auto-provisioning grows/shrinks the active set mid-run,
+/// and a positional cursor (`active[next % len]`) remaps on every resize,
+/// skipping some instances and double-hitting others.
 pub struct RoundRobinScheduler {
-    next: usize,
+    last: Option<usize>,
     overhead: f64,
 }
 
 impl RoundRobinScheduler {
     pub fn new(overhead: &OverheadConfig) -> Self {
-        RoundRobinScheduler { next: 0, overhead: overhead.heuristic_base }
+        RoundRobinScheduler { last: None, overhead: overhead.heuristic_base }
     }
 }
 
@@ -110,8 +140,17 @@ impl GlobalScheduler for RoundRobinScheduler {
     fn pick(&mut self, _req: &Request, view: &ClusterView,
             _cost: &dyn BatchCost) -> Decision {
         let active = view.active_indices();
-        let pick = active[self.next % active.len()];
-        self.next = self.next.wrapping_add(1);
+        // `active` is ascending: advance to the next active id after the
+        // last pick, wrapping to the smallest.
+        let pick = match self.last {
+            Some(last) => active
+                .iter()
+                .copied()
+                .find(|&i| i > last)
+                .unwrap_or(active[0]),
+            None => active[0],
+        };
+        self.last = Some(pick);
         heuristic_decision(pick, self.overhead)
     }
 }
@@ -195,21 +234,27 @@ fn min_load_pick(
 /// where INFaaS++ beats the basic schedulers at low QPS.
 pub struct InfaasScheduler {
     overhead: f64,
+    block_size: u32,
     max_batch: u32,
     rng: Rng,
 }
 
 impl InfaasScheduler {
-    pub fn new(max_batch: u32, overhead: &OverheadConfig, seed: u64) -> Self {
+    pub fn new(block_size: u32, max_batch: u32, overhead: &OverheadConfig,
+               seed: u64) -> Self {
         InfaasScheduler {
             overhead: overhead.heuristic_base,
+            block_size,
             max_batch,
             rng: Rng::new(seed),
         }
     }
 
-    fn load(&self, st: &InstanceStatus) -> f64 {
-        st.used_blocks() as f64 / self.max_batch.max(1) as f64
+    /// usedMemory / batchSize, with in-transit dispatches counted as
+    /// memory already committed.
+    fn load(st: &InstanceStatus, in_transit_blocks: f64, max_batch: u32) -> f64 {
+        (st.used_blocks() as f64 + in_transit_blocks)
+            / max_batch.max(1) as f64
     }
 }
 
@@ -221,13 +266,11 @@ impl GlobalScheduler for InfaasScheduler {
     fn pick(&mut self, _req: &Request, view: &ClusterView,
             _cost: &dyn BatchCost) -> Decision {
         let candidates = view.active_indices();
-        let statuses = view.statuses;
-        let max_batch = self.max_batch;
+        let (block_size, max_batch) = (self.block_size, self.max_batch);
         let pick = min_load_pick(&candidates, &mut self.rng, |i| {
-            let st = statuses[i].as_ref().unwrap();
-            st.used_blocks() as f64 / max_batch.max(1) as f64
+            Self::load(view.statuses[i].as_ref().unwrap(),
+                       view.in_transit_blocks(i, block_size), max_batch)
         });
-        let _ = self.load(statuses[pick].as_ref().unwrap());
         heuristic_decision(pick, self.overhead)
     }
 }
@@ -262,12 +305,14 @@ impl GlobalScheduler for LlumnixScheduler {
     fn pick(&mut self, _req: &Request, view: &ClusterView,
             _cost: &dyn BatchCost) -> Decision {
         let candidates = view.active_indices();
-        let statuses = view.statuses;
         let (block_size, max_batch) = (self.block_size, self.max_batch);
         let pick = min_load_pick(&candidates, &mut self.rng, |i| {
-            let st = statuses[i].as_ref().unwrap();
+            let st = view.statuses[i].as_ref().unwrap();
+            // prefillMemory: queued prompts on the instance plus prompts
+            // still in transit from the dispatcher.
             let prefill_blocks =
-                (st.pending_prefill_tokens() as f64 / block_size as f64).ceil();
+                (st.pending_prefill_tokens() as f64 / block_size as f64).ceil()
+                    + view.in_transit_blocks(i, block_size);
             (st.used_blocks() as f64 + prefill_blocks)
                 / max_batch.max(1) as f64
         });
@@ -282,6 +327,13 @@ impl GlobalScheduler for LlumnixScheduler {
 /// Block (§4): fan out to every instance's Predictor, dispatch to the
 /// minimum predicted e2e latency.  `use_estimates` switches Block* mode
 /// (plan with tagger predictions instead of ground truth).
+///
+/// The fan-out is genuinely parallel when `jobs > 1` (the paper runs 16
+/// predictor replicas per host): per-candidate forward simulations run on
+/// scoped worker threads over one shared, lock-striped latency cache.
+/// The argmin is deterministic regardless of `jobs` — candidates are
+/// ranked by `(predicted e2e, instance index)` with a total order on
+/// f64, so parallel and serial runs make byte-identical decisions.
 pub struct BlockScheduler {
     predictor: Predictor,
     overhead_cfg: OverheadConfig,
@@ -292,6 +344,8 @@ pub struct BlockScheduler {
     /// Candidate sampling: Some(k) = predict only k random candidates
     /// (the power-of-two extension); None = all instances (the paper).
     sample_k: Option<usize>,
+    /// Worker threads for the per-candidate fan-out (1 = serial).
+    jobs: usize,
     rng: Rng,
 }
 
@@ -304,6 +358,7 @@ impl BlockScheduler {
             use_estimates,
             estimates: HashMap::new(),
             sample_k: None,
+            jobs: 1,
             rng: Rng::new(seed),
         }
     }
@@ -313,18 +368,51 @@ impl BlockScheduler {
         self
     }
 
+    /// Fan the per-candidate simulations out over `jobs` worker threads.
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.jobs = jobs.max(1);
+        self
+    }
+
     pub fn cache_stats(&self) -> (u64, u64) {
         self.predictor.cache_stats()
     }
 
-    fn predict_on(&mut self, st: &InstanceStatus, req: &Request,
-                  cost: &dyn BatchCost) -> Prediction {
-        if self.use_estimates {
-            self.predictor.predict(st, req, cost,
-                                   &EstimatedLengths { estimates: &self.estimates })
+    /// Forward-simulate `planning_req` on every candidate, in candidate
+    /// order, via the shared ordered fan-out (`util::parallel`): workers
+    /// claim candidates from an atomic cursor (no convoying behind one
+    /// deeply loaded instance) and results slot back by index, so output
+    /// is identical for any `jobs`.
+    ///
+    /// Threads are spawned per pick: a spawn costs ~tens of µs while a
+    /// loaded-candidate simulation costs hundreds of µs to ms, so the
+    /// fan-out wins whenever parallelism matters (see the micro bench).
+    /// Keep `jobs = 1` for lightly loaded few-candidate clusters.
+    fn fan_out(
+        &self,
+        candidates: &[usize],
+        pending: &[Vec<Request>],
+        planning_req: &Request,
+        view: &ClusterView,
+        cost: &dyn BatchCost,
+    ) -> Vec<Prediction> {
+        let oracle_est;
+        let oracle: &dyn LengthOracle = if self.use_estimates {
+            oracle_est = EstimatedLengths { estimates: &self.estimates };
+            &oracle_est
         } else {
-            self.predictor.predict(st, req, cost, &TrueLengths)
-        }
+            &TrueLengths
+        };
+        let predictor = &self.predictor;
+        let items: Vec<(usize, &[Request])> = candidates
+            .iter()
+            .zip(pending)
+            .map(|(&i, p)| (i, p.as_slice()))
+            .collect();
+        crate::util::parallel::parallel_map(self.jobs, &items, |&(i, pend)| {
+            let st = view.statuses[i].as_ref().unwrap();
+            predictor.predict_with_pending(st, planning_req, cost, oracle, pend)
+        })
     }
 }
 
@@ -359,20 +447,46 @@ impl GlobalScheduler for BlockScheduler {
             }
         }
 
+        // In-transit requests per candidate, normalized the same way as
+        // the planning request (Block plans with ground truth).
+        let pending: Vec<Vec<Request>> = candidates
+            .iter()
+            .map(|&i| {
+                view.in_transit_for(i)
+                    .iter()
+                    .map(|r| {
+                        let mut r = r.clone();
+                        if !self.use_estimates {
+                            r.predicted_tokens = None;
+                        }
+                        r
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let preds =
+            self.fan_out(&candidates, &pending, &planning_req, view, cost);
+
+        // Deterministic argmin by (e2e, instance index): total order on
+        // f64 (NaN/INF-safe) + index tie-break, so serial and parallel
+        // fan-outs — and any candidate ordering — agree exactly.
         let mut best: Option<(usize, Prediction)> = None;
         let mut all = Vec::with_capacity(candidates.len());
         let mut max_steps = 0u64;
-        for i in candidates {
-            let st = view.statuses[i].as_ref().unwrap();
-            let p = self.predict_on(st, &planning_req, cost);
+        for (&i, p) in candidates.iter().zip(&preds) {
             max_steps = max_steps.max(p.sim_steps);
             all.push((i, p.e2e));
             let better = match &best {
                 None => true,
-                Some((_, b)) => p.e2e < b.e2e,
+                Some((bi, b)) => match p.e2e.total_cmp(&b.e2e) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Equal => i < *bi,
+                    std::cmp::Ordering::Greater => false,
+                },
             };
             if better {
-                best = Some((i, p));
+                best = Some((i, *p));
             }
         }
         let (instance, pred) = best.expect("no active instances");
@@ -400,7 +514,8 @@ impl GlobalScheduler for BlockScheduler {
     }
 }
 
-/// Construct a scheduler by kind.
+/// Construct a scheduler by kind.  `jobs` sets the Block fan-out
+/// parallelism (1 = serial; decisions are identical for any value).
 pub fn build_scheduler(
     kind: SchedulerKind,
     n_instances: usize,
@@ -408,6 +523,7 @@ pub fn build_scheduler(
     num_blocks: u32,
     overhead: &OverheadConfig,
     seed: u64,
+    jobs: usize,
 ) -> Box<dyn GlobalScheduler> {
     match kind {
         SchedulerKind::Random => Box::new(RandomScheduler::new(seed, overhead)),
@@ -416,18 +532,21 @@ pub fn build_scheduler(
             Box::new(MinQpmScheduler::new(n_instances, overhead))
         }
         SchedulerKind::InfaasPp => Box::new(InfaasScheduler::new(
-            engine_cfg.max_batch_size, overhead, seed)),
+            engine_cfg.block_size, engine_cfg.max_batch_size, overhead, seed)),
         SchedulerKind::LlumnixMinus => Box::new(LlumnixScheduler::new(
             engine_cfg.block_size, engine_cfg.max_batch_size, overhead, seed)),
         SchedulerKind::Block => Box::new(BlockScheduler::new(
-            Predictor::new(engine_cfg.clone(), num_blocks), overhead, false, seed)),
+            Predictor::new(engine_cfg.clone(), num_blocks), overhead, false,
+            seed).with_jobs(jobs)),
         SchedulerKind::BlockStar => Box::new(BlockScheduler::new(
-            Predictor::new(engine_cfg.clone(), num_blocks), overhead, true, seed)),
+            Predictor::new(engine_cfg.clone(), num_blocks), overhead, true,
+            seed).with_jobs(jobs)),
         SchedulerKind::BlockPo2 => Box::new(
             BlockScheduler::new(
                 Predictor::new(engine_cfg.clone(), num_blocks), overhead, false,
                 seed)
-            .with_sampling(2),
+            .with_sampling(2)
+            .with_jobs(jobs),
         ),
     }
 }
@@ -469,7 +588,7 @@ mod tests {
     #[test]
     fn round_robin_cycles() {
         let statuses = make_statuses(&[0, 0, 0]);
-        let view = ClusterView { now: 0.0, statuses: &statuses };
+        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
         let mut s = RoundRobinScheduler::new(&OverheadConfig::default());
         let picks: Vec<usize> =
             (0..6).map(|_| s.pick(&req(), &view, &cost()).instance).collect();
@@ -479,7 +598,7 @@ mod tests {
     #[test]
     fn random_covers_all_instances() {
         let statuses = make_statuses(&[0, 0, 0, 0]);
-        let view = ClusterView { now: 0.0, statuses: &statuses };
+        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
         let mut s = RandomScheduler::new(1, &OverheadConfig::default());
         let mut seen = [false; 4];
         for _ in 0..100 {
@@ -491,7 +610,7 @@ mod tests {
     #[test]
     fn min_qpm_balances_dispatch_counts() {
         let statuses = make_statuses(&[0, 0, 0]);
-        let view = ClusterView { now: 0.0, statuses: &statuses };
+        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
         let mut s = MinQpmScheduler::new(3, &OverheadConfig::default());
         let mut counts = [0usize; 3];
         for _ in 0..30 {
@@ -503,9 +622,82 @@ mod tests {
     #[test]
     fn infaas_prefers_low_memory_load() {
         let statuses = make_statuses(&[20, 0, 20]);
-        let view = ClusterView { now: 0.0, statuses: &statuses };
-        let mut s = InfaasScheduler::new(48, &OverheadConfig::default(), 1);
+        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
+        let mut s = InfaasScheduler::new(16, 48, &OverheadConfig::default(), 1);
         assert_eq!(s.pick(&req(), &view, &cost()).instance, 1);
+    }
+
+    #[test]
+    fn round_robin_survives_active_set_growth() {
+        // Rotate over {0, 1}, then activate instance 2 mid-rotation: the
+        // cursor must continue from the last *id*, not remap positions.
+        let mut statuses = make_statuses(&[0, 0, 0]);
+        statuses[2] = None;
+        let mut s = RoundRobinScheduler::new(&OverheadConfig::default());
+        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
+        let first: Vec<usize> =
+            (0..3).map(|_| s.pick(&req(), &view, &cost()).instance).collect();
+        assert_eq!(first, vec![0, 1, 0]);
+        // Instance 2 comes online (auto-provisioning).
+        let grown = make_statuses(&[0, 0, 0]);
+        let view = ClusterView { now: 0.0, statuses: &grown, in_transit: &[] };
+        let picks: Vec<usize> =
+            (0..6).map(|_| s.pick(&req(), &view, &cost()).instance).collect();
+        // Last pick was 0, so the rotation continues 1, 2, 0, 1, 2, 0 —
+        // nothing skipped, nothing double-hit.
+        assert_eq!(picks, vec![1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn round_robin_survives_active_set_shrink() {
+        let statuses = make_statuses(&[0, 0, 0]);
+        let mut s = RoundRobinScheduler::new(&OverheadConfig::default());
+        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
+        assert_eq!(s.pick(&req(), &view, &cost()).instance, 0);
+        assert_eq!(s.pick(&req(), &view, &cost()).instance, 1);
+        // Instance 2 deactivates while the cursor points past it.
+        let mut shrunk = make_statuses(&[0, 0, 0]);
+        shrunk[2] = None;
+        let view = ClusterView { now: 0.0, statuses: &shrunk, in_transit: &[] };
+        let picks: Vec<usize> =
+            (0..4).map(|_| s.pick(&req(), &view, &cost()).instance).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn infaas_and_llumnix_see_in_transit_load() {
+        // Two idle instances; one in-transit request headed for 0.
+        let statuses = make_statuses(&[0, 0]);
+        let in_transit = vec![vec![Request::new(50, 0.0, 640, 100)], vec![]];
+        let view = ClusterView { now: 0.0, statuses: &statuses,
+                                 in_transit: &in_transit };
+        for seed in 0..8 {
+            let mut infaas =
+                InfaasScheduler::new(16, 48, &OverheadConfig::default(), seed);
+            assert_eq!(infaas.pick(&req(), &view, &cost()).instance, 1,
+                       "INFaaS++ must avoid the in-transit target");
+            let mut llumnix =
+                LlumnixScheduler::new(16, 48, &OverheadConfig::default(), seed);
+            assert_eq!(llumnix.pick(&req(), &view, &cost()).instance, 1,
+                       "Llumnix- must avoid the in-transit target");
+        }
+    }
+
+    #[test]
+    fn block_sees_in_transit_load() {
+        let statuses = make_statuses(&[0, 0]);
+        let in_transit = vec![vec![Request::new(50, 0.0, 640, 200)], vec![]];
+        let view = ClusterView { now: 0.0, statuses: &statuses,
+                                 in_transit: &in_transit };
+        let mut s = BlockScheduler::new(
+            Predictor::new(EngineConfig::default(), 1056),
+            &OverheadConfig::default(), false, 1);
+        let d = s.pick(&req(), &view, &cost());
+        assert_eq!(d.instance, 1, "candidate must queue behind the in-transit \
+                                   request on 0, making 1 strictly better");
+        let p0 = d.all_predictions.iter().find(|(i, _)| *i == 0).unwrap().1;
+        let p1 = d.all_predictions.iter().find(|(i, _)| *i == 1).unwrap().1;
+        assert!(p0 > p1, "{p0} vs {p1}");
     }
 
     #[test]
@@ -523,9 +715,10 @@ mod tests {
         eng1.enqueue(&Request::new(900, 0.0, 300, 100), 0.0);
         eng1.start_step(&c);
         let statuses = vec![Some(eng0.snapshot()), Some(eng1.snapshot())];
-        let view = ClusterView { now: 0.0, statuses: &statuses };
+        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
 
-        let mut infaas = InfaasScheduler::new(48, &OverheadConfig::default(), 1);
+        let mut infaas =
+            InfaasScheduler::new(16, 48, &OverheadConfig::default(), 1);
         assert_eq!(infaas.pick(&req(), &view, &cost()).instance, 0,
                    "INFaaS++ is fooled by the empty memory");
         let mut llumnix =
@@ -537,7 +730,7 @@ mod tests {
     #[test]
     fn block_picks_least_loaded_and_reports_predictions() {
         let statuses = make_statuses(&[30, 0, 15]);
-        let view = ClusterView { now: 0.0, statuses: &statuses };
+        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
         let mut s = BlockScheduler::new(
             Predictor::new(EngineConfig::default(), 1056),
             &OverheadConfig::default(), false, 1);
@@ -558,9 +751,9 @@ mod tests {
         let mk = || BlockScheduler::new(
             Predictor::new(EngineConfig::default(), 1056),
             &OverheadConfig::default(), false, 1);
-        let o_idle = mk().pick(&req(), &ClusterView { now: 0.0, statuses: &idle },
+        let o_idle = mk().pick(&req(), &ClusterView { now: 0.0, statuses: &idle, in_transit: &[] },
                                &cost()).overhead;
-        let o_busy = mk().pick(&req(), &ClusterView { now: 0.0, statuses: &busy },
+        let o_busy = mk().pick(&req(), &ClusterView { now: 0.0, statuses: &busy, in_transit: &[] },
                                &cost()).overhead;
         assert!(o_busy > o_idle, "{o_busy} vs {o_idle}");
     }
@@ -568,7 +761,7 @@ mod tests {
     #[test]
     fn block_po2_predicts_subset() {
         let statuses = make_statuses(&[0; 8]);
-        let view = ClusterView { now: 0.0, statuses: &statuses };
+        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
         let mut s = BlockScheduler::new(
             Predictor::new(EngineConfig::default(), 1056),
             &OverheadConfig::default(), false, 3)
@@ -582,10 +775,10 @@ mod tests {
         let mut statuses = make_statuses(&[0, 0, 0]);
         statuses[0] = None;
         statuses[2] = None;
-        let view = ClusterView { now: 0.0, statuses: &statuses };
+        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
         for kind in SchedulerKind::ALL {
             let mut s = build_scheduler(kind, 3, &EngineConfig::default(), 1056,
-                                        &OverheadConfig::default(), 7);
+                                        &OverheadConfig::default(), 7, 1);
             let d = s.pick(&req(), &view, &cost());
             assert_eq!(d.instance, 1, "{}", s.name());
         }
@@ -595,8 +788,53 @@ mod tests {
     fn build_names_match_kind() {
         for kind in SchedulerKind::ALL {
             let s = build_scheduler(kind, 2, &EngineConfig::default(), 1056,
-                                    &OverheadConfig::default(), 7);
+                                    &OverheadConfig::default(), 7, 1);
             assert_eq!(s.name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn parallel_fanout_matches_serial_exactly() {
+        // Mixed loads so predictions differ per instance, plus in-transit
+        // requests so the pending path is exercised in both modes.
+        let statuses = make_statuses(&[30, 0, 15, 3, 22, 0, 9, 40]);
+        let in_transit = vec![
+            vec![], vec![Request::new(70, 0.0, 400, 60)], vec![], vec![],
+            vec![Request::new(71, 0.0, 150, 30),
+                 Request::new(72, 0.0, 90, 20)],
+            vec![], vec![], vec![],
+        ];
+        let view = ClusterView { now: 0.0, statuses: &statuses,
+                                 in_transit: &in_transit };
+        let mk = |jobs| BlockScheduler::new(
+            Predictor::new(EngineConfig::default(), 1056),
+            &OverheadConfig::default(), false, 1).with_jobs(jobs);
+        let serial = mk(1).pick(&req(), &view, &cost());
+        for jobs in [2, 4, 8, 16] {
+            let par = mk(jobs).pick(&req(), &view, &cost());
+            assert_eq!(par.instance, serial.instance, "jobs={jobs}");
+            assert_eq!(par.overhead, serial.overhead, "jobs={jobs}");
+            assert_eq!(par.predicted_e2e, serial.predicted_e2e, "jobs={jobs}");
+            assert_eq!(par.predicted_ttft, serial.predicted_ttft,
+                       "jobs={jobs}");
+            assert_eq!(par.all_predictions, serial.all_predictions,
+                       "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn argmin_tie_breaks_by_instance_index() {
+        // Identical idle instances → identical predictions; the fan-out
+        // must deterministically pick the lowest index however many
+        // workers race.
+        let statuses = make_statuses(&[0, 0, 0, 0]);
+        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
+        for jobs in [1, 3, 4] {
+            let mut s = BlockScheduler::new(
+                Predictor::new(EngineConfig::default(), 1056),
+                &OverheadConfig::default(), false, 1).with_jobs(jobs);
+            assert_eq!(s.pick(&req(), &view, &cost()).instance, 0,
+                       "jobs={jobs}");
         }
     }
 }

@@ -9,17 +9,28 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use thiserror::Error;
-
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {pos}: {msg}")]
     Parse { pos: usize, msg: String },
-    #[error("json type error: expected {expected}, found {found}")]
     Type { expected: &'static str, found: &'static str },
-    #[error("missing field: {0}")]
     Missing(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse { pos, msg } => {
+                write!(f, "json parse error at byte {pos}: {msg}")
+            }
+            JsonError::Type { expected, found } => {
+                write!(f, "json type error: expected {expected}, found {found}")
+            }
+            JsonError::Missing(field) => write!(f, "missing field: {field}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 /// A JSON value. Objects use a BTreeMap plus an insertion-order key list so
 /// serialization is stable and diff-friendly.

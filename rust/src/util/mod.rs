@@ -1,6 +1,9 @@
-//! Foundation utilities: deterministic RNG, statistics, JSON, logging.
+//! Foundation utilities: deterministic RNG, statistics, JSON, logging,
+//! and the ordered scoped-thread fan-out shared by the scheduler and the
+//! experiment harness.
 
 pub mod json;
 pub mod logging;
+pub mod parallel;
 pub mod rng;
 pub mod stats;

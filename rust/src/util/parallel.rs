@@ -1,0 +1,77 @@
+//! Deterministic ordered fan-out over scoped threads.
+//!
+//! One implementation serves both parallel layers: Block's per-candidate
+//! prediction fan-out (`scheduler`) and the experiment sweep driver
+//! (`experiments`).  Work items are claimed from a shared atomic cursor
+//! — a long item cannot convoy a whole chunk behind it — and results are
+//! slotted back by input index, so output order (and therefore every
+//! downstream decision) is independent of thread scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `f` over every item on up to `jobs` worker threads, returning
+/// results in input order.  `jobs <= 1` runs inline with zero spawns.
+/// Deterministic as long as `f` is a pure function of the item.
+pub fn parallel_map<T, R, F>(jobs: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let jobs = jobs.max(1).min(items.len());
+    if jobs <= 1 {
+        return items.iter().map(f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..jobs)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut done = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            return done;
+                        }
+                        done.push((i, f(&items[i])));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+    });
+    slots.into_iter().map(|r| r.expect("every slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let expect: Vec<u64> = items.iter().map(|x| x * x).collect();
+        for jobs in [1, 2, 7, 200] {
+            assert_eq!(parallel_map(jobs, &items, |&x| x * x), expect,
+                       "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn empty_and_unbalanced() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(8, &empty, |&x| x).is_empty());
+        // Wildly unbalanced work must still slot back in order.
+        let items = [30u64, 0, 25, 1, 0, 20];
+        let out = parallel_map(3, &items, |&ms| {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            ms
+        });
+        assert_eq!(out, items.to_vec());
+    }
+}

@@ -73,12 +73,18 @@ impl OnlineStats {
 
 /// Percentile of a sample (linear interpolation between order statistics).
 /// `p` in [0, 100]. Sorts a copy; use [`percentile_sorted`] on hot paths.
+///
+/// Sorts with `f64::total_cmp`: metric streams can carry ±INF (the
+/// Predictor's pessimistic bail-out) and NaN (INF−INF downstream), and a
+/// `partial_cmp(..).unwrap()` here would panic an entire experiment run.
+/// Under the total order NaN sorts above +INF, so it only perturbs the
+/// extreme upper percentiles instead of crashing.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, p)
 }
 
@@ -116,7 +122,7 @@ pub fn cdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
         return Vec::new();
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     (0..points)
         .map(|i| {
             let q = (i as f64 + 1.0) / points as f64;
@@ -197,9 +203,12 @@ pub fn least_squares(x: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
     // Gaussian elimination with partial pivoting.
     for col in 0..k {
         let piv = (col..k).max_by(|&r1, &r2| {
-            a[r1][col].abs().partial_cmp(&a[r2][col].abs()).unwrap()
+            a[r1][col].abs().total_cmp(&a[r2][col].abs())
         })?;
-        if a[piv][col].abs() < 1e-12 {
+        // Negated comparison so a NaN pivot (which total_cmp ranks above
+        // every finite value) is rejected as degenerate rather than
+        // propagated through the elimination.
+        if !(a[piv][col].abs() >= 1e-12) {
             return None;
         }
         a.swap(col, piv);
@@ -218,7 +227,14 @@ pub fn least_squares(x: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
             }
         }
     }
-    Some(a.iter().map(|row| row[k]).collect())
+    let coef: Vec<f64> = a.iter().map(|row| row[k]).collect();
+    // A NaN/INF in the samples (e.g. a poisoned latency measurement) can
+    // survive elimination via the RHS column without ever being a pivot;
+    // a non-finite fit is a degenerate fit.
+    if coef.iter().any(|v| !v.is_finite()) {
+        return None;
+    }
+    Some(coef)
 }
 
 #[cfg(test)]
@@ -267,6 +283,28 @@ mod tests {
     fn percentile_edges() {
         assert!(percentile(&[], 50.0).is_nan());
         assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn percentile_survives_nan_and_inf() {
+        // Regression: partial_cmp(..).unwrap() panicked as soon as a NaN
+        // (e.g. INF−INF from a pessimistic prediction) reached metrics.
+        let xs = [1.0, f64::NAN, 3.0, f64::INFINITY, 2.0, f64::NEG_INFINITY];
+        // Total order: -INF, 1, 2, 3, +INF, NaN — low/mid percentiles
+        // stay meaningful.
+        assert_eq!(percentile(&xs, 0.0), f64::NEG_INFINITY);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!(percentile(&xs, 100.0).is_nan());
+    }
+
+    #[test]
+    fn cdf_survives_nan_and_inf() {
+        let xs = [5.0, f64::NAN, 1.0, f64::INFINITY, 3.0];
+        let c = cdf(&xs, 10);
+        assert_eq!(c.len(), 10);
+        // Finite prefix stays ordered.
+        assert!(c[0].0 <= c[1].0);
+        assert!((c.last().unwrap().1 - 1.0).abs() < 1e-12);
     }
 
     #[test]
@@ -320,6 +358,17 @@ mod tests {
         assert!((c[0] - 3.0).abs() < 1e-6);
         assert!((c[1] - 2.0).abs() < 1e-6);
         assert!((c[2] + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn least_squares_rejects_nan_samples() {
+        // A NaN feature must yield None (degenerate), not Some([NaN; k]):
+        // under total_cmp a NaN pivot ranks above every finite value, so
+        // the degeneracy guard must catch it explicitly.
+        let rows = vec![vec![1.0, f64::NAN], vec![1.0, 2.0], vec![1.0, 3.0]];
+        assert!(least_squares(&rows, &[1.0, 2.0, 3.0]).is_none());
+        let ok = vec![vec![1.0, 1.0], vec![1.0, 2.0], vec![1.0, 3.0]];
+        assert!(least_squares(&ok, &[f64::NAN, 2.0, 3.0]).is_none());
     }
 
     #[test]

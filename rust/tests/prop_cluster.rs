@@ -126,7 +126,7 @@ fn prop_block_dispatch_matches_min_prediction() {
                 .decision
                 .all_predictions
                 .iter()
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(&b.1))
                 .unwrap();
             assert_eq!(s.decision.instance, min.0,
                        "block must dispatch to the min-predicted instance");

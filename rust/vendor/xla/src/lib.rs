@@ -1,0 +1,142 @@
+//! Stub of the `xla` (xla-rs 0.1.6) API surface consumed by
+//! `block::runtime`.
+//!
+//! The build container has no `xla_extension` shared library, so this
+//! crate keeps the PJRT serving path *compiling* while making every
+//! entry point fail cleanly at run time with an explanatory error.  The
+//! simulation/experiment layers (the paper's evaluation) never touch it.
+//! To serve the real AOT artifacts, replace this path dependency with the
+//! real `xla` crate — no source changes needed in `block`.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` closely enough for `{e:?}` logging.
+pub struct Error(pub String);
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "{what}: PJRT unavailable (built against the vendored xla stub; \
+             link the real xla crate / xla_extension to serve models)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "XlaError({})", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    Pred,
+}
+
+/// Element types readable out of a [`Literal`].
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(Error::unavailable("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute(&self, _args: &[&Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_entry_points_fail_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let e = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32, &[1], &[0, 0, 0, 0]).unwrap_err();
+        assert!(format!("{e:?}").contains("stub"));
+    }
+}
