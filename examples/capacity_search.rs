@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
                 let wl = WorkloadConfig { kind: WorkloadKind::ShareGpt, qps,
                                           n_requests, seed: 7 };
                 run_experiment(cfg, &wl,
-                               SimOptions { probes: false, sample_prob: 0.0 })
+                               SimOptions { probes: false, ..SimOptions::default() })
                     .map(|r| r.metrics.summary().p99_ttft)
                     .unwrap_or(f64::INFINITY)
             },

@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
         let cfg = ClusterConfig { n_instances: 4, scheduler,
                                   ..ClusterConfig::default() };
         let res = run_experiment(cfg, &workload,
-                                 SimOptions { probes: false, sample_prob: 0.0 })?;
+                                 SimOptions { probes: false, ..SimOptions::default() })?;
         let s = res.metrics.summary();
         rows.push(vec![
             scheduler.name().to_string(),

@@ -15,11 +15,12 @@ use std::collections::HashMap;
 
 use crate::config::ClusterConfig;
 use crate::core::request::{Request, RequestId, RequestMetrics};
-use crate::engine::{InstanceEngine, InstanceStatus};
+use crate::engine::{InstanceEngine, InstanceLoad, InstanceStatus};
 use crate::exec::roofline::RooflineModel;
 use crate::metrics::MetricsCollector;
 use crate::provision::AutoProvisioner;
-use crate::scheduler::{build_scheduler, ClusterView, Decision, GlobalScheduler};
+use crate::scheduler::{build_scheduler, ClusterView, Decision, GlobalScheduler,
+                       PredictorStats};
 use crate::util::rng::Rng;
 use events::{Event, EventKind, EventQueue};
 
@@ -60,6 +61,8 @@ pub struct SimResult {
     pub provision_events: Vec<crate::provision::ProvisionEvent>,
     /// (time, active_count) steps of the cluster size (Figure 8).
     pub size_timeline: Vec<(f64, usize)>,
+    /// Prediction-runtime counters (Block family; None for heuristics).
+    pub predictor_stats: Option<PredictorStats>,
     pub wall_time: std::time::Duration,
 }
 
@@ -70,11 +73,16 @@ pub struct SimOptions {
     pub sample_prob: f64,
     /// Record per-arrival probes (Figure 7).
     pub probes: bool,
+    /// Run the pre-refactor hot path: fresh snapshots every arrival (no
+    /// epoch cache) and clone-and-rebuild predictions (no engine pool, no
+    /// prediction memo).  The parity baseline — results must be
+    /// byte-identical to the optimized path.
+    pub reference_path: bool,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { sample_prob: 0.0, probes: true }
+        SimOptions { sample_prob: 0.0, probes: true, reference_path: false }
     }
 }
 
@@ -105,6 +113,15 @@ pub struct ClusterSim {
     in_transit: Vec<Vec<Request>>,
     served_by: Vec<usize>,
     rng: Rng,
+    /// Per-instance snapshot cache, invalidated by the engine's epoch
+    /// counter: unchanged instances are not re-cloned every arrival.
+    /// `status_epochs[i] == u64::MAX` marks an invalid/inactive entry.
+    status_cache: Vec<Option<InstanceStatus>>,
+    status_epochs: Vec<u64>,
+    /// Per-arrival lightweight load view (heuristic schedulers and probes
+    /// read this; full snapshots are only refreshed for predictive runs
+    /// and sampled arrivals).
+    loads: Vec<Option<InstanceLoad>>,
 }
 
 impl ClusterSim {
@@ -124,9 +141,12 @@ impl ClusterSim {
             })
             .collect();
         let cost = RooflineModel::from_profiles(&cfg.gpu, &cfg.model);
-        let scheduler = build_scheduler(cfg.scheduler, total, &cfg.engine,
-                                        blocks, &cfg.overhead, cfg.seed ^ 0x5C,
-                                        cfg.jobs);
+        let mut scheduler = build_scheduler(cfg.scheduler, total, &cfg.engine,
+                                            blocks, &cfg.overhead,
+                                            cfg.seed ^ 0x5C, cfg.jobs);
+        if opts.reference_path {
+            scheduler.set_reference_path(true);
+        }
         let provisioner = if cfg.provision.enabled {
             AutoProvisioner::new(cfg.provision.clone(), total)
         } else {
@@ -143,6 +163,9 @@ impl ClusterSim {
             in_transit: vec![Vec::new(); total],
             served_by: vec![0; total],
             rng,
+            status_cache: vec![None; total],
+            status_epochs: vec![u64::MAX; total],
+            loads: vec![None; total],
         }
     }
 
@@ -150,12 +173,39 @@ impl ClusterSim {
         &self.cfg
     }
 
-    fn statuses(&self) -> Vec<Option<InstanceStatus>> {
-        self.engines
-            .iter()
-            .zip(self.provisioner.active())
-            .map(|(e, &act)| act.then(|| e.snapshot()))
-            .collect()
+    /// Refresh the lightweight load view (cheap: constant-size summaries,
+    /// no per-sequence materialization).
+    fn refresh_loads(&mut self) {
+        for i in 0..self.engines.len() {
+            self.loads[i] = if self.provisioner.active()[i] {
+                Some(self.engines[i].load())
+            } else {
+                None
+            };
+        }
+    }
+
+    /// Refresh the snapshot cache: re-export only instances whose epoch
+    /// moved since the cached snapshot was taken (every mutation bumps
+    /// the epoch, so an equal epoch guarantees an identical snapshot —
+    /// asserted by `prop_epoch_invalidates_snapshots_exactly`).  The
+    /// reference path forces a fresh export per call.
+    fn refresh_statuses(&mut self) {
+        let force = self.opts.reference_path;
+        for i in 0..self.engines.len() {
+            if !self.provisioner.active()[i] {
+                self.status_cache[i] = None;
+                self.status_epochs[i] = u64::MAX;
+                continue;
+            }
+            let epoch = self.engines[i].epoch();
+            if force || self.status_epochs[i] != epoch
+                || self.status_cache[i].is_none()
+            {
+                self.status_cache[i] = Some(self.engines[i].snapshot());
+                self.status_epochs[i] = epoch;
+            }
+        }
     }
 
     fn kick_engine(&mut self, i: usize, queue: &mut EventQueue) {
@@ -184,20 +234,40 @@ impl ClusterSim {
             match ev.kind {
                 EventKind::Arrival(idx) => {
                     let req = &requests[idx];
-                    let statuses = self.statuses();
+                    // Each view side is only computed when something will
+                    // read it: loads feed heuristic dispatchers and the
+                    // probe record; full snapshots feed the Block family's
+                    // Predictor and sampled-arrival captures (the latter
+                    // refreshed lazily below).
+                    let need_statuses = self.cfg.scheduler.is_predictive()
+                        || self.opts.reference_path;
+                    let need_loads =
+                        !self.cfg.scheduler.is_predictive() || self.opts.probes;
+                    if need_statuses {
+                        self.refresh_statuses();
+                    }
+                    if need_loads {
+                        self.refresh_loads();
+                    }
+                    let statuses: &[Option<InstanceStatus>] =
+                        if need_statuses { &self.status_cache } else { &[] };
+                    let loads: &[Option<InstanceLoad>] =
+                        if need_loads { &self.loads } else { &[] };
                     let view = ClusterView {
                         now,
-                        statuses: &statuses,
+                        statuses,
                         in_transit: &self.in_transit,
+                        loads,
                     };
                     let decision = self.scheduler.pick(req, &view, &self.cost);
 
                     if self.opts.probes {
                         probes.push(Probe {
                             time: now,
-                            free_blocks: statuses
+                            free_blocks: self
+                                .loads
                                 .iter()
-                                .filter_map(|s| s.as_ref().map(|st| st.free_blocks))
+                                .filter_map(|l| l.as_ref().map(|ld| ld.free_blocks))
                                 .collect(),
                             cum_preemptions: self
                                 .engines
@@ -210,9 +280,11 @@ impl ClusterSim {
                     if self.opts.sample_prob > 0.0
                         && self.rng.bernoulli(self.opts.sample_prob)
                     {
+                        self.refresh_statuses();
                         sampled.push(SampledArrival {
                             request: req.clone(),
-                            statuses: statuses
+                            statuses: self
+                                .status_cache
                                 .iter()
                                 .enumerate()
                                 .filter_map(|(i, s)| {
@@ -330,6 +402,7 @@ impl ClusterSim {
             instances,
             provision_events: self.provisioner.events.clone(),
             size_timeline,
+            predictor_stats: self.scheduler.predictor_stats(),
             wall_time: t0.elapsed(),
         }
     }
@@ -426,6 +499,51 @@ mod tests {
     }
 
     #[test]
+    fn optimized_hot_path_matches_reference_exactly() {
+        // The acceptance bar for the incremental prediction runtime:
+        // epoch-cached snapshots + pooled engines + the prediction memo
+        // must reproduce the pre-refactor clone-and-rebuild path byte for
+        // byte, at any fan-out width, for both length-oracle modes.
+        let run = |reference: bool, jobs: usize, kind: SchedulerKind| {
+            let mut cfg = small_cfg(kind);
+            cfg.jobs = jobs;
+            run_experiment(cfg, &small_workload(9.0, 250),
+                           SimOptions { reference_path: reference,
+                                        ..SimOptions::default() })
+                .unwrap()
+                .metrics
+                .summary()
+        };
+        for kind in [SchedulerKind::Block, SchedulerKind::BlockStar] {
+            let reference = run(true, 1, kind);
+            for jobs in [1, 4] {
+                assert_eq!(run(false, jobs, kind), reference,
+                           "{} jobs={jobs}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn predictor_stats_surface_in_results() {
+        let res = run_experiment(small_cfg(SchedulerKind::Block),
+                                 &small_workload(8.0, 200),
+                                 SimOptions::default())
+            .unwrap();
+        let stats = res.predictor_stats.expect("Block reports stats");
+        assert!(stats.cache_hits + stats.cache_misses > 0);
+        assert!(stats.pool_created > 0);
+        assert!(stats.pool_created <= 2, "serial fan-out needs ~1 engine");
+        assert!(stats.pool_reused > stats.pool_created * 10,
+                "pool must be reused across the run: {stats:?}");
+        // Heuristics report none.
+        let res = run_experiment(small_cfg(SchedulerKind::RoundRobin),
+                                 &small_workload(8.0, 50),
+                                 SimOptions::default())
+            .unwrap();
+        assert!(res.predictor_stats.is_none());
+    }
+
+    #[test]
     fn simultaneous_arrivals_do_not_herd() {
         // Regression for in-transit dispatch blindness: two requests
         // arriving at the same instant on an idle 2-instance cluster.
@@ -480,7 +598,8 @@ mod tests {
     fn probes_track_arrivals() {
         let res = run_experiment(small_cfg(SchedulerKind::RoundRobin),
                                  &small_workload(5.0, 100),
-                                 SimOptions { sample_prob: 0.0, probes: true })
+                                 SimOptions { probes: true,
+                                              ..SimOptions::default() })
             .unwrap();
         assert_eq!(res.probes.len(), 100);
         for p in &res.probes {
@@ -493,7 +612,8 @@ mod tests {
     fn sampling_captures_arrivals() {
         let res = run_experiment(small_cfg(SchedulerKind::Block),
                                  &small_workload(5.0, 400),
-                                 SimOptions { sample_prob: 0.25, probes: false })
+                                 SimOptions { sample_prob: 0.25, probes: false,
+                                              ..SimOptions::default() })
             .unwrap();
         assert!(!res.sampled.is_empty());
         for s in &res.sampled {

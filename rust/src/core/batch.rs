@@ -92,6 +92,15 @@ impl BatchPlan {
             self.decode_context_sum() as u64,
         )
     }
+
+    /// Pre-hashed form of [`Self::cache_key`]: FNV-1a over the quantized
+    /// feature tuple, SplitMix64-finalized (`util::hash`).  Computed once
+    /// per lookup so the memo-cache probe costs a few multiplies instead
+    /// of a SipHash of a 4-field tuple.
+    pub fn key_hash(&self) -> u64 {
+        let (a, b, c, d) = self.cache_key();
+        crate::util::hash::hash_words([a as u64, b, c as u64, d])
+    }
 }
 
 #[cfg(test)]
@@ -140,5 +149,24 @@ mod tests {
         let mut b = plan();
         b.decode[0].context = 701;
         assert_ne!(a.cache_key(), b.cache_key());
+        assert_ne!(a.key_hash(), b.key_hash());
+    }
+
+    #[test]
+    fn key_hash_is_a_pure_function_of_cache_key() {
+        // Chunk boundaries that preserve the feature tuple must collide
+        // (that is the memoization contract), everything else must not.
+        let a = plan();
+        let b = plan();
+        assert_eq!(a.key_hash(), b.key_hash());
+        let mut distinct = std::collections::HashSet::new();
+        for tokens in 1..512u32 {
+            let p = BatchPlan {
+                prefill: vec![PrefillChunk { request: 0, offset: 0, tokens }],
+                decode: vec![],
+            };
+            distinct.insert(p.key_hash());
+        }
+        assert_eq!(distinct.len(), 511, "511 distinct plans, no collisions");
     }
 }

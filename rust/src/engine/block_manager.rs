@@ -21,6 +21,9 @@ pub struct BlockManager {
     free: Vec<BlockId>,
     /// Page table: sequence -> physical blocks (in logical order).
     tables: HashMap<RequestId, Vec<BlockId>>,
+    /// Retired page-table vectors, recycled by `allocate_seq` so the
+    /// Predictor's pooled engines rebuild snapshots without allocating.
+    spare_tables: Vec<Vec<BlockId>>,
     /// Admission watermark in blocks: keep this many free when admitting
     /// new sequences (vLLM's guard against immediate preemption).
     watermark_blocks: u32,
@@ -34,8 +37,20 @@ impl BlockManager {
             total,
             free: (0..total).rev().collect(),
             tables: HashMap::new(),
+            spare_tables: Vec::new(),
             watermark_blocks: ((total as f64 * watermark_frac).ceil() as u32).max(1),
         }
+    }
+
+    /// Return to the freshly-constructed state, retaining every allocation
+    /// (free list capacity, table map capacity, spare page-table vectors).
+    pub fn reset(&mut self) {
+        for (_, mut table) in self.tables.drain() {
+            table.clear();
+            self.spare_tables.push(table);
+        }
+        self.free.clear();
+        self.free.extend((0..self.total).rev());
     }
 
     pub fn block_size(&self) -> u32 {
@@ -87,8 +102,8 @@ impl BlockManager {
         if (self.free.len() as u32) < needed {
             return false;
         }
-        let table: Vec<BlockId> =
-            (0..needed).map(|_| self.free.pop().unwrap()).collect();
+        let mut table = self.spare_tables.pop().unwrap_or_default();
+        table.extend((0..needed).map(|_| self.free.pop().unwrap()));
         self.tables.insert(id, table);
         true
     }
@@ -110,8 +125,9 @@ impl BlockManager {
 
     /// Release all blocks of a sequence (finish or preemption).
     pub fn free_seq(&mut self, id: RequestId) {
-        if let Some(table) = self.tables.remove(&id) {
-            self.free.extend(table);
+        if let Some(mut table) = self.tables.remove(&id) {
+            self.free.extend(table.drain(..));
+            self.spare_tables.push(table);
         }
     }
 
@@ -200,6 +216,25 @@ mod tests {
         let mut bm = BlockManager::new(4, 16, 0.01);
         bm.allocate_seq(1, 16);
         bm.allocate_seq(1, 16);
+    }
+
+    #[test]
+    fn reset_restores_fresh_state() {
+        let mut bm = BlockManager::new(50, 16, 0.01);
+        assert!(bm.allocate_seq(1, 100));
+        assert!(bm.allocate_seq(2, 300));
+        assert!(bm.grow_to(1, 200));
+        bm.reset();
+        assert_eq!(bm.free_blocks(), 50);
+        assert!(!bm.has_seq(1) && !bm.has_seq(2));
+        assert!(bm.check_conservation());
+        // Behaves exactly like a fresh manager afterwards.
+        let fresh = BlockManager::new(50, 16, 0.01);
+        assert!(bm.allocate_seq(7, 100));
+        assert_eq!(bm.seq_blocks(7), fresh.blocks_for(100));
+        bm.free_seq(7);
+        assert_eq!(bm.free_blocks(), 50);
+        assert!(bm.check_conservation());
     }
 
     #[test]

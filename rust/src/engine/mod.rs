@@ -31,7 +31,7 @@ use crate::core::request::{Request, RequestId};
 use crate::exec::BatchCost;
 use crate::util::rng::Rng;
 use block_manager::BlockManager;
-pub use status::{InstanceStatus, SeqSnapshot};
+pub use status::{InstanceLoad, InstanceStatus, SeqSnapshot};
 
 /// A sequence being served by an instance.
 #[derive(Debug, Clone)]
@@ -113,6 +113,12 @@ pub struct InstanceEngine {
     waiting: VecDeque<SeqState>,
     running: Vec<SeqState>,
     clock: f64,
+    /// Mutation counter: bumped on every state change a snapshot could
+    /// observe (enqueue, step start/finish, preemption, clock advance).
+    /// Equal epochs ⇒ identical snapshots, which is what lets the cluster
+    /// cache per-instance snapshots and the Predictor memoize full
+    /// predictions for unchanged instances.
+    epoch: u64,
     /// In-flight step, if any.
     in_flight: Option<(BatchPlan, f64)>, // (plan, completes_at)
     finished: Vec<FinishedSeq>,
@@ -123,6 +129,13 @@ pub struct InstanceEngine {
     /// Multiplicative execution-noise (live engines only; the Predictor
     /// runs noise-free — this gap is part of its prediction error).
     noise: Option<(Rng, f64)>,
+    /// Scratch buffers reused across batch formations and retired plans
+    /// whose vector capacities `form_batch` recycles — the Predictor
+    /// replays thousands of steps per dispatch, so the hot loop must not
+    /// allocate.
+    scratch_decode: Vec<(RequestId, u32)>,
+    scratch_preempted: Vec<RequestId>,
+    plan_pool: Vec<BatchPlan>,
 }
 
 impl InstanceEngine {
@@ -134,12 +147,16 @@ impl InstanceEngine {
             waiting: VecDeque::new(),
             running: Vec::new(),
             clock: 0.0,
+            epoch: 0,
             in_flight: None,
             finished: Vec::new(),
             total_preemptions: 0,
             steps_executed: 0,
             busy_time: 0.0,
             noise: None,
+            scratch_decode: Vec::new(),
+            scratch_preempted: Vec::new(),
+            plan_pool: Vec::new(),
         }
     }
 
@@ -154,6 +171,11 @@ impl InstanceEngine {
 
     pub fn clock(&self) -> f64 {
         self.clock
+    }
+
+    /// Current mutation epoch (see the field doc).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     pub fn free_blocks(&self) -> u32 {
@@ -212,11 +234,24 @@ impl InstanceEngine {
                 .sum::<u64>()
     }
 
+    /// Constant-size load summary for heuristic dispatchers — everything
+    /// they read, without materializing a full [`InstanceStatus`].
+    pub fn load(&self) -> InstanceLoad {
+        InstanceLoad {
+            free_blocks: self.bm.free_blocks(),
+            total_blocks: self.bm.total_blocks(),
+            pending_prefill_tokens: self.pending_prefill_tokens(),
+            running: self.running.len() as u32,
+            waiting: self.waiting.len() as u32,
+        }
+    }
+
     // ---- request intake ----------------------------------------------------
 
     /// Enqueue a request (global scheduler dispatch lands here).
     pub fn enqueue(&mut self, req: &Request, now: f64) {
         debug_assert!(now + 1e-9 >= self.clock, "enqueue in the past");
+        self.epoch += 1;
         self.clock = self.clock.max(now);
         self.waiting.push_back(SeqState::from_request(req, now));
     }
@@ -224,12 +259,25 @@ impl InstanceEngine {
     /// Enqueue with an explicit response limit (Predictor simulations use
     /// predicted lengths).
     pub fn enqueue_seq(&mut self, seq: SeqState) {
+        self.epoch += 1;
         self.waiting.push_back(seq);
     }
 
     /// Drain finished sequences.
     pub fn take_finished(&mut self) -> Vec<FinishedSeq> {
         std::mem::take(&mut self.finished)
+    }
+
+    /// Finished sequences accumulated since the last drain, by reference
+    /// (the Predictor's replay loop polls these every step and must not
+    /// allocate the way [`Self::take_finished`] does).
+    pub fn finished_iter(&self) -> impl Iterator<Item = &FinishedSeq> {
+        self.finished.iter()
+    }
+
+    /// Drop accumulated finished sequences, keeping the buffer capacity.
+    pub fn clear_finished(&mut self) {
+        self.finished.clear();
     }
 
     // ---- step lifecycle ---------------------------------------------------
@@ -244,9 +292,11 @@ impl InstanceEngine {
             // Batch formation may have ended empty because the only
             // runnable sequence preempted itself back to the waiting
             // queue; memory is free again now, so retry admission.
+            self.plan_pool.push(plan);
             plan = self.form_batch();
         }
         if plan.is_empty() {
+            self.plan_pool.push(plan);
             return None;
         }
         let mut dur = cost.batch_time(&plan);
@@ -254,6 +304,7 @@ impl InstanceEngine {
             dur *= (1.0 + *sigma * rng.normal()).max(0.2);
         }
         let done = self.clock + dur;
+        self.epoch += 1;
         self.busy_time += dur;
         self.steps_executed += 1;
         self.in_flight = Some((plan, done));
@@ -264,6 +315,15 @@ impl InstanceEngine {
     /// progress, completions).  Advances the clock to the step end.
     pub fn finish_step(&mut self) {
         let (plan, done) = self.in_flight.take().expect("no step in flight");
+        self.apply_step(&plan, done);
+        self.plan_pool.push(plan);
+    }
+
+    /// Apply a step's effects from a borrowed plan.  Public so the
+    /// Predictor can replay a snapshot's in-flight step straight from the
+    /// status reference instead of cloning the plan into a rebuilt engine.
+    pub fn apply_step(&mut self, plan: &BatchPlan, done: f64) {
+        self.epoch += 1;
         self.clock = done;
         // Plans are emitted in `running` order, so a wrapping cursor scan
         // matches each item in O(1) amortized (vs O(batch) per item for a
@@ -330,7 +390,10 @@ impl InstanceEngine {
     /// last activity).
     pub fn advance_clock(&mut self, now: f64) {
         debug_assert!(self.in_flight.is_none());
-        self.clock = self.clock.max(now);
+        if now > self.clock {
+            self.epoch += 1;
+            self.clock = now;
+        }
     }
 
     // ---- batch formation ---------------------------------------------------
@@ -340,6 +403,14 @@ impl InstanceEngine {
             LocalPolicy::SarathiChunked => self.form_sarathi_batch(),
             LocalPolicy::VllmPrefillPriority => self.form_vllm_batch(),
         }
+    }
+
+    /// An empty plan, recycling the vector capacities of a retired one.
+    fn take_plan(&mut self) -> BatchPlan {
+        let mut plan = self.plan_pool.pop().unwrap_or_default();
+        plan.prefill.clear();
+        plan.decode.clear();
+        plan
     }
 
     /// Preempt the newest running sequence (recompute mode).  Returns the
@@ -352,6 +423,7 @@ impl InstanceEngine {
             .rposition(|s| Some(s.id) != protect)
             .or_else(|| (!self.running.is_empty()).then(|| self.running.len() - 1));
         let idx = idx?;
+        self.epoch += 1;
         let mut seq = self.running.remove(idx);
         self.bm.free_seq(seq.id);
         // Recompute: generated tokens fold into the prompt.
@@ -396,18 +468,21 @@ impl InstanceEngine {
 
     /// Sarathi-Serve: decode-first hybrid batch under a token budget.
     fn form_sarathi_batch(&mut self) -> BatchPlan {
-        let mut plan = BatchPlan::default();
+        let mut plan = self.take_plan();
         let mut budget = self.cfg.chunk_size;
 
         // 1) All decoding sequences get one token each (stall-free).
-        let decode_ids: Vec<(RequestId, u32)> = self
-            .running
-            .iter()
-            .filter(|s| s.prefill_complete() && !s.finished())
-            .map(|s| (s.id, s.context()))
-            .collect();
-        let mut preempted: Vec<RequestId> = Vec::new();
-        for (id, ctx) in decode_ids {
+        let mut decode_ids = std::mem::take(&mut self.scratch_decode);
+        decode_ids.clear();
+        decode_ids.extend(
+            self.running
+                .iter()
+                .filter(|s| s.prefill_complete() && !s.finished())
+                .map(|s| (s.id, s.context())),
+        );
+        let mut preempted = std::mem::take(&mut self.scratch_preempted);
+        preempted.clear();
+        for &(id, ctx) in &decode_ids {
             if budget == 0 {
                 break;
             }
@@ -421,6 +496,8 @@ impl InstanceEngine {
                 budget -= 1;
             }
         }
+        self.scratch_decode = decode_ids;
+        self.scratch_preempted = preempted;
 
         // 2) Ongoing prefills (chunked) in arrival order.
         for seq in self.running.iter_mut() {
@@ -467,7 +544,7 @@ impl InstanceEngine {
     /// allows, run a prefill-only batch (delaying decodes — the "stall
     /// bubbles" of Figure 2); otherwise a pure decode batch.
     fn form_vllm_batch(&mut self) -> BatchPlan {
-        let mut plan = BatchPlan::default();
+        let mut plan = self.take_plan();
 
         // Try a prefill batch first.
         if !self.waiting.is_empty()
@@ -495,14 +572,17 @@ impl InstanceEngine {
         }
 
         // Decode batch.
-        let decode_ids: Vec<(RequestId, u32)> = self
-            .running
-            .iter()
-            .filter(|s| s.prefill_complete() && !s.finished())
-            .map(|s| (s.id, s.context()))
-            .collect();
-        let mut preempted: Vec<RequestId> = Vec::new();
-        for (id, ctx) in decode_ids {
+        let mut decode_ids = std::mem::take(&mut self.scratch_decode);
+        decode_ids.clear();
+        decode_ids.extend(
+            self.running
+                .iter()
+                .filter(|s| s.prefill_complete() && !s.finished())
+                .map(|s| (s.id, s.context())),
+        );
+        let mut preempted = std::mem::take(&mut self.scratch_preempted);
+        preempted.clear();
+        for &(id, ctx) in &decode_ids {
             if preempted.contains(&id) {
                 continue; // preempted earlier in this batch formation
             }
@@ -510,6 +590,8 @@ impl InstanceEngine {
                 plan.decode.push(DecodeSeq { request: id, context: ctx });
             }
         }
+        self.scratch_decode = decode_ids;
+        self.scratch_preempted = preempted;
         plan
     }
 
@@ -519,6 +601,7 @@ impl InstanceEngine {
     pub fn snapshot(&self) -> InstanceStatus {
         InstanceStatus {
             now: self.clock,
+            epoch: self.epoch,
             free_blocks: self.bm.free_blocks(),
             total_blocks: self.bm.total_blocks(),
             watermark_blocks: self.bm.watermark_blocks(),
@@ -536,6 +619,7 @@ impl InstanceEngine {
                          status: &InstanceStatus) -> Self {
         let mut eng = InstanceEngine::new(cfg, num_blocks);
         eng.clock = status.now;
+        eng.epoch = status.epoch;
         eng.total_preemptions = status.total_preemptions;
         for snap in &status.running {
             let seq = snap.to_seq();
@@ -550,6 +634,43 @@ impl InstanceEngine {
         }
         eng.in_flight = status.in_flight.clone();
         eng
+    }
+
+    /// Rebuild this engine *in place* from a status snapshot, reusing
+    /// every allocation (seq vectors, block-manager free list and page
+    /// tables, plan/scratch buffers).  `plan_limit` supplies the planning
+    /// `response_limit` for each resident sequence — the Predictor's
+    /// length substitution applied on the fly, so the snapshot itself is
+    /// never cloned.  The snapshot's in-flight step is *not* installed;
+    /// replay it from the reference via [`Self::apply_step`].
+    pub fn reset_from_snapshot_with(
+        &mut self,
+        status: &InstanceStatus,
+        plan_limit: &mut dyn FnMut(&SeqSnapshot) -> u32,
+    ) {
+        self.epoch += 1;
+        self.bm.reset();
+        self.waiting.clear();
+        self.running.clear();
+        self.finished.clear();
+        self.in_flight = None;
+        self.clock = status.now;
+        self.total_preemptions = status.total_preemptions;
+        self.steps_executed = 0;
+        self.busy_time = 0.0;
+        self.noise = None;
+        for snap in &status.running {
+            let mut seq = snap.to_seq();
+            seq.response_limit = plan_limit(snap);
+            let ok = self.bm.allocate_seq(seq.id, seq.context().max(seq.prefill_target).max(1));
+            debug_assert!(ok, "snapshot overcommits memory");
+            self.running.push(seq);
+        }
+        for snap in &status.waiting {
+            let mut seq = snap.to_seq();
+            seq.response_limit = plan_limit(snap);
+            self.waiting.push_back(seq);
+        }
     }
 }
 
@@ -813,6 +934,82 @@ mod tests {
             fin.iter().map(|f| f.first_token).fold(0.0, f64::max)
         };
         assert!(max_ttft(10) > max_ttft(1));
+    }
+
+    #[test]
+    fn epoch_tracks_every_observable_mutation() {
+        let c = cost();
+        let mut eng = engine(LocalPolicy::SarathiChunked);
+        let e0 = eng.epoch();
+        eng.enqueue(&req(1, 0.0, 100, 10), 0.0);
+        assert!(eng.epoch() > e0, "enqueue must bump the epoch");
+        let e1 = eng.epoch();
+        eng.start_step(&c).unwrap();
+        assert!(eng.epoch() > e1, "start_step must bump the epoch");
+        let e2 = eng.epoch();
+        let snap_before = eng.snapshot();
+        assert_eq!(eng.epoch(), e2, "snapshot is read-only");
+        assert_eq!(eng.snapshot(), snap_before, "same epoch, same snapshot");
+        eng.finish_step();
+        assert!(eng.epoch() > e2, "finish_step must bump the epoch");
+        let e3 = eng.epoch();
+        eng.take_finished();
+        eng.advance_clock(eng.clock() - 1.0); // no-op: clock unchanged
+        assert_eq!(eng.epoch(), e3);
+        eng.advance_clock(eng.clock() + 1.0);
+        assert!(eng.epoch() > e3, "clock advance must bump the epoch");
+    }
+
+    #[test]
+    fn reset_from_snapshot_matches_fresh_rebuild() {
+        let c = cost();
+        let mut eng = engine(LocalPolicy::SarathiChunked);
+        for i in 0..12 {
+            eng.enqueue(&req(i, 0.0, 100 + i as u32 * 50, 40), 0.0);
+        }
+        for _ in 0..5 {
+            if eng.start_step(&c).is_some() {
+                eng.finish_step();
+                eng.take_finished();
+            }
+        }
+        let status = eng.snapshot();
+        let mut fresh = InstanceEngine::from_snapshot(
+            eng.cfg.clone(), eng.total_blocks(), &status);
+        // Reuse a dirty engine: load it with unrelated state first.
+        let mut reused = engine(LocalPolicy::SarathiChunked);
+        for i in 100..110 {
+            eng_dirty(&mut reused, i, &c);
+        }
+        reused.reset_from_snapshot_with(&status, &mut |s| s.response_limit);
+        assert_eq!(reused.free_blocks(), fresh.free_blocks());
+        assert_eq!(reused.running_len(), fresh.running_len());
+        assert_eq!(reused.waiting_len(), fresh.waiting_len());
+        assert!(reused.block_manager().check_conservation());
+        // The snapshot's in-flight step replays from the reference.
+        if let Some((plan, done)) = &status.in_flight {
+            fresh.finish_step();
+            reused.apply_step(plan, *done);
+        }
+        fresh.take_finished();
+        reused.clear_finished();
+        // Identical futures.
+        let a = run_to_completion(&mut fresh, &c);
+        let b = run_to_completion(&mut reused, &c);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert!((x.finish - y.finish).abs() < 1e-12);
+        }
+    }
+
+    /// Enqueue one request and run a couple of steps (dirties an engine).
+    fn eng_dirty(eng: &mut InstanceEngine, id: u64, c: &dyn BatchCost) {
+        eng.enqueue(&req(id, eng.clock(), 80, 5), eng.clock());
+        if eng.start_step(c).is_some() {
+            eng.finish_step();
+            eng.take_finished();
+        }
     }
 
     #[test]

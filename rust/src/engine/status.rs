@@ -60,9 +60,14 @@ impl SeqSnapshot {
 }
 
 /// Full instance status export.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct InstanceStatus {
     pub now: f64,
+    /// Engine mutation counter at snapshot time.  Two snapshots of the
+    /// same instance with equal epochs are guaranteed identical — the
+    /// cluster's snapshot cache and the Predictor's full-result memo both
+    /// key on it.
+    pub epoch: u64,
     pub free_blocks: u32,
     pub total_blocks: u32,
     pub watermark_blocks: u32,
@@ -71,6 +76,37 @@ pub struct InstanceStatus {
     /// The step currently executing, if any (plan + completion time).
     pub in_flight: Option<(BatchPlan, f64)>,
     pub total_preemptions: u64,
+}
+
+/// Constant-size load summary for heuristic dispatchers (Llumnix-,
+/// INFaaS++, round-robin).  Everything those schedulers read, exported
+/// without materializing the per-sequence snapshot vectors a full
+/// [`InstanceStatus`] carries.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstanceLoad {
+    pub free_blocks: u32,
+    pub total_blocks: u32,
+    /// Prompt tokens still waiting to be prefilled (Llumnix-'s
+    /// `prefillMemory` correction term).
+    pub pending_prefill_tokens: u64,
+    pub running: u32,
+    pub waiting: u32,
+}
+
+impl InstanceLoad {
+    pub fn used_blocks(&self) -> u32 {
+        self.total_blocks - self.free_blocks
+    }
+
+    pub fn from_status(st: &InstanceStatus) -> Self {
+        InstanceLoad {
+            free_blocks: st.free_blocks,
+            total_blocks: st.total_blocks,
+            pending_prefill_tokens: st.pending_prefill_tokens(),
+            running: st.running.len() as u32,
+            waiting: st.waiting.len() as u32,
+        }
+    }
 }
 
 impl InstanceStatus {
@@ -144,6 +180,7 @@ mod tests {
     fn pending_prefill_counts_waiting_and_partial() {
         let st = InstanceStatus {
             now: 0.0,
+            epoch: 0,
             free_blocks: 10,
             total_blocks: 20,
             watermark_blocks: 1,
@@ -156,6 +193,13 @@ mod tests {
         assert_eq!(st.pending_prefill_tokens(), 600);
         assert_eq!(st.used_blocks(), 10);
         assert_eq!(st.batch_size(), 2);
+        // The lightweight view agrees with the full snapshot field by
+        // field (heuristic schedulers read it instead).
+        let ld = InstanceLoad::from_status(&st);
+        assert_eq!(ld.used_blocks(), st.used_blocks());
+        assert_eq!(ld.pending_prefill_tokens, st.pending_prefill_tokens());
+        assert_eq!(ld.running, 2);
+        assert_eq!(ld.waiting, 1);
     }
 
     #[test]
@@ -169,6 +213,7 @@ mod tests {
     fn json_export_has_fields() {
         let st = InstanceStatus {
             now: 1.5,
+            epoch: 0,
             free_blocks: 10,
             total_blocks: 20,
             watermark_blocks: 1,

@@ -58,7 +58,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             cfg.engine.policy = policy;
             let res = run_experiment(cfg, &sharegpt_workload(qps, n, ctx.seed),
                                      SimOptions { probes: false,
-                                                  sample_prob: 0.0 })?;
+                                                  ..SimOptions::default() })?;
             let s = res.metrics.summary();
             let err = s.pred_error_rate.unwrap_or(f64::NAN);
             rows.push(vec![policy.name().into(), format!("{qps:.0}"),
@@ -75,7 +75,8 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
     let cfg = paper_cluster(SchedulerKind::Random);
     let res = run_experiment(cfg.clone(),
                              &sharegpt_workload(probe_qps, n, ctx.seed),
-                             SimOptions { probes: false, sample_prob: 0.02 })?;
+                             SimOptions { probes: false, sample_prob: 0.02,
+                                          ..SimOptions::default() })?;
     let cost = RooflineModel::from_profiles(&cfg.gpu, &cfg.model);
     let predictor = Predictor::new(cfg.engine.clone(), cfg.kv_blocks());
     let mut rank_hist = vec![0usize; cfg.n_instances];

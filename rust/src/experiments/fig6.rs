@@ -23,6 +23,7 @@ struct Point {
     summary: RunSummary,
     cdf_ttft: Vec<(f64, f64)>,
     cdf_e2e: Vec<(f64, f64)>,
+    pstats: Option<crate::scheduler::PredictorStats>,
 }
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
@@ -40,7 +41,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         let res = run_experiment(
             paper_cluster(kind),
             &sharegpt_workload(qps, n, ctx.seed),
-            SimOptions { probes: false, sample_prob: 0.0 },
+            SimOptions { probes: false, ..SimOptions::default() },
         )?;
         Ok(Point {
             qps,
@@ -48,6 +49,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             summary: res.metrics.summary(),
             cdf_ttft: res.metrics.cdf_ttft(40),
             cdf_e2e: res.metrics.cdf_e2e(40),
+            pstats: res.predictor_stats,
         })
     });
 
@@ -65,11 +67,18 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             format!("{:.2}", s.p99_e2e),
             format!("{:.1}", s.mean_overhead * 1e3),
             format!("{:.2}", s.throughput),
+            match &p.pstats {
+                Some(ps) => ps.rate_cell(),
+                None => "/".into(),
+            },
         ]);
         let mut j = s.to_json();
         if let Json::Obj(o) = &mut j {
             o.insert("qps", p.qps);
             o.insert("scheduler", p.kind.name());
+            if let Some(ps) = &p.pstats {
+                o.insert("predictor_stats", ps.to_json());
+            }
             // Figure 9: CDFs at this point.
             o.insert("cdf_ttft",
                      Json::Arr(p.cdf_ttft.iter()
@@ -86,7 +95,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
               ({}s of load per point)", ctx.scale.duration());
     println!("{}", render_table(
         &["qps", "scheduler", "mean TTFT", "p99 TTFT", "mean e2e",
-          "p99 e2e", "overhead(ms)", "thpt"],
+          "p99 e2e", "overhead(ms)", "thpt", "cache/memo/pool%"],
         &rows));
 
     // Capacity: max QPS under TTFT P99 < 3 s.
@@ -102,7 +111,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
                 let cap_n = ctx.scale.requests_for(qps);
                 run_experiment(paper_cluster(kind),
                                &sharegpt_workload(qps, cap_n, ctx.seed),
-                               SimOptions { probes: false, sample_prob: 0.0 })
+                               SimOptions { probes: false, ..SimOptions::default() })
                     .map(|r| r.metrics.summary().p99_ttft)
                     .unwrap_or(f64::INFINITY)
             },

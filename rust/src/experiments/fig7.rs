@@ -37,7 +37,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             let res = run_experiment(
                 cfg,
                 &sharegpt_workload(qps, n, ctx.seed),
-                SimOptions { probes: true, sample_prob: 0.0 },
+                SimOptions { probes: true, ..SimOptions::default() },
             )?;
             // Per-probe free-block average and cross-instance variance.
             let avg_series: Vec<f64> = res.probes.iter()

@@ -57,7 +57,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         cfg.provision.initial_instances = v.initial;
         cfg.provision.max_instances = 10;
         let requests = generate(&sharegpt_workload(OVERLOAD_QPS, n, ctx.seed))?;
-        Ok(ClusterSim::new(cfg, SimOptions { probes: true, sample_prob: 0.0 })
+        Ok(ClusterSim::new(cfg, SimOptions { probes: true, ..SimOptions::default() })
             .run(&requests))
     });
 
@@ -80,12 +80,18 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             format!("{final_size}"),
             format!("{}", res.provision_events.len()),
             format!("{:.0}", mean(&var_series)),
+            res.predictor_stats
+                .as_ref()
+                .map_or("/".into(), |ps| ps.rate_cell()),
         ]);
         let mut j = JsonObj::new();
         j.insert("mean_e2e", mean(&e2e));
         j.insert("p99_e2e", percentile(&e2e, 99.0));
         j.insert("over_threshold", over);
         j.insert("final_size", final_size);
+        if let Some(ps) = &res.predictor_stats {
+            j.insert("predictor_stats", ps.to_json());
+        }
         j.insert("provision_events",
                  Json::Arr(res.provision_events.iter().map(|e| {
                      let mut o = JsonObj::new();
@@ -112,7 +118,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
               (6 initial instances, threshold {threshold}s, {n} reqs)");
     println!("{}", render_table(
         &["strategy", "mean e2e", "p99 e2e", ">thresh reqs", "final size",
-          "provisions", "mean blocks var"],
+          "provisions", "mean blocks var", "cache/memo/pool%"],
         &rows));
     ctx.write_json("fig8", &Json::Obj(out))
 }

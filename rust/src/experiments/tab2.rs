@@ -64,11 +64,9 @@ const VARIANTS: &[Variant] = &[
               response_scale: 1.0, hi: 190.0, block_star: false },
 ];
 
-fn measure(cfg: ClusterConfig, wl: &WorkloadConfig, scale: f64) -> f64 {
-    let mut requests = match crate::workload::generate(wl) {
-        Ok(r) => r,
-        Err(_) => return f64::INFINITY,
-    };
+fn run_point(cfg: ClusterConfig, wl: &WorkloadConfig, scale: f64)
+             -> Option<crate::cluster::SimResult> {
+    let mut requests = crate::workload::generate(wl).ok()?;
     if scale != 1.0 {
         for r in &mut requests {
             r.response_tokens = ((r.response_tokens as f64 * scale).round()
@@ -79,12 +77,14 @@ fn measure(cfg: ClusterConfig, wl: &WorkloadConfig, scale: f64) -> f64 {
         let mut tagger = crate::tagger::NoisyOracleTagger::new(0.244, wl.seed);
         crate::tagger::tag_requests(&mut tagger, &mut requests);
     }
-    crate::cluster::ClusterSim::new(
-        cfg, SimOptions { probes: false, sample_prob: 0.0 })
-        .run(&requests)
-        .metrics
-        .summary()
-        .p99_ttft
+    Some(crate::cluster::ClusterSim::new(
+        cfg, SimOptions { probes: false, ..SimOptions::default() })
+        .run(&requests))
+}
+
+fn measure(cfg: ClusterConfig, wl: &WorkloadConfig, scale: f64) -> f64 {
+    run_point(cfg, wl, scale)
+        .map_or(f64::INFINITY, |r| r.metrics.summary().p99_ttft)
 }
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
@@ -154,6 +154,24 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         j.insert("gain_block_pct", gain);
         if let Some(g) = gain_star {
             j.insert("gain_blockstar_pct", g);
+        }
+        // One confirmation run at the found Block capacity, reporting the
+        // prediction-runtime counters (cache hit-rate, pool reuse) at the
+        // operating point the capacity claim rests on.
+        if block > 0.0 && block.is_finite() {
+            let wl = WorkloadConfig {
+                kind: v.workload.clone(),
+                qps: block,
+                n_requests: ctx.scale.requests_for(block),
+                seed: ctx.seed,
+            };
+            if let Some(stats) =
+                run_point((v.make_cfg)(SchedulerKind::Block), &wl,
+                          v.response_scale)
+                    .and_then(|r| r.predictor_stats)
+            {
+                j.insert("predictor_stats_at_capacity", stats.to_json());
+            }
         }
         out.insert(v.name, j);
     }

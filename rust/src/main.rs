@@ -119,7 +119,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         seed: args.flag_parse("seed", 7u64)?,
     };
     let res = run_experiment(cfg.clone(), &workload,
-                             SimOptions { probes: false, sample_prob: 0.0 })?;
+                             SimOptions { probes: false, ..SimOptions::default() })?;
     let s = res.metrics.summary();
     println!("scheduler={} instances={} qps={} requests={} (wall {:?})",
              cfg.scheduler.name(), cfg.n_instances, workload.qps, s.n,

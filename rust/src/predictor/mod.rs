@@ -20,8 +20,9 @@
 //! The Predictor is stateless across calls (bar the cache, which is pure
 //! memoization): it can be replicated freely — the paper runs 16 per
 //! host.  Accordingly every method takes `&self` and the memo cache is
-//! concurrent ([`cache::LatencyCache`] is lock-striped), so one Predictor
-//! instance serves Block's parallel per-candidate fan-out directly.
+//! concurrent ([`cache::LatencyCache`] is a lock-free open-addressing
+//! table), so one Predictor instance serves Block's parallel per-candidate
+//! fan-out directly.
 //!
 //! Forward simulations can also account for *in-transit* requests —
 //! requests the global scheduler has dispatched whose `Dispatch` event
@@ -29,8 +30,21 @@
 //! Without them, simultaneous arrivals all see the same idle instance and
 //! herd onto it (the in-transit blindness Llumnix's dispatcher guards
 //! against).
+//!
+//! Simulation engines are *pooled*: each prediction checks a reusable
+//! [`InstanceEngine`] out of a per-Predictor pool and resets it from the
+//! status snapshot in place ([`InstanceEngine::reset_from_snapshot_with`])
+//! — the snapshot is never cloned, the block-manager free list and page
+//! tables are recycled, and the planning-length substitution happens on
+//! the fly while the sequences are copied in.  The pre-refactor
+//! clone-and-rebuild path survives as
+//! [`Predictor::predict_with_pending_reference`], the parity baseline the
+//! tests and benches compare against.
 
 pub mod cache;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::config::EngineConfig;
 use crate::core::request::Request;
@@ -89,20 +103,69 @@ impl LengthOracle for EstimatedLengths<'_> {
     }
 }
 
+/// Checkout pool of reusable simulation engines.  The lock is held for a
+/// single `Vec` push/pop per prediction — contention is negligible next
+/// to a forward replay, and engines are fully reset on checkout, so
+/// pooling cannot affect results.
+struct EnginePool {
+    engines: Mutex<Vec<InstanceEngine>>,
+    created: AtomicU64,
+    reused: AtomicU64,
+}
+
+impl EnginePool {
+    fn new() -> Self {
+        EnginePool {
+            engines: Mutex::new(Vec::new()),
+            created: AtomicU64::new(0),
+            reused: AtomicU64::new(0),
+        }
+    }
+
+    fn checkout(&self, cfg: &EngineConfig, num_blocks: u32) -> InstanceEngine {
+        if let Some(eng) = self.engines.lock().unwrap().pop() {
+            self.reused.fetch_add(1, Ordering::Relaxed);
+            return eng;
+        }
+        self.created.fetch_add(1, Ordering::Relaxed);
+        InstanceEngine::new(cfg.clone(), num_blocks)
+    }
+
+    fn checkin(&self, eng: InstanceEngine) {
+        self.engines.lock().unwrap().push(eng);
+    }
+}
+
 /// The per-instance predictor.
 pub struct Predictor {
     cfg: EngineConfig,
     num_blocks: u32,
     cache: LatencyCache,
+    pool: EnginePool,
 }
 
 impl Predictor {
     pub fn new(cfg: EngineConfig, num_blocks: u32) -> Self {
-        Predictor { cfg, num_blocks, cache: LatencyCache::new() }
+        Predictor {
+            cfg,
+            num_blocks,
+            cache: LatencyCache::new(),
+            pool: EnginePool::new(),
+        }
     }
 
     pub fn cache_stats(&self) -> (u64, u64) {
         (self.cache.hits(), self.cache.misses())
+    }
+
+    /// (engines created, engines reused) by the simulation pool.  The
+    /// steady state creates at most one engine per concurrent fan-out
+    /// worker and reuses them for every later prediction.
+    pub fn pool_stats(&self) -> (u64, u64) {
+        (
+            self.pool.created.load(Ordering::Relaxed),
+            self.pool.reused.load(Ordering::Relaxed),
+        )
     }
 
     /// Predict the latency of `candidate` if dispatched to the instance in
@@ -122,7 +185,10 @@ impl Predictor {
     /// already dispatched to this instance whose `Dispatch` event has not
     /// landed yet.  They occupy the simulated queue ahead of the
     /// candidate, so the prediction reflects the load the candidate will
-    /// actually find.
+    /// actually find.  In-transit planning lengths resolve through
+    /// `lengths` (`planning_limit(id, true_limit)`), the same substitution
+    /// resident sequences get — callers no longer pre-normalize by cloning
+    /// each `Request`.
     pub fn predict_with_pending(
         &self,
         status: &InstanceStatus,
@@ -150,14 +216,18 @@ impl Predictor {
         self.simulate(status, candidate, cost, lengths, &[], false)
     }
 
-    fn simulate(
+    /// Pre-refactor prediction path: clone the snapshot, substitute the
+    /// planning lengths, rebuild a fresh engine, replay.  Kept verbatim as
+    /// the parity baseline — tests assert the pooled path below is
+    /// byte-identical to this, and the micro bench records it as the
+    /// "before" op in `BENCH_micro.json`.
+    pub fn predict_with_pending_reference(
         &self,
         status: &InstanceStatus,
         candidate: &Request,
         cost: &dyn BatchCost,
         lengths: &dyn LengthOracle,
         in_transit: &[Request],
-        use_cache: bool,
     ) -> Prediction {
         // 1) Rebuild the engine with substituted planning lengths.
         let mut st = status.clone();
@@ -177,7 +247,8 @@ impl Predictor {
         //    candidate, each with its planning length.
         for r in in_transit {
             let mut seq = SeqState::from_request(r, status.now);
-            seq.response_limit = r.planning_tokens().max(1);
+            seq.response_limit =
+                lengths.planning_limit(r.id, r.response_tokens).max(1);
             eng.enqueue_seq(seq);
         }
         let mut cand_seq = SeqState::from_request(candidate, status.now);
@@ -185,7 +256,70 @@ impl Predictor {
         let cand_id = cand_seq.id;
         eng.enqueue_seq(cand_seq);
 
-        // 3) Replay the local scheduler to candidate completion.
+        // Finish any in-flight step first.
+        if eng.busy_until().is_some() {
+            eng.finish_step();
+            eng.take_finished();
+        }
+        self.replay_to_completion(&mut eng, cand_id, status.now, cost, true)
+    }
+
+    fn simulate(
+        &self,
+        status: &InstanceStatus,
+        candidate: &Request,
+        cost: &dyn BatchCost,
+        lengths: &dyn LengthOracle,
+        in_transit: &[Request],
+        use_cache: bool,
+    ) -> Prediction {
+        let mut eng = self.pool.checkout(&self.cfg, self.num_blocks);
+
+        // 1) Rebuild in place, substituting planning lengths on the fly
+        //    (+10-step rule: never plan below what is already observed).
+        eng.reset_from_snapshot_with(status, &mut |snap| {
+            let planned = lengths.planning_limit(snap.id, snap.response_limit);
+            if snap.generated >= planned {
+                snap.generated + OVERRUN_GRACE
+            } else {
+                planned
+            }
+        });
+        // Apply the snapshot's in-flight step straight from the reference
+        // (commutes with the enqueues below: completions never admit).
+        if let Some((plan, done)) = &status.in_flight {
+            eng.apply_step(plan, *done);
+            eng.clear_finished();
+        }
+
+        // 2) Enqueue in-transit requests (dispatch order), then the
+        //    candidate, each with its planning length.
+        for r in in_transit {
+            let mut seq = SeqState::from_request(r, status.now);
+            seq.response_limit =
+                lengths.planning_limit(r.id, r.response_tokens).max(1);
+            eng.enqueue_seq(seq);
+        }
+        let mut cand_seq = SeqState::from_request(candidate, status.now);
+        cand_seq.response_limit = candidate.planning_tokens().max(1);
+        let cand_id = cand_seq.id;
+        eng.enqueue_seq(cand_seq);
+
+        let out =
+            self.replay_to_completion(&mut eng, cand_id, status.now, cost, use_cache);
+        self.pool.checkin(eng);
+        out
+    }
+
+    /// 3) Replay the local scheduler to candidate completion.
+    fn replay_to_completion(
+        &self,
+        eng: &mut InstanceEngine,
+        cand_id: u64,
+        origin: f64,
+        cost: &dyn BatchCost,
+        use_cache: bool,
+    ) -> Prediction {
         let cached;
         let cost: &dyn BatchCost = if use_cache {
             cached = self.cache.wrap(cost);
@@ -196,11 +330,6 @@ impl Predictor {
         let mut sim_work = 0u64;
         let mut sim_steps = 0u64;
         let mut ttft = None;
-        // Finish any in-flight step first.
-        if eng.busy_until().is_some() {
-            eng.finish_step();
-            eng.take_finished();
-        }
         loop {
             match eng.start_step(cost) {
                 Some(_) => {
@@ -215,19 +344,21 @@ impl Predictor {
                             eng.running_iter().find(|s| s.id == cand_id)
                         {
                             if let Some(t) = seq.first_token {
-                                ttft = Some(t - status.now);
+                                ttft = Some(t - origin);
                             }
                         }
                     }
-                    let finished = eng.take_finished();
-                    if let Some(f) = finished.iter().find(|f| f.id == cand_id) {
+                    if let Some(f) =
+                        eng.finished_iter().find(|f| f.id == cand_id)
+                    {
                         return Prediction {
-                            ttft: ttft.unwrap_or(f.first_token - status.now),
-                            e2e: f.finish - status.now,
+                            ttft: ttft.unwrap_or(f.first_token - origin),
+                            e2e: f.finish - origin,
                             sim_work,
                             sim_steps,
                         };
                     }
+                    eng.clear_finished();
                     if sim_steps >= MAX_SIM_STEPS {
                         break;
                     }
@@ -409,6 +540,48 @@ mod tests {
         // hit the warmed cache the two results would be identical.
         assert!(actual.e2e > clean.e2e * 1.05,
                 "noisy {} vs clean {}", actual.e2e, clean.e2e);
+    }
+
+    #[test]
+    fn pooled_path_matches_reference_exactly() {
+        let c = cost();
+        let mut eng = engine();
+        for i in 0..14 {
+            eng.enqueue(&req(i, 150 + 60 * i as u32, 20 + 15 * i as u32), 0.0);
+        }
+        for _ in 0..4 {
+            eng.start_step(&c).unwrap();
+            eng.finish_step();
+            eng.take_finished();
+        }
+        eng.start_step(&c).unwrap(); // leave a step in flight
+        let status = eng.snapshot();
+        let candidate = req(99, 300, 70);
+        let transiting = vec![req(90, 400, 50), req(91, 120, 20)];
+        let pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
+        let a = pred.predict_with_pending(&status, &candidate, &c,
+                                          &TrueLengths, &transiting);
+        let b = pred.predict_with_pending_reference(&status, &candidate, &c,
+                                                    &TrueLengths, &transiting);
+        assert_eq!(a, b, "pooled and reference paths must agree bit for bit");
+    }
+
+    #[test]
+    fn pool_reuses_engines_across_predictions() {
+        let c = cost();
+        let mut eng = engine();
+        for i in 0..8 {
+            eng.enqueue(&req(i, 200, 40), 0.0);
+        }
+        eng.start_step(&c).unwrap();
+        let status = eng.snapshot();
+        let pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
+        for i in 0..5 {
+            pred.predict(&status, &req(99 + i, 100, 30), &c, &TrueLengths);
+        }
+        let (created, reused) = pred.pool_stats();
+        assert_eq!(created, 1, "serial predictions need one engine");
+        assert_eq!(reused, 4, "later predictions reuse it");
     }
 
     #[test]

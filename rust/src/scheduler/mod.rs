@@ -6,10 +6,12 @@
 //! only its improved dispatcher, `Llumnix-`).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::config::{OverheadConfig, SchedulerKind};
 use crate::core::request::{Request, RequestId};
-use crate::engine::InstanceStatus;
+use crate::engine::{InstanceLoad, InstanceStatus};
 use crate::exec::BatchCost;
 use crate::predictor::{EstimatedLengths, LengthOracle, Prediction, Predictor,
                        TrueLengths};
@@ -19,6 +21,8 @@ use crate::util::rng::Rng;
 pub struct ClusterView<'a> {
     pub now: f64,
     /// Index-aligned; `None` marks deactivated / not-yet-provisioned hosts.
+    /// Heuristic-only cluster runs pass `&[]` here — those schedulers read
+    /// `loads` instead, so full snapshots are never materialized for them.
     pub statuses: &'a [Option<InstanceStatus>],
     /// Index-aligned in-transit requests: dispatched by the scheduler but
     /// not yet enqueued on the instance (the `Dispatch` event is still in
@@ -28,15 +32,44 @@ pub struct ClusterView<'a> {
     /// herd onto it.  May be shorter than `statuses` (missing ⇒ empty);
     /// unit tests that do not exercise in-transit load pass `&[]`.
     pub in_transit: &'a [Vec<Request>],
+    /// Index-aligned constant-size load summaries (`None` ⇒ inactive).
+    /// The lightweight view heuristic dispatchers rank by; when empty
+    /// (unit tests), [`Self::load_of`] falls back to deriving the same
+    /// numbers from `statuses`.
+    pub loads: &'a [Option<InstanceLoad>],
 }
 
 impl ClusterView<'_> {
     pub fn active_indices(&self) -> Vec<usize> {
-        self.statuses
-            .iter()
-            .enumerate()
-            .filter_map(|(i, s)| s.as_ref().map(|_| i))
-            .collect()
+        if !self.loads.is_empty() {
+            self.loads
+                .iter()
+                .enumerate()
+                .filter_map(|(i, l)| l.as_ref().map(|_| i))
+                .collect()
+        } else {
+            self.statuses
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| s.as_ref().map(|_| i))
+                .collect()
+        }
+    }
+
+    /// Instance slots the view spans (active or not).
+    pub fn n_slots(&self) -> usize {
+        self.statuses.len().max(self.loads.len())
+    }
+
+    /// Load summary for active instance `i`, from `loads` when populated,
+    /// else derived from the full snapshot (identical numbers — the
+    /// derivation is the same arithmetic over the same engine state).
+    pub fn load_of(&self, i: usize) -> InstanceLoad {
+        match self.loads.get(i) {
+            Some(Some(l)) => *l,
+            _ => InstanceLoad::from_status(
+                self.statuses[i].as_ref().expect("inactive instance probed")),
+        }
     }
 
     /// In-transit requests headed for instance `i` (empty if untracked).
@@ -69,12 +102,76 @@ pub struct Decision {
     pub all_predictions: Vec<(usize, f64)>,
 }
 
+/// Counters of the prediction runtime, surfaced in experiment reports.
+/// Deterministic for serial fan-outs; under `jobs > 1` insert races can
+/// shift a few cache hits to misses (values — and therefore decisions —
+/// are unaffected).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PredictorStats {
+    /// Batch-latency memo cache ([`crate::predictor::cache::LatencyCache`]).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Full-`Prediction` memo (per instance × epoch × plan × in-transit).
+    pub memo_hits: u64,
+    pub memo_misses: u64,
+    /// Simulation-engine pool.
+    pub pool_created: u64,
+    pub pool_reused: u64,
+}
+
+impl PredictorStats {
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 { 0.0 } else { self.cache_hits as f64 / total as f64 }
+    }
+
+    pub fn memo_hit_rate(&self) -> f64 {
+        let total = self.memo_hits + self.memo_misses;
+        if total == 0 { 0.0 } else { self.memo_hits as f64 / total as f64 }
+    }
+
+    pub fn pool_reuse_rate(&self) -> f64 {
+        let total = self.pool_created + self.pool_reused;
+        if total == 0 { 0.0 } else { self.pool_reused as f64 / total as f64 }
+    }
+
+    /// Machine-readable form for the experiment reports.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::JsonObj::new();
+        o.insert("cache_hits", self.cache_hits);
+        o.insert("cache_misses", self.cache_misses);
+        o.insert("cache_hit_rate", self.cache_hit_rate());
+        o.insert("memo_hits", self.memo_hits);
+        o.insert("memo_misses", self.memo_misses);
+        o.insert("memo_hit_rate", self.memo_hit_rate());
+        o.insert("pool_created", self.pool_created);
+        o.insert("pool_reused", self.pool_reused);
+        o.insert("pool_reuse_rate", self.pool_reuse_rate());
+        crate::util::json::Json::Obj(o)
+    }
+
+    /// Compact "cache/memo/pool hit%" cell for the report tables.
+    pub fn rate_cell(&self) -> String {
+        format!("{:.0}/{:.0}/{:.0}",
+                self.cache_hit_rate() * 100.0,
+                self.memo_hit_rate() * 100.0,
+                self.pool_reuse_rate() * 100.0)
+    }
+}
+
 pub trait GlobalScheduler {
     fn name(&self) -> &'static str;
     fn pick(&mut self, req: &Request, view: &ClusterView,
             cost: &dyn BatchCost) -> Decision;
     /// Notify of a completed request (for feedback-driven taggers etc.).
     fn on_finish(&mut self, _id: RequestId, _true_tokens: u32) {}
+    /// Prediction-runtime counters (Block family; None for heuristics).
+    fn predictor_stats(&self) -> Option<PredictorStats> {
+        None
+    }
+    /// Route predictions through the pre-refactor clone-and-rebuild path
+    /// with memoization disabled (parity baseline; no-op for heuristics).
+    fn set_reference_path(&mut self, _on: bool) {}
 }
 
 fn heuristic_decision(instance: usize, overhead: f64) -> Decision {
@@ -189,8 +286,8 @@ impl GlobalScheduler for MinQpmScheduler {
             _cost: &dyn BatchCost) -> Decision {
         let now = view.now;
         let active = view.active_indices();
-        if self.history.len() < view.statuses.len() {
-            self.history.resize(view.statuses.len(), Vec::new());
+        if self.history.len() < view.n_slots() {
+            self.history.resize(view.n_slots(), Vec::new());
         }
         let pick = active
             .iter()
@@ -251,9 +348,10 @@ impl InfaasScheduler {
     }
 
     /// usedMemory / batchSize, with in-transit dispatches counted as
-    /// memory already committed.
-    fn load(st: &InstanceStatus, in_transit_blocks: f64, max_batch: u32) -> f64 {
-        (st.used_blocks() as f64 + in_transit_blocks)
+    /// memory already committed.  Reads the constant-size
+    /// [`InstanceLoad`] view — no snapshot materialization on this path.
+    fn load(ld: &InstanceLoad, in_transit_blocks: f64, max_batch: u32) -> f64 {
+        (ld.used_blocks() as f64 + in_transit_blocks)
             / max_batch.max(1) as f64
     }
 }
@@ -268,7 +366,7 @@ impl GlobalScheduler for InfaasScheduler {
         let candidates = view.active_indices();
         let (block_size, max_batch) = (self.block_size, self.max_batch);
         let pick = min_load_pick(&candidates, &mut self.rng, |i| {
-            Self::load(view.statuses[i].as_ref().unwrap(),
+            Self::load(&view.load_of(i),
                        view.in_transit_blocks(i, block_size), max_batch)
         });
         heuristic_decision(pick, self.overhead)
@@ -307,13 +405,13 @@ impl GlobalScheduler for LlumnixScheduler {
         let candidates = view.active_indices();
         let (block_size, max_batch) = (self.block_size, self.max_batch);
         let pick = min_load_pick(&candidates, &mut self.rng, |i| {
-            let st = view.statuses[i].as_ref().unwrap();
+            let ld = view.load_of(i);
             // prefillMemory: queued prompts on the instance plus prompts
             // still in transit from the dispatcher.
             let prefill_blocks =
-                (st.pending_prefill_tokens() as f64 / block_size as f64).ceil()
+                (ld.pending_prefill_tokens as f64 / block_size as f64).ceil()
                     + view.in_transit_blocks(i, block_size);
-            (st.used_blocks() as f64 + prefill_blocks)
+            (ld.used_blocks() as f64 + prefill_blocks)
                 / max_batch.max(1) as f64
         });
         heuristic_decision(pick, self.overhead)
@@ -324,16 +422,46 @@ impl GlobalScheduler for LlumnixScheduler {
 // Block
 // ---------------------------------------------------------------------------
 
+/// Memo of full `Prediction`s for one instance, valid for exactly one
+/// status epoch.  Keyed by (candidate prompt, candidate planning length,
+/// in-transit key): with the epoch pinning the instance state *and* the
+/// resident-sequence oracle outputs (estimates only change when the
+/// instance itself changes), those three values determine the simulation
+/// input completely — a hit skips the forward replay outright.
+#[derive(Default)]
+struct InstanceMemo {
+    /// Epoch the entries were computed at (`None` = never filled).
+    epoch: Option<u64>,
+    entries: HashMap<(u32, u32, u64), Prediction>,
+}
+
+/// Hash of the (prompt, resolved planning limit) sequence of an
+/// in-transit set (`util::hash`) — the only attributes of those requests
+/// the simulation reads.  64-bit: a colliding pair is ~2⁻⁶⁴ per
+/// comparison and would only replay a stale memoized prediction, never
+/// corrupt state.
+fn transit_key(pend: &[Request], oracle: &dyn LengthOracle) -> u64 {
+    crate::util::hash::hash_words(pend.iter().flat_map(|r| {
+        [
+            r.prompt_tokens as u64,
+            oracle.planning_limit(r.id, r.response_tokens).max(1) as u64,
+        ]
+    }))
+}
+
 /// Block (§4): fan out to every instance's Predictor, dispatch to the
 /// minimum predicted e2e latency.  `use_estimates` switches Block* mode
 /// (plan with tagger predictions instead of ground truth).
 ///
 /// The fan-out is genuinely parallel when `jobs > 1` (the paper runs 16
 /// predictor replicas per host): per-candidate forward simulations run on
-/// scoped worker threads over one shared, lock-striped latency cache.
-/// The argmin is deterministic regardless of `jobs` — candidates are
-/// ranked by `(predicted e2e, instance index)` with a total order on
-/// f64, so parallel and serial runs make byte-identical decisions.
+/// scoped worker threads over one shared lock-free latency cache, with
+/// pooled simulation engines and a per-instance full-`Prediction` memo in
+/// front (unchanged instances re-probed with the same candidate shape
+/// skip the replay entirely).  The argmin is deterministic regardless of
+/// `jobs` — candidates are ranked by `(predicted e2e, instance index)`
+/// with a total order on f64, so parallel and serial runs make
+/// byte-identical decisions.
 pub struct BlockScheduler {
     predictor: Predictor,
     overhead_cfg: OverheadConfig,
@@ -347,6 +475,14 @@ pub struct BlockScheduler {
     /// Worker threads for the per-candidate fan-out (1 = serial).
     jobs: usize,
     rng: Rng,
+    /// Per-instance prediction memos (index-aligned with the view).
+    /// Mutexes are uncontended: one pick touches each instance from
+    /// exactly one worker.
+    memo: Vec<Mutex<InstanceMemo>>,
+    memo_hits: AtomicU64,
+    memo_misses: AtomicU64,
+    /// Parity baseline: clone-and-rebuild predictions, memo disabled.
+    reference_path: bool,
 }
 
 impl BlockScheduler {
@@ -360,6 +496,10 @@ impl BlockScheduler {
             sample_k: None,
             jobs: 1,
             rng: Rng::new(seed),
+            memo: Vec::new(),
+            memo_hits: AtomicU64::new(0),
+            memo_misses: AtomicU64::new(0),
+            reference_path: false,
         }
     }
 
@@ -384,6 +524,13 @@ impl BlockScheduler {
     /// deeply loaded instance) and results slot back by index, so output
     /// is identical for any `jobs`.
     ///
+    /// Each candidate first consults its [`InstanceMemo`]; a hit returns
+    /// the stored `Prediction` (including `sim_steps`, so the §6.3
+    /// overhead charge is byte-identical to a fresh replay).  In-transit
+    /// requests are passed by reference — their planning lengths resolve
+    /// through the length oracle inside the simulation, so no `Request`
+    /// is cloned per candidate.
+    ///
     /// Threads are spawned per pick: a spawn costs ~tens of µs while a
     /// loaded-candidate simulation costs hundreds of µs to ms, so the
     /// fan-out wins whenever parallelism matters (see the micro bench).
@@ -391,7 +538,6 @@ impl BlockScheduler {
     fn fan_out(
         &self,
         candidates: &[usize],
-        pending: &[Vec<Request>],
         planning_req: &Request,
         view: &ClusterView,
         cost: &dyn BatchCost,
@@ -404,15 +550,52 @@ impl BlockScheduler {
             &TrueLengths
         };
         let predictor = &self.predictor;
-        let items: Vec<(usize, &[Request])> = candidates
-            .iter()
-            .zip(pending)
-            .map(|(&i, p)| (i, p.as_slice()))
-            .collect();
-        crate::util::parallel::parallel_map(self.jobs, &items, |&(i, pend)| {
+        crate::util::parallel::parallel_map(self.jobs, candidates, |&i| {
             let st = view.statuses[i].as_ref().unwrap();
-            predictor.predict_with_pending(st, planning_req, cost, oracle, pend)
+            let pend = view.in_transit_for(i);
+            if self.reference_path {
+                return predictor.predict_with_pending_reference(
+                    st, planning_req, cost, oracle, pend);
+            }
+            let key = (
+                planning_req.prompt_tokens,
+                planning_req.planning_tokens().max(1),
+                transit_key(pend, oracle),
+            );
+            {
+                let mut memo = self.memo[i].lock().unwrap();
+                if memo.epoch == Some(st.epoch) {
+                    if let Some(p) = memo.entries.get(&key) {
+                        self.memo_hits.fetch_add(1, Ordering::Relaxed);
+                        return *p;
+                    }
+                } else {
+                    memo.epoch = Some(st.epoch);
+                    memo.entries.clear();
+                }
+            }
+            let p = predictor.predict_with_pending(
+                st, planning_req, cost, oracle, pend);
+            self.memo_misses.fetch_add(1, Ordering::Relaxed);
+            let mut memo = self.memo[i].lock().unwrap();
+            if memo.epoch == Some(st.epoch) {
+                memo.entries.insert(key, p);
+            }
+            p
         })
+    }
+
+    fn stats(&self) -> PredictorStats {
+        let (cache_hits, cache_misses) = self.predictor.cache_stats();
+        let (pool_created, pool_reused) = self.predictor.pool_stats();
+        PredictorStats {
+            cache_hits,
+            cache_misses,
+            memo_hits: self.memo_hits.load(Ordering::Relaxed),
+            memo_misses: self.memo_misses.load(Ordering::Relaxed),
+            pool_created,
+            pool_reused,
+        }
     }
 }
 
@@ -447,26 +630,13 @@ impl GlobalScheduler for BlockScheduler {
             }
         }
 
-        // In-transit requests per candidate, normalized the same way as
-        // the planning request (Block plans with ground truth).
-        let pending: Vec<Vec<Request>> = candidates
-            .iter()
-            .map(|&i| {
-                view.in_transit_for(i)
-                    .iter()
-                    .map(|r| {
-                        let mut r = r.clone();
-                        if !self.use_estimates {
-                            r.predicted_tokens = None;
-                        }
-                        r
-                    })
-                    .collect()
-            })
-            .collect();
+        // One memo per instance slot (auto-provisioning can grow the view).
+        let slots = view.n_slots();
+        if self.memo.len() < slots {
+            self.memo.resize_with(slots, Mutex::default);
+        }
 
-        let preds =
-            self.fan_out(&candidates, &pending, &planning_req, view, cost);
+        let preds = self.fan_out(&candidates, &planning_req, view, cost);
 
         // Deterministic argmin by (e2e, instance index): total order on
         // f64 (NaN/INF-safe) + index tie-break, so serial and parallel
@@ -511,6 +681,14 @@ impl GlobalScheduler for BlockScheduler {
 
     fn on_finish(&mut self, id: RequestId, _true_tokens: u32) {
         self.estimates.remove(&id);
+    }
+
+    fn predictor_stats(&self) -> Option<PredictorStats> {
+        Some(self.stats())
+    }
+
+    fn set_reference_path(&mut self, on: bool) {
+        self.reference_path = on;
     }
 }
 
@@ -581,6 +759,18 @@ mod tests {
             .collect()
     }
 
+    /// Status-backed view (tests exercise the `loads: &[]` fallback).
+    fn view_of(statuses: &[Option<InstanceStatus>]) -> ClusterView<'_> {
+        ClusterView { now: 0.0, statuses, in_transit: &[], loads: &[] }
+    }
+
+    fn view_with_transit<'a>(
+        statuses: &'a [Option<InstanceStatus>],
+        in_transit: &'a [Vec<Request>],
+    ) -> ClusterView<'a> {
+        ClusterView { now: 0.0, statuses, in_transit, loads: &[] }
+    }
+
     fn req() -> Request {
         Request::new(1, 0.0, 100, 50)
     }
@@ -588,7 +778,7 @@ mod tests {
     #[test]
     fn round_robin_cycles() {
         let statuses = make_statuses(&[0, 0, 0]);
-        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
+        let view = view_of(&statuses);
         let mut s = RoundRobinScheduler::new(&OverheadConfig::default());
         let picks: Vec<usize> =
             (0..6).map(|_| s.pick(&req(), &view, &cost()).instance).collect();
@@ -598,7 +788,7 @@ mod tests {
     #[test]
     fn random_covers_all_instances() {
         let statuses = make_statuses(&[0, 0, 0, 0]);
-        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
+        let view = view_of(&statuses);
         let mut s = RandomScheduler::new(1, &OverheadConfig::default());
         let mut seen = [false; 4];
         for _ in 0..100 {
@@ -610,7 +800,7 @@ mod tests {
     #[test]
     fn min_qpm_balances_dispatch_counts() {
         let statuses = make_statuses(&[0, 0, 0]);
-        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
+        let view = view_of(&statuses);
         let mut s = MinQpmScheduler::new(3, &OverheadConfig::default());
         let mut counts = [0usize; 3];
         for _ in 0..30 {
@@ -622,7 +812,7 @@ mod tests {
     #[test]
     fn infaas_prefers_low_memory_load() {
         let statuses = make_statuses(&[20, 0, 20]);
-        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
+        let view = view_of(&statuses);
         let mut s = InfaasScheduler::new(16, 48, &OverheadConfig::default(), 1);
         assert_eq!(s.pick(&req(), &view, &cost()).instance, 1);
     }
@@ -634,13 +824,13 @@ mod tests {
         let mut statuses = make_statuses(&[0, 0, 0]);
         statuses[2] = None;
         let mut s = RoundRobinScheduler::new(&OverheadConfig::default());
-        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
+        let view = view_of(&statuses);
         let first: Vec<usize> =
             (0..3).map(|_| s.pick(&req(), &view, &cost()).instance).collect();
         assert_eq!(first, vec![0, 1, 0]);
         // Instance 2 comes online (auto-provisioning).
         let grown = make_statuses(&[0, 0, 0]);
-        let view = ClusterView { now: 0.0, statuses: &grown, in_transit: &[] };
+        let view = view_of(&grown);
         let picks: Vec<usize> =
             (0..6).map(|_| s.pick(&req(), &view, &cost()).instance).collect();
         // Last pick was 0, so the rotation continues 1, 2, 0, 1, 2, 0 —
@@ -652,13 +842,13 @@ mod tests {
     fn round_robin_survives_active_set_shrink() {
         let statuses = make_statuses(&[0, 0, 0]);
         let mut s = RoundRobinScheduler::new(&OverheadConfig::default());
-        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
+        let view = view_of(&statuses);
         assert_eq!(s.pick(&req(), &view, &cost()).instance, 0);
         assert_eq!(s.pick(&req(), &view, &cost()).instance, 1);
         // Instance 2 deactivates while the cursor points past it.
         let mut shrunk = make_statuses(&[0, 0, 0]);
         shrunk[2] = None;
-        let view = ClusterView { now: 0.0, statuses: &shrunk, in_transit: &[] };
+        let view = view_of(&shrunk);
         let picks: Vec<usize> =
             (0..4).map(|_| s.pick(&req(), &view, &cost()).instance).collect();
         assert_eq!(picks, vec![0, 1, 0, 1]);
@@ -669,8 +859,7 @@ mod tests {
         // Two idle instances; one in-transit request headed for 0.
         let statuses = make_statuses(&[0, 0]);
         let in_transit = vec![vec![Request::new(50, 0.0, 640, 100)], vec![]];
-        let view = ClusterView { now: 0.0, statuses: &statuses,
-                                 in_transit: &in_transit };
+        let view = view_with_transit(&statuses, &in_transit);
         for seed in 0..8 {
             let mut infaas =
                 InfaasScheduler::new(16, 48, &OverheadConfig::default(), seed);
@@ -687,8 +876,7 @@ mod tests {
     fn block_sees_in_transit_load() {
         let statuses = make_statuses(&[0, 0]);
         let in_transit = vec![vec![Request::new(50, 0.0, 640, 200)], vec![]];
-        let view = ClusterView { now: 0.0, statuses: &statuses,
-                                 in_transit: &in_transit };
+        let view = view_with_transit(&statuses, &in_transit);
         let mut s = BlockScheduler::new(
             Predictor::new(EngineConfig::default(), 1056),
             &OverheadConfig::default(), false, 1);
@@ -715,7 +903,7 @@ mod tests {
         eng1.enqueue(&Request::new(900, 0.0, 300, 100), 0.0);
         eng1.start_step(&c);
         let statuses = vec![Some(eng0.snapshot()), Some(eng1.snapshot())];
-        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
+        let view = view_of(&statuses);
 
         let mut infaas =
             InfaasScheduler::new(16, 48, &OverheadConfig::default(), 1);
@@ -730,7 +918,7 @@ mod tests {
     #[test]
     fn block_picks_least_loaded_and_reports_predictions() {
         let statuses = make_statuses(&[30, 0, 15]);
-        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
+        let view = view_of(&statuses);
         let mut s = BlockScheduler::new(
             Predictor::new(EngineConfig::default(), 1056),
             &OverheadConfig::default(), false, 1);
@@ -751,9 +939,9 @@ mod tests {
         let mk = || BlockScheduler::new(
             Predictor::new(EngineConfig::default(), 1056),
             &OverheadConfig::default(), false, 1);
-        let o_idle = mk().pick(&req(), &ClusterView { now: 0.0, statuses: &idle, in_transit: &[] },
+        let o_idle = mk().pick(&req(), &view_of(&idle),
                                &cost()).overhead;
-        let o_busy = mk().pick(&req(), &ClusterView { now: 0.0, statuses: &busy, in_transit: &[] },
+        let o_busy = mk().pick(&req(), &view_of(&busy),
                                &cost()).overhead;
         assert!(o_busy > o_idle, "{o_busy} vs {o_idle}");
     }
@@ -761,7 +949,7 @@ mod tests {
     #[test]
     fn block_po2_predicts_subset() {
         let statuses = make_statuses(&[0; 8]);
-        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
+        let view = view_of(&statuses);
         let mut s = BlockScheduler::new(
             Predictor::new(EngineConfig::default(), 1056),
             &OverheadConfig::default(), false, 3)
@@ -775,7 +963,7 @@ mod tests {
         let mut statuses = make_statuses(&[0, 0, 0]);
         statuses[0] = None;
         statuses[2] = None;
-        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
+        let view = view_of(&statuses);
         for kind in SchedulerKind::ALL {
             let mut s = build_scheduler(kind, 3, &EngineConfig::default(), 1056,
                                         &OverheadConfig::default(), 7, 1);
@@ -804,8 +992,7 @@ mod tests {
                  Request::new(72, 0.0, 90, 20)],
             vec![], vec![], vec![],
         ];
-        let view = ClusterView { now: 0.0, statuses: &statuses,
-                                 in_transit: &in_transit };
+        let view = view_with_transit(&statuses, &in_transit);
         let mk = |jobs| BlockScheduler::new(
             Predictor::new(EngineConfig::default(), 1056),
             &OverheadConfig::default(), false, 1).with_jobs(jobs);
@@ -823,12 +1010,94 @@ mod tests {
     }
 
     #[test]
+    fn reprobe_of_unchanged_instances_hits_memo() {
+        let statuses = make_statuses(&[18, 0, 7, 25]);
+        let view = view_of(&statuses);
+        let mut s = BlockScheduler::new(
+            Predictor::new(EngineConfig::default(), 1056),
+            &OverheadConfig::default(), false, 1);
+        let first = s.pick(&req(), &view, &cost());
+        let stats1 = s.predictor_stats().unwrap();
+        assert_eq!(stats1.memo_hits, 0);
+        assert_eq!(stats1.memo_misses, 4);
+        // Same instants, same candidate shape, unchanged instances: the
+        // re-probe must skip every forward replay and still decide
+        // byte-identically.
+        let second = s.pick(&req(), &view, &cost());
+        let stats2 = s.predictor_stats().unwrap();
+        assert_eq!(stats2.memo_hits, 4, "all candidates memoized");
+        assert_eq!(stats2.memo_misses, 4);
+        assert_eq!(second, first);
+        // A different candidate shape misses the memo but not the epoch.
+        let other = Request::new(2, 0.0, 555, 80);
+        s.pick(&other, &view, &cost());
+        let stats3 = s.predictor_stats().unwrap();
+        assert_eq!(stats3.memo_misses, 8);
+    }
+
+    #[test]
+    fn reference_path_matches_optimized_decisions() {
+        // Mixed loads + in-transit requests, both Block and Block* oracle
+        // paths: the pooled/memoized pipeline must reproduce the
+        // clone-and-rebuild baseline exactly.
+        let statuses = make_statuses(&[30, 0, 15, 3, 22]);
+        let in_transit = vec![
+            vec![], vec![Request::new(70, 0.0, 400, 60)], vec![],
+            vec![Request::new(71, 0.0, 150, 30)], vec![],
+        ];
+        let view = view_with_transit(&statuses, &in_transit);
+        for use_estimates in [false, true] {
+            let mk = || BlockScheduler::new(
+                Predictor::new(EngineConfig::default(), 1056),
+                &OverheadConfig::default(), use_estimates, 1);
+            let mut optimized = mk();
+            let mut reference = mk();
+            GlobalScheduler::set_reference_path(&mut reference, true);
+            for probe in 0..3 {
+                let r = Request::new(probe, 0.0, 100 + 37 * probe as u32, 50);
+                let a = optimized.pick(&r, &view, &cost());
+                let b = reference.pick(&r, &view, &cost());
+                assert_eq!(a, b, "use_estimates={use_estimates} probe={probe}");
+            }
+            let stats = reference.predictor_stats().unwrap();
+            assert_eq!(stats.memo_hits, 0, "reference path must not memoize");
+        }
+    }
+
+    #[test]
+    fn heuristics_rank_by_lightweight_loads() {
+        // Populate `loads` (no statuses at all): heuristic decisions must
+        // match the status-derived ranking.
+        let statuses = make_statuses(&[20, 0, 20]);
+        let loads: Vec<Option<InstanceLoad>> = statuses
+            .iter()
+            .map(|s| s.as_ref().map(InstanceLoad::from_status))
+            .collect();
+        let view = ClusterView {
+            now: 0.0,
+            statuses: &[],
+            in_transit: &[],
+            loads: &loads,
+        };
+        let mut infaas =
+            InfaasScheduler::new(16, 48, &OverheadConfig::default(), 1);
+        assert_eq!(infaas.pick(&req(), &view, &cost()).instance, 1);
+        let mut llumnix =
+            LlumnixScheduler::new(16, 48, &OverheadConfig::default(), 1);
+        assert_eq!(llumnix.pick(&req(), &view, &cost()).instance, 1);
+        let mut rr = RoundRobinScheduler::new(&OverheadConfig::default());
+        let picks: Vec<usize> =
+            (0..3).map(|_| rr.pick(&req(), &view, &cost()).instance).collect();
+        assert_eq!(picks, vec![0, 1, 2]);
+    }
+
+    #[test]
     fn argmin_tie_breaks_by_instance_index() {
         // Identical idle instances → identical predictions; the fan-out
         // must deterministically pick the lowest index however many
         // workers race.
         let statuses = make_statuses(&[0, 0, 0, 0]);
-        let view = ClusterView { now: 0.0, statuses: &statuses, in_transit: &[] };
+        let view = view_of(&statuses);
         for jobs in [1, 3, 4] {
             let mut s = BlockScheduler::new(
                 Predictor::new(EngineConfig::default(), 1056),

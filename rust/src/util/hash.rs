@@ -1,0 +1,65 @@
+//! Shared non-cryptographic hashing for memo keys.
+//!
+//! One implementation serves every hot-path key: the latency cache's
+//! plan hash (`BatchPlan::key_hash`) and the scheduler's in-transit key.
+//! FNV-1a folds the words cheaply; the SplitMix64 finalizer fixes FNV's
+//! weak high bits, which power-of-two tables index with.
+
+/// FNV-1a over a word sequence, without finalization.  Use when folding
+/// incrementally and finalizing once at the end.
+pub fn fnv1a(seed: u64, values: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h = seed;
+    for v in values {
+        h ^= v;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// The canonical FNV-1a offset basis.
+pub const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+
+/// SplitMix64 finalizer: full-avalanche bit mixing of a 64-bit word.
+pub fn splitmix(mut h: u64) -> u64 {
+    h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    h ^ (h >> 31)
+}
+
+/// Hash a word sequence: FNV-1a fold + SplitMix64 finalizer.
+pub fn hash_words(values: impl IntoIterator<Item = u64>) -> u64 {
+    splitmix(fnv1a(FNV_OFFSET, values))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_inputs_distinct_hashes() {
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..64u64 {
+            for b in 0..64u64 {
+                seen.insert(hash_words([a, b]));
+            }
+        }
+        assert_eq!(seen.len(), 64 * 64);
+    }
+
+    #[test]
+    fn order_sensitive() {
+        assert_ne!(hash_words([1, 2]), hash_words([2, 1]));
+        assert_ne!(hash_words(std::iter::empty()), hash_words([0]));
+    }
+
+    #[test]
+    fn high_bits_are_mixed() {
+        // Power-of-two tables index with the low/high bits; sequential
+        // inputs must not collide modulo a small table.
+        let mut buckets = std::collections::HashSet::new();
+        for v in 0..256u64 {
+            buckets.insert(hash_words([v]) >> 48);
+        }
+        assert!(buckets.len() > 200, "only {} distinct", buckets.len());
+    }
+}

@@ -2,6 +2,7 @@
 //! and the ordered scoped-thread fan-out shared by the scheduler and the
 //! experiment harness.
 
+pub mod hash;
 pub mod json;
 pub mod logging;
 pub mod parallel;

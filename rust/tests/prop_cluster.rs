@@ -26,7 +26,8 @@ fn prop_every_scheduler_serves_all_requests() {
             seed: rng.next_u64(),
         };
         let res = run_experiment(cfg, &wl,
-                                 SimOptions { probes: true, sample_prob: 0.05 })
+                                 SimOptions { probes: true, sample_prob: 0.05,
+                                              ..SimOptions::default() })
             .unwrap();
         assert_eq!(res.metrics.len(), wl.n_requests);
         let served: usize = res.instances.iter().map(|i| i.requests_served).sum();
@@ -119,7 +120,8 @@ fn prop_block_dispatch_matches_min_prediction() {
             seed: rng.next_u64(),
         };
         let res = run_experiment(cfg, &wl,
-                                 SimOptions { probes: false, sample_prob: 0.3 })
+                                 SimOptions { probes: false, sample_prob: 0.3,
+                                              ..SimOptions::default() })
             .unwrap();
         for s in &res.sampled {
             let min = s

@@ -142,6 +142,70 @@ fn prop_sarathi_batches_respect_token_budget() {
 }
 
 #[test]
+fn prop_epoch_invalidates_snapshots_exactly() {
+    // The contract the cluster's snapshot cache rests on: after ANY
+    // sequence of engine operations, an unchanged epoch implies the
+    // cached snapshot equals a fresh `snapshot()` bit for bit.
+    check(505, 25, |rng, _| {
+        let cfg = EngineConfig {
+            max_batch_size: rng.randint(2, 48) as u32,
+            ..EngineConfig::default()
+        };
+        let blocks = rng.randint(140, 1056) as u32;
+        let mut eng = InstanceEngine::new(cfg, blocks);
+        let c = cost();
+        let mut cached = eng.snapshot();
+        let mut cached_epoch = eng.epoch();
+        let mut next_id = 0u64;
+        for _ in 0..150 {
+            match rng.index(6) {
+                0 => {
+                    let r = Request::new(
+                        next_id,
+                        eng.clock(),
+                        rng.randint(4, 700) as u32,
+                        rng.randint(1, 200) as u32,
+                    );
+                    next_id += 1;
+                    eng.enqueue(&r, eng.clock());
+                }
+                1 => {
+                    if eng.busy_until().is_none() {
+                        eng.start_step(&c);
+                    }
+                }
+                2 => {
+                    if eng.busy_until().is_some() {
+                        eng.finish_step();
+                    }
+                }
+                3 => {
+                    eng.take_finished();
+                }
+                4 => {
+                    if eng.busy_until().is_none() {
+                        let t = eng.clock() + rng.uniform(0.0, 2.0);
+                        eng.advance_clock(t);
+                    }
+                }
+                _ => {
+                    // Read-only probes must not invalidate anything.
+                    let _ = eng.load();
+                    let _ = eng.num_seqs();
+                }
+            }
+            if eng.epoch() == cached_epoch {
+                assert_eq!(eng.snapshot(), cached,
+                           "state changed without an epoch bump");
+            } else {
+                cached = eng.snapshot();
+                cached_epoch = eng.epoch();
+            }
+        }
+    });
+}
+
+#[test]
 fn prop_snapshot_roundtrip_equivalence() {
     check(404, 20, |rng, _| {
         let mut eng = InstanceEngine::new(EngineConfig::default(), 600);

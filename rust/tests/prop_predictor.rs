@@ -1,0 +1,106 @@
+//! Parity properties of the incremental prediction runtime: the pooled,
+//! reset-in-place Predictor must be byte-identical to the pre-refactor
+//! clone-and-rebuild reference across randomized instance states,
+//! in-transit sets, and length oracles.
+
+use std::collections::HashMap;
+
+use block::config::EngineConfig;
+use block::core::hw::{A30, LLAMA2_7B};
+use block::core::request::Request;
+use block::engine::InstanceEngine;
+use block::exec::roofline::RooflineModel;
+use block::predictor::{EstimatedLengths, LengthOracle, Predictor, TrueLengths};
+use block::testutil::prop::check;
+use block::util::rng::Rng;
+
+fn cost() -> RooflineModel {
+    RooflineModel::from_profiles(&A30, &LLAMA2_7B)
+}
+
+fn random_engine(rng: &mut Rng) -> InstanceEngine {
+    let blocks = rng.randint(200, 1056) as u32;
+    let mut eng = InstanceEngine::new(EngineConfig::default(), blocks);
+    let c = cost();
+    let n = rng.randint(0, 24) as usize;
+    for i in 0..n {
+        eng.enqueue(
+            &Request::new(
+                i as u64,
+                0.0,
+                rng.randint(4, 900) as u32,
+                rng.randint(1, 300) as u32,
+            ),
+            0.0,
+        );
+    }
+    for _ in 0..rng.randint(0, 12) {
+        if eng.start_step(&c).is_some() {
+            eng.finish_step();
+            eng.take_finished();
+        }
+    }
+    if rng.bernoulli(0.5) {
+        // Leave a step in flight half the time (the Predictor must replay
+        // it from the snapshot reference).
+        eng.start_step(&c);
+    }
+    eng
+}
+
+#[test]
+fn prop_pooled_predictor_matches_reference() {
+    check(606, 30, |rng, _| {
+        let eng = random_engine(rng);
+        let status = eng.snapshot();
+        let c = cost();
+
+        let in_transit: Vec<Request> = (0..rng.randint(0, 4))
+            .map(|k| {
+                Request::new(
+                    500 + k as u64,
+                    0.0,
+                    rng.randint(4, 600) as u32,
+                    rng.randint(1, 200) as u32,
+                )
+            })
+            .collect();
+        let candidate = Request::new(
+            999,
+            0.0,
+            rng.randint(4, 700) as u32,
+            rng.randint(1, 250) as u32,
+        );
+
+        // Random tagger estimates covering a subset of resident and
+        // in-transit ids (the Block* oracle path).
+        let mut est: HashMap<u64, u32> = HashMap::new();
+        for s in status.running.iter().chain(status.waiting.iter()) {
+            if rng.bernoulli(0.5) {
+                est.insert(s.id, rng.randint(1, 400) as u32);
+            }
+        }
+        for r in &in_transit {
+            if rng.bernoulli(0.5) {
+                est.insert(r.id, rng.randint(1, 400) as u32);
+            }
+        }
+
+        let pred = Predictor::new(eng.cfg.clone(), eng.total_blocks());
+        let estimated = EstimatedLengths { estimates: &est };
+        let oracles: [&dyn LengthOracle; 2] = [&TrueLengths, &estimated];
+        for oracle in oracles {
+            let a = pred.predict_with_pending(&status, &candidate, &c, oracle,
+                                              &in_transit);
+            let b = pred.predict_with_pending_reference(
+                &status, &candidate, &c, oracle, &in_transit);
+            assert_eq!(a, b, "pooled vs reference prediction diverged");
+            // Pool reuse must not leak state between predictions.
+            let a2 = pred.predict_with_pending(&status, &candidate, &c, oracle,
+                                               &in_transit);
+            assert_eq!(a2, a, "pooled prediction is not idempotent");
+        }
+        let (created, reused) = pred.pool_stats();
+        assert!(created >= 1 && reused >= 3, "pool must reuse engines");
+    });
+}
