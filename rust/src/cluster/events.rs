@@ -10,15 +10,22 @@ use std::collections::BinaryHeap;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum EventKind {
-    /// Request `idx` (into the run's request slice) reaches the global
-    /// scheduler.
-    Arrival(usize),
-    /// Request `idx` lands on instance `usize` after dispatch overhead.
-    Dispatch(usize, usize),
+    /// Request `.0` (an index into the run's request slice) reaches
+    /// scheduler front-end `.1` (always 0 in centralized deployments).
+    Arrival(usize, usize),
+    /// Request `.0` lands on instance `.1` after dispatch overhead; `.2`
+    /// is the front-end that dispatched it (owner of the in-transit
+    /// entry).
+    Dispatch(usize, usize, usize),
     /// Instance finished its in-flight step.
     StepDone(usize),
     /// A provisioned instance finished cold start.
     InstanceReady,
+    /// Front-end `usize` performs its periodic view pull (distributed
+    /// deployments, `sync_interval > 0`).  Re-armed after each firing
+    /// while arrivals remain, so the event queue drains once the run is
+    /// over.
+    ViewSync(usize),
 }
 
 #[derive(Debug, Clone)]
@@ -94,7 +101,7 @@ mod tests {
     fn pops_in_time_order() {
         let mut q = EventQueue::new();
         q.push(Event { time: 3.0, kind: EventKind::StepDone(0) });
-        q.push(Event { time: 1.0, kind: EventKind::Arrival(0) });
+        q.push(Event { time: 1.0, kind: EventKind::Arrival(0, 0) });
         q.push(Event { time: 2.0, kind: EventKind::InstanceReady });
         let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();
         assert_eq!(times, vec![1.0, 2.0, 3.0]);
@@ -103,12 +110,12 @@ mod tests {
     #[test]
     fn ties_fifo() {
         let mut q = EventQueue::new();
-        q.push(Event { time: 1.0, kind: EventKind::Arrival(1) });
-        q.push(Event { time: 1.0, kind: EventKind::Arrival(2) });
-        q.push(Event { time: 1.0, kind: EventKind::Arrival(3) });
+        q.push(Event { time: 1.0, kind: EventKind::Arrival(1, 0) });
+        q.push(Event { time: 1.0, kind: EventKind::Arrival(2, 0) });
+        q.push(Event { time: 1.0, kind: EventKind::Arrival(3, 0) });
         let order: Vec<usize> = std::iter::from_fn(|| q.pop())
             .map(|e| match e.kind {
-                EventKind::Arrival(i) => i,
+                EventKind::Arrival(i, _) => i,
                 _ => unreachable!(),
             })
             .collect();

@@ -1,0 +1,408 @@
+//! Distributed stateless scheduler front-ends over bounded-staleness
+//! cluster views.
+//!
+//! The paper's headline deployment is *fully distributed*: N independent
+//! scheduler front-ends, each making one-shot dispatch decisions with no
+//! shared state and no coordination.  What keeps that sound is that
+//! Block's decisions derive from *instance state snapshots* rather than
+//! from dispatcher-local bookkeeping — any front-end holding a
+//! reasonably recent view makes a reasonable decision, and the views are
+//! allowed to go stale between refreshes (bounded staleness) instead of
+//! requiring Llumnix-style centralized freshness.
+//!
+//! This module models that deployment inside the discrete-event cluster
+//! simulation (`cluster/`):
+//!
+//! * [`StaleClusterView`] — one front-end's private copy of the cluster
+//!   state: per-instance status snapshots and/or load summaries, plus the
+//!   instance epoch each slot was captured at.  Refreshed by periodic
+//!   `ViewSync` pulls every [`crate::config::ClusterConfig::sync_interval`]
+//!   seconds, and optionally by per-instance refreshes piggybacked on
+//!   dispatch acks (`sync_on_ack`).  The captured epoch can never exceed
+//!   the instance's live epoch — engine epochs only move forward — which
+//!   is the staleness invariant the property tests pin down.
+//! * [`FrontEnd`] — one stateless dispatcher: its own
+//!   [`GlobalScheduler`], its own view, and its own in-transit set (the
+//!   requests *it* dispatched whose `Dispatch` event has not landed).
+//!   A front-end cannot see its peers' in-transit requests — that
+//!   blindness is a real property of the distributed deployment, and it
+//!   is exactly what the staleness-sweep experiment measures.
+//! * [`ArrivalSharder`] — splits the arrival stream across front-ends by
+//!   a [`ShardPolicy`] (round-robin, stable hash, or Poisson thinning).
+//!
+//! With `frontends = 1, sync_interval = 0` the layer degenerates to the
+//! centralized single-scheduler deployment and reproduces its decisions
+//! byte for byte (parity test:
+//! `cluster::tests::cloned_view_runtime_matches_fresh_path_exactly`).
+
+use crate::config::ShardPolicy;
+use crate::core::request::Request;
+use crate::engine::{InstanceEngine, InstanceLoad, InstanceStatus};
+use crate::exec::BatchCost;
+use crate::scheduler::{ClusterView, Decision, GlobalScheduler, PredictorStats};
+use crate::util::rng::Rng;
+
+/// A front-end's possibly-stale private copy of the cluster state.
+///
+/// Each side (full statuses / lightweight loads) is materialized only
+/// when the front-end's scheduler family reads it: predictive schedulers
+/// need snapshots, heuristics need loads.  An unmaterialized side stays
+/// an empty vector, mirroring how the fresh-view fast path passes `&[]`
+/// for unread sides of [`ClusterView`].
+#[derive(Debug, Clone, Default)]
+pub struct StaleClusterView {
+    /// Index-aligned status snapshots (`None` = inactive at sync time);
+    /// empty when this view never syncs statuses.
+    statuses: Vec<Option<InstanceStatus>>,
+    /// Index-aligned load summaries; empty when never synced.
+    loads: Vec<Option<InstanceLoad>>,
+    /// Instance epoch observed when slot `i` was last captured (`None` =
+    /// never synced, or inactive at sync time).
+    epochs: Vec<Option<u64>>,
+    /// Virtual time of the most recent (full or per-instance) sync.
+    synced_at: f64,
+}
+
+impl StaleClusterView {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Status side of the view (empty until synced with statuses wanted).
+    pub fn statuses(&self) -> &[Option<InstanceStatus>] {
+        &self.statuses
+    }
+
+    /// Load side of the view (empty until synced with loads wanted).
+    pub fn loads(&self) -> &[Option<InstanceLoad>] {
+        &self.loads
+    }
+
+    /// Epoch slot `i` was captured at, if it has been captured.
+    pub fn epoch_of(&self, i: usize) -> Option<u64> {
+        self.epochs.get(i).copied().flatten()
+    }
+
+    /// Virtual time of the most recent sync.
+    pub fn synced_at(&self) -> f64 {
+        self.synced_at
+    }
+
+    /// Capture the full cluster state: one slot per engine, inactive
+    /// hosts recorded as `None`.  Sides not wanted are cleared so the
+    /// resulting [`ClusterView`] slices match what the fresh path passes.
+    pub fn sync_all(
+        &mut self,
+        engines: &[InstanceEngine],
+        active: &[bool],
+        now: f64,
+        want_statuses: bool,
+        want_loads: bool,
+    ) {
+        let slots = engines.len();
+        if self.epochs.len() != slots {
+            self.epochs.resize(slots, None);
+        }
+        if want_statuses {
+            if self.statuses.len() != slots {
+                self.statuses.resize(slots, None);
+            }
+        } else {
+            self.statuses.clear();
+        }
+        if want_loads {
+            if self.loads.len() != slots {
+                self.loads.resize(slots, None);
+            }
+        } else {
+            self.loads.clear();
+        }
+        for i in 0..slots {
+            if !active[i] {
+                if want_statuses {
+                    self.statuses[i] = None;
+                }
+                if want_loads {
+                    self.loads[i] = None;
+                }
+                self.epochs[i] = None;
+                continue;
+            }
+            // Equal epoch ⇒ identical engine state (every mutation bumps
+            // it), so a slot whose wanted sides are already materialized
+            // at the live epoch needs no re-export — the same
+            // memoization the centralized path's snapshot cache uses.
+            let epoch = engines[i].epoch();
+            if self.epochs[i] == Some(epoch)
+                && (!want_statuses || self.statuses[i].is_some())
+                && (!want_loads || self.loads[i].is_some())
+            {
+                continue;
+            }
+            if want_statuses {
+                self.statuses[i] = Some(engines[i].snapshot());
+            }
+            if want_loads {
+                self.loads[i] = Some(engines[i].load());
+            }
+            self.epochs[i] = Some(epoch);
+        }
+        self.synced_at = now;
+    }
+
+    /// Refresh exactly one slot (dispatch-ack piggyback): the instance
+    /// that just acked reports its current state to the dispatching
+    /// front-end.  Only sides this view already materializes are updated,
+    /// and a view that never fully synced is left untouched.
+    pub fn sync_instance(
+        &mut self,
+        i: usize,
+        engine: &InstanceEngine,
+        active: bool,
+        now: f64,
+    ) {
+        if i < self.epochs.len() {
+            self.epochs[i] = if active { Some(engine.epoch()) } else { None };
+            self.synced_at = self.synced_at.max(now);
+        }
+        if i < self.statuses.len() {
+            self.statuses[i] = if active { Some(engine.snapshot()) } else { None };
+        }
+        if i < self.loads.len() {
+            self.loads[i] = if active { Some(engine.load()) } else { None };
+        }
+    }
+}
+
+/// One stateless scheduler front-end.
+///
+/// Owns everything a distributed dispatcher owns in the paper's
+/// deployment: a scheduling policy, a bounded-staleness view, and the
+/// set of its own in-flight dispatches.  It shares *nothing* with its
+/// peers — no arrival history, no in-transit visibility, no view.
+pub struct FrontEnd {
+    /// Front-end index (stable across the run).
+    pub id: usize,
+    scheduler: Box<dyn GlobalScheduler>,
+    /// This front-end's private cluster view (stale deployments only;
+    /// stays empty on the fresh fast path).
+    pub view: StaleClusterView,
+    /// Per-instance requests this front-end dispatched whose `Dispatch`
+    /// event is still in flight.  Restores — per front-end — the
+    /// in-transit visibility the centralized scheduler has globally.
+    pub in_transit: Vec<Vec<Request>>,
+    /// Requests dispatched by this front-end (gateway-skew telemetry).
+    pub dispatched: u64,
+}
+
+impl FrontEnd {
+    pub fn new(id: usize, scheduler: Box<dyn GlobalScheduler>,
+               slots: usize) -> Self {
+        FrontEnd {
+            id,
+            scheduler,
+            view: StaleClusterView::new(),
+            in_transit: vec![Vec::new(); slots],
+            dispatched: 0,
+        }
+    }
+
+    /// Name of the wrapped scheduling policy.
+    pub fn name(&self) -> &'static str {
+        self.scheduler.name()
+    }
+
+    /// See [`GlobalScheduler::set_reference_path`].
+    pub fn set_reference_path(&mut self, on: bool) {
+        self.scheduler.set_reference_path(on);
+    }
+
+    /// See [`GlobalScheduler::on_finish`].
+    pub fn on_finish(&mut self, id: crate::core::request::RequestId,
+                     true_tokens: u32) {
+        self.scheduler.on_finish(id, true_tokens);
+    }
+
+    /// See [`GlobalScheduler::predictor_stats`].
+    pub fn predictor_stats(&self) -> Option<PredictorStats> {
+        self.scheduler.predictor_stats()
+    }
+
+    /// Make a dispatch decision for `req` at virtual time `now`.
+    ///
+    /// `fresh` carries borrowed always-fresh view slices (the centralized
+    /// fast path, where the simulator's epoch-cached snapshots are read
+    /// in place); `None` reads this front-end's own [`StaleClusterView`].
+    /// Either way the decision sees only *this* front-end's in-transit
+    /// set.
+    pub fn pick(
+        &mut self,
+        req: &Request,
+        now: f64,
+        fresh: Option<(&[Option<InstanceStatus>], &[Option<InstanceLoad>])>,
+        cost: &dyn BatchCost,
+    ) -> Decision {
+        let FrontEnd { scheduler, view, in_transit, dispatched, .. } = self;
+        let (statuses, loads) = match fresh {
+            Some((s, l)) => (s, l),
+            None => (view.statuses.as_slice(), view.loads.as_slice()),
+        };
+        let cluster_view = ClusterView {
+            now,
+            statuses,
+            in_transit: &in_transit[..],
+            loads,
+        };
+        let decision = scheduler.pick(req, &cluster_view, cost);
+        *dispatched += 1;
+        decision
+    }
+}
+
+/// Assigns each arrival to a front-end.
+///
+/// Deterministic given the seed; with a single front-end every policy
+/// short-circuits to front-end 0 without consuming randomness, so
+/// centralized runs are unaffected by the sharder's existence.
+pub struct ArrivalSharder {
+    policy: ShardPolicy,
+    n: usize,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl ArrivalSharder {
+    pub fn new(policy: ShardPolicy, n: usize, seed: u64) -> Self {
+        ArrivalSharder { policy, n: n.max(1), cursor: 0, rng: Rng::new(seed) }
+    }
+
+    /// Front-end index for this arrival.
+    pub fn assign(&mut self, req: &Request) -> usize {
+        if self.n == 1 {
+            return 0;
+        }
+        match self.policy {
+            ShardPolicy::RoundRobin => {
+                let f = self.cursor;
+                self.cursor = (self.cursor + 1) % self.n;
+                f
+            }
+            ShardPolicy::Hash => {
+                (crate::util::hash::hash_words([req.id]) % self.n as u64)
+                    as usize
+            }
+            ShardPolicy::Poisson => self.rng.index(self.n),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineConfig;
+    use crate::core::hw::{A30, LLAMA2_7B};
+    use crate::exec::roofline::RooflineModel;
+
+    fn engines(n: usize) -> Vec<InstanceEngine> {
+        (0..n)
+            .map(|_| InstanceEngine::new(EngineConfig::default(), 1056))
+            .collect()
+    }
+
+    #[test]
+    fn sharder_round_robin_rotates() {
+        let mut s = ArrivalSharder::new(ShardPolicy::RoundRobin, 3, 1);
+        let picks: Vec<usize> =
+            (0..6).map(|i| s.assign(&Request::new(i, 0.0, 10, 5))).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn sharder_hash_is_stable_and_covers() {
+        let mut s = ArrivalSharder::new(ShardPolicy::Hash, 4, 1);
+        let mut seen = [false; 4];
+        for id in 0..64 {
+            let r = Request::new(id, 0.0, 10, 5);
+            let a = s.assign(&r);
+            assert_eq!(a, s.assign(&r), "hash sharding must be stable");
+            seen[a] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "{seen:?}");
+    }
+
+    #[test]
+    fn sharder_poisson_covers_all() {
+        let mut s = ArrivalSharder::new(ShardPolicy::Poisson, 3, 7);
+        let mut seen = [false; 3];
+        for id in 0..64 {
+            seen[s.assign(&Request::new(id, 0.0, 10, 5))] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn single_frontend_always_zero() {
+        for policy in [ShardPolicy::RoundRobin, ShardPolicy::Hash,
+                       ShardPolicy::Poisson] {
+            let mut s = ArrivalSharder::new(policy, 1, 3);
+            for id in 0..8 {
+                assert_eq!(s.assign(&Request::new(id, 0.0, 10, 5)), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn view_sync_captures_wanted_sides_only() {
+        let engs = engines(3);
+        let active = vec![true, true, false];
+        let mut v = StaleClusterView::new();
+        assert!(v.statuses().is_empty() && v.loads().is_empty());
+
+        v.sync_all(&engs, &active, 1.0, false, true);
+        assert!(v.statuses().is_empty(), "statuses side not wanted");
+        assert_eq!(v.loads().len(), 3);
+        assert!(v.loads()[0].is_some() && v.loads()[2].is_none());
+        assert_eq!(v.epoch_of(0), Some(engs[0].epoch()));
+        assert_eq!(v.epoch_of(2), None, "inactive host exports nothing");
+        assert!((v.synced_at() - 1.0).abs() < 1e-12);
+
+        v.sync_all(&engs, &active, 2.0, true, false);
+        assert!(v.loads().is_empty(), "loads side cleared when not wanted");
+        assert_eq!(v.statuses().len(), 3);
+        assert!(v.statuses()[1].is_some());
+    }
+
+    #[test]
+    fn view_goes_stale_and_resyncs() {
+        let cost = RooflineModel::from_profiles(&A30, &LLAMA2_7B);
+        let mut engs = engines(2);
+        let active = vec![true, true];
+        let mut v = StaleClusterView::new();
+        v.sync_all(&engs, &active, 0.0, true, true);
+        let stale_epoch = v.epoch_of(0).unwrap();
+
+        // Mutate instance 0: the view must keep reporting the old state.
+        engs[0].enqueue(&Request::new(9, 0.0, 200, 50), 0.0);
+        engs[0].start_step(&cost);
+        assert!(engs[0].epoch() > stale_epoch);
+        assert_eq!(v.epoch_of(0), Some(stale_epoch), "view must stay stale");
+        assert_eq!(v.loads()[0].unwrap().running + v.loads()[0].unwrap().waiting,
+                   0, "stale view still sees the idle instance");
+
+        // Ack-piggyback refresh of just instance 0.
+        v.sync_instance(0, &engs[0], true, 3.0);
+        assert_eq!(v.epoch_of(0), Some(engs[0].epoch()));
+        assert!(v.loads()[0].unwrap().running >= 1);
+        // Instance 1's slot is untouched.
+        assert_eq!(v.epoch_of(1), Some(engs[1].epoch()));
+    }
+
+    #[test]
+    fn sync_instance_noop_before_first_full_sync() {
+        let engs = engines(2);
+        let mut v = StaleClusterView::new();
+        v.sync_instance(0, &engs[0], true, 1.0);
+        assert!(v.statuses().is_empty() && v.loads().is_empty());
+        assert_eq!(v.epoch_of(0), None);
+    }
+}

@@ -1,6 +1,6 @@
 //! Cluster runtime: a discrete-event simulation wiring the full paper
-//! pipeline — workload → length tagger → global scheduler → instance
-//! engines → metrics — over virtual time.
+//! pipeline — workload → length tagger → scheduler front-end(s) →
+//! instance engines → metrics — over virtual time.
 //!
 //! Virtual time is what lets one process replay a 12-instance, 10k-request
 //! serving hour in seconds while preserving every queueing/preemption
@@ -8,8 +8,19 @@
 //! *logic* under simulation — engines, predictor, schedulers — is the
 //! production code; only the execution-time source (`exec::BatchCost`)
 //! and the clock differ from the real-serving mode (`server/`).
+//!
+//! Dispatch runs through one or more [`frontend::FrontEnd`]s (the paper's
+//! distributed stateless schedulers).  The default —
+//! `frontends = 1, sync_interval = 0` — is the centralized deployment:
+//! one dispatcher reading the simulator's always-fresh epoch-cached
+//! snapshots in place.  With `sync_interval > 0` each front-end instead
+//! decides from its own [`frontend::StaleClusterView`], refreshed by
+//! periodic [`events::EventKind::ViewSync`] pulls (and optionally on
+//! dispatch acks), and arrivals are sharded across front-ends by
+//! [`crate::config::ShardPolicy`].
 
 pub mod events;
+pub mod frontend;
 
 use std::collections::HashMap;
 
@@ -19,10 +30,10 @@ use crate::engine::{InstanceEngine, InstanceLoad, InstanceStatus};
 use crate::exec::roofline::RooflineModel;
 use crate::metrics::MetricsCollector;
 use crate::provision::AutoProvisioner;
-use crate::scheduler::{build_scheduler, ClusterView, Decision, GlobalScheduler,
-                       PredictorStats};
+use crate::scheduler::{build_scheduler, Decision, PredictorStats};
 use crate::util::rng::Rng;
 use events::{Event, EventKind, EventQueue};
+use frontend::{ArrivalSharder, FrontEnd};
 
 /// Per-arrival cluster probe (Figure 7's memory telemetry).
 #[derive(Debug, Clone)]
@@ -61,8 +72,12 @@ pub struct SimResult {
     pub provision_events: Vec<crate::provision::ProvisionEvent>,
     /// (time, active_count) steps of the cluster size (Figure 8).
     pub size_timeline: Vec<(f64, usize)>,
-    /// Prediction-runtime counters (Block family; None for heuristics).
+    /// Prediction-runtime counters, summed over front-ends (Block family;
+    /// None for heuristics).
     pub predictor_stats: Option<PredictorStats>,
+    /// Requests dispatched by each front-end (gateway-skew telemetry;
+    /// a single entry in centralized runs).
+    pub frontend_dispatches: Vec<u64>,
     pub wall_time: std::time::Duration,
 }
 
@@ -78,11 +93,24 @@ pub struct SimOptions {
     /// prediction memo).  The parity baseline — results must be
     /// byte-identical to the optimized path.
     pub reference_path: bool,
+    /// Route dispatch through the distributed-view machinery even in the
+    /// centralized `sync_interval = 0` deployment: every arrival clones
+    /// the cluster state into the front-end's [`frontend::StaleClusterView`]
+    /// and decides from the clone.  The parity baseline for the
+    /// front-end layer — results must be byte-identical to the
+    /// borrowed-fresh-view fast path.  No effect when `sync_interval > 0`
+    /// (views are already routed through the stale machinery).
+    pub cloned_view_path: bool,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { sample_prob: 0.0, probes: true, reference_path: false }
+        SimOptions {
+            sample_prob: 0.0,
+            probes: true,
+            reference_path: false,
+            cloned_view_path: false,
+        }
     }
 }
 
@@ -90,6 +118,8 @@ struct DispatchInfo {
     arrival: f64,
     dispatched: f64,
     instance: usize,
+    /// Front-end that made the decision (owns the in-transit entry).
+    frontend: usize,
     overhead: f64,
     predicted: Option<f64>,
     prompt_tokens: u32,
@@ -102,15 +132,17 @@ pub struct ClusterSim {
     opts: SimOptions,
     engines: Vec<InstanceEngine>,
     cost: RooflineModel,
-    scheduler: Box<dyn GlobalScheduler>,
+    /// Scheduler front-ends (one in centralized deployments).  Each owns
+    /// its policy instance, its possibly-stale cluster view, and its own
+    /// in-transit set — requests it dispatched whose `Dispatch` event is
+    /// still in the queue.  Engine snapshots cannot see in-transit
+    /// requests, so the view carries them explicitly; without this,
+    /// simultaneous arrivals all observe the same idle instance and herd
+    /// onto it.
+    frontends: Vec<FrontEnd>,
+    sharder: ArrivalSharder,
     provisioner: AutoProvisioner,
     in_flight_meta: HashMap<RequestId, DispatchInfo>,
-    /// Per-instance requests dispatched but not yet enqueued (their
-    /// `Dispatch` event is still in the queue).  Engine snapshots cannot
-    /// see these, so the scheduler view carries them explicitly —
-    /// without this, simultaneous arrivals all observe the same idle
-    /// instance and herd onto it.
-    in_transit: Vec<Vec<Request>>,
     served_by: Vec<usize>,
     rng: Rng,
     /// Per-instance snapshot cache, invalidated by the engine's epoch
@@ -141,12 +173,27 @@ impl ClusterSim {
             })
             .collect();
         let cost = RooflineModel::from_profiles(&cfg.gpu, &cfg.model);
-        let mut scheduler = build_scheduler(cfg.scheduler, total, &cfg.engine,
-                                            blocks, &cfg.overhead,
-                                            cfg.seed ^ 0x5C, cfg.jobs);
-        if opts.reference_path {
-            scheduler.set_reference_path(true);
-        }
+        // Front-end 0 uses the exact centralized seed, so single-front-end
+        // runs reproduce the pre-distributed scheduler byte for byte;
+        // peers fork deterministically off the same base.
+        let frontends: Vec<FrontEnd> = (0..cfg.frontends.max(1))
+            .map(|f| {
+                let seed = (cfg.seed ^ 0x5C)
+                    ^ (f as u64).wrapping_mul(0x9E3779B97F4A7C15);
+                let mut fe = FrontEnd::new(
+                    f,
+                    build_scheduler(cfg.scheduler, total, &cfg.engine, blocks,
+                                    &cfg.overhead, seed, cfg.jobs),
+                    total,
+                );
+                if opts.reference_path {
+                    fe.set_reference_path(true);
+                }
+                fe
+            })
+            .collect();
+        let sharder = ArrivalSharder::new(cfg.shard_policy, frontends.len(),
+                                          cfg.seed ^ 0xF3);
         let provisioner = if cfg.provision.enabled {
             AutoProvisioner::new(cfg.provision.clone(), total)
         } else {
@@ -157,10 +204,10 @@ impl ClusterSim {
             opts,
             engines,
             cost,
-            scheduler,
+            frontends,
+            sharder,
             provisioner,
             in_flight_meta: HashMap::new(),
-            in_transit: vec![Vec::new(); total],
             served_by: vec![0; total],
             rng,
             status_cache: vec![None; total],
@@ -208,6 +255,16 @@ impl ClusterSim {
         }
     }
 
+    /// Pull the cluster state into front-end `f`'s private view (the
+    /// distributed deployments' `ViewSync`; also the per-arrival clone in
+    /// the `cloned_view_path` parity mode).
+    fn sync_frontend(&mut self, f: usize, now: f64, want_statuses: bool,
+                     want_loads: bool) {
+        let fe = &mut self.frontends[f];
+        fe.view.sync_all(&self.engines, self.provisioner.active(), now,
+                         want_statuses, want_loads);
+    }
+
     fn kick_engine(&mut self, i: usize, queue: &mut EventQueue) {
         if self.engines[i].busy_until().is_none() {
             if let Some(done) = self.engines[i].start_step(&self.cost) {
@@ -221,7 +278,28 @@ impl ClusterSim {
         let t0 = std::time::Instant::now();
         let mut queue = EventQueue::new();
         for (idx, r) in requests.iter().enumerate() {
-            queue.push(Event { time: r.arrival, kind: EventKind::Arrival(idx) });
+            let f = self.sharder.assign(r);
+            queue.push(Event { time: r.arrival,
+                               kind: EventKind::Arrival(idx, f) });
+        }
+        // `sync_interval > 0` switches dispatch to bounded-staleness
+        // views: seed every front-end's view with the (idle) t=0 state,
+        // then arm the periodic pulls.  The pulls re-arm themselves while
+        // arrivals remain, so the queue drains once the run is over.
+        let stale_views = self.cfg.sync_interval > 0.0;
+        let mut arrivals_remaining = requests.len();
+        // What a periodic view pull materializes: snapshots feed the
+        // Block family's Predictor, load summaries feed the heuristics —
+        // never both (the unread side would be cloned and ignored).
+        let want_statuses = self.cfg.scheduler.is_predictive()
+            || self.opts.reference_path;
+        let want_loads = !self.cfg.scheduler.is_predictive();
+        if stale_views {
+            for f in 0..self.frontends.len() {
+                self.sync_frontend(f, 0.0, want_statuses, want_loads);
+                queue.push(Event { time: self.cfg.sync_interval,
+                                   kind: EventKind::ViewSync(f) });
+            }
         }
 
         let mut metrics = MetricsCollector::new();
@@ -232,7 +310,8 @@ impl ClusterSim {
         while let Some(ev) = queue.pop() {
             let now = ev.time;
             match ev.kind {
-                EventKind::Arrival(idx) => {
+                EventKind::Arrival(idx, f) => {
+                    arrivals_remaining -= 1;
                     let req = &requests[idx];
                     // Each view side is only computed when something will
                     // read it: loads feed heuristic dispatchers and the
@@ -243,23 +322,42 @@ impl ClusterSim {
                         || self.opts.reference_path;
                     let need_loads =
                         !self.cfg.scheduler.is_predictive() || self.opts.probes;
-                    if need_statuses {
-                        self.refresh_statuses();
-                    }
-                    if need_loads {
+                    if !stale_views {
+                        if need_statuses {
+                            self.refresh_statuses();
+                        }
+                        if need_loads {
+                            self.refresh_loads();
+                        }
+                        if self.opts.cloned_view_path {
+                            // Parity mode: decide from a per-arrival clone
+                            // of the fresh state instead of borrowing it.
+                            self.sync_frontend(f, now, need_statuses,
+                                               need_loads);
+                        }
+                    } else if self.opts.probes {
+                        // Probe telemetry always reports the *true* loads;
+                        // only the dispatch decision sees the stale view.
                         self.refresh_loads();
                     }
-                    let statuses: &[Option<InstanceStatus>] =
-                        if need_statuses { &self.status_cache } else { &[] };
-                    let loads: &[Option<InstanceLoad>] =
-                        if need_loads { &self.loads } else { &[] };
-                    let view = ClusterView {
-                        now,
-                        statuses,
-                        in_transit: &self.in_transit,
-                        loads,
+                    let decision = {
+                        let via_view =
+                            stale_views || self.opts.cloned_view_path;
+                        let fe = &mut self.frontends[f];
+                        let fresh: Option<(&[Option<InstanceStatus>],
+                                           &[Option<InstanceLoad>])> =
+                            if via_view {
+                                None
+                            } else {
+                                let statuses: &[Option<InstanceStatus>] =
+                                    if need_statuses { &self.status_cache }
+                                    else { &[] };
+                                let loads: &[Option<InstanceLoad>] =
+                                    if need_loads { &self.loads } else { &[] };
+                                Some((statuses, loads))
+                            };
+                        fe.pick(req, now, fresh, &self.cost)
                     };
-                    let decision = self.scheduler.pick(req, &view, &self.cost);
 
                     if self.opts.probes {
                         probes.push(Probe {
@@ -314,13 +412,16 @@ impl ClusterSim {
                     }
 
                     // The request is now in transit to its instance until
-                    // the Dispatch event lands.
-                    self.in_transit[decision.instance].push(req.clone());
+                    // the Dispatch event lands — visible only to the
+                    // front-end that dispatched it.
+                    self.frontends[f].in_transit[decision.instance]
+                        .push(req.clone());
 
                     self.in_flight_meta.insert(req.id, DispatchInfo {
                         arrival: req.arrival,
                         dispatched: now + decision.overhead,
                         instance: decision.instance,
+                        frontend: f,
                         overhead: decision.overhead,
                         predicted: decision.predicted_e2e,
                         prompt_tokens: req.prompt_tokens,
@@ -328,14 +429,23 @@ impl ClusterSim {
                     });
                     queue.push(Event {
                         time: now + decision.overhead,
-                        kind: EventKind::Dispatch(idx, decision.instance),
+                        kind: EventKind::Dispatch(idx, decision.instance, f),
                     });
                 }
-                EventKind::Dispatch(idx, instance) => {
+                EventKind::Dispatch(idx, instance, f) => {
                     let req = &requests[idx];
-                    self.in_transit[instance].retain(|r| r.id != req.id);
+                    self.frontends[f].in_transit[instance]
+                        .retain(|r| r.id != req.id);
                     self.engines[instance].enqueue(req, now);
                     self.kick_engine(instance, &mut queue);
+                    if stale_views && self.cfg.sync_on_ack {
+                        // The enqueue ack carries the instance's current
+                        // state back to the dispatching front-end.
+                        let fe = &mut self.frontends[f];
+                        fe.view.sync_instance(
+                            instance, &self.engines[instance],
+                            self.provisioner.active()[instance], now);
+                    }
                 }
                 EventKind::StepDone(i) => {
                     self.engines[i].finish_step();
@@ -345,7 +455,8 @@ impl ClusterSim {
                             .remove(&f.id)
                             .expect("finished unknown request");
                         self.served_by[i] += 1;
-                        self.scheduler.on_finish(f.id, info.response_tokens);
+                        self.frontends[info.frontend]
+                            .on_finish(f.id, info.response_tokens);
                         let m = RequestMetrics {
                             id: f.id,
                             instance: i,
@@ -380,6 +491,15 @@ impl ClusterSim {
                     }
                     size_timeline.push((now, self.provisioner.active_count()));
                 }
+                EventKind::ViewSync(f) => {
+                    self.sync_frontend(f, now, want_statuses, want_loads);
+                    if arrivals_remaining > 0 {
+                        queue.push(Event {
+                            time: now + self.cfg.sync_interval,
+                            kind: EventKind::ViewSync(f),
+                        });
+                    }
+                }
             }
         }
 
@@ -395,6 +515,16 @@ impl ClusterSim {
             })
             .collect();
 
+        let mut predictor_stats: Option<PredictorStats> = None;
+        for fe in &self.frontends {
+            if let Some(s) = fe.predictor_stats() {
+                match predictor_stats.as_mut() {
+                    Some(acc) => acc.merge(&s),
+                    None => predictor_stats = Some(s),
+                }
+            }
+        }
+
         SimResult {
             metrics,
             probes,
@@ -402,7 +532,12 @@ impl ClusterSim {
             instances,
             provision_events: self.provisioner.events.clone(),
             size_timeline,
-            predictor_stats: self.scheduler.predictor_stats(),
+            predictor_stats,
+            frontend_dispatches: self
+                .frontends
+                .iter()
+                .map(|fe| fe.dispatched)
+                .collect(),
             wall_time: t0.elapsed(),
         }
     }
@@ -521,6 +656,100 @@ mod tests {
                            "{} jobs={jobs}", kind.name());
             }
         }
+    }
+
+    #[test]
+    fn cloned_view_runtime_matches_fresh_path_exactly() {
+        // The acceptance bar for the distributed front-end layer:
+        // `frontends = 1, sync_interval = 0` routed through the
+        // StaleClusterView machinery (cluster state cloned into the
+        // front-end's view at every arrival) must reproduce the
+        // borrowed-fresh-view single-scheduler path byte for byte — same
+        // placements, same timings, same summaries.
+        for kind in [SchedulerKind::Block, SchedulerKind::BlockStar,
+                     SchedulerKind::LlumnixMinus, SchedulerKind::MinQpm,
+                     SchedulerKind::RoundRobin] {
+            let run = |cloned: bool| {
+                run_experiment(small_cfg(kind), &small_workload(9.0, 250),
+                               SimOptions { cloned_view_path: cloned,
+                                            ..SimOptions::default() })
+                    .unwrap()
+            };
+            let fresh = run(false);
+            let cloned = run(true);
+            assert_eq!(fresh.metrics.summary(), cloned.metrics.summary(),
+                       "{}", kind.name());
+            let placements = |r: &SimResult| -> Vec<(u64, usize, f64, f64)> {
+                r.metrics
+                    .records
+                    .iter()
+                    .map(|m| (m.id, m.instance, m.dispatched, m.finish))
+                    .collect()
+            };
+            assert_eq!(placements(&fresh), placements(&cloned),
+                       "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn distributed_frontends_complete_all_requests() {
+        use crate::config::ShardPolicy;
+        for kind in [SchedulerKind::Block, SchedulerKind::LlumnixMinus] {
+            for shard in [ShardPolicy::RoundRobin, ShardPolicy::Hash,
+                          ShardPolicy::Poisson] {
+                let mut cfg = small_cfg(kind);
+                cfg.frontends = 3;
+                cfg.sync_interval = 2.0;
+                cfg.shard_policy = shard;
+                let res = run_experiment(cfg, &small_workload(8.0, 210),
+                                         SimOptions::default())
+                    .unwrap();
+                assert_eq!(res.metrics.len(), 210,
+                           "{} {}", kind.name(), shard.name());
+                assert_eq!(res.frontend_dispatches.len(), 3);
+                assert_eq!(res.frontend_dispatches.iter().sum::<u64>(), 210);
+                if shard == ShardPolicy::RoundRobin {
+                    assert_eq!(res.frontend_dispatches, vec![70, 70, 70]);
+                }
+            }
+        }
+        // Ack-piggybacked syncs keep the run complete and the telemetry
+        // intact too.
+        let mut cfg = small_cfg(SchedulerKind::Block);
+        cfg.frontends = 2;
+        cfg.sync_interval = 4.0;
+        cfg.sync_on_ack = true;
+        let res = run_experiment(cfg, &small_workload(8.0, 200),
+                                 SimOptions::default())
+            .unwrap();
+        assert_eq!(res.metrics.len(), 200);
+        assert_eq!(res.frontend_dispatches.iter().sum::<u64>(), 200);
+    }
+
+    #[test]
+    fn stale_frontends_herd_simultaneous_arrivals() {
+        // The failure mode the staleness sweep measures, in miniature:
+        // two front-ends with views synced at t=0 and no further pulls
+        // cannot see each other's dispatches, so two simultaneous
+        // arrivals land on the same idle instance.  (Contrast with
+        // `simultaneous_arrivals_do_not_herd`: one front-end tracks its
+        // own in-transit set and splits them.)
+        let cfg = ClusterConfig {
+            n_instances: 2,
+            scheduler: SchedulerKind::Block,
+            frontends: 2,
+            sync_interval: 1_000.0,
+            ..ClusterConfig::default()
+        };
+        let requests = vec![
+            Request::new(1, 0.0, 300, 80),
+            Request::new(2, 0.0, 300, 80),
+        ];
+        let res = ClusterSim::new(cfg, SimOptions::default()).run(&requests);
+        let served: Vec<usize> =
+            res.instances.iter().map(|s| s.requests_served).collect();
+        assert_eq!(served, vec![2, 0],
+                   "independent stale front-ends must herd here");
     }
 
     #[test]

@@ -101,6 +101,42 @@ impl SchedulerKind {
     }
 }
 
+/// How arrivals are split across scheduler front-ends (distributed
+/// deployments, [`ClusterConfig::frontends`] > 1).
+///
+/// The paper's front-ends are stateless, so any splitter works; the
+/// policy only shapes *gateway skew* — how unevenly the independent
+/// dispatchers observe the arrival stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Strict rotation over front-ends (an idealized L4 balancer).
+    RoundRobin,
+    /// Stable hash of the request id (sticky client→gateway affinity).
+    Hash,
+    /// Uniform random split — each front-end sees an independent Poisson
+    /// thinning of the arrival process.
+    Poisson,
+}
+
+impl ShardPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "round-robin" | "rr" => Ok(ShardPolicy::RoundRobin),
+            "hash" => Ok(ShardPolicy::Hash),
+            "poisson" | "random" => Ok(ShardPolicy::Poisson),
+            other => bail!("unknown shard policy '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardPolicy::RoundRobin => "round-robin",
+            ShardPolicy::Hash => "hash",
+            ShardPolicy::Poisson => "poisson",
+        }
+    }
+}
+
 /// Per-instance engine configuration (the vLLM knobs §6.1 fixes).
 #[derive(Debug, Clone, PartialEq)]
 pub struct EngineConfig {
@@ -205,6 +241,22 @@ pub struct ClusterConfig {
     /// Predictor replicas per instance (paper: 16) — bounds parallel
     /// prediction throughput in the serving-mode coordinator.
     pub predictor_replicas: usize,
+    /// Stateless scheduler front-ends sharing the cluster (`--frontends`).
+    /// 1 reproduces the centralized single-dispatcher deployment exactly.
+    pub frontends: usize,
+    /// Seconds between a front-end's periodic view pulls
+    /// (`--sync-interval`).  0 means every arrival sees a perfectly fresh
+    /// view — the centralized assumption the paper argues against, and the
+    /// pre-distributed behavior of this simulator.
+    pub sync_interval: f64,
+    /// How arrivals are split across front-ends (`--shard`); irrelevant
+    /// when `frontends == 1`.
+    pub shard_policy: ShardPolicy,
+    /// Piggyback a single-instance view refresh on every dispatch ack
+    /// (`--sync-on-ack`): the acking instance reports its post-enqueue
+    /// state to the dispatching front-end.  Only meaningful with
+    /// `sync_interval > 0`.
+    pub sync_on_ack: bool,
     /// Worker threads for Block's per-candidate prediction fan-out
     /// (`--jobs`).  1 = serial; any value produces bit-identical
     /// scheduling decisions — the argmin is ordered by
@@ -227,6 +279,10 @@ impl Default for ClusterConfig {
             overhead: OverheadConfig::default(),
             provision: ProvisionConfig::default(),
             predictor_replicas: 16,
+            frontends: 1,
+            sync_interval: 0.0,
+            shard_policy: ShardPolicy::RoundRobin,
+            sync_on_ack: false,
             jobs: 1,
             exec_noise: 0.06,
             seed: 42,
@@ -273,6 +329,12 @@ impl ClusterConfig {
         if self.jobs == 0 {
             bail!("jobs must be > 0 (1 = serial fan-out)");
         }
+        if self.frontends == 0 {
+            bail!("frontends must be > 0 (1 = centralized dispatch)");
+        }
+        if !self.sync_interval.is_finite() || self.sync_interval < 0.0 {
+            bail!("sync_interval must be finite and >= 0 (0 = always fresh)");
+        }
         Ok(())
     }
 
@@ -310,6 +372,10 @@ impl ClusterConfig {
         p.insert("cooldown", self.provision.cooldown);
         o.insert("provision", p);
         o.insert("predictor_replicas", self.predictor_replicas);
+        o.insert("frontends", self.frontends);
+        o.insert("sync_interval", self.sync_interval);
+        o.insert("shard_policy", self.shard_policy.name());
+        o.insert("sync_on_ack", self.sync_on_ack);
         o.insert("jobs", self.jobs);
         o.insert("exec_noise", self.exec_noise);
         o.insert("seed", self.seed);
@@ -394,6 +460,18 @@ impl ClusterConfig {
         if let Some(v) = j.opt("predictor_replicas") {
             c.predictor_replicas = v.as_usize()?;
         }
+        if let Some(v) = j.opt("frontends") {
+            c.frontends = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("sync_interval") {
+            c.sync_interval = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("shard_policy") {
+            c.shard_policy = ShardPolicy::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.opt("sync_on_ack") {
+            c.sync_on_ack = v.as_bool()?;
+        }
         if let Some(v) = j.opt("jobs") {
             c.jobs = v.as_usize()?;
         }
@@ -468,6 +546,10 @@ mod tests {
         c.provision.enabled = true;
         c.provision.predictive = false;
         c.jobs = 4;
+        c.frontends = 3;
+        c.sync_interval = 2.5;
+        c.shard_policy = ShardPolicy::Hash;
+        c.sync_on_ack = true;
         let j = c.to_json();
         let c2 = ClusterConfig::from_json(&j).unwrap();
         assert_eq!(c2.scheduler, SchedulerKind::LlumnixMinus);
@@ -475,6 +557,10 @@ mod tests {
         assert!(c2.provision.enabled && !c2.provision.predictive);
         assert_eq!(c2.n_instances, c.n_instances);
         assert_eq!(c2.jobs, 4);
+        assert_eq!(c2.frontends, 3);
+        assert!((c2.sync_interval - 2.5).abs() < 1e-12);
+        assert_eq!(c2.shard_policy, ShardPolicy::Hash);
+        assert!(c2.sync_on_ack);
     }
 
     #[test]
@@ -496,6 +582,18 @@ mod tests {
         let mut c = ClusterConfig::default();
         c.jobs = 0;
         assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.frontends = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.sync_interval = -1.0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.sync_interval = f64::INFINITY;
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -504,6 +602,16 @@ mod tests {
             assert_eq!(SchedulerKind::parse(k.name()).unwrap(), k);
         }
         assert!(SchedulerKind::parse("magic").is_err());
+    }
+
+    #[test]
+    fn shard_policy_parse_names() {
+        for p in [ShardPolicy::RoundRobin, ShardPolicy::Hash,
+                  ShardPolicy::Poisson] {
+            assert_eq!(ShardPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(ShardPolicy::parse("random").unwrap(), ShardPolicy::Poisson);
+        assert!(ShardPolicy::parse("sticky").is_err());
     }
 
     #[test]

@@ -1,4 +1,10 @@
-//! Core domain types: requests, batches, hardware profiles.
+//! Core domain types shared by every layer: requests ([`request`]),
+//! batch composition ([`batch`]), and hardware/model performance
+//! profiles ([`hw`]).
+//!
+//! Nothing here has behavior beyond derived accessors — these are the
+//! vocabulary types the scheduler, engines, predictor, and metrics all
+//! speak, re-exported at this level for convenience.
 
 pub mod batch;
 pub mod hw;

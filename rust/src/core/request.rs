@@ -1,4 +1,10 @@
-//! Request model: what the global scheduler sees and what instances track.
+//! Request model: what the global scheduler sees and what instances
+//! track.
+//!
+//! [`Request`] is the arrival-side view (lengths, tagger estimate,
+//! optional prompt text); [`RequestMetrics`] is the completion-side
+//! record every figure reduces over; [`Phase`] names the lifecycle
+//! stages a sequence moves through on an instance.
 
 /// Globally unique request id.
 pub type RequestId = u64;

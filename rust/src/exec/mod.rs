@@ -21,8 +21,9 @@ use crate::core::batch::BatchPlan;
 /// `Send + Sync` so one cost model can serve many predictor workers at
 /// once (Block's per-candidate fan-out runs on scoped threads, and the
 /// experiment harness runs whole sweep points concurrently).  Stateful
-/// implementations use sharded/atomic interior mutability — see
-/// `predictor::cache::LatencyCache` for the lock-striped memo cache.
+/// implementations use atomic interior mutability — see
+/// [`crate::predictor::cache::LatencyCache`] for the lock-free memo
+/// table.
 pub trait BatchCost: Send + Sync {
     fn batch_time(&self, plan: &BatchPlan) -> f64;
 }

@@ -19,12 +19,14 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod staleness;
 pub mod tab1;
 pub mod tab2;
 
 use anyhow::Result;
 
-use crate::config::{ClusterConfig, SchedulerKind, WorkloadConfig, WorkloadKind};
+use crate::config::{ClusterConfig, SchedulerKind, ShardPolicy, WorkloadConfig,
+                    WorkloadKind};
 use crate::util::json::Json;
 
 /// Experiment size.
@@ -77,6 +79,10 @@ pub struct ExpContext {
     pub seed: u64,
     /// Worker threads for sweep points (`--jobs`; default: all cores).
     pub jobs: usize,
+    /// Arrival sharding for the distributed-deployment sweeps
+    /// (`--shard`; read by [`staleness`], ignored by the centralized
+    /// paper experiments).
+    pub shard: ShardPolicy,
 }
 
 impl Default for ExpContext {
@@ -86,6 +92,7 @@ impl Default for ExpContext {
             out_dir: "results".into(),
             seed: 7,
             jobs: default_jobs(),
+            shard: ShardPolicy::RoundRobin,
         }
     }
 }
@@ -140,15 +147,17 @@ pub fn run(name: &str, ctx: &ExpContext) -> Result<()> {
         "fig7" => fig7::run(ctx),
         "fig8" => fig8::run(ctx),
         "tab2" => tab2::run(ctx),
+        "staleness" => staleness::run(ctx),
         "all" => {
-            for n in ["tab1", "fig5", "fig6", "fig7", "fig8", "tab2"] {
+            for n in ["tab1", "fig5", "fig6", "fig7", "fig8", "tab2",
+                      "staleness"] {
                 println!("\n=============== {n} ===============");
                 run(n, ctx)?;
             }
             Ok(())
         }
-        other => anyhow::bail!(
-            "unknown experiment '{other}' (tab1|fig5|fig6|fig7|fig8|tab2|all)"),
+        other => anyhow::bail!("unknown experiment '{other}' \
+                                (tab1|fig5|fig6|fig7|fig8|tab2|staleness|all)"),
     }
 }
 

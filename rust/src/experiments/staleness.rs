@@ -1,0 +1,148 @@
+//! Staleness sweep — the distributed-deployment claim the paper leaves
+//! untested: how does each dispatcher degrade as the number of stateless
+//! scheduler front-ends and the view-sync interval grow?
+//!
+//! Every (front-ends × sync-interval × scheduler) point runs the same
+//! near-capacity workload.  `frontends = 1, sync_interval = 0` is the
+//! centralized baseline every other point is judged against.  The
+//! expectation from the paper's design argument: Block's predictive
+//! dispatch — which ranks instances by *simulated futures* of their
+//! snapshots — degrades gracefully as snapshots age, while load-counter
+//! heuristics (MinQPM's per-gateway dispatch history, Llumnix-'s memory
+//! probe) lose exactly the signal they rank by and herd.
+//!
+//! Reported per point: p99 TTFT, mean/p99 e2e, preemptions, and the
+//! gateway skew — the coefficient of variation of per-front-end dispatch
+//! counts (0 = perfectly even; grows with hash/Poisson sharding).
+//! Results land in `results/staleness.json`.
+
+use anyhow::Result;
+
+use crate::cluster::{run_experiment, SimOptions};
+use crate::config::SchedulerKind;
+use crate::experiments::{paper_cluster, parallel_map, sharegpt_workload,
+                         ExpContext, Scale};
+use crate::metrics::{render_table, RunSummary};
+use crate::util::json::{Json, JsonObj};
+
+/// Dispatchers compared: the predictive scheduler vs the two strongest
+/// heuristic baselines (per Figure 6).
+const KINDS: [SchedulerKind; 3] = [
+    SchedulerKind::Block,
+    SchedulerKind::MinQpm,
+    SchedulerKind::LlumnixMinus,
+];
+
+/// QPS of the sweep workload: inside the contended region of the
+/// fig6 sweep (~80% of the 12-instance capacity), where dispatch
+/// quality is visible but the centralized baseline is not yet saturated.
+const SWEEP_QPS: f64 = 64.0;
+
+/// Front-end counts × sync intervals (seconds) per scale.
+fn sweep_axes(scale: Scale) -> (Vec<usize>, Vec<f64>) {
+    match scale {
+        Scale::Quick => (vec![1, 2, 4], vec![0.0, 1.0, 4.0]),
+        Scale::Full => (vec![1, 2, 4, 8], vec![0.0, 0.5, 2.0, 8.0]),
+    }
+}
+
+struct Point {
+    frontends: usize,
+    sync_interval: f64,
+    kind: SchedulerKind,
+    summary: RunSummary,
+    /// Coefficient of variation of per-front-end dispatch counts.
+    gateway_skew: f64,
+}
+
+/// CV of the dispatch counts (population std-dev over mean).
+fn dispatch_cv(counts: &[u64]) -> f64 {
+    if counts.len() <= 1 {
+        return 0.0;
+    }
+    let mut stats = crate::util::stats::OnlineStats::new();
+    for &c in counts {
+        stats.push(c as f64);
+    }
+    if stats.mean() == 0.0 {
+        return 0.0;
+    }
+    stats.std() / stats.mean()
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    let (fe_points, sync_points) = sweep_axes(ctx.scale);
+    let n = ctx.scale.requests_for(SWEEP_QPS);
+
+    let mut grid = Vec::new();
+    for &frontends in &fe_points {
+        for &sync_interval in &sync_points {
+            for kind in KINDS {
+                grid.push((frontends, sync_interval, kind));
+            }
+        }
+    }
+    let points = parallel_map(
+        ctx.jobs,
+        &grid,
+        |&(frontends, sync_interval, kind)| -> Result<Point> {
+            let mut cfg = paper_cluster(kind);
+            cfg.frontends = frontends;
+            cfg.sync_interval = sync_interval;
+            cfg.shard_policy = ctx.shard;
+            let res = run_experiment(
+                cfg,
+                &sharegpt_workload(SWEEP_QPS, n, ctx.seed),
+                SimOptions { probes: false, ..SimOptions::default() },
+            )?;
+            Ok(Point {
+                frontends,
+                sync_interval,
+                kind,
+                summary: res.metrics.summary(),
+                gateway_skew: dispatch_cv(&res.frontend_dispatches),
+            })
+        },
+    );
+
+    let mut out = JsonObj::new();
+    out.insert("qps", SWEEP_QPS);
+    out.insert("shard_policy", ctx.shard.name());
+    let mut rows = Vec::new();
+    for point in points {
+        let p = point?;
+        let s = &p.summary;
+        rows.push(vec![
+            format!("{}", p.frontends),
+            format!("{:.1}", p.sync_interval),
+            p.kind.name().to_string(),
+            format!("{:.3}", s.mean_ttft),
+            format!("{:.3}", s.p99_ttft),
+            format!("{:.2}", s.mean_e2e),
+            format!("{:.2}", s.p99_e2e),
+            format!("{}", s.total_preemptions),
+            format!("{:.3}", p.gateway_skew),
+        ]);
+        let mut j = s.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("frontends", p.frontends);
+            o.insert("sync_interval", p.sync_interval);
+            o.insert("scheduler", p.kind.name());
+            o.insert("gateway_skew", p.gateway_skew);
+        }
+        out.insert(
+            format!("{}@fe{}s{}", p.kind.name(), p.frontends,
+                    p.sync_interval),
+            j,
+        );
+    }
+    println!("Staleness sweep — front-ends × view-sync intervals at \
+              {SWEEP_QPS} QPS ({} sharding, {}s of load per point)",
+             ctx.shard.name(), ctx.scale.duration());
+    println!("{}", render_table(
+        &["frontends", "sync(s)", "scheduler", "mean TTFT", "p99 TTFT",
+          "mean e2e", "p99 e2e", "preempt", "gw skew"],
+        &rows));
+
+    ctx.write_json("staleness", &Json::Obj(out))
+}

@@ -2,14 +2,18 @@
 //!
 //! Subcommands:
 //!
-//! * `block experiment <tab1|fig5|fig6|fig7|fig8|tab2|all> [--scale quick|full]
-//!    [--out DIR] [--seed N] [--jobs N]` — regenerate a paper
-//!    table/figure; `--jobs` bounds the sweep-point worker threads
-//!    (default: all cores; results are identical for any value).
+//! * `block experiment <tab1|fig5|fig6|fig7|fig8|tab2|staleness|all>
+//!    [--scale quick|full] [--out DIR] [--seed N] [--jobs N] [--shard P]`
+//!    — regenerate a paper table/figure; `--jobs` bounds the sweep-point
+//!    worker threads (default: all cores; results are identical for any
+//!    value); `--shard` sets arrival sharding for the `staleness` sweep.
 //! * `block simulate [--scheduler S] [--qps Q] [--requests N]
 //!    [--instances K] [--workload sharegpt|burstgpt] [--config FILE]
-//!    [--jobs N]` — one cluster simulation, summary to stdout; `--jobs`
-//!    parallelizes Block's per-candidate prediction fan-out.
+//!    [--jobs N] [--frontends N] [--sync-interval S] [--shard P]
+//!    [--sync-on-ack BOOL]` — one cluster simulation, summary to stdout;
+//!    `--jobs` parallelizes Block's per-candidate prediction fan-out;
+//!    `--frontends`/`--sync-interval`/`--shard` run the distributed
+//!    deployment (N stateless front-ends over bounded-staleness views).
 //! * `block serve [--addr HOST:PORT] [--artifacts DIR]` — HTTP serving of
 //!    the real PJRT model (endpoints: /generate /predict /status /health).
 //! * `block tag --prompt "..."` — run the length tagger on one prompt.
@@ -18,7 +22,8 @@
 use anyhow::{bail, Context, Result};
 
 use block::cluster::{run_experiment, SimOptions};
-use block::config::{ClusterConfig, SchedulerKind, WorkloadConfig, WorkloadKind};
+use block::config::{ClusterConfig, SchedulerKind, ShardPolicy, WorkloadConfig,
+                    WorkloadKind};
 use block::experiments::{self, ExpContext, Scale};
 use block::metrics::render_table;
 
@@ -72,9 +77,11 @@ fn usage() -> ! {
         "usage: block <command>\n\
          \n\
          commands:\n\
-         \x20 experiment <tab1|fig5|fig6|fig7|fig8|tab2|all> [--scale quick|full] [--out DIR] [--seed N] [--jobs N]\n\
+         \x20 experiment <tab1|fig5|fig6|fig7|fig8|tab2|staleness|all> [--scale quick|full] [--out DIR]\n\
+         \x20          [--seed N] [--jobs N] [--shard round-robin|hash|poisson]\n\
          \x20 simulate [--scheduler S] [--qps Q] [--requests N] [--instances K]\n\
          \x20          [--workload sharegpt|burstgpt] [--config FILE] [--seed N] [--jobs N]\n\
+         \x20          [--frontends N] [--sync-interval S] [--shard round-robin|hash|poisson] [--sync-on-ack BOOL]\n\
          \x20 serve    [--addr HOST:PORT] [--artifacts DIR] [--max-requests N]\n\
          \x20 tag      --prompt TEXT [--artifacts DIR]\n\
          \x20 workload --out FILE [--qps Q] [--requests N] [--seed N]"
@@ -94,6 +101,10 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         out_dir: args.flag("out").unwrap_or("results").to_string(),
         seed: args.flag_parse("seed", 7u64)?,
         jobs: args.flag_parse("jobs", experiments::default_jobs())?.max(1),
+        shard: match args.flag("shard") {
+            None => ShardPolicy::RoundRobin,
+            Some(s) => ShardPolicy::parse(s)?,
+        },
     };
     experiments::run(name, &ctx)
 }
@@ -108,6 +119,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
     cfg.n_instances = args.flag_parse("instances", cfg.n_instances)?;
     cfg.jobs = args.flag_parse("jobs", cfg.jobs)?.max(1);
+    cfg.frontends = args.flag_parse("frontends", cfg.frontends)?.max(1);
+    cfg.sync_interval = args.flag_parse("sync-interval", cfg.sync_interval)?;
+    if let Some(s) = args.flag("shard") {
+        cfg.shard_policy = ShardPolicy::parse(s)?;
+    }
+    cfg.sync_on_ack = args.flag_parse("sync-on-ack", cfg.sync_on_ack)?;
+    cfg.validate()?;
     let workload = WorkloadConfig {
         kind: match args.flag("workload").unwrap_or("sharegpt") {
             "sharegpt" => WorkloadKind::ShareGpt,
@@ -124,6 +142,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("scheduler={} instances={} qps={} requests={} (wall {:?})",
              cfg.scheduler.name(), cfg.n_instances, workload.qps, s.n,
              res.wall_time);
+    if cfg.frontends > 1 || cfg.sync_interval > 0.0 {
+        println!("frontends={} sync_interval={}s shard={} dispatches={:?}",
+                 cfg.frontends, cfg.sync_interval, cfg.shard_policy.name(),
+                 res.frontend_dispatches);
+    }
     let rows = vec![
         vec!["mean TTFT (s)".into(), format!("{:.3}", s.mean_ttft)],
         vec!["p99 TTFT (s)".into(), format!("{:.3}", s.p99_ttft)],

@@ -1,4 +1,23 @@
 //! Metric collection and reporting: the reductions behind every figure.
+//!
+//! The cluster runtime emits one [`crate::core::request::RequestMetrics`]
+//! record per completed request; [`MetricsCollector`] accumulates them
+//! and [`RunSummary`] reduces a run to the aggregates the paper reports
+//! — mean/P50/P99 of TTFT and e2e latency, scheduling overhead,
+//! throughput over the run span, preemption totals, and the mean
+//! prediction error rate of the Block family (Figure 5's top row).
+//!
+//! Sub-modules:
+//!
+//! * [`capacity`] — the SLO capacity search (max QPS with TTFT P99
+//!   under 3 s, §6.1/§6.6).
+//!
+//! [`render_table`] prints the aligned text tables every experiment and
+//! the `simulate` subcommand write to stdout; the JSON twins
+//! ([`RunSummary::to_json`]) land under `results/` as the source of
+//! truth for plots.  Percentile arithmetic lives in
+//! [`crate::util::stats`] and is NaN/INF-safe — metric streams can
+//! carry the Predictor's pessimistic `INF` bail-out values.
 
 pub mod capacity;
 

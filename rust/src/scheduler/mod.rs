@@ -18,6 +18,12 @@ use crate::predictor::{EstimatedLengths, LengthOracle, Prediction, Predictor,
 use crate::util::rng::Rng;
 
 /// What the dispatcher sees: the status of every *active* instance.
+///
+/// In centralized runs the slices borrow the simulator's always-fresh
+/// epoch-cached state; in distributed runs they borrow one front-end's
+/// bounded-staleness copy ([`crate::cluster::frontend::StaleClusterView`])
+/// — the scheduler cannot tell the difference, which is exactly the
+/// paper's statelessness argument.
 pub struct ClusterView<'a> {
     pub now: f64,
     /// Index-aligned; `None` marks deactivated / not-yet-provisioned hosts.
@@ -29,7 +35,9 @@ pub struct ClusterView<'a> {
     /// flight, `now < dispatch time`).  Instance snapshots cannot see
     /// them, so load-aware schedulers must add them in — otherwise
     /// simultaneous arrivals all observe the same "idle" instance and
-    /// herd onto it.  May be shorter than `statuses` (missing ⇒ empty);
+    /// herd onto it.  In distributed runs this carries only the *owning
+    /// front-end's* dispatches — peers' in-flight requests are invisible
+    /// by design.  May be shorter than `statuses` (missing ⇒ empty);
     /// unit tests that do not exercise in-transit load pass `&[]`.
     pub in_transit: &'a [Vec<Request>],
     /// Index-aligned constant-size load summaries (`None` ⇒ inactive).
@@ -120,6 +128,17 @@ pub struct PredictorStats {
 }
 
 impl PredictorStats {
+    /// Accumulate another counter set (distributed runs sum the stats of
+    /// every front-end's scheduler into one cluster-wide record).
+    pub fn merge(&mut self, other: &PredictorStats) {
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.memo_hits += other.memo_hits;
+        self.memo_misses += other.memo_misses;
+        self.pool_created += other.pool_created;
+        self.pool_reused += other.pool_reused;
+    }
+
     pub fn cache_hit_rate(&self) -> f64 {
         let total = self.cache_hits + self.cache_misses;
         if total == 0 { 0.0 } else { self.cache_hits as f64 / total as f64 }

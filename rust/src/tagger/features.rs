@@ -1,8 +1,18 @@
 //! Prompt feature extraction for the learned length regressor.
 //!
+//! The paper's tagger is a fine-tuned RoBERTa classifier; the offline
+//! substitute (see DESIGN.md) is an MLP regressor over these
+//! [`N_FEATURES`] hand-rolled prompt features — length statistics
+//! (chars, words, average word length, question marks) plus keyword
+//! indicator groups ("write", "summarize", "code", …) that correlate
+//! with response length.  All features are normalized to `[0, 1]` so
+//! the regressor trains without per-feature scaling.
+//!
 //! MUST stay in sync with `python/compile/length_model.py::extract_features`
-//! — the AOT manifest ships golden (prompt, features) vectors and the
-//! integration tests assert equality, so a drift fails the build.
+//! — the model is trained in Python at build time and served from Rust
+//! through PJRT, so the two extractors must agree bit for bit.  The AOT
+//! manifest ships golden (prompt, features) vectors and the integration
+//! tests assert equality, so a drift fails the build.
 
 pub const N_FEATURES: usize = 16;
 

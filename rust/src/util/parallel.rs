@@ -1,11 +1,19 @@
 //! Deterministic ordered fan-out over scoped threads.
 //!
-//! One implementation serves both parallel layers: Block's per-candidate
-//! prediction fan-out (`scheduler`) and the experiment sweep driver
-//! (`experiments`).  Work items are claimed from a shared atomic cursor
-//! — a long item cannot convoy a whole chunk behind it — and results are
-//! slotted back by input index, so output order (and therefore every
-//! downstream decision) is independent of thread scheduling.
+//! One implementation ([`parallel_map`]) serves both parallel layers:
+//! Block's per-candidate prediction fan-out
+//! ([`crate::scheduler::BlockScheduler`]) and the experiment sweep
+//! driver ([`crate::experiments`]).  Work items are claimed from a
+//! shared atomic cursor — a long item cannot convoy a whole chunk
+//! behind it — and results are slotted back by input index, so output
+//! order (and therefore every downstream decision) is independent of
+//! thread scheduling.
+//!
+//! Threads are spawned per call rather than pooled: a spawn costs ~tens
+//! of µs while the workloads fanned out here (forward simulations,
+//! whole sweep points) cost hundreds of µs to seconds, and
+//! `std::thread::scope` lets the closure borrow from the caller's stack
+//! with no `'static` bounds or channel plumbing.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

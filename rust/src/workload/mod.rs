@@ -1,4 +1,13 @@
-//! Workload generation: datasets, arrival processes, traces, tokenization.
+//! Workload generation: datasets, arrival processes, traces,
+//! tokenization.
+//!
+//! The paper evaluates on ShareGPT (conversational, long responses) and
+//! BurstGPT (bursty arrivals, shorter responses); [`sharegpt`] and
+//! [`burstgpt`] synthesize length-faithful stand-ins offline (see
+//! DESIGN.md's substitutions), [`arrivals`] provides the Poisson/burst
+//! arrival processes, [`trace`] round-trips generated workloads through
+//! JSONL files, and [`tokenizer`] is the byte-pair stand-in used by the
+//! corpus-backed path.
 
 pub mod arrivals;
 pub mod burstgpt;

@@ -135,3 +135,116 @@ fn prop_block_dispatch_matches_min_prediction() {
         }
     });
 }
+
+#[test]
+fn prop_stale_view_epoch_never_ahead() {
+    // The staleness invariant of the distributed front-end layer: a
+    // front-end's StaleClusterView can lag an instance arbitrarily, but
+    // it can never report an epoch *newer* than the instance's live
+    // epoch — engine epochs only move forward and syncs copy the live
+    // value.  Random mutation/sync interleavings must never violate it.
+    use block::cluster::frontend::StaleClusterView;
+    use block::config::EngineConfig;
+    use block::core::hw::{A30, LLAMA2_7B};
+    use block::core::request::Request;
+    use block::engine::InstanceEngine;
+    use block::exec::roofline::RooflineModel;
+
+    check(55, 20, |rng, _| {
+        let cost = RooflineModel::from_profiles(&A30, &LLAMA2_7B);
+        let n = rng.randint(1, 4) as usize;
+        let mut engines: Vec<InstanceEngine> = (0..n)
+            .map(|_| InstanceEngine::new(EngineConfig::default(), 1056))
+            .collect();
+        let active = vec![true; n];
+        let mut view = StaleClusterView::new();
+        let mut next_id = 0u64;
+        let mut now = 0.0;
+        let steps = rng.randint(1, 40);
+        for _ in 0..steps {
+            let i = rng.index(n);
+            match rng.index(3) {
+                0 => {
+                    next_id += 1;
+                    let clock = engines[i].clock();
+                    let prompt = rng.randint(16, 600) as u32;
+                    let resp = rng.randint(1, 200) as u32;
+                    engines[i].enqueue(&Request::new(next_id, clock, prompt,
+                                                     resp),
+                                       clock);
+                }
+                1 => {
+                    if engines[i].busy_until().is_none() {
+                        engines[i].start_step(&cost);
+                    }
+                }
+                _ => {
+                    if engines[i].busy_until().is_some() {
+                        engines[i].finish_step();
+                    }
+                }
+            }
+            if rng.bernoulli(0.4) {
+                now += rng.uniform(0.0, 1.0);
+                view.sync_all(&engines, &active, now, rng.bernoulli(0.5),
+                              true);
+            }
+            for (j, e) in engines.iter().enumerate() {
+                if let Some(ep) = view.epoch_of(j) {
+                    assert!(ep <= e.epoch(),
+                            "view epoch {ep} ahead of live epoch {}",
+                            e.epoch());
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_distributed_frontends_serve_everything() {
+    // Routing totality holds for every distributed deployment shape:
+    // any front-end count, shard policy, sync interval, and ack-sync
+    // setting must still serve every request exactly once.
+    use block::config::ShardPolicy;
+
+    check(66, 10, |rng, _| {
+        let shard = match rng.index(3) {
+            0 => ShardPolicy::RoundRobin,
+            1 => ShardPolicy::Hash,
+            _ => ShardPolicy::Poisson,
+        };
+        let kind = if rng.bernoulli(0.5) {
+            SchedulerKind::Block
+        } else {
+            SchedulerKind::LlumnixMinus
+        };
+        let mut cfg = ClusterConfig {
+            n_instances: rng.randint(2, 6) as usize,
+            scheduler: kind,
+            ..ClusterConfig::default()
+        };
+        cfg.frontends = rng.randint(1, 4) as usize;
+        cfg.sync_interval = if rng.bernoulli(0.3) {
+            0.0
+        } else {
+            rng.uniform(0.2, 5.0)
+        };
+        cfg.shard_policy = shard;
+        cfg.sync_on_ack = rng.bernoulli(0.5);
+        let frontends = cfg.frontends;
+        let wl = WorkloadConfig {
+            kind: WorkloadKind::ShareGpt,
+            qps: rng.uniform(2.0, 15.0),
+            n_requests: rng.randint(20, 120) as usize,
+            seed: rng.next_u64(),
+        };
+        let res = run_experiment(cfg, &wl, SimOptions::default()).unwrap();
+        assert_eq!(res.metrics.len(), wl.n_requests);
+        let served: usize =
+            res.instances.iter().map(|i| i.requests_served).sum();
+        assert_eq!(served, wl.n_requests);
+        assert_eq!(res.frontend_dispatches.len(), frontends);
+        assert_eq!(res.frontend_dispatches.iter().sum::<u64>() as usize,
+                   wl.n_requests);
+    });
+}
