@@ -10,11 +10,14 @@ use std::time::Instant;
 use block::experiments::{default_jobs, run, ExpContext, Scale};
 
 fn main() {
+    // Struct-update off the default so new context knobs (shard, smoke,
+    // ...) cannot silently break this rarely-built bench target again.
     let ctx = ExpContext {
         scale: Scale::Quick,
         out_dir: "results/bench".into(),
         seed: 7,
         jobs: default_jobs(),
+        ..ExpContext::default()
     };
     let mut failures = 0;
     for name in ["tab1", "fig5", "fig6", "fig7", "fig8", "tab2"] {

@@ -12,20 +12,32 @@ use std::collections::BinaryHeap;
 pub enum EventKind {
     /// Request `.0` (an index into the run's request slice) reaches
     /// scheduler front-end `.1` (always 0 in centralized deployments).
+    /// If that front-end has crashed by the time the event pops, the
+    /// sharder redirects the arrival to a survivor.
     Arrival(usize, usize),
     /// Request `.0` lands on instance `.1` after dispatch overhead; `.2`
     /// is the front-end that dispatched it (owner of the in-transit
-    /// entry).
+    /// entry).  Landing on a failed instance bounces the request back
+    /// through dispatch (`Redispatch`).
     Dispatch(usize, usize, usize),
-    /// Instance finished its in-flight step.
-    StepDone(usize),
+    /// Request `.0` re-enters dispatch after being lost to an instance
+    /// failure (or bounced off a dead host): a surviving front-end
+    /// re-decides its placement from scratch.
+    Redispatch(usize),
+    /// Instance `.0` finished its in-flight step.  `.1` is the
+    /// instance's step generation at scheduling time: an instance
+    /// failure bumps the live generation, cancelling any in-queue
+    /// completion for a step that died with the host.
+    StepDone(usize, u64),
     /// A provisioned instance finished cold start.
     InstanceReady,
     /// Front-end `usize` performs its periodic view pull (distributed
     /// deployments, `sync_interval > 0`).  Re-armed after each firing
     /// while arrivals remain, so the event queue drains once the run is
-    /// over.
+    /// over.  Skipped (and not re-armed) for crashed front-ends.
     ViewSync(usize),
+    /// A scheduled fault fires (see [`crate::faults::FaultPlan`]).
+    Fault(crate::faults::FaultKind),
 }
 
 #[derive(Debug, Clone)]
@@ -100,7 +112,7 @@ mod tests {
     #[test]
     fn pops_in_time_order() {
         let mut q = EventQueue::new();
-        q.push(Event { time: 3.0, kind: EventKind::StepDone(0) });
+        q.push(Event { time: 3.0, kind: EventKind::StepDone(0, 0) });
         q.push(Event { time: 1.0, kind: EventKind::Arrival(0, 0) });
         q.push(Event { time: 2.0, kind: EventKind::InstanceReady });
         let times: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.time).collect();

@@ -83,6 +83,14 @@ impl StaleClusterView {
         self.epochs.get(i).copied().flatten()
     }
 
+    /// Instances this view believes are active (captured slots).  Zero
+    /// both before the first sync and when every instance the view has
+    /// heard of is down — in either case the owning front-end has
+    /// nothing to dispatch to.
+    pub fn active_count(&self) -> usize {
+        self.epochs.iter().filter(|e| e.is_some()).count()
+    }
+
     /// Virtual time of the most recent sync.
     pub fn synced_at(&self) -> f64 {
         self.synced_at
@@ -193,6 +201,22 @@ pub struct FrontEnd {
     pub in_transit: Vec<Vec<Request>>,
     /// Requests dispatched by this front-end (gateway-skew telemetry).
     pub dispatched: u64,
+    /// False once a `FrontEndCrash` fault killed this front-end: it
+    /// receives no further arrivals, view syncs, or completions.  Its
+    /// already-sent dispatches still land — they are on the wire, not
+    /// in the front-end.
+    pub alive: bool,
+    /// Stale-view local echo ([`crate::config::ClusterConfig::local_echo`]):
+    /// when on, dispatches that have *landed* since this front-end's
+    /// last view sync are replayed onto its stale view as extra
+    /// in-transit load — the instance already holds them, but the stale
+    /// snapshot predates them, so without the echo the front-end
+    /// double-books the capacity they consumed.
+    echo_on: bool,
+    /// Per-instance landed-but-not-yet-synced dispatches (echo only).
+    echoed: Vec<Vec<Request>>,
+    /// Reusable merge buffer for `in_transit + echoed`.
+    scratch_transit: Vec<Vec<Request>>,
 }
 
 impl FrontEnd {
@@ -204,7 +228,58 @@ impl FrontEnd {
             view: StaleClusterView::new(),
             in_transit: vec![Vec::new(); slots],
             dispatched: 0,
+            alive: true,
+            echo_on: false,
+            echoed: vec![Vec::new(); slots],
+            scratch_transit: Vec::new(),
         }
+    }
+
+    /// Enable the stale-view local echo.
+    pub fn set_local_echo(&mut self, on: bool) {
+        self.echo_on = on;
+    }
+
+    /// A dispatch this front-end sent has reached `instance`: the
+    /// request leaves the in-transit set and — when it actually
+    /// `landed` (the host was alive to enqueue it) and the echo is on —
+    /// enters the landed-since-last-sync replay log.  A bounced
+    /// dispatch (dead host) is not echoed: the instance never held it.
+    pub fn dispatch_landed(&mut self, instance: usize, req: &Request,
+                           landed: bool) {
+        self.in_transit[instance].retain(|r| r.id != req.id);
+        if landed && self.echo_on {
+            // Payload-free copy: the decision logic reads only ids and
+            // token counts, so the echo never clones prompt text.
+            self.echoed[instance].push(req.decision_copy());
+        }
+    }
+
+    /// A view sync refreshed instance `i`: its snapshot now reflects
+    /// every landed dispatch, so the echo entries are obsolete.
+    pub fn clear_echo(&mut self, i: usize) {
+        if let Some(v) = self.echoed.get_mut(i) {
+            v.clear();
+        }
+    }
+
+    /// A full view sync: every slot is fresh, drop the whole echo log.
+    pub fn clear_echo_all(&mut self) {
+        for v in &mut self.echoed {
+            v.clear();
+        }
+    }
+
+    /// Crash this front-end: drop its stale view and echo log (and stop
+    /// echoing — wire dispatches landing after the crash must not
+    /// accumulate in a log nothing will ever read or clear).  The
+    /// in-transit set is deliberately kept — those requests are on the
+    /// wire and land regardless of the sender's fate.
+    pub fn crash(&mut self) {
+        self.alive = false;
+        self.view = StaleClusterView::new();
+        self.echo_on = false;
+        self.clear_echo_all();
     }
 
     /// Name of the wrapped scheduling policy.
@@ -217,10 +292,19 @@ impl FrontEnd {
         self.scheduler.set_reference_path(on);
     }
 
-    /// See [`GlobalScheduler::on_finish`].
+    /// See [`GlobalScheduler::on_finish`].  Completion feedback also
+    /// retires the request's echo entry: a finished request is no
+    /// longer load anywhere, and without this the front-end would keep
+    /// replaying it as phantom in-transit work until the next slot
+    /// sync — the inverse of the double-booking the echo repairs.
     pub fn on_finish(&mut self, id: crate::core::request::RequestId,
                      true_tokens: u32) {
         self.scheduler.on_finish(id, true_tokens);
+        if self.echo_on {
+            for v in &mut self.echoed {
+                v.retain(|r| r.id != id);
+            }
+        }
     }
 
     /// See [`GlobalScheduler::predictor_stats`].
@@ -234,7 +318,8 @@ impl FrontEnd {
     /// fast path, where the simulator's epoch-cached snapshots are read
     /// in place); `None` reads this front-end's own [`StaleClusterView`].
     /// Either way the decision sees only *this* front-end's in-transit
-    /// set.
+    /// set — plus, with the local echo on, its own landed-but-unsynced
+    /// dispatches replayed as in-transit load.
     pub fn pick(
         &mut self,
         req: &Request,
@@ -242,15 +327,40 @@ impl FrontEnd {
         fresh: Option<(&[Option<InstanceStatus>], &[Option<InstanceLoad>])>,
         cost: &dyn BatchCost,
     ) -> Decision {
-        let FrontEnd { scheduler, view, in_transit, dispatched, .. } = self;
+        // The echo only applies to stale-view decisions: a fresh view
+        // already reflects every landed dispatch, and echoing on top
+        // would double-count them.
+        let use_echo = self.echo_on
+            && fresh.is_none()
+            && self.echoed.iter().any(|v| !v.is_empty());
+        let FrontEnd {
+            scheduler, view, in_transit, echoed, scratch_transit,
+            dispatched, ..
+        } = self;
+        if use_echo {
+            // Merge wire + echoed load into the reusable scratch as
+            // payload-free copies: POD-only, no heap allocation per
+            // decision (beyond first-use buffer growth), and the
+            // schedulers' transit accounting reads nothing else.
+            scratch_transit.resize_with(in_transit.len(), Vec::new);
+            for (i, merged) in scratch_transit.iter_mut().enumerate() {
+                merged.clear();
+                merged.extend(in_transit[i].iter()
+                                  .map(Request::decision_copy));
+                merged.extend(echoed[i].iter()
+                                  .map(Request::decision_copy));
+            }
+        }
         let (statuses, loads) = match fresh {
             Some((s, l)) => (s, l),
             None => (view.statuses.as_slice(), view.loads.as_slice()),
         };
+        let transit: &[Vec<Request>] =
+            if use_echo { scratch_transit } else { in_transit };
         let cluster_view = ClusterView {
             now,
             statuses,
-            in_transit: &in_transit[..],
+            in_transit: transit,
             loads,
         };
         let decision = scheduler.pick(req, &cluster_view, cost);
@@ -264,19 +374,51 @@ impl FrontEnd {
 /// Deterministic given the seed; with a single front-end every policy
 /// short-circuits to front-end 0 without consuming randomness, so
 /// centralized runs are unaffected by the sharder's existence.
+///
+/// Crash handling: the primary assignment ([`Self::assign`]) always
+/// rotates/hashes over the *full* membership — the round-robin cursor
+/// survives membership changes, so arrivals that were headed to a
+/// surviving front-end keep exactly the assignment they would have had
+/// in a healthy run (mirroring the PR 1 round-robin instance fix).
+/// Only the dead front-end's slice moves: [`Self::resolve`] redirects
+/// it through a secondary cursor that rotates over the survivors,
+/// spreading the re-shard instead of dumping it on one neighbour.
 pub struct ArrivalSharder {
     policy: ShardPolicy,
     n: usize,
     cursor: usize,
     rng: Rng,
+    /// Liveness mask, updated by `FrontEndCrash` faults.
+    alive: Vec<bool>,
+    /// Rotates over survivors when redirecting a dead front-end's
+    /// arrivals (and when picking a re-dispatch front-end).
+    redirect_cursor: usize,
 }
 
 impl ArrivalSharder {
     pub fn new(policy: ShardPolicy, n: usize, seed: u64) -> Self {
-        ArrivalSharder { policy, n: n.max(1), cursor: 0, rng: Rng::new(seed) }
+        let n = n.max(1);
+        ArrivalSharder {
+            policy,
+            n,
+            cursor: 0,
+            rng: Rng::new(seed),
+            alive: vec![true; n],
+            redirect_cursor: 0,
+        }
     }
 
-    /// Front-end index for this arrival.
+    /// Mark a front-end dead (or resurrected, for tests).
+    pub fn set_alive(&mut self, f: usize, alive: bool) {
+        self.alive[f] = alive;
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// Front-end index for this arrival (liveness-blind — see
+    /// [`Self::resolve`] for the crash-aware step).
     pub fn assign(&mut self, req: &Request) -> usize {
         if self.n == 1 {
             return 0;
@@ -292,6 +434,30 @@ impl ArrivalSharder {
                     as usize
             }
             ShardPolicy::Poisson => self.rng.index(self.n),
+        }
+    }
+
+    /// Crash-aware assignment: keep `f` if it is alive, otherwise
+    /// redirect to the next survivor in rotation.  `None` when no
+    /// front-end survives.
+    pub fn resolve(&mut self, f: usize) -> Option<usize> {
+        if self.alive[f] {
+            return Some(f);
+        }
+        self.next_alive()
+    }
+
+    /// Next survivor in redirect rotation (used for re-dispatches and
+    /// dead-front-end redirects).  `None` when no front-end survives.
+    pub fn next_alive(&mut self) -> Option<usize> {
+        if self.alive_count() == 0 {
+            return None;
+        }
+        loop {
+            self.redirect_cursor = (self.redirect_cursor + 1) % self.n;
+            if self.alive[self.redirect_cursor] {
+                return Some(self.redirect_cursor);
+            }
         }
     }
 }
@@ -395,6 +561,104 @@ mod tests {
         assert!(v.loads()[0].unwrap().running >= 1);
         // Instance 1's slot is untouched.
         assert_eq!(v.epoch_of(1), Some(engs[1].epoch()));
+    }
+
+    #[test]
+    fn sharder_resolve_skips_dead_without_perturbing_survivors() {
+        let mut s = ArrivalSharder::new(ShardPolicy::RoundRobin, 3, 1);
+        // Healthy rotation first.
+        let healthy: Vec<usize> = (0..3)
+            .map(|i| {
+                let f = s.assign(&Request::new(i, 0.0, 10, 5));
+                s.resolve(f).unwrap()
+            })
+            .collect();
+        assert_eq!(healthy, vec![0, 1, 2]);
+
+        // Kill front-end 1: the primary cursor keeps rotating over the
+        // full membership, so arrivals headed to 0 and 2 keep exactly
+        // their healthy-run assignment; only 1's slice is redirected —
+        // spread across the survivors, not dumped on one neighbour.
+        s.set_alive(1, false);
+        assert_eq!(s.alive_count(), 2);
+        let after: Vec<usize> = (3..9)
+            .map(|i| {
+                let f = s.assign(&Request::new(i, 0.0, 10, 5));
+                s.resolve(f).unwrap()
+            })
+            .collect();
+        assert_eq!(after[0], 0, "untouched arrival keeps its slot");
+        assert_eq!(after[2], 2, "untouched arrival keeps its slot");
+        assert_eq!(after[3], 0);
+        assert_eq!(after[5], 2);
+        // The dead slice (positions 1 and 4) lands on survivors.
+        assert!(after[1] != 1 && after[4] != 1);
+        assert_ne!(after[1], after[4], "redirects rotate over survivors");
+    }
+
+    #[test]
+    fn sharder_no_survivors_resolves_none() {
+        let mut s = ArrivalSharder::new(ShardPolicy::RoundRobin, 2, 1);
+        s.set_alive(0, false);
+        s.set_alive(1, false);
+        assert_eq!(s.resolve(0), None);
+        assert_eq!(s.next_alive(), None);
+    }
+
+    #[test]
+    fn frontend_crash_drops_view_keeps_wire() {
+        use crate::config::{OverheadConfig, SchedulerKind};
+        use crate::scheduler::build_scheduler;
+
+        let engs = engines(2);
+        let mut fe = FrontEnd::new(
+            0,
+            build_scheduler(SchedulerKind::RoundRobin, 2,
+                            &EngineConfig::default(), 1056,
+                            &OverheadConfig::default(), 1, 1),
+            2,
+        );
+        fe.view.sync_all(&engs, &[true, true], 1.0, false, true);
+        fe.in_transit[0].push(Request::new(7, 0.0, 10, 5));
+        fe.crash();
+        assert!(!fe.alive);
+        assert_eq!(fe.view.active_count(), 0, "stale view dropped");
+        assert_eq!(fe.in_transit[0].len(), 1,
+                   "in-transit requests stay on the wire");
+        // The landed dispatch still clears its wire entry.
+        fe.dispatch_landed(0, &Request::new(7, 0.0, 10, 5), true);
+        assert!(fe.in_transit[0].is_empty());
+    }
+
+    #[test]
+    fn echo_log_tracks_landings_and_syncs() {
+        let engs = engines(2);
+        let mut fe = FrontEnd::new(
+            0,
+            crate::scheduler::build_scheduler(
+                crate::config::SchedulerKind::RoundRobin, 2,
+                &EngineConfig::default(), 1056,
+                &crate::config::OverheadConfig::default(), 1, 1),
+            2,
+        );
+        fe.set_local_echo(true);
+        let r = Request::new(3, 0.0, 10, 5);
+        fe.in_transit[1].push(r.clone());
+        fe.dispatch_landed(1, &r, true);
+        assert!(fe.in_transit[1].is_empty());
+        assert_eq!(fe.echoed[1].len(), 1, "landing enters the echo log");
+        fe.clear_echo(1);
+        assert!(fe.echoed[1].is_empty(), "sync clears the echo");
+        fe.dispatch_landed(0, &r, false);
+        assert!(fe.echoed[0].is_empty(), "bounced dispatches are not echoed");
+        fe.dispatch_landed(0, &r, true);
+        fe.on_finish(r.id, 5);
+        assert!(fe.echoed[0].is_empty(),
+                "completion retires the echo entry");
+        fe.dispatch_landed(1, &r, true);
+        fe.clear_echo_all();
+        assert!(fe.echoed.iter().all(Vec::is_empty));
+        let _ = engs;
     }
 
     #[test]

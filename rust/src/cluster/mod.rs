@@ -18,6 +18,14 @@
 //! periodic [`events::EventKind::ViewSync`] pulls (and optionally on
 //! dispatch acks), and arrivals are sharded across front-ends by
 //! [`crate::config::ShardPolicy`].
+//!
+//! The loop also hosts the fault-injection subsystem
+//! ([`crate::faults`]): a [`crate::faults::FaultPlan`] schedules
+//! front-end crashes (re-shard the arrival slice, drop the view,
+//! recover nothing — the statelessness claim), instance failures (lose
+//! queued + running work, re-dispatch it through surviving front-ends),
+//! and rejoins (through the provisioner's cold-start lifecycle).
+//! Recovery telemetry lands on [`SimResult::recovery`].
 
 pub mod events;
 pub mod frontend;
@@ -28,6 +36,7 @@ use crate::config::ClusterConfig;
 use crate::core::request::{Request, RequestId, RequestMetrics};
 use crate::engine::{InstanceEngine, InstanceLoad, InstanceStatus};
 use crate::exec::roofline::RooflineModel;
+use crate::faults::{FaultKind, FaultPlan, FaultRecord, RecoveryStats};
 use crate::metrics::MetricsCollector;
 use crate::provision::AutoProvisioner;
 use crate::scheduler::{build_scheduler, Decision, PredictorStats};
@@ -78,6 +87,11 @@ pub struct SimResult {
     /// Requests dispatched by each front-end (gateway-skew telemetry;
     /// a single entry in centralized runs).
     pub frontend_dispatches: Vec<u64>,
+    /// Fault-injection recovery telemetry (empty when the run was
+    /// fault-free).  `metrics.len() + recovery.dropped` always equals
+    /// the number of admitted requests — the conservation law pinned by
+    /// `prop_no_request_lost_under_faults`.
+    pub recovery: RecoveryStats,
     pub wall_time: std::time::Duration,
 }
 
@@ -101,6 +115,10 @@ pub struct SimOptions {
     /// borrowed-fresh-view fast path.  No effect when `sync_interval > 0`
     /// (views are already routed through the stale machinery).
     pub cloned_view_path: bool,
+    /// Explicit (scripted) fault schedule, overriding the plan sampled
+    /// from [`crate::config::FaultConfig`].  `None` defers to the
+    /// config; `Some(FaultPlan::none())` forces a fault-free run.
+    pub fault_plan: Option<FaultPlan>,
 }
 
 impl Default for SimOptions {
@@ -110,6 +128,7 @@ impl Default for SimOptions {
             probes: true,
             reference_path: false,
             cloned_view_path: false,
+            fault_plan: None,
         }
     }
 }
@@ -154,6 +173,12 @@ pub struct ClusterSim {
     /// read this; full snapshots are only refreshed for predictive runs
     /// and sampled arrivals).
     loads: Vec<Option<InstanceLoad>>,
+    /// Per-instance step generation: bumped when a failure cancels the
+    /// in-flight step, so the step's queued `StepDone` is ignored
+    /// instead of completing work on a host that died mid-step.
+    /// (Failure state itself lives in the provisioner — the single
+    /// owner of the instance lifecycle.)
+    step_gen: Vec<u64>,
 }
 
 impl ClusterSim {
@@ -189,6 +214,11 @@ impl ClusterSim {
                 if opts.reference_path {
                     fe.set_reference_path(true);
                 }
+                // The local echo only means something over stale views;
+                // a fresh view already reflects every landed dispatch.
+                if cfg.local_echo && cfg.sync_interval > 0.0 {
+                    fe.set_local_echo(true);
+                }
                 fe
             })
             .collect();
@@ -213,6 +243,7 @@ impl ClusterSim {
             status_cache: vec![None; total],
             status_epochs: vec![u64::MAX; total],
             loads: vec![None; total],
+            step_gen: vec![0; total],
         }
     }
 
@@ -263,14 +294,176 @@ impl ClusterSim {
         let fe = &mut self.frontends[f];
         fe.view.sync_all(&self.engines, self.provisioner.active(), now,
                          want_statuses, want_loads);
+        // The fresh view reflects every landed dispatch: the echo log
+        // is obsolete.
+        fe.clear_echo_all();
     }
 
     fn kick_engine(&mut self, i: usize, queue: &mut EventQueue) {
         if self.engines[i].busy_until().is_none() {
             if let Some(done) = self.engines[i].start_step(&self.cost) {
-                queue.push(Event { time: done, kind: EventKind::StepDone(i) });
+                queue.push(Event {
+                    time: done,
+                    kind: EventKind::StepDone(i, self.step_gen[i]),
+                });
             }
         }
+    }
+
+    /// Can front-end `f` place a request right now?  Over stale views
+    /// the front-end only knows what its view shows; on the fresh path
+    /// the simulator's active set is authoritative.  False only under
+    /// fault injection (healthy runs always have an active instance).
+    fn can_dispatch(&self, f: usize, stale_views: bool) -> bool {
+        if stale_views {
+            self.frontends[f].view.active_count() > 0
+        } else {
+            self.provisioner.active_count() > 0
+        }
+    }
+
+    /// Make and record the dispatch decision for request `idx` through
+    /// front-end `f` (first arrivals and fault-driven re-dispatches
+    /// alike: a re-dispatch is a brand-new decision from the surviving
+    /// front-end's current view — Block re-predicts, heuristics
+    /// re-count blocks).
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_request(
+        &mut self,
+        requests: &[Request],
+        idx: usize,
+        f: usize,
+        now: f64,
+        stale_views: bool,
+        queue: &mut EventQueue,
+        probes: &mut Vec<Probe>,
+        sampled: &mut Vec<SampledArrival>,
+    ) {
+        let req = &requests[idx];
+        // Each view side is only computed when something will read it:
+        // loads feed heuristic dispatchers and the probe record; full
+        // snapshots feed the Block family's Predictor and
+        // sampled-arrival captures (the latter refreshed lazily below).
+        let need_statuses = self.cfg.scheduler.is_predictive()
+            || self.opts.reference_path;
+        let need_loads =
+            !self.cfg.scheduler.is_predictive() || self.opts.probes;
+        if !stale_views {
+            if need_statuses {
+                self.refresh_statuses();
+            }
+            if need_loads {
+                self.refresh_loads();
+            }
+            if self.opts.cloned_view_path {
+                // Parity mode: decide from a per-arrival clone of the
+                // fresh state instead of borrowing it.
+                self.sync_frontend(f, now, need_statuses, need_loads);
+            }
+        } else if self.opts.probes {
+            // Probe telemetry always reports the *true* loads; only the
+            // dispatch decision sees the stale view.
+            self.refresh_loads();
+        }
+        let decision = {
+            let via_view = stale_views || self.opts.cloned_view_path;
+            let fe = &mut self.frontends[f];
+            let fresh: Option<(&[Option<InstanceStatus>],
+                               &[Option<InstanceLoad>])> =
+                if via_view {
+                    None
+                } else {
+                    let statuses: &[Option<InstanceStatus>] =
+                        if need_statuses { &self.status_cache }
+                        else { &[] };
+                    let loads: &[Option<InstanceLoad>] =
+                        if need_loads { &self.loads } else { &[] };
+                    Some((statuses, loads))
+                };
+            fe.pick(req, now, fresh, &self.cost)
+        };
+
+        if self.opts.probes {
+            probes.push(Probe {
+                time: now,
+                free_blocks: self
+                    .loads
+                    .iter()
+                    .filter_map(|l| l.as_ref().map(|ld| ld.free_blocks))
+                    .collect(),
+                cum_preemptions: self
+                    .engines
+                    .iter()
+                    .map(|e| e.total_preemptions)
+                    .sum(),
+                active_instances: self.provisioner.active_count(),
+            });
+        }
+        if self.opts.sample_prob > 0.0
+            && self.rng.bernoulli(self.opts.sample_prob)
+        {
+            self.refresh_statuses();
+            sampled.push(SampledArrival {
+                request: req.clone(),
+                statuses: self
+                    .status_cache
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, s)| {
+                        s.as_ref().map(|st| (i, st.clone()))
+                    })
+                    .collect(),
+                decision: decision.clone(),
+            });
+        }
+
+        // Preemptive provisioning watches predicted latency.  A
+        // non-finite prediction (the Predictor's pessimistic
+        // MAX_SIM_STEPS bail-out) carries no signal — feeding INF
+        // downstream would trigger provisioning on garbage and poison
+        // INF−INF metric arithmetic.
+        if let Some(pred) = decision.predicted_e2e {
+            if pred.is_finite() {
+                if let Some(ready) =
+                    self.provisioner.observe_predicted(now, pred)
+                {
+                    queue.push(Event {
+                        time: ready,
+                        kind: EventKind::InstanceReady,
+                    });
+                }
+            }
+        }
+
+        // Ack-piggybacked view refreshes are not free in a real
+        // deployment: the instance serializes its status into the
+        // enqueue ack and the front-end parses it — one more
+        // per-dispatch cost on top of the decision itself.
+        let mut overhead = decision.overhead;
+        if stale_views && self.cfg.sync_on_ack {
+            overhead += self.cfg.overhead.sync_ack_cost;
+        }
+
+        // The request is now in transit to its instance until the
+        // Dispatch event lands — visible only to the front-end that
+        // dispatched it.
+        self.frontends[f].in_transit[decision.instance]
+            .push(req.clone());
+
+        self.in_flight_meta.insert(req.id, DispatchInfo {
+            arrival: req.arrival,
+            dispatched: now + overhead,
+            instance: decision.instance,
+            frontend: f,
+            overhead,
+            predicted: decision.predicted_e2e,
+            prompt_tokens: req.prompt_tokens,
+            response_tokens: req.response_tokens,
+        });
+        queue.push(Event {
+            time: now + overhead,
+            kind: EventKind::Dispatch(idx, decision.instance, f),
+        });
     }
 
     /// Run the request stream to completion.
@@ -282,6 +475,42 @@ impl ClusterSim {
             queue.push(Event { time: r.arrival,
                                kind: EventKind::Arrival(idx, f) });
         }
+        // Materialize the fault schedule: an explicit scripted plan
+        // wins, else one is sampled from the config over the arrival
+        // horizon.  `FaultPlan::none()` pushes no events — the healthy
+        // run, byte for byte.
+        let horizon = requests
+            .iter()
+            .map(|r| r.arrival)
+            .fold(0.0f64, f64::max);
+        let plan = match self.opts.fault_plan.take() {
+            Some(p) => p,
+            None if self.cfg.faults.enabled() => FaultPlan::sample(
+                &self.cfg.faults, horizon, self.frontends.len(),
+                self.engines.len()),
+            None => FaultPlan::none(),
+        };
+        for ev in &plan.events {
+            queue.push(Event { time: ev.time,
+                               kind: EventKind::Fault(ev.kind) });
+        }
+        // Fault bookkeeping (all empty/unused on the healthy path).
+        let id_to_idx: HashMap<RequestId, usize> = if plan.is_empty() {
+            HashMap::new()
+        } else {
+            requests.iter().enumerate().map(|(i, r)| (r.id, i)).collect()
+        };
+        let mut fault_records: Vec<FaultRecord> = Vec::new();
+        // Open re-dispatches: request id → fault record that caused it.
+        let mut redispatch_fault: HashMap<RequestId, usize> = HashMap::new();
+        let mut latest_fault_of_instance: Vec<Option<usize>> =
+            vec![None; self.engines.len()];
+        let mut latest_fault_of_frontend: Vec<Option<usize>> =
+            vec![None; self.frontends.len()];
+        // Requests with nowhere to go (no surviving front-end, or no
+        // instance the chosen front-end knows to be alive); retried
+        // when capacity returns, dropped if the run ends first.
+        let mut parked: Vec<usize> = Vec::new();
         // `sync_interval > 0` switches dispatch to bounded-staleness
         // views: seed every front-end's view with the (idle) t=0 state,
         // then arm the periodic pulls.  The pulls re-arm themselves while
@@ -310,144 +539,98 @@ impl ClusterSim {
         while let Some(ev) = queue.pop() {
             let now = ev.time;
             match ev.kind {
-                EventKind::Arrival(idx, f) => {
+                EventKind::Arrival(idx, f0) => {
                     arrivals_remaining -= 1;
-                    let req = &requests[idx];
-                    // Each view side is only computed when something will
-                    // read it: loads feed heuristic dispatchers and the
-                    // probe record; full snapshots feed the Block family's
-                    // Predictor and sampled-arrival captures (the latter
-                    // refreshed lazily below).
-                    let need_statuses = self.cfg.scheduler.is_predictive()
-                        || self.opts.reference_path;
-                    let need_loads =
-                        !self.cfg.scheduler.is_predictive() || self.opts.probes;
-                    if !stale_views {
-                        if need_statuses {
-                            self.refresh_statuses();
-                        }
-                        if need_loads {
-                            self.refresh_loads();
-                        }
-                        if self.opts.cloned_view_path {
-                            // Parity mode: decide from a per-arrival clone
-                            // of the fresh state instead of borrowing it.
-                            self.sync_frontend(f, now, need_statuses,
-                                               need_loads);
-                        }
-                    } else if self.opts.probes {
-                        // Probe telemetry always reports the *true* loads;
-                        // only the dispatch decision sees the stale view.
-                        self.refresh_loads();
-                    }
-                    let decision = {
-                        let via_view =
-                            stale_views || self.opts.cloned_view_path;
-                        let fe = &mut self.frontends[f];
-                        let fresh: Option<(&[Option<InstanceStatus>],
-                                           &[Option<InstanceLoad>])> =
-                            if via_view {
-                                None
-                            } else {
-                                let statuses: &[Option<InstanceStatus>] =
-                                    if need_statuses { &self.status_cache }
-                                    else { &[] };
-                                let loads: &[Option<InstanceLoad>] =
-                                    if need_loads { &self.loads } else { &[] };
-                                Some((statuses, loads))
-                            };
-                        fe.pick(req, now, fresh, &self.cost)
-                    };
-
-                    if self.opts.probes {
-                        probes.push(Probe {
-                            time: now,
-                            free_blocks: self
-                                .loads
-                                .iter()
-                                .filter_map(|l| l.as_ref().map(|ld| ld.free_blocks))
-                                .collect(),
-                            cum_preemptions: self
-                                .engines
-                                .iter()
-                                .map(|e| e.total_preemptions)
-                                .sum(),
-                            active_instances: self.provisioner.active_count(),
-                        });
-                    }
-                    if self.opts.sample_prob > 0.0
-                        && self.rng.bernoulli(self.opts.sample_prob)
-                    {
-                        self.refresh_statuses();
-                        sampled.push(SampledArrival {
-                            request: req.clone(),
-                            statuses: self
-                                .status_cache
-                                .iter()
-                                .enumerate()
-                                .filter_map(|(i, s)| {
-                                    s.as_ref().map(|st| (i, st.clone()))
-                                })
-                                .collect(),
-                            decision: decision.clone(),
-                        });
-                    }
-
-                    // Preemptive provisioning watches predicted latency.
-                    // A non-finite prediction (the Predictor's pessimistic
-                    // MAX_SIM_STEPS bail-out) carries no signal — feeding
-                    // INF downstream would trigger provisioning on
-                    // garbage and poison INF−INF metric arithmetic.
-                    if let Some(pred) = decision.predicted_e2e {
-                        if pred.is_finite() {
-                            if let Some(ready) =
-                                self.provisioner.observe_predicted(now, pred)
-                            {
-                                queue.push(Event {
-                                    time: ready,
-                                    kind: EventKind::InstanceReady,
-                                });
-                            }
+                    // Crash-aware sharding: an arrival headed to a dead
+                    // front-end is redirected to a survivor; untouched
+                    // arrivals keep exactly their healthy-run
+                    // assignment (the primary cursor never moves).
+                    let assigned = self.sharder.resolve(f0);
+                    if assigned.is_some() && assigned != Some(f0) {
+                        if let Some(k) = latest_fault_of_frontend[f0] {
+                            fault_records[k].redirected += 1;
                         }
                     }
-
-                    // The request is now in transit to its instance until
-                    // the Dispatch event lands — visible only to the
-                    // front-end that dispatched it.
-                    self.frontends[f].in_transit[decision.instance]
-                        .push(req.clone());
-
-                    self.in_flight_meta.insert(req.id, DispatchInfo {
-                        arrival: req.arrival,
-                        dispatched: now + decision.overhead,
-                        instance: decision.instance,
-                        frontend: f,
-                        overhead: decision.overhead,
-                        predicted: decision.predicted_e2e,
-                        prompt_tokens: req.prompt_tokens,
-                        response_tokens: req.response_tokens,
-                    });
-                    queue.push(Event {
-                        time: now + decision.overhead,
-                        kind: EventKind::Dispatch(idx, decision.instance, f),
-                    });
+                    match assigned {
+                        Some(f) if self.can_dispatch(f, stale_views) => {
+                            self.dispatch_request(requests, idx, f, now,
+                                                  stale_views, &mut queue,
+                                                  &mut probes, &mut sampled);
+                        }
+                        _ => parked.push(idx),
+                    }
+                }
+                EventKind::Redispatch(idx) => {
+                    // A fault handed this request back: a surviving
+                    // front-end re-decides its placement from scratch.
+                    match self.sharder.next_alive() {
+                        Some(f) if self.can_dispatch(f, stale_views) => {
+                            self.dispatch_request(requests, idx, f, now,
+                                                  stale_views, &mut queue,
+                                                  &mut probes, &mut sampled);
+                        }
+                        _ => parked.push(idx),
+                    }
                 }
                 EventKind::Dispatch(idx, instance, f) => {
                     let req = &requests[idx];
-                    self.frontends[f].in_transit[instance]
-                        .retain(|r| r.id != req.id);
+                    let landed = self.provisioner.active()[instance];
+                    self.frontends[f].dispatch_landed(instance, req, landed);
+                    if !landed {
+                        // Connection refused: the target died while the
+                        // request was on the wire.  The failed attempt
+                        // is itself a view update — the sender now
+                        // knows this instance is gone — and the request
+                        // bounces back through dispatch.
+                        if stale_views && self.frontends[f].alive {
+                            let fe = &mut self.frontends[f];
+                            fe.view.sync_instance(
+                                instance, &self.engines[instance], false,
+                                now);
+                            fe.clear_echo(instance);
+                        }
+                        self.in_flight_meta.remove(&req.id);
+                        if let Some(k) = latest_fault_of_instance[instance] {
+                            fault_records[k].redispatched += 1;
+                            // A request may bounce while already owed to
+                            // an earlier fault (lost by A, re-placed on
+                            // B, B died too): keep the *originating*
+                            // attribution so that fault's disruption
+                            // window keeps running until the request is
+                            // truly back on a healthy host.
+                            redispatch_fault.entry(req.id).or_insert(k);
+                        }
+                        queue.push(Event {
+                            time: now,
+                            kind: EventKind::Redispatch(idx),
+                        });
+                        continue;
+                    }
                     self.engines[instance].enqueue(req, now);
+                    if let Some(k) = redispatch_fault.remove(&req.id) {
+                        // A re-dispatched request is back on a healthy
+                        // instance: extend its fault's disruption window.
+                        fault_records[k].last_landed =
+                            fault_records[k].last_landed.max(now);
+                    }
                     self.kick_engine(instance, &mut queue);
-                    if stale_views && self.cfg.sync_on_ack {
+                    if stale_views && self.cfg.sync_on_ack
+                        && self.frontends[f].alive
+                    {
                         // The enqueue ack carries the instance's current
                         // state back to the dispatching front-end.
                         let fe = &mut self.frontends[f];
                         fe.view.sync_instance(
                             instance, &self.engines[instance],
                             self.provisioner.active()[instance], now);
+                        fe.clear_echo(instance);
                     }
                 }
-                EventKind::StepDone(i) => {
+                EventKind::StepDone(i, gen) => {
+                    if gen != self.step_gen[i] {
+                        // Completion of a step that died with the host.
+                        continue;
+                    }
                     self.engines[i].finish_step();
                     for f in self.engines[i].take_finished() {
                         let info = self
@@ -455,8 +638,13 @@ impl ClusterSim {
                             .remove(&f.id)
                             .expect("finished unknown request");
                         self.served_by[i] += 1;
-                        self.frontends[info.frontend]
-                            .on_finish(f.id, info.response_tokens);
+                        // Completion feedback only reaches a live
+                        // front-end (a crashed one has no scheduler
+                        // state left to update — nor does it need any).
+                        if self.frontends[info.frontend].alive {
+                            self.frontends[info.frontend]
+                                .on_finish(f.id, info.response_tokens);
+                        }
                         let m = RequestMetrics {
                             id: f.id,
                             instance: i,
@@ -485,14 +673,57 @@ impl ClusterSim {
                     self.kick_engine(i, &mut queue);
                 }
                 EventKind::InstanceReady => {
-                    for i in self.provisioner.activate_ready(now) {
+                    let activated = self.provisioner.activate_ready(now);
+                    for &i in &activated {
                         self.engines[i].advance_clock(now);
                         self.kick_engine(i, &mut queue);
+                        // A host coming up (elastic scale-up or fault
+                        // rejoin) registers with every live front-end —
+                        // the boot-time announcement real serving
+                        // routers rely on.  Only meaningful over stale
+                        // views; the fresh path reads the active set
+                        // directly.
+                        if stale_views {
+                            for fe in &mut self.frontends {
+                                if fe.alive {
+                                    fe.view.sync_instance(
+                                        i, &self.engines[i], true, now);
+                                    fe.clear_echo(i);
+                                }
+                            }
+                        }
                     }
                     size_timeline.push((now, self.provisioner.active_count()));
+                    if !activated.is_empty() && !parked.is_empty() {
+                        // Capacity returned: give every parked request
+                        // another shot at dispatch.
+                        for idx in parked.drain(..) {
+                            queue.push(Event {
+                                time: now,
+                                kind: EventKind::Redispatch(idx),
+                            });
+                        }
+                    }
                 }
                 EventKind::ViewSync(f) => {
+                    if !self.frontends[f].alive {
+                        // A crashed front-end pulls no views, and its
+                        // sync chain dies with it.
+                        continue;
+                    }
                     self.sync_frontend(f, now, want_statuses, want_loads);
+                    if !parked.is_empty()
+                        && self.can_dispatch(f, stale_views)
+                    {
+                        // This front-end now sees live capacity: retry
+                        // everything that had nowhere to go.
+                        for idx in parked.drain(..) {
+                            queue.push(Event {
+                                time: now,
+                                kind: EventKind::Redispatch(idx),
+                            });
+                        }
+                    }
                     if arrivals_remaining > 0 {
                         queue.push(Event {
                             time: now + self.cfg.sync_interval,
@@ -500,6 +731,76 @@ impl ClusterSim {
                         });
                     }
                 }
+                EventKind::Fault(kind) => match kind {
+                    FaultKind::FrontEndCrash(f) => {
+                        if f < self.frontends.len()
+                            && self.frontends[f].alive
+                        {
+                            // The crash costs exactly this: the sharder
+                            // re-shards the dead front-end's arrival
+                            // slice and its cached view evaporates.
+                            // Nothing is re-dispatched, nothing is
+                            // recovered — there is no state to recover.
+                            self.frontends[f].crash();
+                            self.sharder.set_alive(f, false);
+                            latest_fault_of_frontend[f] =
+                                Some(fault_records.len());
+                            fault_records.push(FaultRecord::new(now, kind));
+                        }
+                    }
+                    FaultKind::InstanceFail(i) => {
+                        if i >= self.engines.len()
+                            || self.provisioner.is_failed(i)
+                        {
+                            // Unknown slot / already down: no-op.
+                        } else if !self.provisioner.active()[i] {
+                            // Not serving yet (backup or mid-cold-start):
+                            // the slot dies silently — nothing was lost.
+                            self.provisioner.fail(i);
+                        } else {
+                            self.provisioner.fail(i);
+                            // Cancel the in-flight step's completion.
+                            self.step_gen[i] += 1;
+                            // Invalidate the central snapshot cache.
+                            self.status_cache[i] = None;
+                            self.status_epochs[i] = u64::MAX;
+                            self.loads[i] = None;
+                            let lost = self.engines[i].crash();
+                            let k = fault_records.len();
+                            let mut rec = FaultRecord::new(now, kind);
+                            rec.redispatched = lost.len() as u64;
+                            fault_records.push(rec);
+                            latest_fault_of_instance[i] = Some(k);
+                            for id in lost {
+                                self.in_flight_meta.remove(&id);
+                                redispatch_fault.insert(id, k);
+                                let idx = id_to_idx[&id];
+                                queue.push(Event {
+                                    time: now
+                                        + self.cfg.faults.detect_delay,
+                                    kind: EventKind::Redispatch(idx),
+                                });
+                            }
+                            size_timeline
+                                .push((now,
+                                       self.provisioner.active_count()));
+                        }
+                    }
+                    FaultKind::InstanceRejoin(i) => {
+                        if i < self.engines.len() {
+                            if let Some(ready) =
+                                self.provisioner.schedule_rejoin(
+                                    i, now,
+                                    self.cfg.faults.rejoin_cold_start)
+                            {
+                                queue.push(Event {
+                                    time: ready,
+                                    kind: EventKind::InstanceReady,
+                                });
+                            }
+                        }
+                    }
+                },
             }
         }
 
@@ -525,7 +826,21 @@ impl ClusterSim {
             }
         }
 
+        // Requests still parked when the queue drained had no surviving
+        // component to serve them: the conservation law's explicit
+        // "dropped" side.  Open re-dispatch entries at this point are
+        // exactly the lost requests that never made it back — charge
+        // them to their fault so its disruption window reads as
+        // unbounded instead of as instant recovery.
+        for k in redispatch_fault.values() {
+            fault_records[*k].unrecovered += 1;
+        }
+        let recovery = RecoveryStats::build(
+            fault_records, parked.len() as u64, &metrics,
+            self.cfg.faults.report_window);
+
         SimResult {
+            recovery,
             metrics,
             probes,
             sampled,
@@ -750,6 +1065,194 @@ mod tests {
             res.instances.iter().map(|s| s.requests_served).collect();
         assert_eq!(served, vec![2, 0],
                    "independent stale front-ends must herd here");
+    }
+
+    #[test]
+    fn zero_fault_plan_reproduces_healthy_run_exactly() {
+        // The fault subsystem's parity bar: an empty plan — and a plan
+        // whose faults only strike the drained, idle cluster after the
+        // last completion — must reproduce the healthy distributed run
+        // byte for byte (same placements, timings, summaries).
+        use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+        let run = |plan: Option<FaultPlan>| {
+            let mut cfg = small_cfg(SchedulerKind::Block);
+            cfg.frontends = 3;
+            cfg.sync_interval = 2.0;
+            run_experiment(cfg, &small_workload(8.0, 210),
+                           SimOptions { fault_plan: plan,
+                                        ..SimOptions::default() })
+                .unwrap()
+        };
+        let placements = |r: &SimResult| -> Vec<(u64, usize, f64, f64)> {
+            r.metrics
+                .records
+                .iter()
+                .map(|m| (m.id, m.instance, m.dispatched, m.finish))
+                .collect()
+        };
+        let healthy = run(None);
+        let none = run(Some(FaultPlan::none()));
+        assert_eq!(placements(&healthy), placements(&none));
+        assert_eq!(healthy.metrics.summary(), none.metrics.summary());
+        assert!(none.recovery.reports.is_empty());
+        assert_eq!(none.recovery.dropped, 0);
+
+        let late = run(Some(FaultPlan::scripted(vec![
+            FaultEvent { time: 1.0e6,
+                         kind: FaultKind::InstanceFail(0) },
+            FaultEvent { time: 1.0e6 + 1.0,
+                         kind: FaultKind::InstanceRejoin(0) },
+        ])));
+        assert_eq!(placements(&healthy), placements(&late),
+                   "a fault on the drained cluster changes nothing");
+        assert_eq!(healthy.metrics.summary(), late.metrics.summary());
+        assert_eq!(late.recovery.total_redispatched, 0);
+    }
+
+    #[test]
+    fn frontend_crash_reshards_without_redispatch() {
+        // The statelessness claim, measured: killing a front-end
+        // mid-run loses *nothing* — its arrival slice re-shards across
+        // survivors and every request still completes.  Zero
+        // re-dispatches is the proof that a front-end held no
+        // authoritative state.
+        use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+        let mut cfg = small_cfg(SchedulerKind::Block);
+        cfg.frontends = 3;
+        cfg.sync_interval = 2.0;
+        let res = run_experiment(
+            cfg, &small_workload(8.0, 240),
+            SimOptions {
+                fault_plan: Some(FaultPlan::scripted(vec![FaultEvent {
+                    time: 10.0,
+                    kind: FaultKind::FrontEndCrash(1),
+                }])),
+                ..SimOptions::default()
+            })
+            .unwrap();
+        assert_eq!(res.metrics.len(), 240, "nothing lost");
+        assert_eq!(res.recovery.dropped, 0);
+        assert_eq!(res.recovery.reports.len(), 1);
+        let rep = &res.recovery.reports[0];
+        assert_eq!(rep.record.redispatched, 0,
+                   "a stateless front-end has nothing to recover");
+        assert!(rep.record.redirected > 0,
+                "the dead slice re-shards across survivors");
+        assert_eq!(res.recovery.total_redirected, rep.record.redirected);
+        // Front-end 1 stops dispatching at the crash; round-robin would
+        // have given it 80 of 240.
+        assert!(res.frontend_dispatches[1] < 80,
+                "dispatches: {:?}", res.frontend_dispatches);
+        assert_eq!(res.frontend_dispatches.iter().sum::<u64>(), 240);
+    }
+
+    #[test]
+    fn instance_failure_redispatches_lost_work_and_rejoins() {
+        use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+        let mut cfg = small_cfg(SchedulerKind::Block);
+        cfg.faults.rejoin_cold_start = 2.0;
+        // 16 QPS on 4 instances is ~80% load: instance 0 is guaranteed
+        // to hold queued/running work when it dies at t=5.
+        let res = run_experiment(
+            cfg, &small_workload(16.0, 240),
+            SimOptions {
+                fault_plan: Some(FaultPlan::scripted(vec![
+                    FaultEvent { time: 5.0,
+                                 kind: FaultKind::InstanceFail(0) },
+                    FaultEvent { time: 9.0,
+                                 kind: FaultKind::InstanceRejoin(0) },
+                ])),
+                ..SimOptions::default()
+            })
+            .unwrap();
+        // Conservation: everything admitted is eventually served.
+        assert_eq!(res.metrics.len(), 240);
+        assert_eq!(res.recovery.dropped, 0);
+        let served: usize =
+            res.instances.iter().map(|s| s.requests_served).sum();
+        assert_eq!(served, 240);
+        // The failure lost real work that had to re-enter dispatch.
+        let fail = res
+            .recovery
+            .reports
+            .iter()
+            .find(|r| matches!(r.record.kind, FaultKind::InstanceFail(0)))
+            .expect("fail fault recorded");
+        assert!(fail.record.redispatched > 0,
+                "an instance death must lose in-flight work here");
+        assert!(fail.record.disruption_window()
+                    >= ClusterConfig::default().faults.detect_delay,
+                "re-dispatch cannot land before detection");
+        assert_eq!(res.recovery.total_redispatched,
+                   res.recovery.reports.iter()
+                       .map(|r| r.record.redispatched).sum::<u64>());
+        // The active set dipped to 3 and recovered to 4 through the
+        // provisioner's cold-start lifecycle.
+        assert!(res.size_timeline.iter().any(|&(_, s)| s == 3));
+        assert_eq!(res.size_timeline.last().unwrap().1, 4);
+        // Requests keep their original arrival: disruption shows up as
+        // latency, not as lost accounting.
+        for m in &res.metrics.records {
+            assert!(m.dispatched >= m.arrival);
+        }
+    }
+
+    #[test]
+    fn local_echo_prevents_self_herding() {
+        // The stale-view blindness the local echo repairs, in
+        // miniature: one front-end, stale view synced only at t=0, two
+        // arrivals far enough apart that the first Dispatch lands (and
+        // so leaves the in-transit set) before the second decision.
+        // Without the echo both land on instance 0; replaying the
+        // front-end's own landed dispatch splits them.
+        let run = |echo: bool| {
+            let cfg = ClusterConfig {
+                n_instances: 2,
+                scheduler: SchedulerKind::Block,
+                frontends: 1,
+                sync_interval: 1_000.0,
+                local_echo: echo,
+                ..ClusterConfig::default()
+            };
+            let requests = vec![
+                Request::new(1, 0.0, 300, 80),
+                Request::new(2, 0.5, 300, 80),
+            ];
+            let res =
+                ClusterSim::new(cfg, SimOptions::default()).run(&requests);
+            res.instances
+                .iter()
+                .map(|s| s.requests_served)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(false), vec![2, 0],
+                   "without the echo the front-end self-herds");
+        assert_eq!(run(true), vec![1, 1],
+                   "the echo restores in-transit accounting");
+    }
+
+    #[test]
+    fn sync_on_ack_charges_serialization_cost() {
+        // Satellite: ack piggybacking is no longer free — every
+        // dispatch pays `sync_ack_cost` on top of the decision
+        // overhead, visible in the per-request scheduling overhead.
+        let run = |ack: bool| {
+            let mut cfg = small_cfg(SchedulerKind::MinQpm);
+            cfg.frontends = 2;
+            cfg.sync_interval = 4.0;
+            cfg.sync_on_ack = ack;
+            run_experiment(cfg, &small_workload(8.0, 100),
+                           SimOptions::default())
+                .unwrap()
+                .metrics
+                .summary()
+        };
+        let (off, on) = (run(false), run(true));
+        let delta = on.mean_overhead - off.mean_overhead;
+        let expected = ClusterConfig::default().overhead.sync_ack_cost;
+        assert!((delta - expected).abs() < 1e-9,
+                "ack cost must be charged exactly once per dispatch: \
+                 delta {delta} vs {expected}");
     }
 
     #[test]

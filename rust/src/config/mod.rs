@@ -182,6 +182,12 @@ pub struct OverheadConfig {
     /// Additional cost per simulated step-sequence in the deepest
     /// predictor (predictors run in parallel → max over instances).
     pub predict_per_step: f64,
+    /// Per-dispatch cost of the ack-piggybacked view refresh
+    /// (`sync_on_ack`): the instance serializes its status into the
+    /// enqueue ack and the front-end parses it.  Free in the original
+    /// PR 3 model; charging it is what makes the staleness sweep's
+    /// sync-on-ack rows report a real break-even interval.
+    pub sync_ack_cost: f64,
 }
 
 impl Default for OverheadConfig {
@@ -190,6 +196,7 @@ impl Default for OverheadConfig {
             heuristic_base: 0.012,
             predict_base: 0.035,
             predict_per_step: 6.0e-6,
+            sync_ack_cost: 0.003,
         }
     }
 }
@@ -228,6 +235,115 @@ impl Default for ProvisionConfig {
     }
 }
 
+/// Fault injection (chaos) knobs — see [`crate::faults`].
+///
+/// Randomized plans are sampled once before the run from per-component
+/// exponentials, so a (config, workload, fault seed) triple replays
+/// exactly.  `instance_mttf == 0` and `frontend_mttf == 0` disable the
+/// respective fault class; both zero (the default) leaves the subsystem
+/// fully inert — the healthy-cluster run, byte for byte.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Mean time to failure per instance, seconds (0 = no instance
+    /// failures).
+    pub instance_mttf: f64,
+    /// Mean time from an instance failure to its rejoin event, seconds.
+    pub instance_mttr: f64,
+    /// Mean time to crash per front-end, seconds (0 = no crashes).
+    /// Front-end 0 never crashes in sampled plans — the designated
+    /// survivor.
+    pub frontend_mttf: f64,
+    /// Failure-detection delay: seconds between an instance dying and
+    /// its lost requests re-entering dispatch.
+    pub detect_delay: f64,
+    /// Cold start charged when a failed instance rejoins (the
+    /// [`crate::provision::AutoProvisioner`] pending lifecycle).
+    pub rejoin_cold_start: f64,
+    /// Sliding window for per-fault recovery telemetry, seconds.
+    pub report_window: f64,
+    /// Seed of the fault-plan RNG (independent of the simulation RNG).
+    pub seed: u64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            instance_mttf: 0.0,
+            instance_mttr: 30.0,
+            frontend_mttf: 0.0,
+            detect_delay: 0.25,
+            rejoin_cold_start: 5.0,
+            report_window: 15.0,
+            seed: 13,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Does this config inject any faults at all?
+    pub fn enabled(&self) -> bool {
+        self.instance_mttf > 0.0 || self.frontend_mttf > 0.0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("instance_mttf", self.instance_mttf),
+            ("frontend_mttf", self.frontend_mttf),
+            ("detect_delay", self.detect_delay),
+            ("rejoin_cold_start", self.rejoin_cold_start),
+        ] {
+            if !v.is_finite() || v < 0.0 {
+                bail!("faults.{name} must be finite and >= 0");
+            }
+        }
+        if !self.instance_mttr.is_finite() || self.instance_mttr <= 0.0 {
+            bail!("faults.instance_mttr must be finite and > 0");
+        }
+        if !self.report_window.is_finite() || self.report_window <= 0.0 {
+            bail!("faults.report_window must be finite and > 0");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("instance_mttf", self.instance_mttf);
+        o.insert("instance_mttr", self.instance_mttr);
+        o.insert("frontend_mttf", self.frontend_mttf);
+        o.insert("detect_delay", self.detect_delay);
+        o.insert("rejoin_cold_start", self.rejoin_cold_start);
+        o.insert("report_window", self.report_window);
+        o.insert("seed", self.seed);
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = FaultConfig::default();
+        if let Some(v) = j.opt("instance_mttf") {
+            c.instance_mttf = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("instance_mttr") {
+            c.instance_mttr = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("frontend_mttf") {
+            c.frontend_mttf = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("detect_delay") {
+            c.detect_delay = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("rejoin_cold_start") {
+            c.rejoin_cold_start = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("report_window") {
+            c.report_window = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("seed") {
+            c.seed = v.as_usize()? as u64;
+        }
+        Ok(c)
+    }
+}
+
 /// Whole-cluster configuration.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -255,8 +371,17 @@ pub struct ClusterConfig {
     /// Piggyback a single-instance view refresh on every dispatch ack
     /// (`--sync-on-ack`): the acking instance reports its post-enqueue
     /// state to the dispatching front-end.  Only meaningful with
-    /// `sync_interval > 0`.
+    /// `sync_interval > 0`.  Charged per dispatch through
+    /// [`OverheadConfig::sync_ack_cost`].
     pub sync_on_ack: bool,
+    /// Stale-view local echo (`--local-echo`): a front-end replays its
+    /// own dispatches since its last view sync onto its stale view as
+    /// extra in-transit load, recovering most of the centralized
+    /// in-transit accounting with zero additional synchronization.
+    /// Only meaningful with `sync_interval > 0`.
+    pub local_echo: bool,
+    /// Fault injection (`--instance-mttf` etc.); inert by default.
+    pub faults: FaultConfig,
     /// Worker threads for Block's per-candidate prediction fan-out
     /// (`--jobs`).  1 = serial; any value produces bit-identical
     /// scheduling decisions — the argmin is ordered by
@@ -283,6 +408,8 @@ impl Default for ClusterConfig {
             sync_interval: 0.0,
             shard_policy: ShardPolicy::RoundRobin,
             sync_on_ack: false,
+            local_echo: false,
+            faults: FaultConfig::default(),
             jobs: 1,
             exec_noise: 0.06,
             seed: 42,
@@ -335,6 +462,7 @@ impl ClusterConfig {
         if !self.sync_interval.is_finite() || self.sync_interval < 0.0 {
             bail!("sync_interval must be finite and >= 0 (0 = always fresh)");
         }
+        self.faults.validate()?;
         Ok(())
     }
 
@@ -361,6 +489,7 @@ impl ClusterConfig {
         ov.insert("heuristic_base", self.overhead.heuristic_base);
         ov.insert("predict_base", self.overhead.predict_base);
         ov.insert("predict_per_step", self.overhead.predict_per_step);
+        ov.insert("sync_ack_cost", self.overhead.sync_ack_cost);
         o.insert("overhead", ov);
         let mut p = JsonObj::new();
         p.insert("enabled", self.provision.enabled);
@@ -376,6 +505,8 @@ impl ClusterConfig {
         o.insert("sync_interval", self.sync_interval);
         o.insert("shard_policy", self.shard_policy.name());
         o.insert("sync_on_ack", self.sync_on_ack);
+        o.insert("local_echo", self.local_echo);
+        o.insert("faults", self.faults.to_json());
         o.insert("jobs", self.jobs);
         o.insert("exec_noise", self.exec_noise);
         o.insert("seed", self.seed);
@@ -433,6 +564,9 @@ impl ClusterConfig {
             if let Some(v) = ov.opt("predict_per_step") {
                 c.overhead.predict_per_step = v.as_f64()?;
             }
+            if let Some(v) = ov.opt("sync_ack_cost") {
+                c.overhead.sync_ack_cost = v.as_f64()?;
+            }
         }
         if let Some(p) = j.opt("provision") {
             if let Some(v) = p.opt("enabled") {
@@ -471,6 +605,12 @@ impl ClusterConfig {
         }
         if let Some(v) = j.opt("sync_on_ack") {
             c.sync_on_ack = v.as_bool()?;
+        }
+        if let Some(v) = j.opt("local_echo") {
+            c.local_echo = v.as_bool()?;
+        }
+        if let Some(f) = j.opt("faults") {
+            c.faults = FaultConfig::from_json(f)?;
         }
         if let Some(v) = j.opt("jobs") {
             c.jobs = v.as_usize()?;
@@ -550,6 +690,11 @@ mod tests {
         c.sync_interval = 2.5;
         c.shard_policy = ShardPolicy::Hash;
         c.sync_on_ack = true;
+        c.local_echo = true;
+        c.overhead.sync_ack_cost = 0.005;
+        c.faults.instance_mttf = 40.0;
+        c.faults.frontend_mttf = 90.0;
+        c.faults.seed = 99;
         let j = c.to_json();
         let c2 = ClusterConfig::from_json(&j).unwrap();
         assert_eq!(c2.scheduler, SchedulerKind::LlumnixMinus);
@@ -561,6 +706,31 @@ mod tests {
         assert!((c2.sync_interval - 2.5).abs() < 1e-12);
         assert_eq!(c2.shard_policy, ShardPolicy::Hash);
         assert!(c2.sync_on_ack);
+        assert!(c2.local_echo);
+        assert!((c2.overhead.sync_ack_cost - 0.005).abs() < 1e-12);
+        assert!((c2.faults.instance_mttf - 40.0).abs() < 1e-12);
+        assert!((c2.faults.frontend_mttf - 90.0).abs() < 1e-12);
+        assert_eq!(c2.faults.seed, 99);
+        assert!(c2.faults.enabled());
+    }
+
+    #[test]
+    fn fault_config_defaults_inert_and_validated() {
+        let f = FaultConfig::default();
+        assert!(!f.enabled());
+        f.validate().unwrap();
+
+        let mut c = ClusterConfig::default();
+        c.faults.instance_mttr = 0.0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.faults.instance_mttf = -1.0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.faults.report_window = f64::INFINITY;
+        assert!(c.validate().is_err());
     }
 
     #[test]

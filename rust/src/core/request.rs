@@ -54,6 +54,23 @@ impl Request {
         self.predicted_tokens.unwrap_or(self.response_tokens)
     }
 
+    /// A payload-free copy for scheduler bookkeeping: every field the
+    /// dispatch logic reads (ids, token counts, estimates) and none of
+    /// the heap payload (prompt text, category) — copying this is
+    /// allocation-free, which matters on per-decision paths like the
+    /// stale-view local echo.
+    pub fn decision_copy(&self) -> Request {
+        Request {
+            id: self.id,
+            arrival: self.arrival,
+            prompt_tokens: self.prompt_tokens,
+            response_tokens: self.response_tokens,
+            predicted_tokens: self.predicted_tokens,
+            category: None,
+            prompt: None,
+        }
+    }
+
     pub fn total_tokens(&self) -> u32 {
         self.prompt_tokens + self.response_tokens
     }

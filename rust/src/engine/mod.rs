@@ -386,6 +386,22 @@ impl InstanceEngine {
         }
     }
 
+    /// Fault injection: the instance dies.  Every queued and running
+    /// sequence is lost (returned so the cluster can re-dispatch them),
+    /// the in-flight step is cancelled, and the KV pool is rebuilt
+    /// empty.  Lifetime counters (steps, busy time, preemptions) and
+    /// the clock survive — they are per-slot stats, and a rejoining
+    /// instance continues the same timeline.
+    pub fn crash(&mut self) -> Vec<RequestId> {
+        self.epoch += 1;
+        let mut lost: Vec<RequestId> =
+            self.waiting.drain(..).map(|s| s.id).collect();
+        lost.extend(self.running.drain(..).map(|s| s.id));
+        self.in_flight = None;
+        self.bm.reset();
+        lost
+    }
+
     /// Advance the idle engine's clock (a dispatch arrived later than the
     /// last activity).
     pub fn advance_clock(&mut self, now: f64) {
@@ -691,6 +707,33 @@ mod tests {
 
     fn req(id: u64, arrival: f64, prompt: u32, resp: u32) -> Request {
         Request::new(id, arrival, prompt, resp)
+    }
+
+    #[test]
+    fn crash_loses_everything_and_frees_kv() {
+        let c = cost();
+        let mut eng = engine(LocalPolicy::SarathiChunked);
+        eng.enqueue(&req(1, 0.0, 300, 50), 0.0);
+        eng.enqueue(&req(2, 0.0, 200, 40), 0.0);
+        eng.start_step(&c).unwrap();
+        assert!(eng.busy_until().is_some());
+        assert!(eng.free_blocks() < eng.total_blocks());
+        let epoch = eng.epoch();
+
+        let mut lost = eng.crash();
+        lost.sort_unstable();
+        assert_eq!(lost, vec![1, 2], "queued + running sequences lost");
+        assert!(eng.is_idle());
+        assert!(eng.busy_until().is_none(), "in-flight step cancelled");
+        assert_eq!(eng.free_blocks(), eng.total_blocks(), "KV pool rebuilt");
+        assert!(eng.epoch() > epoch, "crash is an observable mutation");
+
+        // A rejoined instance serves fresh work normally.
+        eng.advance_clock(10.0);
+        eng.enqueue(&req(3, 10.0, 100, 10), 10.0);
+        let done = run_to_completion(&mut eng, &c);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 3);
     }
 
     /// Drive the engine to quiescence; returns finished seqs.

@@ -1,0 +1,189 @@
+//! Chaos sweep — the recovery claim under measurement: how does each
+//! dispatcher absorb component deaths, and does the stateless front-end
+//! tier really have nothing to recover?
+//!
+//! Every (fault level × front-end count × scheduler) point runs the
+//! same near-capacity workload with a randomized-but-seeded
+//! [`crate::faults::FaultPlan`]: instances fail and rejoin on
+//! MTTF/MTTR exponentials scaled to the workload span, and (at the
+//! heavy level) front-ends crash permanently.  The `none` level is the
+//! healthy baseline every faulty point is judged against.
+//!
+//! What the recovery telemetry should show:
+//!
+//! * **front-end crashes cost ~nothing** — `redispatched` stays 0 for
+//!   crash faults; only the arrival re-shard (`redirected`) moves;
+//! * **instance failures cost real work** — lost sequences re-dispatch
+//!   through the survivors, visible as a disruption window and a
+//!   goodput dip around each fault;
+//! * **predictive re-dispatch places better** — Block re-predicts the
+//!   bounced requests against the shrunken cluster, while the counter
+//!   heuristics re-count blocks from (possibly stale) views.
+//!
+//! Results land in `results/chaos.json` (`schema: "chaos/v1"`),
+//! validated by the `chaos-smoke` CI job.
+
+use anyhow::Result;
+
+use crate::cluster::{run_experiment, SimOptions};
+use crate::config::SchedulerKind;
+use crate::experiments::{paper_cluster, parallel_map, sharegpt_workload,
+                         ExpContext, Scale};
+use crate::faults::RecoveryStats;
+use crate::metrics::{render_table, RunSummary};
+use crate::util::json::{Json, JsonObj};
+
+/// Dispatchers compared: the predictive scheduler vs the two strongest
+/// heuristic baselines (mirroring the staleness sweep).
+const KINDS: [SchedulerKind; 3] = [
+    SchedulerKind::Block,
+    SchedulerKind::MinQpm,
+    SchedulerKind::LlumnixMinus,
+];
+
+/// QPS of the sweep workload (same contended region as the staleness
+/// sweep: ~80% of 12-instance capacity).
+const SWEEP_QPS: f64 = 64.0;
+
+/// Fault levels: (name, instance-MTTF multiple of the workload span,
+/// front-end-MTTF multiple of the span; 0 = that fault class off).
+/// At `heavy`, a 12-instance cluster expects ~6 instance failures per
+/// run and each non-zero front-end crashes with probability ~0.49.
+const LEVELS: [(&str, f64, f64); 3] = [
+    ("none", 0.0, 0.0),
+    ("light", 8.0, 0.0),
+    ("heavy", 2.0, 1.4),
+];
+
+/// Front-end counts per scale.
+fn frontend_points(scale: Scale) -> Vec<usize> {
+    match scale {
+        Scale::Quick => vec![1, 2, 4],
+        Scale::Full => vec![1, 2, 4, 8],
+    }
+}
+
+struct Point {
+    frontends: usize,
+    level: &'static str,
+    kind: SchedulerKind,
+    requests: usize,
+    summary: RunSummary,
+    recovery: RecoveryStats,
+    instance_mttf: f64,
+    frontend_mttf: f64,
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    // The smoke grid is CI-sized: one distributed shape, a healthy
+    // point plus a deliberately dense fault level (every fault path
+    // exercised with near-certainty), a few hundred requests per point
+    // — a schema-complete chaos.json in seconds.
+    let (fe_points, levels, n): (Vec<usize>, Vec<(&str, f64, f64)>, usize) =
+        if ctx.smoke {
+            (vec![2], vec![("none", 0.0, 0.0), ("heavy", 0.5, 1.0)], 300)
+        } else {
+            (frontend_points(ctx.scale), LEVELS.to_vec(),
+             ctx.scale.requests_for(SWEEP_QPS))
+        };
+    let span = n as f64 / SWEEP_QPS;
+
+    let mut grid = Vec::new();
+    for &frontends in &fe_points {
+        for &level in &levels {
+            for kind in KINDS {
+                grid.push((frontends, level, kind));
+            }
+        }
+    }
+    let points = parallel_map(
+        ctx.jobs,
+        &grid,
+        |&(frontends, level, kind)| -> Result<Point> {
+            let (name, inst_mult, fe_mult) = level;
+            let mut cfg = paper_cluster(kind);
+            cfg.frontends = frontends;
+            cfg.sync_interval = if frontends == 1 { 0.0 } else { 1.0 };
+            cfg.shard_policy = ctx.shard;
+            cfg.faults.instance_mttf = inst_mult * span;
+            cfg.faults.instance_mttr = span / 4.0;
+            cfg.faults.frontend_mttf = fe_mult * span;
+            cfg.faults.rejoin_cold_start = 2.0;
+            cfg.faults.report_window = (span / 3.0).clamp(1.0, 15.0);
+            cfg.faults.seed = ctx.seed ^ 0xC4A0;
+            let res = run_experiment(
+                cfg,
+                &sharegpt_workload(SWEEP_QPS, n, ctx.seed),
+                SimOptions { probes: false, ..SimOptions::default() },
+            )?;
+            // The conservation law, checked on every point: what was
+            // not served must be explicitly dropped.
+            anyhow::ensure!(
+                res.metrics.len() as u64 + res.recovery.dropped == n as u64,
+                "conservation violated: {} served + {} dropped != {n}",
+                res.metrics.len(), res.recovery.dropped,
+            );
+            Ok(Point {
+                frontends,
+                level: name,
+                kind,
+                requests: n,
+                summary: res.metrics.summary(),
+                recovery: res.recovery,
+                instance_mttf: inst_mult * span,
+                frontend_mttf: fe_mult * span,
+            })
+        },
+    );
+
+    let mut out = JsonObj::new();
+    out.insert("schema", "chaos/v1");
+    out.insert("qps", SWEEP_QPS);
+    out.insert("requests_per_point", n);
+    out.insert("shard_policy", ctx.shard.name());
+    let mut pts = JsonObj::new();
+    let mut rows = Vec::new();
+    for point in points {
+        let p = point?;
+        let s = &p.summary;
+        let r = &p.recovery;
+        rows.push(vec![
+            format!("{}", p.frontends),
+            p.level.to_string(),
+            p.kind.name().to_string(),
+            format!("{:.3}", s.p99_ttft),
+            format!("{:.2}", s.p99_e2e),
+            format!("{}", s.n),
+            format!("{}", r.dropped),
+            format!("{}", r.reports.len()),
+            format!("{}", r.total_redispatched),
+            format!("{}", r.total_redirected),
+            format!("{:.2}", r.max_disruption()),
+            format!("{:.2}", r.worst_p99_after()),
+        ]);
+        let mut j = s.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("scheduler", p.kind.name());
+            o.insert("frontends", p.frontends);
+            o.insert("level", p.level);
+            o.insert("requests", p.requests);
+            o.insert("instance_mttf", p.instance_mttf);
+            o.insert("frontend_mttf", p.frontend_mttf);
+            o.insert("recovery", r.to_json());
+        }
+        pts.insert(
+            format!("{}@fe{}/{}", p.kind.name(), p.frontends, p.level),
+            j,
+        );
+    }
+    out.insert("points", Json::Obj(pts));
+    println!("Chaos sweep — fault level × front-ends at {SWEEP_QPS} QPS \
+              ({n} requests/point, {:.0}s span)", span);
+    println!("{}", render_table(
+        &["frontends", "faults", "scheduler", "p99 TTFT", "p99 e2e",
+          "served", "drop", "n_flt", "redisp", "redir", "disrupt(s)",
+          "p99@fault"],
+        &rows));
+
+    ctx.write_json("chaos", &Json::Obj(out))
+}

@@ -15,6 +15,7 @@
 //! each point's seed depends only on `ctx.seed`, so output is identical
 //! for any job count — parallelism changes wall-clock, never numbers.
 
+pub mod chaos;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
@@ -80,9 +81,13 @@ pub struct ExpContext {
     /// Worker threads for sweep points (`--jobs`; default: all cores).
     pub jobs: usize,
     /// Arrival sharding for the distributed-deployment sweeps
-    /// (`--shard`; read by [`staleness`], ignored by the centralized
-    /// paper experiments).
+    /// (`--shard`; read by [`staleness`] and [`chaos`], ignored by the
+    /// centralized paper experiments).
     pub shard: ShardPolicy,
+    /// CI smoke mode (`--smoke`): shrink the sweep grid to a
+    /// schema-complete minimum (read by [`chaos`]; other experiments
+    /// ignore it — their CI sizing is `Scale::Quick`).
+    pub smoke: bool,
 }
 
 impl Default for ExpContext {
@@ -93,6 +98,7 @@ impl Default for ExpContext {
             seed: 7,
             jobs: default_jobs(),
             shard: ShardPolicy::RoundRobin,
+            smoke: false,
         }
     }
 }
@@ -148,16 +154,18 @@ pub fn run(name: &str, ctx: &ExpContext) -> Result<()> {
         "fig8" => fig8::run(ctx),
         "tab2" => tab2::run(ctx),
         "staleness" => staleness::run(ctx),
+        "chaos" => chaos::run(ctx),
         "all" => {
             for n in ["tab1", "fig5", "fig6", "fig7", "fig8", "tab2",
-                      "staleness"] {
+                      "staleness", "chaos"] {
                 println!("\n=============== {n} ===============");
                 run(n, ctx)?;
             }
             Ok(())
         }
         other => anyhow::bail!("unknown experiment '{other}' \
-                                (tab1|fig5|fig6|fig7|fig8|tab2|staleness|all)"),
+                                (tab1|fig5|fig6|fig7|fig8|tab2|staleness|\
+                                 chaos|all)"),
     }
 }
 

@@ -15,6 +15,14 @@
 //! gateway skew — the coefficient of variation of per-front-end dispatch
 //! counts (0 = perfectly even; grows with hash/Poisson sharding).
 //! Results land in `results/staleness.json`.
+//!
+//! Every stale point (`sync_interval > 0`) runs twice: periodic pulls
+//! only, and with ack-piggybacked per-dispatch refreshes
+//! (`sync_on_ack`).  The ack variant is *charged* — each dispatch pays
+//! [`crate::config::OverheadConfig::sync_ack_cost`] for the status
+//! serialization — so comparing the two rows at each interval exposes
+//! the real break-even: below it, paying per-dispatch serialization
+//! beats going stale; above it, the periodic pull is the better deal.
 
 use anyhow::Result;
 
@@ -49,6 +57,7 @@ fn sweep_axes(scale: Scale) -> (Vec<usize>, Vec<f64>) {
 struct Point {
     frontends: usize,
     sync_interval: f64,
+    sync_on_ack: bool,
     kind: SchedulerKind,
     summary: RunSummary,
     /// Coefficient of variation of per-front-end dispatch counts.
@@ -78,18 +87,24 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
     for &frontends in &fe_points {
         for &sync_interval in &sync_points {
             for kind in KINDS {
-                grid.push((frontends, sync_interval, kind));
+                grid.push((frontends, sync_interval, false, kind));
+                if sync_interval > 0.0 {
+                    // The ack-piggyback variant, with its per-dispatch
+                    // serialization cost charged.
+                    grid.push((frontends, sync_interval, true, kind));
+                }
             }
         }
     }
     let points = parallel_map(
         ctx.jobs,
         &grid,
-        |&(frontends, sync_interval, kind)| -> Result<Point> {
+        |&(frontends, sync_interval, sync_on_ack, kind)| -> Result<Point> {
             let mut cfg = paper_cluster(kind);
             cfg.frontends = frontends;
             cfg.sync_interval = sync_interval;
             cfg.shard_policy = ctx.shard;
+            cfg.sync_on_ack = sync_on_ack;
             let res = run_experiment(
                 cfg,
                 &sharegpt_workload(SWEEP_QPS, n, ctx.seed),
@@ -98,6 +113,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             Ok(Point {
                 frontends,
                 sync_interval,
+                sync_on_ack,
                 kind,
                 summary: res.metrics.summary(),
                 gateway_skew: dispatch_cv(&res.frontend_dispatches),
@@ -115,11 +131,13 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         rows.push(vec![
             format!("{}", p.frontends),
             format!("{:.1}", p.sync_interval),
+            (if p.sync_on_ack { "+ack" } else { "-" }).to_string(),
             p.kind.name().to_string(),
             format!("{:.3}", s.mean_ttft),
             format!("{:.3}", s.p99_ttft),
             format!("{:.2}", s.mean_e2e),
             format!("{:.2}", s.p99_e2e),
+            format!("{:.2}", s.mean_overhead * 1e3),
             format!("{}", s.total_preemptions),
             format!("{:.3}", p.gateway_skew),
         ]);
@@ -127,21 +145,25 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         if let Json::Obj(o) = &mut j {
             o.insert("frontends", p.frontends);
             o.insert("sync_interval", p.sync_interval);
+            o.insert("sync_on_ack", p.sync_on_ack);
             o.insert("scheduler", p.kind.name());
             o.insert("gateway_skew", p.gateway_skew);
         }
         out.insert(
-            format!("{}@fe{}s{}", p.kind.name(), p.frontends,
-                    p.sync_interval),
+            format!("{}@fe{}s{}{}", p.kind.name(), p.frontends,
+                    p.sync_interval,
+                    if p.sync_on_ack { "+ack" } else { "" }),
             j,
         );
     }
     println!("Staleness sweep — front-ends × view-sync intervals at \
-              {SWEEP_QPS} QPS ({} sharding, {}s of load per point)",
+              {SWEEP_QPS} QPS ({} sharding, {}s of load per point; \
+              +ack rows pay the per-dispatch serialization cost)",
              ctx.shard.name(), ctx.scale.duration());
     println!("{}", render_table(
-        &["frontends", "sync(s)", "scheduler", "mean TTFT", "p99 TTFT",
-          "mean e2e", "p99 e2e", "preempt", "gw skew"],
+        &["frontends", "sync(s)", "ack", "scheduler", "mean TTFT",
+          "p99 TTFT", "mean e2e", "p99 e2e", "ovh(ms)", "preempt",
+          "gw skew"],
         &rows));
 
     ctx.write_json("staleness", &Json::Obj(out))

@@ -1,0 +1,575 @@
+//! Fault injection & elastic recovery: kill front-ends and instances
+//! mid-run and measure what the statelessness claim actually buys.
+//!
+//! Block's reliability argument is that a fully distributed scheduler
+//! tier has *nothing to recover* when a component dies: a front-end
+//! owns no authoritative state (its view is a cache, its in-transit set
+//! is on the wire), so losing one costs exactly a re-shard of its
+//! arrival slice.  Instances are a different story — an instance death
+//! loses real work (queued and running sequences), which must be
+//! re-dispatched through the surviving front-ends' schedulers.  This
+//! module makes both failure modes injectable so the claim is
+//! falsifiable inside the discrete-event cluster runtime:
+//!
+//! * [`FaultPlan`] — a deterministic, seedable schedule of
+//!   [`FaultKind`] events, either scripted explicitly or sampled from
+//!   per-component MTTF/MTTR exponentials
+//!   ([`crate::config::FaultConfig`]).  The plan is materialized before
+//!   the run starts, so a given (config, workload, fault seed) triple
+//!   replays exactly.
+//! * [`FaultRecord`] / [`FaultReport`] / [`RecoveryStats`] — per-fault
+//!   recovery telemetry surfaced on `SimResult`: how many requests each
+//!   fault forced back through dispatch, how long the disruption window
+//!   lasted, and how goodput and tail latency moved in sliding windows
+//!   around the fault instant.
+//!
+//! Semantics of each fault (enforced by `cluster/mod.rs`):
+//!
+//! * **FrontEndCrash(f)** — front-end `f` dies permanently.  Its stale
+//!   view is dropped, the [`crate::cluster::frontend::ArrivalSharder`]
+//!   re-shards its arrival slice across survivors, and its already-sent
+//!   dispatches land normally (they are on the wire, not in the
+//!   front-end).  Nothing is re-dispatched — that *is* the
+//!   statelessness proof, asserted by
+//!   `cluster::tests::frontend_crash_reshards_without_redispatch`.
+//! * **InstanceFail(i)** — instance `i` loses its queued and running
+//!   sequences and its in-flight step.  The lost requests (plus any
+//!   dispatch that subsequently bounces off the dead host) re-enter the
+//!   surviving front-ends' schedulers after
+//!   [`crate::config::FaultConfig::detect_delay`]; Block re-predicts
+//!   them, heuristics re-count their blocks.
+//! * **InstanceRejoin(i)** — the failed instance comes back through the
+//!   [`crate::provision::AutoProvisioner`]'s cold-start lifecycle
+//!   (pending → `InstanceReady` → active), so elastic scale-up and
+//!   failure recovery share one active-set path.
+//!
+//! With [`FaultPlan::none`] the subsystem is inert: the event loop sees
+//! no fault events and reproduces the healthy-cluster run byte for byte
+//! (`cluster::tests::zero_fault_plan_reproduces_healthy_run_exactly`,
+//! plus the conservation property `prop_no_request_lost_under_faults`).
+
+use crate::config::FaultConfig;
+use crate::metrics::MetricsCollector;
+use crate::util::json::{Json, JsonObj};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// One injectable failure (indices are stable run-long slot numbers).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Scheduler front-end `.0` dies permanently.
+    FrontEndCrash(usize),
+    /// Instance `.0` dies, losing queued + running sequences.
+    InstanceFail(usize),
+    /// Instance `.0` begins rejoining (cold start applies on top).
+    InstanceRejoin(usize),
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::FrontEndCrash(_) => "frontend-crash",
+            FaultKind::InstanceFail(_) => "instance-fail",
+            FaultKind::InstanceRejoin(_) => "instance-rejoin",
+        }
+    }
+
+    /// The component slot the fault targets.
+    pub fn target(&self) -> usize {
+        match self {
+            FaultKind::FrontEndCrash(i)
+            | FaultKind::InstanceFail(i)
+            | FaultKind::InstanceRejoin(i) => *i,
+        }
+    }
+}
+
+/// A scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub time: f64,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of faults, materialized before the run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Time-ordered fault events.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: the healthy-cluster run, byte for byte.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// An explicit schedule (sorted by time, stable for ties).
+    pub fn scripted(mut events: Vec<FaultEvent>) -> Self {
+        events.sort_by(|a, b| a.time.total_cmp(&b.time));
+        FaultPlan { events }
+    }
+
+    /// Sample a randomized plan from per-component MTTF/MTTR
+    /// exponentials over `[0, horizon)`.
+    ///
+    /// * Each instance fails after `Exp(mean = instance_mttf)`, rejoins
+    ///   after a further `Exp(mean = instance_mttr)`, then becomes
+    ///   eligible to fail again — repeating until the horizon.
+    /// * Each front-end except index 0 crashes once at
+    ///   `Exp(mean = frontend_mttf)` if that lands inside the horizon.
+    ///   Front-end 0 is the designated survivor, guaranteeing sampled
+    ///   plans never leave the cluster without a dispatcher.
+    ///
+    /// Deterministic: each component's stream is seeded purely from
+    /// `(cfg.seed, component class, index)` — no shared parent RNG —
+    /// so adding instances or toggling one fault class never perturbs
+    /// the schedule of any existing component.
+    pub fn sample(
+        cfg: &FaultConfig,
+        horizon: f64,
+        frontends: usize,
+        instances: usize,
+    ) -> Self {
+        const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+        let mut events = Vec::new();
+        if cfg.instance_mttf > 0.0 {
+            for i in 0..instances {
+                let mut r = Rng::new(
+                    (cfg.seed ^ 0xFA11_0000)
+                        .wrapping_add((i as u64).wrapping_mul(GOLDEN)),
+                );
+                let mut t = r.exponential(1.0 / cfg.instance_mttf);
+                while t < horizon {
+                    events.push(FaultEvent {
+                        time: t,
+                        kind: FaultKind::InstanceFail(i),
+                    });
+                    let back = t + r.exponential(1.0 / cfg.instance_mttr);
+                    events.push(FaultEvent {
+                        time: back,
+                        kind: FaultKind::InstanceRejoin(i),
+                    });
+                    t = back + r.exponential(1.0 / cfg.instance_mttf);
+                }
+            }
+        }
+        if cfg.frontend_mttf > 0.0 {
+            for f in 1..frontends {
+                let mut r = Rng::new(
+                    (cfg.seed ^ 0xFE0_C4A5)
+                        .wrapping_add((f as u64).wrapping_mul(GOLDEN)),
+                );
+                let t = r.exponential(1.0 / cfg.frontend_mttf);
+                if t < horizon {
+                    events.push(FaultEvent {
+                        time: t,
+                        kind: FaultKind::FrontEndCrash(f),
+                    });
+                }
+            }
+        }
+        FaultPlan::scripted(events)
+    }
+}
+
+/// Raw per-fault counters accumulated by the event loop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultRecord {
+    pub time: f64,
+    pub kind: FaultKind,
+    /// Re-dispatch decisions this fault forced: sequences lost on an
+    /// instance death, plus dispatches that bounced off the dead host
+    /// afterwards.  0 for front-end crashes — the statelessness claim.
+    pub redispatched: u64,
+    /// Arrivals re-sharded away from a crashed front-end.
+    pub redirected: u64,
+    /// Latest time one of this fault's re-dispatched requests landed on
+    /// a healthy instance (equals `time` when nothing was lost).
+    pub last_landed: f64,
+    /// Requests this fault lost that were *never* recovered — they were
+    /// still parked when the run ended and are counted in
+    /// [`RecoveryStats::dropped`].
+    pub unrecovered: u64,
+}
+
+impl FaultRecord {
+    pub fn new(time: f64, kind: FaultKind) -> Self {
+        FaultRecord {
+            time,
+            kind,
+            redispatched: 0,
+            redirected: 0,
+            last_landed: time,
+            unrecovered: 0,
+        }
+    }
+
+    /// Seconds from the fault until its last re-dispatched request was
+    /// back on a healthy instance; infinite when some of its lost
+    /// requests never recovered at all (a 0 here would make total loss
+    /// read as instant recovery).
+    pub fn disruption_window(&self) -> f64 {
+        if self.unrecovered > 0 {
+            return f64::INFINITY;
+        }
+        self.last_landed - self.time
+    }
+}
+
+/// A [`FaultRecord`] joined with post-hoc sliding-window metrics.
+#[derive(Debug, Clone)]
+pub struct FaultReport {
+    pub record: FaultRecord,
+    /// Completions per second in `[time - window, time)`, with the
+    /// window clipped to the run span (virtual time starts at 0) so a
+    /// fault near the start is not diluted by pre-run emptiness.  NaN
+    /// when the clipped window is empty.
+    pub goodput_before: f64,
+    /// Completions per second in `[time, time + window)`, clipped to
+    /// the last completion time; NaN for faults past the end of run.
+    pub goodput_after: f64,
+    /// `goodput_before - goodput_after`: how hard the fault bit.
+    pub goodput_dip: f64,
+    /// P99 e2e of requests finishing in the window before / after the
+    /// fault (NaN when a window saw no completions).
+    pub p99_before: f64,
+    pub p99_after: f64,
+}
+
+impl FaultReport {
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("time", self.record.time);
+        o.insert("kind", self.record.kind.name());
+        o.insert("target", self.record.kind.target());
+        o.insert("redispatched", self.record.redispatched);
+        o.insert("redirected", self.record.redirected);
+        o.insert("unrecovered", self.record.unrecovered);
+        // INF (never recovered) serializes as null — JSON has no Inf.
+        o.insert("disruption_window", self.record.disruption_window());
+        o.insert("goodput_before", self.goodput_before);
+        o.insert("goodput_after", self.goodput_after);
+        o.insert("goodput_dip", self.goodput_dip);
+        o.insert("p99_before", self.p99_before);
+        o.insert("p99_after", self.p99_after);
+        Json::Obj(o)
+    }
+}
+
+/// Run-level recovery telemetry, surfaced on `SimResult::recovery`.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryStats {
+    /// Total re-dispatch decisions across all faults.
+    pub total_redispatched: u64,
+    /// Total arrivals re-sharded away from crashed front-ends.
+    pub total_redirected: u64,
+    /// Admitted requests that could never be served (no surviving
+    /// front-end or instance by end of run) — the explicit counterpart
+    /// of the conservation property: served + dropped = admitted.
+    pub dropped: u64,
+    pub reports: Vec<FaultReport>,
+}
+
+impl RecoveryStats {
+    /// Join raw fault records with sliding-window completion metrics
+    /// (`window` seconds each side of every fault instant).
+    pub fn build(
+        records: Vec<FaultRecord>,
+        dropped: u64,
+        metrics: &MetricsCollector,
+        window: f64,
+    ) -> Self {
+        let mut stats_out = RecoveryStats {
+            total_redispatched: records.iter().map(|r| r.redispatched).sum(),
+            total_redirected: records.iter().map(|r| r.redirected).sum(),
+            dropped,
+            reports: Vec::with_capacity(records.len()),
+        };
+        // Goodput denominators are clipped to the run span: the run
+        // exists on [0, last finish], and rating completions/s over
+        // the part of a window that falls outside it would understate
+        // goodput (and misreport a dip) for faults near either edge.
+        let run_end = metrics
+            .records
+            .iter()
+            .map(|m| m.finish)
+            .fold(0.0f64, f64::max);
+        let goodput = |n: usize, span: f64| {
+            if span > 0.0 { n as f64 / span } else { f64::NAN }
+        };
+        for record in records {
+            let t = record.time;
+            let before = metrics.e2es_finishing_in(t - window, t);
+            let after = metrics.e2es_finishing_in(t, t + window);
+            let goodput_before = goodput(before.len(), t.min(window));
+            let goodput_after =
+                goodput(after.len(), (run_end - t).min(window));
+            stats_out.reports.push(FaultReport {
+                p99_before: stats::percentile(&before, 99.0),
+                p99_after: stats::percentile(&after, 99.0),
+                goodput_before,
+                goodput_after,
+                goodput_dip: goodput_before - goodput_after,
+                record,
+            });
+        }
+        stats_out
+    }
+
+    /// Largest disruption window across faults (0 when fault-free).
+    pub fn max_disruption(&self) -> f64 {
+        self.reports
+            .iter()
+            .map(|r| r.record.disruption_window())
+            .fold(0.0, f64::max)
+    }
+
+    /// Mean goodput dip across faults (NaN when fault-free).
+    pub fn mean_goodput_dip(&self) -> f64 {
+        let dips: Vec<f64> = self.reports.iter().map(|r| r.goodput_dip).collect();
+        stats::mean(&dips)
+    }
+
+    /// Worst windowed P99 observed right after any fault (NaN when
+    /// fault-free or when no completions landed in any after-window).
+    pub fn worst_p99_after(&self) -> f64 {
+        let worst = self
+            .reports
+            .iter()
+            .map(|r| r.p99_after)
+            .filter(|p| p.is_finite())
+            .fold(f64::NEG_INFINITY, f64::max);
+        if worst == f64::NEG_INFINITY { f64::NAN } else { worst }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("n_faults", self.reports.len());
+        o.insert("redispatched", self.total_redispatched);
+        o.insert("redirected", self.total_redirected);
+        o.insert("dropped", self.dropped);
+        o.insert("max_disruption", self.max_disruption());
+        o.insert("mean_goodput_dip", self.mean_goodput_dip());
+        o.insert("worst_p99_after", self.worst_p99_after());
+        o.insert(
+            "faults",
+            Json::Arr(self.reports.iter().map(|r| r.to_json()).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::request::RequestMetrics;
+
+    fn fault_cfg(instance_mttf: f64, frontend_mttf: f64) -> FaultConfig {
+        FaultConfig {
+            instance_mttf,
+            frontend_mttf,
+            ..FaultConfig::default()
+        }
+    }
+
+    #[test]
+    fn none_is_empty_and_sample_disabled_is_none() {
+        assert!(FaultPlan::none().is_empty());
+        let plan = FaultPlan::sample(&fault_cfg(0.0, 0.0), 100.0, 4, 12);
+        assert_eq!(plan, FaultPlan::none());
+    }
+
+    #[test]
+    fn scripted_sorts_by_time() {
+        let plan = FaultPlan::scripted(vec![
+            FaultEvent { time: 5.0, kind: FaultKind::InstanceFail(1) },
+            FaultEvent { time: 1.0, kind: FaultKind::FrontEndCrash(2) },
+            FaultEvent { time: 3.0, kind: FaultKind::InstanceRejoin(1) },
+        ]);
+        let times: Vec<f64> = plan.events.iter().map(|e| e.time).collect();
+        assert_eq!(times, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn sample_is_deterministic_and_ordered() {
+        let cfg = fault_cfg(40.0, 80.0);
+        let a = FaultPlan::sample(&cfg, 120.0, 4, 6);
+        let b = FaultPlan::sample(&cfg, 120.0, 4, 6);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "mttf well under horizon must sample faults");
+        for w in a.events.windows(2) {
+            assert!(w[1].time >= w[0].time);
+        }
+        for e in &a.events {
+            assert!(e.time >= 0.0);
+            // Rejoins may land past the horizon; failures never do.
+            if let FaultKind::InstanceFail(_) | FaultKind::FrontEndCrash(_) =
+                e.kind
+            {
+                assert!(e.time < 120.0);
+            }
+        }
+    }
+
+    #[test]
+    fn sample_alternates_fail_and_rejoin_per_instance() {
+        let plan = FaultPlan::sample(&fault_cfg(20.0, 0.0), 200.0, 1, 3);
+        for i in 0..3 {
+            let seq: Vec<FaultKind> = plan
+                .events
+                .iter()
+                .filter(|e| e.kind.target() == i
+                            && !matches!(e.kind, FaultKind::FrontEndCrash(_)))
+                .map(|e| e.kind)
+                .collect();
+            for (k, kind) in seq.iter().enumerate() {
+                if k % 2 == 0 {
+                    assert!(matches!(kind, FaultKind::InstanceFail(_)));
+                } else {
+                    assert!(matches!(kind, FaultKind::InstanceRejoin(_)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sample_streams_are_independent_per_component() {
+        // Growing the cluster must not perturb existing components'
+        // schedules: each stream is seeded from (seed, class, index).
+        let cfg = fault_cfg(40.0, 80.0);
+        let small = FaultPlan::sample(&cfg, 120.0, 3, 4);
+        let big = FaultPlan::sample(&cfg, 120.0, 3, 8);
+        let instance_events = |p: &FaultPlan, i: usize| -> Vec<(f64, FaultKind)> {
+            p.events
+                .iter()
+                .filter(|e| !matches!(e.kind, FaultKind::FrontEndCrash(_))
+                            && e.kind.target() == i)
+                .map(|e| (e.time, e.kind))
+                .collect()
+        };
+        for i in 0..4 {
+            assert_eq!(instance_events(&small, i), instance_events(&big, i));
+        }
+        let crashes = |p: &FaultPlan| -> Vec<(f64, usize)> {
+            p.events
+                .iter()
+                .filter_map(|e| match e.kind {
+                    FaultKind::FrontEndCrash(f) => Some((e.time, f)),
+                    _ => None,
+                })
+                .collect()
+        };
+        assert_eq!(crashes(&small), crashes(&big),
+                   "front-end streams independent of instance count");
+    }
+
+    #[test]
+    fn frontend_zero_never_crashes_in_sampled_plans() {
+        let plan = FaultPlan::sample(&fault_cfg(0.0, 1.0), 1000.0, 4, 4);
+        assert!(!plan.is_empty());
+        for e in &plan.events {
+            match e.kind {
+                FaultKind::FrontEndCrash(f) => assert_ne!(f, 0),
+                k => panic!("unexpected {k:?}"),
+            }
+        }
+    }
+
+    fn rec(arrival: f64, finish: f64) -> RequestMetrics {
+        RequestMetrics {
+            id: 0,
+            instance: 0,
+            prompt_tokens: 10,
+            response_tokens: 10,
+            arrival,
+            dispatched: arrival,
+            prefill_start: arrival,
+            first_token: finish,
+            finish,
+            preemptions: 0,
+            predicted_latency: None,
+            sched_overhead: 0.0,
+        }
+    }
+
+    #[test]
+    fn recovery_windows_split_before_and_after() {
+        let mut metrics = MetricsCollector::new();
+        // Three completions before t=10, two after; run ends at 15.
+        for f in [8.0, 9.0, 9.5, 11.0, 15.0] {
+            metrics.push(rec(f - 1.0, f));
+        }
+        let mut record = FaultRecord::new(10.0, FaultKind::InstanceFail(0));
+        record.redispatched = 2;
+        record.last_landed = 12.5;
+        let stats = RecoveryStats::build(vec![record], 1, &metrics, 5.0);
+        assert_eq!(stats.total_redispatched, 2);
+        assert_eq!(stats.dropped, 1);
+        let r = &stats.reports[0];
+        // Windows are interior here ([5,10) and [10,15), both fully
+        // inside the [0,15] run), so the denominators are the window.
+        assert!((r.goodput_before - 3.0 / 5.0).abs() < 1e-12);
+        assert!((r.goodput_after - 1.0 / 5.0).abs() < 1e-12,
+                "finish at exactly t+window is excluded (half-open)");
+        assert!((r.goodput_dip - 2.0 / 5.0).abs() < 1e-12);
+        assert!(r.p99_before.is_finite());
+        assert!((stats.max_disruption() - 2.5).abs() < 1e-12);
+        assert!((stats.worst_p99_after() - r.p99_after).abs() < 1e-12);
+    }
+
+    #[test]
+    fn goodput_windows_clip_to_run_span() {
+        let mut metrics = MetricsCollector::new();
+        // Completions at 1 and 2; the run spans [0, 2].
+        metrics.push(rec(0.5, 1.0));
+        metrics.push(rec(0.5, 2.0));
+        let early = FaultRecord::new(1.5, FaultKind::InstanceFail(0));
+        let stats = RecoveryStats::build(vec![early], 0, &metrics, 5.0);
+        let r = &stats.reports[0];
+        // Before-window is clipped to [0, 1.5): one completion over
+        // 1.5s, not over the nominal 5s.
+        assert!((r.goodput_before - 1.0 / 1.5).abs() < 1e-12);
+        // After-window is clipped to [1.5, 2): one completion over 0.5s.
+        assert!((r.goodput_after - 1.0 / 0.5).abs() < 1e-12);
+
+        // A fault past the end of the run has no after-window at all.
+        let late = FaultRecord::new(10.0, FaultKind::InstanceFail(0));
+        let stats = RecoveryStats::build(vec![late], 0, &metrics, 5.0);
+        assert!(stats.reports[0].goodput_after.is_nan());
+    }
+
+    #[test]
+    fn unrecovered_losses_make_the_window_unbounded() {
+        let mut record = FaultRecord::new(10.0, FaultKind::InstanceFail(0));
+        record.redispatched = 3;
+        record.last_landed = 11.0;
+        assert!((record.disruption_window() - 1.0).abs() < 1e-12);
+        // One of the three never made it back: reporting 1.0s here
+        // would read total loss as fast recovery.
+        record.unrecovered = 1;
+        assert!(record.disruption_window().is_infinite());
+        let stats = RecoveryStats::build(
+            vec![record], 1, &MetricsCollector::new(), 5.0);
+        assert!(stats.max_disruption().is_infinite());
+    }
+
+    #[test]
+    fn empty_windows_are_nan_not_panic() {
+        let metrics = MetricsCollector::new();
+        let record = FaultRecord::new(10.0, FaultKind::FrontEndCrash(1));
+        let stats = RecoveryStats::build(vec![record], 0, &metrics, 5.0);
+        let r = &stats.reports[0];
+        assert!(r.p99_before.is_nan() && r.p99_after.is_nan());
+        assert_eq!(r.goodput_before, 0.0, "clipped before-window [5,10) \
+                    exists but saw no completions");
+        assert!(r.goodput_after.is_nan(),
+                "no run span after a post-run fault");
+        assert!(stats.worst_p99_after().is_nan());
+        assert_eq!(stats.max_disruption(), 0.0);
+    }
+}

@@ -24,6 +24,7 @@ pub mod core;
 pub mod engine;
 pub mod exec;
 pub mod experiments;
+pub mod faults;
 pub mod metrics;
 pub mod predictor;
 pub mod provision;

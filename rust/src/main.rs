@@ -2,18 +2,23 @@
 //!
 //! Subcommands:
 //!
-//! * `block experiment <tab1|fig5|fig6|fig7|fig8|tab2|staleness|all>
-//!    [--scale quick|full] [--out DIR] [--seed N] [--jobs N] [--shard P]`
-//!    — regenerate a paper table/figure; `--jobs` bounds the sweep-point
-//!    worker threads (default: all cores; results are identical for any
-//!    value); `--shard` sets arrival sharding for the `staleness` sweep.
+//! * `block experiment <tab1|fig5|fig6|fig7|fig8|tab2|staleness|chaos|all>
+//!    [--scale quick|full] [--out DIR] [--seed N] [--jobs N] [--shard P]
+//!    [--smoke]` — regenerate a paper table/figure; `--jobs` bounds the
+//!    sweep-point worker threads (default: all cores; results are
+//!    identical for any value); `--shard` sets arrival sharding for the
+//!    `staleness`/`chaos` sweeps; `--smoke` shrinks `chaos` to its
+//!    CI-sized grid.
 //! * `block simulate [--scheduler S] [--qps Q] [--requests N]
 //!    [--instances K] [--workload sharegpt|burstgpt] [--config FILE]
 //!    [--jobs N] [--frontends N] [--sync-interval S] [--shard P]
-//!    [--sync-on-ack BOOL]` — one cluster simulation, summary to stdout;
-//!    `--jobs` parallelizes Block's per-candidate prediction fan-out;
-//!    `--frontends`/`--sync-interval`/`--shard` run the distributed
-//!    deployment (N stateless front-ends over bounded-staleness views).
+//!    [--sync-on-ack] [--local-echo] [--instance-mttf S]
+//!    [--instance-mttr S] [--frontend-mttf S]` — one cluster simulation,
+//!    summary to stdout; `--jobs` parallelizes Block's per-candidate
+//!    prediction fan-out; `--frontends`/`--sync-interval`/`--shard` run
+//!    the distributed deployment (N stateless front-ends over
+//!    bounded-staleness views); the MTTF flags inject instance/front-end
+//!    faults and print per-fault recovery telemetry.
 //! * `block serve [--addr HOST:PORT] [--artifacts DIR]` — HTTP serving of
 //!    the real PJRT model (endpoints: /generate /predict /status /health).
 //! * `block tag --prompt "..."` — run the length tagger on one prompt.
@@ -34,6 +39,13 @@ struct Args {
 }
 
 impl Args {
+    /// Flags that may appear without a value (`--smoke` ==
+    /// `--smoke true`).  Every other flag consumes the next token
+    /// verbatim, so values that merely *look* like flags (a prompt
+    /// starting with `--`) still parse.
+    const SWITCHES: [&'static str; 3] = ["smoke", "local-echo",
+                                         "sync-on-ack"];
+
     fn parse(argv: &[String]) -> Result<Args> {
         let mut positional = Vec::new();
         let mut flags = Vec::new();
@@ -41,11 +53,26 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                let val = argv
-                    .get(i + 1)
-                    .with_context(|| format!("--{key} needs a value"))?;
-                flags.push((key.to_string(), val.clone()));
-                i += 2;
+                if Self::SWITCHES.contains(&key) {
+                    match argv.get(i + 1).map(String::as_str) {
+                        Some("true") | Some("false") => {
+                            flags.push((key.to_string(),
+                                        argv[i + 1].clone()));
+                            i += 2;
+                        }
+                        _ => {
+                            flags.push((key.to_string(),
+                                        "true".to_string()));
+                            i += 1;
+                        }
+                    }
+                } else {
+                    let val = argv
+                        .get(i + 1)
+                        .with_context(|| format!("--{key} needs a value"))?;
+                    flags.push((key.to_string(), val.clone()));
+                    i += 2;
+                }
             } else {
                 positional.push(a.clone());
                 i += 1;
@@ -77,11 +104,13 @@ fn usage() -> ! {
         "usage: block <command>\n\
          \n\
          commands:\n\
-         \x20 experiment <tab1|fig5|fig6|fig7|fig8|tab2|staleness|all> [--scale quick|full] [--out DIR]\n\
-         \x20          [--seed N] [--jobs N] [--shard round-robin|hash|poisson]\n\
+         \x20 experiment <tab1|fig5|fig6|fig7|fig8|tab2|staleness|chaos|all> [--scale quick|full]\n\
+         \x20          [--out DIR] [--seed N] [--jobs N] [--shard round-robin|hash|poisson] [--smoke]\n\
          \x20 simulate [--scheduler S] [--qps Q] [--requests N] [--instances K]\n\
          \x20          [--workload sharegpt|burstgpt] [--config FILE] [--seed N] [--jobs N]\n\
-         \x20          [--frontends N] [--sync-interval S] [--shard round-robin|hash|poisson] [--sync-on-ack BOOL]\n\
+         \x20          [--frontends N] [--sync-interval S] [--shard round-robin|hash|poisson]\n\
+         \x20          [--sync-on-ack] [--local-echo] [--instance-mttf S] [--instance-mttr S]\n\
+         \x20          [--frontend-mttf S] [--detect-delay S] [--rejoin-cold-start S] [--fault-seed N]\n\
          \x20 serve    [--addr HOST:PORT] [--artifacts DIR] [--max-requests N]\n\
          \x20 tag      --prompt TEXT [--artifacts DIR]\n\
          \x20 workload --out FILE [--qps Q] [--requests N] [--seed N]"
@@ -105,6 +134,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             None => ShardPolicy::RoundRobin,
             Some(s) => ShardPolicy::parse(s)?,
         },
+        smoke: args.flag_parse("smoke", false)?,
     };
     experiments::run(name, &ctx)
 }
@@ -125,6 +155,18 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         cfg.shard_policy = ShardPolicy::parse(s)?;
     }
     cfg.sync_on_ack = args.flag_parse("sync-on-ack", cfg.sync_on_ack)?;
+    cfg.local_echo = args.flag_parse("local-echo", cfg.local_echo)?;
+    cfg.faults.instance_mttf =
+        args.flag_parse("instance-mttf", cfg.faults.instance_mttf)?;
+    cfg.faults.instance_mttr =
+        args.flag_parse("instance-mttr", cfg.faults.instance_mttr)?;
+    cfg.faults.frontend_mttf =
+        args.flag_parse("frontend-mttf", cfg.faults.frontend_mttf)?;
+    cfg.faults.detect_delay =
+        args.flag_parse("detect-delay", cfg.faults.detect_delay)?;
+    cfg.faults.rejoin_cold_start =
+        args.flag_parse("rejoin-cold-start", cfg.faults.rejoin_cold_start)?;
+    cfg.faults.seed = args.flag_parse("fault-seed", cfg.faults.seed)?;
     cfg.validate()?;
     let workload = WorkloadConfig {
         kind: match args.flag("workload").unwrap_or("sharegpt") {
@@ -146,6 +188,21 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!("frontends={} sync_interval={}s shard={} dispatches={:?}",
                  cfg.frontends, cfg.sync_interval, cfg.shard_policy.name(),
                  res.frontend_dispatches);
+    }
+    if cfg.faults.enabled() {
+        let r = &res.recovery;
+        println!("faults={} redispatched={} redirected={} dropped={} \
+                  max_disruption={:.2}s",
+                 r.reports.len(), r.total_redispatched,
+                 r.total_redirected, r.dropped, r.max_disruption());
+        for rep in &r.reports {
+            println!("  t={:8.2}s {:15} #{:<2} redisp={:<3} \
+                      window={:.2}s goodput {:.1}->{:.1}/s",
+                     rep.record.time, rep.record.kind.name(),
+                     rep.record.kind.target(), rep.record.redispatched,
+                     rep.record.disruption_window(),
+                     rep.goodput_before, rep.goodput_after);
+        }
     }
     let rows = vec![
         vec!["mean TTFT (s)".into(), format!("{:.3}", s.mean_ttft)],

@@ -126,6 +126,18 @@ impl MetricsCollector {
         }
     }
 
+    /// E2E latencies of requests *finishing* in `[t0, t1)` — the
+    /// reduction behind the fault-recovery sliding windows (goodput and
+    /// windowed P99 around each fault instant; see
+    /// [`crate::faults::RecoveryStats`]).
+    pub fn e2es_finishing_in(&self, t0: f64, t1: f64) -> Vec<f64> {
+        self.records
+            .iter()
+            .filter(|m| m.finish >= t0 && m.finish < t1)
+            .map(|m| m.e2e())
+            .collect()
+    }
+
     /// CDF series for the appendix figures.
     pub fn cdf_e2e(&self, points: usize) -> Vec<(f64, f64)> {
         stats::cdf(&self.e2es(), points)
@@ -232,6 +244,18 @@ mod tests {
         let mut c = MetricsCollector::new();
         c.push(rec(1, 0.0, 1.0, 2.0, None));
         assert!(c.summary().pred_error_rate.is_none());
+    }
+
+    #[test]
+    fn window_reduction_is_half_open() {
+        let mut c = MetricsCollector::new();
+        for f in [1.0, 2.0, 3.0, 4.0] {
+            c.push(rec(f as u64, 0.0, f - 0.5, f, None));
+        }
+        // [2, 4) captures finishes at 2 and 3, not 4.
+        assert_eq!(c.e2es_finishing_in(2.0, 4.0).len(), 2);
+        assert_eq!(c.e2es_finishing_in(5.0, 9.0).len(), 0);
+        assert_eq!(c.e2es_finishing_in(0.0, 10.0).len(), 4);
     }
 
     #[test]

@@ -33,6 +33,13 @@ pub struct AutoProvisioner {
     active: Vec<bool>,
     /// Instances booting: (ready_time, index).
     pending: Vec<(f64, usize)>,
+    /// Instances killed by fault injection: excluded from provisioning
+    /// triggers until their `InstanceRejoin` clears the flag.  Failure
+    /// and elastic scale-up share the pending → `activate_ready`
+    /// lifecycle — a rejoining host is just a provisioned host whose
+    /// cold start was scheduled by a fault plan instead of a latency
+    /// trigger.
+    failed: Vec<bool>,
     last_trigger: f64,
     pub events: Vec<ProvisionEvent>,
 }
@@ -48,6 +55,7 @@ impl AutoProvisioner {
             cfg,
             active,
             pending: Vec::new(),
+            failed: vec![false; total_instances],
             last_trigger: f64::NEG_INFINITY,
             events: Vec::new(),
         }
@@ -59,6 +67,7 @@ impl AutoProvisioner {
             cfg: ProvisionConfig { enabled: false, ..ProvisionConfig::default() },
             active: vec![true; n],
             pending: Vec::new(),
+            failed: vec![false; n],
             last_trigger: f64::NEG_INFINITY,
             events: Vec::new(),
         }
@@ -66,6 +75,13 @@ impl AutoProvisioner {
 
     pub fn active(&self) -> &[bool] {
         &self.active
+    }
+
+    /// Is instance `i` currently failed (fault-injected down, not yet
+    /// rejoined)?  The provisioner is the single owner of per-instance
+    /// lifecycle state — active, pending, failed.
+    pub fn is_failed(&self, i: usize) -> bool {
+        self.failed[i]
     }
 
     pub fn active_count(&self) -> usize {
@@ -106,9 +122,13 @@ impl AutoProvisioner {
         if provisioned >= self.cfg.max_instances {
             return None;
         }
-        // Next inactive, not-pending instance index.
+        // Next inactive, not-pending, not-failed instance index (a
+        // failed host cannot be provisioned back — it rejoins through
+        // its fault plan's `InstanceRejoin`).
         let idx = (0..self.active.len()).find(|&i| {
-            !self.active[i] && !self.pending.iter().any(|&(_, p)| p == i)
+            !self.active[i]
+                && !self.failed[i]
+                && !self.pending.iter().any(|&(_, p)| p == i)
         })?;
         let ready = now + self.cfg.cold_start;
         self.pending.push((ready, idx));
@@ -118,6 +138,35 @@ impl AutoProvisioner {
             instance: idx,
             trigger_latency: latency,
         });
+        Some(ready)
+    }
+
+    /// Fault injection: instance `i` is gone.  Deactivates it, cancels
+    /// any in-progress cold start, and removes it from the provisioning
+    /// candidate pool until it rejoins.
+    pub fn fail(&mut self, i: usize) {
+        self.active[i] = false;
+        self.failed[i] = true;
+        self.pending.retain(|&(_, p)| p != i);
+    }
+
+    /// Fault injection: failed instance `i` starts rejoining at `now`.
+    /// Flows through the same cold-start lifecycle as elastic scale-up
+    /// (pending → [`Self::activate_ready`]); returns the ready time, or
+    /// `None` when the instance is not actually down (never failed,
+    /// already active, or mid-cold-start — scripted plans may request
+    /// impossible rejoins).
+    pub fn schedule_rejoin(&mut self, i: usize, now: f64,
+                           cold_start: f64) -> Option<f64> {
+        if !self.failed[i]
+            || self.active[i]
+            || self.pending.iter().any(|&(_, p)| p == i)
+        {
+            return None;
+        }
+        self.failed[i] = false;
+        let ready = now + cold_start;
+        self.pending.push((ready, i));
         Some(ready)
     }
 
@@ -209,6 +258,46 @@ mod tests {
             p.activate_ready(t);
         }
         assert_eq!(p.active_count(), 10, "max_instances is the cap");
+    }
+
+    #[test]
+    fn fail_and_rejoin_share_the_cold_start_lifecycle() {
+        let mut p = AutoProvisioner::static_cluster(4);
+        p.fail(2);
+        assert_eq!(p.active_count(), 3);
+        assert!(!p.active()[2]);
+
+        // Rejoin goes through pending → activate_ready, like scale-up.
+        let ready = p.schedule_rejoin(2, 10.0, 5.0).unwrap();
+        assert!((ready - 15.0).abs() < 1e-12);
+        assert_eq!(p.active_count(), 3, "cold start not elapsed");
+        assert_eq!(p.activate_ready(15.0), vec![2]);
+        assert_eq!(p.active_count(), 4);
+
+        // Double rejoin / rejoin of a healthy instance are no-ops.
+        assert!(p.schedule_rejoin(2, 20.0, 5.0).is_none());
+        assert!(p.schedule_rejoin(0, 20.0, 5.0).is_none());
+    }
+
+    #[test]
+    fn failed_instances_are_not_provisioning_candidates() {
+        let mut p = AutoProvisioner::new(cfg(true), 12);
+        // Kill the first backup slot; the latency trigger must skip it.
+        p.fail(6);
+        let ready = p.observe_predicted(0.0, 90.0).unwrap();
+        p.activate_ready(ready);
+        assert!(!p.active()[6], "failed host must not be re-provisioned");
+        assert!(p.active()[7], "trigger skipped to the next backup");
+    }
+
+    #[test]
+    fn fail_cancels_pending_cold_start() {
+        let mut p = AutoProvisioner::new(cfg(true), 12);
+        p.observe_predicted(0.0, 90.0).unwrap();
+        p.fail(6);
+        assert!(p.activate_ready(100.0).is_empty(),
+                "cold start cancelled by the failure");
+        assert_eq!(p.active_count(), 6, "the booting host never arrived");
     }
 
     #[test]

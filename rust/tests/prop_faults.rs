@@ -1,0 +1,219 @@
+//! Property tests for the fault-injection subsystem.
+//!
+//! The headline invariant is *conservation*: under any fault plan —
+//! scripted or sampled, any deployment shape — every admitted request
+//! is eventually served or explicitly counted as dropped.  Nothing
+//! vanishes in a crash, a bounce, or a re-dispatch loop.
+
+use block::cluster::{run_experiment, SimOptions};
+use block::config::{ClusterConfig, SchedulerKind, ShardPolicy,
+                    WorkloadConfig, WorkloadKind};
+use block::faults::{FaultEvent, FaultKind, FaultPlan};
+use block::testutil::prop::check;
+
+const KINDS: [SchedulerKind; 3] = [
+    SchedulerKind::Block,
+    SchedulerKind::MinQpm,
+    SchedulerKind::LlumnixMinus,
+];
+
+const SHARDS: [ShardPolicy; 3] = [
+    ShardPolicy::RoundRobin,
+    ShardPolicy::Hash,
+    ShardPolicy::Poisson,
+];
+
+#[test]
+fn prop_no_request_lost_under_faults() {
+    check(77, 14, |rng, case| {
+        let kind = KINDS[case % KINDS.len()];
+        let n_instances = rng.randint(2, 5) as usize;
+        let frontends = rng.randint(1, 4) as usize;
+        let mut cfg = ClusterConfig {
+            n_instances,
+            scheduler: kind,
+            ..ClusterConfig::default()
+        };
+        cfg.frontends = frontends;
+        cfg.sync_interval = if rng.bernoulli(0.4) {
+            0.0
+        } else {
+            rng.uniform(0.3, 3.0)
+        };
+        cfg.shard_policy = SHARDS[rng.index(3)];
+        cfg.sync_on_ack = rng.bernoulli(0.3);
+        cfg.local_echo = rng.bernoulli(0.3);
+        let wl = WorkloadConfig {
+            kind: WorkloadKind::ShareGpt,
+            qps: rng.uniform(4.0, 16.0),
+            n_requests: rng.randint(40, 160) as usize,
+            seed: rng.next_u64(),
+        };
+        let span = wl.n_requests as f64 / wl.qps;
+
+        // A random scripted plan: instance deaths (mostly followed by a
+        // rejoin), plus occasional front-end crashes — including, at
+        // the tail of the distribution, plans that kill *every*
+        // front-end or instance, where the only legal outcome is an
+        // explicit drop count.
+        let mut events = Vec::new();
+        for i in 0..n_instances {
+            if rng.bernoulli(0.5) {
+                let t = rng.uniform(0.0, span);
+                events.push(FaultEvent {
+                    time: t,
+                    kind: FaultKind::InstanceFail(i),
+                });
+                if rng.bernoulli(0.8) {
+                    events.push(FaultEvent {
+                        time: t + rng.uniform(0.5, span * 0.5),
+                        kind: FaultKind::InstanceRejoin(i),
+                    });
+                }
+            }
+        }
+        for f in 0..frontends {
+            if rng.bernoulli(0.25) {
+                events.push(FaultEvent {
+                    time: rng.uniform(0.0, span),
+                    kind: FaultKind::FrontEndCrash(f),
+                });
+            }
+        }
+        let any_frontend_crash = events
+            .iter()
+            .any(|e| matches!(e.kind, FaultKind::FrontEndCrash(_)));
+        let any_instance_fail = events
+            .iter()
+            .any(|e| matches!(e.kind, FaultKind::InstanceFail(_)));
+
+        let res = run_experiment(
+            cfg,
+            &wl,
+            SimOptions {
+                probes: false,
+                fault_plan: Some(FaultPlan::scripted(events)),
+                ..SimOptions::default()
+            },
+        )
+        .unwrap();
+
+        // Conservation: served + dropped == admitted, and the
+        // per-instance serve counts agree with the metric stream.
+        let served = res.metrics.len() as u64;
+        assert_eq!(served + res.recovery.dropped, wl.n_requests as u64,
+                   "conservation violated ({} served, {} dropped, {} sent)",
+                   served, res.recovery.dropped, wl.n_requests);
+        let by_instance: usize =
+            res.instances.iter().map(|s| s.requests_served).sum();
+        assert_eq!(by_instance as u64, served);
+
+        // A fault-free plan must drop nothing.
+        if !any_frontend_crash && !any_instance_fail {
+            assert_eq!(res.recovery.dropped, 0);
+            assert_eq!(res.recovery.total_redispatched, 0);
+        }
+
+        // Served requests carry sane, ordered timelines even when they
+        // were bounced or re-dispatched.
+        for m in &res.metrics.records {
+            assert!(m.dispatched >= m.arrival);
+            assert!(m.prefill_start >= m.dispatched - 1e-9);
+            assert!(m.first_token >= m.prefill_start - 1e-9);
+            assert!(m.finish >= m.first_token);
+            assert!(m.sched_overhead >= 0.0);
+        }
+
+        // Telemetry self-consistency.
+        assert_eq!(res.recovery.total_redispatched,
+                   res.recovery.reports.iter()
+                       .map(|r| r.record.redispatched).sum::<u64>());
+        for rep in &res.recovery.reports {
+            assert!(rep.record.disruption_window() >= 0.0);
+        }
+    });
+}
+
+#[test]
+fn prop_fault_plan_none_matches_healthy_run() {
+    // Zero-fault parity across random distributed shapes: forcing an
+    // explicit empty plan must reproduce the healthy run byte for byte.
+    check(88, 8, |rng, case| {
+        let kind = KINDS[case % KINDS.len()];
+        let mut cfg = ClusterConfig {
+            n_instances: rng.randint(2, 5) as usize,
+            scheduler: kind,
+            ..ClusterConfig::default()
+        };
+        cfg.frontends = rng.randint(1, 3) as usize;
+        cfg.sync_interval =
+            if rng.bernoulli(0.5) { 0.0 } else { rng.uniform(0.5, 3.0) };
+        let wl = WorkloadConfig {
+            kind: WorkloadKind::ShareGpt,
+            qps: rng.uniform(4.0, 12.0),
+            n_requests: 80,
+            seed: rng.next_u64(),
+        };
+        let run = |plan: Option<FaultPlan>| {
+            let res = run_experiment(
+                cfg.clone(),
+                &wl,
+                SimOptions { probes: false, fault_plan: plan,
+                             ..SimOptions::default() },
+            )
+            .unwrap();
+            res.metrics
+                .records
+                .iter()
+                .map(|m| (m.id, m.instance, m.dispatched, m.finish))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(None), run(Some(FaultPlan::none())));
+    });
+}
+
+#[test]
+fn prop_sampled_plans_respect_conservation() {
+    // The randomized (MTTF/MTTR-sampled) path end to end: the plan the
+    // config samples must also conserve requests.
+    check(99, 8, |rng, case| {
+        let kind = KINDS[case % KINDS.len()];
+        let mut cfg = ClusterConfig {
+            n_instances: rng.randint(2, 6) as usize,
+            scheduler: kind,
+            ..ClusterConfig::default()
+        };
+        cfg.frontends = rng.randint(1, 3) as usize;
+        cfg.sync_interval =
+            if rng.bernoulli(0.5) { 0.0 } else { rng.uniform(0.5, 2.0) };
+        let wl = WorkloadConfig {
+            kind: WorkloadKind::ShareGpt,
+            qps: rng.uniform(6.0, 14.0),
+            n_requests: rng.randint(60, 140) as usize,
+            seed: rng.next_u64(),
+        };
+        let span = wl.n_requests as f64 / wl.qps;
+        cfg.faults.instance_mttf = rng.uniform(span * 0.5, span * 3.0);
+        cfg.faults.instance_mttr = span / 4.0;
+        cfg.faults.frontend_mttf = if cfg.frontends > 1 && rng.bernoulli(0.5)
+        {
+            span
+        } else {
+            0.0
+        };
+        cfg.faults.rejoin_cold_start = rng.uniform(0.5, 3.0);
+        cfg.faults.seed = rng.next_u64();
+        let res = run_experiment(
+            cfg,
+            &wl,
+            SimOptions { probes: false, ..SimOptions::default() },
+        )
+        .unwrap();
+        assert_eq!(res.metrics.len() as u64 + res.recovery.dropped,
+                   wl.n_requests as u64);
+        // Sampled front-end crashes never touch front-end 0, so at
+        // least one dispatcher always survives.
+        assert!(res.frontend_dispatches.iter().sum::<u64>()
+                    >= res.metrics.len() as u64);
+    });
+}
