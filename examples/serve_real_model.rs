@@ -60,8 +60,8 @@ fn main() -> anyhow::Result<()> {
     let total_tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
     println!("served {} requests / {} tokens in {:?} \
               ({} prefills, {} decode steps)",
-             results.len(), total_tokens, wall, server.prefills,
-             server.decode_steps);
+             results.len(), total_tokens, wall, server.prefills(),
+             server.decode_steps());
     println!("  throughput: {:.1} tok/s, {:.2} req/s",
              total_tokens as f64 / wall.as_secs_f64(),
              results.len() as f64 / wall.as_secs_f64());

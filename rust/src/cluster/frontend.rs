@@ -35,11 +35,12 @@
 //! byte for byte (parity test:
 //! `cluster::tests::cloned_view_runtime_matches_fresh_path_exactly`).
 
-use crate::config::ShardPolicy;
+use crate::config::{ClusterConfig, ShardPolicy};
 use crate::core::request::Request;
 use crate::engine::{InstanceEngine, InstanceLoad, InstanceStatus};
 use crate::exec::BatchCost;
-use crate::scheduler::{ClusterView, Decision, GlobalScheduler, PredictorStats};
+use crate::scheduler::{build_scheduler, ClusterView, Decision,
+                       GlobalScheduler, PredictorStats};
 use crate::util::rng::Rng;
 
 /// A front-end's possibly-stale private copy of the cluster state.
@@ -156,6 +157,95 @@ impl StaleClusterView {
             self.epochs[i] = Some(epoch);
         }
         self.synced_at = now;
+    }
+
+    /// Wire analogue of [`Self::sync_all`]: capture the cluster state
+    /// from *fetched* status snapshots instead of borrowed engines (the
+    /// HTTP gateway's periodic status-pull loop lands here).  Slot `i`'s
+    /// epoch comes from `statuses[i].epoch` and its load summary is
+    /// derived via [`InstanceLoad::from_status`] — the same numbers the
+    /// in-process path exports, so a gateway over the wire and a
+    /// front-end inside the simulator build identical views from
+    /// identical engine states.  `None` slots (unreachable hosts) are
+    /// recorded as inactive.
+    pub fn sync_from_statuses(
+        &mut self,
+        statuses: Vec<Option<InstanceStatus>>,
+        now: f64,
+        want_statuses: bool,
+        want_loads: bool,
+    ) {
+        let slots = statuses.len();
+        if self.epochs.len() != slots {
+            self.epochs.resize(slots, None);
+        }
+        if want_statuses {
+            if self.statuses.len() != slots {
+                self.statuses.resize(slots, None);
+            }
+        } else {
+            self.statuses.clear();
+        }
+        if want_loads {
+            if self.loads.len() != slots {
+                self.loads.resize(slots, None);
+            }
+        } else {
+            self.loads.clear();
+        }
+        for (i, st) in statuses.into_iter().enumerate() {
+            let Some(st) = st else {
+                if want_statuses {
+                    self.statuses[i] = None;
+                }
+                if want_loads {
+                    self.loads[i] = None;
+                }
+                self.epochs[i] = None;
+                continue;
+            };
+            // Same equal-epoch skip as the in-process sync: a slot whose
+            // wanted sides are already materialized at this epoch is
+            // guaranteed identical.
+            if self.epochs[i] == Some(st.epoch)
+                && (!want_statuses || self.statuses[i].is_some())
+                && (!want_loads || self.loads[i].is_some())
+            {
+                continue;
+            }
+            self.epochs[i] = Some(st.epoch);
+            if want_loads {
+                self.loads[i] = Some(InstanceLoad::from_status(&st));
+            }
+            if want_statuses {
+                self.statuses[i] = Some(st);
+            }
+        }
+        self.synced_at = now;
+    }
+
+    /// Wire analogue of [`Self::sync_instance`]: install one fetched
+    /// snapshot (dispatch-ack piggyback over HTTP), or mark the slot dead
+    /// (`None` — the gateway's connection-refused path).  Mirrors the
+    /// in-process semantics exactly: only already-materialized sides are
+    /// updated, and a view that never fully synced stays untouched.
+    pub fn install_instance(
+        &mut self,
+        i: usize,
+        status: Option<InstanceStatus>,
+        now: f64,
+    ) {
+        if i < self.epochs.len() {
+            self.epochs[i] = status.as_ref().map(|st| st.epoch);
+            self.synced_at = self.synced_at.max(now);
+        }
+        if i < self.loads.len() {
+            self.loads[i] =
+                status.as_ref().map(InstanceLoad::from_status);
+        }
+        if i < self.statuses.len() {
+            self.statuses[i] = status;
+        }
     }
 
     /// Refresh exactly one slot (dispatch-ack piggyback): the instance
@@ -367,6 +457,47 @@ impl FrontEnd {
         *dispatched += 1;
         decision
     }
+}
+
+/// Build the front-end fleet for a cluster config — the one constructor
+/// both deployments share.  `ClusterSim` drives the result inside the
+/// discrete-event loop; an HTTP gateway (`server::gateway`) drives the
+/// *same* objects over the wire, so per-front-end scheduler seeds (and
+/// therefore every tie-break draw) are identical across the two.
+///
+/// Front-end 0 uses the exact centralized seed, so single-front-end
+/// runs reproduce the pre-distributed scheduler byte for byte; peers
+/// fork deterministically off the same base.
+pub fn build_frontends(cfg: &ClusterConfig, total: usize,
+                       reference_path: bool) -> Vec<FrontEnd> {
+    let blocks = cfg.kv_blocks();
+    (0..cfg.frontends.max(1))
+        .map(|f| {
+            let seed = (cfg.seed ^ 0x5C)
+                ^ (f as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let mut fe = FrontEnd::new(
+                f,
+                build_scheduler(cfg.scheduler, total, &cfg.engine, blocks,
+                                &cfg.overhead, seed, cfg.jobs),
+                total,
+            );
+            if reference_path {
+                fe.set_reference_path(true);
+            }
+            // The local echo only means something over stale views; a
+            // fresh view already reflects every landed dispatch.
+            if cfg.local_echo && cfg.sync_interval > 0.0 {
+                fe.set_local_echo(true);
+            }
+            fe
+        })
+        .collect()
+}
+
+/// The arrival sharder both deployments share (seeded off the cluster
+/// seed so simulator and gateway split identical traces identically).
+pub fn build_sharder(cfg: &ClusterConfig, n_frontends: usize) -> ArrivalSharder {
+    ArrivalSharder::new(cfg.shard_policy, n_frontends, cfg.seed ^ 0xF3)
 }
 
 /// Assigns each arrival to a front-end.
@@ -659,6 +790,71 @@ mod tests {
         fe.clear_echo_all();
         assert!(fe.echoed.iter().all(Vec::is_empty));
         let _ = engs;
+    }
+
+    #[test]
+    fn wire_sync_matches_in_process_sync() {
+        // The gateway's status-pull path must build the exact view the
+        // simulator's ViewSync builds from the same engine states — for
+        // every (want_statuses, want_loads) combination a scheduler
+        // family selects.
+        let cost = RooflineModel::from_profiles(&A30, &LLAMA2_7B);
+        let mut engs = engines(3);
+        engs[0].enqueue(&Request::new(1, 0.0, 200, 50), 0.0);
+        engs[0].start_step(&cost);
+        engs[1].enqueue(&Request::new(2, 0.5, 100, 20), 0.5);
+        let active = vec![true, true, false];
+        for (ws, wl) in [(true, false), (false, true), (true, true)] {
+            let mut a = StaleClusterView::new();
+            a.sync_all(&engs, &active, 2.0, ws, wl);
+            let mut b = StaleClusterView::new();
+            let fetched: Vec<Option<InstanceStatus>> = engs
+                .iter()
+                .zip(&active)
+                .map(|(e, &on)| on.then(|| e.snapshot()))
+                .collect();
+            b.sync_from_statuses(fetched, 2.0, ws, wl);
+            assert_eq!(a.statuses(), b.statuses(), "ws={ws} wl={wl}");
+            assert_eq!(a.loads(), b.loads(), "ws={ws} wl={wl}");
+            for i in 0..3 {
+                assert_eq!(a.epoch_of(i), b.epoch_of(i));
+            }
+            assert_eq!(a.synced_at(), b.synced_at());
+        }
+    }
+
+    #[test]
+    fn install_instance_matches_sync_instance() {
+        let cost = RooflineModel::from_profiles(&A30, &LLAMA2_7B);
+        let mut engs = engines(2);
+        let active = vec![true, true];
+        let mut a = StaleClusterView::new();
+        let mut b = StaleClusterView::new();
+        a.sync_all(&engs, &active, 0.0, true, true);
+        let fetched: Vec<Option<InstanceStatus>> =
+            engs.iter().map(|e| Some(e.snapshot())).collect();
+        b.sync_from_statuses(fetched, 0.0, true, true);
+
+        engs[0].enqueue(&Request::new(9, 1.0, 150, 30), 1.0);
+        engs[0].start_step(&cost);
+        a.sync_instance(0, &engs[0], true, 3.0);
+        b.install_instance(0, Some(engs[0].snapshot()), 3.0);
+        assert_eq!(a.statuses(), b.statuses());
+        assert_eq!(a.loads(), b.loads());
+        assert_eq!(a.epoch_of(0), b.epoch_of(0));
+
+        // Dead-host marking matches too.
+        a.sync_instance(1, &engs[1], false, 4.0);
+        b.install_instance(1, None, 4.0);
+        assert_eq!(a.statuses(), b.statuses());
+        assert_eq!(a.loads(), b.loads());
+        assert_eq!(a.epoch_of(1), b.epoch_of(1));
+
+        // And both are no-ops before any full sync.
+        let mut v = StaleClusterView::new();
+        v.install_instance(0, Some(engs[0].snapshot()), 1.0);
+        assert!(v.statuses().is_empty() && v.loads().is_empty());
+        assert_eq!(v.epoch_of(0), None);
     }
 
     #[test]

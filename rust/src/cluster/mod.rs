@@ -39,7 +39,7 @@ use crate::exec::roofline::RooflineModel;
 use crate::faults::{FaultKind, FaultPlan, FaultRecord, RecoveryStats};
 use crate::metrics::MetricsCollector;
 use crate::provision::AutoProvisioner;
-use crate::scheduler::{build_scheduler, Decision, PredictorStats};
+use crate::scheduler::{Decision, PredictorStats};
 use crate::util::rng::Rng;
 use events::{Event, EventKind, EventQueue};
 use frontend::{ArrivalSharder, FrontEnd};
@@ -198,32 +198,12 @@ impl ClusterSim {
             })
             .collect();
         let cost = RooflineModel::from_profiles(&cfg.gpu, &cfg.model);
-        // Front-end 0 uses the exact centralized seed, so single-front-end
-        // runs reproduce the pre-distributed scheduler byte for byte;
-        // peers fork deterministically off the same base.
-        let frontends: Vec<FrontEnd> = (0..cfg.frontends.max(1))
-            .map(|f| {
-                let seed = (cfg.seed ^ 0x5C)
-                    ^ (f as u64).wrapping_mul(0x9E3779B97F4A7C15);
-                let mut fe = FrontEnd::new(
-                    f,
-                    build_scheduler(cfg.scheduler, total, &cfg.engine, blocks,
-                                    &cfg.overhead, seed, cfg.jobs),
-                    total,
-                );
-                if opts.reference_path {
-                    fe.set_reference_path(true);
-                }
-                // The local echo only means something over stale views;
-                // a fresh view already reflects every landed dispatch.
-                if cfg.local_echo && cfg.sync_interval > 0.0 {
-                    fe.set_local_echo(true);
-                }
-                fe
-            })
-            .collect();
-        let sharder = ArrivalSharder::new(cfg.shard_policy, frontends.len(),
-                                          cfg.seed ^ 0xF3);
+        // Shared with the HTTP gateway (`server::gateway`): same
+        // constructor, same per-front-end seeds, byte-identical
+        // decisions from identical views.
+        let frontends = frontend::build_frontends(&cfg, total,
+                                                  opts.reference_path);
+        let sharder = frontend::build_sharder(&cfg, frontends.len());
         let provisioner = if cfg.provision.enabled {
             AutoProvisioner::new(cfg.provision.clone(), total)
         } else {

@@ -1,0 +1,295 @@
+//! The cluster manifest: one JSON file describing a deployment, shared
+//! by `block simulate` and `block serve`.
+//!
+//! The same document drives both worlds: `simulate --manifest` runs the
+//! discrete-event simulator over the manifest's [`ClusterConfig`] (with
+//! `n_instances` taken from the instance list), while
+//! `serve --role instance|gateway --manifest --index N` brings up the
+//! corresponding wire component.  That sharing is what makes the
+//! gateway/simulator parity test meaningful — both sides read the
+//! identical scheduler, engine, staleness, and seed configuration.
+//!
+//! ```json
+//! {
+//!   "schema": "block-cluster/v1",
+//!   "cluster": { "scheduler": "block", "frontends": 2, ... },
+//!   "instances": ["127.0.0.1:9101", "127.0.0.1:9102"],
+//!   "gateways": ["127.0.0.1:9001"],
+//!   "backend": "sim",
+//!   "clock": "wall",
+//!   "time_scale": 1.0,
+//!   "artifacts": "artifacts"
+//! }
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ClusterConfig;
+use crate::util::json::{Json, JsonObj};
+
+/// Which engine substrate instance daemons run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Deterministic sim-clock engine over the roofline cost model (no
+    /// artifacts needed; the offline default).
+    Sim,
+    /// Real transformer compute through the PJRT artifacts.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sim" | "sim-clock" => Ok(BackendKind::Sim),
+            "pjrt" | "real" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Sim => "sim",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// How components map time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockKind {
+    /// Wall clock (scaled by `time_scale`) — live serving.
+    Wall,
+    /// Virtual clock driven by explicit `now` timestamps on requests —
+    /// deterministic trace replay (the parity tests' mode).
+    Virtual,
+}
+
+impl ClockKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "wall" => Ok(ClockKind::Wall),
+            "virtual" | "trace" => Ok(ClockKind::Virtual),
+            other => bail!("unknown clock '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClockKind::Wall => "wall",
+            ClockKind::Virtual => "virtual",
+        }
+    }
+}
+
+/// A deployable cluster description (see the module doc).
+#[derive(Debug, Clone)]
+pub struct ClusterManifest {
+    pub cluster: ClusterConfig,
+    /// Instance daemon addresses (`host:port`), index-aligned with the
+    /// scheduler's instance slots.
+    pub instances: Vec<String>,
+    /// Gateway addresses.
+    pub gateways: Vec<String>,
+    pub backend: BackendKind,
+    pub clock: ClockKind,
+    /// Virtual seconds per wall second in wall-clock mode (sim backend
+    /// only; >1 fast-forwards the cost model for smoke tests).
+    pub time_scale: f64,
+    /// Artifact directory for the PJRT backend.
+    pub artifacts: String,
+}
+
+pub const MANIFEST_SCHEMA: &str = "block-cluster/v1";
+
+impl ClusterManifest {
+    /// A loopback manifest with `n` sim instances and one gateway —
+    /// the starting point tests and `serve_smoke` build on.
+    pub fn loopback(cluster: ClusterConfig, n_instances: usize,
+                    base_port: u16) -> Self {
+        let mut cluster = cluster;
+        cluster.n_instances = n_instances.max(1);
+        ClusterManifest {
+            cluster,
+            instances: (0..n_instances.max(1))
+                .map(|i| format!("127.0.0.1:{}", base_port + 1 + i as u16))
+                .collect(),
+            gateways: vec![format!("127.0.0.1:{base_port}")],
+            backend: BackendKind::Sim,
+            clock: ClockKind::Wall,
+            time_scale: 1.0,
+            artifacts: "artifacts".to_string(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.instances.is_empty() {
+            bail!("manifest needs at least one instance address");
+        }
+        if self.gateways.is_empty() {
+            bail!("manifest needs at least one gateway address");
+        }
+        if !self.time_scale.is_finite() || self.time_scale <= 0.0 {
+            bail!("time_scale must be finite and > 0");
+        }
+        if self.cluster.n_instances != self.instances.len() {
+            bail!(
+                "cluster.n_instances ({}) != instance list length ({})",
+                self.cluster.n_instances,
+                self.instances.len()
+            );
+        }
+        self.cluster.validate()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("schema", MANIFEST_SCHEMA);
+        o.insert("cluster", self.cluster.to_json());
+        o.insert(
+            "instances",
+            Json::Arr(self.instances.iter().map(|a| a.as_str().into()).collect()),
+        );
+        o.insert(
+            "gateways",
+            Json::Arr(self.gateways.iter().map(|a| a.as_str().into()).collect()),
+        );
+        o.insert("backend", self.backend.name());
+        o.insert("clock", self.clock.name());
+        o.insert("time_scale", self.time_scale);
+        o.insert("artifacts", self.artifacts.as_str());
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        if let Some(s) = j.opt("schema") {
+            let s = s.as_str()?;
+            if s != MANIFEST_SCHEMA {
+                bail!("unsupported manifest schema '{s}'");
+            }
+        }
+        let mut cluster = match j.opt("cluster") {
+            Some(c) => ClusterConfig::from_json(c)?,
+            None => ClusterConfig::default(),
+        };
+        let addrs = |key: &str| -> Result<Vec<String>> {
+            match j.opt(key) {
+                None => Ok(Vec::new()),
+                Some(v) => v
+                    .as_arr()?
+                    .iter()
+                    .map(|a| Ok(a.as_str()?.to_string()))
+                    .collect(),
+            }
+        };
+        let instances = addrs("instances")?;
+        let gateways = addrs("gateways")?;
+        // The instance list is authoritative for the slot count: the
+        // scheduler's view is index-aligned with it.
+        if !instances.is_empty() {
+            cluster.n_instances = instances.len();
+        }
+        let m = ClusterManifest {
+            cluster,
+            instances,
+            gateways,
+            backend: match j.opt("backend") {
+                None => BackendKind::Sim,
+                Some(v) => BackendKind::parse(v.as_str()?)?,
+            },
+            clock: match j.opt("clock") {
+                None => ClockKind::Wall,
+                Some(v) => ClockKind::parse(v.as_str()?)?,
+            },
+            time_scale: match j.opt("time_scale") {
+                None => 1.0,
+                Some(v) => v.as_f64()?,
+            },
+            artifacts: match j.opt("artifacts") {
+                None => "artifacts".to_string(),
+                Some(v) => v.as_str()?.to_string(),
+            },
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SchedulerKind, ShardPolicy};
+
+    #[test]
+    fn loopback_manifest_is_valid_and_roundtrips() {
+        let mut cluster = ClusterConfig::default();
+        cluster.scheduler = SchedulerKind::MinQpm;
+        cluster.frontends = 2;
+        cluster.sync_interval = 0.5;
+        cluster.shard_policy = ShardPolicy::Hash;
+        let mut m = ClusterManifest::loopback(cluster, 3, 9100);
+        m.clock = ClockKind::Virtual;
+        m.time_scale = 8.0;
+        m.validate().unwrap();
+        assert_eq!(m.cluster.n_instances, 3);
+        assert_eq!(m.instances.len(), 3);
+        assert_eq!(m.gateways, vec!["127.0.0.1:9100".to_string()]);
+
+        let text = m.to_json().to_string_pretty();
+        let back = ClusterManifest::from_json(&Json::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(back.cluster.scheduler, SchedulerKind::MinQpm);
+        assert_eq!(back.cluster.frontends, 2);
+        assert_eq!(back.cluster.n_instances, 3);
+        assert_eq!(back.instances, m.instances);
+        assert_eq!(back.backend, BackendKind::Sim);
+        assert_eq!(back.clock, ClockKind::Virtual);
+        assert!((back.time_scale - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn instance_list_overrides_slot_count() {
+        let text = r#"{
+            "schema": "block-cluster/v1",
+            "cluster": {"n_instances": 99},
+            "instances": ["127.0.0.1:9101", "127.0.0.1:9102"],
+            "gateways": ["127.0.0.1:9001"]
+        }"#;
+        let m = ClusterManifest::from_json(&Json::parse(text).unwrap())
+            .unwrap();
+        assert_eq!(m.cluster.n_instances, 2);
+    }
+
+    #[test]
+    fn invalid_manifests_rejected() {
+        assert!(ClusterManifest::from_json(
+            &Json::parse(r#"{"schema": "bogus/v9"}"#).unwrap())
+            .is_err());
+        let no_instances = r#"{"gateways": ["127.0.0.1:9001"]}"#;
+        assert!(ClusterManifest::from_json(
+            &Json::parse(no_instances).unwrap())
+            .is_err());
+        let bad_scale = r#"{
+            "instances": ["a:1"], "gateways": ["b:2"], "time_scale": 0
+        }"#;
+        assert!(ClusterManifest::from_json(&Json::parse(bad_scale).unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn backend_and_clock_parse_names() {
+        for b in [BackendKind::Sim, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(b.name()).unwrap(), b);
+        }
+        for c in [ClockKind::Wall, ClockKind::Virtual] {
+            assert_eq!(ClockKind::parse(c.name()).unwrap(), c);
+        }
+        assert!(BackendKind::parse("tpu").is_err());
+        assert!(ClockKind::parse("lamport").is_err());
+    }
+}

@@ -4,10 +4,13 @@
 //! [`WorkloadConfig`]; both round-trip through JSON (`util::json`) so runs
 //! are fully describable from a config file (`block experiment --config`).
 
+pub mod manifest;
+
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::core::hw::{self, GpuProfile, ModelProfile};
 use crate::util::json::{Json, JsonObj};
+pub use manifest::{BackendKind, ClockKind, ClusterManifest};
 
 /// Local (per-instance) scheduling policy — §2's batching strategies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -6,7 +6,10 @@
 //! prefill/decode batch (original vLLM).  The latency model consumes the
 //! [`BatchPlan::features`] summary; the executors consume the full plan.
 
+use anyhow::Result;
+
 use crate::core::request::RequestId;
+use crate::util::json::{Json, JsonObj};
 
 /// One prompt chunk scheduled in this step.
 #[derive(Debug, Clone, PartialEq)]
@@ -101,6 +104,61 @@ impl BatchPlan {
         let (a, b, c, d) = self.cache_key();
         crate::util::hash::hash_words([a as u64, b, c as u64, d])
     }
+
+    /// Serialize for the wire `status` API: the in-flight step of an
+    /// instance daemon travels to the gateway's Predictor as JSON.
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert(
+            "prefill",
+            Json::Arr(
+                self.prefill
+                    .iter()
+                    .map(|c| {
+                        let mut p = JsonObj::new();
+                        p.insert("request", c.request);
+                        p.insert("offset", c.offset as u64);
+                        p.insert("tokens", c.tokens as u64);
+                        Json::Obj(p)
+                    })
+                    .collect(),
+            ),
+        );
+        o.insert(
+            "decode",
+            Json::Arr(
+                self.decode
+                    .iter()
+                    .map(|d| {
+                        let mut p = JsonObj::new();
+                        p.insert("request", d.request);
+                        p.insert("context", d.context as u64);
+                        Json::Obj(p)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(o)
+    }
+
+    /// Parse the wire form back ([`Self::to_json`] inverse, exact).
+    pub fn from_json(j: &Json) -> Result<BatchPlan> {
+        let mut plan = BatchPlan::default();
+        for c in j.field("prefill")?.as_arr()? {
+            plan.prefill.push(PrefillChunk {
+                request: c.field("request")?.as_usize()? as RequestId,
+                offset: c.field("offset")?.as_usize()? as u32,
+                tokens: c.field("tokens")?.as_usize()? as u32,
+            });
+        }
+        for d in j.field("decode")?.as_arr()? {
+            plan.decode.push(DecodeSeq {
+                request: d.field("request")?.as_usize()? as RequestId,
+                context: d.field("context")?.as_usize()? as u32,
+            });
+        }
+        Ok(plan)
+    }
 }
 
 #[cfg(test)]
@@ -150,6 +208,15 @@ mod tests {
         b.decode[0].context = 701;
         assert_ne!(a.cache_key(), b.cache_key());
         assert_ne!(a.key_hash(), b.key_hash());
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let p = plan();
+        let back = BatchPlan::from_json(&p.to_json()).unwrap();
+        assert_eq!(back, p);
+        let empty = BatchPlan::default();
+        assert_eq!(BatchPlan::from_json(&empty.to_json()).unwrap(), empty);
     }
 
     #[test]

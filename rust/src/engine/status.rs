@@ -2,8 +2,15 @@
 //! framework exports for the Predictor sidecar and heuristic dispatchers.
 //!
 //! In the paper this is a new vLLM HTTP endpoint (154 LoC of integration);
-//! here it is a plain struct the in-process services consume directly, and
-//! the HTTP server (`server/`) serializes to JSON for the wire.
+//! here it is a plain struct the in-process services consume directly
+//! *and* the wire schema of the serving tier: instance daemons
+//! (`server::instance`) serialize it with [`InstanceStatus::to_json`] and
+//! gateways parse it back with [`InstanceStatus::from_json`] — the
+//! round-trip is exact (f64 fields use shortest-round-trip formatting),
+//! so a gateway's Predictor simulating from a parsed wire snapshot makes
+//! byte-identical decisions to the in-process simulator.
+
+use anyhow::Result;
 
 use crate::core::batch::BatchPlan;
 use crate::core::request::RequestId;
@@ -56,6 +63,50 @@ impl SeqSnapshot {
             first_token: self.first_token,
             preemptions: self.preemptions,
         }
+    }
+
+    /// Wire form of one sequence (`null` marks a timestamp not yet set).
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("id", self.id);
+        o.insert("prompt_tokens", self.prompt_tokens as u64);
+        o.insert("prefill_target", self.prefill_target as u64);
+        o.insert("prefill_done", self.prefill_done as u64);
+        o.insert("generated", self.generated as u64);
+        o.insert("response_limit", self.response_limit as u64);
+        o.insert("enqueued", self.enqueued);
+        match self.prefill_start {
+            Some(t) => o.insert("prefill_start", t),
+            None => o.insert("prefill_start", Json::Null),
+        }
+        match self.first_token {
+            Some(t) => o.insert("first_token", t),
+            None => o.insert("first_token", Json::Null),
+        }
+        o.insert("preemptions", self.preemptions as u64);
+        Json::Obj(o)
+    }
+
+    /// Parse the wire form ([`Self::to_json`] inverse, exact).
+    pub fn from_json(j: &Json) -> Result<SeqSnapshot> {
+        let opt_time = |key: &str| -> Result<Option<f64>> {
+            match j.opt(key) {
+                None => Ok(None),
+                Some(v) => Ok(Some(v.as_f64()?)),
+            }
+        };
+        Ok(SeqSnapshot {
+            id: j.field("id")?.as_usize()? as RequestId,
+            prompt_tokens: j.field("prompt_tokens")?.as_usize()? as u32,
+            prefill_target: j.field("prefill_target")?.as_usize()? as u32,
+            prefill_done: j.field("prefill_done")?.as_usize()? as u32,
+            generated: j.field("generated")?.as_usize()? as u32,
+            response_limit: j.field("response_limit")?.as_usize()? as u32,
+            enqueued: j.field("enqueued")?.as_f64()?,
+            prefill_start: opt_time("prefill_start")?,
+            first_token: opt_time("first_token")?,
+            preemptions: j.field("preemptions")?.as_usize()? as u32,
+        })
     }
 }
 
@@ -132,28 +183,67 @@ impl InstanceStatus {
                 .sum::<u64>()
     }
 
-    /// Serialize for the HTTP status endpoint.
+    /// Serialize the full schema for the HTTP status endpoint.  Every
+    /// field the Predictor consumes is present (epoch, watermark, the
+    /// in-flight step's plan, per-sequence timestamps), so
+    /// [`Self::from_json`] reconstructs an identical struct.
     pub fn to_json(&self) -> Json {
-        fn seq(s: &SeqSnapshot) -> Json {
-            let mut o = JsonObj::new();
-            o.insert("id", s.id);
-            o.insert("prompt_tokens", s.prompt_tokens as u64);
-            o.insert("prefill_target", s.prefill_target as u64);
-            o.insert("prefill_done", s.prefill_done as u64);
-            o.insert("generated", s.generated as u64);
-            o.insert("response_limit", s.response_limit as u64);
-            o.insert("enqueued", s.enqueued);
-            o.insert("preemptions", s.preemptions as u64);
-            Json::Obj(o)
-        }
         let mut o = JsonObj::new();
         o.insert("now", self.now);
+        o.insert("epoch", self.epoch);
         o.insert("free_blocks", self.free_blocks as u64);
         o.insert("total_blocks", self.total_blocks as u64);
-        o.insert("running", Json::Arr(self.running.iter().map(seq).collect()));
-        o.insert("waiting", Json::Arr(self.waiting.iter().map(seq).collect()));
+        o.insert("watermark_blocks", self.watermark_blocks as u64);
+        o.insert(
+            "running",
+            Json::Arr(self.running.iter().map(SeqSnapshot::to_json).collect()),
+        );
+        o.insert(
+            "waiting",
+            Json::Arr(self.waiting.iter().map(SeqSnapshot::to_json).collect()),
+        );
+        match &self.in_flight {
+            Some((plan, done)) => {
+                let mut f = JsonObj::new();
+                f.insert("plan", plan.to_json());
+                f.insert("done", *done);
+                o.insert("in_flight", Json::Obj(f));
+            }
+            None => o.insert("in_flight", Json::Null),
+        }
         o.insert("total_preemptions", self.total_preemptions);
         Json::Obj(o)
+    }
+
+    /// Parse a wire snapshot ([`Self::to_json`] inverse, exact).  Unknown
+    /// fields are ignored, so the daemon's status envelope (which appends
+    /// server counters) parses through the same path.
+    pub fn from_json(j: &Json) -> Result<InstanceStatus> {
+        let seqs = |key: &str| -> Result<Vec<SeqSnapshot>> {
+            j.field(key)?
+                .as_arr()?
+                .iter()
+                .map(SeqSnapshot::from_json)
+                .collect()
+        };
+        let in_flight = match j.opt("in_flight") {
+            None => None,
+            Some(f) => Some((
+                BatchPlan::from_json(f.field("plan")?)?,
+                f.field("done")?.as_f64()?,
+            )),
+        };
+        Ok(InstanceStatus {
+            now: j.field("now")?.as_f64()?,
+            epoch: j.field("epoch")?.as_usize()? as u64,
+            free_blocks: j.field("free_blocks")?.as_usize()? as u32,
+            total_blocks: j.field("total_blocks")?.as_usize()? as u32,
+            watermark_blocks: j.field("watermark_blocks")?.as_usize()? as u32,
+            running: seqs("running")?,
+            waiting: seqs("waiting")?,
+            in_flight,
+            total_preemptions: j.field("total_preemptions")?.as_usize()? as u64,
+        })
     }
 }
 
@@ -207,6 +297,49 @@ mod tests {
         let s = snap(7, 128, 64, 3);
         let back = SeqSnapshot::from_seq(&s.to_seq());
         assert_eq!(back, s);
+    }
+
+    #[test]
+    fn wire_json_roundtrip_is_exact() {
+        use crate::core::batch::{DecodeSeq, PrefillChunk};
+        let mut running = vec![snap(1, 500, 200, 0), snap(2, 100, 100, 5)];
+        running[0].prefill_start = Some(0.125);
+        running[1].prefill_start = Some(0.25);
+        running[1].first_token = Some(0.3752918374612345);
+        let st = InstanceStatus {
+            now: 1.2345678901234567,
+            epoch: 42,
+            free_blocks: 10,
+            total_blocks: 20,
+            watermark_blocks: 1,
+            running,
+            waiting: vec![snap(3, 300, 0, 0)],
+            in_flight: Some((
+                BatchPlan {
+                    prefill: vec![PrefillChunk {
+                        request: 2,
+                        offset: 64,
+                        tokens: 36,
+                    }],
+                    decode: vec![DecodeSeq { request: 1, context: 205 }],
+                },
+                1.3000000000000003,
+            )),
+            total_preemptions: 7,
+        };
+        let text = st.to_json().to_string_compact();
+        let back =
+            InstanceStatus::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, st, "wire round-trip must be exact");
+        // Extra envelope fields (daemon counters) must not break parsing.
+        let mut env = match st.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        env.insert("role", "instance");
+        env.insert("requests_enqueued", 9u64);
+        let back2 = InstanceStatus::from_json(&Json::Obj(env)).unwrap();
+        assert_eq!(back2, st);
     }
 
     #[test]

@@ -19,14 +19,22 @@
 //!    the distributed deployment (N stateless front-ends over
 //!    bounded-staleness views); the MTTF flags inject instance/front-end
 //!    faults and print per-fault recovery telemetry.
-//! * `block serve [--addr HOST:PORT] [--artifacts DIR]` — HTTP serving of
-//!    the real PJRT model (endpoints: /generate /predict /status /health).
+//! * `block serve --role instance --manifest FILE --index N` — one
+//!    standalone engine daemon (sim-clock or PJRT backend) serving the
+//!    wire `status` API.
+//! * `block serve --role gateway --manifest FILE` — Block's scheduling
+//!    gateway: N stateless front-ends over status-pull views, dispatching
+//!    `/generate` through the configured scheduler.
+//! * `block serve [--role single] [--addr HOST:PORT] [--artifacts DIR]` —
+//!    legacy one-process HTTP serving of the real PJRT model (endpoints:
+//!    /generate /predict /status /health).
 //! * `block tag --prompt "..."` — run the length tagger on one prompt.
 //! * `block workload --out FILE [--qps Q] [--requests N]` — emit a trace.
 
 use anyhow::{bail, Context, Result};
 
 use block::cluster::{run_experiment, SimOptions};
+use block::config::manifest::{BackendKind, ClockKind, ClusterManifest};
 use block::config::{ClusterConfig, SchedulerKind, ShardPolicy, WorkloadConfig,
                     WorkloadKind};
 use block::experiments::{self, ExpContext, Scale};
@@ -107,11 +115,14 @@ fn usage() -> ! {
          \x20 experiment <tab1|fig5|fig6|fig7|fig8|tab2|staleness|chaos|all> [--scale quick|full]\n\
          \x20          [--out DIR] [--seed N] [--jobs N] [--shard round-robin|hash|poisson] [--smoke]\n\
          \x20 simulate [--scheduler S] [--qps Q] [--requests N] [--instances K]\n\
-         \x20          [--workload sharegpt|burstgpt] [--config FILE] [--seed N] [--jobs N]\n\
+         \x20          [--workload sharegpt|burstgpt] [--config FILE] [--manifest FILE]\n\
+         \x20          [--seed N] [--jobs N]\n\
          \x20          [--frontends N] [--sync-interval S] [--shard round-robin|hash|poisson]\n\
          \x20          [--sync-on-ack] [--local-echo] [--instance-mttf S] [--instance-mttr S]\n\
          \x20          [--frontend-mttf S] [--detect-delay S] [--rejoin-cold-start S] [--fault-seed N]\n\
-         \x20 serve    [--addr HOST:PORT] [--artifacts DIR] [--max-requests N]\n\
+         \x20 serve    [--role single|instance|gateway] [--manifest FILE] [--index N]\n\
+         \x20          [--backend sim|pjrt] [--clock wall|virtual] [--time-scale X]\n\
+         \x20          [--scheduler S] [--addr HOST:PORT] [--artifacts DIR] [--max-requests N]\n\
          \x20 tag      --prompt TEXT [--artifacts DIR]\n\
          \x20 workload --out FILE [--qps Q] [--requests N] [--seed N]"
     );
@@ -140,9 +151,13 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    let mut cfg = match args.flag("config") {
-        Some(path) => ClusterConfig::load(path)?,
-        None => ClusterConfig::default(),
+    let mut cfg = match (args.flag("manifest"), args.flag("config")) {
+        // A cluster manifest drives simulation and serving alike: the
+        // simulator runs the manifest's cluster section with one engine
+        // slot per listed instance.
+        (Some(path), _) => ClusterManifest::load(path)?.cluster,
+        (None, Some(path)) => ClusterConfig::load(path)?,
+        (None, None) => ClusterConfig::default(),
     };
     if let Some(s) = args.flag("scheduler") {
         cfg.scheduler = SchedulerKind::parse(s)?;
@@ -218,14 +233,89 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let artifacts = args.flag("artifacts").unwrap_or("artifacts");
-    let addr = args.flag("addr").unwrap_or("127.0.0.1:8471");
-    let max = args.flag("max-requests").map(|v| v.parse()).transpose()?;
-    let runtime = block::runtime::ModelRuntime::load(artifacts)?;
-    println!("model: {} params, context {}",
-             runtime.dims().param_count, runtime.dims().max_context);
-    let state = block::server::ServerState::new(runtime);
-    block::server::serve(state, addr, max)
+    match args.flag("role").unwrap_or("single") {
+        "single" => {
+            // Legacy one-process mode: PJRT model served inline.
+            let artifacts = args.flag("artifacts").unwrap_or("artifacts");
+            let addr = args.flag("addr").unwrap_or("127.0.0.1:8471");
+            let max =
+                args.flag("max-requests").map(|v| v.parse()).transpose()?;
+            let runtime = block::runtime::ModelRuntime::load(artifacts)?;
+            println!("model: {} params, context {}",
+                     runtime.dims().param_count, runtime.dims().max_context);
+            let state = block::server::ServerState::new(runtime);
+            block::server::serve(state, addr, max)
+        }
+        "instance" => {
+            let mut m = load_manifest(args)?;
+            let index: usize = args.flag_parse("index", 0usize)?;
+            if index >= m.instances.len() {
+                bail!("--index {index} out of range ({} instances)",
+                      m.instances.len());
+            }
+            override_manifest(&mut m, args)?;
+            let addr = args
+                .flag("addr")
+                .unwrap_or(m.instances[index].as_str())
+                .to_string();
+            let backend = block::server::instance::build_backend(&m, index)?;
+            let opts =
+                block::server::instance::InstanceOptions::from_manifest(&m);
+            let listener = std::net::TcpListener::bind(&addr)
+                .with_context(|| format!("binding instance on {addr}"))?;
+            println!("instance {index} ({}) on {addr}", m.backend.name());
+            block::server::instance::serve_instance(listener, backend, opts)
+        }
+        "gateway" => {
+            let mut m = load_manifest(args)?;
+            let index: usize = args.flag_parse("index", 0usize)?;
+            if index >= m.gateways.len() {
+                bail!("--index {index} out of range ({} gateways)",
+                      m.gateways.len());
+            }
+            override_manifest(&mut m, args)?;
+            let addr = args
+                .flag("addr")
+                .unwrap_or(m.gateways[index].as_str())
+                .to_string();
+            let opts =
+                block::server::gateway::GatewayOptions::from_manifest(&m);
+            let listener = std::net::TcpListener::bind(&addr)
+                .with_context(|| format!("binding gateway on {addr}"))?;
+            println!("gateway {index} ({} scheduler, {} front-ends) on {addr}",
+                     m.cluster.scheduler.name(),
+                     m.cluster.frontends.max(1));
+            block::server::gateway::serve_gateway(listener, opts)
+        }
+        other => bail!("unknown role '{other}' (single|instance|gateway)"),
+    }
+}
+
+fn load_manifest(args: &Args) -> Result<ClusterManifest> {
+    let path = args
+        .flag("manifest")
+        .context("--manifest FILE required for this role")?;
+    ClusterManifest::load(path)
+}
+
+/// CLI overrides on top of the manifest (ad-hoc bring-up without
+/// editing the file).
+fn override_manifest(m: &mut ClusterManifest, args: &Args) -> Result<()> {
+    if let Some(s) = args.flag("scheduler") {
+        m.cluster.scheduler = SchedulerKind::parse(s)?;
+    }
+    if let Some(s) = args.flag("backend") {
+        m.backend = BackendKind::parse(s)?;
+    }
+    if let Some(s) = args.flag("clock") {
+        m.clock = ClockKind::parse(s)?;
+    }
+    m.time_scale = args.flag_parse("time-scale", m.time_scale)?;
+    if let Some(s) = args.flag("artifacts") {
+        m.artifacts = s.to_string();
+    }
+    m.validate()?;
+    Ok(())
 }
 
 fn cmd_tag(args: &Args) -> Result<()> {

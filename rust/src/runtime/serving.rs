@@ -3,14 +3,27 @@
 //! This is the end-to-end validation path: the same continuous-batching
 //! idea as `engine/` (admit new prompts as slots free up, one decode step
 //! advances every active sequence) but executing *real transformer
-//! compute* through the AOT artifacts instead of a cost model.  The
-//! serving example (`examples/serve_real_model.rs`) and the HTTP server
-//! drive this type.
+//! compute* through the AOT artifacts instead of a cost model.
+//!
+//! The core is the stepwise [`RealEngine`]: an admission queue plus a
+//! slot table, advanced one prefill-or-decode step at a time.  Two
+//! drivers sit on top:
+//!
+//! * [`RealServer::serve`] — the closed-batch convenience used by the
+//!   serving example and the legacy single-process HTTP mode: enqueue
+//!   everything, step to quiescence, return completions;
+//! * the instance daemon's PJRT backend
+//!   (`server::backend::PjrtBackend`) — pumps [`RealEngine::step`] from
+//!   its accept loop and exports [`RealEngine::snapshot`] through the
+//!   wire `status` API, making a real-compute instance schedulable by a
+//!   gateway exactly like a sim-clock one.
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::engine::{InstanceStatus, SeqSnapshot};
 use crate::runtime::ModelRuntime;
 use crate::workload::tokenizer;
 
@@ -32,6 +45,13 @@ pub struct ServingResponse {
     pub ttft: Duration,
     pub e2e: Duration,
     pub arrival_order: usize,
+    /// Seconds since engine construction when the request was enqueued /
+    /// prefilled / emitted its first token / finished (the wire `status`
+    /// timebase).
+    pub enqueued_at: f64,
+    pub prefill_at: f64,
+    pub first_at: f64,
+    pub finished_at: f64,
 }
 
 struct Slot {
@@ -45,55 +65,162 @@ struct Slot {
     started: Instant,
     ttft: Duration,
     arrival_order: usize,
+    enqueued_at: f64,
+    prefill_at: f64,
+    first_at: f64,
 }
 
-/// Batched greedy serving over the PJRT artifacts.
-pub struct RealServer<'a> {
-    rt: &'a ModelRuntime,
+struct PendingReq {
+    req: ServingRequest,
+    arrival_order: usize,
+    enqueued_at: f64,
+}
+
+/// Stepwise continuous-batching engine over the PJRT artifacts: FCFS
+/// admission queue + running slots, advanced one engine step per
+/// [`Self::step`] call.
+pub struct RealEngine {
+    t0: Instant,
+    pending: VecDeque<PendingReq>,
+    slots: Vec<Slot>,
+    done: Vec<ServingResponse>,
+    next_order: usize,
+    /// Mutation counter for the wire `status` API (same contract as
+    /// `engine::InstanceEngine::epoch`: equal epochs ⇒ identical state).
+    epoch: u64,
     pub decode_steps: u64,
     pub prefills: u64,
 }
 
-impl<'a> RealServer<'a> {
-    pub fn new(rt: &'a ModelRuntime) -> Self {
-        RealServer { rt, decode_steps: 0, prefills: 0 }
+impl RealEngine {
+    pub fn new() -> Self {
+        RealEngine {
+            t0: Instant::now(),
+            pending: VecDeque::new(),
+            slots: Vec::new(),
+            done: Vec::new(),
+            next_order: 0,
+            epoch: 0,
+            decode_steps: 0,
+            prefills: 0,
+        }
     }
 
-    fn slot_kv_len(&self) -> usize {
-        let d = self.rt.dims();
+    /// Seconds since engine construction (the timebase of every exported
+    /// timestamp).
+    pub fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Admit a request into the FCFS queue.
+    pub fn enqueue(&mut self, req: ServingRequest) {
+        self.epoch += 1;
+        let order = self.next_order;
+        self.next_order += 1;
+        self.pending.push_back(PendingReq {
+            req,
+            arrival_order: order,
+            enqueued_at: self.now(),
+        });
+    }
+
+    /// Is there admitted or running work left?
+    pub fn busy(&self) -> bool {
+        !self.pending.is_empty() || !self.slots.is_empty()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn running(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Drain completions (completion order).
+    pub fn take_finished(&mut self) -> Vec<ServingResponse> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// Drop every queued and running request (no completions emitted).
+    /// The daemon's last resort when the runtime keeps failing a step —
+    /// better an empty engine than respinning the same broken batch.
+    pub fn abort_all(&mut self) {
+        self.epoch += 1;
+        self.pending.clear();
+        self.slots.clear();
+    }
+
+    fn slot_kv_len(rt: &ModelRuntime) -> usize {
+        let d = rt.dims();
         d.n_layers * 2 * d.max_context * d.n_heads * d.head_dim
     }
 
-    /// Serve a closed batch of requests to completion (FCFS admission,
-    /// continuous batching).  Returns responses in completion order.
-    pub fn serve(&mut self, requests: &[ServingRequest]) -> Result<Vec<ServingResponse>> {
-        let d = self.rt.dims().clone();
-        let max_slots = *self.rt.buckets().last().unwrap();
-        let row = d.n_heads * d.head_dim; // floats per token per (layer, k/v)
-        let slot_kv = self.slot_kv_len();
+    /// Retire finished sequences (EOS, budget, or context limit).
+    fn retire(&mut self, rt: &ModelRuntime) {
+        let d = rt.dims();
+        let mut i = 0;
+        while i < self.slots.len() {
+            let s = &self.slots[i];
+            let ctx_full = s.len + s.generated.len() >= d.max_context - 1;
+            if s.last_token == d.eos_id
+                || s.generated.len() >= s.max_new
+                || ctx_full
+            {
+                self.epoch += 1;
+                let s = self.slots.remove(i);
+                self.done.push(ServingResponse {
+                    id: s.id,
+                    text: tokenizer::decode(&s.generated),
+                    tokens: s.generated,
+                    prompt_tokens: s.len,
+                    ttft: s.ttft,
+                    e2e: s.started.elapsed(),
+                    arrival_order: s.arrival_order,
+                    enqueued_at: s.enqueued_at,
+                    prefill_at: s.prefill_at,
+                    first_at: s.first_at,
+                    finished_at: self.t0.elapsed().as_secs_f64(),
+                });
+            } else {
+                i += 1;
+            }
+        }
+    }
 
-        let mut pending: Vec<(usize, &ServingRequest)> =
-            requests.iter().enumerate().rev().collect();
-        let mut slots: Vec<Slot> = Vec::new();
-        let mut done: Vec<ServingResponse> = Vec::new();
+    /// Run one engine step: admit-and-prefill one pending prompt if a
+    /// slot is free (the prefill artifact is B=1, like a chunked-prefill
+    /// engine admitting one chunk per step), otherwise one decode step
+    /// over the running batch.  Returns false when there was nothing to
+    /// run.
+    pub fn step(&mut self, rt: &ModelRuntime) -> Result<bool> {
+        let d = rt.dims().clone();
+        let max_slots = *rt.buckets().last().unwrap();
+        let row = d.n_heads * d.head_dim;
+        let slot_kv = Self::slot_kv_len(rt);
 
-        while !pending.is_empty() || !slots.is_empty() {
-            // Admit while capacity (prefill one prompt at a time: the
-            // prefill artifact is B=1, like a chunked-prefill engine
-            // admitting one chunk per step).
-            while slots.len() < max_slots {
-                let Some((order, req)) = pending.pop() else { break };
+        self.retire(rt);
+
+        // Admission: prefill exactly one prompt per step while capacity.
+        if self.slots.len() < max_slots {
+            if let Some(p) = self.pending.pop_front() {
+                self.epoch += 1;
                 let started = Instant::now();
-                let mut ids = tokenizer::encode(&req.prompt);
+                let prefill_at = self.now();
+                let mut ids = tokenizer::encode(&p.req.prompt);
                 ids.truncate(d.prefill_pad);
                 if ids.is_empty() {
                     ids.push(tokenizer::BYTE_OFFSET);
                 }
                 let plen = ids.len();
-                let (first, prompt_kv) = self.rt.prefill(&ids, plen)?;
+                let (first, prompt_kv) = rt.prefill(&ids, plen)?;
                 self.prefills += 1;
-                // Copy prompt KV [L,2,prefill_pad,row] into the slot cache
-                // [L,2,max_context,row].
+                // Copy prompt KV [L,2,prefill_pad,row] into the slot
+                // cache [L,2,max_context,row].
                 let mut kv = vec![0f32; slot_kv];
                 for l in 0..d.n_layers {
                     for k in 0..2 {
@@ -105,83 +232,167 @@ impl<'a> RealServer<'a> {
                     }
                 }
                 let ttft = started.elapsed();
-                slots.push(Slot {
-                    id: req.id,
+                let first_at = self.now();
+                self.slots.push(Slot {
+                    id: p.req.id,
                     kv,
                     len: plen,
                     last_token: first,
                     generated: vec![first],
-                    max_new: req.max_new.max(1),
+                    max_new: p.req.max_new.max(1),
                     started,
                     ttft,
-                    arrival_order: order,
+                    arrival_order: p.arrival_order,
+                    enqueued_at: p.enqueued_at,
+                    prefill_at,
+                    first_at,
                 });
-            }
-
-            if slots.is_empty() {
-                continue;
-            }
-
-            // Retire finished sequences (EOS, budget, or context limit).
-            let mut i = 0;
-            while i < slots.len() {
-                let s = &slots[i];
-                let ctx_full = s.len + s.generated.len() >= d.max_context - 1;
-                if s.last_token == d.eos_id
-                    || s.generated.len() >= s.max_new
-                    || ctx_full
-                {
-                    let s = slots.remove(i);
-                    done.push(ServingResponse {
-                        id: s.id,
-                        text: tokenizer::decode(&s.generated),
-                        tokens: s.generated,
-                        prompt_tokens: s.len,
-                        ttft: s.ttft,
-                        e2e: s.started.elapsed(),
-                        arrival_order: s.arrival_order,
-                    });
-                } else {
-                    i += 1;
-                }
-            }
-            if slots.is_empty() {
-                continue;
-            }
-
-            // One decode step at the smallest bucket that fits.
-            let bucket = self.rt.bucket_for(slots.len())?;
-            let mut kv = vec![0f32; d.n_layers * 2 * bucket * d.max_context * row];
-            let mut lens = vec![0i32; bucket];
-            let mut toks = vec![0i32; bucket];
-            for (b, s) in slots.iter().enumerate() {
-                for l in 0..d.n_layers {
-                    for k in 0..2 {
-                        let src = (l * 2 + k) * d.max_context * row;
-                        let dst = ((l * 2 + k) * bucket + b) * d.max_context * row;
-                        kv[dst..dst + d.max_context * row]
-                            .copy_from_slice(&s.kv[src..src + d.max_context * row]);
-                    }
-                }
-                lens[b] = (s.len + s.generated.len() - 1) as i32;
-                toks[b] = s.last_token;
-            }
-            let (next, kv_new) = self.rt.decode_step(bucket, &kv, &lens, &toks)?;
-            self.decode_steps += 1;
-            for (b, s) in slots.iter_mut().enumerate() {
-                for l in 0..d.n_layers {
-                    for k in 0..2 {
-                        let src = ((l * 2 + k) * bucket + b) * d.max_context * row;
-                        let dst = (l * 2 + k) * d.max_context * row;
-                        s.kv[dst..dst + d.max_context * row]
-                            .copy_from_slice(&kv_new[src..src + d.max_context * row]);
-                    }
-                }
-                s.last_token = next[b];
-                s.generated.push(next[b]);
+                self.retire(rt);
+                return Ok(true);
             }
         }
 
-        Ok(done)
+        if self.slots.is_empty() {
+            return Ok(!self.pending.is_empty());
+        }
+
+        // One decode step at the smallest bucket that fits.
+        self.epoch += 1;
+        let bucket = rt.bucket_for(self.slots.len())?;
+        let mut kv = vec![0f32; d.n_layers * 2 * bucket * d.max_context * row];
+        let mut lens = vec![0i32; bucket];
+        let mut toks = vec![0i32; bucket];
+        for (b, s) in self.slots.iter().enumerate() {
+            for l in 0..d.n_layers {
+                for k in 0..2 {
+                    let src = (l * 2 + k) * d.max_context * row;
+                    let dst = ((l * 2 + k) * bucket + b) * d.max_context * row;
+                    kv[dst..dst + d.max_context * row]
+                        .copy_from_slice(&s.kv[src..src + d.max_context * row]);
+                }
+            }
+            lens[b] = (s.len + s.generated.len() - 1) as i32;
+            toks[b] = s.last_token;
+        }
+        let (next, kv_new) = rt.decode_step(bucket, &kv, &lens, &toks)?;
+        self.decode_steps += 1;
+        for (b, s) in self.slots.iter_mut().enumerate() {
+            for l in 0..d.n_layers {
+                for k in 0..2 {
+                    let src = ((l * 2 + k) * bucket + b) * d.max_context * row;
+                    let dst = (l * 2 + k) * d.max_context * row;
+                    s.kv[dst..dst + d.max_context * row]
+                        .copy_from_slice(&kv_new[src..src + d.max_context * row]);
+                }
+            }
+            s.last_token = next[b];
+            s.generated.push(next[b]);
+        }
+        self.retire(rt);
+        Ok(true)
+    }
+
+    /// Export the engine state in the wire `status` schema, mapping the
+    /// dense per-slot KV cache onto the paged-block vocabulary the
+    /// schedulers speak: one "block" is `block_size` resident tokens, the
+    /// pool is `max_slots * max_context` tokens.
+    pub fn snapshot(&self, rt: &ModelRuntime, block_size: u32) -> InstanceStatus {
+        let d = rt.dims();
+        let max_slots = *rt.buckets().last().unwrap();
+        let bs = block_size.max(1);
+        let total_blocks =
+            ((max_slots * d.max_context) as u32).div_ceil(bs);
+        let mut used_blocks = 0u32;
+        let running: Vec<SeqSnapshot> = self
+            .slots
+            .iter()
+            .map(|s| {
+                let ctx = (s.len + s.generated.len()) as u32;
+                used_blocks += ctx.div_ceil(bs);
+                SeqSnapshot {
+                    id: s.id,
+                    prompt_tokens: s.len as u32,
+                    prefill_target: s.len as u32,
+                    prefill_done: s.len as u32,
+                    generated: s.generated.len() as u32,
+                    response_limit: s.max_new as u32,
+                    enqueued: s.enqueued_at,
+                    prefill_start: Some(s.prefill_at),
+                    first_token: Some(s.first_at),
+                    preemptions: 0,
+                }
+            })
+            .collect();
+        let waiting: Vec<SeqSnapshot> = self
+            .pending
+            .iter()
+            .map(|p| {
+                let plen = tokenizer::encode(&p.req.prompt)
+                    .len()
+                    .clamp(1, d.prefill_pad) as u32;
+                SeqSnapshot {
+                    id: p.req.id,
+                    prompt_tokens: plen,
+                    prefill_target: plen,
+                    prefill_done: 0,
+                    generated: 0,
+                    response_limit: p.req.max_new.max(1) as u32,
+                    enqueued: p.enqueued_at,
+                    prefill_start: None,
+                    first_token: None,
+                    preemptions: 0,
+                }
+            })
+            .collect();
+        InstanceStatus {
+            now: self.now(),
+            epoch: self.epoch,
+            free_blocks: total_blocks.saturating_sub(used_blocks),
+            total_blocks,
+            watermark_blocks: 0,
+            running,
+            waiting,
+            in_flight: None,
+            total_preemptions: 0,
+        }
+    }
+}
+
+impl Default for RealEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Batched greedy serving over the PJRT artifacts (closed-batch driver of
+/// [`RealEngine`]).
+pub struct RealServer<'a> {
+    rt: &'a ModelRuntime,
+    engine: RealEngine,
+}
+
+impl<'a> RealServer<'a> {
+    pub fn new(rt: &'a ModelRuntime) -> Self {
+        RealServer { rt, engine: RealEngine::new() }
+    }
+
+    pub fn decode_steps(&self) -> u64 {
+        self.engine.decode_steps
+    }
+
+    pub fn prefills(&self) -> u64 {
+        self.engine.prefills
+    }
+
+    /// Serve a closed batch of requests to completion (FCFS admission,
+    /// continuous batching).  Returns responses in completion order.
+    pub fn serve(&mut self, requests: &[ServingRequest]) -> Result<Vec<ServingResponse>> {
+        for req in requests {
+            self.engine.enqueue(req.clone());
+        }
+        while self.engine.busy() {
+            self.engine.step(self.rt)?;
+        }
+        Ok(self.engine.take_finished())
     }
 }

@@ -178,7 +178,13 @@ impl PredictorStats {
     }
 }
 
-pub trait GlobalScheduler {
+/// `Send` because front-ends move across threads in the real serving
+/// tier: an HTTP gateway (`server::gateway`) shares its [`FrontEnd`]s
+/// (and therefore their schedulers) between connection-handler threads
+/// behind a mutex.  Every implementation is plain data + atomics.
+///
+/// [`FrontEnd`]: crate::cluster::frontend::FrontEnd
+pub trait GlobalScheduler: Send {
     fn name(&self) -> &'static str;
     fn pick(&mut self, req: &Request, view: &ClusterView,
             cost: &dyn BatchCost) -> Decision;

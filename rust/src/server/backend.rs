@@ -1,0 +1,390 @@
+//! Backend-agnostic engine tier: one trait, two execution substrates.
+//!
+//! [`ServingBackend`] is what an instance daemon (`server::instance`)
+//! owns — a continuous-batching engine with an admission queue, driven
+//! over a *timebase* (virtual seconds for the sim-clock backend, wall
+//! seconds for the PJRT backend) and exported through the wire `status`
+//! API:
+//!
+//! * [`SimClockBackend`] — the deterministic offline substrate: the same
+//!   [`InstanceEngine`] + [`exec::BatchCost`](crate::exec::BatchCost)
+//!   state machine the cluster simulator drives, advanced to explicit
+//!   timestamps.  Seeded exactly like `ClusterSim`'s engine slot
+//!   ([`instance_noise_rng`]), a sim-clock daemon replayed over a fixed
+//!   arrival trace reproduces the simulator's engine evolution byte for
+//!   byte — the parity bar `tests/test_serving_stack.rs` pins.
+//! * [`PjrtBackend`] — real transformer compute through the AOT
+//!   artifacts ([`RealEngine`]), for deployments with `artifacts/`
+//!   present.  Same admission queue, same status export, wall clock.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::config::ClusterConfig;
+use crate::core::request::{Request, RequestId};
+use crate::engine::{InstanceEngine, InstanceStatus};
+use crate::exec::roofline::RooflineModel;
+use crate::runtime::serving::{RealEngine, ServingRequest};
+use crate::runtime::ModelRuntime;
+use crate::util::rng::Rng;
+
+/// A completed request as the engine tier reports it (instance-local
+/// timebase; the gateway joins it with its own dispatch metadata).
+#[derive(Debug, Clone)]
+pub struct BackendCompletion {
+    pub id: RequestId,
+    pub enqueued: f64,
+    pub prefill_start: f64,
+    pub first_token: f64,
+    pub finish: f64,
+    pub preemptions: u32,
+    pub prompt_tokens: u32,
+    /// Response tokens actually produced.
+    pub tokens: u32,
+    /// Generated text (PJRT backend only; the sim backend serves
+    /// length-faithful placeholders, not text).
+    pub text: Option<String>,
+}
+
+/// The engine substrate an instance daemon serves.
+///
+/// `now` arguments are in the backend's own timebase: the daemon maps
+/// wall time onto it in wall-clock mode, or forwards the explicit
+/// timestamps requests carry in virtual-clock mode (trace replay).
+pub trait ServingBackend {
+    fn name(&self) -> &'static str;
+
+    /// Current engine clock (timebase seconds).
+    fn clock(&self) -> f64;
+
+    /// Drive the engine forward to `now`: finish due steps, start
+    /// follow-ups, collect completions.
+    fn advance(&mut self, now: f64);
+
+    /// Admit a request at time `now` (advances to `now` first).
+    fn enqueue(&mut self, req: &Request, now: f64) -> Result<()>;
+
+    /// Run every admitted request to completion (trace-replay tail:
+    /// after the last arrival the remaining virtual work just plays out).
+    fn drain_to_idle(&mut self);
+
+    /// Export the wire `status` snapshot (state as of the last advance).
+    fn status(&self) -> InstanceStatus;
+
+    /// Drain completions accumulated since the last call.
+    fn take_finished(&mut self) -> Vec<BackendCompletion>;
+
+    /// Admitted or running work remains?
+    fn busy(&self) -> bool;
+}
+
+/// Execution-noise RNG of instance `index` in a cluster seeded with
+/// `seed` — reproduces the sequential fork stream `ClusterSim::new`
+/// draws for its engine slots (`Rng::fork` advances the parent, so slot
+/// `i`'s stream depends on the `i` forks before it).
+pub fn instance_noise_rng(seed: u64, index: usize) -> Rng {
+    let mut parent = Rng::new(seed);
+    let mut out = parent.fork(0);
+    for k in 1..=index as u64 {
+        out = parent.fork(k);
+    }
+    out
+}
+
+/// Deterministic sim-clock backend: [`InstanceEngine`] over a virtual
+/// clock, step durations from the roofline cost model.
+pub struct SimClockBackend {
+    engine: InstanceEngine,
+    cost: RooflineModel,
+    /// (prompt_tokens, response_tokens) of admitted requests, joined
+    /// back onto completions.
+    meta: HashMap<RequestId, (u32, u32)>,
+    finished: Vec<BackendCompletion>,
+}
+
+impl SimClockBackend {
+    /// Build the backend for slot `index` of the manifest's cluster —
+    /// identical engine config, KV pool, and noise stream to the
+    /// simulator's engine at the same slot.
+    pub fn new(cfg: &ClusterConfig, index: usize) -> Self {
+        let engine = InstanceEngine::new(cfg.engine.clone(), cfg.kv_blocks())
+            .with_noise(instance_noise_rng(cfg.seed, index), cfg.exec_noise);
+        SimClockBackend {
+            engine,
+            cost: RooflineModel::from_profiles(&cfg.gpu, &cfg.model),
+            meta: HashMap::new(),
+            finished: Vec::new(),
+        }
+    }
+
+    /// Start a step if the engine is idle and has work (the simulator's
+    /// `kick_engine`).
+    fn kick(&mut self) {
+        if self.engine.busy_until().is_none() {
+            self.engine.start_step(&self.cost);
+        }
+    }
+
+    fn collect_finished(&mut self) {
+        for f in self.engine.take_finished() {
+            let (prompt_tokens, tokens) =
+                self.meta.remove(&f.id).unwrap_or((0, 0));
+            self.finished.push(BackendCompletion {
+                id: f.id,
+                enqueued: f.enqueued,
+                prefill_start: f.prefill_start,
+                first_token: f.first_token,
+                finish: f.finish,
+                preemptions: f.preemptions,
+                prompt_tokens,
+                tokens,
+                text: None,
+            });
+        }
+    }
+}
+
+impl ServingBackend for SimClockBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn clock(&self) -> f64 {
+        self.engine.clock()
+    }
+
+    fn advance(&mut self, now: f64) {
+        // Finish every step due by `now`, immediately starting the next
+        // one at its completion instant — the same order the simulator's
+        // `StepDone` handler produces.
+        while let Some(done) = self.engine.busy_until() {
+            if done > now {
+                break;
+            }
+            self.engine.finish_step();
+            self.collect_finished();
+            self.kick();
+        }
+    }
+
+    fn enqueue(&mut self, req: &Request, now: f64) -> Result<()> {
+        self.advance(now);
+        self.meta.insert(req.id, (req.prompt_tokens, req.response_tokens));
+        self.engine.enqueue(req, now);
+        self.kick();
+        Ok(())
+    }
+
+    fn drain_to_idle(&mut self) {
+        self.kick();
+        while let Some(done) = self.engine.busy_until() {
+            self.advance(done);
+        }
+        self.collect_finished();
+    }
+
+    fn status(&self) -> InstanceStatus {
+        self.engine.snapshot()
+    }
+
+    fn take_finished(&mut self) -> Vec<BackendCompletion> {
+        std::mem::take(&mut self.finished)
+    }
+
+    fn busy(&self) -> bool {
+        !self.engine.is_idle()
+    }
+}
+
+/// Real-compute backend: the stepwise PJRT engine
+/// ([`RealEngine`]), pumped from the daemon's accept loop.  The `now`
+/// arguments are accepted for interface uniformity but execution runs at
+/// hardware speed on the wall clock.
+pub struct PjrtBackend {
+    rt: ModelRuntime,
+    engine: RealEngine,
+    block_size: u32,
+    finished: Vec<BackendCompletion>,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: &str, block_size: u32) -> Result<Self> {
+        Ok(PjrtBackend {
+            rt: ModelRuntime::load(artifacts_dir)?,
+            engine: RealEngine::new(),
+            block_size: block_size.max(1),
+            finished: Vec::new(),
+        })
+    }
+
+    fn collect_finished(&mut self) {
+        for r in self.engine.take_finished() {
+            self.finished.push(BackendCompletion {
+                id: r.id,
+                enqueued: r.enqueued_at,
+                prefill_start: r.prefill_at,
+                first_token: r.first_at,
+                finish: r.finished_at,
+                preemptions: 0,
+                prompt_tokens: r.prompt_tokens as u32,
+                tokens: r.tokens.len() as u32,
+                text: Some(r.text),
+            });
+        }
+    }
+}
+
+impl ServingBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn clock(&self) -> f64 {
+        self.engine.now()
+    }
+
+    fn advance(&mut self, _now: f64) {
+        // One engine step per pump call keeps the accept loop live
+        // between steps.
+        if self.engine.busy() {
+            if let Err(e) = self.engine.step(&self.rt) {
+                // A failing step would fail identically on every pump:
+                // drop the batch so the engine recovers (waiting
+                // gateways time out) instead of spinning on the error.
+                crate::log_warn!("pjrt step failed, aborting batch: {e}");
+                self.engine.abort_all();
+            }
+            self.collect_finished();
+        }
+    }
+
+    fn enqueue(&mut self, req: &Request, _now: f64) -> Result<()> {
+        let prompt = req.prompt.clone().unwrap_or_else(|| {
+            // Length-only request (trace replay): synthesize a prompt of
+            // the right token count for the byte-level tokenizer.
+            "x ".repeat(req.prompt_tokens.max(1) as usize)
+        });
+        self.engine.enqueue(ServingRequest {
+            id: req.id,
+            prompt,
+            max_new: req.response_tokens.max(1) as usize,
+        });
+        Ok(())
+    }
+
+    fn drain_to_idle(&mut self) {
+        while self.engine.busy() {
+            if self.engine.step(&self.rt).is_err() {
+                break;
+            }
+        }
+        self.collect_finished();
+    }
+
+    fn status(&self) -> InstanceStatus {
+        self.engine.snapshot(&self.rt, self.block_size)
+    }
+
+    fn take_finished(&mut self) -> Vec<BackendCompletion> {
+        std::mem::take(&mut self.finished)
+    }
+
+    fn busy(&self) -> bool {
+        self.engine.busy()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noise_rng_matches_cluster_fork_stream() {
+        // ClusterSim::new draws engine RNGs as sequential forks off one
+        // parent; the helper must reproduce slot i's stream exactly.
+        let seed = 42u64;
+        let mut parent = Rng::new(seed);
+        let direct: Vec<u64> = (0..5)
+            .map(|i| parent.fork(i as u64).next_u64())
+            .collect();
+        for (i, want) in direct.iter().enumerate() {
+            assert_eq!(instance_noise_rng(seed, i).next_u64(), *want, "{i}");
+        }
+    }
+
+    #[test]
+    fn sim_backend_matches_inline_engine_evolution() {
+        // Drive a sim backend and a hand-driven InstanceEngine through
+        // the same (enqueue, advance) schedule: identical completions.
+        let cfg = ClusterConfig { exec_noise: 0.0, ..ClusterConfig::default() };
+        let mut be = SimClockBackend::new(&cfg, 0);
+        let cost = RooflineModel::from_profiles(&cfg.gpu, &cfg.model);
+        let mut eng = InstanceEngine::new(cfg.engine.clone(), cfg.kv_blocks());
+
+        let reqs = [
+            Request::new(1, 0.0, 300, 40),
+            Request::new(2, 0.1, 200, 30),
+        ];
+        for r in &reqs {
+            be.enqueue(r, r.arrival).unwrap();
+        }
+        be.drain_to_idle();
+        let mut wire = be.take_finished();
+        wire.sort_by_key(|c| c.id);
+        assert!(!be.busy());
+
+        // Reference: same arrival schedule on a bare engine.
+        eng.enqueue(&reqs[0], 0.0);
+        if eng.busy_until().is_none() {
+            eng.start_step(&cost);
+        }
+        while let Some(done) = eng.busy_until() {
+            if done > 0.1 {
+                break;
+            }
+            eng.finish_step();
+            if eng.busy_until().is_none() {
+                eng.start_step(&cost);
+            }
+        }
+        eng.enqueue(&reqs[1], 0.1);
+        if eng.busy_until().is_none() {
+            eng.start_step(&cost);
+        }
+        let mut reference = Vec::new();
+        while eng.busy_until().is_some() {
+            eng.finish_step();
+            reference.extend(eng.take_finished());
+            if eng.busy_until().is_none() {
+                eng.start_step(&cost);
+            }
+        }
+        reference.sort_by_key(|f| f.id);
+
+        assert_eq!(wire.len(), reference.len());
+        for (w, r) in wire.iter().zip(&reference) {
+            assert_eq!(w.id, r.id);
+            assert_eq!(w.finish, r.finish, "virtual times must be identical");
+            assert_eq!(w.first_token, r.first_token);
+        }
+        assert_eq!(wire[0].prompt_tokens, 300);
+        assert_eq!(wire[0].tokens, 40);
+    }
+
+    #[test]
+    fn sim_backend_status_exports_full_schema() {
+        let cfg = ClusterConfig::default();
+        let mut be = SimClockBackend::new(&cfg, 0);
+        be.enqueue(&Request::new(7, 0.0, 400, 50), 0.0).unwrap();
+        let st = be.status();
+        assert!(st.in_flight.is_some(), "enqueue kicks a step");
+        assert_eq!(st.running.len() + st.waiting.len(), 1);
+        let text = st.to_json().to_string_compact();
+        let back = InstanceStatus::from_json(
+            &crate::util::json::Json::parse(&text).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back, st);
+    }
+}

@@ -1,0 +1,988 @@
+//! The scheduling gateway: Block's distributed stateless front-ends over
+//! HTTP.
+//!
+//! `block serve --role gateway` runs this — the wire deployment of the
+//! exact machinery the cluster simulator drives in-process:
+//!
+//! * N [`FrontEnd`]s from [`frontend::build_frontends`] (same
+//!   constructor, same per-front-end scheduler seeds), each owning its
+//!   own [`GlobalScheduler`](crate::scheduler::GlobalScheduler) policy,
+//!   its own in-transit set, and its own
+//!   [`StaleClusterView`](crate::cluster::frontend::StaleClusterView);
+//! * an [`ArrivalSharder`] splitting `POST /generate` arrivals across
+//!   the front-ends;
+//! * a periodic status-pull loop per deployment (the wire analogue of
+//!   the simulator's `ViewSync` events) refreshing every front-end's
+//!   view from the instances' `GET /status` endpoints, plus optional
+//!   ack-piggybacked refreshes (`sync_on_ack`) carried on the enqueue
+//!   acks;
+//! * graceful connection-refused handling: a dispatch that bounces off a
+//!   dead instance marks the slot inactive in the sender's view and
+//!   re-enters dispatch through the sharder's redirect rotation — the
+//!   same bounce → single-slot view update → redispatch path the fault
+//!   subsystem defined for the simulator.
+//!
+//! Two clock modes ([`ClockKind`]): **wall** serves live traffic
+//! (`/generate` blocks until the generation completes on its instance);
+//! **virtual** replays a trace deterministically — arrivals carry
+//! explicit timestamps, dispatch landings and view syncs are deferred on
+//! an internal event queue ordered exactly like the simulator's
+//! ([`cluster::events`](crate::cluster::events)), and
+//! `tests/test_serving_stack.rs` asserts the placements match
+//! `ClusterSim` byte for byte.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::cluster::frontend::{self, ArrivalSharder, FrontEnd};
+use crate::config::manifest::{ClockKind, ClusterManifest};
+use crate::config::ClusterConfig;
+use crate::core::request::{Request, RequestId, RequestMetrics};
+use crate::engine::InstanceStatus;
+use crate::exec::roofline::RooflineModel;
+use crate::metrics::MetricsCollector;
+use crate::server::backend::BackendCompletion;
+use crate::server::http::{self, HttpRequest};
+use crate::server::wire::{self, InstanceClient};
+use crate::tagger::{HistogramTagger, LengthTagger};
+use crate::util::json::{Json, JsonObj};
+use crate::workload::tokenizer;
+
+/// Gateway configuration (one slice of the cluster manifest).
+#[derive(Debug, Clone)]
+pub struct GatewayOptions {
+    pub cluster: ClusterConfig,
+    /// Instance daemon addresses, index-aligned with scheduler slots.
+    pub instances: Vec<String>,
+    pub clock: ClockKind,
+    pub time_scale: f64,
+}
+
+impl GatewayOptions {
+    pub fn from_manifest(m: &ClusterManifest) -> Self {
+        GatewayOptions {
+            cluster: m.cluster.clone(),
+            instances: m.instances.clone(),
+            clock: m.clock,
+            time_scale: m.time_scale,
+        }
+    }
+}
+
+/// Deferred wire events (virtual clock), ordered by (time, insertion
+/// seq) exactly like the simulator's event queue.
+enum PendKind {
+    /// A dispatch reaches its instance after decision overhead — the
+    /// wire `Dispatch` event.  `attempts` bounds the bounce→redispatch
+    /// cycle: a cluster where every landing keeps failing must converge
+    /// to a rejection, not respin forever.
+    Land { req: Request, instance: usize, frontend: usize, attempts: usize },
+    /// A front-end's periodic status pull — the wire `ViewSync` event.
+    Sync { frontend: usize },
+}
+
+struct Pending {
+    time: f64,
+    seq: u64,
+    kind: PendKind,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Pending {}
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap by (time, seq) over BinaryHeap's max order.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Outcome of one dispatch decision.
+struct Dispatched {
+    instance: usize,
+    /// Landing time (decision instant + charged overhead).
+    at: f64,
+    overhead: f64,
+    predicted: Option<f64>,
+}
+
+/// What the gateway remembers about an in-flight request (the
+/// simulator's `DispatchInfo`).
+struct DispatchMeta {
+    arrival: f64,
+    dispatched: f64,
+    overhead: f64,
+    frontend: usize,
+    predicted: Option<f64>,
+    prompt_tokens: u32,
+    response_tokens: u32,
+}
+
+/// A finished request, parked for its waiting `/generate` handler.
+struct DoneRec {
+    instance: usize,
+    frontend: usize,
+    ttft: f64,
+    e2e: f64,
+    tokens: u32,
+    text: Option<String>,
+}
+
+/// Mutable gateway state (one mutex: dispatch decisions are inherently
+/// serialized — that is what a dispatcher is).
+struct Core {
+    frontends: Vec<FrontEnd>,
+    sharder: ArrivalSharder,
+    pending: BinaryHeap<Pending>,
+    pend_seq: u64,
+    in_flight: HashMap<RequestId, DispatchMeta>,
+    metrics: MetricsCollector,
+    /// Requests served per instance (dispatch-split telemetry).
+    served_by: Vec<u64>,
+    /// Dispatches that bounced off an unreachable instance.
+    bounced: u64,
+    /// Arrivals with no reachable instance/front-end (503s).
+    rejected: u64,
+    /// Model-free length estimator behind `/predict`, fed by completions.
+    tagger: HistogramTagger,
+    next_id: u64,
+    synced_once: bool,
+}
+
+/// The gateway service.
+pub struct Gateway {
+    opts: GatewayOptions,
+    cost: RooflineModel,
+    clients: Vec<InstanceClient>,
+    /// Which view sides the scheduler family reads (mirrors the
+    /// simulator's want_statuses/want_loads split).
+    want_statuses: bool,
+    want_loads: bool,
+    /// Bounded-staleness deployment (`sync_interval > 0`); otherwise
+    /// views are pulled fresh per arrival.
+    stale: bool,
+    core: Mutex<Core>,
+    done: Mutex<HashMap<RequestId, DoneRec>>,
+    done_cv: Condvar,
+    shutdown: AtomicBool,
+    t0: Instant,
+}
+
+/// Parsed `/generate` body.
+struct GenReq {
+    id: Option<RequestId>,
+    prompt: Option<String>,
+    prompt_tokens: Option<u32>,
+    response_tokens: Option<u32>,
+    predicted_tokens: Option<u32>,
+    now: Option<f64>,
+}
+
+fn parse_generate(j: &Json) -> Result<GenReq> {
+    let opt_u32 = |key: &str| -> Result<Option<u32>> {
+        match j.opt(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.as_usize()? as u32)),
+        }
+    };
+    Ok(GenReq {
+        id: match j.opt("id") {
+            None => None,
+            Some(v) => Some(v.as_usize()? as RequestId),
+        },
+        prompt: match j.opt("prompt") {
+            None => None,
+            Some(v) => Some(v.as_str()?.to_string()),
+        },
+        prompt_tokens: opt_u32("prompt_tokens")?,
+        response_tokens: match opt_u32("response_tokens")? {
+            Some(v) => Some(v),
+            None => opt_u32("max_new")?,
+        },
+        predicted_tokens: opt_u32("predicted_tokens")?,
+        now: match j.opt("now") {
+            None => None,
+            Some(v) => Some(v.as_f64()?),
+        },
+    })
+}
+
+impl Gateway {
+    pub fn new(opts: GatewayOptions) -> Self {
+        let total = opts.instances.len();
+        let predictive = opts.cluster.scheduler.is_predictive();
+        let core = Core {
+            frontends: frontend::build_frontends(&opts.cluster, total, false),
+            sharder: frontend::build_sharder(&opts.cluster,
+                                             opts.cluster.frontends.max(1)),
+            pending: BinaryHeap::new(),
+            pend_seq: 0,
+            in_flight: HashMap::new(),
+            metrics: MetricsCollector::new(),
+            served_by: vec![0; total],
+            bounced: 0,
+            rejected: 0,
+            tagger: HistogramTagger::new(0.5, 64),
+            next_id: 0,
+            synced_once: false,
+        };
+        Gateway {
+            cost: RooflineModel::from_profiles(&opts.cluster.gpu,
+                                               &opts.cluster.model),
+            clients: opts
+                .instances
+                .iter()
+                .map(|a| InstanceClient::new(a.as_str()))
+                .collect(),
+            want_statuses: predictive,
+            want_loads: !predictive,
+            stale: opts.cluster.sync_interval > 0.0,
+            core: Mutex::new(core),
+            done: Mutex::new(HashMap::new()),
+            done_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            t0: Instant::now(),
+            opts,
+        }
+    }
+
+    fn virtual_clock(&self) -> bool {
+        matches!(self.opts.clock, ClockKind::Virtual)
+    }
+
+    fn now_wall(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64() * self.opts.time_scale
+    }
+
+    fn pull_instant(&self, t: f64) -> Option<f64> {
+        if self.virtual_clock() {
+            Some(t)
+        } else {
+            None
+        }
+    }
+
+    fn fetch_statuses(&self, now: Option<f64>) -> Vec<Option<InstanceStatus>> {
+        self.clients.iter().map(|c| c.status(now).ok()).collect()
+    }
+
+    fn push_pending(&self, core: &mut Core, time: f64, kind: PendKind) {
+        core.pend_seq += 1;
+        core.pending.push(Pending { time, seq: core.pend_seq, kind });
+    }
+
+    /// First contact with the instance tier: seed every front-end's view
+    /// (the simulator's t=0 sync) and arm the periodic pulls.  Retried
+    /// until at least one instance answers, so a gateway may come up
+    /// before its instances.
+    fn ensure_initial_sync(&self, core: &mut Core) {
+        if core.synced_once {
+            return;
+        }
+        let now = if self.virtual_clock() { 0.0 } else { self.now_wall() };
+        let statuses = self.fetch_statuses(self.pull_instant(now));
+        if statuses.iter().all(Option::is_none) {
+            return; // nobody up yet — next arrival retries
+        }
+        if self.stale {
+            let n = core.frontends.len();
+            for f in 0..n {
+                core.frontends[f].view.sync_from_statuses(
+                    statuses.clone(), now, self.want_statuses,
+                    self.want_loads);
+                core.frontends[f].clear_echo_all();
+            }
+            if self.virtual_clock() {
+                for f in 0..n {
+                    self.push_pending(
+                        core,
+                        now + self.opts.cluster.sync_interval,
+                        PendKind::Sync { frontend: f },
+                    );
+                }
+            }
+        }
+        core.synced_once = true;
+    }
+
+    /// Virtual clock: fire every deferred event strictly before `before`
+    /// (`None` = everything — the flush path, where syncs stop
+    /// re-arming because the trace is over).  Strict `<` matches the
+    /// simulator's tie-break: arrivals are pushed before wire events, so
+    /// an arrival wins a timestamp tie.
+    fn process_pending(&self, core: &mut Core, before: Option<f64>) {
+        loop {
+            match core.pending.peek() {
+                Some(p) if before.map_or(true, |b| p.time < b) => {}
+                _ => break,
+            }
+            let p = core.pending.pop().unwrap();
+            match p.kind {
+                PendKind::Sync { frontend } => {
+                    self.do_sync(core, frontend, p.time, before.is_some());
+                }
+                PendKind::Land { req, instance, frontend, attempts } => {
+                    self.do_land(core, req, instance, frontend, p.time,
+                                 attempts);
+                }
+            }
+        }
+    }
+
+    /// One periodic view pull (virtual clock): capture every instance at
+    /// exactly `v`, collect completions finalized by then, refresh the
+    /// front-end's view, re-arm.
+    fn do_sync(&self, core: &mut Core, f: usize, v: f64, rearm: bool) {
+        let statuses = self.fetch_statuses(Some(v));
+        for i in 0..self.clients.len() {
+            if let Ok(list) = self.clients[i].drain(false) {
+                for c in list {
+                    self.record_completion(core, i, c);
+                }
+            }
+        }
+        let fe = &mut core.frontends[f];
+        fe.view.sync_from_statuses(statuses, v, self.want_statuses,
+                                   self.want_loads);
+        fe.clear_echo_all();
+        if rearm && self.stale {
+            self.push_pending(core, v + self.opts.cluster.sync_interval,
+                              PendKind::Sync { frontend: f });
+        }
+    }
+
+    /// A deferred dispatch lands (virtual clock).  Connection refused is
+    /// the wire bounce: single-slot view update for the sender, then
+    /// redispatch through the survivor rotation.  An HTTP-level refusal
+    /// (the instance is up but rejected the request) drops the request
+    /// without declaring the host dead.
+    fn do_land(&self, core: &mut Core, req: Request, instance: usize,
+               f: usize, t: f64, attempts: usize) {
+        let ack_wanted = self.stale && self.opts.cluster.sync_on_ack;
+        match self.clients[instance].enqueue(&req, t, ack_wanted) {
+            Ok(wire::EnqueueOutcome::Landed(ack)) => {
+                let fe = &mut core.frontends[f];
+                fe.dispatch_landed(instance, &req, true);
+                if let Some(st) = ack {
+                    if fe.alive {
+                        fe.view.install_instance(instance, Some(st), t);
+                        fe.clear_echo(instance);
+                    }
+                }
+            }
+            Ok(wire::EnqueueOutcome::Rejected(status, body)) => {
+                crate::log_warn!(
+                    "instance {instance} rejected request {}: HTTP \
+                     {status}: {body}", req.id);
+                core.frontends[f].dispatch_landed(instance, &req, false);
+                core.in_flight.remove(&req.id);
+                core.rejected += 1;
+            }
+            Err(_) => {
+                core.bounced += 1;
+                let fe = &mut core.frontends[f];
+                fe.dispatch_landed(instance, &req, false);
+                fe.view.install_instance(instance, None, t);
+                fe.clear_echo(instance);
+                core.in_flight.remove(&req.id);
+                self.redispatch(core, req, t, attempts);
+            }
+        }
+    }
+
+    /// Re-decide a bounced request from a survivor front-end's current
+    /// view (a brand-new decision, like the simulator's `Redispatch`).
+    /// `attempts` counts down to a rejection so a fully-dead cluster
+    /// cannot respin the bounce cycle forever.
+    fn redispatch(&self, core: &mut Core, req: Request, t: f64,
+                  attempts: usize) {
+        if attempts == 0 {
+            core.rejected += 1;
+            return;
+        }
+        if let Some(f2) = core.sharder.next_alive() {
+            if !self.stale {
+                // Fresh-view deployment: this front-end's view may
+                // never have synced — pull the live state (a dead
+                // instance's failed fetch marks its slot inactive).
+                let statuses = self.fetch_statuses(Some(t));
+                core.frontends[f2].view.sync_from_statuses(
+                    statuses, t, self.want_statuses, self.want_loads);
+                core.frontends[f2].clear_echo_all();
+            }
+            if core.frontends[f2].view.active_count() > 0 {
+                let d = self.decide(core, f2, &req, t);
+                self.push_pending(core, d.at, PendKind::Land {
+                    req,
+                    instance: d.instance,
+                    frontend: f2,
+                    attempts: attempts - 1,
+                });
+                return;
+            }
+        }
+        core.rejected += 1;
+    }
+
+    /// One dispatch decision through front-end `f` at time `now`:
+    /// pick, charge overhead (+ack cost over stale views), record the
+    /// in-transit entry and dispatch metadata.
+    fn decide(&self, core: &mut Core, f: usize, req: &Request, now: f64)
+              -> Dispatched {
+        let decision =
+            core.frontends[f].pick(req, now, None, &self.cost);
+        let mut overhead = decision.overhead;
+        if self.stale && self.opts.cluster.sync_on_ack {
+            overhead += self.opts.cluster.overhead.sync_ack_cost;
+        }
+        let dispatched = now + overhead;
+        core.frontends[f].in_transit[decision.instance]
+            .push(req.decision_copy());
+        core.in_flight.insert(req.id, DispatchMeta {
+            arrival: req.arrival,
+            dispatched,
+            overhead,
+            frontend: f,
+            predicted: decision.predicted_e2e,
+            prompt_tokens: req.prompt_tokens,
+            response_tokens: req.response_tokens,
+        });
+        Dispatched {
+            instance: decision.instance,
+            at: dispatched,
+            overhead,
+            predicted: decision.predicted_e2e,
+        }
+    }
+
+    /// Join a completion with its dispatch metadata into the run record,
+    /// feed the tagger and the waiting handler.
+    fn record_completion(&self, core: &mut Core, instance: usize,
+                         c: BackendCompletion) {
+        let Some(meta) = core.in_flight.remove(&c.id) else {
+            return; // not ours (e.g. replayed drain)
+        };
+        // Virtual clock: instance timestamps are already in the shared
+        // virtual timebase.  Wall clock: instances run their own t0, so
+        // rebase the (timebase-free) durations onto the gateway's
+        // dispatch instant.
+        let (prefill_start, first_token, finish) = if self.virtual_clock() {
+            (c.prefill_start, c.first_token, c.finish)
+        } else {
+            let base = meta.dispatched;
+            (
+                base + (c.prefill_start - c.enqueued),
+                base + (c.first_token - c.enqueued),
+                base + (c.finish - c.enqueued),
+            )
+        };
+        let m = RequestMetrics {
+            id: c.id,
+            instance,
+            prompt_tokens: meta.prompt_tokens,
+            response_tokens: meta.response_tokens,
+            arrival: meta.arrival,
+            dispatched: meta.dispatched,
+            prefill_start,
+            first_token,
+            finish,
+            preemptions: c.preemptions,
+            predicted_latency: meta.predicted,
+            sched_overhead: meta.overhead,
+        };
+        core.served_by[instance] += 1;
+        if core.frontends[meta.frontend].alive {
+            core.frontends[meta.frontend]
+                .on_finish(c.id, meta.response_tokens);
+        }
+        core.tagger.observe(c.tokens.max(1));
+        // Only wall-mode /generate handlers wait on completions; a
+        // virtual-clock trace driver reads /records instead, and
+        // parking DoneRecs nobody will drain would grow without bound
+        // over a long replay.
+        if !self.virtual_clock() {
+            let rec = DoneRec {
+                instance,
+                frontend: meta.frontend,
+                ttft: m.ttft(),
+                e2e: m.e2e(),
+                tokens: c.tokens,
+                text: c.text,
+            };
+            let mut done = self.done.lock().unwrap();
+            done.insert(c.id, rec);
+            self.done_cv.notify_all();
+        }
+        core.metrics.push(m);
+    }
+
+    /// Build the `Request` a `/generate` body describes.
+    fn build_request(&self, core: &mut Core, g: &GenReq, now: f64) -> Request {
+        let id = g.id.unwrap_or_else(|| {
+            core.next_id += 1;
+            core.next_id
+        });
+        let prompt_tokens = g.prompt_tokens.unwrap_or_else(|| {
+            g.prompt
+                .as_ref()
+                .map(|p| tokenizer::encode(p).len().max(1) as u32)
+                .unwrap_or(32)
+        });
+        let response_tokens =
+            g.response_tokens.unwrap_or(32).clamp(1, 1024);
+        let mut req = Request::new(id, now, prompt_tokens, response_tokens);
+        req.predicted_tokens = g.predicted_tokens;
+        req.prompt = g.prompt.clone();
+        req
+    }
+
+    // ---- /generate ---------------------------------------------------------
+
+    /// Virtual clock: make the dispatch decision and defer the landing;
+    /// the trace driver collects completions via `/flush` + `/records`.
+    fn generate_virtual(&self, g: &GenReq) -> (u16, Json) {
+        let mut core = self.core.lock().unwrap();
+        let core = &mut *core;
+        self.ensure_initial_sync(core);
+        if !core.synced_once {
+            core.rejected += 1;
+            return (503, http::error_body("no reachable instance"));
+        }
+        let now = g.now.unwrap_or(0.0);
+        if !now.is_finite() || now < 0.0 {
+            return (400, http::error_body("bad 'now'"));
+        }
+        let req = self.build_request(core, g, now);
+        self.process_pending(core, Some(now));
+        let f0 = core.sharder.assign(&req);
+        let Some(f) = core.sharder.resolve(f0) else {
+            core.rejected += 1;
+            return (503, http::error_body("no live front-end"));
+        };
+        if !self.stale {
+            // Fresh-view deployment: pull the cluster state at the
+            // arrival instant into the handling front-end (the wire form
+            // of the simulator's per-arrival cloned view).
+            let statuses = self.fetch_statuses(Some(now));
+            core.frontends[f].view.sync_from_statuses(
+                statuses, now, self.want_statuses, self.want_loads);
+            core.frontends[f].clear_echo_all();
+        }
+        if core.frontends[f].view.active_count() == 0 {
+            core.rejected += 1;
+            return (503, http::error_body("no active instance in view"));
+        }
+        let id = req.id;
+        let d = self.decide(core, f, &req, now);
+        let attempts = self.clients.len();
+        self.push_pending(core, d.at, PendKind::Land {
+            req,
+            instance: d.instance,
+            frontend: f,
+            attempts,
+        });
+        let mut o = JsonObj::new();
+        o.insert("id", id);
+        o.insert("instance", d.instance);
+        o.insert("frontend", f);
+        o.insert("dispatched", d.at);
+        o.insert("overhead", d.overhead);
+        match d.predicted {
+            Some(p) if p.is_finite() => o.insert("predicted_e2e", p),
+            _ => {}
+        }
+        (200, Json::Obj(o))
+    }
+
+    /// Wall clock: dispatch, forward, and block until the generation
+    /// completes (bouncing off dead instances along the way).
+    fn generate_wall(&self, g: &GenReq) -> (u16, Json) {
+        let now = self.now_wall();
+        let ack_wanted = self.stale && self.opts.cluster.sync_on_ack;
+        let (req, mut f) = {
+            let mut core = self.core.lock().unwrap();
+            let core = &mut *core;
+            self.ensure_initial_sync(core);
+            if !core.synced_once {
+                core.rejected += 1;
+                return (503, http::error_body("no reachable instance"));
+            }
+            let req = self.build_request(core, g, now);
+            let f0 = core.sharder.assign(&req);
+            match core.sharder.resolve(f0) {
+                Some(f) => (req, f),
+                None => {
+                    core.rejected += 1;
+                    return (503, http::error_body("no live front-end"));
+                }
+            }
+        };
+        // Dispatch with bounce-and-redirect: each attempt is a fresh
+        // decision from the (updated) view.
+        for _attempt in 0..=self.clients.len() {
+            let picked = {
+                let mut core = self.core.lock().unwrap();
+                let core = &mut *core;
+                if !self.stale {
+                    let statuses = self.fetch_statuses(None);
+                    core.frontends[f].view.sync_from_statuses(
+                        statuses, now, self.want_statuses, self.want_loads);
+                    core.frontends[f].clear_echo_all();
+                }
+                if core.frontends[f].view.active_count() == 0 {
+                    None
+                } else {
+                    Some(self.decide(core, f, &req, now))
+                }
+            };
+            let Some(d) = picked else {
+                let mut core = self.core.lock().unwrap();
+                core.rejected += 1;
+                return (503, http::error_body("no active instance in view"));
+            };
+            let instance = d.instance;
+            match self.clients[instance].enqueue(&req, d.at, ack_wanted) {
+                Ok(wire::EnqueueOutcome::Landed(ack)) => {
+                    {
+                        let mut core = self.core.lock().unwrap();
+                        let fe = &mut core.frontends[f];
+                        fe.dispatch_landed(instance, &req, true);
+                        if let Some(st) = ack {
+                            fe.view.install_instance(instance, Some(st), now);
+                            fe.clear_echo(instance);
+                        }
+                    }
+                    return self.wait_done(req.id);
+                }
+                Ok(wire::EnqueueOutcome::Rejected(status, body)) => {
+                    // The host is alive but refused this request — a
+                    // client/driver error, not an instance death.
+                    let mut core = self.core.lock().unwrap();
+                    let core = &mut *core;
+                    core.frontends[f].dispatch_landed(instance, &req, false);
+                    core.in_flight.remove(&req.id);
+                    core.rejected += 1;
+                    return (502,
+                            http::error_body(&format!(
+                                "instance refused: HTTP {status}: {body}")));
+                }
+                Err(_) => {
+                    let mut core = self.core.lock().unwrap();
+                    let core = &mut *core;
+                    core.bounced += 1;
+                    core.frontends[f].dispatch_landed(instance, &req, false);
+                    core.frontends[f]
+                        .view
+                        .install_instance(instance, None, now);
+                    core.frontends[f].clear_echo(instance);
+                    core.in_flight.remove(&req.id);
+                    match core.sharder.next_alive() {
+                        Some(f2) => f = f2,
+                        None => {
+                            core.rejected += 1;
+                            return (503, http::error_body("no live front-end"));
+                        }
+                    }
+                }
+            }
+        }
+        let mut core = self.core.lock().unwrap();
+        core.rejected += 1;
+        (503, http::error_body("dispatch kept bouncing"))
+    }
+
+    /// Park until the completion poller delivers `id` (wall mode).  The
+    /// deadline sits under the HTTP client's 60 s read timeout so a
+    /// stuck generation surfaces as a proper 504, not a client error.
+    fn wait_done(&self, id: RequestId) -> (u16, Json) {
+        let deadline = Instant::now() + Duration::from_secs(50);
+        let mut done = self.done.lock().unwrap();
+        loop {
+            if let Some(rec) = done.remove(&id) {
+                let mut o = JsonObj::new();
+                o.insert("id", id);
+                o.insert("instance", rec.instance);
+                o.insert("frontend", rec.frontend);
+                o.insert("tokens", rec.tokens as u64);
+                o.insert("ttft", rec.ttft);
+                o.insert("e2e", rec.e2e);
+                if let Some(t) = rec.text {
+                    o.insert("text", t);
+                }
+                return (200, Json::Obj(o));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return (504, http::error_body("generation timed out"));
+            }
+            let (d, _) = self
+                .done_cv
+                .wait_timeout(done, deadline - now)
+                .unwrap();
+            done = d;
+        }
+    }
+
+    // ---- auxiliary endpoints ----------------------------------------------
+
+    /// Drain the trace tail: fire every deferred event, run the
+    /// instances to quiescence, collect all completions.
+    fn flush(&self) -> (u16, Json) {
+        let mut core = self.core.lock().unwrap();
+        let core = &mut *core;
+        if self.virtual_clock() {
+            self.process_pending(core, None);
+            for i in 0..self.clients.len() {
+                if let Ok(list) = self.clients[i].drain(true) {
+                    for c in list {
+                        self.record_completion(core, i, c);
+                    }
+                }
+            }
+        } else {
+            for i in 0..self.clients.len() {
+                if let Ok(list) = self.clients[i].drain(false) {
+                    for c in list {
+                        self.record_completion(core, i, c);
+                    }
+                }
+            }
+        }
+        let mut o = JsonObj::new();
+        o.insert("ok", true);
+        o.insert("completed", core.metrics.len());
+        o.insert("in_flight", core.in_flight.len());
+        (200, Json::Obj(o))
+    }
+
+    /// Gateway telemetry in the `SimResult` vocabulary: per-front-end
+    /// dispatch counters, per-instance split, bounce/reject counts, and
+    /// the completed-request latency summary.
+    fn status_body(&self) -> Json {
+        let core = self.core.lock().unwrap();
+        let mut o = JsonObj::new();
+        o.insert("role", "gateway");
+        o.insert("ok", true);
+        o.insert("scheduler", self.opts.cluster.scheduler.name());
+        o.insert("clock", self.opts.clock.name());
+        o.insert("frontends", core.frontends.len());
+        o.insert("sync_interval", self.opts.cluster.sync_interval);
+        o.insert("shard_policy", self.opts.cluster.shard_policy.name());
+        o.insert(
+            "frontend_dispatches",
+            Json::Arr(core.frontends.iter()
+                          .map(|fe| fe.dispatched.into()).collect()),
+        );
+        o.insert(
+            "instance_dispatches",
+            Json::Arr(core.served_by.iter().map(|&n| n.into()).collect()),
+        );
+        o.insert("bounced", core.bounced);
+        o.insert("rejected", core.rejected);
+        o.insert("in_flight", core.in_flight.len());
+        o.insert("completed", core.metrics.len());
+        if !core.metrics.is_empty() {
+            o.insert("summary", core.metrics.summary().to_json());
+        }
+        Json::Obj(o)
+    }
+
+    /// Per-request placement/timing records (trace-replay telemetry; the
+    /// parity tests diff this against `SimResult`).
+    fn records_body(&self) -> Json {
+        let core = self.core.lock().unwrap();
+        Json::Arr(
+            core.metrics
+                .records
+                .iter()
+                .map(|m| {
+                    let mut o = JsonObj::new();
+                    o.insert("id", m.id);
+                    o.insert("instance", m.instance);
+                    o.insert("arrival", m.arrival);
+                    o.insert("dispatched", m.dispatched);
+                    o.insert("first_token", m.first_token);
+                    o.insert("finish", m.finish);
+                    Json::Obj(o)
+                })
+                .collect(),
+        )
+    }
+
+    fn predict_body(&self, j: &Json) -> (u16, Json) {
+        let Some(prompt) = j.opt("prompt").and_then(|p| p.as_str().ok())
+        else {
+            return (400, http::error_body("missing 'prompt'"));
+        };
+        let prompt_tokens = tokenizer::encode(prompt).len().max(1) as u32;
+        let mut core = self.core.lock().unwrap();
+        let probe = Request::new(0, 0.0, prompt_tokens, 1);
+        let predicted = core.tagger.tag(&probe);
+        let mut o = JsonObj::new();
+        o.insert("predicted_tokens", predicted as u64);
+        o.insert("tagger", core.tagger.name());
+        (200, Json::Obj(o))
+    }
+
+    /// Route one request.  Returns (status, body, shutdown).
+    fn route(&self, req: &HttpRequest) -> (u16, Json, bool) {
+        let (path, _params) = wire::split_query(&req.path);
+        match (req.method.as_str(), path) {
+            ("GET", "/health") => {
+                let mut o = JsonObj::new();
+                o.insert("ok", true);
+                o.insert("role", "gateway");
+                o.insert("instances", self.clients.len());
+                o.insert("clock", self.opts.clock.name());
+                (200, Json::Obj(o), false)
+            }
+            ("GET", "/status") => (200, self.status_body(), false),
+            ("GET", "/records") => (200, self.records_body(), false),
+            ("POST", "/generate") => {
+                let g = match Json::parse(&req.body)
+                    .map_err(anyhow::Error::from)
+                    .and_then(|j| parse_generate(&j))
+                {
+                    Ok(g) => g,
+                    Err(e) => return (400, http::error_body(&e.to_string()), false),
+                };
+                let (status, body) = if self.virtual_clock() {
+                    self.generate_virtual(&g)
+                } else {
+                    self.generate_wall(&g)
+                };
+                (status, body, false)
+            }
+            ("POST", "/predict") => {
+                let j = match Json::parse(&req.body) {
+                    Ok(j) => j,
+                    Err(e) => return (400, http::error_body(&e.to_string()), false),
+                };
+                let (status, body) = self.predict_body(&j);
+                (status, body, false)
+            }
+            ("POST", "/flush") => {
+                let (status, body) = self.flush();
+                (status, body, false)
+            }
+            ("POST", "/shutdown") => {
+                self.shutdown.store(true, AtomicOrdering::SeqCst);
+                let mut o = JsonObj::new();
+                o.insert("ok", true);
+                (200, Json::Obj(o), true)
+            }
+            (
+                _,
+                "/health" | "/status" | "/records" | "/generate"
+                | "/predict" | "/flush" | "/shutdown",
+            ) => (405, http::error_body("method not allowed"), false),
+            _ => (404, http::error_body("not found"), false),
+        }
+    }
+}
+
+fn handle_conn(gw: &Gateway, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(5000)));
+    match http::read_request(&mut stream) {
+        Ok(req) => {
+            let (status, body, _) = gw.route(&req);
+            http::write_json(&mut stream, status, &body);
+        }
+        Err(e) => {
+            http::write_json(&mut stream, 400, &http::error_body(&e.to_string()));
+        }
+    }
+}
+
+/// Wall-clock background loops: the periodic view pull (the wire
+/// `ViewSync`) and the completion poller feeding `/generate` waiters.
+fn spawn_wall_threads(gw: &Arc<Gateway>) {
+    if gw.stale {
+        let g = Arc::clone(gw);
+        std::thread::spawn(move || {
+            let interval = Duration::from_secs_f64(
+                (g.opts.cluster.sync_interval / g.opts.time_scale)
+                    .max(0.01),
+            );
+            while !g.shutdown.load(AtomicOrdering::SeqCst) {
+                std::thread::sleep(interval);
+                let statuses = g.fetch_statuses(None);
+                let now = g.now_wall();
+                let mut core = g.core.lock().unwrap();
+                if !core.synced_once {
+                    continue;
+                }
+                for f in 0..core.frontends.len() {
+                    core.frontends[f].view.sync_from_statuses(
+                        statuses.clone(), now, g.want_statuses,
+                        g.want_loads);
+                    core.frontends[f].clear_echo_all();
+                }
+            }
+        });
+    }
+    let g = Arc::clone(gw);
+    std::thread::spawn(move || {
+        while !g.shutdown.load(AtomicOrdering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(10));
+            for i in 0..g.clients.len() {
+                let Ok(list) = g.clients[i].drain(false) else {
+                    continue;
+                };
+                if list.is_empty() {
+                    continue;
+                }
+                let mut core = g.core.lock().unwrap();
+                for c in list {
+                    g.record_completion(&mut core, i, c);
+                }
+            }
+        }
+    });
+}
+
+/// Serve a gateway on a pre-bound listener until `/shutdown`.
+pub fn serve_gateway(listener: TcpListener, opts: GatewayOptions)
+                     -> Result<()> {
+    let gw = Arc::new(Gateway::new(opts));
+    if !gw.virtual_clock() {
+        spawn_wall_threads(&gw);
+    }
+    listener.set_nonblocking(true)?;
+    crate::log_info!("gateway ({} front-ends, {} instances) listening on {}",
+                     gw.opts.cluster.frontends.max(1), gw.clients.len(),
+                     listener.local_addr()?);
+    loop {
+        if gw.shutdown.load(AtomicOrdering::SeqCst) {
+            return Ok(());
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let g = Arc::clone(&gw);
+                std::thread::spawn(move || handle_conn(&g, stream));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}

@@ -5,6 +5,53 @@ use std::net::TcpStream;
 
 use anyhow::{bail, Context, Result};
 
+use crate::util::json::Json;
+
+/// Largest accepted request body (prompts are small; anything bigger is
+/// a client bug or abuse).
+pub const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Error",
+    }
+}
+
+/// The wire error-body shape every component answers with.
+pub fn error_body(msg: &str) -> Json {
+    let mut o = crate::util::json::JsonObj::new();
+    o.insert("error", msg);
+    Json::Obj(o)
+}
+
+/// Serialize a JSON response (the one response shape every component
+/// speaks).
+pub fn response_bytes(status: u16, body: &Json) -> Vec<u8> {
+    let text = body.to_string_compact();
+    format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        status,
+        reason(status),
+        text.len(),
+        text
+    )
+    .into_bytes()
+}
+
+/// Write a JSON response to a stream.  Returns whether the full response
+/// reached the socket (callers that count completed exchanges check it).
+pub fn write_json(stream: &mut TcpStream, status: u16, body: &Json) -> bool {
+    stream.write_all(&response_bytes(status, body)).is_ok()
+}
+
 #[derive(Debug, Clone)]
 pub struct HttpRequest {
     pub method: String,
@@ -22,20 +69,33 @@ impl HttpRequest {
     }
 }
 
-/// Parse one request from a stream (request line, headers,
-/// Content-Length-delimited body).
-pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+/// Parse one request from any byte stream (request line, headers,
+/// Content-Length-delimited body).  Generic over `Read` so tests can
+/// drive it with in-memory cursors and chunked readers; the server
+/// passes `&mut TcpStream`.
+///
+/// Strictness rules (each violation is an error the accept loop answers
+/// with a 400, *not* a silently-defaulted request):
+///
+/// * the request line must carry a method and a path;
+/// * a present `Content-Length` must parse as an integer;
+/// * bodies over [`MAX_BODY_BYTES`] are rejected before allocation;
+/// * a missing `Content-Length` means an empty body (GET et al.).
+pub fn read_request<R: Read>(stream: R) -> Result<HttpRequest> {
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     reader.read_line(&mut line).context("request line")?;
     let mut parts = line.split_whitespace();
-    let method = parts.next().context("method")?.to_string();
-    let path = parts.next().context("path")?.to_string();
+    let method = parts.next().context("missing method")?.to_string();
+    let path = parts.next().context("missing path")?.to_string();
 
     let mut headers = Vec::new();
     loop {
         let mut h = String::new();
-        reader.read_line(&mut h).context("header")?;
+        let n = reader.read_line(&mut h).context("header")?;
+        if n == 0 {
+            bail!("connection closed inside headers");
+        }
         let h = h.trim_end();
         if h.is_empty() {
             break;
@@ -44,13 +104,17 @@ pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
             headers.push((k.trim().to_string(), v.trim().to_string()));
         }
     }
-    let len: usize = headers
+    let len: usize = match headers
         .iter()
         .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
-        .and_then(|(_, v)| v.parse().ok())
-        .unwrap_or(0);
-    if len > 16 * 1024 * 1024 {
-        bail!("body too large");
+    {
+        None => 0,
+        Some((_, v)) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad content-length '{v}'"))?,
+    };
+    if len > MAX_BODY_BYTES {
+        bail!("body too large ({len} bytes)");
     }
     let mut body = vec![0u8; len];
     reader.read_exact(&mut body).context("body")?;
@@ -62,10 +126,15 @@ pub fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
     })
 }
 
-/// Blocking JSON-over-HTTP client call (used by tests and examples).
+/// Blocking JSON-over-HTTP client call (used by the gateway's instance
+/// clients, tests, and examples).  Read/write timeouts bound the call:
+/// a wedged peer must fail the request, not hang the caller — the
+/// gateway sometimes issues these while holding its dispatch lock.
 pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>)
                -> Result<(u16, String)> {
     let mut stream = TcpStream::connect(addr)?;
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(60)));
+    let _ = stream.set_write_timeout(Some(std::time::Duration::from_secs(10)));
     let body = body.unwrap_or("");
     let msg = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
@@ -89,7 +158,93 @@ pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>)
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::Cursor;
     use std::net::TcpListener;
+
+    /// Reader yielding at most `chunk` bytes per read — models a TCP
+    /// stream delivering the header and body in separate segments.
+    struct ChunkReader {
+        data: Vec<u8>,
+        pos: usize,
+        chunk: usize,
+    }
+
+    impl Read for ChunkReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let n = self.chunk.min(buf.len()).min(self.data.len() - self.pos);
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn parses_without_content_length() {
+        let req =
+            read_request(Cursor::new(b"GET /health HTTP/1.1\r\n\r\n".to_vec()))
+                .unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/health");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn garbage_content_length_is_an_error() {
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: banana\r\n\r\nhi";
+        let err = read_request(Cursor::new(raw.to_vec())).unwrap_err();
+        assert!(err.to_string().contains("content-length"), "{err}");
+        // Negative values don't parse as usize either.
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: -5\r\n\r\n";
+        assert!(read_request(Cursor::new(raw.to_vec())).is_err());
+    }
+
+    #[test]
+    fn oversized_body_rejected_before_allocation() {
+        let raw = format!(
+            "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY_BYTES + 1
+        );
+        let err = read_request(Cursor::new(raw.into_bytes())).unwrap_err();
+        assert!(err.to_string().contains("too large"), "{err}");
+    }
+
+    #[test]
+    fn split_header_body_reads_reassemble() {
+        let raw = b"POST /enqueue HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: 11\r\n\r\nhello world".to_vec();
+        for chunk in [1, 3, 7, 1024] {
+            let req = read_request(ChunkReader {
+                data: raw.clone(),
+                pos: 0,
+                chunk,
+            })
+            .unwrap();
+            assert_eq!(req.method, "POST", "chunk={chunk}");
+            assert_eq!(req.body, "hello world", "chunk={chunk}");
+        }
+    }
+
+    #[test]
+    fn truncated_body_is_an_error() {
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort";
+        assert!(read_request(Cursor::new(raw.to_vec())).is_err());
+    }
+
+    #[test]
+    fn missing_path_is_an_error() {
+        assert!(read_request(Cursor::new(b"GET\r\n\r\n".to_vec())).is_err());
+        assert!(read_request(Cursor::new(b"\r\n\r\n".to_vec())).is_err());
+    }
+
+    #[test]
+    fn unknown_methods_parse_for_the_router_to_reject() {
+        // The parser stays method-agnostic: routing (405/404) is the
+        // server's job, so exotic verbs must come through intact.
+        let req =
+            read_request(Cursor::new(b"BREW /coffee HTTP/1.1\r\n\r\n".to_vec()))
+                .unwrap();
+        assert_eq!(req.method, "BREW");
+        assert_eq!(req.path, "/coffee");
+    }
 
     #[test]
     fn parse_roundtrip() {

@@ -1,0 +1,219 @@
+//! The instance daemon: one serving engine behind a wire `status` API.
+//!
+//! `block serve --role instance` runs this loop — the standalone
+//! analogue of one engine slot of the simulator (or, in the paper, one
+//! vLLM host with the status endpoint patched in).  It owns a
+//! [`ServingBackend`] (continuous-batching engine + FCFS admission
+//! queue) and serves:
+//!
+//! * `GET  /status[?now=T]` — the full [`InstanceStatus`] schema the
+//!   Predictor consumes, wrapped in the daemon envelope (role, backend,
+//!   counters).  In virtual-clock mode `now` pins the pull instant —
+//!   the wire form of the simulator's `ViewSync` capture time.
+//! * `POST /enqueue` — a dispatch landing (the gateway's forwarded
+//!   `/generate`); optionally acks with the post-enqueue snapshot
+//!   (`sync_on_ack`'s wire form).
+//! * `POST /drain` — pull completed requests; `{"complete": true}`
+//!   first runs all admitted work to quiescence (trace-replay tail).
+//! * `GET  /health`, `POST /shutdown`.
+//!
+//! The loop is single-threaded by design: the PJRT client is `!Send`
+//! (one device, serialized execution), so one OS thread owns engine +
+//! socket, pumping the backend between accepts — exactly the
+//! single-GPU-instance model the paper's backend has.  The sim-clock
+//! backend rides the same loop for uniformity.
+
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::manifest::{BackendKind, ClockKind, ClusterManifest};
+use crate::server::backend::{PjrtBackend, ServingBackend, SimClockBackend};
+use crate::server::http::{self, HttpRequest};
+use crate::server::wire;
+use crate::util::json::{Json, JsonObj};
+
+/// Daemon-level options (clock mapping; the engine itself comes from the
+/// backend).
+#[derive(Debug, Clone)]
+pub struct InstanceOptions {
+    pub clock: ClockKind,
+    /// Virtual seconds per wall second (wall mode, sim backend).
+    pub time_scale: f64,
+}
+
+impl InstanceOptions {
+    pub fn from_manifest(m: &ClusterManifest) -> Self {
+        InstanceOptions { clock: m.clock, time_scale: m.time_scale }
+    }
+}
+
+/// Build the backend the manifest asks for, seeded for slot `index`.
+pub fn build_backend(m: &ClusterManifest, index: usize)
+                     -> Result<Box<dyn ServingBackend>> {
+    Ok(match m.backend {
+        BackendKind::Sim => {
+            Box::new(SimClockBackend::new(&m.cluster, index))
+        }
+        BackendKind::Pjrt => Box::new(PjrtBackend::new(
+            &m.artifacts, m.cluster.engine.block_size)?),
+    })
+}
+
+struct Counters {
+    enqueued: u64,
+    completed: u64,
+    tokens: u64,
+}
+
+/// Serve one instance daemon on a pre-bound listener until `/shutdown`.
+pub fn serve_instance(listener: TcpListener,
+                      mut backend: Box<dyn ServingBackend>,
+                      opts: InstanceOptions) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let t0 = Instant::now();
+    let wall = matches!(opts.clock, ClockKind::Wall);
+    let mut counters = Counters { enqueued: 0, completed: 0, tokens: 0 };
+    crate::log_info!("instance ({}) listening on {}", backend.name(),
+                     listener.local_addr()?);
+    loop {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                let _ = stream
+                    .set_read_timeout(Some(Duration::from_millis(2000)));
+                let now = t0.elapsed().as_secs_f64() * opts.time_scale;
+                if wall {
+                    backend.advance(now);
+                }
+                match http::read_request(&mut stream) {
+                    Ok(req) => {
+                        let (status, body, shutdown) = handle(
+                            backend.as_mut(), &opts, &req, wall, now,
+                            &mut counters);
+                        http::write_json(&mut stream, status, &body);
+                        if shutdown {
+                            return Ok(());
+                        }
+                    }
+                    Err(e) => {
+                        http::write_json(&mut stream, 400,
+                                         &http::error_body(&e.to_string()));
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                // Idle: pump the engine (wall mode) and nap briefly.
+                if wall {
+                    backend.advance(
+                        t0.elapsed().as_secs_f64() * opts.time_scale);
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Route one request.  Returns (status, body, shutdown).
+fn handle(backend: &mut dyn ServingBackend, opts: &InstanceOptions,
+          req: &HttpRequest, wall: bool, wall_now: f64,
+          counters: &mut Counters) -> (u16, Json, bool) {
+    let (path, params) = wire::split_query(&req.path);
+    match (req.method.as_str(), path) {
+        ("GET", "/health") => {
+            let mut o = JsonObj::new();
+            o.insert("ok", true);
+            o.insert("role", "instance");
+            o.insert("backend", backend.name());
+            o.insert("clock", opts.clock.name());
+            (200, Json::Obj(o), false)
+        }
+        ("GET", "/status") => {
+            if !wall {
+                // Virtual clock: an explicit `now` pins the pull
+                // instant (the ViewSync capture time); without one the
+                // snapshot reflects the last advance.
+                if let Some(t) = wire::query_param(&params, "now") {
+                    match t.parse::<f64>() {
+                        Ok(t) if t.is_finite() => backend.advance(t),
+                        _ => {
+                            return (400, http::error_body("bad 'now'"), false);
+                        }
+                    }
+                }
+            }
+            let st = backend.status();
+            let body = wire::status_envelope(&st, "instance", &[
+                ("backend", backend.name().into()),
+                ("clock", opts.clock.name().into()),
+                ("requests_enqueued", counters.enqueued.into()),
+                ("requests_completed", counters.completed.into()),
+                ("tokens_generated", counters.tokens.into()),
+            ]);
+            (200, body, false)
+        }
+        ("POST", "/enqueue") => {
+            let j = match Json::parse(&req.body) {
+                Ok(j) => j,
+                Err(e) => return (400, http::error_body(&e.to_string()), false),
+            };
+            let (request, body_now, ack) = match wire::parse_enqueue(&j) {
+                Ok(x) => x,
+                Err(e) => return (400, http::error_body(&e.to_string()), false),
+            };
+            let now = if wall {
+                wall_now
+            } else {
+                // Virtual clock refuses to travel backwards — a landing
+                // before the engine's clock is a driver bug.
+                let t = body_now.unwrap_or_else(|| backend.clock());
+                if t + 1e-9 < backend.clock() {
+                    return (400, http::error_body("enqueue in the past"), false);
+                }
+                t
+            };
+            if let Err(e) = backend.enqueue(&request, now) {
+                return (500, http::error_body(&e.to_string()), false);
+            }
+            counters.enqueued += 1;
+            let mut o = JsonObj::new();
+            o.insert("ok", true);
+            if ack {
+                o.insert("status", backend.status().to_json());
+            }
+            (200, Json::Obj(o), false)
+        }
+        ("POST", "/drain") => {
+            let complete = Json::parse(&req.body)
+                .ok()
+                .and_then(|j| j.opt("complete").and_then(|v| v.as_bool().ok()))
+                .unwrap_or(false);
+            if complete {
+                backend.drain_to_idle();
+            }
+            let finished = backend.take_finished();
+            counters.completed += finished.len() as u64;
+            counters.tokens +=
+                finished.iter().map(|c| c.tokens as u64).sum::<u64>();
+            let mut o = JsonObj::new();
+            o.insert(
+                "finished",
+                Json::Arr(finished.iter().map(wire::completion_to_json)
+                              .collect()),
+            );
+            (200, Json::Obj(o), false)
+        }
+        ("POST", "/shutdown") => {
+            let mut o = JsonObj::new();
+            o.insert("ok", true);
+            (200, Json::Obj(o), true)
+        }
+        // Known paths with the wrong verb are method errors, everything
+        // else is unrouted.
+        (_, "/health" | "/status" | "/enqueue" | "/drain" | "/shutdown") => {
+            (405, http::error_body("method not allowed"), false)
+        }
+        _ => (404, http::error_body("not found"), false),
+    }
+}

@@ -1,12 +1,28 @@
-//! Minimal HTTP/1.1 server — the paper's FastAPI front end, in std Rust.
+//! The serving tier: HTTP components of the Block deployment.
 //!
-//! Endpoints (JSON in/out):
+//! Three roles, one stack (`block serve --role ...`):
+//!
+//! * **instance** ([`instance`]) — a standalone engine daemon
+//!   (continuous-batching loop + admission queue) behind the wire
+//!   `status` API, over either execution substrate ([`backend`]);
+//! * **gateway** ([`gateway`]) — Block's distributed stateless scheduler
+//!   front-ends over HTTP: status-pull view sync, any
+//!   [`GlobalScheduler`](crate::scheduler::GlobalScheduler) policy,
+//!   `/generate` routing with bounce-and-redirect fault handling;
+//! * **single** (this module, [`serve`]) — the legacy one-process mode:
+//!   the PJRT model served inline with no scheduler tier (the paper's
+//!   single-host FastAPI prototype).
+//!
+//! Endpoints of the single-process mode (JSON in/out):
 //!
 //! * `POST /generate` `{"prompt": "...", "max_new": 32}` — run real
 //!   generation through the PJRT runtime; returns text + timing.
 //! * `POST /predict` `{"prompt": "..."}` — the tagger path: estimated
 //!   response length from the learned regressor.
-//! * `GET  /status` — server counters (the instance `status` API).
+//! * `GET  /status` — the instance status export.  Serialized by the
+//!   same [`InstanceStatus`] serializer the daemons use, so the
+//!   Predictor parses single-process and daemon statuses alike; server
+//!   counters ride in the envelope.
 //! * `GET  /health` — liveness.
 //!
 //! Sequential accept loop over `std::net::TcpListener`: the PJRT client
@@ -15,14 +31,19 @@
 //! backend has.  (No tokio in this offline environment — see DESIGN.md
 //! substitutions.)
 
+pub mod backend;
+pub mod gateway;
 pub mod http;
+pub mod instance;
+pub mod wire;
 
 use std::cell::Cell;
-use std::io::Write;
 use std::net::TcpListener;
+use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::engine::InstanceStatus;
 use crate::runtime::serving::{RealServer, ServingRequest};
 use crate::runtime::ModelRuntime;
 use crate::util::json::{Json, JsonObj};
@@ -34,6 +55,7 @@ pub struct ServerState {
     pub requests_served: Cell<u64>,
     pub tokens_generated: Cell<u64>,
     pub next_id: Cell<u64>,
+    started: Instant,
 }
 
 impl ServerState {
@@ -43,26 +65,37 @@ impl ServerState {
             requests_served: Cell::new(0),
             tokens_generated: Cell::new(0),
             next_id: Cell::new(1),
+            started: Instant::now(),
         }
     }
-}
 
-fn json_response(status: u16, body: &Json) -> Vec<u8> {
-    let text = body.to_string_compact();
-    format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
-        status,
-        if status == 200 { "OK" } else { "Error" },
-        text.len(),
-        text
-    )
-    .into_bytes()
-}
-
-fn err_body(msg: &str) -> Json {
-    let mut o = JsonObj::new();
-    o.insert("error", msg);
-    Json::Obj(o)
+    /// The single-process server's engine state in the shared `status`
+    /// schema: generation runs inline per request, so between requests
+    /// the "engine" is idle with an empty batch — but the schema (and
+    /// therefore the Predictor's parser) is identical to a daemon's.
+    pub fn status_snapshot(&self) -> InstanceStatus {
+        let d = self.runtime.dims();
+        let block_size = 16u32;
+        let slots = self
+            .runtime
+            .buckets()
+            .last()
+            .copied()
+            .unwrap_or(1);
+        let total_blocks =
+            ((slots * d.max_context) as u32).div_ceil(block_size);
+        InstanceStatus {
+            now: self.started.elapsed().as_secs_f64(),
+            epoch: self.requests_served.get(),
+            free_blocks: total_blocks,
+            total_blocks,
+            watermark_blocks: 0,
+            running: Vec::new(),
+            waiting: Vec::new(),
+            in_flight: None,
+            total_preemptions: 0,
+        }
+    }
 }
 
 /// Route one parsed request.
@@ -71,27 +104,30 @@ pub fn handle(state: &ServerState, req: &HttpRequest) -> (u16, Json) {
         ("GET", "/health") => {
             let mut o = JsonObj::new();
             o.insert("ok", true);
+            o.insert("role", "single");
             (200, Json::Obj(o))
         }
         ("GET", "/status") => {
-            let mut o = JsonObj::new();
-            o.insert("requests_served", state.requests_served.get());
-            o.insert("tokens_generated", state.tokens_generated.get());
             let d = state.runtime.dims();
-            o.insert("model_params", d.param_count);
-            o.insert("max_context", d.max_context);
-            (200, Json::Obj(o))
+            let st = state.status_snapshot();
+            let body = wire::status_envelope(&st, "single", &[
+                ("requests_served", state.requests_served.get().into()),
+                ("tokens_generated", state.tokens_generated.get().into()),
+                ("model_params", d.param_count.into()),
+                ("max_context", d.max_context.into()),
+            ]);
+            (200, body)
         }
         ("POST", "/predict") => {
             let body = match Json::parse(&req.body) {
                 Ok(b) => b,
-                Err(e) => return (400, err_body(&e.to_string())),
+                Err(e) => return (400, http::error_body(&e.to_string())),
             };
             let Some(prompt) = body
                 .opt("prompt")
                 .and_then(|p| p.as_str().ok().map(str::to_string))
             else {
-                return (400, err_body("missing 'prompt'"));
+                return (400, http::error_body("missing 'prompt'"));
             };
             let feats = crate::tagger::features::extract_features(&prompt);
             match state.runtime.predict_lengths(&[feats]) {
@@ -100,19 +136,19 @@ pub fn handle(state: &ServerState, req: &HttpRequest) -> (u16, Json) {
                     o.insert("predicted_tokens", pred[0].round().max(1.0) as f64);
                     (200, Json::Obj(o))
                 }
-                Err(e) => (500, err_body(&e.to_string())),
+                Err(e) => (500, http::error_body(&e.to_string())),
             }
         }
         ("POST", "/generate") => {
             let body = match Json::parse(&req.body) {
                 Ok(b) => b,
-                Err(e) => return (400, err_body(&e.to_string())),
+                Err(e) => return (400, http::error_body(&e.to_string())),
             };
             let Some(prompt) = body
                 .opt("prompt")
                 .and_then(|p| p.as_str().ok().map(str::to_string))
             else {
-                return (400, err_body("missing 'prompt'"));
+                return (400, http::error_body("missing 'prompt'"));
             };
             let max_new = body
                 .opt("max_new")
@@ -137,15 +173,22 @@ pub fn handle(state: &ServerState, req: &HttpRequest) -> (u16, Json) {
                     o.insert("e2e_ms", r.e2e.as_secs_f64() * 1e3);
                     (200, Json::Obj(o))
                 }
-                Err(e) => (500, err_body(&e.to_string())),
+                Err(e) => (500, http::error_body(&e.to_string())),
             }
         }
-        _ => (404, err_body("not found")),
+        // Known paths reached with the wrong verb are method errors.
+        (_, "/health" | "/status" | "/predict" | "/generate") => {
+            (405, http::error_body("method not allowed"))
+        }
+        _ => (404, http::error_body("not found")),
     }
 }
 
 /// Serve on `addr` (e.g. "127.0.0.1:8471").  `max_requests` bounds the
-/// accept loop for tests (None = forever).
+/// accept loop for tests (None = forever) and counts *completed
+/// exchanges only*: a request that fails to parse is answered with a
+/// 400 error body, and neither it nor a response the client hung up on
+/// consumes the budget.
 pub fn serve(state: ServerState, addr: &str,
              max_requests: Option<usize>) -> Result<()> {
     let listener = TcpListener::bind(addr)?;
@@ -153,11 +196,21 @@ pub fn serve(state: ServerState, addr: &str,
     let mut handled = 0usize;
     for stream in listener.incoming() {
         let mut stream = stream?;
-        if let Ok(req) = read_request(&mut stream) {
-            let (status, body) = handle(&state, &req);
-            let _ = stream.write_all(&json_response(status, &body));
+        match read_request(&mut stream) {
+            Ok(req) => {
+                let (status, body) = handle(&state, &req);
+                if http::write_json(&mut stream, status, &body) {
+                    handled += 1;
+                } else {
+                    crate::log_warn!("client hung up mid-response");
+                }
+            }
+            Err(e) => {
+                // Unparsable request: tell the client, don't count it.
+                http::write_json(&mut stream, 400,
+                                 &http::error_body(&e.to_string()));
+            }
         }
-        handled += 1;
         if let Some(max) = max_requests {
             if handled >= max {
                 break;

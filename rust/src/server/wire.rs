@@ -1,0 +1,326 @@
+//! Wire schemas + blocking client for the serving tier.
+//!
+//! Everything that crosses the gateway↔instance HTTP boundary is defined
+//! here: the enqueue request/ack, the completion-drain payload, and the
+//! status envelope (the full [`InstanceStatus`] schema plus daemon
+//! counters).  JSON numbers round-trip f64 exactly (shortest-round-trip
+//! formatting on write, `str::parse::<f64>` on read), which is what lets
+//! the virtual-clock gateway reproduce the simulator's decisions bit for
+//! bit from *parsed* snapshots.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::core::request::{Request, RequestId};
+use crate::engine::InstanceStatus;
+use crate::server::backend::BackendCompletion;
+use crate::server::http;
+use crate::util::json::{Json, JsonObj};
+
+/// Split a request target into (path, query pairs).
+pub fn split_query(target: &str) -> (&str, Vec<(String, String)>) {
+    match target.split_once('?') {
+        None => (target, Vec::new()),
+        Some((path, q)) => (
+            path,
+            q.split('&')
+                .filter(|kv| !kv.is_empty())
+                .map(|kv| match kv.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => (kv.to_string(), String::new()),
+                })
+                .collect(),
+        ),
+    }
+}
+
+/// Query-parameter lookup.
+pub fn query_param<'a>(params: &'a [(String, String)], key: &str)
+                       -> Option<&'a str> {
+    params
+        .iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v.as_str())
+}
+
+// ---------------------------------------------------------------------------
+// Enqueue
+// ---------------------------------------------------------------------------
+
+/// Serialize a dispatch landing on an instance.  `now` is the landing
+/// time in the instance's timebase (virtual-clock mode; wall daemons
+/// ignore it), `ack_status` asks for the post-enqueue snapshot in the
+/// ack (the wire form of `sync_on_ack`).
+pub fn enqueue_body(req: &Request, now: f64, ack_status: bool) -> String {
+    let mut o = JsonObj::new();
+    o.insert("id", req.id);
+    o.insert("prompt_tokens", req.prompt_tokens as u64);
+    o.insert("response_tokens", req.response_tokens as u64);
+    if let Some(p) = req.predicted_tokens {
+        o.insert("predicted_tokens", p as u64);
+    }
+    if let Some(p) = &req.prompt {
+        o.insert("prompt", p.as_str());
+    }
+    o.insert("now", now);
+    o.insert("ack_status", ack_status);
+    Json::Obj(o).to_string_compact()
+}
+
+/// Parse an enqueue body into (request, landing time, ack wanted).
+/// `arrival` is set to the landing time — the engine only reads the
+/// enqueue instant.
+pub fn parse_enqueue(j: &Json) -> Result<(Request, Option<f64>, bool)> {
+    let id = j.field("id")?.as_usize()? as RequestId;
+    let prompt_tokens = j.field("prompt_tokens")?.as_usize()? as u32;
+    let response_tokens = j.field("response_tokens")?.as_usize()? as u32;
+    let now = match j.opt("now") {
+        None => None,
+        Some(v) => Some(v.as_f64()?),
+    };
+    let mut req = Request::new(id, now.unwrap_or(0.0), prompt_tokens,
+                               response_tokens);
+    if let Some(v) = j.opt("predicted_tokens") {
+        req.predicted_tokens = Some(v.as_usize()? as u32);
+    }
+    if let Some(v) = j.opt("prompt") {
+        req.prompt = Some(v.as_str()?.to_string());
+    }
+    let ack = match j.opt("ack_status") {
+        None => false,
+        Some(v) => v.as_bool()?,
+    };
+    Ok((req, now, ack))
+}
+
+// ---------------------------------------------------------------------------
+// Completions
+// ---------------------------------------------------------------------------
+
+pub fn completion_to_json(c: &BackendCompletion) -> Json {
+    let mut o = JsonObj::new();
+    o.insert("id", c.id);
+    o.insert("enqueued", c.enqueued);
+    o.insert("prefill_start", c.prefill_start);
+    o.insert("first_token", c.first_token);
+    o.insert("finish", c.finish);
+    o.insert("preemptions", c.preemptions as u64);
+    o.insert("prompt_tokens", c.prompt_tokens as u64);
+    o.insert("tokens", c.tokens as u64);
+    if let Some(t) = &c.text {
+        o.insert("text", t.as_str());
+    }
+    Json::Obj(o)
+}
+
+pub fn completion_from_json(j: &Json) -> Result<BackendCompletion> {
+    Ok(BackendCompletion {
+        id: j.field("id")?.as_usize()? as RequestId,
+        enqueued: j.field("enqueued")?.as_f64()?,
+        prefill_start: j.field("prefill_start")?.as_f64()?,
+        first_token: j.field("first_token")?.as_f64()?,
+        finish: j.field("finish")?.as_f64()?,
+        preemptions: j.field("preemptions")?.as_usize()? as u32,
+        prompt_tokens: j.field("prompt_tokens")?.as_usize()? as u32,
+        tokens: j.field("tokens")?.as_usize()? as u32,
+        text: match j.opt("text") {
+            None => None,
+            Some(v) => Some(v.as_str()?.to_string()),
+        },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Status envelope
+// ---------------------------------------------------------------------------
+
+/// Wrap an [`InstanceStatus`] with component metadata and counters.  The
+/// status fields stay at the top level, so the Predictor-side parser
+/// ([`InstanceStatus::from_json`]) reads the envelope and the bare
+/// schema interchangeably — one serializer for the daemon, the legacy
+/// single-process server, and the simulator's exports.
+pub fn status_envelope(status: &InstanceStatus, role: &str,
+                       extra: &[(&str, Json)]) -> Json {
+    let mut o = match status.to_json() {
+        Json::Obj(o) => o,
+        _ => unreachable!("status serializes to an object"),
+    };
+    o.insert("role", role);
+    for (k, v) in extra {
+        o.insert(*k, v.clone());
+    }
+    Json::Obj(o)
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// How an enqueue attempt ended when the instance was reachable.
+#[derive(Debug)]
+pub enum EnqueueOutcome {
+    /// The request is on the instance; carries the ack-piggybacked
+    /// snapshot when one was asked for.
+    Landed(Option<InstanceStatus>),
+    /// The instance answered but refused (HTTP status + error body).
+    Rejected(u16, String),
+}
+
+/// Blocking HTTP client for one instance daemon (gateway side).
+#[derive(Debug, Clone)]
+pub struct InstanceClient {
+    pub addr: String,
+}
+
+impl InstanceClient {
+    pub fn new(addr: impl Into<String>) -> Self {
+        InstanceClient { addr: addr.into() }
+    }
+
+    fn expect_ok(&self, what: &str, status: u16, body: &str)
+                 -> Result<Json> {
+        if status != 200 {
+            bail!("instance {} {what}: HTTP {status}: {body}", self.addr);
+        }
+        Json::parse(body)
+            .map_err(|e| anyhow!("instance {} {what}: {e}", self.addr))
+    }
+
+    /// Pull the status snapshot; `now` pins the pull instant in
+    /// virtual-clock mode.
+    pub fn status(&self, now: Option<f64>) -> Result<InstanceStatus> {
+        let path = match now {
+            Some(t) => format!("/status?now={t}"),
+            None => "/status".to_string(),
+        };
+        let (status, body) = http::request(&self.addr, "GET", &path, None)?;
+        let j = self.expect_ok("status", status, &body)?;
+        InstanceStatus::from_json(&j)
+            .map_err(|e| anyhow!("instance {} status: {e}", self.addr))
+    }
+
+    /// Land a dispatch.  `Err` means the instance was unreachable (the
+    /// fault-path bounce); an HTTP-level rejection comes back as
+    /// [`EnqueueOutcome::Rejected`] — the host is alive, it just
+    /// refused this request, which must *not* be treated as a death.
+    pub fn enqueue(&self, req: &Request, now: f64, ack_status: bool)
+                   -> Result<EnqueueOutcome> {
+        let body = enqueue_body(req, now, ack_status);
+        let (status, text) =
+            http::request(&self.addr, "POST", "/enqueue", Some(&body))?;
+        if status != 200 {
+            return Ok(EnqueueOutcome::Rejected(status, text));
+        }
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("instance {} enqueue: {e}", self.addr))?;
+        match j.opt("status") {
+            None => Ok(EnqueueOutcome::Landed(None)),
+            Some(s) => Ok(EnqueueOutcome::Landed(Some(
+                InstanceStatus::from_json(s)?,
+            ))),
+        }
+    }
+
+    /// Drain completions; `complete` additionally runs all admitted work
+    /// to quiescence first (virtual-clock trace tail).
+    pub fn drain(&self, complete: bool) -> Result<Vec<BackendCompletion>> {
+        let body = if complete {
+            r#"{"complete":true}"#
+        } else {
+            r#"{"complete":false}"#
+        };
+        let (status, text) =
+            http::request(&self.addr, "POST", "/drain", Some(body))?;
+        let j = self.expect_ok("drain", status, &text)?;
+        j.field("finished")?
+            .as_arr()?
+            .iter()
+            .map(completion_from_json)
+            .collect()
+    }
+
+    pub fn health(&self) -> bool {
+        matches!(http::request(&self.addr, "GET", "/health", None),
+                 Ok((200, _)))
+    }
+
+    pub fn shutdown(&self) -> Result<()> {
+        let _ = http::request(&self.addr, "POST", "/shutdown", None)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_splitting() {
+        let (p, q) = split_query("/status?now=1.25&drain=1");
+        assert_eq!(p, "/status");
+        assert_eq!(query_param(&q, "now"), Some("1.25"));
+        assert_eq!(query_param(&q, "drain"), Some("1"));
+        assert_eq!(query_param(&q, "x"), None);
+        let (p, q) = split_query("/health");
+        assert_eq!(p, "/health");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn enqueue_roundtrip_exact() {
+        let mut req = Request::new(42, 0.0, 300, 80);
+        req.predicted_tokens = Some(77);
+        let body = enqueue_body(&req, 1.2345678901234567, true);
+        let j = Json::parse(&body).unwrap();
+        let (back, now, ack) = parse_enqueue(&j).unwrap();
+        assert_eq!(back.id, 42);
+        assert_eq!(back.prompt_tokens, 300);
+        assert_eq!(back.response_tokens, 80);
+        assert_eq!(back.predicted_tokens, Some(77));
+        assert_eq!(now, Some(1.2345678901234567), "f64 must be exact");
+        assert!(ack);
+    }
+
+    #[test]
+    fn completion_roundtrip_exact() {
+        let c = BackendCompletion {
+            id: 9,
+            enqueued: 0.1,
+            prefill_start: 0.30000000000000004,
+            first_token: 0.5,
+            finish: 1.7000000000000002,
+            preemptions: 2,
+            prompt_tokens: 128,
+            tokens: 32,
+            text: Some("hi".to_string()),
+        };
+        let j = completion_to_json(&c);
+        let text = j.to_string_compact();
+        let back =
+            completion_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.id, c.id);
+        assert_eq!(back.prefill_start, c.prefill_start);
+        assert_eq!(back.finish, c.finish);
+        assert_eq!(back.tokens, 32);
+        assert_eq!(back.text.as_deref(), Some("hi"));
+    }
+
+    #[test]
+    fn envelope_parses_as_bare_status() {
+        let st = InstanceStatus {
+            now: 2.5,
+            epoch: 3,
+            free_blocks: 8,
+            total_blocks: 16,
+            watermark_blocks: 1,
+            running: vec![],
+            waiting: vec![],
+            in_flight: None,
+            total_preemptions: 0,
+        };
+        let env = status_envelope(&st, "instance",
+                                  &[("requests_enqueued", 5u64.into())]);
+        assert_eq!(env.field("role").unwrap().as_str().unwrap(), "instance");
+        let back = InstanceStatus::from_json(&env).unwrap();
+        assert_eq!(back, st);
+    }
+}

@@ -1,0 +1,341 @@
+//! The serving-stack acceptance bar: a real HTTP gateway + instance
+//! daemons on loopback must (a) reproduce `ClusterSim`'s placement
+//! decisions byte for byte when replaying a fixed arrival trace over
+//! the virtual clock, and (b) serve concurrent live traffic to
+//! completion with a balanced dispatch split on the wall clock.
+//!
+//! Everything runs in-process on port-0 listeners (no artifacts, no
+//! external processes): the sim-clock backend is the deterministic
+//! engine substrate, and the gateway exercises the same `FrontEnd` /
+//! `StaleClusterView` / `ArrivalSharder` machinery the simulator uses.
+
+use std::net::TcpListener;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use block::cluster::{run_experiment, SimOptions};
+use block::config::manifest::{BackendKind, ClockKind, ClusterManifest};
+use block::config::{ClusterConfig, SchedulerKind, ShardPolicy,
+                    WorkloadConfig, WorkloadKind};
+use block::core::request::Request;
+use block::server::gateway::{serve_gateway, GatewayOptions};
+use block::server::http::request;
+use block::server::instance::{build_backend, serve_instance,
+                              InstanceOptions};
+use block::util::json::Json;
+
+struct Stack {
+    gw_addr: String,
+    inst_addrs: Vec<String>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Stack {
+    /// Bring up `cluster.n_instances` sim-clock instance daemons + one
+    /// gateway, all on loopback port-0 listeners.
+    fn spawn(cluster: ClusterConfig, clock: ClockKind,
+             time_scale: f64) -> Stack {
+        let n = cluster.n_instances;
+        let inst_listeners: Vec<TcpListener> = (0..n)
+            .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+            .collect();
+        let inst_addrs: Vec<String> = inst_listeners
+            .iter()
+            .map(|l| l.local_addr().unwrap().to_string())
+            .collect();
+        let gw_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let gw_addr = gw_listener.local_addr().unwrap().to_string();
+        let manifest = ClusterManifest {
+            cluster,
+            instances: inst_addrs.clone(),
+            gateways: vec![gw_addr.clone()],
+            backend: BackendKind::Sim,
+            clock,
+            time_scale,
+            artifacts: "artifacts".to_string(),
+        };
+        manifest.validate().unwrap();
+        let mut handles = Vec::new();
+        for (i, listener) in inst_listeners.into_iter().enumerate() {
+            let m = manifest.clone();
+            handles.push(std::thread::spawn(move || {
+                let backend = build_backend(&m, i).unwrap();
+                serve_instance(listener, backend,
+                               InstanceOptions::from_manifest(&m))
+                    .unwrap();
+            }));
+        }
+        let gopts = GatewayOptions::from_manifest(&manifest);
+        handles.push(std::thread::spawn(move || {
+            serve_gateway(gw_listener, gopts).unwrap();
+        }));
+        let stack = Stack { gw_addr, inst_addrs, handles };
+        stack.wait_healthy();
+        stack
+    }
+
+    fn wait_healthy(&self) {
+        for addr in std::iter::once(&self.gw_addr).chain(&self.inst_addrs) {
+            let mut up = false;
+            for _ in 0..200 {
+                if matches!(request(addr, "GET", "/health", None),
+                            Ok((200, _))) {
+                    up = true;
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            assert!(up, "{addr} did not come up");
+        }
+    }
+
+    fn shutdown(self) {
+        for addr in self.inst_addrs.iter().chain([&self.gw_addr]) {
+            let _ = request(addr, "POST", "/shutdown", None);
+        }
+        for h in self.handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+/// Sorted (id, instance, dispatched, finish) placements.
+type Placements = Vec<(u64, usize, f64, f64)>;
+
+fn sim_placements(cfg: &ClusterConfig, wl: &WorkloadConfig) -> Placements {
+    let res = run_experiment(cfg.clone(), wl, SimOptions::default()).unwrap();
+    let mut out: Placements = res
+        .metrics
+        .records
+        .iter()
+        .map(|m| (m.id, m.instance, m.dispatched, m.finish))
+        .collect();
+    out.sort_by_key(|p| p.0);
+    out
+}
+
+/// Replay the same trace through the wire stack on the virtual clock.
+fn wire_placements(cfg: &ClusterConfig, requests: &[Request]) -> Placements {
+    let stack = Stack::spawn(cfg.clone(), ClockKind::Virtual, 1.0);
+    for r in requests {
+        let body = format!(
+            r#"{{"id":{},"now":{},"prompt_tokens":{},"response_tokens":{}}}"#,
+            r.id, r.arrival, r.prompt_tokens, r.response_tokens
+        );
+        let (st, resp) =
+            request(&stack.gw_addr, "POST", "/generate", Some(&body))
+                .unwrap();
+        assert_eq!(st, 200, "generate failed: {resp}");
+    }
+    let (st, resp) =
+        request(&stack.gw_addr, "POST", "/flush", None).unwrap();
+    assert_eq!(st, 200, "flush failed: {resp}");
+    let flushed = Json::parse(&resp).unwrap();
+    assert_eq!(
+        flushed.field("completed").unwrap().as_usize().unwrap(),
+        requests.len(),
+        "every replayed request must complete"
+    );
+    assert_eq!(flushed.field("in_flight").unwrap().as_usize().unwrap(), 0);
+
+    let (st, recs) =
+        request(&stack.gw_addr, "GET", "/records", None).unwrap();
+    assert_eq!(st, 200);
+    let mut out: Placements = Json::parse(&recs)
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|r| {
+            (
+                r.field("id").unwrap().as_usize().unwrap() as u64,
+                r.field("instance").unwrap().as_usize().unwrap(),
+                r.field("dispatched").unwrap().as_f64().unwrap(),
+                r.field("finish").unwrap().as_f64().unwrap(),
+            )
+        })
+        .collect();
+    out.sort_by_key(|p| p.0);
+
+    // Telemetry sanity while the stack is up: gateway /status carries
+    // the SimResult-vocabulary counters.
+    let (st, body) = request(&stack.gw_addr, "GET", "/status", None).unwrap();
+    assert_eq!(st, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.field("role").unwrap().as_str().unwrap(), "gateway");
+    let fd = j.field("frontend_dispatches").unwrap().as_arr().unwrap();
+    assert_eq!(fd.len(), cfg.frontends.max(1));
+    let total: usize = fd.iter().map(|v| v.as_usize().unwrap()).sum();
+    assert_eq!(total, requests.len());
+    assert_eq!(j.field("bounced").unwrap().as_usize().unwrap(), 0);
+    assert!(j.field("summary").unwrap().field("mean_e2e").unwrap()
+                .as_f64().unwrap() > 0.0);
+
+    stack.shutdown();
+    out
+}
+
+fn parity_case(scheduler: SchedulerKind, sync_interval: f64,
+               sync_on_ack: bool) {
+    let cfg = ClusterConfig {
+        n_instances: 3,
+        scheduler,
+        frontends: 2,
+        sync_interval,
+        shard_policy: ShardPolicy::RoundRobin,
+        sync_on_ack,
+        ..ClusterConfig::default()
+    };
+    let wl = WorkloadConfig {
+        kind: WorkloadKind::ShareGpt,
+        qps: 8.0,
+        n_requests: 90,
+        seed: 3,
+    };
+    let requests = block::workload::generate(&wl).unwrap();
+    let sim = sim_placements(&cfg, &wl);
+    let wire = wire_placements(&cfg, &requests);
+    assert_eq!(sim.len(), wire.len(), "{}", scheduler.name());
+    for (s, w) in sim.iter().zip(&wire) {
+        assert_eq!(s.0, w.0, "{} id order", scheduler.name());
+        assert_eq!(
+            s.1, w.1,
+            "{} sync={sync_interval} ack={sync_on_ack}: request {} placed \
+             on {} by the simulator but {} by the gateway",
+            scheduler.name(), s.0, s.1, w.1
+        );
+        assert_eq!(s.2, w.2, "{} dispatched time of {}", scheduler.name(),
+                   s.0);
+        assert_eq!(s.3, w.3, "{} finish time of {}", scheduler.name(), s.0);
+    }
+}
+
+#[test]
+fn gateway_matches_cluster_sim_block() {
+    // The acceptance criterion: a gateway running the sim-clock backend
+    // on a fixed arrival trace makes the same placement decisions as
+    // ClusterSim under the equivalent frontends/sync_interval config —
+    // including identical dispatch and finish timestamps.
+    parity_case(SchedulerKind::Block, 2.0, false);
+}
+
+#[test]
+fn gateway_matches_cluster_sim_min_qpm() {
+    parity_case(SchedulerKind::MinQpm, 2.0, false);
+}
+
+#[test]
+fn gateway_matches_cluster_sim_fresh_views() {
+    // sync_interval = 0: the wire analogue of the centralized
+    // always-fresh deployment (per-arrival status pull).
+    parity_case(SchedulerKind::MinQpm, 0.0, false);
+}
+
+#[test]
+fn gateway_matches_cluster_sim_sync_on_ack() {
+    // Ack-piggybacked view refreshes ride the enqueue acks over the
+    // wire; the charged sync_ack_cost shifts every landing identically.
+    parity_case(SchedulerKind::Block, 4.0, true);
+}
+
+#[test]
+fn wall_clock_stack_serves_concurrent_traffic() {
+    // Live smoke: 2 sim-clock instances + 1 gateway on the wall clock,
+    // concurrent /generate callers, balanced dispatch, well-formed
+    // /status everywhere (the in-process twin of the serve-smoke CI
+    // job).
+    let cfg = ClusterConfig {
+        n_instances: 2,
+        scheduler: SchedulerKind::MinQpm,
+        frontends: 1,
+        sync_interval: 0.25,
+        ..ClusterConfig::default()
+    };
+    let stack = Stack::spawn(cfg, ClockKind::Wall, 50.0);
+    let n_requests = 12;
+    let mut workers = Vec::new();
+    for i in 0..n_requests {
+        let addr = stack.gw_addr.clone();
+        workers.push(std::thread::spawn(move || {
+            let body = format!(
+                r#"{{"prompt":"smoke request {i}","prompt_tokens":200,"max_new":16}}"#
+            );
+            let (st, resp) =
+                request(&addr, "POST", "/generate", Some(&body)).unwrap();
+            assert_eq!(st, 200, "generate: {resp}");
+            let j = Json::parse(&resp).unwrap();
+            assert_eq!(j.field("tokens").unwrap().as_usize().unwrap(), 16);
+            assert!(j.field("e2e").unwrap().as_f64().unwrap() > 0.0);
+            j.field("instance").unwrap().as_usize().unwrap()
+        }));
+    }
+    let mut served = vec![0usize; 2];
+    for w in workers {
+        served[w.join().unwrap()] += 1;
+    }
+    assert_eq!(served.iter().sum::<usize>(), n_requests);
+    assert!(
+        served.iter().all(|&n| n >= 4),
+        "dispatch split too skewed: {served:?}"
+    );
+
+    // Well-formed /status on every component.
+    let (st, body) = request(&stack.gw_addr, "GET", "/status", None).unwrap();
+    assert_eq!(st, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.field("completed").unwrap().as_usize().unwrap(),
+               n_requests);
+    for addr in &stack.inst_addrs {
+        let (st, body) = request(addr, "GET", "/status", None).unwrap();
+        assert_eq!(st, 200);
+        let j = Json::parse(&body).unwrap();
+        // Parses as the full InstanceStatus schema.
+        let parsed =
+            block::engine::InstanceStatus::from_json(&j).unwrap();
+        assert!(parsed.total_blocks > 0);
+        assert!(j.field("requests_enqueued").unwrap().as_usize().unwrap()
+                    > 0);
+    }
+
+    // The tagger has observed completions: /predict answers.
+    let (st, body) = request(&stack.gw_addr, "POST", "/predict",
+                             Some(r#"{"prompt":"how long?"}"#))
+        .unwrap();
+    assert_eq!(st, 200);
+    assert!(Json::parse(&body).unwrap().field("predicted_tokens").unwrap()
+                .as_usize().unwrap() >= 1);
+
+    stack.shutdown();
+}
+
+#[test]
+fn instance_daemon_rejects_malformed_requests() {
+    // Satellite: the daemon answers garbage with 400s instead of
+    // dropping the connection, and unknown verbs with 405/404.
+    let cfg = ClusterConfig { n_instances: 1, ..ClusterConfig::default() };
+    let stack = Stack::spawn(cfg, ClockKind::Virtual, 1.0);
+    let addr = &stack.inst_addrs[0];
+
+    let (st, body) =
+        request(addr, "POST", "/enqueue", Some("this is not json")).unwrap();
+    assert_eq!(st, 400, "{body}");
+    let (st, _) =
+        request(addr, "POST", "/enqueue", Some(r#"{"id": 1}"#)).unwrap();
+    assert_eq!(st, 400, "missing fields must 400");
+    let (st, _) = request(addr, "GET", "/status?now=bogus", None).unwrap();
+    assert_eq!(st, 400);
+    let (st, _) = request(addr, "DELETE", "/status", None).unwrap();
+    assert_eq!(st, 405);
+    let (st, _) = request(addr, "GET", "/nope", None).unwrap();
+    assert_eq!(st, 404);
+
+    // Gateway mirrors the contract.
+    let (st, _) = request(&stack.gw_addr, "POST", "/generate",
+                          Some("{broken")).unwrap();
+    assert_eq!(st, 400);
+    let (st, _) = request(&stack.gw_addr, "DELETE", "/generate", None)
+        .unwrap();
+    assert_eq!(st, 405);
+
+    stack.shutdown();
+}
