@@ -31,6 +31,11 @@ pub enum EventKind {
     StepDone(usize, u64),
     /// A provisioned instance finished cold start.
     InstanceReady,
+    /// Scale-down probe for instance `.0`: scheduled when the instance
+    /// goes empty (provisioning enabled with `scale_down_idle > 0`);
+    /// when it pops, the instance drains and retires if it stayed idle
+    /// the whole window and the cluster is above its floor.
+    DrainCheck(usize),
     /// Front-end `usize` performs its periodic view pull (distributed
     /// deployments, `sync_interval > 0`).  Re-armed after each firing
     /// while arrivals remain, so the event queue drains once the run is

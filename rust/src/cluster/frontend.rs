@@ -372,6 +372,35 @@ impl FrontEnd {
         self.clear_echo_all();
     }
 
+    /// Restart a crashed front-end (the `FrontEndRestart` fault): a
+    /// fresh process with a fresh scheduler and a *cold*
+    /// [`StaleClusterView`] — statelessness means there is nothing to
+    /// recover, but the first decisions after restart run on whatever
+    /// view the next sync delivers.  The in-transit set survives (those
+    /// requests are on the wire and their landings must still clear
+    /// their entries) and the dispatch counter keeps accumulating —
+    /// it is run-long telemetry for a stable slot, not process state.
+    pub fn restart(&mut self, scheduler: Box<dyn GlobalScheduler>,
+                   local_echo: bool) {
+        debug_assert!(!self.alive, "restart of a live front-end");
+        self.alive = true;
+        self.scheduler = scheduler;
+        self.view = StaleClusterView::new();
+        self.echo_on = local_echo;
+        self.clear_echo_all();
+    }
+
+    /// Grow the per-instance bookkeeping to `slots` (runtime manifest
+    /// growth on the wire path; the view resizes itself on its next
+    /// sync).  Shrinking never happens — removed instances keep their
+    /// slot, marked dead.
+    pub fn grow_slots(&mut self, slots: usize) {
+        if slots > self.in_transit.len() {
+            self.in_transit.resize_with(slots, Vec::new);
+            self.echoed.resize_with(slots, Vec::new);
+        }
+    }
+
     /// Name of the wrapped scheduling policy.
     pub fn name(&self) -> &'static str {
         self.scheduler.name()
@@ -470,17 +499,10 @@ impl FrontEnd {
 /// fork deterministically off the same base.
 pub fn build_frontends(cfg: &ClusterConfig, total: usize,
                        reference_path: bool) -> Vec<FrontEnd> {
-    let blocks = cfg.kv_blocks();
     (0..cfg.frontends.max(1))
         .map(|f| {
-            let seed = (cfg.seed ^ 0x5C)
-                ^ (f as u64).wrapping_mul(0x9E3779B97F4A7C15);
             let mut fe = FrontEnd::new(
-                f,
-                build_scheduler(cfg.scheduler, total, &cfg.engine, blocks,
-                                &cfg.overhead, seed, cfg.jobs),
-                total,
-            );
+                f, frontend_scheduler(cfg, total, f), total);
             if reference_path {
                 fe.set_reference_path(true);
             }
@@ -492,6 +514,19 @@ pub fn build_frontends(cfg: &ClusterConfig, total: usize,
             fe
         })
         .collect()
+}
+
+/// The scheduler one front-end slot runs — the seed derivation
+/// [`build_frontends`] uses, exposed so a `FrontEndRestart` builds the
+/// replacement process exactly like the original (deterministic: the
+/// restarted scheduler replays the same tie-break stream a fresh
+/// process at that slot would).
+pub fn frontend_scheduler(cfg: &ClusterConfig, total: usize,
+                          f: usize) -> Box<dyn GlobalScheduler> {
+    let seed = (cfg.seed ^ 0x5C)
+        ^ (f as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    build_scheduler(cfg.scheduler, total, &cfg.engine, cfg.kv_blocks(),
+                    &cfg.overhead, seed, cfg.jobs)
 }
 
 /// The arrival sharder both deployments share (seeded off the cluster
@@ -855,6 +890,53 @@ mod tests {
         v.install_instance(0, Some(engs[0].snapshot()), 1.0);
         assert!(v.statuses().is_empty() && v.loads().is_empty());
         assert_eq!(v.epoch_of(0), None);
+    }
+
+    #[test]
+    fn restart_comes_back_alive_with_cold_view() {
+        use crate::config::{OverheadConfig, SchedulerKind};
+        use crate::scheduler::build_scheduler;
+
+        let engs = engines(2);
+        let sched = || {
+            build_scheduler(SchedulerKind::RoundRobin, 2,
+                            &EngineConfig::default(), 1056,
+                            &OverheadConfig::default(), 1, 1)
+        };
+        let mut fe = FrontEnd::new(0, sched(), 2);
+        fe.view.sync_all(&engs, &[true, true], 1.0, false, true);
+        fe.in_transit[1].push(Request::new(4, 0.0, 10, 5));
+        fe.dispatched = 3;
+        fe.crash();
+        fe.restart(sched(), true);
+        assert!(fe.alive);
+        assert_eq!(fe.view.active_count(), 0,
+                   "restart starts from a cold view");
+        assert_eq!(fe.in_transit[1].len(), 1,
+                   "wire dispatches survive the process");
+        assert_eq!(fe.dispatched, 3, "slot telemetry keeps accumulating");
+        assert!(fe.echo_on, "echo config is restored on restart");
+    }
+
+    #[test]
+    fn grow_slots_extends_bookkeeping_only_forward() {
+        use crate::config::{OverheadConfig, SchedulerKind};
+        use crate::scheduler::build_scheduler;
+
+        let mut fe = FrontEnd::new(
+            0,
+            build_scheduler(SchedulerKind::RoundRobin, 2,
+                            &EngineConfig::default(), 1056,
+                            &OverheadConfig::default(), 1, 1),
+            2,
+        );
+        fe.in_transit[1].push(Request::new(4, 0.0, 10, 5));
+        fe.grow_slots(4);
+        assert_eq!(fe.in_transit.len(), 4);
+        assert_eq!(fe.echoed.len(), 4);
+        assert_eq!(fe.in_transit[1].len(), 1, "existing entries survive");
+        fe.grow_slots(3);
+        assert_eq!(fe.in_transit.len(), 4, "never shrinks");
     }
 
     #[test]

@@ -79,7 +79,14 @@ pub struct SimResult {
     pub sampled: Vec<SampledArrival>,
     pub instances: Vec<InstanceStats>,
     pub provision_events: Vec<crate::provision::ProvisionEvent>,
-    /// (time, active_count) steps of the cluster size (Figure 8).
+    /// Every slot-lifecycle transition the run performed (scale-up,
+    /// drain, retire, fail, rejoin, pre-warm) in event order — the
+    /// shared vocabulary of [`crate::elastic`], also exported by the
+    /// wire gateway's `GET /status`.
+    pub lifecycle: Vec<crate::elastic::LifecycleEvent>,
+    /// (time, active_count) steps of the cluster size (Figure 8);
+    /// records shrinks (drain-based scale-down, failures) as well as
+    /// growth.
     pub size_timeline: Vec<(f64, usize)>,
     /// Prediction-runtime counters, summed over front-ends (Block family;
     /// None for heuristics).
@@ -179,6 +186,15 @@ pub struct ClusterSim {
     /// (Failure state itself lives in the provisioner — the single
     /// owner of the instance lifecycle.)
     step_gen: Vec<u64>,
+    /// Dispatch events currently in the queue per target instance —
+    /// the wire-side analogue is a request on the network.  A slot with
+    /// `inbound > 0` is not idle even if its engine is: scale-down
+    /// must not retire a host a request is flying toward.
+    inbound: Vec<usize>,
+    /// Last virtual time instance `i` did request work (a dispatch
+    /// landed or a step completed).  Drives the idle window check for
+    /// drain-based scale-down.
+    last_busy: Vec<f64>,
 }
 
 impl ClusterSim {
@@ -224,6 +240,8 @@ impl ClusterSim {
             status_epochs: vec![u64::MAX; total],
             loads: vec![None; total],
             step_gen: vec![0; total],
+            inbound: vec![0; total],
+            last_busy: vec![0.0; total],
         }
     }
 
@@ -429,6 +447,7 @@ impl ClusterSim {
         // dispatched it.
         self.frontends[f].in_transit[decision.instance]
             .push(req.clone());
+        self.inbound[decision.instance] += 1;
 
         self.in_flight_meta.insert(req.id, DispatchInfo {
             arrival: req.arrival,
@@ -503,13 +522,24 @@ impl ClusterSim {
         let want_statuses = self.cfg.scheduler.is_predictive()
             || self.opts.reference_path;
         let want_loads = !self.cfg.scheduler.is_predictive();
+        // One `ViewSync(f)` may be in the queue per front-end at a time.
+        // Tracked so a `FrontEndRestart` can restart a sync chain that
+        // died with the crash without double-arming one that is still
+        // in flight (armed before the crash, popping after the restart).
+        let mut viewsync_pending = vec![false; self.frontends.len()];
         if stale_views {
             for f in 0..self.frontends.len() {
                 self.sync_frontend(f, 0.0, want_statuses, want_loads);
                 queue.push(Event { time: self.cfg.sync_interval,
                                    kind: EventKind::ViewSync(f) });
+                viewsync_pending[f] = true;
             }
         }
+        // Drain-based scale-down: armed only when elasticity is on with
+        // an idle window — otherwise no `DrainCheck` ever enters the
+        // queue and the run is byte-identical to a scale-up-only build.
+        let scale_down = self.cfg.provision.enabled
+            && self.cfg.provision.scale_down_idle > 0.0;
 
         let mut metrics = MetricsCollector::new();
         let mut probes = Vec::new();
@@ -554,7 +584,11 @@ impl ClusterSim {
                 }
                 EventKind::Dispatch(idx, instance, f) => {
                     let req = &requests[idx];
-                    let landed = self.provisioner.active()[instance];
+                    self.inbound[instance] -= 1;
+                    // Draining slots take no new *decisions* but still
+                    // serve dispatches already on the wire; only dead /
+                    // retired hosts bounce.
+                    let landed = self.provisioner.serving(instance);
                     self.frontends[f].dispatch_landed(instance, req, landed);
                     if !landed {
                         // Connection refused: the target died while the
@@ -587,6 +621,7 @@ impl ClusterSim {
                         continue;
                     }
                     self.engines[instance].enqueue(req, now);
+                    self.last_busy[instance] = now;
                     if let Some(k) = redispatch_fault.remove(&req.id) {
                         // A re-dispatched request is back on a healthy
                         // instance: extend its fault's disruption window.
@@ -612,6 +647,7 @@ impl ClusterSim {
                         continue;
                     }
                     self.engines[i].finish_step();
+                    self.last_busy[i] = now;
                     for f in self.engines[i].take_finished() {
                         let info = self
                             .in_flight_meta
@@ -651,12 +687,82 @@ impl ClusterSim {
                         metrics.push(m);
                     }
                     self.kick_engine(i, &mut queue);
+                    if self.engines[i].is_idle() && self.inbound[i] == 0 {
+                        if scale_down && self.provisioner.active()[i] {
+                            // The instance just went idle: probe again
+                            // after the idle window.  A stale probe (the
+                            // slot got work in between) no-ops.
+                            queue.push(Event {
+                                time: now
+                                    + self.cfg.provision.scale_down_idle,
+                                kind: EventKind::DrainCheck(i),
+                            });
+                        } else if self.provisioner.lifecycle().is_draining(i)
+                        {
+                            // A draining slot finished its last in-flight
+                            // work (stale front-ends may land dispatches
+                            // after the drain began): release it.
+                            self.provisioner
+                                .lifecycle_mut()
+                                .retire(i, now, "retire");
+                        }
+                    }
+                }
+                EventKind::DrainCheck(i) => {
+                    // Scale-down probe, armed when the instance went
+                    // idle.  Only acts when the slot is still Active,
+                    // stayed idle for the whole window, nothing is
+                    // flying toward it, and the cluster is above its
+                    // floor — otherwise the probe is a stale no-op (a
+                    // fresh one re-arms at the next idle transition).
+                    let window = self.cfg.provision.scale_down_idle;
+                    let floor = self.cfg.provision.min_instances.max(1);
+                    if scale_down
+                        && self.provisioner.active()[i]
+                        && self.engines[i].is_idle()
+                        && self.inbound[i] == 0
+                        && now - self.last_busy[i] >= window - 1e-9
+                        && self.provisioner.active_count() > floor
+                    {
+                        let lc = self.provisioner.lifecycle_mut();
+                        lc.begin_drain(i, now, "scale-down");
+                        // Idle and nothing inbound: the drain grace is
+                        // already over — release the slot back to the
+                        // provisioning candidate pool.
+                        lc.retire(i, now, "retire");
+                        self.status_cache[i] = None;
+                        self.status_epochs[i] = u64::MAX;
+                        self.loads[i] = None;
+                        if stale_views {
+                            // Tell every live front-end the host left
+                            // the serving set (the reverse of the
+                            // boot-time announcement).
+                            for fe in &mut self.frontends {
+                                if fe.alive {
+                                    fe.view.sync_instance(
+                                        i, &self.engines[i], false, now);
+                                    fe.clear_echo(i);
+                                }
+                            }
+                        }
+                        size_timeline
+                            .push((now, self.provisioner.active_count()));
+                    }
                 }
                 EventKind::InstanceReady => {
                     let activated = self.provisioner.activate_ready(now);
                     for &i in &activated {
                         self.engines[i].advance_clock(now);
                         self.kick_engine(i, &mut queue);
+                        // A rejoining / pre-warmed host coming up
+                        // restores the capacity its fault took out:
+                        // close the fault's restoration clock.
+                        if let Some(k) = latest_fault_of_instance[i] {
+                            let rec = &mut fault_records[k];
+                            if rec.restored_at.is_none() {
+                                rec.restored_at = Some(now);
+                            }
+                        }
                         // A host coming up (elastic scale-up or fault
                         // rejoin) registers with every live front-end —
                         // the boot-time announcement real serving
@@ -686,9 +792,11 @@ impl ClusterSim {
                     }
                 }
                 EventKind::ViewSync(f) => {
+                    viewsync_pending[f] = false;
                     if !self.frontends[f].alive {
                         // A crashed front-end pulls no views, and its
-                        // sync chain dies with it.
+                        // sync chain dies with it (a restart re-arms
+                        // one).
                         continue;
                     }
                     self.sync_frontend(f, now, want_statuses, want_loads);
@@ -709,6 +817,7 @@ impl ClusterSim {
                             time: now + self.cfg.sync_interval,
                             kind: EventKind::ViewSync(f),
                         });
+                        viewsync_pending[f] = true;
                     }
                 }
                 EventKind::Fault(kind) => match kind {
@@ -733,12 +842,13 @@ impl ClusterSim {
                             || self.provisioner.is_failed(i)
                         {
                             // Unknown slot / already down: no-op.
-                        } else if !self.provisioner.active()[i] {
-                            // Not serving yet (backup or mid-cold-start):
-                            // the slot dies silently — nothing was lost.
-                            self.provisioner.fail(i);
+                        } else if !self.provisioner.serving(i) {
+                            // Not serving (backup, mid-cold-start, or
+                            // already retired): the slot dies silently —
+                            // nothing was lost.
+                            self.provisioner.fail(i, now);
                         } else {
-                            self.provisioner.fail(i);
+                            self.provisioner.fail(i, now);
                             // Cancel the in-flight step's completion.
                             self.step_gen[i] += 1;
                             // Invalidate the central snapshot cache.
@@ -764,6 +874,25 @@ impl ClusterSim {
                             size_timeline
                                 .push((now,
                                        self.provisioner.active_count()));
+                            if self.cfg.faults.prewarm {
+                                // Failure-as-breach pre-warming: the
+                                // fault itself is the capacity-breach
+                                // signal — cold-start the replacement
+                                // immediately instead of waiting for
+                                // the fault plan's rejoin (which then
+                                // no-ops: the slot is already booting).
+                                if let Some(ready) =
+                                    self.provisioner.prewarm(
+                                        i, now,
+                                        self.cfg.faults
+                                            .rejoin_cold_start)
+                                {
+                                    queue.push(Event {
+                                        time: ready,
+                                        kind: EventKind::InstanceReady,
+                                    });
+                                }
+                            }
                         }
                     }
                     FaultKind::InstanceRejoin(i) => {
@@ -777,6 +906,58 @@ impl ClusterSim {
                                     time: ready,
                                     kind: EventKind::InstanceReady,
                                 });
+                            }
+                        }
+                    }
+                    FaultKind::FrontEndRestart(f) => {
+                        if f < self.frontends.len()
+                            && !self.frontends[f].alive
+                        {
+                            // The crashed front-end returns after its
+                            // MTTR as a fresh process: same slot, same
+                            // deterministic scheduler seed, but a cold
+                            // view — statelessness means there is
+                            // nothing else to restore.
+                            let sched = frontend::frontend_scheduler(
+                                &self.cfg, self.engines.len(), f);
+                            let echo = self.cfg.local_echo
+                                && self.cfg.sync_interval > 0.0;
+                            self.frontends[f].restart(sched, echo);
+                            if self.opts.reference_path {
+                                self.frontends[f].set_reference_path(true);
+                            }
+                            self.sharder.set_alive(f, true);
+                            if let Some(k) = latest_fault_of_frontend[f] {
+                                let rec = &mut fault_records[k];
+                                if rec.restored_at.is_none() {
+                                    rec.restored_at = Some(now);
+                                }
+                            }
+                            if stale_views {
+                                // First pull immediately (the cold view
+                                // knows nothing), then back onto the
+                                // periodic chain.
+                                self.sync_frontend(f, now, want_statuses,
+                                                   want_loads);
+                                if arrivals_remaining > 0
+                                    && !viewsync_pending[f]
+                                {
+                                    queue.push(Event {
+                                        time: now + self.cfg.sync_interval,
+                                        kind: EventKind::ViewSync(f),
+                                    });
+                                    viewsync_pending[f] = true;
+                                }
+                            }
+                            if !parked.is_empty()
+                                && self.can_dispatch(f, stale_views)
+                            {
+                                for idx in parked.drain(..) {
+                                    queue.push(Event {
+                                        time: now,
+                                        kind: EventKind::Redispatch(idx),
+                                    });
+                                }
                             }
                         }
                     }
@@ -826,6 +1007,7 @@ impl ClusterSim {
             sampled,
             instances,
             provision_events: self.provisioner.events.clone(),
+            lifecycle: self.provisioner.lifecycle().log.clone(),
             size_timeline,
             predictor_stats,
             frontend_dispatches: self
@@ -1347,6 +1529,171 @@ mod tests {
         for s in &res.instances {
             assert_eq!(s.requests_served, 50);
         }
+    }
+
+    #[test]
+    fn idle_elasticity_knobs_reproduce_baseline_exactly() {
+        // The PR's parity bar: the new elasticity knobs, left inert
+        // (scale-down window without provisioning, pre-warm without
+        // faults, front-end MTTR without crashes), must reproduce the
+        // distributed baseline byte for byte — no extra events, no
+        // perturbed RNG draws.
+        let run = |mutate: fn(&mut ClusterConfig)| {
+            let mut cfg = small_cfg(SchedulerKind::Block);
+            cfg.frontends = 2;
+            cfg.sync_interval = 2.0;
+            mutate(&mut cfg);
+            run_experiment(cfg, &small_workload(8.0, 210),
+                           SimOptions::default())
+                .unwrap()
+        };
+        let placements = |r: &SimResult| -> Vec<(u64, usize, f64, f64)> {
+            r.metrics
+                .records
+                .iter()
+                .map(|m| (m.id, m.instance, m.dispatched, m.finish))
+                .collect()
+        };
+        let base = run(|_| {});
+        for (name, variant) in [
+            ("scale-down window, provisioning off",
+             run(|c| c.provision.scale_down_idle = 1.0)),
+            ("pre-warm, no faults", run(|c| c.faults.prewarm = true)),
+            ("front-end MTTR, no crashes",
+             run(|c| c.faults.frontend_mttr = 25.0)),
+        ] {
+            assert_eq!(placements(&base), placements(&variant), "{name}");
+            assert_eq!(base.metrics.summary(), variant.metrics.summary(),
+                       "{name}");
+            assert!(variant.lifecycle.is_empty(),
+                    "{name}: no lifecycle transitions on a static run");
+        }
+    }
+
+    #[test]
+    fn prewarm_shrinks_the_disruption_window() {
+        // Failure-as-breach pre-warming: the replacement cold-starts at
+        // the failure instead of waiting for the fault plan's rejoin,
+        // so capacity is back `MTTR` seconds earlier and the fault's
+        // disruption window shrinks accordingly.
+        use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+        let run = |prewarm: bool| {
+            let mut cfg = small_cfg(SchedulerKind::Block);
+            cfg.faults.rejoin_cold_start = 2.0;
+            cfg.faults.prewarm = prewarm;
+            run_experiment(
+                cfg, &small_workload(16.0, 240),
+                SimOptions {
+                    fault_plan: Some(FaultPlan::scripted(vec![
+                        FaultEvent { time: 5.0,
+                                     kind: FaultKind::InstanceFail(0) },
+                        FaultEvent { time: 25.0,
+                                     kind: FaultKind::InstanceRejoin(0) },
+                    ])),
+                    ..SimOptions::default()
+                })
+                .unwrap()
+        };
+        let window = |r: &SimResult| {
+            r.recovery
+                .reports
+                .iter()
+                .find(|rep| matches!(rep.record.kind,
+                                     FaultKind::InstanceFail(0)))
+                .expect("fail fault recorded")
+                .record
+                .disruption_window()
+        };
+        let wait = run(false);
+        let pre = run(true);
+        // Conservation holds either way.
+        assert_eq!(wait.metrics.len(), 240);
+        assert_eq!(pre.metrics.len(), 240);
+        // Rejoin-wait pays MTTR (20 s) + cold start; pre-warm pays only
+        // the cold start.
+        assert!(window(&pre) < window(&wait),
+                "pre-warm {} vs rejoin-wait {}", window(&pre), window(&wait));
+        assert!(window(&wait) >= 20.0, "rejoin-wait covers the MTTR");
+        // The lifecycle log shows the pre-warmed boot; the fault plan's
+        // later rejoin no-ops against the already-recovered slot.
+        assert!(pre.lifecycle.iter().any(|e| e.cause == "prewarm"
+                                         && e.state == "active"));
+        assert!(wait.lifecycle.iter().any(|e| e.cause == "rejoin"
+                                          && e.state == "active"));
+        assert!(!pre.lifecycle.iter().any(|e| e.cause == "rejoin"));
+        // Pre-warm restores the same final size.
+        assert_eq!(pre.size_timeline.last().unwrap().1, 4);
+    }
+
+    #[test]
+    fn idle_cluster_drains_down_to_its_floor() {
+        // Drain-based scale-down: once the burst is served and every
+        // instance has sat idle for the window, the cluster shrinks —
+        // but never below `min_instances`.
+        let mut cfg = small_cfg(SchedulerKind::Block);
+        cfg.provision.enabled = true;
+        cfg.provision.initial_instances = 4;
+        cfg.provision.max_instances = 4;
+        cfg.provision.threshold = 1.0e9; // never scale up
+        cfg.provision.scale_down_idle = 5.0;
+        cfg.provision.min_instances = 2;
+        let res = run_experiment(cfg, &small_workload(8.0, 60),
+                                 SimOptions::default())
+            .unwrap();
+        assert_eq!(res.metrics.len(), 60, "scale-down loses nothing");
+        assert_eq!(res.size_timeline.last().unwrap().1, 2,
+                   "drained to the floor: {:?}", res.size_timeline);
+        // The timeline records the shrinks, and the lifecycle log shows
+        // the drain → retire pairs.
+        assert!(res.size_timeline.iter().any(|&(_, s)| s == 3));
+        let drains = res.lifecycle.iter()
+            .filter(|e| e.state == "draining" && e.cause == "scale-down")
+            .count();
+        let retires = res.lifecycle.iter()
+            .filter(|e| e.state == "retired" && e.cause == "retire")
+            .count();
+        assert_eq!((drains, retires), (2, 2));
+    }
+
+    #[test]
+    fn frontend_restart_returns_with_a_cold_view_and_dispatches_again() {
+        // The restart path: a crashed front-end comes back after its
+        // MTTR with a cold view and a fresh scheduler, resumes its
+        // arrival slice, and the crash's restoration clock closes at
+        // the restart.
+        use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+        let mut cfg = small_cfg(SchedulerKind::Block);
+        cfg.frontends = 2;
+        cfg.sync_interval = 2.0;
+        let res = run_experiment(
+            cfg, &small_workload(8.0, 240),
+            SimOptions {
+                fault_plan: Some(FaultPlan::scripted(vec![
+                    FaultEvent { time: 5.0,
+                                 kind: FaultKind::FrontEndCrash(1) },
+                    FaultEvent { time: 15.0,
+                                 kind: FaultKind::FrontEndRestart(1) },
+                ])),
+                ..SimOptions::default()
+            })
+            .unwrap();
+        assert_eq!(res.metrics.len(), 240, "nothing lost across the bounce");
+        assert_eq!(res.recovery.dropped, 0);
+        let rep = &res.recovery.reports[0];
+        assert_eq!(rep.record.redispatched, 0, "still stateless");
+        assert!(rep.record.redirected > 0,
+                "the slice re-sharded while the front-end was down");
+        assert!((rep.record.disruption_window() - 10.0).abs() < 1e-9,
+                "window spans crash → restart: {}",
+                rep.record.disruption_window());
+        // The front-end dispatched again after t=15: more than zero,
+        // fewer than its healthy half-share.
+        assert!(res.frontend_dispatches[1] > 0,
+                "restarted front-end must dispatch");
+        assert!(res.frontend_dispatches[1] < 120,
+                "the 10 s outage cost it part of its slice: {:?}",
+                res.frontend_dispatches);
+        assert_eq!(res.frontend_dispatches.iter().sum::<u64>(), 240);
     }
 
     #[test]

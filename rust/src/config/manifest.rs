@@ -128,6 +128,17 @@ impl ClusterManifest {
         if self.gateways.is_empty() {
             bail!("manifest needs at least one gateway address");
         }
+        // Address lists must be collision-free: a duplicated address
+        // would alias two scheduler slots onto one daemon (double-counted
+        // load, double-delivered dispatches), and an instance sharing a
+        // gateway's address would route /generate traffic into /enqueue.
+        let mut seen = std::collections::HashSet::new();
+        for addr in self.instances.iter().chain(self.gateways.iter()) {
+            if !seen.insert(addr.as_str()) {
+                bail!("duplicate address '{addr}' in manifest \
+                       (instances and gateways must be unique)");
+            }
+        }
         if !self.time_scale.is_finite() || self.time_scale <= 0.0 {
             bail!("time_scale must be finite and > 0");
         }
@@ -135,6 +146,18 @@ impl ClusterManifest {
             bail!(
                 "cluster.n_instances ({}) != instance list length ({})",
                 self.cluster.n_instances,
+                self.instances.len()
+            );
+        }
+        // Provisioning indexes slots beyond the initial set; every slot
+        // it can reach must have a daemon address behind it.
+        if self.cluster.provision.enabled
+            && self.cluster.provision.max_instances > self.instances.len()
+        {
+            bail!(
+                "provision.max_instances ({}) indexes past the instance \
+                 list ({} addresses)",
+                self.cluster.provision.max_instances,
                 self.instances.len()
             );
         }
@@ -279,6 +302,47 @@ mod tests {
         }"#;
         assert!(ClusterManifest::from_json(&Json::parse(bad_scale).unwrap())
             .is_err());
+    }
+
+    #[test]
+    fn duplicate_addresses_rejected() {
+        let dup_instances = r#"{
+            "instances": ["127.0.0.1:9101", "127.0.0.1:9101"],
+            "gateways": ["127.0.0.1:9001"]
+        }"#;
+        assert!(ClusterManifest::from_json(
+            &Json::parse(dup_instances).unwrap())
+            .is_err());
+        let dup_gateways = r#"{
+            "instances": ["127.0.0.1:9101"],
+            "gateways": ["127.0.0.1:9001", "127.0.0.1:9001"]
+        }"#;
+        assert!(ClusterManifest::from_json(
+            &Json::parse(dup_gateways).unwrap())
+            .is_err());
+        let cross = r#"{
+            "instances": ["127.0.0.1:9101"],
+            "gateways": ["127.0.0.1:9101"]
+        }"#;
+        assert!(ClusterManifest::from_json(&Json::parse(cross).unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn provision_range_checked_against_instance_list() {
+        let mut cluster = ClusterConfig::default();
+        cluster.provision.enabled = true;
+        cluster.provision.initial_instances = 2;
+        cluster.provision.max_instances = 6;
+        let m = ClusterManifest::loopback(cluster, 3, 9100);
+        let err = m.validate().unwrap_err().to_string();
+        assert!(err.contains("max_instances"), "{err}");
+        // Enough addresses: valid.
+        let mut cluster = ClusterConfig::default();
+        cluster.provision.enabled = true;
+        cluster.provision.initial_instances = 2;
+        cluster.provision.max_instances = 6;
+        ClusterManifest::loopback(cluster, 6, 9100).validate().unwrap();
     }
 
     #[test]

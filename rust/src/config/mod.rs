@@ -222,6 +222,12 @@ pub struct ProvisionConfig {
     pub cold_start: f64,
     /// Minimum spacing between provisioning decisions, seconds.
     pub cooldown: f64,
+    /// Drain-based scale-down: an instance idle (empty, nothing
+    /// in-transit) for this many seconds is drained and retired.
+    /// 0 (the default) disables scale-down entirely.
+    pub scale_down_idle: f64,
+    /// Scale-down floor: never drain below this many active instances.
+    pub min_instances: usize,
 }
 
 impl Default for ProvisionConfig {
@@ -234,6 +240,8 @@ impl Default for ProvisionConfig {
             max_instances: 10,
             cold_start: 40.0,
             cooldown: 15.0,
+            scale_down_idle: 0.0,
+            min_instances: 1,
         }
     }
 }
@@ -262,6 +270,18 @@ pub struct FaultConfig {
     /// Cold start charged when a failed instance rejoins (the
     /// [`crate::provision::AutoProvisioner`] pending lifecycle).
     pub rejoin_cold_start: f64,
+    /// Mean time from a front-end crash to its restart, seconds.
+    /// 0 (the default) makes crashes permanent — the pre-elasticity
+    /// behavior.  A restarted front-end comes back with a cold
+    /// [`crate::cluster::frontend::StaleClusterView`]: statelessness
+    /// means nothing to recover, but the first dispatches pay the
+    /// cold-cache cost.
+    pub frontend_mttr: f64,
+    /// Failure-as-breach pre-warming: treat every `InstanceFail` as a
+    /// capacity breach and cold-start the replacement immediately
+    /// (`rejoin_cold_start` seconds) instead of waiting for the fault
+    /// plan's rejoin.
+    pub prewarm: bool,
     /// Sliding window for per-fault recovery telemetry, seconds.
     pub report_window: f64,
     /// Seed of the fault-plan RNG (independent of the simulation RNG).
@@ -276,6 +296,8 @@ impl Default for FaultConfig {
             frontend_mttf: 0.0,
             detect_delay: 0.25,
             rejoin_cold_start: 5.0,
+            frontend_mttr: 0.0,
+            prewarm: false,
             report_window: 15.0,
             seed: 13,
         }
@@ -294,6 +316,7 @@ impl FaultConfig {
             ("frontend_mttf", self.frontend_mttf),
             ("detect_delay", self.detect_delay),
             ("rejoin_cold_start", self.rejoin_cold_start),
+            ("frontend_mttr", self.frontend_mttr),
         ] {
             if !v.is_finite() || v < 0.0 {
                 bail!("faults.{name} must be finite and >= 0");
@@ -315,6 +338,8 @@ impl FaultConfig {
         o.insert("frontend_mttf", self.frontend_mttf);
         o.insert("detect_delay", self.detect_delay);
         o.insert("rejoin_cold_start", self.rejoin_cold_start);
+        o.insert("frontend_mttr", self.frontend_mttr);
+        o.insert("prewarm", self.prewarm);
         o.insert("report_window", self.report_window);
         o.insert("seed", self.seed);
         Json::Obj(o)
@@ -336,6 +361,12 @@ impl FaultConfig {
         }
         if let Some(v) = j.opt("rejoin_cold_start") {
             c.rejoin_cold_start = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("frontend_mttr") {
+            c.frontend_mttr = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("prewarm") {
+            c.prewarm = v.as_bool()?;
         }
         if let Some(v) = j.opt("report_window") {
             c.report_window = v.as_f64()?;
@@ -456,6 +487,17 @@ impl ClusterConfig {
         {
             bail!("max_instances < initial_instances");
         }
+        if !self.provision.scale_down_idle.is_finite()
+            || self.provision.scale_down_idle < 0.0
+        {
+            bail!("provision.scale_down_idle must be finite and >= 0");
+        }
+        if self.provision.enabled
+            && self.provision.scale_down_idle > 0.0
+            && self.provision.min_instances == 0
+        {
+            bail!("provision.min_instances must be > 0 when scale-down is on");
+        }
         if self.jobs == 0 {
             bail!("jobs must be > 0 (1 = serial fan-out)");
         }
@@ -502,6 +544,8 @@ impl ClusterConfig {
         p.insert("max_instances", self.provision.max_instances);
         p.insert("cold_start", self.provision.cold_start);
         p.insert("cooldown", self.provision.cooldown);
+        p.insert("scale_down_idle", self.provision.scale_down_idle);
+        p.insert("min_instances", self.provision.min_instances);
         o.insert("provision", p);
         o.insert("predictor_replicas", self.predictor_replicas);
         o.insert("frontends", self.frontends);
@@ -592,6 +636,12 @@ impl ClusterConfig {
             }
             if let Some(v) = p.opt("cooldown") {
                 c.provision.cooldown = v.as_f64()?;
+            }
+            if let Some(v) = p.opt("scale_down_idle") {
+                c.provision.scale_down_idle = v.as_f64()?;
+            }
+            if let Some(v) = p.opt("min_instances") {
+                c.provision.min_instances = v.as_usize()?;
             }
         }
         if let Some(v) = j.opt("predictor_replicas") {
@@ -688,6 +738,8 @@ mod tests {
         c.engine.max_batch_size = 24;
         c.provision.enabled = true;
         c.provision.predictive = false;
+        c.provision.scale_down_idle = 12.0;
+        c.provision.min_instances = 2;
         c.jobs = 4;
         c.frontends = 3;
         c.sync_interval = 2.5;
@@ -697,6 +749,8 @@ mod tests {
         c.overhead.sync_ack_cost = 0.005;
         c.faults.instance_mttf = 40.0;
         c.faults.frontend_mttf = 90.0;
+        c.faults.frontend_mttr = 20.0;
+        c.faults.prewarm = true;
         c.faults.seed = 99;
         let j = c.to_json();
         let c2 = ClusterConfig::from_json(&j).unwrap();
@@ -713,6 +767,10 @@ mod tests {
         assert!((c2.overhead.sync_ack_cost - 0.005).abs() < 1e-12);
         assert!((c2.faults.instance_mttf - 40.0).abs() < 1e-12);
         assert!((c2.faults.frontend_mttf - 90.0).abs() < 1e-12);
+        assert!((c2.faults.frontend_mttr - 20.0).abs() < 1e-12);
+        assert!(c2.faults.prewarm);
+        assert!((c2.provision.scale_down_idle - 12.0).abs() < 1e-12);
+        assert_eq!(c2.provision.min_instances, 2);
         assert_eq!(c2.faults.seed, 99);
         assert!(c2.faults.enabled());
     }
@@ -733,6 +791,20 @@ mod tests {
 
         let mut c = ClusterConfig::default();
         c.faults.report_window = f64::INFINITY;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.faults.frontend_mttr = -2.0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.provision.scale_down_idle = -1.0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.provision.enabled = true;
+        c.provision.scale_down_idle = 5.0;
+        c.provision.min_instances = 0;
         assert!(c.validate().is_err());
     }
 

@@ -1,0 +1,377 @@
+//! Shared active-set lifecycle: one state machine per instance slot.
+//!
+//! Both elasticity drivers — the simulator's
+//! [`crate::provision::AutoProvisioner`] and the wire gateway
+//! (`block serve --role gateway`) — mutate the instance set through this
+//! tier, so scale-up, drain-based scale-down, failure, pre-warming, and
+//! rejoin are one lifecycle instead of three half-implementations:
+//!
+//! ```text
+//!            begin_cold_start                    activate_ready
+//!   Backup ───────────────────► Pending{ready} ─────────────────► Active
+//!   Retired ──────────────┘          │                              │
+//!   Failed ───────────────┘          │ fail (cold start cancelled)  │ begin_drain
+//!     ▲                              ▼                              ▼
+//!     └────────────────────────── Failed ◄──── fail ──────────── Draining
+//!                                                                   │ retire
+//!                                                                   ▼
+//!                                                                Retired
+//! ```
+//!
+//! State semantics:
+//!
+//! * **Backup** — never provisioned; spare capacity.
+//! * **Pending** — cold-starting (model load); schedulable at `ready`.
+//!   Scale-up, rejoin, and failure-as-breach pre-warming all pass
+//!   through here — a rejoining host is just a provisioned host whose
+//!   cold start was scheduled by a fault instead of a latency trigger.
+//! * **Active** — serving and eligible for new dispatches.
+//! * **Draining** — excluded from new dispatches but still finishing
+//!   in-flight work (scale-down grace).
+//! * **Retired** — drained to empty and released; may be provisioned
+//!   again (back in the backup pool).
+//! * **Failed** — crashed / unreachable; excluded from dispatch *and*
+//!   from the provisioning candidate pool until it rejoins.
+//!
+//! Every transition is logged as a [`LifecycleEvent`], which is the
+//! vocabulary `SimResult` and the gateway's `GET /status` share for
+//! their elasticity timelines.
+
+/// Per-slot lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SlotState {
+    /// Never provisioned (spare capacity).
+    Backup,
+    /// Cold-starting; schedulable once `ready` elapses.
+    Pending {
+        /// Time the cold start completes.
+        ready: f64,
+    },
+    /// Serving and eligible for new dispatches.
+    Active,
+    /// No new dispatches; finishing in-flight work before retiring.
+    Draining,
+    /// Drained and released; a provisioning candidate again.
+    Retired,
+    /// Crashed / unreachable until rejoin.
+    Failed,
+}
+
+impl SlotState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SlotState::Backup => "backup",
+            SlotState::Pending { .. } => "pending",
+            SlotState::Active => "active",
+            SlotState::Draining => "draining",
+            SlotState::Retired => "retired",
+            SlotState::Failed => "failed",
+        }
+    }
+}
+
+/// One logged transition: slot `slot` entered state `state` at `time`
+/// because of `cause` ("scale-up", "scale-down", "retire", "fail",
+/// "rejoin", "prewarm", "bounce", "manifest-add", "manifest-remove").
+#[derive(Debug, Clone, PartialEq)]
+pub struct LifecycleEvent {
+    pub time: f64,
+    pub slot: usize,
+    /// Name of the state entered (see [`SlotState::name`]).
+    pub state: &'static str,
+    /// What drove the transition.
+    pub cause: &'static str,
+}
+
+/// The cluster's slot states plus the transition log.
+///
+/// Invariant: `mask[i] == matches!(slots[i], SlotState::Active)` — the
+/// mask is the dispatchable set the schedulers and views consume, kept
+/// as a plain `&[bool]` so hot paths never walk the enum.
+#[derive(Debug)]
+pub struct ActiveSet {
+    slots: Vec<SlotState>,
+    mask: Vec<bool>,
+    /// Pending slots in cold-start *insertion* order with the cause that
+    /// started the boot — activation preserves this order so event
+    /// processing stays deterministic.
+    boot_order: Vec<(usize, &'static str)>,
+    pub log: Vec<LifecycleEvent>,
+}
+
+impl ActiveSet {
+    /// `total` slots, the first `initial_active` already Active (no log
+    /// entries — the starting set is configuration, not a transition).
+    pub fn new(total: usize, initial_active: usize) -> Self {
+        assert!(initial_active <= total);
+        let mut slots = vec![SlotState::Backup; total];
+        let mut mask = vec![false; total];
+        for i in 0..initial_active {
+            slots[i] = SlotState::Active;
+            mask[i] = true;
+        }
+        ActiveSet { slots, mask, boot_order: Vec::new(), log: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn state(&self, i: usize) -> SlotState {
+        self.slots[i]
+    }
+
+    /// The dispatchable mask (Active slots only).
+    pub fn mask(&self) -> &[bool] {
+        &self.mask
+    }
+
+    pub fn is_active(&self, i: usize) -> bool {
+        self.mask[i]
+    }
+
+    pub fn is_failed(&self, i: usize) -> bool {
+        matches!(self.slots[i], SlotState::Failed)
+    }
+
+    pub fn is_pending(&self, i: usize) -> bool {
+        matches!(self.slots[i], SlotState::Pending { .. })
+    }
+
+    pub fn is_draining(&self, i: usize) -> bool {
+        matches!(self.slots[i], SlotState::Draining)
+    }
+
+    /// May slot `i` still *finish* work (accept in-flight landings)?
+    /// Active and Draining slots serve; everything else bounces.
+    pub fn serving(&self, i: usize) -> bool {
+        matches!(self.slots[i], SlotState::Active | SlotState::Draining)
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.mask.iter().filter(|&&a| a).count()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.boot_order.len()
+    }
+
+    /// First slot that can host a fresh provision: Backup or Retired.
+    /// (Failed slots rejoin through their own path; Draining slots are
+    /// on their way out.)
+    pub fn candidate(&self) -> Option<usize> {
+        (0..self.slots.len()).find(|&i| {
+            matches!(self.slots[i], SlotState::Backup | SlotState::Retired)
+        })
+    }
+
+    /// Begin a cold start on slot `i`, ready at `ready`.  Valid from
+    /// Backup, Retired, or Failed (the rejoin/pre-warm path).
+    pub fn begin_cold_start(&mut self, i: usize, ready: f64, now: f64,
+                            cause: &'static str) {
+        debug_assert!(matches!(
+            self.slots[i],
+            SlotState::Backup | SlotState::Retired | SlotState::Failed
+        ));
+        self.slots[i] = SlotState::Pending { ready };
+        self.mask[i] = false;
+        self.boot_order.push((i, cause));
+        self.log.push(LifecycleEvent { time: now, slot: i,
+                                       state: "pending", cause });
+    }
+
+    /// Slot `i` is gone: cancels any in-progress cold start.
+    pub fn fail(&mut self, i: usize, now: f64, cause: &'static str) {
+        self.slots[i] = SlotState::Failed;
+        self.mask[i] = false;
+        self.boot_order.retain(|&(p, _)| p != i);
+        self.log.push(LifecycleEvent { time: now, slot: i,
+                                       state: "failed", cause });
+    }
+
+    /// Activate pending slots whose cold start has elapsed, in boot
+    /// order.  Returns the newly Active slot indices.
+    pub fn activate_ready(&mut self, now: f64) -> Vec<usize> {
+        let mut ready = Vec::new();
+        let mut causes = Vec::new();
+        self.boot_order.retain(|&(i, cause)| {
+            let t = match self.slots[i] {
+                SlotState::Pending { ready } => ready,
+                _ => unreachable!("boot_order holds only Pending slots"),
+            };
+            if t <= now + 1e-12 {
+                ready.push(i);
+                causes.push(cause);
+                false
+            } else {
+                true
+            }
+        });
+        for (&i, &cause) in ready.iter().zip(&causes) {
+            self.slots[i] = SlotState::Active;
+            self.mask[i] = true;
+            self.log.push(LifecycleEvent { time: now, slot: i,
+                                           state: "active", cause });
+        }
+        ready
+    }
+
+    /// Force slot `i` Active right now (wire-side: a probed daemon
+    /// answered, or a manifest update added a live host).
+    pub fn set_active(&mut self, i: usize, now: f64, cause: &'static str) {
+        self.boot_order.retain(|&(p, _)| p != i);
+        self.slots[i] = SlotState::Active;
+        self.mask[i] = true;
+        self.log.push(LifecycleEvent { time: now, slot: i,
+                                       state: "active", cause });
+    }
+
+    /// Stop dispatching to Active slot `i`; it keeps serving in-flight
+    /// work until [`Self::retire`].
+    pub fn begin_drain(&mut self, i: usize, now: f64, cause: &'static str) {
+        debug_assert!(matches!(self.slots[i], SlotState::Active));
+        self.slots[i] = SlotState::Draining;
+        self.mask[i] = false;
+        self.log.push(LifecycleEvent { time: now, slot: i,
+                                       state: "draining", cause });
+    }
+
+    /// Release slot `i` back to the candidate pool.
+    pub fn retire(&mut self, i: usize, now: f64, cause: &'static str) {
+        self.boot_order.retain(|&(p, _)| p != i);
+        self.slots[i] = SlotState::Retired;
+        self.mask[i] = false;
+        self.log.push(LifecycleEvent { time: now, slot: i,
+                                       state: "retired", cause });
+    }
+
+    /// Return a Retired slot to the Backup pool without provisioning it
+    /// (a manifest update re-added its address — the slot becomes a
+    /// re-admission candidate again, nothing more).
+    pub fn reopen(&mut self, i: usize, now: f64, cause: &'static str) {
+        debug_assert!(matches!(self.slots[i], SlotState::Retired));
+        self.slots[i] = SlotState::Backup;
+        self.mask[i] = false;
+        self.log.push(LifecycleEvent { time: now, slot: i,
+                                       state: "backup", cause });
+    }
+
+    /// Append `n` Backup slots (runtime manifest growth).
+    pub fn grow(&mut self, n: usize) {
+        self.slots.extend(std::iter::repeat(SlotState::Backup).take(n));
+        self.mask.extend(std::iter::repeat(false).take(n));
+    }
+
+    /// Per-slot state names, for status exports.
+    pub fn state_names(&self) -> Vec<&'static str> {
+        self.slots.iter().map(|s| s.name()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_set_and_mask_agree() {
+        let s = ActiveSet::new(6, 4);
+        assert_eq!(s.len(), 6);
+        assert_eq!(s.active_count(), 4);
+        assert_eq!(s.mask(), &[true, true, true, true, false, false]);
+        assert_eq!(s.state(5), SlotState::Backup);
+        assert!(s.log.is_empty(), "initial set is config, not transitions");
+    }
+
+    #[test]
+    fn cold_start_lifecycle_in_boot_order() {
+        let mut s = ActiveSet::new(6, 2);
+        s.begin_cold_start(4, 10.0, 0.0, "scale-up");
+        s.begin_cold_start(2, 10.0, 0.0, "rejoin");
+        assert!(s.is_pending(4) && s.is_pending(2));
+        assert!(!s.is_active(4));
+        assert!(s.activate_ready(9.0).is_empty());
+        // Same ready time: activation preserves insertion order.
+        assert_eq!(s.activate_ready(10.0), vec![4, 2]);
+        assert!(s.is_active(4) && s.is_active(2));
+        let actives: Vec<_> = s.log.iter()
+            .filter(|e| e.state == "active").collect();
+        assert_eq!(actives.len(), 2);
+        assert_eq!(actives[0].cause, "scale-up");
+        assert_eq!(actives[1].cause, "rejoin");
+    }
+
+    #[test]
+    fn fail_cancels_cold_start() {
+        let mut s = ActiveSet::new(4, 2);
+        s.begin_cold_start(2, 5.0, 0.0, "scale-up");
+        s.fail(2, 1.0, "fail");
+        assert!(s.activate_ready(100.0).is_empty());
+        assert!(s.is_failed(2));
+        assert_eq!(s.pending_count(), 0);
+    }
+
+    #[test]
+    fn drain_excludes_from_mask_but_keeps_serving() {
+        let mut s = ActiveSet::new(4, 4);
+        s.begin_drain(1, 3.0, "scale-down");
+        assert!(!s.is_active(1), "draining slots take no new dispatches");
+        assert!(s.serving(1), "draining slots finish in-flight work");
+        assert_eq!(s.active_count(), 3);
+        s.retire(1, 4.0, "retire");
+        assert!(!s.serving(1));
+        assert_eq!(s.state(1), SlotState::Retired);
+    }
+
+    #[test]
+    fn retired_slots_are_candidates_failed_are_not() {
+        let mut s = ActiveSet::new(4, 4);
+        s.fail(0, 1.0, "fail");
+        assert_eq!(s.candidate(), None, "failed slots rejoin, not re-provision");
+        s.begin_drain(1, 2.0, "scale-down");
+        s.retire(1, 2.0, "retire");
+        assert_eq!(s.candidate(), Some(1), "retired slot back in the pool");
+        s.begin_cold_start(1, 5.0, 3.0, "scale-up");
+        assert_eq!(s.candidate(), None);
+    }
+
+    #[test]
+    fn set_active_is_immediate_and_logged() {
+        let mut s = ActiveSet::new(3, 3);
+        s.fail(2, 1.0, "bounce");
+        assert!(!s.serving(2));
+        s.set_active(2, 6.0, "rejoin");
+        assert!(s.is_active(2));
+        let last = s.log.last().unwrap();
+        assert_eq!((last.slot, last.state, last.cause), (2, "active", "rejoin"));
+        assert!((last.time - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reopen_returns_retired_slot_to_backup() {
+        let mut s = ActiveSet::new(3, 3);
+        s.begin_drain(2, 1.0, "manifest-remove");
+        s.retire(2, 2.0, "retire");
+        s.reopen(2, 3.0, "manifest-add");
+        assert_eq!(s.state(2), SlotState::Backup);
+        assert_eq!(s.candidate(), Some(2));
+        assert_eq!(s.active_count(), 2);
+        let last = s.log.last().unwrap();
+        assert_eq!((last.state, last.cause), ("backup", "manifest-add"));
+    }
+
+    #[test]
+    fn grow_appends_backup_slots() {
+        let mut s = ActiveSet::new(2, 2);
+        s.grow(2);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.state(3), SlotState::Backup);
+        assert_eq!(s.active_count(), 2);
+        s.set_active(3, 0.5, "manifest-add");
+        assert_eq!(s.active_count(), 3);
+        assert_eq!(s.state_names(), vec!["active", "active", "backup", "active"]);
+    }
+}

@@ -18,7 +18,12 @@
 //!   goodput dip around each fault;
 //! * **predictive re-dispatch places better** — Block re-predicts the
 //!   bounced requests against the shrunken cluster, while the counter
-//!   heuristics re-count blocks from (possibly stale) views.
+//!   heuristics re-count blocks from (possibly stale) views;
+//! * **pre-warming shrinks the disruption window** — every faulty point
+//!   runs twice, rejoin-wait (the failed host comes back after MTTR)
+//!   vs failure-as-breach pre-warm (`faults.prewarm`: the failure
+//!   itself schedules a cold-start replacement), and the pre-warm run
+//!   must show the smaller mean disruption window and goodput dip.
 //!
 //! Results land in `results/chaos.json` (`schema: "chaos/v1"`),
 //! validated by the `chaos-smoke` CI job.
@@ -72,6 +77,10 @@ struct Point {
     recovery: RecoveryStats,
     instance_mttf: f64,
     frontend_mttf: f64,
+    /// The same point re-run with failure-as-breach pre-warming
+    /// (`faults.prewarm = true`, identical fault plan) — only for
+    /// levels with instance faults.
+    prewarm: Option<(RunSummary, RecoveryStats)>,
 }
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
@@ -108,21 +117,42 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             cfg.faults.instance_mttf = inst_mult * span;
             cfg.faults.instance_mttr = span / 4.0;
             cfg.faults.frontend_mttf = fe_mult * span;
+            // Crashed front-ends come back with a cold view after an
+            // MTTR (the restart-with-empty-view path) at levels that
+            // crash front-ends at all.
+            cfg.faults.frontend_mttr =
+                if fe_mult > 0.0 { span / 4.0 } else { 0.0 };
             cfg.faults.rejoin_cold_start = 2.0;
             cfg.faults.report_window = (span / 3.0).clamp(1.0, 15.0);
             cfg.faults.seed = ctx.seed ^ 0xC4A0;
-            let res = run_experiment(
-                cfg,
-                &sharegpt_workload(SWEEP_QPS, n, ctx.seed),
-                SimOptions { probes: false, ..SimOptions::default() },
-            )?;
-            // The conservation law, checked on every point: what was
-            // not served must be explicitly dropped.
-            anyhow::ensure!(
-                res.metrics.len() as u64 + res.recovery.dropped == n as u64,
-                "conservation violated: {} served + {} dropped != {n}",
-                res.metrics.len(), res.recovery.dropped,
-            );
+            let workload = sharegpt_workload(SWEEP_QPS, n, ctx.seed);
+            let opts = SimOptions { probes: false, ..SimOptions::default() };
+            // Conservation law, checked on every run: what was not
+            // served must be explicitly dropped.
+            let conserve = |res: &crate::cluster::SimResult| {
+                anyhow::ensure!(
+                    res.metrics.len() as u64 + res.recovery.dropped
+                        == n as u64,
+                    "conservation violated: {} served + {} dropped != {n}",
+                    res.metrics.len(), res.recovery.dropped,
+                );
+                Ok(())
+            };
+            let res = run_experiment(cfg.clone(), &workload, opts.clone())?;
+            conserve(&res)?;
+            // Pre-warm comparison: identical fault plan (same seed),
+            // only the recovery policy differs — the failure itself
+            // schedules a cold-start replacement instead of waiting
+            // out the rejoin MTTR.
+            let prewarm = if inst_mult > 0.0 {
+                let mut pcfg = cfg;
+                pcfg.faults.prewarm = true;
+                let pres = run_experiment(pcfg, &workload, opts)?;
+                conserve(&pres)?;
+                Some((pres.metrics.summary(), pres.recovery))
+            } else {
+                None
+            };
             Ok(Point {
                 frontends,
                 level: name,
@@ -132,6 +162,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
                 recovery: res.recovery,
                 instance_mttf: inst_mult * span,
                 frontend_mttf: fe_mult * span,
+                prewarm,
             })
         },
     );
@@ -147,6 +178,14 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         let p = point?;
         let s = &p.summary;
         let r = &p.recovery;
+        // Pre-warm vs rejoin-wait columns ("-" at fault-free points).
+        let (pw_disrupt, pw_dip) = match &p.prewarm {
+            Some((_, pr)) => (
+                format!("{:.2}", pr.mean_disruption()),
+                format!("{:.2}", pr.mean_goodput_dip()),
+            ),
+            None => ("-".to_string(), "-".to_string()),
+        };
         rows.push(vec![
             format!("{}", p.frontends),
             p.level.to_string(),
@@ -158,7 +197,10 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             format!("{}", r.reports.len()),
             format!("{}", r.total_redispatched),
             format!("{}", r.total_redirected),
-            format!("{:.2}", r.max_disruption()),
+            format!("{:.2}", r.mean_disruption()),
+            pw_disrupt,
+            format!("{:.2}", r.mean_goodput_dip()),
+            pw_dip,
             format!("{:.2}", r.worst_p99_after()),
         ]);
         let mut j = s.to_json();
@@ -170,6 +212,14 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             o.insert("instance_mttf", p.instance_mttf);
             o.insert("frontend_mttf", p.frontend_mttf);
             o.insert("recovery", r.to_json());
+            if let Some((ps, pr)) = &p.prewarm {
+                let mut pw = match ps.to_json() {
+                    Json::Obj(pw) => pw,
+                    _ => unreachable!("summary serializes to an object"),
+                };
+                pw.insert("recovery", pr.to_json());
+                o.insert("prewarm", Json::Obj(pw));
+            }
         }
         pts.insert(
             format!("{}@fe{}/{}", p.kind.name(), p.frontends, p.level),
@@ -178,11 +228,12 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
     }
     out.insert("points", Json::Obj(pts));
     println!("Chaos sweep — fault level × front-ends at {SWEEP_QPS} QPS \
-              ({n} requests/point, {:.0}s span)", span);
+              ({n} requests/point, {:.0}s span; disrupt/dip columns \
+              compare rejoin-wait vs pre-warm)", span);
     println!("{}", render_table(
         &["frontends", "faults", "scheduler", "p99 TTFT", "p99 e2e",
           "served", "drop", "n_flt", "redisp", "redir", "disrupt(s)",
-          "p99@fault"],
+          "pw_disrupt", "dip", "pw_dip", "p99@fault"],
         &rows));
 
     ctx.write_json("chaos", &Json::Obj(out))

@@ -25,13 +25,18 @@
 //!
 //! Semantics of each fault (enforced by `cluster/mod.rs`):
 //!
-//! * **FrontEndCrash(f)** — front-end `f` dies permanently.  Its stale
-//!   view is dropped, the [`crate::cluster::frontend::ArrivalSharder`]
+//! * **FrontEndCrash(f)** — front-end `f` dies.  Its stale view is
+//!   dropped, the [`crate::cluster::frontend::ArrivalSharder`]
 //!   re-shards its arrival slice across survivors, and its already-sent
 //!   dispatches land normally (they are on the wire, not in the
 //!   front-end).  Nothing is re-dispatched — that *is* the
 //!   statelessness proof, asserted by
 //!   `cluster::tests::frontend_crash_reshards_without_redispatch`.
+//! * **FrontEndRestart(f)** — the crashed front-end returns with a cold
+//!   [`crate::cluster::frontend::StaleClusterView`] and a fresh
+//!   scheduler: nothing to recover, but the first dispatches pay the
+//!   cold-cache cost.  Sampled when
+//!   [`crate::config::FaultConfig::frontend_mttr`] > 0.
 //! * **InstanceFail(i)** — instance `i` loses its queued and running
 //!   sequences and its in-flight step.  The lost requests (plus any
 //!   dispatch that subsequently bounces off the dead host) re-enter the
@@ -57,8 +62,13 @@ use crate::util::stats;
 /// One injectable failure (indices are stable run-long slot numbers).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum FaultKind {
-    /// Scheduler front-end `.0` dies permanently.
+    /// Scheduler front-end `.0` dies (permanently unless the plan
+    /// schedules a [`FaultKind::FrontEndRestart`]).
     FrontEndCrash(usize),
+    /// Crashed front-end `.0` restarts with a cold view — statelessness
+    /// means nothing to recover, but the first dispatches pay the
+    /// cold-cache cost.
+    FrontEndRestart(usize),
     /// Instance `.0` dies, losing queued + running sequences.
     InstanceFail(usize),
     /// Instance `.0` begins rejoining (cold start applies on top).
@@ -69,6 +79,7 @@ impl FaultKind {
     pub fn name(&self) -> &'static str {
         match self {
             FaultKind::FrontEndCrash(_) => "frontend-crash",
+            FaultKind::FrontEndRestart(_) => "frontend-restart",
             FaultKind::InstanceFail(_) => "instance-fail",
             FaultKind::InstanceRejoin(_) => "instance-rejoin",
         }
@@ -78,6 +89,7 @@ impl FaultKind {
     pub fn target(&self) -> usize {
         match self {
             FaultKind::FrontEndCrash(i)
+            | FaultKind::FrontEndRestart(i)
             | FaultKind::InstanceFail(i)
             | FaultKind::InstanceRejoin(i) => *i,
         }
@@ -120,8 +132,12 @@ impl FaultPlan {
     /// * Each instance fails after `Exp(mean = instance_mttf)`, rejoins
     ///   after a further `Exp(mean = instance_mttr)`, then becomes
     ///   eligible to fail again — repeating until the horizon.
-    /// * Each front-end except index 0 crashes once at
-    ///   `Exp(mean = frontend_mttf)` if that lands inside the horizon.
+    /// * Each front-end except index 0 crashes at
+    ///   `Exp(mean = frontend_mttf)`.  With `frontend_mttr == 0` the
+    ///   crash is permanent and sampled once (the pre-elasticity
+    ///   behavior, draw for draw); with `frontend_mttr > 0` the
+    ///   front-end restarts after a further `Exp(mean = frontend_mttr)`
+    ///   and the crash/restart cycle repeats until the horizon.
     ///   Front-end 0 is the designated survivor, guaranteeing sampled
     ///   plans never leave the cluster without a dispatcher.
     ///
@@ -164,12 +180,28 @@ impl FaultPlan {
                     (cfg.seed ^ 0xFE0_C4A5)
                         .wrapping_add((f as u64).wrapping_mul(GOLDEN)),
                 );
-                let t = r.exponential(1.0 / cfg.frontend_mttf);
-                if t < horizon {
-                    events.push(FaultEvent {
-                        time: t,
-                        kind: FaultKind::FrontEndCrash(f),
-                    });
+                if cfg.frontend_mttr > 0.0 {
+                    let mut t = r.exponential(1.0 / cfg.frontend_mttf);
+                    while t < horizon {
+                        events.push(FaultEvent {
+                            time: t,
+                            kind: FaultKind::FrontEndCrash(f),
+                        });
+                        let back = t + r.exponential(1.0 / cfg.frontend_mttr);
+                        events.push(FaultEvent {
+                            time: back,
+                            kind: FaultKind::FrontEndRestart(f),
+                        });
+                        t = back + r.exponential(1.0 / cfg.frontend_mttf);
+                    }
+                } else {
+                    let t = r.exponential(1.0 / cfg.frontend_mttf);
+                    if t < horizon {
+                        events.push(FaultEvent {
+                            time: t,
+                            kind: FaultKind::FrontEndCrash(f),
+                        });
+                    }
                 }
             }
         }
@@ -191,6 +223,12 @@ pub struct FaultRecord {
     /// Latest time one of this fault's re-dispatched requests landed on
     /// a healthy instance (equals `time` when nothing was lost).
     pub last_landed: f64,
+    /// When the lost *capacity* came back: the failed instance
+    /// re-activated (rejoin or pre-warm cold start completing), or the
+    /// crashed front-end restarted.  `None` while the component is
+    /// still down — the disruption window then only covers work
+    /// recovery, as it did before capacity restoration was tracked.
+    pub restored_at: Option<f64>,
     /// Requests this fault lost that were *never* recovered — they were
     /// still parked when the run ended and are counted in
     /// [`RecoveryStats::dropped`].
@@ -205,19 +243,26 @@ impl FaultRecord {
             redispatched: 0,
             redirected: 0,
             last_landed: time,
+            restored_at: None,
             unrecovered: 0,
         }
     }
 
-    /// Seconds from the fault until its last re-dispatched request was
-    /// back on a healthy instance; infinite when some of its lost
+    /// Seconds from the fault until both its lost work was back on a
+    /// healthy instance *and* (when the component recovered inside the
+    /// run) its capacity was restored; infinite when some of its lost
     /// requests never recovered at all (a 0 here would make total loss
-    /// read as instant recovery).
+    /// read as instant recovery).  This is the quantity failure-as-
+    /// breach pre-warming shrinks: rejoin-wait pays MTTR + cold start,
+    /// pre-warm pays only the cold start.
     pub fn disruption_window(&self) -> f64 {
         if self.unrecovered > 0 {
             return f64::INFINITY;
         }
-        self.last_landed - self.time
+        match self.restored_at {
+            Some(r) => r.max(self.last_landed) - self.time,
+            None => self.last_landed - self.time,
+        }
     }
 }
 
@@ -250,6 +295,10 @@ impl FaultReport {
         o.insert("redispatched", self.record.redispatched);
         o.insert("redirected", self.record.redirected);
         o.insert("unrecovered", self.record.unrecovered);
+        match self.record.restored_at {
+            Some(r) => o.insert("restored_at", r),
+            None => o.insert("restored_at", Json::Null),
+        }
         // INF (never recovered) serializes as null — JSON has no Inf.
         o.insert("disruption_window", self.record.disruption_window());
         o.insert("goodput_before", self.goodput_before);
@@ -335,6 +384,20 @@ impl RecoveryStats {
         stats::mean(&dips)
     }
 
+    /// Mean finite disruption window across faults (NaN when fault-free
+    /// or when no fault's losses ever recovered).  The chaos sweep's
+    /// pre-warm comparison metric: rejoin-wait pays MTTR + cold start,
+    /// failure-as-breach pre-warming pays only the cold start.
+    pub fn mean_disruption(&self) -> f64 {
+        let windows: Vec<f64> = self
+            .reports
+            .iter()
+            .map(|r| r.record.disruption_window())
+            .filter(|w| w.is_finite())
+            .collect();
+        stats::mean(&windows)
+    }
+
     /// Worst windowed P99 observed right after any fault (NaN when
     /// fault-free or when no completions landed in any after-window).
     pub fn worst_p99_after(&self) -> f64 {
@@ -354,6 +417,7 @@ impl RecoveryStats {
         o.insert("redirected", self.total_redirected);
         o.insert("dropped", self.dropped);
         o.insert("max_disruption", self.max_disruption());
+        o.insert("mean_disruption", self.mean_disruption());
         o.insert("mean_goodput_dip", self.mean_goodput_dip());
         o.insert("worst_p99_after", self.worst_p99_after());
         o.insert(
@@ -478,6 +542,82 @@ mod tests {
                 k => panic!("unexpected {k:?}"),
             }
         }
+    }
+
+    #[test]
+    fn frontend_mttr_alternates_crash_and_restart() {
+        let mut cfg = fault_cfg(0.0, 10.0);
+        cfg.frontend_mttr = 5.0;
+        let plan = FaultPlan::sample(&cfg, 500.0, 3, 2);
+        assert!(plan.events.iter().any(
+            |e| matches!(e.kind, FaultKind::FrontEndRestart(_))));
+        for f in 1..3usize {
+            let seq: Vec<FaultKind> = plan
+                .events
+                .iter()
+                .filter(|e| e.kind.target() == f
+                            && matches!(e.kind, FaultKind::FrontEndCrash(_)
+                                        | FaultKind::FrontEndRestart(_)))
+                .map(|e| e.kind)
+                .collect();
+            assert!(!seq.is_empty());
+            for (k, kind) in seq.iter().enumerate() {
+                if k % 2 == 0 {
+                    assert!(matches!(kind, FaultKind::FrontEndCrash(_)));
+                } else {
+                    assert!(matches!(kind, FaultKind::FrontEndRestart(_)));
+                }
+            }
+        }
+        assert!(plan.events.iter().all(
+            |e| matches!(e.kind, FaultKind::FrontEndRestart(_))
+                || e.time < 500.0),
+            "only restarts may land past the horizon");
+    }
+
+    #[test]
+    fn zero_frontend_mttr_keeps_the_permanent_crash_draws() {
+        // The restart extension must not perturb the pre-existing
+        // single-draw crash schedule when it is off.
+        let cfg = fault_cfg(0.0, 50.0);
+        let plan = FaultPlan::sample(&cfg, 200.0, 4, 4);
+        let mut with_restarts = cfg.clone();
+        with_restarts.frontend_mttr = 1e12; // restart far past any horizon
+        let plan2 = FaultPlan::sample(&with_restarts, 200.0, 4, 4);
+        let crashes = |p: &FaultPlan| -> Vec<(f64, usize)> {
+            p.events
+                .iter()
+                .filter_map(|e| match e.kind {
+                    FaultKind::FrontEndCrash(f) => Some((e.time, f)),
+                    _ => None,
+                })
+                .collect()
+        };
+        assert_eq!(crashes(&plan), crashes(&plan2),
+                   "first crash draw is shared by both samplers");
+    }
+
+    #[test]
+    fn restored_at_extends_the_disruption_window() {
+        let mut record = FaultRecord::new(10.0, FaultKind::InstanceFail(0));
+        record.redispatched = 2;
+        record.last_landed = 11.0;
+        assert!((record.disruption_window() - 1.0).abs() < 1e-12,
+                "no restoration tracked: window covers work recovery only");
+        // Rejoin-wait: capacity back at t=40 → the window is 30s even
+        // though the lost work re-landed after 1s.
+        record.restored_at = Some(40.0);
+        assert!((record.disruption_window() - 30.0).abs() < 1e-12);
+        // Pre-warm: capacity back after just the cold start.
+        record.restored_at = Some(12.0);
+        assert!((record.disruption_window() - 2.0).abs() < 1e-12);
+        // Capacity restored before the last re-landing cannot shrink
+        // the window below work recovery.
+        record.restored_at = Some(10.5);
+        assert!((record.disruption_window() - 1.0).abs() < 1e-12);
+        // Unrecovered work still dominates everything.
+        record.unrecovered = 1;
+        assert!(record.disruption_window().is_infinite());
     }
 
     fn rec(arrival: f64, finish: f64) -> RequestMetrics {

@@ -21,6 +21,7 @@
 pub mod cluster;
 pub mod config;
 pub mod core;
+pub mod elastic;
 pub mod engine;
 pub mod exec;
 pub mod experiments;

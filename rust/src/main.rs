@@ -13,12 +13,18 @@
 //!    [--instances K] [--workload sharegpt|burstgpt] [--config FILE]
 //!    [--jobs N] [--frontends N] [--sync-interval S] [--shard P]
 //!    [--sync-on-ack] [--local-echo] [--instance-mttf S]
-//!    [--instance-mttr S] [--frontend-mttf S]` — one cluster simulation,
-//!    summary to stdout; `--jobs` parallelizes Block's per-candidate
-//!    prediction fan-out; `--frontends`/`--sync-interval`/`--shard` run
-//!    the distributed deployment (N stateless front-ends over
-//!    bounded-staleness views); the MTTF flags inject instance/front-end
-//!    faults and print per-fault recovery telemetry.
+//!    [--instance-mttr S] [--frontend-mttf S] [--frontend-mttr S]
+//!    [--prewarm] [--scale-down-idle S] [--min-instances N]` — one
+//!    cluster simulation, summary to stdout; `--jobs` parallelizes
+//!    Block's per-candidate prediction fan-out;
+//!    `--frontends`/`--sync-interval`/`--shard` run the distributed
+//!    deployment (N stateless front-ends over bounded-staleness views);
+//!    the MTTF flags inject instance/front-end faults and print
+//!    per-fault recovery telemetry (`--frontend-mttr` restarts crashed
+//!    front-ends with a cold view, `--prewarm` cold-starts a
+//!    replacement on failure instead of waiting for the rejoin);
+//!    `--scale-down-idle`/`--min-instances` drain and retire idle
+//!    instances when provisioning is enabled.
 //! * `block serve --role instance --manifest FILE --index N` — one
 //!    standalone engine daemon (sim-clock or PJRT backend) serving the
 //!    wire `status` API.
@@ -51,8 +57,8 @@ impl Args {
     /// `--smoke true`).  Every other flag consumes the next token
     /// verbatim, so values that merely *look* like flags (a prompt
     /// starting with `--`) still parse.
-    const SWITCHES: [&'static str; 3] = ["smoke", "local-echo",
-                                         "sync-on-ack"];
+    const SWITCHES: [&'static str; 4] = ["smoke", "local-echo",
+                                         "sync-on-ack", "prewarm"];
 
     fn parse(argv: &[String]) -> Result<Args> {
         let mut positional = Vec::new();
@@ -119,7 +125,9 @@ fn usage() -> ! {
          \x20          [--seed N] [--jobs N]\n\
          \x20          [--frontends N] [--sync-interval S] [--shard round-robin|hash|poisson]\n\
          \x20          [--sync-on-ack] [--local-echo] [--instance-mttf S] [--instance-mttr S]\n\
-         \x20          [--frontend-mttf S] [--detect-delay S] [--rejoin-cold-start S] [--fault-seed N]\n\
+         \x20          [--frontend-mttf S] [--frontend-mttr S] [--detect-delay S]\n\
+         \x20          [--rejoin-cold-start S] [--prewarm] [--fault-seed N]\n\
+         \x20          [--scale-down-idle S] [--min-instances N]\n\
          \x20 serve    [--role single|instance|gateway] [--manifest FILE] [--index N]\n\
          \x20          [--backend sim|pjrt] [--clock wall|virtual] [--time-scale X]\n\
          \x20          [--scheduler S] [--addr HOST:PORT] [--artifacts DIR] [--max-requests N]\n\
@@ -177,11 +185,18 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         args.flag_parse("instance-mttr", cfg.faults.instance_mttr)?;
     cfg.faults.frontend_mttf =
         args.flag_parse("frontend-mttf", cfg.faults.frontend_mttf)?;
+    cfg.faults.frontend_mttr =
+        args.flag_parse("frontend-mttr", cfg.faults.frontend_mttr)?;
     cfg.faults.detect_delay =
         args.flag_parse("detect-delay", cfg.faults.detect_delay)?;
     cfg.faults.rejoin_cold_start =
         args.flag_parse("rejoin-cold-start", cfg.faults.rejoin_cold_start)?;
+    cfg.faults.prewarm = args.flag_parse("prewarm", cfg.faults.prewarm)?;
     cfg.faults.seed = args.flag_parse("fault-seed", cfg.faults.seed)?;
+    cfg.provision.scale_down_idle =
+        args.flag_parse("scale-down-idle", cfg.provision.scale_down_idle)?;
+    cfg.provision.min_instances =
+        args.flag_parse("min-instances", cfg.provision.min_instances)?;
     cfg.validate()?;
     let workload = WorkloadConfig {
         kind: match args.flag("workload").unwrap_or("sharegpt") {
@@ -217,6 +232,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                      rep.record.kind.target(), rep.record.redispatched,
                      rep.record.disruption_window(),
                      rep.goodput_before, rep.goodput_after);
+        }
+    }
+    if !res.lifecycle.is_empty() {
+        println!("lifecycle: {} transitions, size timeline {:?}",
+                 res.lifecycle.len(), res.size_timeline);
+        for ev in &res.lifecycle {
+            println!("  t={:8.2}s instance #{:<2} -> {:9} ({})",
+                     ev.time, ev.slot, ev.state, ev.cause);
         }
     }
     let rows = vec![

@@ -11,10 +11,14 @@
 //!   is deep; newly added hosts cannot relieve queued requests (cold-start
 //!   asymmetry, §3), so provisioning cascades and over-shoots.
 //!
-//! The provisioner owns the active-instance set; a provisioned instance
-//! becomes schedulable after `cold_start` seconds (model load).
+//! The provisioner drives the shared [`crate::elastic::ActiveSet`]
+//! lifecycle; a provisioned instance becomes schedulable after
+//! `cold_start` seconds (model load).  Scale-down (drain + retire),
+//! failure, pre-warming, and rejoin all flow through the same per-slot
+//! state machine — see [`crate::elastic`].
 
 use crate::config::ProvisionConfig;
+use crate::elastic::ActiveSet;
 
 /// A provisioning event (for the Figure-8 timeline).
 #[derive(Debug, Clone, PartialEq)]
@@ -29,17 +33,8 @@ pub struct ProvisionEvent {
 #[derive(Debug)]
 pub struct AutoProvisioner {
     cfg: ProvisionConfig,
-    /// Per-instance active flag (ready to serve).
-    active: Vec<bool>,
-    /// Instances booting: (ready_time, index).
-    pending: Vec<(f64, usize)>,
-    /// Instances killed by fault injection: excluded from provisioning
-    /// triggers until their `InstanceRejoin` clears the flag.  Failure
-    /// and elastic scale-up share the pending → `activate_ready`
-    /// lifecycle — a rejoining host is just a provisioned host whose
-    /// cold start was scheduled by a fault plan instead of a latency
-    /// trigger.
-    failed: Vec<bool>,
+    /// The shared per-slot lifecycle (single owner in simulator runs).
+    set: ActiveSet,
     last_trigger: f64,
     pub events: Vec<ProvisionEvent>,
 }
@@ -47,15 +42,10 @@ pub struct AutoProvisioner {
 impl AutoProvisioner {
     pub fn new(cfg: ProvisionConfig, total_instances: usize) -> Self {
         assert!(cfg.max_instances <= total_instances);
-        let mut active = vec![false; total_instances];
-        for a in active.iter_mut().take(cfg.initial_instances) {
-            *a = true;
-        }
+        let set = ActiveSet::new(total_instances, cfg.initial_instances);
         AutoProvisioner {
             cfg,
-            active,
-            pending: Vec::new(),
-            failed: vec![false; total_instances],
+            set,
             last_trigger: f64::NEG_INFINITY,
             events: Vec::new(),
         }
@@ -65,27 +55,42 @@ impl AutoProvisioner {
     pub fn static_cluster(n: usize) -> Self {
         AutoProvisioner {
             cfg: ProvisionConfig { enabled: false, ..ProvisionConfig::default() },
-            active: vec![true; n],
-            pending: Vec::new(),
-            failed: vec![false; n],
+            set: ActiveSet::new(n, n),
             last_trigger: f64::NEG_INFINITY,
             events: Vec::new(),
         }
     }
 
+    /// The dispatchable mask (Active slots only — Draining slots finish
+    /// in-flight work but take no new dispatches).
     pub fn active(&self) -> &[bool] {
-        &self.active
+        self.set.mask()
+    }
+
+    /// The underlying lifecycle state machine (read side).
+    pub fn lifecycle(&self) -> &ActiveSet {
+        &self.set
+    }
+
+    /// The underlying lifecycle state machine (transition side) — the
+    /// simulator's drain/retire path drives this directly.
+    pub fn lifecycle_mut(&mut self) -> &mut ActiveSet {
+        &mut self.set
     }
 
     /// Is instance `i` currently failed (fault-injected down, not yet
-    /// rejoined)?  The provisioner is the single owner of per-instance
-    /// lifecycle state — active, pending, failed.
+    /// rejoined)?
     pub fn is_failed(&self, i: usize) -> bool {
-        self.failed[i]
+        self.set.is_failed(i)
+    }
+
+    /// May instance `i` still finish work (Active or Draining)?
+    pub fn serving(&self, i: usize) -> bool {
+        self.set.serving(i)
     }
 
     pub fn active_count(&self) -> usize {
-        self.active.iter().filter(|&&a| a).count()
+        self.set.active_count()
     }
 
     /// Observation from the dispatch path (predicted latency) — drives the
@@ -117,21 +122,15 @@ impl AutoProvisioner {
         if now - self.last_trigger < self.cfg.cooldown {
             return None;
         }
-        let provisioned =
-            self.active_count() + self.pending.len();
+        let provisioned = self.set.active_count() + self.set.pending_count();
         if provisioned >= self.cfg.max_instances {
             return None;
         }
-        // Next inactive, not-pending, not-failed instance index (a
-        // failed host cannot be provisioned back — it rejoins through
-        // its fault plan's `InstanceRejoin`).
-        let idx = (0..self.active.len()).find(|&i| {
-            !self.active[i]
-                && !self.failed[i]
-                && !self.pending.iter().any(|&(_, p)| p == i)
-        })?;
+        // First Backup/Retired slot (a failed host cannot be provisioned
+        // back — it rejoins through its fault plan's `InstanceRejoin`).
+        let idx = self.set.candidate()?;
         let ready = now + self.cfg.cold_start;
-        self.pending.push((ready, idx));
+        self.set.begin_cold_start(idx, ready, now, "scale-up");
         self.last_trigger = now;
         self.events.push(ProvisionEvent {
             time: now,
@@ -144,10 +143,8 @@ impl AutoProvisioner {
     /// Fault injection: instance `i` is gone.  Deactivates it, cancels
     /// any in-progress cold start, and removes it from the provisioning
     /// candidate pool until it rejoins.
-    pub fn fail(&mut self, i: usize) {
-        self.active[i] = false;
-        self.failed[i] = true;
-        self.pending.retain(|&(_, p)| p != i);
+    pub fn fail(&mut self, i: usize, now: f64) {
+        self.set.fail(i, now, "fail");
     }
 
     /// Fault injection: failed instance `i` starts rejoining at `now`.
@@ -155,37 +152,35 @@ impl AutoProvisioner {
     /// (pending → [`Self::activate_ready`]); returns the ready time, or
     /// `None` when the instance is not actually down (never failed,
     /// already active, or mid-cold-start — scripted plans may request
-    /// impossible rejoins).
+    /// impossible rejoins, and a pre-warmed slot is already booting).
     pub fn schedule_rejoin(&mut self, i: usize, now: f64,
                            cold_start: f64) -> Option<f64> {
-        if !self.failed[i]
-            || self.active[i]
-            || self.pending.iter().any(|&(_, p)| p == i)
-        {
+        if !self.set.is_failed(i) {
             return None;
         }
-        self.failed[i] = false;
         let ready = now + cold_start;
-        self.pending.push((ready, i));
+        self.set.begin_cold_start(i, ready, now, "rejoin");
+        Some(ready)
+    }
+
+    /// Failure-as-breach pre-warming: immediately cold-start the failed
+    /// slot instead of waiting for its fault plan's rejoin (which then
+    /// no-ops through [`Self::schedule_rejoin`]'s guard).  Returns the
+    /// ready time, or `None` when `i` is not failed.
+    pub fn prewarm(&mut self, i: usize, now: f64,
+                   cold_start: f64) -> Option<f64> {
+        if !self.set.is_failed(i) {
+            return None;
+        }
+        let ready = now + cold_start;
+        self.set.begin_cold_start(i, ready, now, "prewarm");
         Some(ready)
     }
 
     /// Activate instances whose cold start has elapsed.  Returns the
     /// indices that just became ready.
     pub fn activate_ready(&mut self, now: f64) -> Vec<usize> {
-        let mut ready = Vec::new();
-        self.pending.retain(|&(t, idx)| {
-            if t <= now + 1e-12 {
-                ready.push(idx);
-                false
-            } else {
-                true
-            }
-        });
-        for &i in &ready {
-            self.active[i] = true;
-        }
-        ready
+        self.set.activate_ready(now)
     }
 }
 
@@ -202,6 +197,7 @@ mod tests {
             max_instances: 10,
             cold_start: 40.0,
             cooldown: 15.0,
+            ..ProvisionConfig::default()
         }
     }
 
@@ -263,7 +259,7 @@ mod tests {
     #[test]
     fn fail_and_rejoin_share_the_cold_start_lifecycle() {
         let mut p = AutoProvisioner::static_cluster(4);
-        p.fail(2);
+        p.fail(2, 0.0);
         assert_eq!(p.active_count(), 3);
         assert!(!p.active()[2]);
 
@@ -283,7 +279,7 @@ mod tests {
     fn failed_instances_are_not_provisioning_candidates() {
         let mut p = AutoProvisioner::new(cfg(true), 12);
         // Kill the first backup slot; the latency trigger must skip it.
-        p.fail(6);
+        p.fail(6, 0.0);
         let ready = p.observe_predicted(0.0, 90.0).unwrap();
         p.activate_ready(ready);
         assert!(!p.active()[6], "failed host must not be re-provisioned");
@@ -294,7 +290,7 @@ mod tests {
     fn fail_cancels_pending_cold_start() {
         let mut p = AutoProvisioner::new(cfg(true), 12);
         p.observe_predicted(0.0, 90.0).unwrap();
-        p.fail(6);
+        p.fail(6, 1.0);
         assert!(p.activate_ready(100.0).is_empty(),
                 "cold start cancelled by the failure");
         assert_eq!(p.active_count(), 6, "the booting host never arrived");
@@ -306,5 +302,36 @@ mod tests {
         assert_eq!(p.active_count(), 10);
         assert!(p.observe_actual(0.0, 1000.0).is_none());
         assert!(p.observe_predicted(0.0, 1000.0).is_none());
+    }
+
+    #[test]
+    fn prewarm_restarts_the_failed_slot_immediately() {
+        let mut p = AutoProvisioner::static_cluster(4);
+        p.fail(1, 10.0);
+        let ready = p.prewarm(1, 10.0, 2.0).unwrap();
+        assert!((ready - 12.0).abs() < 1e-12);
+        // The fault plan's rejoin arrives later and must no-op: the slot
+        // is already booting.
+        assert!(p.schedule_rejoin(1, 20.0, 5.0).is_none());
+        assert_eq!(p.activate_ready(12.0), vec![1]);
+        assert_eq!(p.active_count(), 4);
+        // Pre-warming a healthy slot is a no-op.
+        assert!(p.prewarm(0, 30.0, 2.0).is_none());
+    }
+
+    #[test]
+    fn drain_then_retire_returns_slot_to_candidate_pool() {
+        let mut p = AutoProvisioner::new(cfg(true), 12);
+        p.lifecycle_mut().begin_drain(2, 5.0, "scale-down");
+        assert_eq!(p.active_count(), 5);
+        assert!(p.serving(2), "draining slot still finishes work");
+        assert!(!p.active()[2], "but takes no new dispatches");
+        p.lifecycle_mut().retire(2, 6.0, "retire");
+        assert!(!p.serving(2));
+        // The latency trigger now prefers the retired slot (lowest
+        // eligible index) over the untouched backups.
+        let ready = p.observe_predicted(10.0, 90.0).unwrap();
+        assert_eq!(p.activate_ready(ready), vec![2]);
+        assert!(p.active()[2]);
     }
 }

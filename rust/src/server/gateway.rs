@@ -20,7 +20,15 @@
 //!   dead instance marks the slot inactive in the sender's view and
 //!   re-enters dispatch through the sharder's redirect rotation — the
 //!   same bounce → single-slot view update → redispatch path the fault
-//!   subsystem defined for the simulator.
+//!   subsystem defined for the simulator;
+//! * the shared elasticity lifecycle ([`crate::elastic::ActiveSet`] —
+//!   the same state machine the simulator's provisioner drives): a
+//!   bounce marks its slot Failed, a health prober re-admits recovered
+//!   daemons (`GET /healthz`, then `install_instance` into every view),
+//!   and `POST /manifest` adds/removes instance daemons under live
+//!   traffic (removals drain and retire; additions join as Backup slots
+//!   the prober activates).  `GET /status` exports the per-slot states
+//!   and the transition timeline in `SimResult`'s vocabulary.
 //!
 //! Two clock modes ([`ClockKind`]): **wall** serves live traffic
 //! (`/generate` blocks until the generation completes on its instance);
@@ -35,7 +43,7 @@ use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -44,6 +52,7 @@ use crate::cluster::frontend::{self, ArrivalSharder, FrontEnd};
 use crate::config::manifest::{ClockKind, ClusterManifest};
 use crate::config::ClusterConfig;
 use crate::core::request::{Request, RequestId, RequestMetrics};
+use crate::elastic::{ActiveSet, SlotState};
 use crate::engine::InstanceStatus;
 use crate::exec::roofline::RooflineModel;
 use crate::metrics::MetricsCollector;
@@ -131,6 +140,9 @@ struct DispatchMeta {
     dispatched: f64,
     overhead: f64,
     frontend: usize,
+    /// Target slot — lets drain-based retirement tell when no in-flight
+    /// work still points at a Draining instance.
+    instance: usize,
     predicted: Option<f64>,
     prompt_tokens: u32,
     response_tokens: u32,
@@ -165,13 +177,22 @@ struct Core {
     tagger: HistogramTagger,
     next_id: u64,
     synced_once: bool,
+    /// Shared elasticity lifecycle (same state machine the simulator's
+    /// provisioner drives): Active slots are dispatchable, Failed slots
+    /// are health-probed for re-admission, Draining slots finish their
+    /// in-flight work before retiring, Backup slots await a manifest
+    /// update's daemon to come up.
+    lifecycle: ActiveSet,
 }
 
 /// The gateway service.
 pub struct Gateway {
     opts: GatewayOptions,
     cost: RooflineModel,
-    clients: Vec<InstanceClient>,
+    /// Instance clients, index-aligned with lifecycle slots.  Behind an
+    /// `RwLock` because `POST /manifest` may append instances under live
+    /// traffic (the list only ever grows — slot indices stay stable).
+    clients: RwLock<Vec<InstanceClient>>,
     /// Which view sides the scheduler family reads (mirrors the
     /// simulator's want_statuses/want_loads split).
     want_statuses: bool,
@@ -243,15 +264,17 @@ impl Gateway {
             tagger: HistogramTagger::new(0.5, 64),
             next_id: 0,
             synced_once: false,
+            lifecycle: ActiveSet::new(total, total),
         };
         Gateway {
             cost: RooflineModel::from_profiles(&opts.cluster.gpu,
                                                &opts.cluster.model),
-            clients: opts
-                .instances
-                .iter()
-                .map(|a| InstanceClient::new(a.as_str()))
-                .collect(),
+            clients: RwLock::new(
+                opts.instances
+                    .iter()
+                    .map(|a| InstanceClient::new(a.as_str()))
+                    .collect(),
+            ),
             want_statuses: predictive,
             want_loads: !predictive,
             stale: opts.cluster.sync_interval > 0.0,
@@ -280,8 +303,40 @@ impl Gateway {
         }
     }
 
-    fn fetch_statuses(&self, now: Option<f64>) -> Vec<Option<InstanceStatus>> {
-        self.clients.iter().map(|c| c.status(now).ok()).collect()
+    /// Snapshot the client list (cheap: address strings).  Callers use
+    /// the snapshot instead of holding the read lock across I/O or the
+    /// core mutex — the lock is only ever held to copy or append.
+    fn clients_snapshot(&self) -> Vec<InstanceClient> {
+        self.clients.read().unwrap().clone()
+    }
+
+    fn n_instances(&self) -> usize {
+        self.clients.read().unwrap().len()
+    }
+
+    fn client(&self, i: usize) -> InstanceClient {
+        self.clients.read().unwrap()[i].clone()
+    }
+
+    /// Pull status from every slot the lifecycle marks dispatchable.
+    /// Non-Active slots come back `None` — Draining slots must take no
+    /// new dispatches, Failed slots re-enter through the health prober
+    /// (not through a lucky status fetch), and Backup/Pending slots are
+    /// not serving yet.  The vector is always full-length so views stay
+    /// index-aligned with slots.
+    fn fetch_statuses(&self, now: Option<f64>, mask: &[bool])
+                      -> Vec<Option<InstanceStatus>> {
+        self.clients_snapshot()
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                if mask.get(i).copied().unwrap_or(false) {
+                    c.status(now).ok()
+                } else {
+                    None
+                }
+            })
+            .collect()
     }
 
     fn push_pending(&self, core: &mut Core, time: f64, kind: PendKind) {
@@ -298,7 +353,8 @@ impl Gateway {
             return;
         }
         let now = if self.virtual_clock() { 0.0 } else { self.now_wall() };
-        let statuses = self.fetch_statuses(self.pull_instant(now));
+        let mask = core.lifecycle.mask().to_vec();
+        let statuses = self.fetch_statuses(self.pull_instant(now), &mask);
         if statuses.iter().all(Option::is_none) {
             return; // nobody up yet — next arrival retries
         }
@@ -347,13 +403,18 @@ impl Gateway {
         }
     }
 
-    /// One periodic view pull (virtual clock): capture every instance at
-    /// exactly `v`, collect completions finalized by then, refresh the
-    /// front-end's view, re-arm.
+    /// One periodic view pull (virtual clock): probe dead slots for
+    /// re-admission, retire drained slots, capture every Active instance
+    /// at exactly `v`, collect completions finalized by then, refresh
+    /// the front-end's view, re-arm.
     fn do_sync(&self, core: &mut Core, f: usize, v: f64, rearm: bool) {
-        let statuses = self.fetch_statuses(Some(v));
-        for i in 0..self.clients.len() {
-            if let Ok(list) = self.clients[i].drain(false) {
+        self.probe_dead_slots(core, v);
+        self.retire_drained(core, v);
+        let mask = core.lifecycle.mask().to_vec();
+        let statuses = self.fetch_statuses(Some(v), &mask);
+        let clients = self.clients_snapshot();
+        for (i, client) in clients.iter().enumerate() {
+            if let Ok(list) = client.drain(false) {
                 for c in list {
                     self.record_completion(core, i, c);
                 }
@@ -369,6 +430,49 @@ impl Gateway {
         }
     }
 
+    /// Health-probe every non-serving slot that could come back: Failed
+    /// slots rejoin (`GET /healthz` on the restarted daemon), Backup
+    /// slots are manifest additions whose daemon just came up.  A probe
+    /// hit re-admits the slot: force it Active in the lifecycle and
+    /// install its fresh status into every live front-end's view — the
+    /// wire analogue of the simulator's `InstanceReady` activation.
+    fn probe_dead_slots(&self, core: &mut Core, t: f64) {
+        let targets: Vec<(usize, &'static str)> = (0..core.lifecycle.len())
+            .filter_map(|i| match core.lifecycle.state(i) {
+                SlotState::Failed => Some((i, "rejoin")),
+                SlotState::Backup => Some((i, "manifest-add")),
+                _ => None,
+            })
+            .collect();
+        for (i, cause) in targets {
+            let client = self.client(i);
+            if !client.healthz() {
+                continue;
+            }
+            let st = client.status(self.pull_instant(t)).ok();
+            core.lifecycle.set_active(i, t, cause);
+            for fe in core.frontends.iter_mut().filter(|fe| fe.alive) {
+                fe.view.install_instance(i, st.clone(), t);
+                fe.clear_echo(i);
+            }
+            crate::log_info!(
+                "gateway re-admitted instance {i} ({cause}) at t={t:.3}");
+        }
+    }
+
+    /// Retire Draining slots once nothing in flight still targets them
+    /// (the wire form of the simulator's deferred `retire` on the last
+    /// `StepDone`).
+    fn retire_drained(&self, core: &mut Core, t: f64) {
+        for i in 0..core.lifecycle.len() {
+            if core.lifecycle.is_draining(i)
+                && core.in_flight.values().all(|m| m.instance != i)
+            {
+                core.lifecycle.retire(i, t, "retire");
+            }
+        }
+    }
+
     /// A deferred dispatch lands (virtual clock).  Connection refused is
     /// the wire bounce: single-slot view update for the sender, then
     /// redispatch through the survivor rotation.  An HTTP-level refusal
@@ -377,7 +481,7 @@ impl Gateway {
     fn do_land(&self, core: &mut Core, req: Request, instance: usize,
                f: usize, t: f64, attempts: usize) {
         let ack_wanted = self.stale && self.opts.cluster.sync_on_ack;
-        match self.clients[instance].enqueue(&req, t, ack_wanted) {
+        match self.client(instance).enqueue(&req, t, ack_wanted) {
             Ok(wire::EnqueueOutcome::Landed(ack)) => {
                 let fe = &mut core.frontends[f];
                 fe.dispatch_landed(instance, &req, true);
@@ -403,6 +507,12 @@ impl Gateway {
                 fe.view.install_instance(instance, None, t);
                 fe.clear_echo(instance);
                 core.in_flight.remove(&req.id);
+                // The bounce is the gateway's failure detector: mark the
+                // slot Failed so syncs stop asking it for status and the
+                // health prober takes over re-admission.
+                if core.lifecycle.serving(instance) {
+                    core.lifecycle.fail(instance, t, "bounce");
+                }
                 self.redispatch(core, req, t, attempts);
             }
         }
@@ -423,7 +533,8 @@ impl Gateway {
                 // Fresh-view deployment: this front-end's view may
                 // never have synced — pull the live state (a dead
                 // instance's failed fetch marks its slot inactive).
-                let statuses = self.fetch_statuses(Some(t));
+                let mask = core.lifecycle.mask().to_vec();
+                let statuses = self.fetch_statuses(Some(t), &mask);
                 core.frontends[f2].view.sync_from_statuses(
                     statuses, t, self.want_statuses, self.want_loads);
                 core.frontends[f2].clear_echo_all();
@@ -461,6 +572,7 @@ impl Gateway {
             dispatched,
             overhead,
             frontend: f,
+            instance: decision.instance,
             predicted: decision.predicted_e2e,
             prompt_tokens: req.prompt_tokens,
             response_tokens: req.response_tokens,
@@ -578,10 +690,15 @@ impl Gateway {
             return (503, http::error_body("no live front-end"));
         };
         if !self.stale {
-            // Fresh-view deployment: pull the cluster state at the
-            // arrival instant into the handling front-end (the wire form
-            // of the simulator's per-arrival cloned view).
-            let statuses = self.fetch_statuses(Some(now));
+            // Fresh-view deployment: no Sync events run the prober, so
+            // dead-slot probing and drain retirement ride the arrival
+            // path; then pull the cluster state at the arrival instant
+            // into the handling front-end (the wire form of the
+            // simulator's per-arrival cloned view).
+            self.probe_dead_slots(core, now);
+            self.retire_drained(core, now);
+            let mask = core.lifecycle.mask().to_vec();
+            let statuses = self.fetch_statuses(Some(now), &mask);
             core.frontends[f].view.sync_from_statuses(
                 statuses, now, self.want_statuses, self.want_loads);
             core.frontends[f].clear_echo_all();
@@ -592,7 +709,7 @@ impl Gateway {
         }
         let id = req.id;
         let d = self.decide(core, f, &req, now);
-        let attempts = self.clients.len();
+        let attempts = self.n_instances();
         self.push_pending(core, d.at, PendKind::Land {
             req,
             instance: d.instance,
@@ -637,12 +754,15 @@ impl Gateway {
         };
         // Dispatch with bounce-and-redirect: each attempt is a fresh
         // decision from the (updated) view.
-        for _attempt in 0..=self.clients.len() {
+        for _attempt in 0..=self.n_instances() {
             let picked = {
                 let mut core = self.core.lock().unwrap();
                 let core = &mut *core;
                 if !self.stale {
-                    let statuses = self.fetch_statuses(None);
+                    self.probe_dead_slots(core, now);
+                    self.retire_drained(core, now);
+                    let mask = core.lifecycle.mask().to_vec();
+                    let statuses = self.fetch_statuses(None, &mask);
                     core.frontends[f].view.sync_from_statuses(
                         statuses, now, self.want_statuses, self.want_loads);
                     core.frontends[f].clear_echo_all();
@@ -659,7 +779,7 @@ impl Gateway {
                 return (503, http::error_body("no active instance in view"));
             };
             let instance = d.instance;
-            match self.clients[instance].enqueue(&req, d.at, ack_wanted) {
+            match self.client(instance).enqueue(&req, d.at, ack_wanted) {
                 Ok(wire::EnqueueOutcome::Landed(ack)) => {
                     {
                         let mut core = self.core.lock().unwrap();
@@ -694,6 +814,9 @@ impl Gateway {
                         .install_instance(instance, None, now);
                     core.frontends[f].clear_echo(instance);
                     core.in_flight.remove(&req.id);
+                    if core.lifecycle.serving(instance) {
+                        core.lifecycle.fail(instance, now, "bounce");
+                    }
                     match core.sharder.next_alive() {
                         Some(f2) => f = f2,
                         None => {
@@ -748,24 +871,30 @@ impl Gateway {
     fn flush(&self) -> (u16, Json) {
         let mut core = self.core.lock().unwrap();
         let core = &mut *core;
+        let clients = self.clients_snapshot();
         if self.virtual_clock() {
             self.process_pending(core, None);
-            for i in 0..self.clients.len() {
-                if let Ok(list) = self.clients[i].drain(true) {
+            for (i, client) in clients.iter().enumerate() {
+                if let Ok(list) = client.drain(true) {
                     for c in list {
                         self.record_completion(core, i, c);
                     }
                 }
             }
         } else {
-            for i in 0..self.clients.len() {
-                if let Ok(list) = self.clients[i].drain(false) {
+            for (i, client) in clients.iter().enumerate() {
+                if let Ok(list) = client.drain(false) {
                     for c in list {
                         self.record_completion(core, i, c);
                     }
                 }
             }
         }
+        // Retire any Draining slot with nothing left in flight, stamped
+        // at the latest collected finish time.
+        let t = core.metrics.records.iter().map(|m| m.finish)
+            .fold(0.0f64, f64::max);
+        self.retire_drained(core, t);
         let mut o = JsonObj::new();
         o.insert("ok", true);
         o.insert("completed", core.metrics.len());
@@ -799,10 +928,139 @@ impl Gateway {
         o.insert("rejected", core.rejected);
         o.insert("in_flight", core.in_flight.len());
         o.insert("completed", core.metrics.len());
+        // Live elasticity state in the `SimResult` vocabulary: per-slot
+        // lifecycle states plus the full transition timeline (the wire
+        // mirror of `SimResult::lifecycle`).
+        o.insert("instances", core.lifecycle.len());
+        o.insert(
+            "active_set",
+            Json::Arr(core.lifecycle.state_names().iter()
+                          .map(|&s| s.into()).collect()),
+        );
+        o.insert(
+            "lifecycle",
+            Json::Arr(
+                core.lifecycle
+                    .log
+                    .iter()
+                    .map(|e| {
+                        let mut ev = JsonObj::new();
+                        ev.insert("time", e.time);
+                        ev.insert("instance", e.slot);
+                        ev.insert("state", e.state);
+                        ev.insert("cause", e.cause);
+                        Json::Obj(ev)
+                    })
+                    .collect(),
+            ),
+        );
         if !core.metrics.is_empty() {
             o.insert("summary", core.metrics.summary().to_json());
         }
         Json::Obj(o)
+    }
+
+    /// `POST /manifest` — runtime manifest update under live traffic.
+    /// The body is a full cluster manifest (same schema `serve` loads);
+    /// the gateway diffs its instance list by address: removed addresses
+    /// drain (no new dispatches, in-flight work finishes, then retire),
+    /// new addresses are appended as Backup slots that the health prober
+    /// admits once their daemon answers.  Slot indices are append-only,
+    /// so views, schedulers, and telemetry stay index-aligned.
+    fn manifest_update(&self, j: &Json, params: &[(String, String)])
+                       -> (u16, Json) {
+        let m = match ClusterManifest::from_json(j) {
+            Ok(m) => m,
+            Err(e) => return (400, http::error_body(&e.to_string())),
+        };
+        let t = if self.virtual_clock() {
+            match wire::query_param(params, "now")
+                .map(str::parse::<f64>)
+                .transpose()
+            {
+                Ok(t) => t.unwrap_or(0.0),
+                Err(_) => return (400, http::error_body("bad 'now'")),
+            }
+        } else {
+            self.now_wall()
+        };
+        let mut core = self.core.lock().unwrap();
+        let core = &mut *core;
+        let current: Vec<String> = self
+            .clients_snapshot()
+            .iter()
+            .map(|c| c.addr.clone())
+            .collect();
+        let wanted: std::collections::HashSet<&str> =
+            m.instances.iter().map(String::as_str).collect();
+        let mut removed = 0usize;
+        let mut added = 0usize;
+        for (i, addr) in current.iter().enumerate() {
+            if wanted.contains(addr.as_str()) {
+                // A previously removed address coming back reuses its
+                // old slot: Retired slots reopen as prober candidates,
+                // mid-drain slots simply resume dispatching.
+                match core.lifecycle.state(i) {
+                    SlotState::Retired => {
+                        core.lifecycle.reopen(i, t, "manifest-add");
+                    }
+                    SlotState::Draining => {
+                        core.lifecycle.set_active(i, t, "manifest-add");
+                    }
+                    _ => {}
+                }
+                continue;
+            }
+            match core.lifecycle.state(i) {
+                SlotState::Active => {
+                    core.lifecycle.begin_drain(i, t, "manifest-remove");
+                    removed += 1;
+                }
+                SlotState::Backup | SlotState::Failed
+                | SlotState::Pending { .. } => {
+                    // Not serving — retire directly so the prober stops
+                    // considering it.
+                    core.lifecycle.retire(i, t, "manifest-remove");
+                    removed += 1;
+                }
+                SlotState::Draining | SlotState::Retired => {}
+            }
+            for fe in core.frontends.iter_mut().filter(|fe| fe.alive) {
+                fe.view.install_instance(i, None, t);
+                fe.clear_echo(i);
+            }
+        }
+        {
+            let mut clients = self.clients.write().unwrap();
+            for addr in &m.instances {
+                if current.iter().any(|a| a == addr) {
+                    continue;
+                }
+                clients.push(InstanceClient::new(addr.as_str()));
+                core.lifecycle.grow(1);
+                core.served_by.push(0);
+                added += 1;
+            }
+            let slots = clients.len();
+            for fe in core.frontends.iter_mut() {
+                fe.grow_slots(slots);
+            }
+        }
+        self.retire_drained(core, t);
+        crate::log_info!(
+            "gateway manifest update: +{added} -{removed} instances \
+             ({} slots)", core.lifecycle.len());
+        let mut o = JsonObj::new();
+        o.insert("ok", true);
+        o.insert("added", added as u64);
+        o.insert("removed", removed as u64);
+        o.insert("instances", core.lifecycle.len());
+        o.insert(
+            "active_set",
+            Json::Arr(core.lifecycle.state_names().iter()
+                          .map(|&s| s.into()).collect()),
+        );
+        (200, Json::Obj(o))
     }
 
     /// Per-request placement/timing records (trace-replay telemetry; the
@@ -844,13 +1102,13 @@ impl Gateway {
 
     /// Route one request.  Returns (status, body, shutdown).
     fn route(&self, req: &HttpRequest) -> (u16, Json, bool) {
-        let (path, _params) = wire::split_query(&req.path);
+        let (path, params) = wire::split_query(&req.path);
         match (req.method.as_str(), path) {
             ("GET", "/health") => {
                 let mut o = JsonObj::new();
                 o.insert("ok", true);
                 o.insert("role", "gateway");
-                o.insert("instances", self.clients.len());
+                o.insert("instances", self.n_instances());
                 o.insert("clock", self.opts.clock.name());
                 (200, Json::Obj(o), false)
             }
@@ -879,6 +1137,14 @@ impl Gateway {
                 let (status, body) = self.predict_body(&j);
                 (status, body, false)
             }
+            ("POST", "/manifest") => {
+                let j = match Json::parse(&req.body) {
+                    Ok(j) => j,
+                    Err(e) => return (400, http::error_body(&e.to_string()), false),
+                };
+                let (status, body) = self.manifest_update(&j, &params);
+                (status, body, false)
+            }
             ("POST", "/flush") => {
                 let (status, body) = self.flush();
                 (status, body, false)
@@ -892,7 +1158,7 @@ impl Gateway {
             (
                 _,
                 "/health" | "/status" | "/records" | "/generate"
-                | "/predict" | "/flush" | "/shutdown",
+                | "/predict" | "/manifest" | "/flush" | "/shutdown",
             ) => (405, http::error_body("method not allowed"), false),
             _ => (404, http::error_body("not found"), false),
         }
@@ -913,7 +1179,8 @@ fn handle_conn(gw: &Gateway, mut stream: TcpStream) {
 }
 
 /// Wall-clock background loops: the periodic view pull (the wire
-/// `ViewSync`) and the completion poller feeding `/generate` waiters.
+/// `ViewSync`), the completion poller feeding `/generate` waiters, and
+/// the health prober that re-admits recovered or manifest-added daemons.
 fn spawn_wall_threads(gw: &Arc<Gateway>) {
     if gw.stale {
         let g = Arc::clone(gw);
@@ -924,13 +1191,17 @@ fn spawn_wall_threads(gw: &Arc<Gateway>) {
             );
             while !g.shutdown.load(AtomicOrdering::SeqCst) {
                 std::thread::sleep(interval);
-                let statuses = g.fetch_statuses(None);
+                let mask = g.core.lock().unwrap().lifecycle.mask().to_vec();
+                let statuses = g.fetch_statuses(None, &mask);
                 let now = g.now_wall();
                 let mut core = g.core.lock().unwrap();
                 if !core.synced_once {
                     continue;
                 }
                 for f in 0..core.frontends.len() {
+                    if !core.frontends[f].alive {
+                        continue;
+                    }
                     core.frontends[f].view.sync_from_statuses(
                         statuses.clone(), now, g.want_statuses,
                         g.want_loads);
@@ -939,12 +1210,57 @@ fn spawn_wall_threads(gw: &Arc<Gateway>) {
             }
         });
     }
+    // Health prober: the wire driver of the lifecycle's re-admission
+    // edges.  Probes run off-lock (`healthz` is O(1) on the daemon);
+    // the slot's state is re-checked under the lock before activating
+    // in case a manifest update raced the probe.
+    let g = Arc::clone(gw);
+    std::thread::spawn(move || {
+        while !g.shutdown.load(AtomicOrdering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(200));
+            let now = g.now_wall();
+            let targets: Vec<(usize, &'static str)> = {
+                let core = g.core.lock().unwrap();
+                (0..core.lifecycle.len())
+                    .filter_map(|i| match core.lifecycle.state(i) {
+                        SlotState::Failed => Some((i, "rejoin")),
+                        SlotState::Backup => Some((i, "manifest-add")),
+                        _ => None,
+                    })
+                    .collect()
+            };
+            for (i, cause) in targets {
+                let client = g.client(i);
+                if !client.healthz() {
+                    continue;
+                }
+                let st = client.status(None).ok();
+                let mut core = g.core.lock().unwrap();
+                let core = &mut *core;
+                match core.lifecycle.state(i) {
+                    SlotState::Failed | SlotState::Backup => {}
+                    _ => continue,
+                }
+                core.lifecycle.set_active(i, now, cause);
+                for fe in core.frontends.iter_mut().filter(|fe| fe.alive) {
+                    fe.view.install_instance(i, st.clone(), now);
+                    fe.clear_echo(i);
+                }
+                crate::log_info!(
+                    "gateway re-admitted instance {i} ({cause})");
+            }
+            let mut core = g.core.lock().unwrap();
+            let core = &mut *core;
+            g.retire_drained(core, now);
+        }
+    });
     let g = Arc::clone(gw);
     std::thread::spawn(move || {
         while !g.shutdown.load(AtomicOrdering::SeqCst) {
             std::thread::sleep(Duration::from_millis(10));
-            for i in 0..g.clients.len() {
-                let Ok(list) = g.clients[i].drain(false) else {
+            let clients = g.clients_snapshot();
+            for (i, client) in clients.iter().enumerate() {
+                let Ok(list) = client.drain(false) else {
                     continue;
                 };
                 if list.is_empty() {
@@ -968,7 +1284,7 @@ pub fn serve_gateway(listener: TcpListener, opts: GatewayOptions)
     }
     listener.set_nonblocking(true)?;
     crate::log_info!("gateway ({} front-ends, {} instances) listening on {}",
-                     gw.opts.cluster.frontends.max(1), gw.clients.len(),
+                     gw.opts.cluster.frontends.max(1), gw.n_instances(),
                      listener.local_addr()?);
     loop {
         if gw.shutdown.load(AtomicOrdering::SeqCst) {

@@ -15,7 +15,9 @@
 //!   (`sync_on_ack`'s wire form).
 //! * `POST /drain` — pull completed requests; `{"complete": true}`
 //!   first runs all admitted work to quiescence (trace-replay tail).
-//! * `GET  /health`, `POST /shutdown`.
+//! * `GET  /health`, `POST /shutdown`, and `GET /healthz` — the O(1)
+//!   liveness probe the gateway's re-admission poller uses (no backend
+//!   call, unlike `/health`/`/status`).
 //!
 //! The loop is single-threaded by design: the PJRT client is `!Send`
 //! (one device, serialized execution), so one OS thread owns engine +
@@ -129,6 +131,14 @@ fn handle(backend: &mut dyn ServingBackend, opts: &InstanceOptions,
             o.insert("clock", opts.clock.name());
             (200, Json::Obj(o), false)
         }
+        ("GET", "/healthz") => {
+            // Liveness only — the gateway's re-admission prober hits
+            // this on every poll of a dead slot, so it must stay O(1):
+            // no backend call, no snapshot, no counters.
+            let mut o = JsonObj::new();
+            o.insert("ok", true);
+            (200, Json::Obj(o), false)
+        }
         ("GET", "/status") => {
             if !wall {
                 // Virtual clock: an explicit `now` pins the pull
@@ -211,7 +221,8 @@ fn handle(backend: &mut dyn ServingBackend, opts: &InstanceOptions,
         }
         // Known paths with the wrong verb are method errors, everything
         // else is unrouted.
-        (_, "/health" | "/status" | "/enqueue" | "/drain" | "/shutdown") => {
+        (_, "/health" | "/healthz" | "/status" | "/enqueue" | "/drain"
+         | "/shutdown") => {
             (405, http::error_body("method not allowed"), false)
         }
         _ => (404, http::error_body("not found"), false),

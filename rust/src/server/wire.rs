@@ -243,6 +243,14 @@ impl InstanceClient {
                  Ok((200, _)))
     }
 
+    /// O(1) liveness probe (`GET /healthz`) — the re-admission poller's
+    /// endpoint: answers without touching the backend, so probing a
+    /// busy (or booting) daemon costs it nothing.
+    pub fn healthz(&self) -> bool {
+        matches!(http::request(&self.addr, "GET", "/healthz", None),
+                 Ok((200, _)))
+    }
+
     pub fn shutdown(&self) -> Result<()> {
         let _ = http::request(&self.addr, "POST", "/shutdown", None)?;
         Ok(())

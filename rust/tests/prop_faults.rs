@@ -3,7 +3,11 @@
 //! The headline invariant is *conservation*: under any fault plan —
 //! scripted or sampled, any deployment shape — every admitted request
 //! is eventually served or explicitly counted as dropped.  Nothing
-//! vanishes in a crash, a bounce, or a re-dispatch loop.
+//! vanishes in a crash, a bounce, or a re-dispatch loop.  The same law
+//! must hold when the elasticity lifecycle interleaves with the plan:
+//! auto scale-up, drain-based scale-down, failure-as-breach pre-warm
+//! boots and front-end restarts race the scripted deaths, and still no
+//! request may be lost or served twice.
 
 use block::cluster::{run_experiment, SimOptions};
 use block::config::{ClusterConfig, SchedulerKind, ShardPolicy,
@@ -51,6 +55,32 @@ fn prop_no_request_lost_under_faults() {
         };
         let span = wl.n_requests as f64 / wl.qps;
 
+        // Elasticity interleaves with the fault plan on a random
+        // subset of cases: auto scale-up from the backup pool,
+        // drain-based scale-down, and failure-as-breach pre-warming
+        // all race the scripted deaths below.
+        if rng.bernoulli(0.5) {
+            cfg.provision.enabled = true;
+            cfg.provision.initial_instances = n_instances;
+            cfg.provision.max_instances = n_instances + rng.index(3);
+            cfg.provision.predictive = rng.bernoulli(0.5);
+            cfg.provision.threshold = rng.uniform(5.0, 60.0);
+            cfg.provision.cold_start = rng.uniform(0.5, 3.0);
+            cfg.provision.cooldown = rng.uniform(1.0, 5.0);
+            if rng.bernoulli(0.6) {
+                cfg.provision.scale_down_idle = rng.uniform(1.0, span);
+                cfg.provision.min_instances =
+                    rng.randint(1, n_instances as i64) as usize;
+            }
+        }
+        cfg.faults.prewarm = rng.bernoulli(0.4);
+        cfg.faults.rejoin_cold_start = rng.uniform(0.2, 2.0);
+        let slot_budget = if cfg.provision.enabled {
+            cfg.provision.max_instances.max(n_instances)
+        } else {
+            n_instances
+        };
+
         // A random scripted plan: instance deaths (mostly followed by a
         // rejoin), plus occasional front-end crashes — including, at
         // the tail of the distribution, plans that kill *every*
@@ -74,10 +104,19 @@ fn prop_no_request_lost_under_faults() {
         }
         for f in 0..frontends {
             if rng.bernoulli(0.25) {
+                let t = rng.uniform(0.0, span);
                 events.push(FaultEvent {
-                    time: rng.uniform(0.0, span),
+                    time: t,
                     kind: FaultKind::FrontEndCrash(f),
                 });
+                // Some crashed front-ends restart mid-run with a cold
+                // view (the restart-with-empty-view path).
+                if rng.bernoulli(0.5) {
+                    events.push(FaultEvent {
+                        time: t + rng.uniform(0.5, span * 0.5),
+                        kind: FaultKind::FrontEndRestart(f),
+                    });
+                }
             }
         }
         let any_frontend_crash = events
@@ -130,6 +169,27 @@ fn prop_no_request_lost_under_faults() {
                        .map(|r| r.record.redispatched).sum::<u64>());
         for rep in &res.recovery.reports {
             assert!(rep.record.disruption_window() >= 0.0);
+        }
+
+        // No double-serve: request ids in the metric stream stay
+        // unique even when bounces, pre-warm boots, drains and
+        // rejoins interleave.
+        let mut ids: Vec<u64> =
+            res.metrics.records.iter().map(|m| m.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len() as u64, served, "a request was served twice");
+
+        // Lifecycle sanity: the active set never exceeds the slot
+        // budget and every transition uses the shared vocabulary.
+        for &(_, size) in &res.size_timeline {
+            assert!(size <= slot_budget, "{size} > {slot_budget}");
+        }
+        for ev in &res.lifecycle {
+            assert!(matches!(ev.state,
+                             "backup" | "pending" | "active"
+                             | "draining" | "retired" | "failed"),
+                    "unknown lifecycle state {:?}", ev.state);
         }
     });
 }

@@ -1,0 +1,243 @@
+#!/usr/bin/env python3
+"""elasticity-smoke: kill, restart, and re-admit real instance daemons.
+
+Brings up 3 sim-clock instance daemons + 1 gateway (``block serve``) on
+loopback and drives the wire side of the elasticity lifecycle:
+
+* phase A — healthy traffic lands on all 3 instances;
+* phase B — one daemon is SIGKILLed between batches; every subsequent
+  request still returns 200 (bounce -> redispatch), i.e. no accepted
+  request is dropped, and nothing lands on the dead slot;
+* phase C — the daemon is restarted on the same port and the gateway
+  re-admits it (health probe or status re-sync); the dispatch split
+  rebalances onto the rejoined instance;
+* manifest — ``POST /manifest`` removes the instance under live traffic
+  (drain -> retire, no new dispatches) and a second update re-adds it
+  (retired -> backup -> probed -> active);
+* telemetry — ``GET /status`` exposes the live active set and the
+  lifecycle transition timeline; ``GET /healthz`` answers on instances.
+
+Usage: elasticity_smoke.py [--scheduler block|min-qpm] [--bin PATH]
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+import urllib.error
+import urllib.request
+
+BASE_PORT = 18800
+N_INSTANCES = 3
+MAX_NEW = 16
+VICTIM = 2
+
+
+def http(method, addr, path, body=None, timeout=30):
+    data = json.dumps(body).encode() if body is not None else None
+    req = urllib.request.Request(
+        f"http://{addr}{path}", data=data, method=method,
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=timeout) as resp:
+        return resp.status, json.loads(resp.read().decode() or "{}")
+
+
+def wait_healthy(addr, deadline=30.0):
+    t0 = time.time()
+    while time.time() - t0 < deadline:
+        try:
+            status, body = http("GET", addr, "/health", timeout=2)
+            if status == 200 and body.get("ok"):
+                return
+        except (urllib.error.URLError, ConnectionError, OSError):
+            pass
+        time.sleep(0.2)
+    raise SystemExit(f"{addr} did not come up within {deadline}s")
+
+
+def fire_batch(gw_addr, n, tag):
+    """n concurrent /generate calls; returns the landing instances.
+
+    Every call must return 200 with the full token budget — the
+    no-dropped-requests assertion rides on this.
+    """
+    results, errors = [], []
+
+    def fire(i):
+        try:
+            status, body = http(
+                "POST", gw_addr, "/generate",
+                {"prompt": f"{tag} {i}", "prompt_tokens": 200,
+                 "max_new": MAX_NEW}, timeout=120)
+            assert status == 200, body
+            assert body["tokens"] == MAX_NEW, body
+            results.append(body["instance"])
+        except Exception as e:  # noqa: BLE001 - smoke harness
+            errors.append(f"{tag} request {i}: {e}")
+
+    threads = [threading.Thread(target=fire, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert len(results) == n
+    return results
+
+
+def wait_for_instance(gw_addr, instance, tag, deadline=30.0, batch=6):
+    """Fire small batches until `instance` serves again (rebalance)."""
+    t0 = time.time()
+    seen = []
+    while time.time() - t0 < deadline:
+        seen = fire_batch(gw_addr, batch, tag)
+        if instance in seen:
+            return seen
+        time.sleep(0.3)
+    raise SystemExit(
+        f"instance {instance} never rejoined the split within "
+        f"{deadline}s (last batch: {seen})")
+
+
+def spawn_instance(args, mf_name, index):
+    return subprocess.Popen(
+        [args.bin, "serve", "--role", "instance",
+         "--manifest", mf_name, "--index", str(index)])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scheduler", default="block")
+    ap.add_argument("--bin", default="target/release/block")
+    ap.add_argument("--base-port", type=int, default=BASE_PORT)
+    args = ap.parse_args()
+
+    gw_addr = f"127.0.0.1:{args.base_port}"
+    inst_addrs = [f"127.0.0.1:{args.base_port + 1 + i}"
+                  for i in range(N_INSTANCES)]
+    manifest = {
+        "schema": "block-cluster/v1",
+        "cluster": {
+            "scheduler": args.scheduler,
+            "frontends": 2,
+            "sync_interval": 0.25,
+            "n_instances": N_INSTANCES,
+        },
+        "instances": inst_addrs,
+        "gateways": [gw_addr],
+        "backend": "sim",
+        "clock": "wall",
+        "time_scale": 50.0,
+    }
+    mf = tempfile.NamedTemporaryFile("w", suffix=".json", delete=False)
+    json.dump(manifest, mf)
+    mf.close()
+
+    procs = {}
+    total_ok = 0
+    try:
+        for i in range(N_INSTANCES):
+            procs[i] = spawn_instance(args, mf.name, i)
+        procs["gw"] = subprocess.Popen(
+            [args.bin, "serve", "--role", "gateway",
+             "--manifest", mf.name, "--index", "0"])
+        for addr in inst_addrs + [gw_addr]:
+            wait_healthy(addr)
+
+        # The O(1) liveness probe answers on every instance.
+        for addr in inst_addrs:
+            status, body = http("GET", addr, "/healthz", timeout=2)
+            assert status == 200 and body.get("ok"), (addr, body)
+
+        # Phase A: healthy traffic reaches all instances.
+        a = fire_batch(gw_addr, 12, "phase-a")
+        total_ok += 12
+        split_a = [a.count(i) for i in range(N_INSTANCES)]
+        print(f"phase A split: {split_a}")
+        assert all(n >= 1 for n in split_a), f"skewed: {split_a}"
+
+        # Phase B: kill one daemon between batches; traffic must keep
+        # completing on the survivors with zero dropped requests.
+        procs[VICTIM].kill()
+        procs[VICTIM].wait()
+        b = fire_batch(gw_addr, 12, "phase-b")
+        total_ok += 12
+        assert all(i != VICTIM for i in b), \
+            f"dispatch landed on the dead instance: {b}"
+        print(f"phase B split: {[b.count(i) for i in range(N_INSTANCES)]}")
+
+        # The gateway exports the lifecycle vocabulary.
+        _, gst = http("GET", gw_addr, "/status")
+        assert len(gst["active_set"]) == N_INSTANCES, gst["active_set"]
+        assert isinstance(gst["lifecycle"], list)
+        for ev in gst["lifecycle"]:
+            for field in ("time", "instance", "state", "cause"):
+                assert field in ev, ev
+
+        # Phase C: restart the daemon on the same port; the gateway
+        # re-admits it and the split rebalances.
+        procs[VICTIM] = spawn_instance(args, mf.name, VICTIM)
+        wait_healthy(inst_addrs[VICTIM])
+        c = wait_for_instance(gw_addr, VICTIM, "phase-c")
+        total_ok += len(c)
+        print(f"phase C rebalanced: victim {VICTIM} back in split")
+        _, gst = http("GET", gw_addr, "/status")
+        assert gst["active_set"][VICTIM] == "active", gst["active_set"]
+
+        # Manifest removal under live traffic: the victim drains and
+        # retires; nothing new lands on it.
+        m_less = dict(manifest)
+        m_less["instances"] = [a for i, a in enumerate(inst_addrs)
+                               if i != VICTIM]
+        m_less["cluster"] = dict(manifest["cluster"],
+                                 n_instances=N_INSTANCES - 1)
+        status, resp = http("POST", gw_addr, "/manifest", m_less)
+        assert status == 200 and resp["removed"] == 1, resp
+        d = fire_batch(gw_addr, 8, "manifest-less")
+        total_ok += 8
+        assert all(i != VICTIM for i in d), \
+            f"dispatch landed on a manifest-removed instance: {d}"
+        _, gst = http("GET", gw_addr, "/status")
+        assert gst["active_set"][VICTIM] in ("draining", "retired"), \
+            gst["active_set"]
+
+        # Manifest re-add: retired slot reopens and the health prober
+        # re-admits the (still running) daemon.
+        status, resp = http("POST", gw_addr, "/manifest", manifest)
+        assert status == 200, resp
+        e = wait_for_instance(gw_addr, VICTIM, "manifest-readd")
+        total_ok += len(e)
+        _, gst = http("GET", gw_addr, "/status")
+        assert gst["active_set"][VICTIM] == "active", gst["active_set"]
+        states = {ev["state"] for ev in gst["lifecycle"]}
+        causes = {ev["cause"] for ev in gst["lifecycle"]}
+        assert "draining" in states and "retired" in states, gst["lifecycle"]
+        assert "manifest-remove" in causes and "manifest-add" in causes, \
+            gst["lifecycle"]
+
+        # Conservation on the wire: every accepted request completed.
+        assert gst["completed"] == total_ok, (gst["completed"], total_ok)
+        assert gst["rejected"] == 0, gst
+
+        print(f"elasticity-smoke OK: {total_ok} requests, scheduler "
+              f"{args.scheduler}, kill/restart + manifest add/remove "
+              f"re-admission exercised")
+    finally:
+        for addr in inst_addrs + [gw_addr]:
+            try:
+                http("POST", addr, "/shutdown", timeout=2)
+            except Exception:  # noqa: BLE001
+                pass
+        deadline = time.time() + 5
+        for p in procs.values():
+            try:
+                p.wait(timeout=max(0.1, deadline - time.time()))
+            except subprocess.TimeoutExpired:
+                p.kill()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
