@@ -43,6 +43,12 @@ pub enum EventKind {
     ViewSync(usize),
     /// A scheduled fault fires (see [`crate::faults::FaultPlan`]).
     Fault(crate::faults::FaultKind),
+    /// Probation probe for a quarantined (`Degraded`) instance `.0`,
+    /// armed when the residual detector trips: when it pops, a slot
+    /// still in quarantine is restored to `Active` with a fresh
+    /// residual history (detection hysteresis — see
+    /// [`crate::config::DetectConfig::restore_after`]).
+    RestoreCheck(usize),
 }
 
 #[derive(Debug, Clone)]

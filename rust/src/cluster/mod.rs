@@ -36,6 +36,7 @@ use crate::config::ClusterConfig;
 use crate::core::request::{Request, RequestId, RequestMetrics};
 use crate::engine::{InstanceEngine, InstanceLoad, InstanceStatus};
 use crate::exec::roofline::RooflineModel;
+use crate::faults::residual::ResidualTracker;
 use crate::faults::{FaultKind, FaultPlan, FaultRecord, RecoveryStats};
 use crate::metrics::MetricsCollector;
 use crate::provision::AutoProvisioner;
@@ -195,6 +196,16 @@ pub struct ClusterSim {
     /// landed or a step completed).  Drives the idle window check for
     /// drain-based scale-down.
     last_busy: Vec<f64>,
+    /// Scripted link faults on the dispatch path: extra landing latency
+    /// per instance (0 = healthy) and blackholed routes.  A dropped
+    /// route bounces dispatches exactly like a dead host while the
+    /// instance itself keeps serving its in-flight work.
+    link_delay: Vec<f64>,
+    link_drop: Vec<bool>,
+    /// Predictive straggler detection (`cfg.detect.enabled`): EWMA of
+    /// predicted-vs-actual e2e per instance, fed from completions.
+    /// `None` keeps the healthy path byte-identical.
+    tracker: Option<ResidualTracker>,
 }
 
 impl ClusterSim {
@@ -225,6 +236,11 @@ impl ClusterSim {
         } else {
             AutoProvisioner::static_cluster(total)
         };
+        let tracker = if cfg.detect.enabled {
+            Some(ResidualTracker::new(cfg.detect.clone(), total))
+        } else {
+            None
+        };
         ClusterSim {
             cfg,
             opts,
@@ -242,6 +258,9 @@ impl ClusterSim {
             step_gen: vec![0; total],
             inbound: vec![0; total],
             last_busy: vec![0.0; total],
+            link_delay: vec![0.0; total],
+            link_drop: vec![false; total],
+            tracker,
         }
     }
 
@@ -253,7 +272,9 @@ impl ClusterSim {
     /// no per-sequence materialization).
     fn refresh_loads(&mut self) {
         for i in 0..self.engines.len() {
-            self.loads[i] = if self.provisioner.active()[i] {
+            self.loads[i] = if self.provisioner.active()[i]
+                && !self.link_drop[i]
+            {
                 Some(self.engines[i].load())
             } else {
                 None
@@ -269,7 +290,7 @@ impl ClusterSim {
     fn refresh_statuses(&mut self) {
         let force = self.opts.reference_path;
         for i in 0..self.engines.len() {
-            if !self.provisioner.active()[i] {
+            if !self.provisioner.active()[i] || self.link_drop[i] {
                 self.status_cache[i] = None;
                 self.status_epochs[i] = u64::MAX;
                 continue;
@@ -290,8 +311,24 @@ impl ClusterSim {
     fn sync_frontend(&mut self, f: usize, now: f64, want_statuses: bool,
                      want_loads: bool) {
         let fe = &mut self.frontends[f];
-        fe.view.sync_all(&self.engines, self.provisioner.active(), now,
-                         want_statuses, want_loads);
+        if self.link_drop.iter().any(|&d| d) {
+            // A blackholed route blocks status pulls too: the front-end
+            // sees the unreachable slot as down, exactly as the wire
+            // gateway would.  Only built when a link fault is live, so
+            // healthy runs keep the allocation-free path.
+            let reachable: Vec<bool> = self
+                .provisioner
+                .active()
+                .iter()
+                .zip(&self.link_drop)
+                .map(|(&a, &d)| a && !d)
+                .collect();
+            fe.view.sync_all(&self.engines, &reachable, now,
+                             want_statuses, want_loads);
+        } else {
+            fe.view.sync_all(&self.engines, self.provisioner.active(), now,
+                             want_statuses, want_loads);
+        }
         // The fresh view reflects every landed dispatch: the echo log
         // is obsolete.
         fe.clear_echo_all();
@@ -316,8 +353,20 @@ impl ClusterSim {
         if stale_views {
             self.frontends[f].view.active_count() > 0
         } else {
-            self.provisioner.active_count() > 0
+            self.dispatchable_count() > 0
         }
+    }
+
+    /// Active slots a dispatch can actually reach: the provisioner's
+    /// active set minus blackholed routes.  Equals `active_count()` in
+    /// every run without link faults.
+    fn dispatchable_count(&self) -> usize {
+        self.provisioner
+            .active()
+            .iter()
+            .zip(&self.link_drop)
+            .filter(|&(&a, &d)| a && !d)
+            .count()
     }
 
     /// Make and record the dispatch decision for request `idx` through
@@ -449,9 +498,13 @@ impl ClusterSim {
             .push(req.clone());
         self.inbound[decision.instance] += 1;
 
+        // Link-delay faults stretch the wire leg: the request lands (and
+        // counts as dispatched) only after the extra network latency.
+        // 0.0 on healthy routes — and `x + 0.0 == x` exactly in f64.
+        let land = now + overhead + self.link_delay[decision.instance];
         self.in_flight_meta.insert(req.id, DispatchInfo {
             arrival: req.arrival,
-            dispatched: now + overhead,
+            dispatched: land,
             instance: decision.instance,
             frontend: f,
             overhead,
@@ -460,7 +513,7 @@ impl ClusterSim {
             response_tokens: req.response_tokens,
         });
         queue.push(Event {
-            time: now + overhead,
+            time: land,
             kind: EventKind::Dispatch(idx, decision.instance, f),
         });
     }
@@ -503,6 +556,11 @@ impl ClusterSim {
         // Open re-dispatches: request id → fault record that caused it.
         let mut redispatch_fault: HashMap<RequestId, usize> = HashMap::new();
         let mut latest_fault_of_instance: Vec<Option<usize>> =
+            vec![None; self.engines.len()];
+        // Gray faults tracked separately from fail-stop ones: a
+        // slowdown's restoration clock is closed by `InstanceRecover`,
+        // not by the provisioner's rejoin path.
+        let mut latest_slow_of_instance: Vec<Option<usize>> =
             vec![None; self.engines.len()];
         let mut latest_fault_of_frontend: Vec<Option<usize>> =
             vec![None; self.frontends.len()];
@@ -587,8 +645,9 @@ impl ClusterSim {
                     self.inbound[instance] -= 1;
                     // Draining slots take no new *decisions* but still
                     // serve dispatches already on the wire; only dead /
-                    // retired hosts bounce.
-                    let landed = self.provisioner.serving(instance);
+                    // retired hosts — or blackholed routes — bounce.
+                    let landed = self.provisioner.serving(instance)
+                        && !self.link_drop[instance];
                     self.frontends[f].dispatch_landed(instance, req, landed);
                     if !landed {
                         // Connection refused: the target died while the
@@ -683,6 +742,61 @@ impl ClusterSim {
                                 time: ready,
                                 kind: EventKind::InstanceReady,
                             });
+                        }
+                        // Predictive straggler detection: every
+                        // completion's actual-vs-predicted e2e ratio
+                        // feeds its instance's residual EWMA.  Past the
+                        // trip threshold the slot is quarantined
+                        // (Active → Degraded): schedulers stop picking
+                        // it, in-flight work still completes, and a
+                        // probation probe re-admits it after
+                        // `restore_after`.
+                        let mut detect: Option<(f64, bool)> = None;
+                        if let (Some(tr), Some(pred)) =
+                            (self.tracker.as_mut(), info.predicted)
+                        {
+                            if pred.is_finite() && pred > 0.0 {
+                                tr.observe(i, m.e2e() / pred);
+                                detect = Some((tr.reported_factor(i),
+                                               tr.tripped(i)));
+                            }
+                        }
+                        if let Some((factor, tripped)) = detect {
+                            // Below the trip threshold the inflated
+                            // factor still reaches Block through the
+                            // snapshot (`perf_factor`): suspicious
+                            // slots are down-weighted before they are
+                            // quarantined.
+                            self.engines[i].set_reported_perf(factor);
+                            if tripped && self.provisioner.active()[i] {
+                                self.provisioner
+                                    .lifecycle_mut()
+                                    .degrade(i, now, "straggler");
+                                self.status_cache[i] = None;
+                                self.status_epochs[i] = u64::MAX;
+                                self.loads[i] = None;
+                                if stale_views {
+                                    // Quarantine is a view update: every
+                                    // live front-end drops the slot from
+                                    // its dispatch set.
+                                    for fe in &mut self.frontends {
+                                        if fe.alive {
+                                            fe.view.sync_instance(
+                                                i, &self.engines[i],
+                                                false, now);
+                                            fe.clear_echo(i);
+                                        }
+                                    }
+                                }
+                                size_timeline.push(
+                                    (now,
+                                     self.provisioner.active_count()));
+                                queue.push(Event {
+                                    time: now
+                                        + self.cfg.detect.restore_after,
+                                    kind: EventKind::RestoreCheck(i),
+                                });
+                            }
                         }
                         metrics.push(m);
                     }
@@ -849,6 +963,11 @@ impl ClusterSim {
                             self.provisioner.fail(i, now);
                         } else {
                             self.provisioner.fail(i, now);
+                            // The replacement host boots nominal: its
+                            // residual history died with the old one.
+                            if let Some(tr) = self.tracker.as_mut() {
+                                tr.reset(i);
+                            }
                             // Cancel the in-flight step's completion.
                             self.step_gen[i] += 1;
                             // Invalidate the central snapshot cache.
@@ -909,6 +1028,92 @@ impl ClusterSim {
                             }
                         }
                     }
+                    FaultKind::InstanceSlowdown { instance: i, factor } => {
+                        if i < self.engines.len()
+                            && !self.provisioner.is_failed(i)
+                        {
+                            // Gray failure: the host keeps serving, just
+                            // slower.  Nothing is lost, nothing bounces —
+                            // only step durations stretch from here on.
+                            // Whether anyone *notices* is the detector's
+                            // job.
+                            self.engines[i].set_slowdown(factor);
+                            latest_slow_of_instance[i] =
+                                Some(fault_records.len());
+                            fault_records.push(FaultRecord::new(now, kind));
+                        }
+                    }
+                    FaultKind::InstanceRecover(i) => {
+                        if i < self.engines.len() {
+                            self.engines[i].set_slowdown(1.0);
+                            if let Some(k) = latest_slow_of_instance[i] {
+                                let rec = &mut fault_records[k];
+                                if rec.restored_at.is_none() {
+                                    rec.restored_at = Some(now);
+                                }
+                            }
+                        }
+                    }
+                    FaultKind::LinkDelay { instance: i, delay } => {
+                        if i < self.engines.len() {
+                            // Every subsequent dispatch to `i` lands
+                            // `delay` late; in-wire dispatches keep
+                            // their original landing time.
+                            self.link_delay[i] = delay.max(0.0);
+                        }
+                    }
+                    FaultKind::LinkDrop(i) => {
+                        if i < self.engines.len() && !self.link_drop[i] {
+                            // Blackholed route: the host is healthy but
+                            // unreachable.  In-wire dispatches bounce on
+                            // landing (the bounce is the view update for
+                            // stale front-ends); central pulls skip the
+                            // route so fresh views stop offering it.
+                            self.link_drop[i] = true;
+                            self.status_cache[i] = None;
+                            self.status_epochs[i] = u64::MAX;
+                            self.loads[i] = None;
+                            latest_fault_of_instance[i] =
+                                Some(fault_records.len());
+                            fault_records.push(FaultRecord::new(now, kind));
+                        }
+                    }
+                    FaultKind::LinkRestore(i) => {
+                        if i < self.engines.len() {
+                            self.link_delay[i] = 0.0;
+                            if self.link_drop[i] {
+                                self.link_drop[i] = false;
+                                if let Some(k) =
+                                    latest_fault_of_instance[i]
+                                {
+                                    let rec = &mut fault_records[k];
+                                    if rec.restored_at.is_none() {
+                                        rec.restored_at = Some(now);
+                                    }
+                                }
+                                if stale_views
+                                    && self.provisioner.active()[i]
+                                {
+                                    // Re-announce the reachable route so
+                                    // stale views offer it again without
+                                    // waiting a sync interval.
+                                    for fe in &mut self.frontends {
+                                        if fe.alive {
+                                            fe.view.sync_instance(
+                                                i, &self.engines[i],
+                                                true, now);
+                                        }
+                                    }
+                                }
+                                for idx in parked.drain(..) {
+                                    queue.push(Event {
+                                        time: now,
+                                        kind: EventKind::Redispatch(idx),
+                                    });
+                                }
+                            }
+                        }
+                    }
                     FaultKind::FrontEndRestart(f) => {
                         if f < self.frontends.len()
                             && !self.frontends[f].alive
@@ -962,6 +1167,40 @@ impl ClusterSim {
                         }
                     }
                 },
+                EventKind::RestoreCheck(i) => {
+                    // Probation expires: a slot still in quarantine
+                    // returns to rotation with a clean slate.  If it
+                    // failed or drained in the meantime the probe is
+                    // stale — drop it.
+                    if self.provisioner.lifecycle().is_degraded(i) {
+                        self.provisioner
+                            .lifecycle_mut()
+                            .restore(i, now, "probation");
+                        if let Some(tr) = self.tracker.as_mut() {
+                            tr.reset(i);
+                        }
+                        self.engines[i].set_reported_perf(1.0);
+                        self.status_cache[i] = None;
+                        self.status_epochs[i] = u64::MAX;
+                        self.loads[i] = None;
+                        if stale_views {
+                            for fe in &mut self.frontends {
+                                if fe.alive {
+                                    fe.view.sync_instance(
+                                        i, &self.engines[i], true, now);
+                                }
+                            }
+                        }
+                        size_timeline
+                            .push((now, self.provisioner.active_count()));
+                        for idx in parked.drain(..) {
+                            queue.push(Event {
+                                time: now,
+                                kind: EventKind::Redispatch(idx),
+                            });
+                        }
+                    }
+                }
             }
         }
 
@@ -1269,6 +1508,126 @@ mod tests {
                    "a fault on the drained cluster changes nothing");
         assert_eq!(healthy.metrics.summary(), late.metrics.summary());
         assert_eq!(late.recovery.total_redispatched, 0);
+    }
+
+    #[test]
+    fn zero_slowdown_plan_reproduces_healthy_run_exactly() {
+        // The gray-failure parity bar: factor-1.0 slowdowns and
+        // zero-delay link faults exercise every new code path (the
+        // engine multiplier, the landing adder, the restore arms) yet
+        // must reproduce the healthy distributed run byte for byte —
+        // `x * 1.0` and `x + 0.0` are exact in f64.
+        use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+        let run = |plan: Option<FaultPlan>| {
+            let mut cfg = small_cfg(SchedulerKind::Block);
+            cfg.frontends = 3;
+            cfg.sync_interval = 2.0;
+            run_experiment(cfg, &small_workload(8.0, 210),
+                           SimOptions { fault_plan: plan,
+                                        ..SimOptions::default() })
+                .unwrap()
+        };
+        let placements = |r: &SimResult| -> Vec<(u64, usize, f64, f64)> {
+            r.metrics
+                .records
+                .iter()
+                .map(|m| (m.id, m.instance, m.dispatched, m.finish))
+                .collect()
+        };
+        let healthy = run(None);
+        let inert = run(Some(FaultPlan::scripted(vec![
+            FaultEvent { time: 3.0,
+                         kind: FaultKind::InstanceSlowdown {
+                             instance: 0, factor: 1.0 } },
+            FaultEvent { time: 4.0,
+                         kind: FaultKind::LinkDelay {
+                             instance: 1, delay: 0.0 } },
+            FaultEvent { time: 8.0,
+                         kind: FaultKind::InstanceRecover(0) },
+            FaultEvent { time: 9.0,
+                         kind: FaultKind::LinkRestore(1) },
+        ])));
+        assert_eq!(placements(&healthy), placements(&inert));
+        assert_eq!(healthy.metrics.summary(), inert.metrics.summary());
+        assert_eq!(inert.recovery.dropped, 0);
+        assert_eq!(inert.recovery.total_redispatched, 0);
+    }
+
+    #[test]
+    fn slowdown_detection_quarantines_straggler() {
+        // A 5× gray-degraded instance must trip the residual detector:
+        // the slot leaves the dispatch rotation (Active → Degraded,
+        // cause "straggler"), probation eventually re-admits it
+        // (cause "probation"), and conservation holds throughout —
+        // slow is not lost.
+        use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+        let mut cfg = small_cfg(SchedulerKind::Block);
+        cfg.detect.enabled = true;
+        let res = run_experiment(
+            cfg, &small_workload(8.0, 300),
+            SimOptions {
+                fault_plan: Some(FaultPlan::scripted(vec![
+                    FaultEvent { time: 2.0,
+                                 kind: FaultKind::InstanceSlowdown {
+                                     instance: 0, factor: 5.0 } },
+                    FaultEvent { time: 30.0,
+                                 kind: FaultKind::InstanceRecover(0) },
+                ])),
+                ..SimOptions::default()
+            })
+            .unwrap();
+        assert_eq!(res.metrics.len(), 300, "nothing lost to quarantine");
+        assert_eq!(res.recovery.dropped, 0);
+        let degraded: Vec<_> = res.lifecycle.iter()
+            .filter(|ev| ev.state == "degraded")
+            .collect();
+        assert!(!degraded.is_empty(), "detector never tripped: {:?}",
+                res.lifecycle);
+        assert_eq!(degraded[0].slot, 0);
+        assert_eq!(degraded[0].cause, "straggler");
+        assert!(degraded[0].time > 2.0,
+                "detection cannot precede the injection");
+        assert!(res.lifecycle.iter().any(
+                    |ev| ev.state == "active" && ev.cause == "probation"
+                        && ev.slot == 0),
+                "probation never re-admitted the slot: {:?}",
+                res.lifecycle);
+    }
+
+    #[test]
+    fn link_drop_bounces_dispatches_and_restores() {
+        // A blackholed route is a wire fault, not a host fault: the
+        // instance stays healthy, dispatches on the wire bounce and
+        // re-dispatch to survivors, and the route re-admits cleanly on
+        // restore.  Every request completes.
+        use crate::faults::{FaultEvent, FaultKind, FaultPlan};
+        let mut cfg = small_cfg(SchedulerKind::Block);
+        cfg.frontends = 3;
+        cfg.sync_interval = 2.0;
+        let res = run_experiment(
+            cfg, &small_workload(8.0, 300),
+            SimOptions {
+                fault_plan: Some(FaultPlan::scripted(vec![
+                    FaultEvent { time: 5.0,
+                                 kind: FaultKind::LinkDrop(0) },
+                    FaultEvent { time: 15.0,
+                                 kind: FaultKind::LinkRestore(0) },
+                ])),
+                ..SimOptions::default()
+            })
+            .unwrap();
+        assert_eq!(res.metrics.len(), 300, "nothing lost to the blackhole");
+        assert_eq!(res.recovery.dropped, 0);
+        assert_eq!(res.recovery.reports.len(), 1);
+        let rec = &res.recovery.reports[0].record;
+        assert!(rec.redispatched > 0,
+                "stale views must bounce at least one dispatch");
+        assert_eq!(rec.unrecovered, 0);
+        assert_eq!(rec.restored_at, Some(15.0));
+        // The healthy host served requests again after the restore.
+        assert!(res.metrics.records.iter().any(
+                    |m| m.instance == 0 && m.dispatched > 15.0),
+                "instance 0 never re-admitted after link restore");
     }
 
     #[test]

@@ -81,6 +81,99 @@ impl ClockKind {
     }
 }
 
+/// Wire-client policy for every HTTP hop in the deployment (gateway →
+/// instance clients, plus the gateway's own `/generate` wait budget).
+/// Serialized as the manifest's optional `"wire"` section; a manifest
+/// without one gets these defaults, which reproduce the pre-hardening
+/// behavior (no retries, no hedging) with bounded connect.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireConfig {
+    /// TCP connect budget, seconds (`<= 0` = OS default).
+    pub connect_timeout: f64,
+    /// Socket read budget, seconds (`<= 0` = unbounded).
+    pub read_timeout: f64,
+    /// Socket write budget, seconds (`<= 0` = unbounded).
+    pub write_timeout: f64,
+    /// Extra attempts for idempotent GET pulls (status/health).
+    pub retries: u32,
+    /// Retry backoff base, seconds (exponential + deterministic jitter).
+    pub backoff_base: f64,
+    /// Hedged `/status` pull trigger, seconds (0 = hedging off).
+    pub hedge_delay: f64,
+    /// Gateway budget for one `/generate` wait, seconds: past it the
+    /// client gets a 504 and the request is counted as timed out.
+    pub generate_deadline: f64,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        WireConfig {
+            connect_timeout: 5.0,
+            read_timeout: 60.0,
+            write_timeout: 10.0,
+            retries: 0,
+            backoff_base: 0.05,
+            hedge_delay: 0.0,
+            generate_deadline: 50.0,
+        }
+    }
+}
+
+impl WireConfig {
+    pub fn validate(&self) -> Result<()> {
+        for (name, v) in [
+            ("connect_timeout", self.connect_timeout),
+            ("read_timeout", self.read_timeout),
+            ("write_timeout", self.write_timeout),
+            ("backoff_base", self.backoff_base),
+            ("hedge_delay", self.hedge_delay),
+        ] {
+            if !v.is_finite() {
+                bail!("wire.{name} must be finite");
+            }
+        }
+        if self.backoff_base < 0.0 {
+            bail!("wire.backoff_base must be >= 0");
+        }
+        if !self.generate_deadline.is_finite() || self.generate_deadline <= 0.0
+        {
+            bail!("wire.generate_deadline must be finite and > 0");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("connect_timeout", self.connect_timeout);
+        o.insert("read_timeout", self.read_timeout);
+        o.insert("write_timeout", self.write_timeout);
+        o.insert("retries", self.retries as f64);
+        o.insert("backoff_base", self.backoff_base);
+        o.insert("hedge_delay", self.hedge_delay);
+        o.insert("generate_deadline", self.generate_deadline);
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = WireConfig::default();
+        let f = |key: &str, dv: f64| -> Result<f64> {
+            match j.opt(key) {
+                None => Ok(dv),
+                Some(v) => v.as_f64(),
+            }
+        };
+        Ok(WireConfig {
+            connect_timeout: f("connect_timeout", d.connect_timeout)?,
+            read_timeout: f("read_timeout", d.read_timeout)?,
+            write_timeout: f("write_timeout", d.write_timeout)?,
+            retries: f("retries", d.retries as f64)? as u32,
+            backoff_base: f("backoff_base", d.backoff_base)?,
+            hedge_delay: f("hedge_delay", d.hedge_delay)?,
+            generate_deadline: f("generate_deadline", d.generate_deadline)?,
+        })
+    }
+}
+
 /// A deployable cluster description (see the module doc).
 #[derive(Debug, Clone)]
 pub struct ClusterManifest {
@@ -97,6 +190,9 @@ pub struct ClusterManifest {
     pub time_scale: f64,
     /// Artifact directory for the PJRT backend.
     pub artifacts: String,
+    /// Wire-client hardening knobs (timeouts, retries, hedging, the
+    /// gateway's `/generate` deadline).
+    pub wire: WireConfig,
 }
 
 pub const MANIFEST_SCHEMA: &str = "block-cluster/v1";
@@ -118,6 +214,7 @@ impl ClusterManifest {
             clock: ClockKind::Wall,
             time_scale: 1.0,
             artifacts: "artifacts".to_string(),
+            wire: WireConfig::default(),
         }
     }
 
@@ -161,6 +258,7 @@ impl ClusterManifest {
                 self.instances.len()
             );
         }
+        self.wire.validate()?;
         self.cluster.validate()
     }
 
@@ -180,6 +278,7 @@ impl ClusterManifest {
         o.insert("clock", self.clock.name());
         o.insert("time_scale", self.time_scale);
         o.insert("artifacts", self.artifacts.as_str());
+        o.insert("wire", self.wire.to_json());
         Json::Obj(o)
     }
 
@@ -230,6 +329,10 @@ impl ClusterManifest {
             artifacts: match j.opt("artifacts") {
                 None => "artifacts".to_string(),
                 Some(v) => v.as_str()?.to_string(),
+            },
+            wire: match j.opt("wire") {
+                None => WireConfig::default(),
+                Some(v) => WireConfig::from_json(v)?,
             },
         };
         m.validate()?;
@@ -343,6 +446,38 @@ mod tests {
         cluster.provision.initial_instances = 2;
         cluster.provision.max_instances = 6;
         ClusterManifest::loopback(cluster, 6, 9100).validate().unwrap();
+    }
+
+    #[test]
+    fn wire_section_roundtrips_and_defaults() {
+        // No "wire" section → defaults (back-compat with existing
+        // manifests).
+        let text = r#"{
+            "instances": ["127.0.0.1:9101"],
+            "gateways": ["127.0.0.1:9001"]
+        }"#;
+        let m = ClusterManifest::from_json(&Json::parse(text).unwrap())
+            .unwrap();
+        assert_eq!(m.wire, WireConfig::default());
+
+        let mut m = ClusterManifest::loopback(ClusterConfig::default(),
+                                              2, 9100);
+        m.wire.connect_timeout = 0.5;
+        m.wire.read_timeout = 2.0;
+        m.wire.retries = 2;
+        m.wire.hedge_delay = 0.25;
+        m.wire.generate_deadline = 10.0;
+        m.validate().unwrap();
+        let text = m.to_json().to_string_pretty();
+        let back = ClusterManifest::from_json(&Json::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(back.wire, m.wire);
+
+        m.wire.generate_deadline = 0.0;
+        assert!(m.validate().is_err(), "deadline 0 must be rejected");
+        m.wire.generate_deadline = 10.0;
+        m.wire.backoff_base = -1.0;
+        assert!(m.validate().is_err(), "negative backoff must be rejected");
     }
 
     #[test]

@@ -282,6 +282,15 @@ pub struct FaultConfig {
     /// (`rejoin_cold_start` seconds) instead of waiting for the fault
     /// plan's rejoin.
     pub prewarm: bool,
+    /// Mean time to *gray* failure per instance, seconds (0 = no
+    /// sampled slowdowns).  A slowed instance still answers — it just
+    /// runs every step `slowdown_factor`× slower until the paired
+    /// `InstanceRecover` event.
+    pub slowdown_mttf: f64,
+    /// Mean duration of a sampled slowdown episode, seconds.
+    pub slowdown_duration: f64,
+    /// Step-time multiplier sampled slowdowns apply (>= 1).
+    pub slowdown_factor: f64,
     /// Sliding window for per-fault recovery telemetry, seconds.
     pub report_window: f64,
     /// Seed of the fault-plan RNG (independent of the simulation RNG).
@@ -298,6 +307,9 @@ impl Default for FaultConfig {
             rejoin_cold_start: 5.0,
             frontend_mttr: 0.0,
             prewarm: false,
+            slowdown_mttf: 0.0,
+            slowdown_duration: 20.0,
+            slowdown_factor: 3.0,
             report_window: 15.0,
             seed: 13,
         }
@@ -308,6 +320,7 @@ impl FaultConfig {
     /// Does this config inject any faults at all?
     pub fn enabled(&self) -> bool {
         self.instance_mttf > 0.0 || self.frontend_mttf > 0.0
+            || self.slowdown_mttf > 0.0
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -317,6 +330,7 @@ impl FaultConfig {
             ("detect_delay", self.detect_delay),
             ("rejoin_cold_start", self.rejoin_cold_start),
             ("frontend_mttr", self.frontend_mttr),
+            ("slowdown_mttf", self.slowdown_mttf),
         ] {
             if !v.is_finite() || v < 0.0 {
                 bail!("faults.{name} must be finite and >= 0");
@@ -324,6 +338,13 @@ impl FaultConfig {
         }
         if !self.instance_mttr.is_finite() || self.instance_mttr <= 0.0 {
             bail!("faults.instance_mttr must be finite and > 0");
+        }
+        if !self.slowdown_duration.is_finite() || self.slowdown_duration <= 0.0
+        {
+            bail!("faults.slowdown_duration must be finite and > 0");
+        }
+        if !self.slowdown_factor.is_finite() || self.slowdown_factor < 1.0 {
+            bail!("faults.slowdown_factor must be finite and >= 1");
         }
         if !self.report_window.is_finite() || self.report_window <= 0.0 {
             bail!("faults.report_window must be finite and > 0");
@@ -340,6 +361,9 @@ impl FaultConfig {
         o.insert("rejoin_cold_start", self.rejoin_cold_start);
         o.insert("frontend_mttr", self.frontend_mttr);
         o.insert("prewarm", self.prewarm);
+        o.insert("slowdown_mttf", self.slowdown_mttf);
+        o.insert("slowdown_duration", self.slowdown_duration);
+        o.insert("slowdown_factor", self.slowdown_factor);
         o.insert("report_window", self.report_window);
         o.insert("seed", self.seed);
         Json::Obj(o)
@@ -368,11 +392,121 @@ impl FaultConfig {
         if let Some(v) = j.opt("prewarm") {
             c.prewarm = v.as_bool()?;
         }
+        if let Some(v) = j.opt("slowdown_mttf") {
+            c.slowdown_mttf = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("slowdown_duration") {
+            c.slowdown_duration = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("slowdown_factor") {
+            c.slowdown_factor = v.as_f64()?;
+        }
         if let Some(v) = j.opt("report_window") {
             c.report_window = v.as_f64()?;
         }
         if let Some(v) = j.opt("seed") {
             c.seed = v.as_usize()? as u64;
+        }
+        Ok(c)
+    }
+}
+
+/// Predictive straggler detection — the residual tracker that drives
+/// the `Degraded` lifecycle edge (see [`crate::faults::residual`]).
+///
+/// The detector feeds on the predicted-vs-actual e2e ratio of every
+/// completion: Block already computes a prediction per dispatch, so the
+/// residual is a failure signal for free.  Disabled (the default) the
+/// subsystem is fully inert — zero-degradation configs reproduce
+/// healthy runs byte for byte.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DetectConfig {
+    /// Master switch for residual-driven quarantine.
+    pub enabled: bool,
+    /// EWMA smoothing weight of the newest residual sample, in (0, 1].
+    pub alpha: f64,
+    /// Quarantine when the EWMA residual ratio exceeds this (e.g. 2.5 =
+    /// completions run 2.5× slower than predicted).
+    pub trip: f64,
+    /// Below this ratio the instance reports a clean perf factor of 1
+    /// (hysteresis gap between trip and clear).
+    pub clear: f64,
+    /// Minimum completions observed before the tracker may trip
+    /// (a single unlucky request must not quarantine a healthy host).
+    pub min_samples: u64,
+    /// Probation: seconds a Degraded slot sits quarantined before it is
+    /// restored to Active (and its tracker reset to collect fresh
+    /// evidence).
+    pub restore_after: f64,
+}
+
+impl Default for DetectConfig {
+    fn default() -> Self {
+        DetectConfig {
+            enabled: false,
+            alpha: 0.3,
+            trip: 2.5,
+            clear: 1.3,
+            min_samples: 3,
+            restore_after: 15.0,
+        }
+    }
+}
+
+impl DetectConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !self.alpha.is_finite() || !(0.0..=1.0).contains(&self.alpha)
+            || self.alpha == 0.0
+        {
+            bail!("detect.alpha must be in (0, 1]");
+        }
+        if !self.trip.is_finite() || self.trip <= 1.0 {
+            bail!("detect.trip must be finite and > 1");
+        }
+        if !self.clear.is_finite() || self.clear < 1.0
+            || self.clear > self.trip
+        {
+            bail!("detect.clear must be in [1, trip]");
+        }
+        if self.min_samples == 0 {
+            bail!("detect.min_samples must be > 0");
+        }
+        if !self.restore_after.is_finite() || self.restore_after <= 0.0 {
+            bail!("detect.restore_after must be finite and > 0");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("enabled", self.enabled);
+        o.insert("alpha", self.alpha);
+        o.insert("trip", self.trip);
+        o.insert("clear", self.clear);
+        o.insert("min_samples", self.min_samples);
+        o.insert("restore_after", self.restore_after);
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = DetectConfig::default();
+        if let Some(v) = j.opt("enabled") {
+            c.enabled = v.as_bool()?;
+        }
+        if let Some(v) = j.opt("alpha") {
+            c.alpha = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("trip") {
+            c.trip = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("clear") {
+            c.clear = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("min_samples") {
+            c.min_samples = v.as_usize()? as u64;
+        }
+        if let Some(v) = j.opt("restore_after") {
+            c.restore_after = v.as_f64()?;
         }
         Ok(c)
     }
@@ -416,6 +550,8 @@ pub struct ClusterConfig {
     pub local_echo: bool,
     /// Fault injection (`--instance-mttf` etc.); inert by default.
     pub faults: FaultConfig,
+    /// Predictive straggler detection (`--detect`); inert by default.
+    pub detect: DetectConfig,
     /// Worker threads for Block's per-candidate prediction fan-out
     /// (`--jobs`).  1 = serial; any value produces bit-identical
     /// scheduling decisions — the argmin is ordered by
@@ -444,6 +580,7 @@ impl Default for ClusterConfig {
             sync_on_ack: false,
             local_echo: false,
             faults: FaultConfig::default(),
+            detect: DetectConfig::default(),
             jobs: 1,
             exec_noise: 0.06,
             seed: 42,
@@ -508,6 +645,7 @@ impl ClusterConfig {
             bail!("sync_interval must be finite and >= 0 (0 = always fresh)");
         }
         self.faults.validate()?;
+        self.detect.validate()?;
         Ok(())
     }
 
@@ -554,6 +692,7 @@ impl ClusterConfig {
         o.insert("sync_on_ack", self.sync_on_ack);
         o.insert("local_echo", self.local_echo);
         o.insert("faults", self.faults.to_json());
+        o.insert("detect", self.detect.to_json());
         o.insert("jobs", self.jobs);
         o.insert("exec_noise", self.exec_noise);
         o.insert("seed", self.seed);
@@ -665,6 +804,9 @@ impl ClusterConfig {
         if let Some(f) = j.opt("faults") {
             c.faults = FaultConfig::from_json(f)?;
         }
+        if let Some(d) = j.opt("detect") {
+            c.detect = DetectConfig::from_json(d)?;
+        }
         if let Some(v) = j.opt("jobs") {
             c.jobs = v.as_usize()?;
         }
@@ -751,7 +893,13 @@ mod tests {
         c.faults.frontend_mttf = 90.0;
         c.faults.frontend_mttr = 20.0;
         c.faults.prewarm = true;
+        c.faults.slowdown_mttf = 50.0;
+        c.faults.slowdown_duration = 12.0;
+        c.faults.slowdown_factor = 4.0;
         c.faults.seed = 99;
+        c.detect.enabled = true;
+        c.detect.trip = 3.0;
+        c.detect.min_samples = 5;
         let j = c.to_json();
         let c2 = ClusterConfig::from_json(&j).unwrap();
         assert_eq!(c2.scheduler, SchedulerKind::LlumnixMinus);
@@ -771,8 +919,47 @@ mod tests {
         assert!(c2.faults.prewarm);
         assert!((c2.provision.scale_down_idle - 12.0).abs() < 1e-12);
         assert_eq!(c2.provision.min_instances, 2);
+        assert!((c2.faults.slowdown_mttf - 50.0).abs() < 1e-12);
+        assert!((c2.faults.slowdown_duration - 12.0).abs() < 1e-12);
+        assert!((c2.faults.slowdown_factor - 4.0).abs() < 1e-12);
+        assert!(c2.detect.enabled);
+        assert!((c2.detect.trip - 3.0).abs() < 1e-12);
+        assert_eq!(c2.detect.min_samples, 5);
         assert_eq!(c2.faults.seed, 99);
         assert!(c2.faults.enabled());
+    }
+
+    #[test]
+    fn detect_and_slowdown_validation() {
+        // Slowdowns alone make the fault subsystem non-inert.
+        let mut f = FaultConfig::default();
+        f.slowdown_mttf = 30.0;
+        assert!(f.enabled());
+        f.validate().unwrap();
+
+        let mut c = ClusterConfig::default();
+        c.faults.slowdown_factor = 0.5;
+        assert!(c.validate().is_err(), "factor < 1 is a speedup, not a fault");
+
+        let mut c = ClusterConfig::default();
+        c.faults.slowdown_duration = 0.0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.detect.alpha = 0.0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.detect.clear = 5.0; // above trip
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.detect.min_samples = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.detect.restore_after = -1.0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

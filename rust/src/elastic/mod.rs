@@ -9,10 +9,12 @@
 //! ```text
 //!            begin_cold_start                    activate_ready
 //!   Backup ───────────────────► Pending{ready} ─────────────────► Active
-//!   Retired ──────────────┘          │                              │
-//!   Failed ───────────────┘          │ fail (cold start cancelled)  │ begin_drain
-//!     ▲                              ▼                              ▼
-//!     └────────────────────────── Failed ◄──── fail ──────────── Draining
+//!   Retired ──────────────┘          │                           ▲  │  │
+//!   Failed ───────────────┘          │ fail            restore ──┘  │  │ begin_drain
+//!     ▲                              ▼                              ▼  │
+//!     │                            Failed ◄─── fail ─────────── Degraded
+//!     │                              ▲                              │
+//!     └──────────────────────────────┴──── fail ──────────── Draining ◄┘
 //!                                                                   │ retire
 //!                                                                   ▼
 //!                                                                Retired
@@ -26,6 +28,12 @@
 //!   through here — a rejoining host is just a provisioned host whose
 //!   cold start was scheduled by a fault instead of a latency trigger.
 //! * **Active** — serving and eligible for new dispatches.
+//! * **Degraded** — gray failure: the slot still answers (in-flight
+//!   work finishes, landings are accepted) but a straggler detector
+//!   flagged it as running slow, so it is quarantined from *new*
+//!   dispatches until [`ActiveSet::restore`] (hysteresis back to
+//!   Active) or [`ActiveSet::fail`] (the gray failure hardened into a
+//!   real one).
 //! * **Draining** — excluded from new dispatches but still finishing
 //!   in-flight work (scale-down grace).
 //! * **Retired** — drained to empty and released; may be provisioned
@@ -49,6 +57,9 @@ pub enum SlotState {
     },
     /// Serving and eligible for new dispatches.
     Active,
+    /// Gray failure: still serving in-flight work and accepting
+    /// landings, but quarantined from new dispatches until restored.
+    Degraded,
     /// No new dispatches; finishing in-flight work before retiring.
     Draining,
     /// Drained and released; a provisioning candidate again.
@@ -63,6 +74,7 @@ impl SlotState {
             SlotState::Backup => "backup",
             SlotState::Pending { .. } => "pending",
             SlotState::Active => "active",
+            SlotState::Degraded => "degraded",
             SlotState::Draining => "draining",
             SlotState::Retired => "retired",
             SlotState::Failed => "failed",
@@ -72,7 +84,8 @@ impl SlotState {
 
 /// One logged transition: slot `slot` entered state `state` at `time`
 /// because of `cause` ("scale-up", "scale-down", "retire", "fail",
-/// "rejoin", "prewarm", "bounce", "manifest-add", "manifest-remove").
+/// "rejoin", "prewarm", "bounce", "manifest-add", "manifest-remove",
+/// "straggler", "status-fail", "probation", "gray-fail").
 #[derive(Debug, Clone, PartialEq)]
 pub struct LifecycleEvent {
     pub time: f64,
@@ -146,10 +159,17 @@ impl ActiveSet {
         matches!(self.slots[i], SlotState::Draining)
     }
 
+    pub fn is_degraded(&self, i: usize) -> bool {
+        matches!(self.slots[i], SlotState::Degraded)
+    }
+
     /// May slot `i` still *finish* work (accept in-flight landings)?
-    /// Active and Draining slots serve; everything else bounces.
+    /// Active, Degraded and Draining slots serve; everything else
+    /// bounces — a gray-degraded host is slow, not gone.
     pub fn serving(&self, i: usize) -> bool {
-        matches!(self.slots[i], SlotState::Active | SlotState::Draining)
+        matches!(self.slots[i],
+                 SlotState::Active | SlotState::Degraded
+                 | SlotState::Draining)
     }
 
     pub fn active_count(&self) -> usize {
@@ -230,10 +250,33 @@ impl ActiveSet {
                                        state: "active", cause });
     }
 
-    /// Stop dispatching to Active slot `i`; it keeps serving in-flight
-    /// work until [`Self::retire`].
-    pub fn begin_drain(&mut self, i: usize, now: f64, cause: &'static str) {
+    /// Quarantine Active slot `i`: a straggler detector flagged it as
+    /// gray-degraded.  It stops taking new dispatches (mask off) but
+    /// keeps serving in-flight work — the gray host is slow, not dead.
+    pub fn degrade(&mut self, i: usize, now: f64, cause: &'static str) {
         debug_assert!(matches!(self.slots[i], SlotState::Active));
+        self.slots[i] = SlotState::Degraded;
+        self.mask[i] = false;
+        self.log.push(LifecycleEvent { time: now, slot: i,
+                                       state: "degraded", cause });
+    }
+
+    /// Hysteresis back: a Degraded slot passed its probation and rejoins
+    /// the dispatchable set.
+    pub fn restore(&mut self, i: usize, now: f64, cause: &'static str) {
+        debug_assert!(matches!(self.slots[i], SlotState::Degraded));
+        self.slots[i] = SlotState::Active;
+        self.mask[i] = true;
+        self.log.push(LifecycleEvent { time: now, slot: i,
+                                       state: "active", cause });
+    }
+
+    /// Stop dispatching to slot `i`; it keeps serving in-flight work
+    /// until [`Self::retire`].  Valid from Active or Degraded (a
+    /// scale-down may target a quarantined slot).
+    pub fn begin_drain(&mut self, i: usize, now: f64, cause: &'static str) {
+        debug_assert!(matches!(self.slots[i],
+                               SlotState::Active | SlotState::Degraded));
         self.slots[i] = SlotState::Draining;
         self.mask[i] = false;
         self.log.push(LifecycleEvent { time: now, slot: i,
@@ -361,6 +404,38 @@ mod tests {
         assert_eq!(s.active_count(), 2);
         let last = s.log.last().unwrap();
         assert_eq!((last.state, last.cause), ("backup", "manifest-add"));
+    }
+
+    #[test]
+    fn degrade_quarantines_but_keeps_serving() {
+        let mut s = ActiveSet::new(4, 4);
+        s.degrade(1, 3.0, "straggler");
+        assert!(!s.is_active(1), "degraded slots take no new dispatches");
+        assert!(s.is_degraded(1));
+        assert!(s.serving(1), "degraded slots finish in-flight work");
+        assert_eq!(s.active_count(), 3);
+        let last = s.log.last().unwrap();
+        assert_eq!((last.slot, last.state, last.cause),
+                   (1, "degraded", "straggler"));
+        // Hysteresis back to Active after probation.
+        s.restore(1, 9.0, "probation");
+        assert!(s.is_active(1));
+        assert_eq!(s.active_count(), 4);
+        let last = s.log.last().unwrap();
+        assert_eq!((last.state, last.cause), ("active", "probation"));
+    }
+
+    #[test]
+    fn degraded_slot_can_fail_or_drain() {
+        let mut s = ActiveSet::new(4, 4);
+        s.degrade(0, 1.0, "straggler");
+        s.fail(0, 2.0, "gray-fail");
+        assert!(s.is_failed(0), "gray failure hardened into fail-stop");
+        assert!(!s.serving(0));
+        s.degrade(1, 3.0, "status-fail");
+        s.begin_drain(1, 4.0, "scale-down");
+        assert!(s.is_draining(1), "scale-down may target a degraded slot");
+        assert!(s.serving(1));
     }
 
     #[test]

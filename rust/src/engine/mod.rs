@@ -129,6 +129,16 @@ pub struct InstanceEngine {
     /// Multiplicative execution-noise (live engines only; the Predictor
     /// runs noise-free — this gap is part of its prediction error).
     noise: Option<(Rng, f64)>,
+    /// Gray-failure injection: every step's duration is multiplied by
+    /// this (1.0 = healthy).  Unlike noise it is systematic, which is
+    /// exactly what makes it detectable from prediction residuals.
+    slowdown: f64,
+    /// Perf multiplier the residual detector has attributed to this
+    /// instance, stamped into snapshots as
+    /// [`InstanceStatus::perf_factor`].  Deliberately separate from
+    /// `slowdown`: the injected truth and the detector's estimate are
+    /// different quantities (the detector never gets to peek).
+    reported_perf: f64,
     /// Scratch buffers reused across batch formations and retired plans
     /// whose vector capacities `form_batch` recycles — the Predictor
     /// replays thousands of steps per dispatch, so the hot loop must not
@@ -154,6 +164,8 @@ impl InstanceEngine {
             steps_executed: 0,
             busy_time: 0.0,
             noise: None,
+            slowdown: 1.0,
+            reported_perf: 1.0,
             scratch_decode: Vec::new(),
             scratch_preempted: Vec::new(),
             plan_pool: Vec::new(),
@@ -165,6 +177,37 @@ impl InstanceEngine {
             self.noise = Some((rng, sigma));
         }
         self
+    }
+
+    /// Current gray-failure multiplier (1.0 = healthy).
+    pub fn slowdown(&self) -> f64 {
+        self.slowdown
+    }
+
+    /// Inject or clear a gray failure: subsequent steps run `factor`×
+    /// slower.  The in-flight step (if any) keeps its already-committed
+    /// completion time — a slowdown arriving mid-step throttles the
+    /// *next* step, matching a real clock-frequency drop.  Bumps the
+    /// epoch only on an actual change so redundant recover events do
+    /// not invalidate snapshot caches.
+    pub fn set_slowdown(&mut self, factor: f64) {
+        debug_assert!(factor >= 1.0 && factor.is_finite());
+        if self.slowdown != factor {
+            self.slowdown = factor;
+            self.epoch += 1;
+        }
+    }
+
+    /// Install the detector's perf estimate for snapshot export (see
+    /// [`InstanceStatus::perf_factor`]).  Epoch-bumped on change: a new
+    /// estimate must invalidate cached snapshots or schedulers would
+    /// keep reading the stale factor.
+    pub fn set_reported_perf(&mut self, factor: f64) {
+        debug_assert!(factor >= 1.0 && factor.is_finite());
+        if self.reported_perf != factor {
+            self.reported_perf = factor;
+            self.epoch += 1;
+        }
     }
 
     // ---- accessors -------------------------------------------------------
@@ -303,6 +346,10 @@ impl InstanceEngine {
         if let Some((rng, sigma)) = &mut self.noise {
             dur *= (1.0 + *sigma * rng.normal()).max(0.2);
         }
+        // Gray-failure multiplier last: a slowdown scales whatever the
+        // noisy duration came out to.  `× 1.0` is exact, so healthy
+        // engines reproduce pre-slowdown runs byte for byte.
+        dur *= self.slowdown;
         let done = self.clock + dur;
         self.epoch += 1;
         self.busy_time += dur;
@@ -399,6 +446,10 @@ impl InstanceEngine {
         lost.extend(self.running.drain(..).map(|s| s.id));
         self.in_flight = None;
         self.bm.reset();
+        // The replacement host boots at nominal speed with a clean
+        // reputation — a crash supersedes any gray failure.
+        self.slowdown = 1.0;
+        self.reported_perf = 1.0;
         lost
     }
 
@@ -625,6 +676,7 @@ impl InstanceEngine {
             waiting: self.waiting.iter().map(SeqSnapshot::from_seq).collect(),
             in_flight: self.in_flight.clone(),
             total_preemptions: self.total_preemptions,
+            perf_factor: self.reported_perf,
         }
     }
 
@@ -675,6 +727,11 @@ impl InstanceEngine {
         self.steps_executed = 0;
         self.busy_time = 0.0;
         self.noise = None;
+        // The Predictor simulates the *nominal* future; any observed
+        // perf inflation is applied by the scheduler on top (see
+        // `BlockScheduler`), not baked into the replay.
+        self.slowdown = 1.0;
+        self.reported_perf = 1.0;
         for snap in &status.running {
             let mut seq = snap.to_seq();
             seq.response_limit = plan_limit(snap);
@@ -750,6 +807,42 @@ mod tests {
             }
         }
         out
+    }
+
+    #[test]
+    fn slowdown_scales_step_time_and_is_exactly_reversible() {
+        // Identical engines, one slowed 3×: every step takes exactly 3×
+        // as long, and recovering (factor 1.0) restores the healthy
+        // per-step durations bit for bit.
+        let mut healthy = engine(LocalPolicy::SarathiChunked);
+        let mut slow = engine(LocalPolicy::SarathiChunked);
+        healthy.enqueue(&req(1, 0.0, 256, 8), 0.0);
+        slow.enqueue(&req(1, 0.0, 256, 8), 0.0);
+        slow.set_slowdown(3.0);
+        let e = slow.epoch();
+        slow.set_slowdown(3.0);
+        assert_eq!(slow.epoch(), e, "redundant set must not bump epoch");
+        let h1 = healthy.start_step(&cost()).unwrap();
+        let s1 = slow.start_step(&cost()).unwrap();
+        assert!((s1 - 3.0 * h1).abs() < 1e-12);
+        healthy.finish_step();
+        slow.finish_step();
+        // Recover: subsequent steps match the healthy engine's durations
+        // exactly (the clocks differ, the durations must not).
+        slow.set_slowdown(1.0);
+        let hc = healthy.clock();
+        let sc = slow.clock();
+        let h2 = healthy.start_step(&cost()).unwrap() - hc;
+        let s2 = slow.start_step(&cost()).unwrap() - sc;
+        assert_eq!(h2, s2, "recovered engine steps at nominal speed");
+        // The snapshot carries the detector's estimate, not the truth.
+        let mut snap = slow.snapshot();
+        assert_eq!(snap.perf_factor, 1.0);
+        slow.set_reported_perf(2.5);
+        assert!(slow.epoch() > snap.epoch,
+                "a new perf estimate must invalidate snapshot caches");
+        snap = slow.snapshot();
+        assert_eq!(snap.perf_factor, 2.5);
     }
 
     #[test]

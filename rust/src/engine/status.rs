@@ -127,6 +127,14 @@ pub struct InstanceStatus {
     /// The step currently executing, if any (plan + completion time).
     pub in_flight: Option<(BatchPlan, f64)>,
     pub total_preemptions: u64,
+    /// Execution-speed multiplier the residual detector currently
+    /// attributes to this instance (1.0 = nominal).  Block's scheduler
+    /// scales its predicted e2e/TTFT by this before comparing
+    /// candidates, so a degraded-but-dispatchable slot competes at its
+    /// *observed* speed.  Stays exactly 1.0 unless straggler detection
+    /// is enabled and has tripped — and `× 1.0` is exact in f64, so
+    /// the healthy path is byte-identical to the pre-detection code.
+    pub perf_factor: f64,
 }
 
 /// Constant-size load summary for heuristic dispatchers (Llumnix-,
@@ -212,6 +220,12 @@ impl InstanceStatus {
             None => o.insert("in_flight", Json::Null),
         }
         o.insert("total_preemptions", self.total_preemptions);
+        // Emitted only when inflated: healthy snapshots keep the exact
+        // pre-detection wire bytes (serve-smoke parity) and old
+        // gateways parse new daemons unchanged.
+        if self.perf_factor != 1.0 {
+            o.insert("perf_factor", self.perf_factor);
+        }
         Json::Obj(o)
     }
 
@@ -243,6 +257,10 @@ impl InstanceStatus {
             waiting: seqs("waiting")?,
             in_flight,
             total_preemptions: j.field("total_preemptions")?.as_usize()? as u64,
+            perf_factor: match j.opt("perf_factor") {
+                Some(v) => v.as_f64()?,
+                None => 1.0,
+            },
         })
     }
 }
@@ -278,6 +296,7 @@ mod tests {
             waiting: vec![snap(3, 300, 0, 0)],
             in_flight: None,
             total_preemptions: 0,
+            perf_factor: 1.0,
         };
         // 300 (waiting) + 300 (running partial) + 0 (done)
         assert_eq!(st.pending_prefill_tokens(), 600);
@@ -326,11 +345,23 @@ mod tests {
                 1.3000000000000003,
             )),
             total_preemptions: 7,
+            perf_factor: 1.0,
         };
         let text = st.to_json().to_string_compact();
+        assert!(!text.contains("perf_factor"),
+                "nominal perf keeps the pre-detection wire bytes");
         let back =
             InstanceStatus::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, st, "wire round-trip must be exact");
+        // An inflated perf factor survives the round-trip exactly too.
+        let mut slow = st.clone();
+        slow.perf_factor = 4.750000000000001;
+        let slow_text = slow.to_json().to_string_compact();
+        assert!(slow_text.contains("perf_factor"));
+        let back_slow =
+            InstanceStatus::from_json(&Json::parse(&slow_text).unwrap())
+                .unwrap();
+        assert_eq!(back_slow, slow);
         // Extra envelope fields (daemon counters) must not break parsing.
         let mut env = match st.to_json() {
             Json::Obj(o) => o,
@@ -354,6 +385,7 @@ mod tests {
             waiting: vec![],
             in_flight: None,
             total_preemptions: 3,
+            perf_factor: 1.0,
         };
         let j = st.to_json();
         assert_eq!(j.field("free_blocks").unwrap().as_usize().unwrap(), 10);

@@ -1,0 +1,230 @@
+//! Gray-chaos sweep — the gray-failure claim under measurement: a host
+//! that is *slow but alive* poisons the whole cluster unless someone
+//! notices, and Block's own predictions are the detector.
+//!
+//! Unlike the fail-stop [`crate::experiments::chaos`] sweep (hosts die,
+//! dispatches bounce, the lifecycle sees everything), a gray failure
+//! passes every health check: the instance keeps accepting work and
+//! completing it — N× slower than predicted.  Every (severity ×
+//! detection × scheduler) point runs the same workload with a scripted
+//! [`FaultPlan`]: instance 0 is throttled by `factor` for the middle
+//! half of the run, then recovers.
+//!
+//! What the results should show:
+//!
+//! * **detection off, severity 5× degrades P99 cluster-wide** — a
+//!   quarter of dispatches keep landing on the straggler and come back
+//!   ~5× late, so the run-level P99 is the straggler's, not the
+//!   cluster's;
+//! * **detection on bounds the damage** — the residual tracker trips
+//!   within a few completions (`detect_latency` in the output), the
+//!   slot is quarantined Active → Degraded, survivors absorb the load,
+//!   and the goodput dip shrinks vs the detection-off twin;
+//! * **prediction enables detection** — the heuristic baselines attach
+//!   no per-request prediction, so the residual detector has nothing to
+//!   read and their detect-on/off twins coincide: knowledge-based
+//!   scheduling is what buys gray-failure robustness;
+//! * **slow is not lost** — conservation holds at every point: every
+//!   admitted request is served (quarantine redirects, it never drops).
+//!
+//! Results land in `results/graychaos.json` (`schema: "graychaos/v1"`),
+//! validated by the `gray-smoke` CI job.
+
+use anyhow::Result;
+
+use crate::cluster::{run_experiment, SimOptions};
+use crate::config::SchedulerKind;
+use crate::experiments::{paper_cluster, parallel_map, sharegpt_workload,
+                         ExpContext};
+use crate::faults::{FaultEvent, FaultKind, FaultPlan, RecoveryStats};
+use crate::metrics::{render_table, RunSummary};
+use crate::util::json::{Json, JsonObj};
+
+/// Dispatchers compared (same trio as the fail-stop chaos sweep).
+const KINDS: [SchedulerKind; 3] = [
+    SchedulerKind::Block,
+    SchedulerKind::MinQpm,
+    SchedulerKind::LlumnixMinus,
+];
+
+/// Gray failures hurt in the contended-but-not-saturated region: the
+/// 4-instance cluster saturates near ~20 QPS, and 12 QPS leaves the
+/// three survivors enough headroom to absorb a quarantined slot.
+const SWEEP_QPS: f64 = 12.0;
+const N_INSTANCES: usize = 4;
+const SLOW_INSTANCE: usize = 0;
+
+/// Severity levels: engine step-time multiplier on the gray instance
+/// (1.0 = healthy baseline — the parity point every other level is
+/// judged against).
+const SEVERITIES: [(&str, f64); 3] =
+    [("none", 1.0), ("mild", 3.0), ("severe", 5.0)];
+
+struct Point {
+    severity: &'static str,
+    factor: f64,
+    detect: bool,
+    kind: SchedulerKind,
+    requests: usize,
+    summary: RunSummary,
+    recovery: RecoveryStats,
+    /// First Active→Degraded transition relative to the injection
+    /// instant (None: detection off, heuristic scheduler, or the
+    /// tracker never tripped).
+    detect_latency: Option<f64>,
+    degraded_events: usize,
+}
+
+pub fn run(ctx: &ExpContext) -> Result<()> {
+    // Smoke grid: Block only, baseline + the severe level, both
+    // detection arms — the four points the gray-smoke CI asserts on.
+    let (severities, kinds, n): (Vec<(&str, f64)>, Vec<SchedulerKind>, usize) =
+        if ctx.smoke {
+            (vec![("none", 1.0), ("severe", 5.0)],
+             vec![SchedulerKind::Block], 300)
+        } else {
+            (SEVERITIES.to_vec(), KINDS.to_vec(),
+             ctx.scale.requests_for(SWEEP_QPS))
+        };
+    let span = n as f64 / SWEEP_QPS;
+    // Throttle for the middle half of the run: late enough for a
+    // pre-fault goodput window, early enough that recovery and the
+    // post-restore tail are all on the record.
+    let t0 = span / 4.0;
+    let recover_at = t0 + span / 2.0;
+
+    let mut grid = Vec::new();
+    for &severity in &severities {
+        for detect in [false, true] {
+            for &kind in &kinds {
+                grid.push((severity, detect, kind));
+            }
+        }
+    }
+    let points = parallel_map(
+        ctx.jobs,
+        &grid,
+        |&((name, factor), detect, kind)| -> Result<Point> {
+            let mut cfg = paper_cluster(kind);
+            cfg.n_instances = N_INSTANCES;
+            cfg.frontends = 2;
+            cfg.sync_interval = 1.0;
+            cfg.shard_policy = ctx.shard;
+            cfg.detect.enabled = detect;
+            cfg.faults.report_window = (span / 3.0).clamp(1.0, 15.0);
+            let plan = FaultPlan::scripted(vec![
+                FaultEvent {
+                    time: t0,
+                    kind: FaultKind::InstanceSlowdown {
+                        instance: SLOW_INSTANCE, factor,
+                    },
+                },
+                FaultEvent {
+                    time: recover_at,
+                    kind: FaultKind::InstanceRecover(SLOW_INSTANCE),
+                },
+            ]);
+            let workload = sharegpt_workload(SWEEP_QPS, n, ctx.seed);
+            let opts = SimOptions {
+                probes: false,
+                fault_plan: Some(plan),
+                ..SimOptions::default()
+            };
+            let res = run_experiment(cfg, &workload, opts)?;
+            // Conservation: a gray failure slows requests down, it must
+            // never lose one — quarantine redirects, it does not drop.
+            anyhow::ensure!(
+                res.metrics.len() as u64 + res.recovery.dropped == n as u64,
+                "conservation violated at {name}/{kind:?}: {} served + {} \
+                 dropped != {n}",
+                res.metrics.len(), res.recovery.dropped,
+            );
+            let detect_latency = res
+                .lifecycle
+                .iter()
+                .find(|ev| ev.state == "degraded")
+                .map(|ev| ev.time - t0);
+            let degraded_events = res
+                .lifecycle
+                .iter()
+                .filter(|ev| ev.state == "degraded")
+                .count();
+            Ok(Point {
+                severity: name,
+                factor,
+                detect,
+                kind,
+                requests: n,
+                summary: res.metrics.summary(),
+                recovery: res.recovery,
+                detect_latency,
+                degraded_events,
+            })
+        },
+    );
+
+    let mut out = JsonObj::new();
+    out.insert("schema", "graychaos/v1");
+    out.insert("qps", SWEEP_QPS);
+    out.insert("requests_per_point", n);
+    out.insert("n_instances", N_INSTANCES);
+    out.insert("slow_instance", SLOW_INSTANCE);
+    out.insert("injected_at", t0);
+    out.insert("recovered_at", recover_at);
+    out.insert("shard_policy", ctx.shard.name());
+    let mut pts = JsonObj::new();
+    let mut rows = Vec::new();
+    for point in points {
+        let p = point?;
+        let s = &p.summary;
+        let r = &p.recovery;
+        let latency = match p.detect_latency {
+            Some(l) => format!("{l:.2}"),
+            None => "-".to_string(),
+        };
+        rows.push(vec![
+            p.severity.to_string(),
+            format!("{:.0}x", p.factor),
+            if p.detect { "on" } else { "off" }.to_string(),
+            p.kind.name().to_string(),
+            format!("{:.3}", s.p99_ttft),
+            format!("{:.2}", s.p99_e2e),
+            format!("{:.2}", s.mean_e2e),
+            format!("{}", s.n),
+            format!("{}", r.dropped),
+            format!("{:.2}", r.mean_goodput_dip()),
+            latency,
+            format!("{}", p.degraded_events),
+        ]);
+        let mut j = s.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("scheduler", p.kind.name());
+            o.insert("severity", p.severity);
+            o.insert("factor", p.factor);
+            o.insert("detect", p.detect);
+            o.insert("requests", p.requests);
+            o.insert("degraded_events", p.degraded_events);
+            match p.detect_latency {
+                Some(l) => o.insert("detect_latency", l),
+                None => o.insert("detect_latency", Json::Null),
+            }
+            o.insert("recovery", r.to_json());
+        }
+        pts.insert(
+            format!("{}@{}/detect-{}", p.kind.name(), p.severity,
+                    if p.detect { "on" } else { "off" }),
+            j,
+        );
+    }
+    out.insert("points", Json::Obj(pts));
+    println!("Gray-chaos sweep — severity × detection at {SWEEP_QPS} QPS \
+              on {N_INSTANCES} instances ({n} requests/point; instance \
+              {SLOW_INSTANCE} throttled t={t0:.0}s..{recover_at:.0}s)");
+    println!("{}", render_table(
+        &["severity", "factor", "detect", "scheduler", "p99 TTFT",
+          "p99 e2e", "mean e2e", "served", "drop", "dip",
+          "detect_lat(s)", "n_degraded"],
+        &rows));
+
+    ctx.write_json("graychaos", &Json::Obj(out))
+}

@@ -17,6 +17,7 @@
 
 pub mod chaos;
 pub mod fig5;
+pub mod graychaos;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
@@ -85,8 +86,9 @@ pub struct ExpContext {
     /// centralized paper experiments).
     pub shard: ShardPolicy,
     /// CI smoke mode (`--smoke`): shrink the sweep grid to a
-    /// schema-complete minimum (read by [`chaos`]; other experiments
-    /// ignore it — their CI sizing is `Scale::Quick`).
+    /// schema-complete minimum (read by [`chaos`] and [`graychaos`];
+    /// other experiments ignore it — their CI sizing is
+    /// `Scale::Quick`).
     pub smoke: bool,
 }
 
@@ -155,9 +157,10 @@ pub fn run(name: &str, ctx: &ExpContext) -> Result<()> {
         "tab2" => tab2::run(ctx),
         "staleness" => staleness::run(ctx),
         "chaos" => chaos::run(ctx),
+        "graychaos" => graychaos::run(ctx),
         "all" => {
             for n in ["tab1", "fig5", "fig6", "fig7", "fig8", "tab2",
-                      "staleness", "chaos"] {
+                      "staleness", "chaos", "graychaos"] {
                 println!("\n=============== {n} ===============");
                 run(n, ctx)?;
             }
@@ -165,7 +168,7 @@ pub fn run(name: &str, ctx: &ExpContext) -> Result<()> {
         }
         other => anyhow::bail!("unknown experiment '{other}' \
                                 (tab1|fig5|fig6|fig7|fig8|tab2|staleness|\
-                                 chaos|all)"),
+                                 chaos|graychaos|all)"),
     }
 }
 

@@ -47,11 +47,22 @@
 //!   [`crate::provision::AutoProvisioner`]'s cold-start lifecycle
 //!   (pending → `InstanceReady` → active), so elastic scale-up and
 //!   failure recovery share one active-set path.
+//! * **InstanceSlowdown / InstanceRecover** — a *gray* failure: the
+//!   instance keeps answering and serving but every batch step takes
+//!   `factor`× as long.  Nothing fail-stop notices; only the
+//!   predicted-vs-actual residual tracker ([`residual`]) can see it
+//!   and quarantine the slot (`Active → Degraded`).
+//! * **LinkDelay / LinkDrop / LinkRestore** — scripted-only network
+//!   faults on the dispatch path: extra landing latency, or a blackhole
+//!   that bounces dispatches back into the schedulers while the
+//!   instance itself stays healthy.
 //!
 //! With [`FaultPlan::none`] the subsystem is inert: the event loop sees
 //! no fault events and reproduces the healthy-cluster run byte for byte
 //! (`cluster::tests::zero_fault_plan_reproduces_healthy_run_exactly`,
 //! plus the conservation property `prop_no_request_lost_under_faults`).
+
+pub mod residual;
 
 use crate::config::FaultConfig;
 use crate::metrics::MetricsCollector;
@@ -73,6 +84,23 @@ pub enum FaultKind {
     InstanceFail(usize),
     /// Instance `.0` begins rejoining (cold start applies on top).
     InstanceRejoin(usize),
+    /// Gray failure: `instance` keeps serving but every batch step
+    /// takes `factor`× as long (thermal throttling, a sick GPU, a
+    /// noisy neighbor).  Health checks still pass — only the
+    /// predicted-vs-actual residual can see it.
+    InstanceSlowdown { instance: usize, factor: f64 },
+    /// The slowed instance `.0` returns to nominal step time.
+    InstanceRecover(usize),
+    /// Scripted-only link fault: dispatches to `instance` land after
+    /// an extra `delay` seconds of network latency (0 restores).
+    LinkDelay { instance: usize, delay: f64 },
+    /// Scripted-only link fault: the path to instance `.0` blackholes —
+    /// dispatches bounce and re-enter the schedulers, exactly like
+    /// bouncing off a dead host, but the instance itself is healthy and
+    /// its in-flight work completes normally.
+    LinkDrop(usize),
+    /// The blackholed link to instance `.0` heals.
+    LinkRestore(usize),
 }
 
 impl FaultKind {
@@ -82,6 +110,11 @@ impl FaultKind {
             FaultKind::FrontEndRestart(_) => "frontend-restart",
             FaultKind::InstanceFail(_) => "instance-fail",
             FaultKind::InstanceRejoin(_) => "instance-rejoin",
+            FaultKind::InstanceSlowdown { .. } => "instance-slowdown",
+            FaultKind::InstanceRecover(_) => "instance-recover",
+            FaultKind::LinkDelay { .. } => "link-delay",
+            FaultKind::LinkDrop(_) => "link-drop",
+            FaultKind::LinkRestore(_) => "link-restore",
         }
     }
 
@@ -91,7 +124,12 @@ impl FaultKind {
             FaultKind::FrontEndCrash(i)
             | FaultKind::FrontEndRestart(i)
             | FaultKind::InstanceFail(i)
-            | FaultKind::InstanceRejoin(i) => *i,
+            | FaultKind::InstanceRejoin(i)
+            | FaultKind::InstanceSlowdown { instance: i, .. }
+            | FaultKind::InstanceRecover(i)
+            | FaultKind::LinkDelay { instance: i, .. }
+            | FaultKind::LinkDrop(i)
+            | FaultKind::LinkRestore(i) => *i,
         }
     }
 }
@@ -171,6 +209,33 @@ impl FaultPlan {
                         kind: FaultKind::InstanceRejoin(i),
                     });
                     t = back + r.exponential(1.0 / cfg.instance_mttf);
+                }
+            }
+        }
+        if cfg.slowdown_mttf > 0.0 {
+            // Gray failures alternate slowdown/recover per instance,
+            // from their own stream class so toggling them never moves
+            // a fail-stop schedule (and vice versa).
+            for i in 0..instances {
+                let mut r = Rng::new(
+                    (cfg.seed ^ 0x510D_0000)
+                        .wrapping_add((i as u64).wrapping_mul(GOLDEN)),
+                );
+                let mut t = r.exponential(1.0 / cfg.slowdown_mttf);
+                while t < horizon {
+                    events.push(FaultEvent {
+                        time: t,
+                        kind: FaultKind::InstanceSlowdown {
+                            instance: i,
+                            factor: cfg.slowdown_factor,
+                        },
+                    });
+                    let back = t + r.exponential(1.0 / cfg.slowdown_duration);
+                    events.push(FaultEvent {
+                        time: back,
+                        kind: FaultKind::InstanceRecover(i),
+                    });
+                    t = back + r.exponential(1.0 / cfg.slowdown_mttf);
                 }
             }
         }
@@ -530,6 +595,63 @@ mod tests {
         };
         assert_eq!(crashes(&small), crashes(&big),
                    "front-end streams independent of instance count");
+    }
+
+    #[test]
+    fn sample_alternates_slowdown_and_recover_per_instance() {
+        let mut cfg = fault_cfg(0.0, 0.0);
+        cfg.slowdown_mttf = 25.0;
+        cfg.slowdown_duration = 10.0;
+        cfg.slowdown_factor = 4.0;
+        assert!(cfg.enabled(), "slowdowns alone arm the subsystem");
+        let plan = FaultPlan::sample(&cfg, 300.0, 2, 3);
+        assert!(!plan.is_empty());
+        for i in 0..3 {
+            let seq: Vec<FaultKind> = plan
+                .events
+                .iter()
+                .filter(|e| e.kind.target() == i)
+                .map(|e| e.kind)
+                .collect();
+            assert!(!seq.is_empty());
+            for (k, kind) in seq.iter().enumerate() {
+                if k % 2 == 0 {
+                    match kind {
+                        FaultKind::InstanceSlowdown { factor, .. } => {
+                            assert!((factor - 4.0).abs() < 1e-12);
+                        }
+                        k => panic!("expected slowdown, got {k:?}"),
+                    }
+                } else {
+                    assert!(matches!(kind, FaultKind::InstanceRecover(_)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slowdown_stream_never_perturbs_failstop_schedule() {
+        // Same guarantee the instance/front-end streams give each
+        // other: arming gray failures must not move any fail-stop draw.
+        let cfg = fault_cfg(40.0, 80.0);
+        let mut with_slow = cfg.clone();
+        with_slow.slowdown_mttf = 30.0;
+        let base = FaultPlan::sample(&cfg, 120.0, 3, 4);
+        let mixed = FaultPlan::sample(&with_slow, 120.0, 3, 4);
+        let failstop = |p: &FaultPlan| -> Vec<(f64, FaultKind)> {
+            p.events
+                .iter()
+                .filter(|e| !matches!(
+                    e.kind,
+                    FaultKind::InstanceSlowdown { .. }
+                        | FaultKind::InstanceRecover(_)
+                ))
+                .map(|e| (e.time, e.kind))
+                .collect()
+        };
+        assert_eq!(failstop(&base), failstop(&mixed));
+        assert!(mixed.events.iter().any(
+            |e| matches!(e.kind, FaultKind::InstanceSlowdown { .. })));
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Predictive straggler detection from the predictor's own residuals.
+//!
+//! Block's premise is that inference latency is predictable; the flip
+//! side is that a *systematic* prediction error is itself a signal.  A
+//! gray-failed instance (thermally throttled GPU, noisy neighbor, sick
+//! link) passes every health check but runs every batch step N× slow —
+//! so every completion it produces comes back with an actual e2e ~N×
+//! the predicted one.  This module turns that residual into a failure
+//! detector: each instance carries an EWMA of the per-completion ratio
+//! `actual / predicted`, and when the smoothed ratio exceeds a trip
+//! threshold the scheduler tier quarantines the slot
+//! (`Active → Degraded` in [`crate::elastic::ActiveSet`]).
+//!
+//! The math, for tuning intuition:
+//!
+//! ```text
+//! ewma ← ratio                      (first sample)
+//! ewma ← α·ratio + (1-α)·ewma       (thereafter)
+//! tripped  ⇔ n ≥ min_samples ∧ ewma > trip
+//! inflated ⇔ n ≥ min_samples ∧ ewma > clear   (→ reported factor)
+//! ```
+//!
+//! A healthy instance sits at ewma ≈ 1 (the predictor's calibrated
+//! regime), so `trip` is a multiple of nominal, not an absolute
+//! latency.  `min_samples` guards against tripping on one unlucky
+//! request; `clear < trip` gives hysteresis so a slot hovering at the
+//! threshold does not flap.  [`ResidualTracker::reset`] starts a
+//! restored slot on probation: it must accumulate `min_samples` fresh
+//! completions before it can trip again, and until then it reports a
+//! nominal perf factor.
+//!
+//! Both consumers of the tracker feed it the same way: `ClusterSim`
+//! from `StepDone` completions (virtual time) and the serving gateway
+//! from `record_completion` (wall time).  The detection *config*
+//! ([`crate::config::DetectConfig`]) is shared, so thresholds tuned in
+//! simulation carry to the wire.
+
+use crate::config::DetectConfig;
+
+/// Per-instance EWMA state.
+#[derive(Debug, Clone, Copy, Default)]
+struct Cell {
+    /// Smoothed `actual / predicted` ratio; `None` before any sample.
+    ewma: Option<f64>,
+    /// Samples since creation or the last [`ResidualTracker::reset`].
+    n: u64,
+}
+
+/// EWMA residual tracker over a fixed set of instance slots.
+#[derive(Debug, Clone)]
+pub struct ResidualTracker {
+    cfg: DetectConfig,
+    cells: Vec<Cell>,
+}
+
+impl ResidualTracker {
+    pub fn new(cfg: DetectConfig, instances: usize) -> Self {
+        ResidualTracker { cfg, cells: vec![Cell::default(); instances] }
+    }
+
+    /// Feed one completion's `actual / predicted` e2e ratio.  Callers
+    /// skip completions without a usable prediction (heuristic
+    /// schedulers attach none) — the tracker only ever sees finite,
+    /// positive ratios.
+    pub fn observe(&mut self, instance: usize, ratio: f64) {
+        debug_assert!(ratio.is_finite() && ratio > 0.0);
+        let c = &mut self.cells[instance];
+        c.ewma = Some(match c.ewma {
+            None => ratio,
+            Some(e) => self.cfg.alpha * ratio + (1.0 - self.cfg.alpha) * e,
+        });
+        c.n += 1;
+    }
+
+    /// True when the slot's smoothed residual says "straggler": enough
+    /// samples and an EWMA past the trip threshold.
+    pub fn tripped(&self, instance: usize) -> bool {
+        let c = &self.cells[instance];
+        c.n >= self.cfg.min_samples
+            && c.ewma.is_some_and(|e| e > self.cfg.trip)
+    }
+
+    /// The perf multiplier this slot's residuals imply, for Block's
+    /// re-prediction path: the EWMA itself once it clears the
+    /// hysteresis floor, else exactly 1.0 (so healthy slots multiply
+    /// predictions by 1.0 — a byte-parity no-op).
+    pub fn reported_factor(&self, instance: usize) -> f64 {
+        let c = &self.cells[instance];
+        if c.n >= self.cfg.min_samples {
+            if let Some(e) = c.ewma {
+                if e > self.cfg.clear {
+                    return e;
+                }
+            }
+        }
+        1.0
+    }
+
+    /// Probation on restore: wipe the slot's history so it must earn
+    /// `min_samples` fresh completions before it can trip again.
+    pub fn reset(&mut self, instance: usize) {
+        self.cells[instance] = Cell::default();
+    }
+
+    /// Sample count for a slot (diagnostics / tests).
+    pub fn samples(&self, instance: usize) -> u64 {
+        self.cells[instance].n
+    }
+
+    /// Track `total` slots (append-only manifest growth on the wire
+    /// tier; existing histories are untouched).
+    pub fn grow(&mut self, total: usize) {
+        if total > self.cells.len() {
+            self.cells.resize(total, Cell::default());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DetectConfig {
+        DetectConfig {
+            enabled: true,
+            alpha: 0.5,
+            trip: 2.5,
+            clear: 1.3,
+            min_samples: 3,
+            restore_after: 15.0,
+        }
+    }
+
+    #[test]
+    fn healthy_ratios_never_trip_and_report_nominal() {
+        let mut t = ResidualTracker::new(cfg(), 2);
+        for _ in 0..20 {
+            t.observe(0, 1.05);
+            t.observe(1, 0.95);
+        }
+        assert!(!t.tripped(0) && !t.tripped(1));
+        assert_eq!(t.reported_factor(0), 1.0);
+        assert_eq!(t.reported_factor(1), 1.0);
+    }
+
+    #[test]
+    fn sustained_slowdown_trips_after_min_samples() {
+        let mut t = ResidualTracker::new(cfg(), 1);
+        t.observe(0, 5.0);
+        t.observe(0, 5.0);
+        assert!(!t.tripped(0), "two samples < min_samples must not trip");
+        t.observe(0, 5.0);
+        assert!(t.tripped(0));
+        // The reported factor converges toward the true ratio.
+        assert!(t.reported_factor(0) > 4.0);
+    }
+
+    #[test]
+    fn single_outlier_is_smoothed_away() {
+        let mut t = ResidualTracker::new(cfg(), 1);
+        t.observe(0, 1.0);
+        t.observe(0, 1.0);
+        t.observe(0, 8.0); // one stall
+        t.observe(0, 1.0);
+        t.observe(0, 1.0);
+        assert!(!t.tripped(0), "EWMA must absorb an isolated outlier");
+    }
+
+    #[test]
+    fn clear_threshold_gives_hysteresis_factor() {
+        let mut t = ResidualTracker::new(cfg(), 1);
+        for _ in 0..10 {
+            t.observe(0, 1.8); // above clear, below trip
+        }
+        assert!(!t.tripped(0));
+        let f = t.reported_factor(0);
+        assert!(f > 1.3 && f < 2.5,
+                "suspicious-but-not-tripped slots still report inflation");
+    }
+
+    #[test]
+    fn reset_puts_slot_on_probation() {
+        let mut t = ResidualTracker::new(cfg(), 1);
+        for _ in 0..5 {
+            t.observe(0, 5.0);
+        }
+        assert!(t.tripped(0));
+        t.reset(0);
+        assert!(!t.tripped(0));
+        assert_eq!(t.reported_factor(0), 1.0);
+        assert_eq!(t.samples(0), 0);
+        // Must earn min_samples again before re-tripping.
+        t.observe(0, 5.0);
+        t.observe(0, 5.0);
+        assert!(!t.tripped(0));
+        t.observe(0, 5.0);
+        assert!(t.tripped(0));
+    }
+}

@@ -2,13 +2,14 @@
 //!
 //! Subcommands:
 //!
-//! * `block experiment <tab1|fig5|fig6|fig7|fig8|tab2|staleness|chaos|all>
-//!    [--scale quick|full] [--out DIR] [--seed N] [--jobs N] [--shard P]
-//!    [--smoke]` — regenerate a paper table/figure; `--jobs` bounds the
-//!    sweep-point worker threads (default: all cores; results are
-//!    identical for any value); `--shard` sets arrival sharding for the
-//!    `staleness`/`chaos` sweeps; `--smoke` shrinks `chaos` to its
-//!    CI-sized grid.
+//! * `block experiment <tab1|fig5|fig6|fig7|fig8|tab2|staleness|chaos|
+//!    graychaos|all> [--scale quick|full] [--out DIR] [--seed N]
+//!    [--jobs N] [--shard P] [--smoke]` — regenerate a paper
+//!    table/figure; `--jobs` bounds the sweep-point worker threads
+//!    (default: all cores; results are identical for any value);
+//!    `--shard` sets arrival sharding for the `staleness`/`chaos`/
+//!    `graychaos` sweeps; `--smoke` shrinks `chaos`/`graychaos` to
+//!    their CI-sized grids.
 //! * `block simulate [--scheduler S] [--qps Q] [--requests N]
 //!    [--instances K] [--workload sharegpt|burstgpt] [--config FILE]
 //!    [--jobs N] [--frontends N] [--sync-interval S] [--shard P]
@@ -118,7 +119,7 @@ fn usage() -> ! {
         "usage: block <command>\n\
          \n\
          commands:\n\
-         \x20 experiment <tab1|fig5|fig6|fig7|fig8|tab2|staleness|chaos|all> [--scale quick|full]\n\
+         \x20 experiment <tab1|fig5|fig6|fig7|fig8|tab2|staleness|chaos|graychaos|all> [--scale quick|full]\n\
          \x20          [--out DIR] [--seed N] [--jobs N] [--shard round-robin|hash|poisson] [--smoke]\n\
          \x20 simulate [--scheduler S] [--qps Q] [--requests N] [--instances K]\n\
          \x20          [--workload sharegpt|burstgpt] [--config FILE] [--manifest FILE]\n\

@@ -354,6 +354,7 @@ impl RealEngine {
             waiting,
             in_flight: None,
             total_preemptions: 0,
+            perf_factor: 1.0,
         }
     }
 }

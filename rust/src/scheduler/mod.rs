@@ -671,6 +671,18 @@ impl GlobalScheduler for BlockScheduler {
         let mut max_steps = 0u64;
         for (&i, p) in candidates.iter().zip(&preds) {
             max_steps = max_steps.max(p.sim_steps);
+            // The predictor simulates nominal step times; a slot whose
+            // residual detector reports a degraded perf factor (the
+            // hysteresis band below quarantine) has its forecast
+            // inflated before the comparison.  Healthy slots report
+            // exactly 1.0 and `x * 1.0` is exact in f64, so the
+            // nominal path stays bit-identical.
+            let perf = view.statuses[i]
+                .as_ref()
+                .map_or(1.0, |s| s.perf_factor);
+            let mut p = *p;
+            p.e2e *= perf;
+            p.ttft *= perf;
             all.push((i, p.e2e));
             let better = match &best {
                 None => true,
@@ -681,7 +693,7 @@ impl GlobalScheduler for BlockScheduler {
                 },
             };
             if better {
-                best = Some((i, *p));
+                best = Some((i, p));
             }
         }
         let (instance, pred) = best.expect("no active instances");

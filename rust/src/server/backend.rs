@@ -77,6 +77,11 @@ pub trait ServingBackend {
 
     /// Admitted or running work remains?
     fn busy(&self) -> bool;
+
+    /// Inject or clear a gray failure: subsequent work runs `factor`×
+    /// slower (1.0 = healthy).  Default is a no-op for substrates that
+    /// cannot throttle (the PJRT backend runs at hardware speed).
+    fn set_slowdown(&mut self, _factor: f64) {}
 }
 
 /// Execution-noise RNG of instance `index` in a cluster seeded with
@@ -194,6 +199,10 @@ impl ServingBackend for SimClockBackend {
 
     fn busy(&self) -> bool {
         !self.engine.is_idle()
+    }
+
+    fn set_slowdown(&mut self, factor: f64) {
+        self.engine.set_slowdown(factor);
     }
 }
 

@@ -49,15 +49,16 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::cluster::frontend::{self, ArrivalSharder, FrontEnd};
-use crate::config::manifest::{ClockKind, ClusterManifest};
+use crate::config::manifest::{ClockKind, ClusterManifest, WireConfig};
 use crate::config::ClusterConfig;
 use crate::core::request::{Request, RequestId, RequestMetrics};
 use crate::elastic::{ActiveSet, SlotState};
 use crate::engine::InstanceStatus;
 use crate::exec::roofline::RooflineModel;
+use crate::faults::residual::ResidualTracker;
 use crate::metrics::MetricsCollector;
 use crate::server::backend::BackendCompletion;
-use crate::server::http::{self, HttpRequest};
+use crate::server::http::{self, HttpOptions, HttpRequest};
 use crate::server::wire::{self, InstanceClient};
 use crate::tagger::{HistogramTagger, LengthTagger};
 use crate::util::json::{Json, JsonObj};
@@ -71,6 +72,9 @@ pub struct GatewayOptions {
     pub instances: Vec<String>,
     pub clock: ClockKind,
     pub time_scale: f64,
+    /// Wire hardening knobs (timeouts, retries, hedging, the
+    /// `/generate` deadline) — defaults reproduce the old client.
+    pub wire: WireConfig,
 }
 
 impl GatewayOptions {
@@ -80,7 +84,21 @@ impl GatewayOptions {
             instances: m.instances.clone(),
             clock: m.clock,
             time_scale: m.time_scale,
+            wire: m.wire.clone(),
         }
+    }
+}
+
+/// Project the manifest's wire section onto the HTTP client policy
+/// every [`InstanceClient`] this gateway builds will carry.
+fn wire_http_options(w: &WireConfig) -> HttpOptions {
+    HttpOptions {
+        connect_timeout: w.connect_timeout,
+        read_timeout: w.read_timeout,
+        write_timeout: w.write_timeout,
+        retries: w.retries,
+        backoff_base: w.backoff_base,
+        hedge_delay: w.hedge_delay,
     }
 }
 
@@ -173,6 +191,19 @@ struct Core {
     bounced: u64,
     /// Arrivals with no reachable instance/front-end (503s).
     rejected: u64,
+    /// `/generate` waiters that hit the deadline (504s).
+    timed_out: u64,
+    /// Arrivals shed with 429 because every dispatchable slot was
+    /// quarantined as Degraded (retryable back-pressure, not a 503).
+    shed: u64,
+    /// Predictive straggler detector (`detect.enabled`): per-instance
+    /// EWMA of actual/predicted e2e fed by `record_completion`.
+    tracker: Option<ResidualTracker>,
+    /// Consecutive `healthz` misses per Degraded slot; three in a row
+    /// escalate the quarantine to Failed ("gray-fail").
+    probe_fails: Vec<u32>,
+    /// Quarantine entry time per slot — the restore-hysteresis clock.
+    degraded_since: Vec<Option<f64>>,
     /// Model-free length estimator behind `/predict`, fed by completions.
     tagger: HistogramTagger,
     next_id: u64,
@@ -261,18 +292,30 @@ impl Gateway {
             served_by: vec![0; total],
             bounced: 0,
             rejected: 0,
+            timed_out: 0,
+            shed: 0,
+            tracker: if opts.cluster.detect.enabled {
+                Some(ResidualTracker::new(opts.cluster.detect.clone(),
+                                          total))
+            } else {
+                None
+            },
+            probe_fails: vec![0; total],
+            degraded_since: vec![None; total],
             tagger: HistogramTagger::new(0.5, 64),
             next_id: 0,
             synced_once: false,
             lifecycle: ActiveSet::new(total, total),
         };
+        let http_opts = wire_http_options(&opts.wire);
         Gateway {
             cost: RooflineModel::from_profiles(&opts.cluster.gpu,
                                                &opts.cluster.model),
             clients: RwLock::new(
                 opts.instances
                     .iter()
-                    .map(|a| InstanceClient::new(a.as_str()))
+                    .map(|a| InstanceClient::with_options(a.as_str(),
+                                                          http_opts.clone()))
                     .collect(),
             ),
             want_statuses: predictive,
@@ -339,6 +382,58 @@ impl Gateway {
             .collect()
     }
 
+    /// Overwrite each fetched status's `perf_factor` with the gateway's
+    /// own residual estimate before it reaches any view.  Daemons always
+    /// report 1.0 on the wire (they cannot see their own slowdown); the
+    /// detector lives here, so this stamp is what lets Block's
+    /// re-prediction down-weight a suspicious slot.  With detection off
+    /// — or a healthy slot — the stamp is exactly 1.0, a byte-parity
+    /// no-op.
+    fn stamp_reported(core: &Core, statuses: &mut [Option<InstanceStatus>]) {
+        let Some(tr) = core.tracker.as_ref() else { return };
+        for (i, st) in statuses.iter_mut().enumerate() {
+            if let Some(st) = st {
+                st.perf_factor = tr.reported_factor(i);
+            }
+        }
+    }
+
+    /// A serving slot whose status fetch just failed is grayer than
+    /// slow: it accepts dispatches but stopped answering pulls (SIGSTOP,
+    /// wedged runtime).  With detection on, quarantine it as Degraded —
+    /// the prober then either restores it on probation or escalates to
+    /// Failed after repeated `healthz` misses.  Detection off keeps the
+    /// old behavior: the slot merely looks empty in views until a
+    /// dispatch bounces off it.
+    /// `mask` is the lifecycle mask the fetch actually ran with: only
+    /// slots we really asked (and that are still Active) may be
+    /// quarantined — otherwise a slot restored between the mask
+    /// snapshot and this call would be condemned for a fetch that never
+    /// happened.
+    fn quarantine_status_failures(&self, core: &mut Core,
+                                  statuses: &[Option<InstanceStatus>],
+                                  mask: &[bool], t: f64) {
+        if core.tracker.is_none() {
+            return;
+        }
+        for (i, st) in statuses.iter().enumerate() {
+            if mask.get(i).copied().unwrap_or(false)
+                && st.is_none()
+                && matches!(core.lifecycle.state(i), SlotState::Active)
+            {
+                core.lifecycle.degrade(i, t, "status-fail");
+                core.degraded_since[i] = Some(t);
+                for fe in core.frontends.iter_mut().filter(|fe| fe.alive) {
+                    fe.view.install_instance(i, None, t);
+                    fe.clear_echo(i);
+                }
+                crate::log_warn!(
+                    "gateway quarantined instance {i} (status-fail) at \
+                     t={t:.3}");
+            }
+        }
+    }
+
     fn push_pending(&self, core: &mut Core, time: f64, kind: PendKind) {
         core.pend_seq += 1;
         core.pending.push(Pending { time, seq: core.pend_seq, kind });
@@ -354,10 +449,12 @@ impl Gateway {
         }
         let now = if self.virtual_clock() { 0.0 } else { self.now_wall() };
         let mask = core.lifecycle.mask().to_vec();
-        let statuses = self.fetch_statuses(self.pull_instant(now), &mask);
+        let mut statuses =
+            self.fetch_statuses(self.pull_instant(now), &mask);
         if statuses.iter().all(Option::is_none) {
             return; // nobody up yet — next arrival retries
         }
+        Self::stamp_reported(core, &mut statuses);
         if self.stale {
             let n = core.frontends.len();
             for f in 0..n {
@@ -411,7 +508,9 @@ impl Gateway {
         self.probe_dead_slots(core, v);
         self.retire_drained(core, v);
         let mask = core.lifecycle.mask().to_vec();
-        let statuses = self.fetch_statuses(Some(v), &mask);
+        let mut statuses = self.fetch_statuses(Some(v), &mask);
+        self.quarantine_status_failures(core, &statuses, &mask, v);
+        Self::stamp_reported(core, &mut statuses);
         let clients = self.clients_snapshot();
         for (i, client) in clients.iter().enumerate() {
             if let Ok(list) = client.drain(false) {
@@ -457,6 +556,54 @@ impl Gateway {
             }
             crate::log_info!(
                 "gateway re-admitted instance {i} ({cause}) at t={t:.3}");
+        }
+        self.probe_degraded_slots(core, t);
+    }
+
+    /// Degraded slots: `healthz` separates "slow but alive" from
+    /// "gone".  Three consecutive misses escalate the quarantine to
+    /// Failed ("gray-fail" — no accepted request is lost, dispatches
+    /// already skip the slot).  An alive slot sits out
+    /// `detect.restore_after` seconds of quarantine, then returns to
+    /// Active on probation with its residual history wiped — it must
+    /// earn `min_samples` fresh completions before it can trip again.
+    fn probe_degraded_slots(&self, core: &mut Core, t: f64) {
+        let degraded: Vec<usize> = (0..core.lifecycle.len())
+            .filter(|&i| core.lifecycle.is_degraded(i))
+            .collect();
+        for i in degraded {
+            let client = self.client(i);
+            if !client.healthz() {
+                core.probe_fails[i] += 1;
+                if core.probe_fails[i] >= 3 {
+                    core.lifecycle.fail(i, t, "gray-fail");
+                    core.probe_fails[i] = 0;
+                    core.degraded_since[i] = None;
+                    if let Some(tr) = core.tracker.as_mut() {
+                        tr.reset(i);
+                    }
+                    crate::log_warn!(
+                        "gateway failed instance {i} (gray-fail) at \
+                         t={t:.3}");
+                }
+                continue;
+            }
+            core.probe_fails[i] = 0;
+            let since = core.degraded_since[i].unwrap_or(t);
+            if t - since >= self.opts.cluster.detect.restore_after {
+                let st = client.status(self.pull_instant(t)).ok();
+                core.lifecycle.restore(i, t, "probation");
+                core.degraded_since[i] = None;
+                if let Some(tr) = core.tracker.as_mut() {
+                    tr.reset(i);
+                }
+                for fe in core.frontends.iter_mut().filter(|fe| fe.alive) {
+                    fe.view.install_instance(i, st.clone(), t);
+                    fe.clear_echo(i);
+                }
+                crate::log_info!(
+                    "gateway restored instance {i} (probation) at t={t:.3}");
+            }
         }
     }
 
@@ -534,7 +681,8 @@ impl Gateway {
                 // never have synced — pull the live state (a dead
                 // instance's failed fetch marks its slot inactive).
                 let mask = core.lifecycle.mask().to_vec();
-                let statuses = self.fetch_statuses(Some(t), &mask);
+                let mut statuses = self.fetch_statuses(Some(t), &mask);
+                Self::stamp_reported(core, &mut statuses);
                 core.frontends[f2].view.sync_from_statuses(
                     statuses, t, self.want_statuses, self.want_loads);
                 core.frontends[f2].clear_echo_all();
@@ -626,6 +774,39 @@ impl Gateway {
                 .on_finish(c.id, meta.response_tokens);
         }
         core.tagger.observe(c.tokens.max(1));
+        // Predictive straggler detection: the completion carries its
+        // dispatch-time e2e prediction, so actual/predicted feeds the
+        // slot's residual EWMA.  A tripped Active slot is quarantined —
+        // views drop it immediately and the prober owns the
+        // restore-or-escalate decision from here.  Heuristic schedulers
+        // attach no prediction and leave the tracker untouched.
+        let mut tripped = false;
+        if let (Some(tr), Some(pred)) =
+            (core.tracker.as_mut(), meta.predicted)
+        {
+            if pred.is_finite() && pred > 0.0 {
+                tr.observe(instance, m.e2e() / pred);
+                tripped = tr.tripped(instance);
+            }
+        }
+        if tripped
+            && matches!(core.lifecycle.state(instance), SlotState::Active)
+        {
+            let t = if self.virtual_clock() {
+                finish
+            } else {
+                self.now_wall()
+            };
+            core.lifecycle.degrade(instance, t, "straggler");
+            core.degraded_since[instance] = Some(t);
+            for fe in core.frontends.iter_mut().filter(|fe| fe.alive) {
+                fe.view.install_instance(instance, None, t);
+                fe.clear_echo(instance);
+            }
+            crate::log_warn!(
+                "gateway quarantined instance {instance} (straggler) at \
+                 t={t:.3}");
+        }
         // Only wall-mode /generate handlers wait on completions; a
         // virtual-clock trace driver reads /records instead, and
         // parking DoneRecs nobody will drain would grow without bound
@@ -666,6 +847,22 @@ impl Gateway {
         req
     }
 
+    /// No dispatchable slot in view.  If quarantined slots are the
+    /// reason, shed with 429 — retryable back-pressure, the slots exist
+    /// and probation may restore them shortly — rather than a 503 that
+    /// tells the client the cluster is simply gone.
+    fn shed_or_reject(&self, core: &mut Core) -> (u16, Json) {
+        let any_degraded = (0..core.lifecycle.len())
+            .any(|i| core.lifecycle.is_degraded(i));
+        if any_degraded {
+            core.shed += 1;
+            (429, http::error_body("all dispatchable instances degraded"))
+        } else {
+            core.rejected += 1;
+            (503, http::error_body("no active instance in view"))
+        }
+    }
+
     // ---- /generate ---------------------------------------------------------
 
     /// Virtual clock: make the dispatch decision and defer the landing;
@@ -698,14 +895,15 @@ impl Gateway {
             self.probe_dead_slots(core, now);
             self.retire_drained(core, now);
             let mask = core.lifecycle.mask().to_vec();
-            let statuses = self.fetch_statuses(Some(now), &mask);
+            let mut statuses = self.fetch_statuses(Some(now), &mask);
+            self.quarantine_status_failures(core, &statuses, &mask, now);
+            Self::stamp_reported(core, &mut statuses);
             core.frontends[f].view.sync_from_statuses(
                 statuses, now, self.want_statuses, self.want_loads);
             core.frontends[f].clear_echo_all();
         }
         if core.frontends[f].view.active_count() == 0 {
-            core.rejected += 1;
-            return (503, http::error_body("no active instance in view"));
+            return self.shed_or_reject(core);
         }
         let id = req.id;
         let d = self.decide(core, f, &req, now);
@@ -762,7 +960,10 @@ impl Gateway {
                     self.probe_dead_slots(core, now);
                     self.retire_drained(core, now);
                     let mask = core.lifecycle.mask().to_vec();
-                    let statuses = self.fetch_statuses(None, &mask);
+                    let mut statuses = self.fetch_statuses(None, &mask);
+                    self.quarantine_status_failures(core, &statuses, &mask,
+                                                    now);
+                    Self::stamp_reported(core, &mut statuses);
                     core.frontends[f].view.sync_from_statuses(
                         statuses, now, self.want_statuses, self.want_loads);
                     core.frontends[f].clear_echo_all();
@@ -775,8 +976,7 @@ impl Gateway {
             };
             let Some(d) = picked else {
                 let mut core = self.core.lock().unwrap();
-                core.rejected += 1;
-                return (503, http::error_body("no active instance in view"));
+                return self.shed_or_reject(&mut core);
             };
             let instance = d.instance;
             match self.client(instance).enqueue(&req, d.at, ack_wanted) {
@@ -833,10 +1033,12 @@ impl Gateway {
     }
 
     /// Park until the completion poller delivers `id` (wall mode).  The
-    /// deadline sits under the HTTP client's 60 s read timeout so a
-    /// stuck generation surfaces as a proper 504, not a client error.
+    /// deadline (`wire.generate_deadline`, default 50 s) sits under the
+    /// HTTP client's 60 s read timeout so a stuck generation surfaces
+    /// as a proper 504, not a client error.
     fn wait_done(&self, id: RequestId) -> (u16, Json) {
-        let deadline = Instant::now() + Duration::from_secs(50);
+        let deadline = Instant::now()
+            + Duration::from_secs_f64(self.opts.wire.generate_deadline);
         let mut done = self.done.lock().unwrap();
         loop {
             if let Some(rec) = done.remove(&id) {
@@ -854,6 +1056,17 @@ impl Gateway {
             }
             let now = Instant::now();
             if now >= deadline {
+                // Give up without wedging anyone else: release `done`
+                // BEFORE taking `core` (lock order is core → done
+                // everywhere else — `record_completion` runs with
+                // `core` held), drop the in-flight entry so a Draining
+                // target can still retire, and count the timeout.  The
+                // late completion then no-ops in `record_completion`
+                // (its metadata is gone).
+                drop(done);
+                let mut core = self.core.lock().unwrap();
+                core.in_flight.remove(&id);
+                core.timed_out += 1;
                 return (504, http::error_body("generation timed out"));
             }
             let (d, _) = self
@@ -926,6 +1139,9 @@ impl Gateway {
         );
         o.insert("bounced", core.bounced);
         o.insert("rejected", core.rejected);
+        o.insert("timed_out", core.timed_out);
+        o.insert("shed", core.shed);
+        o.insert("detect_enabled", core.tracker.is_some());
         o.insert("in_flight", core.in_flight.len());
         o.insert("completed", core.metrics.len());
         // Live elasticity state in the `SimResult` vocabulary: per-slot
@@ -1016,6 +1232,18 @@ impl Gateway {
                     core.lifecycle.begin_drain(i, t, "manifest-remove");
                     removed += 1;
                 }
+                SlotState::Degraded => {
+                    // Quarantined slots drain like Active ones, but the
+                    // quarantine bookkeeping ends here — a removed slot
+                    // is nobody's straggler.
+                    core.lifecycle.begin_drain(i, t, "manifest-remove");
+                    core.degraded_since[i] = None;
+                    core.probe_fails[i] = 0;
+                    if let Some(tr) = core.tracker.as_mut() {
+                        tr.reset(i);
+                    }
+                    removed += 1;
+                }
                 SlotState::Backup | SlotState::Failed
                 | SlotState::Pending { .. } => {
                     // Not serving — retire directly so the prober stops
@@ -1032,16 +1260,23 @@ impl Gateway {
         }
         {
             let mut clients = self.clients.write().unwrap();
+            let http_opts = wire_http_options(&self.opts.wire);
             for addr in &m.instances {
                 if current.iter().any(|a| a == addr) {
                     continue;
                 }
-                clients.push(InstanceClient::new(addr.as_str()));
+                clients.push(InstanceClient::with_options(
+                    addr.as_str(), http_opts.clone()));
                 core.lifecycle.grow(1);
                 core.served_by.push(0);
+                core.probe_fails.push(0);
+                core.degraded_since.push(None);
                 added += 1;
             }
             let slots = clients.len();
+            if let Some(tr) = core.tracker.as_mut() {
+                tr.grow(slots);
+            }
             for fe in core.frontends.iter_mut() {
                 fe.grow_slots(slots);
             }
@@ -1192,12 +1427,15 @@ fn spawn_wall_threads(gw: &Arc<Gateway>) {
             while !g.shutdown.load(AtomicOrdering::SeqCst) {
                 std::thread::sleep(interval);
                 let mask = g.core.lock().unwrap().lifecycle.mask().to_vec();
-                let statuses = g.fetch_statuses(None, &mask);
+                let mut statuses = g.fetch_statuses(None, &mask);
                 let now = g.now_wall();
                 let mut core = g.core.lock().unwrap();
                 if !core.synced_once {
                     continue;
                 }
+                let core = &mut *core;
+                g.quarantine_status_failures(core, &statuses, &mask, now);
+                Gateway::stamp_reported(core, &mut statuses);
                 for f in 0..core.frontends.len() {
                     if !core.frontends[f].alive {
                         continue;
@@ -1248,6 +1486,58 @@ fn spawn_wall_threads(gw: &Arc<Gateway>) {
                 }
                 crate::log_info!(
                     "gateway re-admitted instance {i} ({cause})");
+            }
+            // Degraded slots: probe off-lock like the re-admission
+            // pass (healthz against a wedged daemon can burn the whole
+            // read budget), then re-check the state under the lock
+            // before acting in case a manifest update raced the probe.
+            let degraded: Vec<usize> = {
+                let core = g.core.lock().unwrap();
+                (0..core.lifecycle.len())
+                    .filter(|&i| core.lifecycle.is_degraded(i))
+                    .collect()
+            };
+            for i in degraded {
+                let client = g.client(i);
+                let alive = client.healthz();
+                let st = if alive { client.status(None).ok() } else { None };
+                let t = g.now_wall();
+                let mut core = g.core.lock().unwrap();
+                let core = &mut *core;
+                if !core.lifecycle.is_degraded(i) {
+                    continue;
+                }
+                if !alive {
+                    core.probe_fails[i] += 1;
+                    if core.probe_fails[i] >= 3 {
+                        core.lifecycle.fail(i, t, "gray-fail");
+                        core.probe_fails[i] = 0;
+                        core.degraded_since[i] = None;
+                        if let Some(tr) = core.tracker.as_mut() {
+                            tr.reset(i);
+                        }
+                        crate::log_warn!(
+                            "gateway failed instance {i} (gray-fail)");
+                    }
+                    continue;
+                }
+                core.probe_fails[i] = 0;
+                let since = core.degraded_since[i].unwrap_or(t);
+                if t - since >= g.opts.cluster.detect.restore_after {
+                    core.lifecycle.restore(i, t, "probation");
+                    core.degraded_since[i] = None;
+                    if let Some(tr) = core.tracker.as_mut() {
+                        tr.reset(i);
+                    }
+                    for fe in
+                        core.frontends.iter_mut().filter(|fe| fe.alive)
+                    {
+                        fe.view.install_instance(i, st.clone(), t);
+                        fe.clear_echo(i);
+                    }
+                    crate::log_info!(
+                        "gateway restored instance {i} (probation)");
+                }
             }
             let mut core = g.core.lock().unwrap();
             let core = &mut *core;

@@ -17,6 +17,7 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        429 => "Too Many Requests",
         500 => "Internal Server Error",
         502 => "Bad Gateway",
         503 => "Service Unavailable",
@@ -126,15 +127,108 @@ pub fn read_request<R: Read>(stream: R) -> Result<HttpRequest> {
     })
 }
 
+/// Client-side wire policy.  Every knob bounds one gray-failure mode:
+/// a blackholed address must fail at `connect_timeout`, a wedged peer
+/// at `read_timeout`, a full send buffer at `write_timeout`; transient
+/// refusals are absorbed by `retries` (idempotent GETs only), and a
+/// slow-but-alive peer is raced by a hedged second pull after
+/// `hedge_delay`.
+///
+/// The defaults reproduce the pre-hardening client (60 s read, 10 s
+/// write, no retries, no hedging) plus a 5 s connect budget — the one
+/// case the old client left unbounded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HttpOptions {
+    /// TCP connect budget, seconds (`<= 0` = OS default).
+    pub connect_timeout: f64,
+    /// Socket read budget, seconds (`<= 0` = unbounded).
+    pub read_timeout: f64,
+    /// Socket write budget, seconds (`<= 0` = unbounded).
+    pub write_timeout: f64,
+    /// Extra attempts for idempotent GETs (0 = single attempt).  Never
+    /// applied to POSTs: an enqueue that timed out may still have been
+    /// accepted, and blind re-sends would double-admit.
+    pub retries: u32,
+    /// Backoff before retry `k` (1-based): `base * 2^k` plus up to the
+    /// same again in deterministic jitter.
+    pub backoff_base: f64,
+    /// Hedged-GET trigger, seconds (`<= 0` = hedging off): if the
+    /// first pull has not answered within this budget, race a second
+    /// connection and take whichever answers first.
+    pub hedge_delay: f64,
+}
+
+impl Default for HttpOptions {
+    fn default() -> Self {
+        HttpOptions {
+            connect_timeout: 5.0,
+            read_timeout: 60.0,
+            write_timeout: 10.0,
+            retries: 0,
+            backoff_base: 0.05,
+            hedge_delay: 0.0,
+        }
+    }
+}
+
+fn secs(t: f64) -> Option<std::time::Duration> {
+    if t > 0.0 {
+        Some(std::time::Duration::from_secs_f64(t))
+    } else {
+        None
+    }
+}
+
+/// Deterministic retry backoff: exponential in the attempt number with
+/// jitter seeded from the *address* (FNV-1a), so two clients hammering
+/// different peers desynchronize, while the same client replays the
+/// same schedule run over run — no wall-clock or OS entropy involved.
+fn backoff_delay(addr: &str, attempt: u32, base: f64) -> f64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in addr.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    let mut rng = crate::util::rng::Rng::new(
+        h ^ (attempt as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let exp = base * (1u64 << attempt.min(16)) as f64;
+    exp + rng.uniform(0.0, exp)
+}
+
 /// Blocking JSON-over-HTTP client call (used by the gateway's instance
 /// clients, tests, and examples).  Read/write timeouts bound the call:
 /// a wedged peer must fail the request, not hang the caller — the
 /// gateway sometimes issues these while holding its dispatch lock.
+/// Single attempt with the default budgets; wire clients that want
+/// retries or hedging use [`request_with`] / [`get_with_retry`] /
+/// [`get_hedged`].
 pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>)
                -> Result<(u16, String)> {
-    let mut stream = TcpStream::connect(addr)?;
-    let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(60)));
-    let _ = stream.set_write_timeout(Some(std::time::Duration::from_secs(10)));
+    request_with(addr, method, path, body, &HttpOptions::default())
+}
+
+/// [`request`] with an explicit wire policy.  The connect path uses
+/// `TcpStream::connect_timeout` so a blackholed address (SYN into the
+/// void) fails within `opts.connect_timeout` instead of the OS's
+/// minutes-long default.
+pub fn request_with(addr: &str, method: &str, path: &str,
+                    body: Option<&str>, opts: &HttpOptions)
+                    -> Result<(u16, String)> {
+    let mut stream = match secs(opts.connect_timeout) {
+        Some(budget) => {
+            use std::net::ToSocketAddrs;
+            let sa = addr
+                .to_socket_addrs()
+                .with_context(|| format!("resolve {addr}"))?
+                .next()
+                .with_context(|| format!("no address for {addr}"))?;
+            TcpStream::connect_timeout(&sa, budget)
+                .with_context(|| format!("connect {addr}"))?
+        }
+        None => TcpStream::connect(addr)?,
+    };
+    let _ = stream.set_read_timeout(secs(opts.read_timeout));
+    let _ = stream.set_write_timeout(secs(opts.write_timeout));
     let body = body.unwrap_or("");
     let msg = format!(
         "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
@@ -153,6 +247,92 @@ pub fn request(addr: &str, method: &str, path: &str, body: Option<&str>)
         .map(|(_, b)| b.to_string())
         .unwrap_or_default();
     Ok((status, body))
+}
+
+/// Idempotent GET with bounded retries.  Attempt `k` (1-based) sleeps
+/// `backoff_base * 2^k` plus deterministic jitter first — see
+/// [`HttpOptions::retries`] for why only GETs get this treatment.
+pub fn get_with_retry(addr: &str, path: &str, opts: &HttpOptions)
+                      -> Result<(u16, String)> {
+    let mut last = None;
+    for attempt in 0..=opts.retries {
+        if attempt > 0 && opts.backoff_base > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                backoff_delay(addr, attempt, opts.backoff_base)));
+        }
+        match request_with(addr, "GET", path, None, opts) {
+            Ok(r) => return Ok(r),
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(last.expect("at least one attempt"))
+}
+
+/// Hedged GET: fire one pull; if it has not answered within
+/// `opts.hedge_delay`, race a second connection and return whichever
+/// answers first.  Tail-latency armor for `/status` pulls against a
+/// slow-but-alive peer — both attempts still respect the per-attempt
+/// budgets in `opts`.  With hedging off this is a plain single pull.
+pub fn get_hedged(addr: &str, path: &str, opts: &HttpOptions)
+                  -> Result<(u16, String)> {
+    if opts.hedge_delay <= 0.0 {
+        return get_with_retry(addr, path, opts);
+    }
+    use std::sync::mpsc;
+    let (tx, rx) = mpsc::channel();
+    let launch = |tx: mpsc::Sender<Result<(u16, String)>>| {
+        let addr = addr.to_string();
+        let path = path.to_string();
+        let opts = opts.clone();
+        std::thread::spawn(move || {
+            let _ = tx.send(request_with(&addr, "GET", &path, None, &opts));
+        });
+    };
+    launch(tx.clone());
+    let mut pending = 1u32;
+    let mut hedged = false;
+    let mut last_err = None;
+    loop {
+        let got = if hedged {
+            // Both attempts in flight (or the only remaining one):
+            // just wait.  `tx` lives in this scope, so the channel
+            // cannot disconnect before every attempt reports.
+            Some(rx.recv().expect("hedge channel"))
+        } else {
+            match rx.recv_timeout(
+                std::time::Duration::from_secs_f64(opts.hedge_delay))
+            {
+                Ok(r) => Some(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    hedged = true;
+                    launch(tx.clone());
+                    pending += 1;
+                    None
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    unreachable!("tx held by caller scope")
+                }
+            }
+        };
+        match got {
+            None => {}
+            Some(Ok(r)) => return Ok(r),
+            Some(Err(e)) => {
+                last_err = Some(e);
+                pending -= 1;
+                if pending == 0 {
+                    if hedged {
+                        return Err(last_err.expect("error recorded"));
+                    }
+                    // The sole attempt failed *before* the hedge timer
+                    // fired: spend the hedge as an immediate retry.
+                    hedged = true;
+                    launch(tx.clone());
+                    pending = 1;
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -265,6 +445,98 @@ mod tests {
             .unwrap();
         assert_eq!(status, 200);
         assert_eq!(body, "ok");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn wedged_peer_fails_within_read_budget() {
+        // A listener that never accepts models the wedged-daemon gray
+        // failure: the kernel completes the handshake into the backlog,
+        // the request is written, and no byte ever comes back.  The
+        // read budget must turn that into an error, not a hang.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let opts = HttpOptions {
+            connect_timeout: 1.0,
+            read_timeout: 0.2,
+            ..HttpOptions::default()
+        };
+        let t0 = std::time::Instant::now();
+        let err = request_with(&addr, "GET", "/status", None, &opts);
+        assert!(err.is_err(), "no response ever came: {err:?}");
+        assert!(t0.elapsed().as_secs_f64() < 2.0,
+                "deadline not honored: {:?}", t0.elapsed());
+        drop(listener);
+    }
+
+    #[test]
+    fn retry_recovers_after_transient_failure() {
+        // First connection is accepted and dropped (transient reset);
+        // the bounded retry must absorb it and land on the healthy
+        // second exchange.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            drop(s); // reset the first attempt
+            let (mut s, _) = listener.accept().unwrap();
+            let _ = read_request(&mut s).unwrap();
+            s.write_all(b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\n\r\nok")
+                .unwrap();
+        });
+        let opts = HttpOptions {
+            retries: 2,
+            backoff_base: 0.01,
+            read_timeout: 5.0,
+            ..HttpOptions::default()
+        };
+        let (status, body) = get_with_retry(&addr, "/status", &opts).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "ok");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn backoff_jitter_is_deterministic_and_bounded() {
+        let d1 = backoff_delay("10.0.0.1:8000", 1, 0.05);
+        assert_eq!(d1, backoff_delay("10.0.0.1:8000", 1, 0.05),
+                   "same (addr, attempt) must replay the same delay");
+        // attempt k sleeps in [base*2^k, 2*base*2^k).
+        for k in 1..=4u32 {
+            let exp = 0.05 * (1u64 << k) as f64;
+            let d = backoff_delay("10.0.0.1:8000", k, 0.05);
+            assert!(d >= exp && d < 2.0 * exp, "attempt {k}: {d}");
+        }
+        assert_ne!(backoff_delay("10.0.0.1:8000", 1, 0.05),
+                   backoff_delay("10.0.0.2:8000", 1, 0.05),
+                   "different peers must desynchronize");
+    }
+
+    #[test]
+    fn hedged_get_races_past_a_slow_peer() {
+        // The first connection is held open without a response (slow
+        // but alive); the hedge fires and the second connection
+        // answers.  The caller sees the fast result.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let (slow, _) = listener.accept().unwrap();
+            let (mut s, _) = listener.accept().unwrap();
+            let _ = read_request(&mut s).unwrap();
+            s.write_all(b"HTTP/1.1 200 OK\r\nContent-Length: 5\r\n\r\nhedge")
+                .unwrap();
+            drop(slow); // release the wedged attempt only afterwards
+        });
+        let opts = HttpOptions {
+            hedge_delay: 0.05,
+            read_timeout: 10.0,
+            ..HttpOptions::default()
+        };
+        let t0 = std::time::Instant::now();
+        let (status, body) = get_hedged(&addr, "/status", &opts).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "hedge");
+        assert!(t0.elapsed().as_secs_f64() < 5.0);
         t.join().unwrap();
     }
 }

@@ -214,6 +214,27 @@ fn handle(backend: &mut dyn ServingBackend, opts: &InstanceOptions,
             );
             (200, Json::Obj(o), false)
         }
+        ("POST", "/degrade") => {
+            // Gray-failure injection: throttle the backend by `factor`
+            // (sim-clock backends honor it, real compute ignores it).
+            // `{"factor": 1.0}` recovers.  The chaos driver's wire
+            // analogue of `FaultKind::InstanceSlowdown`.
+            let factor = Json::parse(&req.body)
+                .ok()
+                .and_then(|j| j.opt("factor").and_then(|v| v.as_f64().ok()));
+            match factor {
+                Some(f) if f.is_finite() && f >= 1.0 => {
+                    backend.set_slowdown(f);
+                    let mut o = JsonObj::new();
+                    o.insert("ok", true);
+                    o.insert("factor", f);
+                    (200, Json::Obj(o), false)
+                }
+                _ => (400,
+                      http::error_body("degrade needs finite factor >= 1"),
+                      false),
+            }
+        }
         ("POST", "/shutdown") => {
             let mut o = JsonObj::new();
             o.insert("ok", true);
@@ -222,7 +243,7 @@ fn handle(backend: &mut dyn ServingBackend, opts: &InstanceOptions,
         // Known paths with the wrong verb are method errors, everything
         // else is unrouted.
         (_, "/health" | "/healthz" | "/status" | "/enqueue" | "/drain"
-         | "/shutdown") => {
+         | "/degrade" | "/shutdown") => {
             (405, http::error_body("method not allowed"), false)
         }
         _ => (404, http::error_body("not found"), false),

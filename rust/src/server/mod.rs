@@ -94,6 +94,7 @@ impl ServerState {
             waiting: Vec::new(),
             in_flight: None,
             total_preemptions: 0,
+            perf_factor: 1.0,
         }
     }
 }

@@ -13,7 +13,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::core::request::{Request, RequestId};
 use crate::engine::InstanceStatus;
 use crate::server::backend::BackendCompletion;
-use crate::server::http;
+use crate::server::http::{self, HttpOptions};
 use crate::util::json::{Json, JsonObj};
 
 /// Split a request target into (path, query pairs).
@@ -166,14 +166,27 @@ pub enum EnqueueOutcome {
 }
 
 /// Blocking HTTP client for one instance daemon (gateway side).
+///
+/// Wire policy: idempotent GET pulls (`/status`, `/health`, `/healthz`)
+/// go through the retry + hedging path; mutating POSTs (`/enqueue`,
+/// `/drain`, `/degrade`, `/shutdown`) are single attempts under the
+/// same timeout budgets — a timed-out enqueue may still have been
+/// admitted, and a blind re-send would double-admit the request.
 #[derive(Debug, Clone)]
 pub struct InstanceClient {
     pub addr: String,
+    pub opts: HttpOptions,
 }
 
 impl InstanceClient {
     pub fn new(addr: impl Into<String>) -> Self {
-        InstanceClient { addr: addr.into() }
+        InstanceClient { addr: addr.into(), opts: HttpOptions::default() }
+    }
+
+    /// Client with an explicit wire policy (from the manifest's `wire`
+    /// section).
+    pub fn with_options(addr: impl Into<String>, opts: HttpOptions) -> Self {
+        InstanceClient { addr: addr.into(), opts }
     }
 
     fn expect_ok(&self, what: &str, status: u16, body: &str)
@@ -192,7 +205,7 @@ impl InstanceClient {
             Some(t) => format!("/status?now={t}"),
             None => "/status".to_string(),
         };
-        let (status, body) = http::request(&self.addr, "GET", &path, None)?;
+        let (status, body) = http::get_hedged(&self.addr, &path, &self.opts)?;
         let j = self.expect_ok("status", status, &body)?;
         InstanceStatus::from_json(&j)
             .map_err(|e| anyhow!("instance {} status: {e}", self.addr))
@@ -205,8 +218,8 @@ impl InstanceClient {
     pub fn enqueue(&self, req: &Request, now: f64, ack_status: bool)
                    -> Result<EnqueueOutcome> {
         let body = enqueue_body(req, now, ack_status);
-        let (status, text) =
-            http::request(&self.addr, "POST", "/enqueue", Some(&body))?;
+        let (status, text) = http::request_with(
+            &self.addr, "POST", "/enqueue", Some(&body), &self.opts)?;
         if status != 200 {
             return Ok(EnqueueOutcome::Rejected(status, text));
         }
@@ -228,8 +241,8 @@ impl InstanceClient {
         } else {
             r#"{"complete":false}"#
         };
-        let (status, text) =
-            http::request(&self.addr, "POST", "/drain", Some(body))?;
+        let (status, text) = http::request_with(
+            &self.addr, "POST", "/drain", Some(body), &self.opts)?;
         let j = self.expect_ok("drain", status, &text)?;
         j.field("finished")?
             .as_arr()?
@@ -239,7 +252,7 @@ impl InstanceClient {
     }
 
     pub fn health(&self) -> bool {
-        matches!(http::request(&self.addr, "GET", "/health", None),
+        matches!(http::get_with_retry(&self.addr, "/health", &self.opts),
                  Ok((200, _)))
     }
 
@@ -247,12 +260,26 @@ impl InstanceClient {
     /// endpoint: answers without touching the backend, so probing a
     /// busy (or booting) daemon costs it nothing.
     pub fn healthz(&self) -> bool {
-        matches!(http::request(&self.addr, "GET", "/healthz", None),
+        matches!(http::get_with_retry(&self.addr, "/healthz", &self.opts),
                  Ok((200, _)))
     }
 
+    /// Throttle the daemon's backend by `factor` (gray-failure
+    /// injection; `1.0` recovers).  Sim-clock backends honor it; real
+    /// compute cannot be throttled and ignores it.
+    pub fn degrade(&self, factor: f64) -> Result<()> {
+        let body = format!(r#"{{"factor":{factor}}}"#);
+        let (status, text) = http::request_with(
+            &self.addr, "POST", "/degrade", Some(&body), &self.opts)?;
+        if status != 200 {
+            bail!("instance {} degrade: HTTP {status}: {text}", self.addr);
+        }
+        Ok(())
+    }
+
     pub fn shutdown(&self) -> Result<()> {
-        let _ = http::request(&self.addr, "POST", "/shutdown", None)?;
+        let _ = http::request_with(&self.addr, "POST", "/shutdown", None,
+                                   &self.opts)?;
         Ok(())
     }
 }
@@ -324,11 +351,35 @@ mod tests {
             waiting: vec![],
             in_flight: None,
             total_preemptions: 0,
+            perf_factor: 1.0,
         };
         let env = status_envelope(&st, "instance",
                                   &[("requests_enqueued", 5u64.into())]);
         assert_eq!(env.field("role").unwrap().as_str().unwrap(), "instance");
         let back = InstanceStatus::from_json(&env).unwrap();
         assert_eq!(back, st);
+    }
+
+    #[test]
+    fn blackholed_enqueue_fails_within_budget() {
+        // A bound-but-never-accepting socket models the blackholed
+        // route: the dispatch must come back as a transport error
+        // within the configured budget (which the gateway turns into a
+        // bounce + re-dispatch), never hang the dispatch path.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let c = InstanceClient::with_options(&addr, HttpOptions {
+            connect_timeout: 1.0,
+            read_timeout: 0.2,
+            write_timeout: 1.0,
+            ..HttpOptions::default()
+        });
+        let req = Request::new(7, 0.0, 10, 5);
+        let t0 = std::time::Instant::now();
+        let out = c.enqueue(&req, 0.0, false);
+        assert!(out.is_err(), "no daemon ever answered: {out:?}");
+        assert!(t0.elapsed().as_secs_f64() < 2.0,
+                "budget not honored: {:?}", t0.elapsed());
+        drop(listener);
     }
 }

@@ -187,9 +187,138 @@ fn prop_no_request_lost_under_faults() {
         }
         for ev in &res.lifecycle {
             assert!(matches!(ev.state,
-                             "backup" | "pending" | "active"
+                             "backup" | "pending" | "active" | "degraded"
                              | "draining" | "retired" | "failed"),
                     "unknown lifecycle state {:?}", ev.state);
+        }
+    });
+}
+
+#[test]
+fn prop_no_request_lost_under_slowdowns() {
+    // Gray-failure conservation: random slowdown/recover pairs, link
+    // delays, blackholed routes and the occasional fail-stop death all
+    // interleave — with the residual detector randomly armed — and
+    // still every admitted request is served or explicitly dropped.
+    // Slow is never lost: absent fail-stop faults the drop count must
+    // be exactly zero, no matter how degraded the cluster got.
+    check(55, 14, |rng, case| {
+        let kind = KINDS[case % KINDS.len()];
+        let n_instances = rng.randint(2, 5) as usize;
+        let mut cfg = ClusterConfig {
+            n_instances,
+            scheduler: kind,
+            ..ClusterConfig::default()
+        };
+        cfg.frontends = rng.randint(1, 3) as usize;
+        cfg.sync_interval =
+            if rng.bernoulli(0.3) { 0.0 } else { rng.uniform(0.5, 3.0) };
+        cfg.shard_policy = SHARDS[rng.index(3)];
+        cfg.detect.enabled = rng.bernoulli(0.5);
+        cfg.detect.restore_after = rng.uniform(2.0, 10.0);
+        let wl = WorkloadConfig {
+            kind: WorkloadKind::ShareGpt,
+            qps: rng.uniform(4.0, 12.0),
+            n_requests: rng.randint(40, 140) as usize,
+            seed: rng.next_u64(),
+        };
+        let span = wl.n_requests as f64 / wl.qps;
+
+        let mut events = Vec::new();
+        let mut any_fail_stop = false;
+        for i in 0..n_instances {
+            if rng.bernoulli(0.6) {
+                let t = rng.uniform(0.0, span * 0.8);
+                events.push(FaultEvent {
+                    time: t,
+                    kind: FaultKind::InstanceSlowdown {
+                        instance: i,
+                        factor: rng.uniform(1.0, 8.0),
+                    },
+                });
+                if rng.bernoulli(0.7) {
+                    events.push(FaultEvent {
+                        time: t + rng.uniform(1.0, span * 0.5),
+                        kind: FaultKind::InstanceRecover(i),
+                    });
+                }
+            }
+            if rng.bernoulli(0.3) {
+                let t = rng.uniform(0.0, span * 0.8);
+                events.push(FaultEvent {
+                    time: t,
+                    kind: FaultKind::LinkDelay {
+                        instance: i,
+                        delay: rng.uniform(0.0, 0.5),
+                    },
+                });
+            }
+            // Blackholed routes always heal inside the run, so the
+            // zero-drop claim below stays exact even at one instance
+            // dropped per plan.
+            if rng.bernoulli(0.25) {
+                let t = rng.uniform(0.0, span * 0.6);
+                events.push(FaultEvent {
+                    time: t,
+                    kind: FaultKind::LinkDrop(i),
+                });
+                events.push(FaultEvent {
+                    time: t + rng.uniform(0.5, span * 0.3),
+                    kind: FaultKind::LinkRestore(i),
+                });
+            }
+            // A slice of cases mixes in a fail-stop death so gray and
+            // hard faults race on the same slot.
+            if rng.bernoulli(0.15) {
+                any_fail_stop = true;
+                let t = rng.uniform(0.0, span * 0.8);
+                events.push(FaultEvent {
+                    time: t,
+                    kind: FaultKind::InstanceFail(i),
+                });
+                events.push(FaultEvent {
+                    time: t + rng.uniform(0.5, span * 0.4),
+                    kind: FaultKind::InstanceRejoin(i),
+                });
+            }
+        }
+
+        let detect_enabled = cfg.detect.enabled;
+        let res = run_experiment(
+            cfg,
+            &wl,
+            SimOptions {
+                probes: false,
+                fault_plan: Some(FaultPlan::scripted(events)),
+                ..SimOptions::default()
+            },
+        )
+        .unwrap();
+
+        let served = res.metrics.len() as u64;
+        assert_eq!(served + res.recovery.dropped, wl.n_requests as u64,
+                   "conservation violated ({} served, {} dropped, {} sent)",
+                   served, res.recovery.dropped, wl.n_requests);
+        if !any_fail_stop {
+            assert_eq!(res.recovery.dropped, 0,
+                       "gray faults alone must never drop a request");
+        }
+        let mut ids: Vec<u64> =
+            res.metrics.records.iter().map(|m| m.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len() as u64, served, "a request was served twice");
+        // Quarantine bookkeeping stays in vocabulary, and every
+        // Degraded edge is attributable to the armed detector.
+        for ev in &res.lifecycle {
+            assert!(matches!(ev.state,
+                             "backup" | "pending" | "active" | "degraded"
+                             | "draining" | "retired" | "failed"),
+                    "unknown lifecycle state {:?}", ev.state);
+            if ev.state == "degraded" {
+                assert!(detect_enabled,
+                        "degraded edge with detection off");
+            }
         }
     });
 }

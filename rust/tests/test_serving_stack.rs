@@ -14,7 +14,8 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use block::cluster::{run_experiment, SimOptions};
-use block::config::manifest::{BackendKind, ClockKind, ClusterManifest};
+use block::config::manifest::{BackendKind, ClockKind, ClusterManifest,
+                              WireConfig};
 use block::config::{ClusterConfig, SchedulerKind, ShardPolicy,
                     WorkloadConfig, WorkloadKind};
 use block::core::request::Request;
@@ -53,6 +54,7 @@ impl Stack {
             clock,
             time_scale,
             artifacts: "artifacts".to_string(),
+            wire: WireConfig::default(),
         };
         manifest.validate().unwrap();
         let mut handles = Vec::new();
@@ -306,6 +308,138 @@ fn wall_clock_stack_serves_concurrent_traffic() {
                 .as_usize().unwrap() >= 1);
 
     stack.shutdown();
+}
+
+#[test]
+fn blackholed_instance_is_quarantined_and_traffic_survives() {
+    // Gray failure on the wire: one real daemon plus a blackholed
+    // address — bound but never accepted, so connects succeed and
+    // every read times out.  With tight wire budgets and detection on,
+    // the gateway must (a) answer /generate within budget off the
+    // survivor, (b) quarantine the wedge Active → Degraded
+    // ("status-fail") at the next status pull, and (c) escalate
+    // Degraded → Failed ("gray-fail") after repeated healthz misses —
+    // all without losing a single accepted request.
+    let real = TcpListener::bind("127.0.0.1:0").unwrap();
+    let hole = TcpListener::bind("127.0.0.1:0").unwrap();
+    let hole_addr = hole.local_addr().unwrap().to_string();
+    let gw_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let gw_addr = gw_listener.local_addr().unwrap().to_string();
+    let mut cluster = ClusterConfig {
+        n_instances: 2,
+        scheduler: SchedulerKind::Block,
+        frontends: 1,
+        sync_interval: 0.25,
+        ..ClusterConfig::default()
+    };
+    cluster.detect.enabled = true;
+    let manifest = ClusterManifest {
+        cluster,
+        instances: vec![hole_addr,
+                        real.local_addr().unwrap().to_string()],
+        gateways: vec![gw_addr.clone()],
+        backend: BackendKind::Sim,
+        clock: ClockKind::Wall,
+        time_scale: 20.0,
+        artifacts: "artifacts".to_string(),
+        wire: WireConfig {
+            connect_timeout: 1.0,
+            read_timeout: 0.4,
+            write_timeout: 0.4,
+            ..WireConfig::default()
+        },
+    };
+    manifest.validate().unwrap();
+    let mut handles = Vec::new();
+    {
+        let m = manifest.clone();
+        handles.push(std::thread::spawn(move || {
+            let backend = build_backend(&m, 1).unwrap();
+            serve_instance(real, backend,
+                           InstanceOptions::from_manifest(&m))
+                .unwrap();
+        }));
+    }
+    let gopts = GatewayOptions::from_manifest(&manifest);
+    handles.push(std::thread::spawn(move || {
+        serve_gateway(gw_listener, gopts).unwrap();
+    }));
+    for addr in [&gw_addr, &manifest.instances[1]] {
+        let mut up = false;
+        for _ in 0..200 {
+            if matches!(request(addr, "GET", "/health", None),
+                        Ok((200, _))) {
+                up = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(up, "{addr} did not come up");
+    }
+
+    // Traffic must complete on the survivor despite the blackhole —
+    // and each call must return well under the 50 s generate deadline
+    // (the wire budgets bound every stall at fractions of a second).
+    for i in 0..3 {
+        let body = format!(
+            r#"{{"prompt":"gray {i}","prompt_tokens":64,"max_new":4}}"#);
+        let t = std::time::Instant::now();
+        let (st, resp) =
+            request(&gw_addr, "POST", "/generate", Some(&body)).unwrap();
+        assert_eq!(st, 200, "generate: {resp}");
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.field("instance").unwrap().as_usize().unwrap(), 1,
+                   "only the survivor can serve");
+        assert!(t.elapsed() < Duration::from_secs(20),
+                "dispatch stalled on the blackhole");
+    }
+
+    // The wedge leaves the dispatch set: Degraded on the first failed
+    // status pull, Failed after three consecutive healthz misses.
+    let mut states: Vec<String> = Vec::new();
+    let mut failed = false;
+    for _ in 0..300 {
+        let (st, body) = request(&gw_addr, "GET", "/status", None).unwrap();
+        assert_eq!(st, 200);
+        let j = Json::parse(&body).unwrap();
+        states = j.field("active_set").unwrap().as_arr().unwrap()
+            .iter()
+            .map(|s| s.as_str().unwrap().to_string())
+            .collect();
+        if states[0] == "failed" {
+            failed = true;
+            // The quarantine edge is on the record with its cause.
+            let saw_degraded = j.field("lifecycle").unwrap().as_arr()
+                .unwrap()
+                .iter()
+                .any(|ev| {
+                    ev.field("state").unwrap().as_str().unwrap()
+                        == "degraded"
+                        && ev.field("cause").unwrap().as_str().unwrap()
+                            == "status-fail"
+                });
+            assert!(saw_degraded, "no degraded edge before failed: {body}");
+            assert_eq!(j.field("completed").unwrap().as_usize().unwrap(),
+                       3, "a request was lost during quarantine");
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    assert!(failed, "blackholed slot never escalated to failed: {states:?}");
+
+    // Still serving after the escalation.
+    let (st, resp) = request(
+        &gw_addr, "POST", "/generate",
+        Some(r#"{"prompt":"after","prompt_tokens":64,"max_new":4}"#))
+        .unwrap();
+    assert_eq!(st, 200, "generate after escalation: {resp}");
+
+    let _ = request(&gw_addr, "POST", "/shutdown", None);
+    let _ = request(&manifest.instances[1], "POST", "/shutdown", None);
+    for h in handles {
+        h.join().unwrap();
+    }
+    drop(hole);
 }
 
 #[test]

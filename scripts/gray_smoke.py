@@ -1,0 +1,254 @@
+#!/usr/bin/env python3
+"""gray-smoke: wedge a real instance daemon and watch the gateway cope.
+
+Brings up 2 sim-clock instance daemons + 1 gateway (``block serve``) on
+loopback with predictive straggler detection enabled and tight wire
+budgets, then drives the gray-failure path end to end:
+
+* phase A — healthy traffic lands on both instances;
+* freeze — one daemon is SIGSTOPped between batches: it passes TCP
+  accept (the kernel completes handshakes) but never answers, the
+  textbook wedged-not-dead gray failure.  The gateway's status pull
+  times out and quarantines the slot (Active -> Degraded,
+  cause ``status-fail``);
+* escalate — three consecutive ``healthz`` misses on the Degraded slot
+  escalate it to Failed (cause ``gray-fail``); traffic throughout keeps
+  completing on the survivor with zero accepted requests dropped;
+* thaw — SIGCONT wakes the daemon; the health prober re-admits the
+  Failed slot (cause ``rejoin``) and the dispatch split rebalances;
+* conservation — ``GET /status`` shows every accepted request
+  completed: no drops, no 504s, no sheds.
+
+Usage: gray_smoke.py [--scheduler block] [--bin PATH] [--base-port N]
+"""
+
+import argparse
+import json
+import signal
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+import urllib.error
+import urllib.request
+
+BASE_PORT = 18900
+N_INSTANCES = 2
+MAX_NEW = 16
+VICTIM = 1
+SURVIVOR = 0
+
+
+def http(method, addr, path, body=None, timeout=30):
+    data = json.dumps(body).encode() if body is not None else None
+    req = urllib.request.Request(
+        f"http://{addr}{path}", data=data, method=method,
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=timeout) as resp:
+        return resp.status, json.loads(resp.read().decode() or "{}")
+
+
+def wait_healthy(addr, deadline=30.0):
+    t0 = time.time()
+    while time.time() - t0 < deadline:
+        try:
+            status, body = http("GET", addr, "/health", timeout=2)
+            if status == 200 and body.get("ok"):
+                return
+        except (urllib.error.URLError, ConnectionError, OSError):
+            pass
+        time.sleep(0.2)
+    raise SystemExit(f"{addr} did not come up within {deadline}s")
+
+
+def wait_state(gw_addr, instance, states, tag, deadline=60.0):
+    """Poll /status until active_set[instance] is in `states`."""
+    t0 = time.time()
+    last = None
+    while time.time() - t0 < deadline:
+        _, gst = http("GET", gw_addr, "/status")
+        last = gst["active_set"][instance]
+        if last in states:
+            return gst
+        time.sleep(0.2)
+    raise SystemExit(
+        f"{tag}: instance {instance} never reached {states} within "
+        f"{deadline}s (last state: {last})")
+
+
+def fire_batch(gw_addr, n, tag):
+    """n concurrent /generate calls; returns the landing instances.
+
+    Every call must return 200 with the full token budget — the
+    no-dropped-requests assertion rides on this.
+    """
+    results, errors = [], []
+
+    def fire(i):
+        try:
+            status, body = http(
+                "POST", gw_addr, "/generate",
+                {"prompt": f"{tag} {i}", "prompt_tokens": 200,
+                 "max_new": MAX_NEW}, timeout=120)
+            assert status == 200, body
+            assert body["tokens"] == MAX_NEW, body
+            results.append(body["instance"])
+        except Exception as e:  # noqa: BLE001 - smoke harness
+            errors.append(f"{tag} request {i}: {e}")
+
+    threads = [threading.Thread(target=fire, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert len(results) == n
+    return results
+
+
+def wait_for_instance(gw_addr, instance, tag, deadline=30.0, batch=6):
+    """Fire small batches until `instance` serves again (rebalance)."""
+    t0 = time.time()
+    seen = []
+    total = 0
+    while time.time() - t0 < deadline:
+        seen = fire_batch(gw_addr, batch, tag)
+        total += batch
+        if instance in seen:
+            return total
+        time.sleep(0.3)
+    raise SystemExit(
+        f"instance {instance} never rejoined the split within "
+        f"{deadline}s (last batch: {seen})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scheduler", default="block")
+    ap.add_argument("--bin", default="target/release/block")
+    ap.add_argument("--base-port", type=int, default=BASE_PORT)
+    args = ap.parse_args()
+
+    gw_addr = f"127.0.0.1:{args.base_port}"
+    inst_addrs = [f"127.0.0.1:{args.base_port + 1 + i}"
+                  for i in range(N_INSTANCES)]
+    manifest = {
+        "schema": "block-cluster/v1",
+        "cluster": {
+            "scheduler": args.scheduler,
+            "frontends": 2,
+            "sync_interval": 0.25,
+            "n_instances": N_INSTANCES,
+            # A wedged daemon is detected by its failed status pull;
+            # completions feed the residual tracker as usual.
+            "detect": {"enabled": True},
+        },
+        "instances": inst_addrs,
+        "gateways": [gw_addr],
+        "backend": "sim",
+        "clock": "wall",
+        "time_scale": 50.0,
+        # Tight wire budgets: a frozen peer costs ~1s per RPC, not the
+        # OS default (minutes), so quarantine and escalation are fast.
+        "wire": {
+            "connect_timeout": 1.0,
+            "read_timeout": 1.0,
+            "write_timeout": 1.0,
+        },
+    }
+    mf = tempfile.NamedTemporaryFile("w", suffix=".json", delete=False)
+    json.dump(manifest, mf)
+    mf.close()
+
+    procs = {}
+    total_ok = 0
+    try:
+        for i in range(N_INSTANCES):
+            procs[i] = subprocess.Popen(
+                [args.bin, "serve", "--role", "instance",
+                 "--manifest", mf.name, "--index", str(i)])
+        procs["gw"] = subprocess.Popen(
+            [args.bin, "serve", "--role", "gateway",
+             "--manifest", mf.name, "--index", "0"])
+        for addr in inst_addrs + [gw_addr]:
+            wait_healthy(addr)
+
+        # Phase A: healthy traffic reaches both instances; the status
+        # export carries the detection telemetry.
+        a = fire_batch(gw_addr, 10, "phase-a")
+        total_ok += 10
+        split_a = [a.count(i) for i in range(N_INSTANCES)]
+        print(f"phase A split: {split_a}")
+        assert all(n >= 1 for n in split_a), f"skewed: {split_a}"
+        _, gst = http("GET", gw_addr, "/status")
+        assert gst["detect_enabled"] is True, gst
+        assert gst["timed_out"] == 0 and gst["shed"] == 0, gst
+
+        # Freeze: SIGSTOP the victim between batches.  The daemon still
+        # accepts TCP but never answers — the wedged gray case.  The
+        # gateway's next status pull times out and quarantines the slot.
+        procs[VICTIM].send_signal(signal.SIGSTOP)
+        gst = wait_state(gw_addr, VICTIM, ("degraded", "failed"), "freeze")
+        print(f"frozen victim state: {gst['active_set'][VICTIM]}")
+        assert any(ev["state"] == "degraded"
+                   and ev["cause"] == "status-fail"
+                   for ev in gst["lifecycle"]), gst["lifecycle"]
+
+        # Traffic during the freeze completes on the survivor: a gray
+        # failure slows one slot, it must not drop accepted requests.
+        b = fire_batch(gw_addr, 10, "frozen")
+        total_ok += 10
+        assert all(i == SURVIVOR for i in b), \
+            f"dispatch landed on the wedged instance: {b}"
+        print(f"frozen split: {[b.count(i) for i in range(N_INSTANCES)]}")
+
+        # Escalate: three consecutive healthz misses on the Degraded
+        # slot promote it to Failed (gray-fail).
+        gst = wait_state(gw_addr, VICTIM, ("failed",), "escalate")
+        assert any(ev["state"] == "failed" and ev["cause"] == "gray-fail"
+                   for ev in gst["lifecycle"]), gst["lifecycle"]
+        print("victim escalated: degraded -> failed (gray-fail)")
+
+        # Thaw: SIGCONT wakes the daemon; the health prober re-admits
+        # the Failed slot and the split rebalances onto it.
+        procs[VICTIM].send_signal(signal.SIGCONT)
+        gst = wait_state(gw_addr, VICTIM, ("active",), "thaw")
+        assert any(ev["state"] == "active" and ev["cause"] == "rejoin"
+                   for ev in gst["lifecycle"]), gst["lifecycle"]
+        total_ok += wait_for_instance(gw_addr, VICTIM, "thawed")
+        print("victim re-admitted: back in the dispatch split")
+
+        # Conservation on the wire: every accepted request completed —
+        # nothing dropped, timed out, or shed across the whole episode.
+        _, gst = http("GET", gw_addr, "/status")
+        assert gst["completed"] == total_ok, (gst["completed"], total_ok)
+        assert gst["rejected"] == 0, gst
+        assert gst["timed_out"] == 0, gst
+        assert gst["shed"] == 0, gst
+
+        print(f"gray-smoke OK: {total_ok} requests, scheduler "
+              f"{args.scheduler}, SIGSTOP quarantine -> gray-fail "
+              f"escalation -> SIGCONT re-admission exercised")
+    finally:
+        # A still-frozen victim cannot honor /shutdown: thaw first.
+        for i in range(N_INSTANCES):
+            try:
+                procs[i].send_signal(signal.SIGCONT)
+            except Exception:  # noqa: BLE001
+                pass
+        for addr in inst_addrs + [gw_addr]:
+            try:
+                http("POST", addr, "/shutdown", timeout=2)
+            except Exception:  # noqa: BLE001
+                pass
+        deadline = time.time() + 5
+        for p in procs.values():
+            try:
+                p.wait(timeout=max(0.1, deadline - time.time()))
+            except subprocess.TimeoutExpired:
+                p.kill()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
