@@ -1,0 +1,156 @@
+//! `cargo bench --bench cluster` — the macro benchmark: whole-cluster
+//! simulation throughput at 16 / 128 / 1024 instances, single-heap
+//! (`shards = 1`) vs sharded (`shards = 8`) execution.
+//!
+//! Each size runs the same min-qpm workload through both backends and
+//! reports events/sec and requests/sec; byte parity between the two is
+//! asserted on every pair (the bench doubles as an end-to-end parity
+//! gate at scales the property tests don't reach).  Results land in
+//! `BENCH_cluster.json` at the repo root so the mega-scale trajectory
+//! is tracked PR over PR.
+//!
+//! `-- --smoke` shrinks to one small size so CI can validate the JSON
+//! schema and the parity assertion without paying for the 1024x1M run.
+
+use std::time::Instant;
+
+use block::cluster::{run_experiment, SimOptions, SimResult};
+use block::config::{ClusterConfig, SchedulerKind, WorkloadConfig,
+                    WorkloadKind};
+use block::util::json::{Json, JsonObj};
+
+fn bench_cfg(n_instances: usize, shards: usize) -> ClusterConfig {
+    let mut cfg = ClusterConfig {
+        n_instances,
+        scheduler: SchedulerKind::MinQpm,
+        ..ClusterConfig::default()
+    };
+    // Distributed stale-view deployment: the shape the windowed
+    // sharded path accelerates (and the paper's serving shape).
+    cfg.frontends = 4;
+    cfg.sync_interval = 1.0;
+    cfg.window = 0.25;
+    cfg.shards = shards;
+    cfg.jobs = shards.max(1);
+    cfg
+}
+
+fn run_once(n_instances: usize, shards: usize, wl: &WorkloadConfig)
+            -> SimResult {
+    run_experiment(
+        bench_cfg(n_instances, shards),
+        wl,
+        SimOptions { probes: false, ..SimOptions::default() },
+    )
+    .expect("bench run failed")
+}
+
+/// The parity gate: identical request records and event counts across
+/// backends.  Panics (failing the bench) on any divergence.
+fn assert_parity(base: &SimResult, got: &SimResult, n: usize,
+                 shards: usize) {
+    let recs = |r: &SimResult| {
+        r.metrics
+            .records
+            .iter()
+            .map(|m| (m.id, m.instance, m.dispatched, m.finish))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(recs(base), recs(got),
+               "parity violated at instances={n} shards={shards}");
+    assert_eq!(base.events_processed, got.events_processed,
+               "event count diverged at instances={n} shards={shards}");
+}
+
+struct RunStat {
+    shards: usize,
+    events: u64,
+    requests: usize,
+    wall_s: f64,
+}
+
+impl RunStat {
+    fn events_per_s(&self) -> f64 {
+        self.events as f64 / self.wall_s.max(1e-9)
+    }
+
+    fn requests_per_s(&self) -> f64 {
+        self.requests as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // (instances, requests): the 1024-instance point is the paper's
+    // O(1000) mega-scale tier at >= 1M requests.
+    let sizes: &[(usize, usize)] = if smoke {
+        &[(16, 2_000)]
+    } else {
+        &[(16, 50_000), (128, 200_000), (1024, 1_000_000)]
+    };
+    const SHARDED: usize = 8;
+
+    let mut runs = JsonObj::new();
+    for &(n, n_requests) in sizes {
+        let wl = WorkloadConfig {
+            kind: WorkloadKind::ShareGpt,
+            qps: 12.0 * n as f64,
+            n_requests,
+            seed: 7,
+        };
+        let mut stats = Vec::new();
+        let mut base: Option<SimResult> = None;
+        for shards in [1usize, SHARDED] {
+            let t0 = Instant::now();
+            let res = run_once(n, shards, &wl);
+            let wall = t0.elapsed().as_secs_f64();
+            println!(
+                "instances={n:<5} shards={shards:<2} {:>12} events  \
+                 {:>10.0} ev/s  {:>9.0} req/s  ({wall:.2}s)",
+                res.events_processed,
+                res.events_processed as f64 / wall.max(1e-9),
+                res.metrics.len() as f64 / wall.max(1e-9),
+            );
+            stats.push(RunStat {
+                shards,
+                events: res.events_processed,
+                requests: res.metrics.len(),
+                wall_s: wall,
+            });
+            match &base {
+                None => base = Some(res),
+                Some(b) => assert_parity(b, &res, n, shards),
+            }
+        }
+        let mut run = JsonObj::new();
+        run.insert("requests", n_requests);
+        run.insert("peak_instances", n);
+        for s in &stats {
+            let mut o = JsonObj::new();
+            o.insert("events", s.events as f64);
+            o.insert("wall_s", s.wall_s);
+            o.insert("events_per_s", s.events_per_s());
+            o.insert("requests_per_s", s.requests_per_s());
+            run.insert(format!("shards={}", s.shards), Json::Obj(o));
+        }
+        let speedup = stats[0].wall_s / stats[1].wall_s.max(1e-9);
+        run.insert("speedup", speedup);
+        println!("instances={n:<5} sharded speedup {speedup:.2}x");
+        runs.insert(format!("instances={n}"), Json::Obj(run));
+    }
+
+    let mut root = JsonObj::new();
+    root.insert("schema", "bench-cluster/v1");
+    root.insert("smoke", smoke);
+    root.insert("generated_by", "cargo bench --bench cluster");
+    root.insert("scheduler", "min-qpm");
+    root.insert("sharded_shards", SHARDED);
+    root.insert("runs", Json::Obj(runs));
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_cluster.json");
+    let json = Json::Obj(root).to_string_pretty();
+    if let Err(e) = std::fs::write(out, json) {
+        eprintln!("failed to write {out}: {e}");
+        std::process::exit(1);
+    }
+    println!("[written {out}]");
+}

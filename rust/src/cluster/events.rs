@@ -1,9 +1,23 @@
-//! Discrete-event queue with a total order over (time, sequence number).
+//! Discrete-event queues with a total order over (time, sequence number).
 //!
 //! f64 timestamps are not `Ord`; we order by time bits (all times are
 //! finite and non-negative here) and break ties by insertion sequence so
 //! simultaneous events process in FIFO order — determinism matters for
 //! reproducible experiments.
+//!
+//! Two stores implement that order:
+//!
+//! * [`EventQueue`] — the legacy single `BinaryHeap` (the `shards = 1`
+//!   path, and the byte-parity reference for everything below).
+//! * [`ShardedQueues`] — the sharded runner's store: one control heap
+//!   (front-end-side events), one barrier heap (window-closing events),
+//!   and one heap per instance shard, each ordered by [`Key`].  Events
+//!   pushed *inside* a conservative window carry a provisional rank
+//!   ([`Rank::Prov`]) that records *which handler pushed them and in
+//!   what order* instead of a global sequence number; the window
+//!   barrier resolves those ranks back to the exact sequence numbers
+//!   the single-heap run would have assigned (see
+//!   [`Arenas::cmp_keys`]).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -116,6 +130,487 @@ impl EventQueue {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Sharded store: the conservative time-window synchronizer's event heaps.
+// ---------------------------------------------------------------------------
+
+/// Which heap an event lives in under the sharded runner.
+///
+/// `Ctrl` events are handled by the coordinator in phase A of a window
+/// (front-end decisions and wire-side landings: they read only
+/// coordinator-owned state — views, in-transit sets, the provisioner's
+/// active set).  `Shard(s)` events are engine work owned by one shard's
+/// worker.  `Barrier` events close the window: their handlers read
+/// cross-shard state (view pulls walk every engine, faults mutate
+/// arbitrary slots), so they only run once every shard has caught up to
+/// their timestamp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventClass {
+    Ctrl,
+    Shard(usize),
+    Barrier,
+}
+
+/// Route an event kind to its heap.  `chunk` is the shard width
+/// (instances per shard, last shard possibly ragged).
+pub fn class_of(kind: &EventKind, chunk: usize) -> EventClass {
+    match kind {
+        EventKind::Arrival(..)
+        | EventKind::Dispatch(..)
+        | EventKind::Redispatch(..)
+        | EventKind::InstanceReady => EventClass::Ctrl,
+        EventKind::StepDone(i, _) => EventClass::Shard(i / chunk),
+        EventKind::DrainCheck(..)
+        | EventKind::ViewSync(..)
+        | EventKind::Fault(..)
+        | EventKind::RestoreCheck(..) => EventClass::Barrier,
+    }
+}
+
+/// An event's position in the simulator's total order.
+///
+/// `Final` ranks carry the global sequence number the single-heap run
+/// assigns at push time.  `Prov` ranks are given to events pushed
+/// *inside* an open window, where the global push order is not yet
+/// known (the coordinator and the shard workers push concurrently in
+/// virtual time): they name a [`ProvEntry`] in the window's [`Arenas`]
+/// ledger, from which the barrier reconstructs the exact order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Rank {
+    Final(u64),
+    Prov { space: u32, idx: u32 },
+}
+
+/// (time, rank) — totally ordered by [`Arenas::cmp_keys`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Key {
+    pub time: f64,
+    pub rank: Rank,
+}
+
+impl Key {
+    pub fn fin(time: f64, seq: u64) -> Self {
+        Key { time, rank: Rank::Final(seq) }
+    }
+}
+
+/// Provenance of one in-window push: the key of the handler event that
+/// performed it (`gen`) and the push's position within that handler's
+/// program order (`ordinal`).  Sequence numbers are assigned in handler
+/// execution order, and handlers execute in key order — so
+/// `(gen, ordinal)` lexicographic *is* the push order, recursively.
+#[derive(Debug, Clone, Copy)]
+pub struct ProvEntry {
+    pub gen: Key,
+    pub ordinal: u32,
+}
+
+/// Resolve a provisional rank to its ledger entry.  Shard workers see a
+/// split view of the ledger (the frozen coordinator space plus their
+/// own append-only space); the coordinator sees all of it.
+pub trait Provenance {
+    fn resolve(&self, space: u32, idx: u32) -> ProvEntry;
+
+    /// The sharded runner's total order — provably the single-heap
+    /// (time, seq) order:
+    ///
+    /// * earlier time first (`f64::total_cmp`; all times are finite);
+    /// * at equal time, two final ranks compare by seq — the legacy
+    ///   rule verbatim;
+    /// * a final rank precedes any provisional one: a final seq at time
+    ///   t was assigned before the window opened (or during an earlier
+    ///   barrier), while every in-window push resolves to a later seq;
+    /// * two provisional ranks compare by the keys of the handlers that
+    ///   pushed them (recursively — the push DAG is acyclic because a
+    ///   handler's key is fixed before it pushes), then by push ordinal
+    ///   within the handler.
+    fn cmp_keys(&self, a: Key, b: Key) -> Ordering {
+        match a.time.total_cmp(&b.time) {
+            Ordering::Equal => {}
+            ord => return ord,
+        }
+        match (a.rank, b.rank) {
+            (Rank::Final(x), Rank::Final(y)) => x.cmp(&y),
+            (Rank::Final(_), Rank::Prov { .. }) => Ordering::Less,
+            (Rank::Prov { .. }, Rank::Final(_)) => Ordering::Greater,
+            (Rank::Prov { space: sa, idx: ia },
+             Rank::Prov { space: sb, idx: ib }) => {
+                let ea = self.resolve(sa, ia);
+                let eb = self.resolve(sb, ib);
+                self.cmp_keys(ea.gen, eb.gen)
+                    .then(ea.ordinal.cmp(&eb.ordinal))
+            }
+        }
+    }
+}
+
+/// One window's full provenance ledger: space 0 is the coordinator
+/// (phase A pushes), space `s + 1` is shard `s` (phase B pushes).
+/// Cleared at every barrier once survivors are re-ranked.
+#[derive(Default)]
+pub struct Arenas {
+    pub spaces: Vec<Vec<ProvEntry>>,
+}
+
+impl Provenance for Arenas {
+    fn resolve(&self, space: u32, idx: u32) -> ProvEntry {
+        self.spaces[space as usize][idx as usize]
+    }
+}
+
+/// A shard worker's ledger view during phase B: the coordinator space
+/// is frozen (phase A is over), `own` is the worker's private space.
+pub struct ShardLedger<'a> {
+    pub coord: &'a [ProvEntry],
+    pub own_space: u32,
+    pub own: &'a [ProvEntry],
+}
+
+impl Provenance for ShardLedger<'_> {
+    fn resolve(&self, space: u32, idx: u32) -> ProvEntry {
+        if space == 0 {
+            self.coord[idx as usize]
+        } else {
+            debug_assert_eq!(space, self.own_space,
+                             "cross-shard provenance reference");
+            self.own[idx as usize]
+        }
+    }
+}
+
+/// A binary min-heap over ([`Key`], [`Event`]) whose comparator is
+/// supplied per call (keys are only ordered relative to a provenance
+/// ledger).  `std::collections::BinaryHeap` cannot do this — `Ord` has
+/// no context parameter.
+#[derive(Default)]
+pub struct KeyedHeap {
+    items: Vec<(Key, Event)>,
+}
+
+impl KeyedHeap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn peek_key(&self) -> Option<Key> {
+        self.items.first().map(|(k, _)| *k)
+    }
+
+    /// The heap's backing storage in heap order (for survivor scans at
+    /// barriers — not sorted).
+    pub fn entries(&self) -> &[(Key, Event)] {
+        &self.items
+    }
+
+    pub fn push<P: Provenance>(&mut self, key: Key, ev: Event, led: &P) {
+        debug_assert!(key.time.is_finite() && key.time >= 0.0);
+        self.items.push((key, ev));
+        self.sift_up(self.items.len() - 1, led);
+    }
+
+    pub fn pop<P: Provenance>(&mut self, led: &P) -> Option<(Key, Event)> {
+        if self.items.is_empty() {
+            return None;
+        }
+        let last = self.items.len() - 1;
+        self.items.swap(0, last);
+        let out = self.items.pop();
+        if !self.items.is_empty() {
+            self.sift_down(0, led);
+        }
+        out
+    }
+
+    /// Rewrite every key in place.  The rewrite must be
+    /// order-preserving (barrier re-ranking is: provisional ranks are
+    /// replaced by final seqs assigned in comparator order), so the
+    /// heap invariant survives untouched.
+    pub fn remap_keys(&mut self, mut f: impl FnMut(&mut Key)) {
+        for (k, _) in &mut self.items {
+            f(k);
+        }
+    }
+
+    fn sift_up<P: Provenance>(&mut self, mut i: usize, led: &P) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if led.cmp_keys(self.items[i].0, self.items[parent].0)
+                == Ordering::Less
+            {
+                self.items.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down<P: Provenance>(&mut self, mut i: usize, led: &P) {
+        let n = self.items.len();
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut min = i;
+            if l < n
+                && led.cmp_keys(self.items[l].0, self.items[min].0)
+                    == Ordering::Less
+            {
+                min = l;
+            }
+            if r < n
+                && led.cmp_keys(self.items[r].0, self.items[min].0)
+                    == Ordering::Less
+            {
+                min = r;
+            }
+            if min == i {
+                break;
+            }
+            self.items.swap(i, min);
+            i = min;
+        }
+    }
+}
+
+/// Synchronizer telemetry: conservation (`pushed == popped` once every
+/// heap drains — no event lost or duplicated at a barrier) and
+/// causality (`delivered_late == 0` — no cross-shard event entered a
+/// shard whose local clock had already passed its timestamp).  The
+/// `prop_window_causality` suite pins both.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SyncStats {
+    pub pushed: u64,
+    pub popped: u64,
+    /// Cross-shard engine-side deliveries (dispatch landings handed to
+    /// the owning shard's heap).
+    pub delivered: u64,
+    /// Deliveries that violated the conservative guarantee.
+    pub delivered_late: u64,
+    /// Windows executed in split phase-A/phase-B form.
+    pub windows: u64,
+    /// Events executed serially (barriers + the degenerate path).
+    pub serial_events: u64,
+}
+
+/// The sharded runner's event store: control + barrier heaps owned by
+/// the coordinator, one heap per instance shard, the window's
+/// provenance ledger, and the global sequence counter that makes the
+/// whole thing byte-compatible with [`EventQueue`].
+pub struct ShardedQueues {
+    pub ctrl: KeyedHeap,
+    pub barrier: KeyedHeap,
+    pub shards: Vec<KeyedHeap>,
+    pub arenas: Arenas,
+    /// Conservative local clocks: the largest event time each shard's
+    /// worker has executed.  Deliveries are checked against these.
+    pub clocks: Vec<f64>,
+    pub stats: SyncStats,
+    chunk: usize,
+    seq: u64,
+}
+
+impl ShardedQueues {
+    /// `shards` is clamped to `[1, total_instances]`; instances are
+    /// assigned to shards in contiguous chunks (`i / chunk`), matching
+    /// the `chunks_mut` split the phase-B workers use.
+    pub fn new(total_instances: usize, shards: usize) -> Self {
+        let total = total_instances.max(1);
+        let shards = shards.clamp(1, total);
+        let chunk = total.div_ceil(shards);
+        let n_shards = total.div_ceil(chunk);
+        ShardedQueues {
+            ctrl: KeyedHeap::new(),
+            barrier: KeyedHeap::new(),
+            shards: (0..n_shards).map(|_| KeyedHeap::new()).collect(),
+            arenas: Arenas { spaces: vec![Vec::new(); n_shards + 1] },
+            clocks: vec![0.0; n_shards],
+            stats: SyncStats::default(),
+            chunk,
+            seq: 0,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    pub fn shard_of(&self, instance: usize) -> usize {
+        instance / self.chunk
+    }
+
+    pub fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    pub fn len(&self) -> usize {
+        self.ctrl.len()
+            + self.barrier.len()
+            + self.shards.iter().map(|h| h.len()).sum::<usize>()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Push with a freshly assigned final sequence number —
+    /// byte-equivalent to [`EventQueue::push`].  Used outside windows
+    /// (seeding, barrier handlers, the degenerate path).
+    pub fn push_final(&mut self, ev: Event) {
+        let key = Key::fin(ev.time, self.next_seq());
+        self.route(key, ev);
+        self.stats.pushed += 1;
+    }
+
+    /// Coordinator (phase A) push with window-relative provenance:
+    /// `gen` is the pushing handler's key, `ordinal` its push counter.
+    pub fn push_prov(&mut self, ev: Event, gen: Key, ordinal: u32) {
+        let idx = self.arenas.spaces[0].len() as u32;
+        self.arenas.spaces[0].push(ProvEntry { gen, ordinal });
+        let key = Key { time: ev.time, rank: Rank::Prov { space: 0, idx } };
+        self.route(key, ev);
+        self.stats.pushed += 1;
+    }
+
+    fn route(&mut self, key: Key, ev: Event) {
+        match class_of(&ev.kind, self.chunk) {
+            EventClass::Ctrl => self.ctrl.push(key, ev, &self.arenas),
+            EventClass::Barrier => self.barrier.push(key, ev, &self.arenas),
+            EventClass::Shard(s) => {
+                self.shards[s].push(key, ev, &self.arenas)
+            }
+        }
+    }
+
+    /// Hand an engine-side dispatch landing to the owning shard's heap
+    /// under the *same* key as its wire-side half (one serial event,
+    /// two phases).  Checks the conservative guarantee: the shard's
+    /// clock must not have passed the event's time.
+    pub fn deliver_to_shard(&mut self, key: Key, ev: Event) {
+        let s = match ev.kind {
+            EventKind::Dispatch(_, instance, _) => self.shard_of(instance),
+            _ => unreachable!("only dispatch landings cross shards"),
+        };
+        if key.time < self.clocks[s] {
+            self.stats.delivered_late += 1;
+        }
+        self.stats.delivered += 1;
+        self.stats.pushed += 1;
+        self.shards[s].push(key, ev, &self.arenas);
+    }
+
+    /// The globally minimal key across every heap.
+    pub fn peek_min_key(&self) -> Option<Key> {
+        let mut best: Option<Key> = None;
+        let heaps = [&self.ctrl, &self.barrier]
+            .into_iter()
+            .chain(self.shards.iter());
+        for h in heaps {
+            if let Some(k) = h.peek_key() {
+                best = Some(match best {
+                    Some(b)
+                        if self.arenas.cmp_keys(b, k) != Ordering::Greater =>
+                    {
+                        b
+                    }
+                    _ => k,
+                });
+            }
+        }
+        best
+    }
+
+    /// Pop the globally minimal event — the serialized (degenerate)
+    /// execution path, byte-equivalent to [`EventQueue::pop`] given the
+    /// same pushes.
+    pub fn pop_min(&mut self) -> Option<(Key, Event)> {
+        let mut best: Option<(usize, Key)> = None;
+        let keys = [self.ctrl.peek_key(), self.barrier.peek_key()]
+            .into_iter()
+            .chain(self.shards.iter().map(|h| h.peek_key()));
+        for (hid, key) in keys.enumerate() {
+            if let Some(k) = key {
+                best = Some(match best {
+                    Some((bh, b))
+                        if self.arenas.cmp_keys(b, k) != Ordering::Greater =>
+                    {
+                        (bh, b)
+                    }
+                    _ => (hid, k),
+                });
+            }
+        }
+        let (hid, _) = best?;
+        let popped = match hid {
+            0 => self.ctrl.pop(&self.arenas),
+            1 => self.barrier.pop(&self.arenas),
+            s => {
+                let out = self.shards[s - 2].pop(&self.arenas);
+                if let Some((k, _)) = out {
+                    self.clocks[s - 2] = self.clocks[s - 2].max(k.time);
+                }
+                out
+            }
+        };
+        if popped.is_some() {
+            self.stats.popped += 1;
+        }
+        popped
+    }
+
+    /// Every surviving provisional key across all heaps, with its
+    /// ledger entry — the barrier's re-ranking worklist.
+    pub fn surviving_provs(&self) -> Vec<((u32, u32), ProvEntry)> {
+        let mut out = Vec::new();
+        let heaps = [&self.ctrl, &self.barrier]
+            .into_iter()
+            .chain(self.shards.iter());
+        for h in heaps {
+            for (k, _) in h.entries() {
+                if let Rank::Prov { space, idx } = k.rank {
+                    out.push(((space, idx),
+                              self.arenas.resolve(space, idx)));
+                }
+            }
+        }
+        out
+    }
+
+    /// Close a window: rewrite every surviving provisional rank to its
+    /// final sequence number (`assign` maps `(space, idx)` to the seq
+    /// chosen in comparator order — an order-preserving rewrite, so the
+    /// heaps stay valid in place) and reset the ledger.
+    pub fn seal_window(
+        &mut self,
+        assign: &std::collections::HashMap<(u32, u32), u64>,
+    ) {
+        let rewrite = |k: &mut Key| {
+            if let Rank::Prov { space, idx } = k.rank {
+                k.rank = Rank::Final(assign[&(space, idx)]);
+            }
+        };
+        self.ctrl.remap_keys(rewrite);
+        self.barrier.remap_keys(rewrite);
+        for h in &mut self.shards {
+            h.remap_keys(rewrite);
+        }
+        for sp in &mut self.arenas.spaces {
+            sp.clear();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,5 +648,167 @@ mod tests {
         assert_eq!(q.len(), 1);
         q.pop();
         assert!(q.is_empty());
+    }
+
+    // --- shard-merge path -------------------------------------------------
+
+    /// Push the same stream into the single heap and a sharded store,
+    /// drain both, and require identical (time, kind) sequences.
+    fn assert_merge_parity(events: &[Event], instances: usize,
+                           shards: usize) {
+        let mut single = EventQueue::new();
+        let mut sharded = ShardedQueues::new(instances, shards);
+        for ev in events {
+            single.push(ev.clone());
+            sharded.push_final(ev.clone());
+        }
+        let want: Vec<(f64, EventKind)> =
+            std::iter::from_fn(|| single.pop())
+                .map(|e| (e.time, e.kind))
+                .collect();
+        let got: Vec<(f64, EventKind)> =
+            std::iter::from_fn(|| sharded.pop_min())
+                .map(|(_, e)| (e.time, e.kind))
+                .collect();
+        assert_eq!(want, got, "shards={shards}");
+        assert_eq!(sharded.stats.pushed, sharded.stats.popped);
+        assert!(sharded.is_empty());
+    }
+
+    #[test]
+    fn sharded_merge_equal_time_cross_shard_ties_fifo() {
+        // Equal-time events spread across control, barrier, and three
+        // different shard heaps — including the Fault / ViewSync /
+        // DrainCheck kinds — must pop in single-heap push (FIFO) order.
+        let t = 1.0;
+        let events = vec![
+            Event { time: t, kind: EventKind::StepDone(5, 0) },
+            Event { time: t, kind: EventKind::Arrival(0, 0) },
+            Event { time: t,
+                    kind: EventKind::Fault(
+                        crate::faults::FaultKind::InstanceFail(2)) },
+            Event { time: t, kind: EventKind::StepDone(0, 0) },
+            Event { time: t, kind: EventKind::ViewSync(1) },
+            Event { time: t, kind: EventKind::DrainCheck(3) },
+            Event { time: t, kind: EventKind::Dispatch(0, 4, 0) },
+            Event { time: t, kind: EventKind::StepDone(3, 1) },
+            Event { time: t, kind: EventKind::RestoreCheck(1) },
+            Event { time: t, kind: EventKind::Redispatch(7) },
+        ];
+        for shards in [1, 2, 3, 6] {
+            assert_merge_parity(&events, 6, shards);
+        }
+    }
+
+    #[test]
+    fn sharded_merge_matches_single_heap_randomized() {
+        // Deterministic xorshift stream over all event kinds with a
+        // small time alphabet (forcing heavy collisions), checked at
+        // several shard counts including a ragged split (7 over 16).
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let instances = 16;
+        let times = [0.0, 0.5, 1.0, 1.0, 2.5, 2.5, 2.5, 4.0];
+        let mut events = Vec::new();
+        for _ in 0..500 {
+            let time = times[(next() % times.len() as u64) as usize];
+            let i = (next() % instances as u64) as usize;
+            let kind = match next() % 8 {
+                0 => EventKind::Arrival(i, 0),
+                1 => EventKind::Dispatch(i, i, 0),
+                2 => EventKind::Redispatch(i),
+                3 => EventKind::StepDone(i, 0),
+                4 => EventKind::InstanceReady,
+                5 => EventKind::DrainCheck(i),
+                6 => EventKind::ViewSync(i % 3),
+                _ => EventKind::Fault(
+                    crate::faults::FaultKind::InstanceRejoin(i)),
+            };
+            events.push(Event { time, kind });
+        }
+        for shards in [1, 2, 3, 7, 16] {
+            assert_merge_parity(&events, instances, shards);
+        }
+    }
+
+    #[test]
+    fn provisional_ranks_recreate_push_order() {
+        // Two handlers at t=1 (finals A=seq 1, B=seq 2).  In a window,
+        // A pushes P1 then P2, B pushes P3, and P1's handler pushes Q —
+        // all landing at t=2.  The serial run would pop A, B (assigning
+        // P1=3, P2=4, P3=5), then P1 (assigning Q=6): order P1 P2 P3 Q.
+        let a = Key::fin(1.0, 1);
+        let b = Key::fin(1.0, 2);
+        let mut ar = Arenas { spaces: vec![Vec::new()] };
+        let mut heap = KeyedHeap::new();
+        let mut push = |heap: &mut KeyedHeap, ar: &mut Arenas, gen: Key,
+                        ordinal: u32, tag: usize| {
+            let idx = ar.spaces[0].len() as u32;
+            ar.spaces[0].push(ProvEntry { gen, ordinal });
+            let key =
+                Key { time: 2.0, rank: Rank::Prov { space: 0, idx } };
+            heap.push(key, Event { time: 2.0,
+                                   kind: EventKind::Redispatch(tag) },
+                      ar);
+            key
+        };
+        // Deliberately pushed out of order to exercise the comparator.
+        let p3 = push(&mut heap, &mut ar, b, 0, 3);
+        let p1 = push(&mut heap, &mut ar, a, 0, 1);
+        let _q = push(&mut heap, &mut ar, p1, 0, 4);
+        let _p2 = push(&mut heap, &mut ar, a, 1, 2);
+        assert_eq!(ar.cmp_keys(p1, p3), Ordering::Less);
+        let order: Vec<usize> = std::iter::from_fn(|| heap.pop(&ar))
+            .map(|(_, e)| match e.kind {
+                EventKind::Redispatch(tag) => tag,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(order, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn final_rank_precedes_provisional_at_equal_time() {
+        // An event already holding a final seq at time t was pushed
+        // before the window opened; any in-window push at the same time
+        // resolves to a later seq.
+        let mut ar = Arenas { spaces: vec![Vec::new()] };
+        ar.spaces[0].push(ProvEntry { gen: Key::fin(0.5, 1), ordinal: 0 });
+        let f = Key::fin(2.0, 7);
+        let p = Key { time: 2.0, rank: Rank::Prov { space: 0, idx: 0 } };
+        assert_eq!(ar.cmp_keys(f, p), Ordering::Less);
+        assert_eq!(ar.cmp_keys(p, f), Ordering::Greater);
+    }
+
+    #[test]
+    fn seal_window_rewrites_survivors_in_place() {
+        let mut q = ShardedQueues::new(4, 2);
+        q.push_final(Event { time: 1.0, kind: EventKind::StepDone(0, 0) });
+        let gen = Key::fin(0.5, 99);
+        q.push_prov(Event { time: 1.0, kind: EventKind::InstanceReady },
+                    gen, 0);
+        q.push_prov(Event { time: 0.75, kind: EventKind::StepDone(3, 0) },
+                    gen, 1);
+        let survivors = q.surviving_provs();
+        assert_eq!(survivors.len(), 2);
+        let mut assign = std::collections::HashMap::new();
+        // Comparator order: the t=0.75 push (ordinal 1) precedes the
+        // t=1.0 push (ordinal 0) — time dominates provenance.
+        assign.insert((0u32, 1u32), q.next_seq());
+        assign.insert((0u32, 0u32), q.next_seq());
+        q.seal_window(&assign);
+        let order: Vec<(f64, u64)> = std::iter::from_fn(|| q.pop_min())
+            .map(|(k, _)| match k.rank {
+                Rank::Final(s) => (k.time, s),
+                _ => panic!("survivor not re-ranked"),
+            })
+            .collect();
+        assert_eq!(order, vec![(0.75, 2), (1.0, 1), (1.0, 3)]);
+        assert!(q.arenas.spaces.iter().all(|s| s.is_empty()));
     }
 }

@@ -335,6 +335,12 @@ impl FrontEnd {
     /// `landed` (the host was alive to enqueue it) and the echo is on —
     /// enters the landed-since-last-sync replay log.  A bounced
     /// dispatch (dead host) is not echoed: the instance never held it.
+    ///
+    /// Sharded loop (`cluster::sharded`): this is the *wire half* of a
+    /// `Dispatch` event, run in phase A — serially, in global key
+    /// order — before the engine half is delivered into the owning
+    /// shard at the same key.  In-transit state is therefore always
+    /// window-consistent for every pick inside the window.
     pub fn dispatch_landed(&mut self, instance: usize, req: &Request,
                            landed: bool) {
         self.in_transit[instance].retain(|r| r.id != req.id);
@@ -416,6 +422,13 @@ impl FrontEnd {
     /// longer load anywhere, and without this the front-end would keep
     /// replaying it as phantom in-transit work until the next slot
     /// sync — the inverse of the double-booking the echo repairs.
+    ///
+    /// Sharded loop (`cluster::sharded`): completions surface at the
+    /// window barrier, so this runs *deferred* relative to the serial
+    /// schedule.  That is invisible to in-window picks: scheduler
+    /// feedback is keyed by the finished id (which no live pick ever
+    /// queries), and the echo retire only exists under `local_echo`,
+    /// which disqualifies the windowed overlap outright.
     pub fn on_finish(&mut self, id: crate::core::request::RequestId,
                      true_tokens: u32) {
         self.scheduler.on_finish(id, true_tokens);

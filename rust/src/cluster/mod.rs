@@ -29,12 +29,14 @@
 
 pub mod events;
 pub mod frontend;
+mod sharded;
 
 use std::collections::HashMap;
 
 use crate::config::ClusterConfig;
 use crate::core::request::{Request, RequestId, RequestMetrics};
-use crate::engine::{InstanceEngine, InstanceLoad, InstanceStatus};
+use crate::engine::{FinishedSeq, InstanceEngine, InstanceLoad,
+                    InstanceStatus};
 use crate::exec::roofline::RooflineModel;
 use crate::faults::residual::ResidualTracker;
 use crate::faults::{FaultKind, FaultPlan, FaultRecord, RecoveryStats};
@@ -100,6 +102,16 @@ pub struct SimResult {
     /// the number of admitted requests — the conservation law pinned by
     /// `prop_no_request_lost_under_faults`.
     pub recovery: RecoveryStats,
+    /// Events the run loop executed, in serial-order terms: the sharded
+    /// fast path counts a `Dispatch` split across the coordinator/shard
+    /// boundary once, so the number is comparable across `shards`
+    /// settings (the macro benchmark's events/sec numerator).
+    pub events_processed: u64,
+    /// Window-synchronizer conservation counters (`Some` only when the
+    /// run used `shards > 1`): pushed/popped totals, cross-shard
+    /// deliveries, and the late-delivery count that must stay zero —
+    /// the observable pinned by `prop_window_causality`.
+    pub sync_stats: Option<events::SyncStats>,
     pub wall_time: std::time::Duration,
 }
 
@@ -151,6 +163,64 @@ struct DispatchInfo {
     predicted: Option<f64>,
     prompt_tokens: u32,
     response_tokens: u32,
+}
+
+/// Mutable per-run bookkeeping threaded through the event handlers.
+///
+/// Factoring this off `run`'s stack lets the legacy single-heap loop,
+/// the sharded degenerate loop, and the windowed fast path
+/// ([`sharded`]) share one set of handler bodies — the byte-parity
+/// guarantee between the runners reduces to "same handlers, fed the
+/// same events in the same order".
+pub(crate) struct RunState {
+    // Immutable-after-init run parameters.
+    /// Dispatch decides from possibly-stale front-end views
+    /// (`sync_interval > 0`) instead of fresh snapshots.
+    stale_views: bool,
+    want_statuses: bool,
+    want_loads: bool,
+    /// Drain-based scale-down armed (elasticity on + idle window set).
+    scale_down: bool,
+    // Fault bookkeeping (all empty/unused on the healthy path).
+    id_to_idx: HashMap<RequestId, usize>,
+    fault_records: Vec<FaultRecord>,
+    /// Open re-dispatches: request id → fault record that caused it.
+    redispatch_fault: HashMap<RequestId, usize>,
+    latest_fault_of_instance: Vec<Option<usize>>,
+    /// Gray faults tracked separately from fail-stop ones: a
+    /// slowdown's restoration clock is closed by `InstanceRecover`,
+    /// not by the provisioner's rejoin path.
+    latest_slow_of_instance: Vec<Option<usize>>,
+    latest_fault_of_frontend: Vec<Option<usize>>,
+    /// Requests with nowhere to go (no surviving front-end, or no
+    /// instance the chosen front-end knows to be alive); retried
+    /// when capacity returns, dropped if the run ends first.
+    parked: Vec<usize>,
+    // Live counters.
+    arrivals_remaining: usize,
+    /// One `ViewSync(f)` may be in the queue per front-end at a time.
+    /// Tracked so a `FrontEndRestart` can restart a sync chain that
+    /// died with the crash without double-arming one that is still
+    /// in flight (armed before the crash, popping after the restart).
+    viewsync_pending: Vec<bool>,
+    // Run outputs.
+    metrics: MetricsCollector,
+    probes: Vec<Probe>,
+    sampled: Vec<SampledArrival>,
+    size_timeline: Vec<(f64, usize)>,
+    events_processed: u64,
+}
+
+impl RunState {
+    /// Commutative coordinator-side credit for a landed (re-)dispatch:
+    /// a re-dispatched request back on a healthy instance extends its
+    /// fault's disruption window.
+    fn dispatch_land_credit(&mut self, id: RequestId, now: f64) {
+        if let Some(k) = self.redispatch_fault.remove(&id) {
+            self.fault_records[k].last_landed =
+                self.fault_records[k].last_landed.max(now);
+        }
+    }
 }
 
 /// The cluster simulator.
@@ -334,10 +404,10 @@ impl ClusterSim {
         fe.clear_echo_all();
     }
 
-    fn kick_engine(&mut self, i: usize, queue: &mut EventQueue) {
+    fn kick_engine(&mut self, i: usize, push: &mut dyn FnMut(Event)) {
         if self.engines[i].busy_until().is_none() {
             if let Some(done) = self.engines[i].start_step(&self.cost) {
-                queue.push(Event {
+                push(Event {
                     time: done,
                     kind: EventKind::StepDone(i, self.step_gen[i]),
                 });
@@ -377,15 +447,14 @@ impl ClusterSim {
     #[allow(clippy::too_many_arguments)]
     fn dispatch_request(
         &mut self,
+        st: &mut RunState,
         requests: &[Request],
         idx: usize,
         f: usize,
         now: f64,
-        stale_views: bool,
-        queue: &mut EventQueue,
-        probes: &mut Vec<Probe>,
-        sampled: &mut Vec<SampledArrival>,
+        push: &mut dyn FnMut(Event),
     ) {
+        let stale_views = st.stale_views;
         let req = &requests[idx];
         // Each view side is only computed when something will read it:
         // loads feed heuristic dispatchers and the probe record; full
@@ -431,7 +500,7 @@ impl ClusterSim {
         };
 
         if self.opts.probes {
-            probes.push(Probe {
+            st.probes.push(Probe {
                 time: now,
                 free_blocks: self
                     .loads
@@ -450,7 +519,7 @@ impl ClusterSim {
             && self.rng.bernoulli(self.opts.sample_prob)
         {
             self.refresh_statuses();
-            sampled.push(SampledArrival {
+            st.sampled.push(SampledArrival {
                 request: req.clone(),
                 statuses: self
                     .status_cache
@@ -474,7 +543,7 @@ impl ClusterSim {
                 if let Some(ready) =
                     self.provisioner.observe_predicted(now, pred)
                 {
-                    queue.push(Event {
+                    push(Event {
                         time: ready,
                         kind: EventKind::InstanceReady,
                     });
@@ -512,20 +581,23 @@ impl ClusterSim {
             prompt_tokens: req.prompt_tokens,
             response_tokens: req.response_tokens,
         });
-        queue.push(Event {
+        push(Event {
             time: land,
             kind: EventKind::Dispatch(idx, decision.instance, f),
         });
     }
 
-    /// Run the request stream to completion.
-    pub fn run(mut self, requests: &[Request]) -> SimResult {
-        let t0 = std::time::Instant::now();
-        let mut queue = EventQueue::new();
+    /// Seed the event store (arrivals, the fault schedule, the initial
+    /// view pulls) and build the run-local bookkeeping.  The push order
+    /// is part of the determinism contract: both event-store backends
+    /// assign tie-break ranks at push time, so the legacy and sharded
+    /// runners must seed identically — which they do, by sharing this.
+    fn init_run(&mut self, requests: &[Request],
+                push: &mut dyn FnMut(Event)) -> RunState {
         for (idx, r) in requests.iter().enumerate() {
             let f = self.sharder.assign(r);
-            queue.push(Event { time: r.arrival,
-                               kind: EventKind::Arrival(idx, f) });
+            push(Event { time: r.arrival,
+                         kind: EventKind::Arrival(idx, f) });
         }
         // Materialize the fault schedule: an explicit scripted plan
         // wins, else one is sampled from the config over the arrival
@@ -543,8 +615,8 @@ impl ClusterSim {
             None => FaultPlan::none(),
         };
         for ev in &plan.events {
-            queue.push(Event { time: ev.time,
-                               kind: EventKind::Fault(ev.kind) });
+            push(Event { time: ev.time,
+                         kind: EventKind::Fault(ev.kind) });
         }
         // Fault bookkeeping (all empty/unused on the healthy path).
         let id_to_idx: HashMap<RequestId, usize> = if plan.is_empty() {
@@ -552,44 +624,23 @@ impl ClusterSim {
         } else {
             requests.iter().enumerate().map(|(i, r)| (r.id, i)).collect()
         };
-        let mut fault_records: Vec<FaultRecord> = Vec::new();
-        // Open re-dispatches: request id → fault record that caused it.
-        let mut redispatch_fault: HashMap<RequestId, usize> = HashMap::new();
-        let mut latest_fault_of_instance: Vec<Option<usize>> =
-            vec![None; self.engines.len()];
-        // Gray faults tracked separately from fail-stop ones: a
-        // slowdown's restoration clock is closed by `InstanceRecover`,
-        // not by the provisioner's rejoin path.
-        let mut latest_slow_of_instance: Vec<Option<usize>> =
-            vec![None; self.engines.len()];
-        let mut latest_fault_of_frontend: Vec<Option<usize>> =
-            vec![None; self.frontends.len()];
-        // Requests with nowhere to go (no surviving front-end, or no
-        // instance the chosen front-end knows to be alive); retried
-        // when capacity returns, dropped if the run ends first.
-        let mut parked: Vec<usize> = Vec::new();
         // `sync_interval > 0` switches dispatch to bounded-staleness
         // views: seed every front-end's view with the (idle) t=0 state,
         // then arm the periodic pulls.  The pulls re-arm themselves while
         // arrivals remain, so the queue drains once the run is over.
         let stale_views = self.cfg.sync_interval > 0.0;
-        let mut arrivals_remaining = requests.len();
         // What a periodic view pull materializes: snapshots feed the
         // Block family's Predictor, load summaries feed the heuristics —
         // never both (the unread side would be cloned and ignored).
         let want_statuses = self.cfg.scheduler.is_predictive()
             || self.opts.reference_path;
         let want_loads = !self.cfg.scheduler.is_predictive();
-        // One `ViewSync(f)` may be in the queue per front-end at a time.
-        // Tracked so a `FrontEndRestart` can restart a sync chain that
-        // died with the crash without double-arming one that is still
-        // in flight (armed before the crash, popping after the restart).
         let mut viewsync_pending = vec![false; self.frontends.len()];
         if stale_views {
             for f in 0..self.frontends.len() {
                 self.sync_frontend(f, 0.0, want_statuses, want_loads);
-                queue.push(Event { time: self.cfg.sync_interval,
-                                   kind: EventKind::ViewSync(f) });
+                push(Event { time: self.cfg.sync_interval,
+                             kind: EventKind::ViewSync(f) });
                 viewsync_pending[f] = true;
             }
         }
@@ -598,612 +649,710 @@ impl ClusterSim {
         // queue and the run is byte-identical to a scale-up-only build.
         let scale_down = self.cfg.provision.enabled
             && self.cfg.provision.scale_down_idle > 0.0;
+        RunState {
+            stale_views,
+            want_statuses,
+            want_loads,
+            scale_down,
+            id_to_idx,
+            fault_records: Vec::new(),
+            redispatch_fault: HashMap::new(),
+            latest_fault_of_instance: vec![None; self.engines.len()],
+            latest_slow_of_instance: vec![None; self.engines.len()],
+            latest_fault_of_frontend: vec![None; self.frontends.len()],
+            parked: Vec::new(),
+            arrivals_remaining: requests.len(),
+            viewsync_pending,
+            metrics: MetricsCollector::new(),
+            probes: Vec::new(),
+            sampled: Vec::new(),
+            size_timeline: vec![(0.0, self.provisioner.active_count())],
+            events_processed: 0,
+        }
+    }
 
-        let mut metrics = MetricsCollector::new();
-        let mut probes = Vec::new();
-        let mut sampled = Vec::new();
-        let mut size_timeline = vec![(0.0, self.provisioner.active_count())];
-
+    /// Run the request stream to completion.
+    ///
+    /// `shards > 1` routes through the sharded event loop ([`sharded`]):
+    /// per-shard heaps under a conservative time-window synchronizer,
+    /// byte-identical to this single-heap loop by construction (pinned
+    /// by `prop_sharded_parity`).
+    pub fn run(mut self, requests: &[Request]) -> SimResult {
+        if self.cfg.shards > 1 {
+            return self.run_sharded(requests);
+        }
+        let t0 = std::time::Instant::now();
+        let mut queue = EventQueue::new();
+        let mut st = {
+            let mut push = |ev: Event| queue.push(ev);
+            self.init_run(requests, &mut push)
+        };
         while let Some(ev) = queue.pop() {
-            let now = ev.time;
-            match ev.kind {
-                EventKind::Arrival(idx, f0) => {
-                    arrivals_remaining -= 1;
-                    // Crash-aware sharding: an arrival headed to a dead
-                    // front-end is redirected to a survivor; untouched
-                    // arrivals keep exactly their healthy-run
-                    // assignment (the primary cursor never moves).
-                    let assigned = self.sharder.resolve(f0);
-                    if assigned.is_some() && assigned != Some(f0) {
-                        if let Some(k) = latest_fault_of_frontend[f0] {
-                            fault_records[k].redirected += 1;
-                        }
-                    }
-                    match assigned {
-                        Some(f) if self.can_dispatch(f, stale_views) => {
-                            self.dispatch_request(requests, idx, f, now,
-                                                  stale_views, &mut queue,
-                                                  &mut probes, &mut sampled);
-                        }
-                        _ => parked.push(idx),
-                    }
-                }
-                EventKind::Redispatch(idx) => {
-                    // A fault handed this request back: a surviving
-                    // front-end re-decides its placement from scratch.
-                    match self.sharder.next_alive() {
-                        Some(f) if self.can_dispatch(f, stale_views) => {
-                            self.dispatch_request(requests, idx, f, now,
-                                                  stale_views, &mut queue,
-                                                  &mut probes, &mut sampled);
-                        }
-                        _ => parked.push(idx),
+            st.events_processed += 1;
+            let mut push = |ev: Event| queue.push(ev);
+            self.handle_event(&mut st, requests, ev, &mut push);
+        }
+        self.finish_run(st, t0)
+    }
+
+    /// Execute one popped event: the simulator's entire transition
+    /// function.  Shared verbatim by the legacy single-heap loop and
+    /// the sharded runner's serialized paths; the windowed fast path
+    /// splits only the `Dispatch` arm across the coordinator/shard
+    /// boundary and replays completions ([`Self::apply_finish`]) at
+    /// window barriers.
+    fn handle_event(&mut self, st: &mut RunState, requests: &[Request],
+                    ev: Event, push: &mut dyn FnMut(Event)) {
+        let now = ev.time;
+        match ev.kind {
+            EventKind::Arrival(idx, f0) => {
+                st.arrivals_remaining -= 1;
+                // Crash-aware sharding: an arrival headed to a dead
+                // front-end is redirected to a survivor; untouched
+                // arrivals keep exactly their healthy-run
+                // assignment (the primary cursor never moves).
+                let assigned = self.sharder.resolve(f0);
+                if assigned.is_some() && assigned != Some(f0) {
+                    if let Some(k) = st.latest_fault_of_frontend[f0] {
+                        st.fault_records[k].redirected += 1;
                     }
                 }
-                EventKind::Dispatch(idx, instance, f) => {
-                    let req = &requests[idx];
-                    self.inbound[instance] -= 1;
-                    // Draining slots take no new *decisions* but still
-                    // serve dispatches already on the wire; only dead /
-                    // retired hosts — or blackholed routes — bounce.
-                    let landed = self.provisioner.serving(instance)
-                        && !self.link_drop[instance];
-                    self.frontends[f].dispatch_landed(instance, req, landed);
-                    if !landed {
-                        // Connection refused: the target died while the
-                        // request was on the wire.  The failed attempt
-                        // is itself a view update — the sender now
-                        // knows this instance is gone — and the request
-                        // bounces back through dispatch.
-                        if stale_views && self.frontends[f].alive {
-                            let fe = &mut self.frontends[f];
-                            fe.view.sync_instance(
-                                instance, &self.engines[instance], false,
-                                now);
-                            fe.clear_echo(instance);
+                match assigned {
+                    Some(f) if self.can_dispatch(f, st.stale_views) => {
+                        self.dispatch_request(st, requests, idx, f, now,
+                                              push);
+                    }
+                    _ => st.parked.push(idx),
+                }
+            }
+            EventKind::Redispatch(idx) => {
+                // A fault handed this request back: a surviving
+                // front-end re-decides its placement from scratch.
+                match self.sharder.next_alive() {
+                    Some(f) if self.can_dispatch(f, st.stale_views) => {
+                        self.dispatch_request(st, requests, idx, f, now,
+                                              push);
+                    }
+                    _ => st.parked.push(idx),
+                }
+            }
+            EventKind::Dispatch(idx, instance, f) => {
+                if self.dispatch_fe_land(st, requests, idx, instance, f,
+                                         now, push)
+                {
+                    self.dispatch_engine_land(st, requests, idx, instance,
+                                              f, now, push);
+                }
+            }
+            EventKind::StepDone(i, gen) => {
+                if gen != self.step_gen[i] {
+                    // Completion of a step that died with the host.
+                    return;
+                }
+                self.engines[i].finish_step();
+                self.last_busy[i] = now;
+                for f in self.engines[i].take_finished() {
+                    self.apply_finish(st, i, f, now, push);
+                }
+                self.kick_engine(i, push);
+                if self.engines[i].is_idle() && self.inbound[i] == 0 {
+                    if st.scale_down && self.provisioner.active()[i] {
+                        // The instance just went idle: probe again
+                        // after the idle window.  A stale probe (the
+                        // slot got work in between) no-ops.
+                        push(Event {
+                            time: now
+                                + self.cfg.provision.scale_down_idle,
+                            kind: EventKind::DrainCheck(i),
+                        });
+                    } else if self.provisioner.lifecycle().is_draining(i)
+                    {
+                        // A draining slot finished its last in-flight
+                        // work (stale front-ends may land dispatches
+                        // after the drain began): release it.
+                        self.provisioner
+                            .lifecycle_mut()
+                            .retire(i, now, "retire");
+                    }
+                }
+            }
+            EventKind::DrainCheck(i) => {
+                // Scale-down probe, armed when the instance went
+                // idle.  Only acts when the slot is still Active,
+                // stayed idle for the whole window, nothing is
+                // flying toward it, and the cluster is above its
+                // floor — otherwise the probe is a stale no-op (a
+                // fresh one re-arms at the next idle transition).
+                let window = self.cfg.provision.scale_down_idle;
+                let floor = self.cfg.provision.min_instances.max(1);
+                if st.scale_down
+                    && self.provisioner.active()[i]
+                    && self.engines[i].is_idle()
+                    && self.inbound[i] == 0
+                    && now - self.last_busy[i] >= window - 1e-9
+                    && self.provisioner.active_count() > floor
+                {
+                    let lc = self.provisioner.lifecycle_mut();
+                    lc.begin_drain(i, now, "scale-down");
+                    // Idle and nothing inbound: the drain grace is
+                    // already over — release the slot back to the
+                    // provisioning candidate pool.
+                    lc.retire(i, now, "retire");
+                    self.status_cache[i] = None;
+                    self.status_epochs[i] = u64::MAX;
+                    self.loads[i] = None;
+                    if st.stale_views {
+                        // Tell every live front-end the host left
+                        // the serving set (the reverse of the
+                        // boot-time announcement).
+                        for fe in &mut self.frontends {
+                            if fe.alive {
+                                fe.view.sync_instance(
+                                    i, &self.engines[i], false, now);
+                                fe.clear_echo(i);
+                            }
                         }
-                        self.in_flight_meta.remove(&req.id);
-                        if let Some(k) = latest_fault_of_instance[instance] {
-                            fault_records[k].redispatched += 1;
-                            // A request may bounce while already owed to
-                            // an earlier fault (lost by A, re-placed on
-                            // B, B died too): keep the *originating*
-                            // attribution so that fault's disruption
-                            // window keeps running until the request is
-                            // truly back on a healthy host.
-                            redispatch_fault.entry(req.id).or_insert(k);
+                    }
+                    st.size_timeline
+                        .push((now, self.provisioner.active_count()));
+                }
+            }
+            EventKind::InstanceReady => {
+                let activated = self.provisioner.activate_ready(now);
+                for &i in &activated {
+                    self.engines[i].advance_clock(now);
+                    self.kick_engine(i, push);
+                    // A rejoining / pre-warmed host coming up
+                    // restores the capacity its fault took out:
+                    // close the fault's restoration clock.
+                    if let Some(k) = st.latest_fault_of_instance[i] {
+                        let rec = &mut st.fault_records[k];
+                        if rec.restored_at.is_none() {
+                            rec.restored_at = Some(now);
                         }
-                        queue.push(Event {
+                    }
+                    // A host coming up (elastic scale-up or fault
+                    // rejoin) registers with every live front-end —
+                    // the boot-time announcement real serving
+                    // routers rely on.  Only meaningful over stale
+                    // views; the fresh path reads the active set
+                    // directly.
+                    if st.stale_views {
+                        for fe in &mut self.frontends {
+                            if fe.alive {
+                                fe.view.sync_instance(
+                                    i, &self.engines[i], true, now);
+                                fe.clear_echo(i);
+                            }
+                        }
+                    }
+                }
+                st.size_timeline
+                    .push((now, self.provisioner.active_count()));
+                if !activated.is_empty() && !st.parked.is_empty() {
+                    // Capacity returned: give every parked request
+                    // another shot at dispatch.
+                    for idx in st.parked.drain(..) {
+                        push(Event {
                             time: now,
                             kind: EventKind::Redispatch(idx),
                         });
-                        continue;
                     }
-                    self.engines[instance].enqueue(req, now);
-                    self.last_busy[instance] = now;
-                    if let Some(k) = redispatch_fault.remove(&req.id) {
-                        // A re-dispatched request is back on a healthy
-                        // instance: extend its fault's disruption window.
-                        fault_records[k].last_landed =
-                            fault_records[k].last_landed.max(now);
+                }
+            }
+            EventKind::ViewSync(f) => {
+                st.viewsync_pending[f] = false;
+                if !self.frontends[f].alive {
+                    // A crashed front-end pulls no views, and its
+                    // sync chain dies with it (a restart re-arms
+                    // one).
+                    return;
+                }
+                self.sync_frontend(f, now, st.want_statuses,
+                                   st.want_loads);
+                if !st.parked.is_empty()
+                    && self.can_dispatch(f, st.stale_views)
+                {
+                    // This front-end now sees live capacity: retry
+                    // everything that had nowhere to go.
+                    for idx in st.parked.drain(..) {
+                        push(Event {
+                            time: now,
+                            kind: EventKind::Redispatch(idx),
+                        });
                     }
-                    self.kick_engine(instance, &mut queue);
-                    if stale_views && self.cfg.sync_on_ack
+                }
+                if st.arrivals_remaining > 0 {
+                    push(Event {
+                        time: now + self.cfg.sync_interval,
+                        kind: EventKind::ViewSync(f),
+                    });
+                    st.viewsync_pending[f] = true;
+                }
+            }
+            EventKind::Fault(kind) => match kind {
+                FaultKind::FrontEndCrash(f) => {
+                    if f < self.frontends.len()
                         && self.frontends[f].alive
                     {
-                        // The enqueue ack carries the instance's current
-                        // state back to the dispatching front-end.
-                        let fe = &mut self.frontends[f];
-                        fe.view.sync_instance(
-                            instance, &self.engines[instance],
-                            self.provisioner.active()[instance], now);
-                        fe.clear_echo(instance);
+                        // The crash costs exactly this: the sharder
+                        // re-shards the dead front-end's arrival
+                        // slice and its cached view evaporates.
+                        // Nothing is re-dispatched, nothing is
+                        // recovered — there is no state to recover.
+                        self.frontends[f].crash();
+                        self.sharder.set_alive(f, false);
+                        st.latest_fault_of_frontend[f] =
+                            Some(st.fault_records.len());
+                        st.fault_records.push(FaultRecord::new(now, kind));
                     }
                 }
-                EventKind::StepDone(i, gen) => {
-                    if gen != self.step_gen[i] {
-                        // Completion of a step that died with the host.
-                        continue;
-                    }
-                    self.engines[i].finish_step();
-                    self.last_busy[i] = now;
-                    for f in self.engines[i].take_finished() {
-                        let info = self
-                            .in_flight_meta
-                            .remove(&f.id)
-                            .expect("finished unknown request");
-                        self.served_by[i] += 1;
-                        // Completion feedback only reaches a live
-                        // front-end (a crashed one has no scheduler
-                        // state left to update — nor does it need any).
-                        if self.frontends[info.frontend].alive {
-                            self.frontends[info.frontend]
-                                .on_finish(f.id, info.response_tokens);
-                        }
-                        let m = RequestMetrics {
-                            id: f.id,
-                            instance: i,
-                            prompt_tokens: info.prompt_tokens,
-                            response_tokens: info.response_tokens,
-                            arrival: info.arrival,
-                            dispatched: info.dispatched,
-                            prefill_start: f.prefill_start,
-                            first_token: f.first_token,
-                            finish: f.finish,
-                            preemptions: f.preemptions,
-                            predicted_latency: info.predicted,
-                            sched_overhead: info.overhead,
-                        };
-                        // Relief provisioning watches actual latency.
-                        if let Some(ready) =
-                            self.provisioner.observe_actual(now, m.e2e())
-                        {
-                            queue.push(Event {
-                                time: ready,
-                                kind: EventKind::InstanceReady,
-                            });
-                        }
-                        // Predictive straggler detection: every
-                        // completion's actual-vs-predicted e2e ratio
-                        // feeds its instance's residual EWMA.  Past the
-                        // trip threshold the slot is quarantined
-                        // (Active → Degraded): schedulers stop picking
-                        // it, in-flight work still completes, and a
-                        // probation probe re-admits it after
-                        // `restore_after`.
-                        let mut detect: Option<(f64, bool)> = None;
-                        if let (Some(tr), Some(pred)) =
-                            (self.tracker.as_mut(), info.predicted)
-                        {
-                            if pred.is_finite() && pred > 0.0 {
-                                tr.observe(i, m.e2e() / pred);
-                                detect = Some((tr.reported_factor(i),
-                                               tr.tripped(i)));
-                            }
-                        }
-                        if let Some((factor, tripped)) = detect {
-                            // Below the trip threshold the inflated
-                            // factor still reaches Block through the
-                            // snapshot (`perf_factor`): suspicious
-                            // slots are down-weighted before they are
-                            // quarantined.
-                            self.engines[i].set_reported_perf(factor);
-                            if tripped && self.provisioner.active()[i] {
-                                self.provisioner
-                                    .lifecycle_mut()
-                                    .degrade(i, now, "straggler");
-                                self.status_cache[i] = None;
-                                self.status_epochs[i] = u64::MAX;
-                                self.loads[i] = None;
-                                if stale_views {
-                                    // Quarantine is a view update: every
-                                    // live front-end drops the slot from
-                                    // its dispatch set.
-                                    for fe in &mut self.frontends {
-                                        if fe.alive {
-                                            fe.view.sync_instance(
-                                                i, &self.engines[i],
-                                                false, now);
-                                            fe.clear_echo(i);
-                                        }
-                                    }
-                                }
-                                size_timeline.push(
-                                    (now,
-                                     self.provisioner.active_count()));
-                                queue.push(Event {
-                                    time: now
-                                        + self.cfg.detect.restore_after,
-                                    kind: EventKind::RestoreCheck(i),
-                                });
-                            }
-                        }
-                        metrics.push(m);
-                    }
-                    self.kick_engine(i, &mut queue);
-                    if self.engines[i].is_idle() && self.inbound[i] == 0 {
-                        if scale_down && self.provisioner.active()[i] {
-                            // The instance just went idle: probe again
-                            // after the idle window.  A stale probe (the
-                            // slot got work in between) no-ops.
-                            queue.push(Event {
-                                time: now
-                                    + self.cfg.provision.scale_down_idle,
-                                kind: EventKind::DrainCheck(i),
-                            });
-                        } else if self.provisioner.lifecycle().is_draining(i)
-                        {
-                            // A draining slot finished its last in-flight
-                            // work (stale front-ends may land dispatches
-                            // after the drain began): release it.
-                            self.provisioner
-                                .lifecycle_mut()
-                                .retire(i, now, "retire");
-                        }
-                    }
-                }
-                EventKind::DrainCheck(i) => {
-                    // Scale-down probe, armed when the instance went
-                    // idle.  Only acts when the slot is still Active,
-                    // stayed idle for the whole window, nothing is
-                    // flying toward it, and the cluster is above its
-                    // floor — otherwise the probe is a stale no-op (a
-                    // fresh one re-arms at the next idle transition).
-                    let window = self.cfg.provision.scale_down_idle;
-                    let floor = self.cfg.provision.min_instances.max(1);
-                    if scale_down
-                        && self.provisioner.active()[i]
-                        && self.engines[i].is_idle()
-                        && self.inbound[i] == 0
-                        && now - self.last_busy[i] >= window - 1e-9
-                        && self.provisioner.active_count() > floor
+                FaultKind::InstanceFail(i) => {
+                    if i >= self.engines.len()
+                        || self.provisioner.is_failed(i)
                     {
-                        let lc = self.provisioner.lifecycle_mut();
-                        lc.begin_drain(i, now, "scale-down");
-                        // Idle and nothing inbound: the drain grace is
-                        // already over — release the slot back to the
-                        // provisioning candidate pool.
-                        lc.retire(i, now, "retire");
+                        // Unknown slot / already down: no-op.
+                    } else if !self.provisioner.serving(i) {
+                        // Not serving (backup, mid-cold-start, or
+                        // already retired): the slot dies silently —
+                        // nothing was lost.
+                        self.provisioner.fail(i, now);
+                    } else {
+                        self.provisioner.fail(i, now);
+                        // The replacement host boots nominal: its
+                        // residual history died with the old one.
+                        if let Some(tr) = self.tracker.as_mut() {
+                            tr.reset(i);
+                        }
+                        // Cancel the in-flight step's completion.
+                        self.step_gen[i] += 1;
+                        // Invalidate the central snapshot cache.
                         self.status_cache[i] = None;
                         self.status_epochs[i] = u64::MAX;
                         self.loads[i] = None;
-                        if stale_views {
-                            // Tell every live front-end the host left
-                            // the serving set (the reverse of the
-                            // boot-time announcement).
-                            for fe in &mut self.frontends {
-                                if fe.alive {
-                                    fe.view.sync_instance(
-                                        i, &self.engines[i], false, now);
-                                    fe.clear_echo(i);
-                                }
-                            }
-                        }
-                        size_timeline
-                            .push((now, self.provisioner.active_count()));
-                    }
-                }
-                EventKind::InstanceReady => {
-                    let activated = self.provisioner.activate_ready(now);
-                    for &i in &activated {
-                        self.engines[i].advance_clock(now);
-                        self.kick_engine(i, &mut queue);
-                        // A rejoining / pre-warmed host coming up
-                        // restores the capacity its fault took out:
-                        // close the fault's restoration clock.
-                        if let Some(k) = latest_fault_of_instance[i] {
-                            let rec = &mut fault_records[k];
-                            if rec.restored_at.is_none() {
-                                rec.restored_at = Some(now);
-                            }
-                        }
-                        // A host coming up (elastic scale-up or fault
-                        // rejoin) registers with every live front-end —
-                        // the boot-time announcement real serving
-                        // routers rely on.  Only meaningful over stale
-                        // views; the fresh path reads the active set
-                        // directly.
-                        if stale_views {
-                            for fe in &mut self.frontends {
-                                if fe.alive {
-                                    fe.view.sync_instance(
-                                        i, &self.engines[i], true, now);
-                                    fe.clear_echo(i);
-                                }
-                            }
-                        }
-                    }
-                    size_timeline.push((now, self.provisioner.active_count()));
-                    if !activated.is_empty() && !parked.is_empty() {
-                        // Capacity returned: give every parked request
-                        // another shot at dispatch.
-                        for idx in parked.drain(..) {
-                            queue.push(Event {
-                                time: now,
+                        let lost = self.engines[i].crash();
+                        let k = st.fault_records.len();
+                        let mut rec = FaultRecord::new(now, kind);
+                        rec.redispatched = lost.len() as u64;
+                        st.fault_records.push(rec);
+                        st.latest_fault_of_instance[i] = Some(k);
+                        for id in lost {
+                            self.in_flight_meta.remove(&id);
+                            st.redispatch_fault.insert(id, k);
+                            let idx = st.id_to_idx[&id];
+                            push(Event {
+                                time: now
+                                    + self.cfg.faults.detect_delay,
                                 kind: EventKind::Redispatch(idx),
                             });
                         }
-                    }
-                }
-                EventKind::ViewSync(f) => {
-                    viewsync_pending[f] = false;
-                    if !self.frontends[f].alive {
-                        // A crashed front-end pulls no views, and its
-                        // sync chain dies with it (a restart re-arms
-                        // one).
-                        continue;
-                    }
-                    self.sync_frontend(f, now, want_statuses, want_loads);
-                    if !parked.is_empty()
-                        && self.can_dispatch(f, stale_views)
-                    {
-                        // This front-end now sees live capacity: retry
-                        // everything that had nowhere to go.
-                        for idx in parked.drain(..) {
-                            queue.push(Event {
-                                time: now,
-                                kind: EventKind::Redispatch(idx),
-                            });
-                        }
-                    }
-                    if arrivals_remaining > 0 {
-                        queue.push(Event {
-                            time: now + self.cfg.sync_interval,
-                            kind: EventKind::ViewSync(f),
-                        });
-                        viewsync_pending[f] = true;
-                    }
-                }
-                EventKind::Fault(kind) => match kind {
-                    FaultKind::FrontEndCrash(f) => {
-                        if f < self.frontends.len()
-                            && self.frontends[f].alive
-                        {
-                            // The crash costs exactly this: the sharder
-                            // re-shards the dead front-end's arrival
-                            // slice and its cached view evaporates.
-                            // Nothing is re-dispatched, nothing is
-                            // recovered — there is no state to recover.
-                            self.frontends[f].crash();
-                            self.sharder.set_alive(f, false);
-                            latest_fault_of_frontend[f] =
-                                Some(fault_records.len());
-                            fault_records.push(FaultRecord::new(now, kind));
-                        }
-                    }
-                    FaultKind::InstanceFail(i) => {
-                        if i >= self.engines.len()
-                            || self.provisioner.is_failed(i)
-                        {
-                            // Unknown slot / already down: no-op.
-                        } else if !self.provisioner.serving(i) {
-                            // Not serving (backup, mid-cold-start, or
-                            // already retired): the slot dies silently —
-                            // nothing was lost.
-                            self.provisioner.fail(i, now);
-                        } else {
-                            self.provisioner.fail(i, now);
-                            // The replacement host boots nominal: its
-                            // residual history died with the old one.
-                            if let Some(tr) = self.tracker.as_mut() {
-                                tr.reset(i);
-                            }
-                            // Cancel the in-flight step's completion.
-                            self.step_gen[i] += 1;
-                            // Invalidate the central snapshot cache.
-                            self.status_cache[i] = None;
-                            self.status_epochs[i] = u64::MAX;
-                            self.loads[i] = None;
-                            let lost = self.engines[i].crash();
-                            let k = fault_records.len();
-                            let mut rec = FaultRecord::new(now, kind);
-                            rec.redispatched = lost.len() as u64;
-                            fault_records.push(rec);
-                            latest_fault_of_instance[i] = Some(k);
-                            for id in lost {
-                                self.in_flight_meta.remove(&id);
-                                redispatch_fault.insert(id, k);
-                                let idx = id_to_idx[&id];
-                                queue.push(Event {
-                                    time: now
-                                        + self.cfg.faults.detect_delay,
-                                    kind: EventKind::Redispatch(idx),
-                                });
-                            }
-                            size_timeline
-                                .push((now,
-                                       self.provisioner.active_count()));
-                            if self.cfg.faults.prewarm {
-                                // Failure-as-breach pre-warming: the
-                                // fault itself is the capacity-breach
-                                // signal — cold-start the replacement
-                                // immediately instead of waiting for
-                                // the fault plan's rejoin (which then
-                                // no-ops: the slot is already booting).
-                                if let Some(ready) =
-                                    self.provisioner.prewarm(
-                                        i, now,
-                                        self.cfg.faults
-                                            .rejoin_cold_start)
-                                {
-                                    queue.push(Event {
-                                        time: ready,
-                                        kind: EventKind::InstanceReady,
-                                    });
-                                }
-                            }
-                        }
-                    }
-                    FaultKind::InstanceRejoin(i) => {
-                        if i < self.engines.len() {
+                        st.size_timeline
+                            .push((now,
+                                   self.provisioner.active_count()));
+                        if self.cfg.faults.prewarm {
+                            // Failure-as-breach pre-warming: the
+                            // fault itself is the capacity-breach
+                            // signal — cold-start the replacement
+                            // immediately instead of waiting for
+                            // the fault plan's rejoin (which then
+                            // no-ops: the slot is already booting).
                             if let Some(ready) =
-                                self.provisioner.schedule_rejoin(
+                                self.provisioner.prewarm(
                                     i, now,
-                                    self.cfg.faults.rejoin_cold_start)
+                                    self.cfg.faults
+                                        .rejoin_cold_start)
                             {
-                                queue.push(Event {
+                                push(Event {
                                     time: ready,
                                     kind: EventKind::InstanceReady,
                                 });
                             }
                         }
                     }
-                    FaultKind::InstanceSlowdown { instance: i, factor } => {
-                        if i < self.engines.len()
-                            && !self.provisioner.is_failed(i)
+                }
+                FaultKind::InstanceRejoin(i) => {
+                    if i < self.engines.len() {
+                        if let Some(ready) =
+                            self.provisioner.schedule_rejoin(
+                                i, now,
+                                self.cfg.faults.rejoin_cold_start)
                         {
-                            // Gray failure: the host keeps serving, just
-                            // slower.  Nothing is lost, nothing bounces —
-                            // only step durations stretch from here on.
-                            // Whether anyone *notices* is the detector's
-                            // job.
-                            self.engines[i].set_slowdown(factor);
-                            latest_slow_of_instance[i] =
-                                Some(fault_records.len());
-                            fault_records.push(FaultRecord::new(now, kind));
-                        }
-                    }
-                    FaultKind::InstanceRecover(i) => {
-                        if i < self.engines.len() {
-                            self.engines[i].set_slowdown(1.0);
-                            if let Some(k) = latest_slow_of_instance[i] {
-                                let rec = &mut fault_records[k];
-                                if rec.restored_at.is_none() {
-                                    rec.restored_at = Some(now);
-                                }
-                            }
-                        }
-                    }
-                    FaultKind::LinkDelay { instance: i, delay } => {
-                        if i < self.engines.len() {
-                            // Every subsequent dispatch to `i` lands
-                            // `delay` late; in-wire dispatches keep
-                            // their original landing time.
-                            self.link_delay[i] = delay.max(0.0);
-                        }
-                    }
-                    FaultKind::LinkDrop(i) => {
-                        if i < self.engines.len() && !self.link_drop[i] {
-                            // Blackholed route: the host is healthy but
-                            // unreachable.  In-wire dispatches bounce on
-                            // landing (the bounce is the view update for
-                            // stale front-ends); central pulls skip the
-                            // route so fresh views stop offering it.
-                            self.link_drop[i] = true;
-                            self.status_cache[i] = None;
-                            self.status_epochs[i] = u64::MAX;
-                            self.loads[i] = None;
-                            latest_fault_of_instance[i] =
-                                Some(fault_records.len());
-                            fault_records.push(FaultRecord::new(now, kind));
-                        }
-                    }
-                    FaultKind::LinkRestore(i) => {
-                        if i < self.engines.len() {
-                            self.link_delay[i] = 0.0;
-                            if self.link_drop[i] {
-                                self.link_drop[i] = false;
-                                if let Some(k) =
-                                    latest_fault_of_instance[i]
-                                {
-                                    let rec = &mut fault_records[k];
-                                    if rec.restored_at.is_none() {
-                                        rec.restored_at = Some(now);
-                                    }
-                                }
-                                if stale_views
-                                    && self.provisioner.active()[i]
-                                {
-                                    // Re-announce the reachable route so
-                                    // stale views offer it again without
-                                    // waiting a sync interval.
-                                    for fe in &mut self.frontends {
-                                        if fe.alive {
-                                            fe.view.sync_instance(
-                                                i, &self.engines[i],
-                                                true, now);
-                                        }
-                                    }
-                                }
-                                for idx in parked.drain(..) {
-                                    queue.push(Event {
-                                        time: now,
-                                        kind: EventKind::Redispatch(idx),
-                                    });
-                                }
-                            }
-                        }
-                    }
-                    FaultKind::FrontEndRestart(f) => {
-                        if f < self.frontends.len()
-                            && !self.frontends[f].alive
-                        {
-                            // The crashed front-end returns after its
-                            // MTTR as a fresh process: same slot, same
-                            // deterministic scheduler seed, but a cold
-                            // view — statelessness means there is
-                            // nothing else to restore.
-                            let sched = frontend::frontend_scheduler(
-                                &self.cfg, self.engines.len(), f);
-                            let echo = self.cfg.local_echo
-                                && self.cfg.sync_interval > 0.0;
-                            self.frontends[f].restart(sched, echo);
-                            if self.opts.reference_path {
-                                self.frontends[f].set_reference_path(true);
-                            }
-                            self.sharder.set_alive(f, true);
-                            if let Some(k) = latest_fault_of_frontend[f] {
-                                let rec = &mut fault_records[k];
-                                if rec.restored_at.is_none() {
-                                    rec.restored_at = Some(now);
-                                }
-                            }
-                            if stale_views {
-                                // First pull immediately (the cold view
-                                // knows nothing), then back onto the
-                                // periodic chain.
-                                self.sync_frontend(f, now, want_statuses,
-                                                   want_loads);
-                                if arrivals_remaining > 0
-                                    && !viewsync_pending[f]
-                                {
-                                    queue.push(Event {
-                                        time: now + self.cfg.sync_interval,
-                                        kind: EventKind::ViewSync(f),
-                                    });
-                                    viewsync_pending[f] = true;
-                                }
-                            }
-                            if !parked.is_empty()
-                                && self.can_dispatch(f, stale_views)
-                            {
-                                for idx in parked.drain(..) {
-                                    queue.push(Event {
-                                        time: now,
-                                        kind: EventKind::Redispatch(idx),
-                                    });
-                                }
-                            }
-                        }
-                    }
-                },
-                EventKind::RestoreCheck(i) => {
-                    // Probation expires: a slot still in quarantine
-                    // returns to rotation with a clean slate.  If it
-                    // failed or drained in the meantime the probe is
-                    // stale — drop it.
-                    if self.provisioner.lifecycle().is_degraded(i) {
-                        self.provisioner
-                            .lifecycle_mut()
-                            .restore(i, now, "probation");
-                        if let Some(tr) = self.tracker.as_mut() {
-                            tr.reset(i);
-                        }
-                        self.engines[i].set_reported_perf(1.0);
-                        self.status_cache[i] = None;
-                        self.status_epochs[i] = u64::MAX;
-                        self.loads[i] = None;
-                        if stale_views {
-                            for fe in &mut self.frontends {
-                                if fe.alive {
-                                    fe.view.sync_instance(
-                                        i, &self.engines[i], true, now);
-                                }
-                            }
-                        }
-                        size_timeline
-                            .push((now, self.provisioner.active_count()));
-                        for idx in parked.drain(..) {
-                            queue.push(Event {
-                                time: now,
-                                kind: EventKind::Redispatch(idx),
+                            push(Event {
+                                time: ready,
+                                kind: EventKind::InstanceReady,
                             });
                         }
                     }
                 }
+                FaultKind::InstanceSlowdown { instance: i, factor } => {
+                    if i < self.engines.len()
+                        && !self.provisioner.is_failed(i)
+                    {
+                        // Gray failure: the host keeps serving, just
+                        // slower.  Nothing is lost, nothing bounces —
+                        // only step durations stretch from here on.
+                        // Whether anyone *notices* is the detector's
+                        // job.
+                        self.engines[i].set_slowdown(factor);
+                        st.latest_slow_of_instance[i] =
+                            Some(st.fault_records.len());
+                        st.fault_records.push(FaultRecord::new(now, kind));
+                    }
+                }
+                FaultKind::InstanceRecover(i) => {
+                    if i < self.engines.len() {
+                        self.engines[i].set_slowdown(1.0);
+                        if let Some(k) = st.latest_slow_of_instance[i] {
+                            let rec = &mut st.fault_records[k];
+                            if rec.restored_at.is_none() {
+                                rec.restored_at = Some(now);
+                            }
+                        }
+                    }
+                }
+                FaultKind::LinkDelay { instance: i, delay } => {
+                    if i < self.engines.len() {
+                        // Every subsequent dispatch to `i` lands
+                        // `delay` late; in-wire dispatches keep
+                        // their original landing time.
+                        self.link_delay[i] = delay.max(0.0);
+                    }
+                }
+                FaultKind::LinkDrop(i) => {
+                    if i < self.engines.len() && !self.link_drop[i] {
+                        // Blackholed route: the host is healthy but
+                        // unreachable.  In-wire dispatches bounce on
+                        // landing (the bounce is the view update for
+                        // stale front-ends); central pulls skip the
+                        // route so fresh views stop offering it.
+                        self.link_drop[i] = true;
+                        self.status_cache[i] = None;
+                        self.status_epochs[i] = u64::MAX;
+                        self.loads[i] = None;
+                        st.latest_fault_of_instance[i] =
+                            Some(st.fault_records.len());
+                        st.fault_records.push(FaultRecord::new(now, kind));
+                    }
+                }
+                FaultKind::LinkRestore(i) => {
+                    if i < self.engines.len() {
+                        self.link_delay[i] = 0.0;
+                        if self.link_drop[i] {
+                            self.link_drop[i] = false;
+                            if let Some(k) =
+                                st.latest_fault_of_instance[i]
+                            {
+                                let rec = &mut st.fault_records[k];
+                                if rec.restored_at.is_none() {
+                                    rec.restored_at = Some(now);
+                                }
+                            }
+                            if st.stale_views
+                                && self.provisioner.active()[i]
+                            {
+                                // Re-announce the reachable route so
+                                // stale views offer it again without
+                                // waiting a sync interval.
+                                for fe in &mut self.frontends {
+                                    if fe.alive {
+                                        fe.view.sync_instance(
+                                            i, &self.engines[i],
+                                            true, now);
+                                    }
+                                }
+                            }
+                            for idx in st.parked.drain(..) {
+                                push(Event {
+                                    time: now,
+                                    kind: EventKind::Redispatch(idx),
+                                });
+                            }
+                        }
+                    }
+                }
+                FaultKind::FrontEndRestart(f) => {
+                    if f < self.frontends.len()
+                        && !self.frontends[f].alive
+                    {
+                        // The crashed front-end returns after its
+                        // MTTR as a fresh process: same slot, same
+                        // deterministic scheduler seed, but a cold
+                        // view — statelessness means there is
+                        // nothing else to restore.
+                        let sched = frontend::frontend_scheduler(
+                            &self.cfg, self.engines.len(), f);
+                        let echo = self.cfg.local_echo
+                            && self.cfg.sync_interval > 0.0;
+                        self.frontends[f].restart(sched, echo);
+                        if self.opts.reference_path {
+                            self.frontends[f].set_reference_path(true);
+                        }
+                        self.sharder.set_alive(f, true);
+                        if let Some(k) = st.latest_fault_of_frontend[f] {
+                            let rec = &mut st.fault_records[k];
+                            if rec.restored_at.is_none() {
+                                rec.restored_at = Some(now);
+                            }
+                        }
+                        if st.stale_views {
+                            // First pull immediately (the cold view
+                            // knows nothing), then back onto the
+                            // periodic chain.
+                            self.sync_frontend(f, now, st.want_statuses,
+                                               st.want_loads);
+                            if st.arrivals_remaining > 0
+                                && !st.viewsync_pending[f]
+                            {
+                                push(Event {
+                                    time: now + self.cfg.sync_interval,
+                                    kind: EventKind::ViewSync(f),
+                                });
+                                st.viewsync_pending[f] = true;
+                            }
+                        }
+                        if !st.parked.is_empty()
+                            && self.can_dispatch(f, st.stale_views)
+                        {
+                            for idx in st.parked.drain(..) {
+                                push(Event {
+                                    time: now,
+                                    kind: EventKind::Redispatch(idx),
+                                });
+                            }
+                        }
+                    }
+                }
+            },
+            EventKind::RestoreCheck(i) => {
+                // Probation expires: a slot still in quarantine
+                // returns to rotation with a clean slate.  If it
+                // failed or drained in the meantime the probe is
+                // stale — drop it.
+                if self.provisioner.lifecycle().is_degraded(i) {
+                    self.provisioner
+                        .lifecycle_mut()
+                        .restore(i, now, "probation");
+                    if let Some(tr) = self.tracker.as_mut() {
+                        tr.reset(i);
+                    }
+                    self.engines[i].set_reported_perf(1.0);
+                    self.status_cache[i] = None;
+                    self.status_epochs[i] = u64::MAX;
+                    self.loads[i] = None;
+                    if st.stale_views {
+                        for fe in &mut self.frontends {
+                            if fe.alive {
+                                fe.view.sync_instance(
+                                    i, &self.engines[i], true, now);
+                            }
+                        }
+                    }
+                    st.size_timeline
+                        .push((now, self.provisioner.active_count()));
+                    for idx in st.parked.drain(..) {
+                        push(Event {
+                            time: now,
+                            kind: EventKind::Redispatch(idx),
+                        });
+                    }
+                }
             }
         }
+    }
 
+    /// Wire-side half of a `Dispatch` landing: the front-end learns the
+    /// outcome, a bounce re-enters dispatch.  Returns whether the
+    /// request landed; the engine-side half
+    /// ([`Self::dispatch_engine_land`]) must then run on the target —
+    /// immediately on the serial paths, via a same-key cross-shard
+    /// delivery on the windowed path.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_fe_land(&mut self, st: &mut RunState,
+                        requests: &[Request], idx: usize, instance: usize,
+                        f: usize, now: f64,
+                        push: &mut dyn FnMut(Event)) -> bool {
+        let req = &requests[idx];
+        self.inbound[instance] -= 1;
+        // Draining slots take no new *decisions* but still
+        // serve dispatches already on the wire; only dead /
+        // retired hosts — or blackholed routes — bounce.
+        let landed = self.provisioner.serving(instance)
+            && !self.link_drop[instance];
+        self.frontends[f].dispatch_landed(instance, req, landed);
+        if !landed {
+            // Connection refused: the target died while the
+            // request was on the wire.  The failed attempt
+            // is itself a view update — the sender now
+            // knows this instance is gone — and the request
+            // bounces back through dispatch.
+            if st.stale_views && self.frontends[f].alive {
+                let fe = &mut self.frontends[f];
+                fe.view.sync_instance(
+                    instance, &self.engines[instance], false,
+                    now);
+                fe.clear_echo(instance);
+            }
+            self.in_flight_meta.remove(&req.id);
+            if let Some(k) = st.latest_fault_of_instance[instance] {
+                st.fault_records[k].redispatched += 1;
+                // A request may bounce while already owed to
+                // an earlier fault (lost by A, re-placed on
+                // B, B died too): keep the *originating*
+                // attribution so that fault's disruption
+                // window keeps running until the request is
+                // truly back on a healthy host.
+                st.redispatch_fault.entry(req.id).or_insert(k);
+            }
+            push(Event {
+                time: now,
+                kind: EventKind::Redispatch(idx),
+            });
+        }
+        landed
+    }
+
+    /// Engine-side half of a landed `Dispatch`: enqueue on the target
+    /// instance and (optionally) piggyback a view refresh on the ack.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_engine_land(&mut self, st: &mut RunState,
+                            requests: &[Request], idx: usize,
+                            instance: usize, f: usize, now: f64,
+                            push: &mut dyn FnMut(Event)) {
+        let req = &requests[idx];
+        self.engines[instance].enqueue(req, now);
+        self.last_busy[instance] = now;
+        // A re-dispatched request is back on a healthy
+        // instance: extend its fault's disruption window.
+        st.dispatch_land_credit(req.id, now);
+        self.kick_engine(instance, push);
+        if st.stale_views && self.cfg.sync_on_ack
+            && self.frontends[f].alive
+        {
+            // The enqueue ack carries the instance's current
+            // state back to the dispatching front-end.
+            let fe = &mut self.frontends[f];
+            fe.view.sync_instance(
+                instance, &self.engines[instance],
+                self.provisioner.active()[instance], now);
+            fe.clear_echo(instance);
+        }
+    }
+
+    /// Apply one request completion — the body of `StepDone`'s
+    /// take-finished loop.  On the windowed sharded path completions
+    /// are buffered by the shard workers and replayed here at the
+    /// window barrier, in exact serial order.
+    fn apply_finish(&mut self, st: &mut RunState, i: usize,
+                    f: FinishedSeq, now: f64,
+                    push: &mut dyn FnMut(Event)) {
+        let info = self
+            .in_flight_meta
+            .remove(&f.id)
+            .expect("finished unknown request");
+        self.served_by[i] += 1;
+        // Completion feedback only reaches a live
+        // front-end (a crashed one has no scheduler
+        // state left to update — nor does it need any).
+        if self.frontends[info.frontend].alive {
+            self.frontends[info.frontend]
+                .on_finish(f.id, info.response_tokens);
+        }
+        let m = RequestMetrics {
+            id: f.id,
+            instance: i,
+            prompt_tokens: info.prompt_tokens,
+            response_tokens: info.response_tokens,
+            arrival: info.arrival,
+            dispatched: info.dispatched,
+            prefill_start: f.prefill_start,
+            first_token: f.first_token,
+            finish: f.finish,
+            preemptions: f.preemptions,
+            predicted_latency: info.predicted,
+            sched_overhead: info.overhead,
+        };
+        // Relief provisioning watches actual latency.
+        if let Some(ready) =
+            self.provisioner.observe_actual(now, m.e2e())
+        {
+            push(Event {
+                time: ready,
+                kind: EventKind::InstanceReady,
+            });
+        }
+        // Predictive straggler detection: every
+        // completion's actual-vs-predicted e2e ratio
+        // feeds its instance's residual EWMA.  Past the
+        // trip threshold the slot is quarantined
+        // (Active → Degraded): schedulers stop picking
+        // it, in-flight work still completes, and a
+        // probation probe re-admits it after
+        // `restore_after`.
+        let mut detect: Option<(f64, bool)> = None;
+        if let (Some(tr), Some(pred)) =
+            (self.tracker.as_mut(), info.predicted)
+        {
+            if pred.is_finite() && pred > 0.0 {
+                tr.observe(i, m.e2e() / pred);
+                detect = Some((tr.reported_factor(i),
+                               tr.tripped(i)));
+            }
+        }
+        if let Some((factor, tripped)) = detect {
+            // Below the trip threshold the inflated
+            // factor still reaches Block through the
+            // snapshot (`perf_factor`): suspicious
+            // slots are down-weighted before they are
+            // quarantined.
+            self.engines[i].set_reported_perf(factor);
+            if tripped && self.provisioner.active()[i] {
+                self.provisioner
+                    .lifecycle_mut()
+                    .degrade(i, now, "straggler");
+                self.status_cache[i] = None;
+                self.status_epochs[i] = u64::MAX;
+                self.loads[i] = None;
+                if st.stale_views {
+                    // Quarantine is a view update: every
+                    // live front-end drops the slot from
+                    // its dispatch set.
+                    for fe in &mut self.frontends {
+                        if fe.alive {
+                            fe.view.sync_instance(
+                                i, &self.engines[i],
+                                false, now);
+                            fe.clear_echo(i);
+                        }
+                    }
+                }
+                st.size_timeline.push(
+                    (now,
+                     self.provisioner.active_count()));
+                push(Event {
+                    time: now
+                        + self.cfg.detect.restore_after,
+                    kind: EventKind::RestoreCheck(i),
+                });
+            }
+        }
+        st.metrics.push(m);
+    }
+
+    /// Assemble the [`SimResult`] once the event store has drained.
+    /// Shared by the legacy and sharded runners.
+    fn finish_run(self, st: RunState, t0: std::time::Instant)
+                  -> SimResult {
+        let RunState {
+            mut fault_records,
+            redispatch_fault,
+            parked,
+            metrics,
+            probes,
+            sampled,
+            size_timeline,
+            events_processed,
+            ..
+        } = st;
         let instances = self
             .engines
             .iter()
@@ -1254,6 +1403,8 @@ impl ClusterSim {
                 .iter()
                 .map(|fe| fe.dispatched)
                 .collect(),
+            events_processed,
+            sync_stats: None,
             wall_time: t0.elapsed(),
         }
     }

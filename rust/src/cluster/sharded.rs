@@ -1,0 +1,445 @@
+//! Sharded event loop: a conservative time-window synchronizer over
+//! per-shard event heaps.
+//!
+//! `shards = 1` (the default) never enters this module.  With
+//! `shards > 1` the run's instances are split into contiguous chunks,
+//! each owning a private event heap ([`ShardedQueues`]), and the run
+//! alternates between two regimes:
+//!
+//! * **Serialized** — pop the globally minimal event and run the exact
+//!   legacy handler ([`ClusterSim::handle_event`]).  Used for every
+//!   barrier-class event (view syncs, faults, drain/restore probes:
+//!   their handlers read cross-shard state) and for every event when
+//!   the configuration is not [window-overlap
+//!   eligible](ClusterSim::window_overlap_eligible).  This path is
+//!   byte-equivalent to the single-heap loop by construction.
+//!
+//! * **Windowed** — all events strictly below a horizon `H` (the next
+//!   barrier event, capped at `window` virtual seconds past the
+//!   current minimum) execute in two phases.  Phase A runs the
+//!   coordinator events (arrivals, dispatch decisions, wire landings,
+//!   re-dispatches, activations) serially in key order; a landed
+//!   dispatch's engine half is handed to the owning shard under the
+//!   wire event's own key.  Phase B runs every shard's heap up to `H`
+//!   in parallel on the [`parallel_map`] pool — the paper's O(1000)
+//!   instance tier, where >95% of events are per-instance `StepDone`s.
+//!
+//! Determinism is rank bookkeeping.  Events pushed *inside* an open
+//! window get provisional ranks naming `(generating handler's key,
+//! push ordinal)` in the window's provenance ledger; the comparator
+//! resolves them recursively, which reproduces exactly the single-heap
+//! `(time, seq)` order because sequence numbers are assigned in handler
+//! execution order.  At the window barrier, surviving provisional keys
+//! are re-ranked to final sequence numbers in comparator order and
+//! request completions buffered by the shard workers are replayed
+//! through [`ClusterSim::apply_finish`] in the same merged order — so
+//! coordinator state (front-end feedback, metrics, fault credit) is
+//! updated exactly as the serial run would have, and the next window
+//! opens from an identical store.  The assigned numbers differ from
+//! the serial run's (in-window pops never consume one) but are
+//! order-isomorphic to it, which is all the comparator observes:
+//! `prop_sharded_parity` pins the resulting byte-equality.
+//!
+//! Causality is the conservative-synchronization invariant: a shard's
+//! local clock never passes `H`, and every cross-shard delivery
+//! carries a key at or above the window's opening minimum, so
+//! [`ShardedQueues::deliver_to_shard`]'s late-delivery counter stays
+//! zero.  `prop_window_causality` pins that, plus push/pop
+//! conservation, across random window sizes.
+
+use std::cmp::Ordering;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::core::request::Request;
+use crate::engine::{FinishedSeq, InstanceEngine};
+use crate::exec::roofline::RooflineModel;
+use crate::util::parallel::parallel_map;
+
+use super::events::{Event, EventKind, Key, KeyedHeap, ProvEntry,
+                    Provenance, Rank, ShardLedger, ShardedQueues};
+use super::{ClusterSim, RunState, SimResult};
+
+/// One shard worker's private world for a window: its heap, its slice
+/// of the provenance ledger, and exclusive `&mut` access to its
+/// contiguous chunk of engines (the borrow checker's proof that phase
+/// B is race-free).
+struct ShardCtx<'a> {
+    /// First global instance index of this shard's chunk.
+    base: usize,
+    /// This shard's arena space id (`shard + 1`; 0 is the coordinator).
+    own_space: u32,
+    heap: KeyedHeap,
+    space: Vec<ProvEntry>,
+    engines: &'a mut [InstanceEngine],
+    last_busy: &'a mut [f64],
+}
+
+/// A request completion observed by a shard worker, deferred to the
+/// window barrier where the coordinator replays it in serial order.
+struct FinishEffect {
+    /// Key of the `StepDone` that completed the request.
+    gen: Key,
+    /// Position within that handler's program order (completions and
+    /// pushes share one counter, exactly like the serial handler body).
+    ordinal: u32,
+    time: f64,
+    instance: usize,
+    fin: FinishedSeq,
+}
+
+/// What a shard worker hands back at the barrier.
+struct ShardOutcome {
+    effects: Vec<FinishEffect>,
+    popped: u64,
+    /// Pops that the serial loop would have counted as events of their
+    /// own (`StepDone`s, including stale-generation ones).  Delivered
+    /// dispatch halves are *not* counted here — their wire half was
+    /// already counted by phase A, and the split pair is one serial
+    /// event.
+    engine_events: u64,
+    /// Largest event time executed (`-inf` when the heap had nothing
+    /// below the horizon).
+    clock: f64,
+}
+
+/// Start the next engine step if the instance is free — the shard-side
+/// mirror of [`ClusterSim::kick_engine`], pushing with window-relative
+/// provenance instead of a final sequence number.
+fn kick_shard(ctx: &mut ShardCtx<'_>, coord: &[ProvEntry], gen: Key,
+              ordinal: &mut u32, i: usize, step_gen: &[u64],
+              cost: &RooflineModel) {
+    let li = i - ctx.base;
+    if ctx.engines[li].busy_until().is_none() {
+        if let Some(done) = ctx.engines[li].start_step(cost) {
+            let idx = ctx.space.len() as u32;
+            ctx.space.push(ProvEntry { gen, ordinal: *ordinal });
+            *ordinal += 1;
+            let key = Key {
+                time: done,
+                rank: Rank::Prov { space: ctx.own_space, idx },
+            };
+            let ev = Event {
+                time: done,
+                kind: EventKind::StepDone(i, step_gen[i]),
+            };
+            let led = ShardLedger {
+                coord,
+                own_space: ctx.own_space,
+                own: ctx.space.as_slice(),
+            };
+            ctx.heap.push(key, ev, &led);
+        }
+    }
+}
+
+/// Run one shard's heap up to (strictly below) the horizon `h`.
+///
+/// The bodies mirror the engine-side statements of the corresponding
+/// [`ClusterSim::handle_event`] arms; everything that touches
+/// coordinator state is either already done (the dispatch wire half,
+/// in phase A) or deferred ([`FinishEffect`]).  The legacy
+/// idle/scale-down epilogue of `StepDone` is a structural no-op here:
+/// the windowed path requires provisioning disabled, so the drain
+/// probe is never armed and no slot is ever draining.
+fn run_shard_window(ctx: &mut ShardCtx<'_>, h: Key, coord: &[ProvEntry],
+                    step_gen: &[u64], requests: &[Request],
+                    cost: &RooflineModel) -> ShardOutcome {
+    let mut out = ShardOutcome {
+        effects: Vec::new(),
+        popped: 0,
+        engine_events: 0,
+        clock: f64::NEG_INFINITY,
+    };
+    loop {
+        let popped = {
+            let led = ShardLedger {
+                coord,
+                own_space: ctx.own_space,
+                own: ctx.space.as_slice(),
+            };
+            match ctx.heap.peek_key() {
+                Some(k) if led.cmp_keys(k, h) == Ordering::Less => {
+                    ctx.heap.pop(&led)
+                }
+                _ => None,
+            }
+        };
+        let Some((key, ev)) = popped else { break };
+        out.popped += 1;
+        out.clock = out.clock.max(key.time);
+        let now = key.time;
+        let mut ordinal: u32 = 0;
+        match ev.kind {
+            EventKind::Dispatch(idx, instance, _f) => {
+                // Engine half of a landed dispatch, delivered by phase
+                // A under the wire event's own key (the wire half
+                // pushed nothing — it landed — so the shared push
+                // counter starts at 0 here, exactly as in the serial
+                // handler).
+                let li = instance - ctx.base;
+                ctx.engines[li].enqueue(&requests[idx], now);
+                ctx.last_busy[li] = now;
+                kick_shard(ctx, coord, key, &mut ordinal, instance,
+                           step_gen, cost);
+            }
+            EventKind::StepDone(i, gen) => {
+                out.engine_events += 1;
+                if gen != step_gen[i] {
+                    // Completion of a step that died with the host.
+                    continue;
+                }
+                let li = i - ctx.base;
+                ctx.engines[li].finish_step();
+                ctx.last_busy[li] = now;
+                for fin in ctx.engines[li].take_finished() {
+                    out.effects.push(FinishEffect {
+                        gen: key,
+                        ordinal,
+                        time: now,
+                        instance: i,
+                        fin,
+                    });
+                    ordinal += 1;
+                }
+                kick_shard(ctx, coord, key, &mut ordinal, i, step_gen,
+                           cost);
+            }
+            _ => unreachable!("non-engine event in a shard heap"),
+        }
+    }
+    out
+}
+
+impl ClusterSim {
+    /// Can windows overlap coordinator and shard work at all?
+    ///
+    /// The whitelist is exactly the set of knobs under which the
+    /// handler read/write sets factor cleanly across the boundary:
+    /// stale views only (`sync_interval > 0`: dispatch decisions read
+    /// front-end state, never live engines), no ack-piggybacked or
+    /// echoed view updates (both read engines at dispatch-landing
+    /// time), no straggler detector (completion-driven, reads
+    /// coordinator residual state mid-window), no auto-provisioning
+    /// (its latency observers run inside dispatch/finish handlers),
+    /// and no probe/sample capture (both snapshot live engines per
+    /// arrival).  Fault injection stays available — every fault is a
+    /// barrier-class event.  Ineligible runs still shard the store but
+    /// execute fully serialized, so `--shards` never changes results.
+    fn window_overlap_eligible(&self) -> bool {
+        self.cfg.sync_interval > 0.0
+            && self.cfg.window > 0.0
+            && !self.cfg.sync_on_ack
+            && !self.cfg.local_echo
+            && !self.cfg.detect.enabled
+            && !self.cfg.provision.enabled
+            && !self.opts.probes
+            && self.opts.sample_prob <= 0.0
+    }
+
+    /// The `shards > 1` run loop.  See the module docs for the
+    /// protocol; [`ClusterSim::run`] is the `shards = 1` twin.
+    pub(crate) fn run_sharded(mut self, requests: &[Request])
+                              -> SimResult {
+        let t0 = std::time::Instant::now();
+        let mut q = ShardedQueues::new(self.engines.len(),
+                                       self.cfg.shards);
+        let mut st = {
+            let mut push = |ev: Event| q.push_final(ev);
+            self.init_run(requests, &mut push)
+        };
+        let fast = q.n_shards() > 1 && self.window_overlap_eligible();
+        let window = self.cfg.window;
+        loop {
+            let next = match q.peek_min_key() {
+                Some(k) => k,
+                None => break,
+            };
+            // Horizon: the next barrier event or the span cap,
+            // whichever comes first.  Membership is exclusive
+            // (`key < H` executes inside the window), and the cap's
+            // `Final(0)` rank sorts before every live key at the same
+            // time — sequence numbers start at 1 — so a barrier event
+            // is never absorbed into the window it bounds.
+            let span = Key::fin(next.time + window, 0);
+            let h = match q.barrier.peek_key() {
+                Some(b) if q.arenas.cmp_keys(b, span) == Ordering::Less => b,
+                _ => span,
+            };
+            if !fast || q.arenas.cmp_keys(next, h) != Ordering::Less {
+                // Serialized: barrier events, and everything when the
+                // overlap preconditions don't hold.
+                let (_k, ev) = q.pop_min().expect("peeked a key");
+                q.stats.serial_events += 1;
+                st.events_processed += 1;
+                let mut push = |e: Event| q.push_final(e);
+                self.handle_event(&mut st, requests, ev, &mut push);
+                continue;
+            }
+            self.run_window(&mut st, requests, &mut q, h);
+        }
+        debug_assert!(q.is_empty(), "run ended with queued events");
+        let stats = q.stats;
+        let mut res = self.finish_run(st, t0);
+        res.sync_stats = Some(stats);
+        res
+    }
+
+    /// Coordinator half of one windowed event: the `Dispatch` arm is
+    /// split — wire landing here, engine landing delivered to the
+    /// owning shard under the same key — and every other control event
+    /// runs its full legacy handler.  In-window pushes record
+    /// `(this event's key, push ordinal)` provenance.
+    fn phase_a_event(&mut self, st: &mut RunState, requests: &[Request],
+                     q: &mut ShardedQueues, key: Key, ev: Event) {
+        let now = key.time;
+        let mut ordinal: u32 = 0;
+        if let EventKind::Dispatch(idx, instance, f) = ev.kind {
+            let landed = {
+                let mut push = |e: Event| {
+                    q.push_prov(e, key, ordinal);
+                    ordinal += 1;
+                };
+                self.dispatch_fe_land(st, requests, idx, instance, f,
+                                      now, &mut push)
+            };
+            if landed {
+                // The engine half runs on the owning shard; only the
+                // coordinator-side fault credit stays here (it is
+                // id-keyed and commutes with everything the shards
+                // do).
+                st.dispatch_land_credit(requests[idx].id, now);
+                q.deliver_to_shard(key, ev);
+            }
+        } else {
+            let mut push = |e: Event| {
+                q.push_prov(e, key, ordinal);
+                ordinal += 1;
+            };
+            self.handle_event(st, requests, ev, &mut push);
+        }
+    }
+
+    /// Execute one window `[current minimum, h)`: phase A
+    /// (coordinator, serial), phase B (shards, parallel), then the
+    /// barrier — re-rank surviving in-window pushes and replay the
+    /// workers' buffered completions, both in the comparator's merged
+    /// order.
+    fn run_window(&mut self, st: &mut RunState, requests: &[Request],
+                  q: &mut ShardedQueues, h: Key) {
+        q.stats.windows += 1;
+        // ---- Phase A: control events, in key order. -------------
+        loop {
+            let popped = match q.ctrl.peek_key() {
+                Some(k) if q.arenas.cmp_keys(k, h) == Ordering::Less => {
+                    q.ctrl.pop(&q.arenas)
+                }
+                _ => None,
+            };
+            let Some((key, ev)) = popped else { break };
+            q.stats.popped += 1;
+            st.events_processed += 1;
+            self.phase_a_event(st, requests, q, key, ev);
+        }
+        // ---- Phase B: shard heaps, in parallel. -----------------
+        // Each worker takes its heap, its (append-only) arena space,
+        // and `&mut` slices of its engine chunk; the coordinator
+        // space is frozen for the duration.  Cells hand each context
+        // to exactly one worker thread through the shared-cursor
+        // pool.
+        let n = q.n_shards();
+        let chunk = q.chunk();
+        let heaps = std::mem::take(&mut q.shards);
+        let mut space_iter =
+            std::mem::take(&mut q.arenas.spaces).into_iter();
+        let coord_space = space_iter.next().unwrap_or_default();
+        let own_spaces: Vec<Vec<ProvEntry>> = space_iter.collect();
+        let cells: Vec<Mutex<Option<ShardCtx<'_>>>> = heaps
+            .into_iter()
+            .zip(own_spaces)
+            .zip(self.engines.chunks_mut(chunk)
+                     .zip(self.last_busy.chunks_mut(chunk)))
+            .enumerate()
+            .map(|(s, ((heap, space), (engines, last_busy)))| {
+                Mutex::new(Some(ShardCtx {
+                    base: s * chunk,
+                    own_space: (s + 1) as u32,
+                    heap,
+                    space,
+                    engines,
+                    last_busy,
+                }))
+            })
+            .collect();
+        let jobs = self.cfg.jobs.max(1);
+        let coord = coord_space.as_slice();
+        let step_gen = self.step_gen.as_slice();
+        let cost = &self.cost;
+        let outcomes = parallel_map(jobs, &cells, |cell| {
+            let mut ctx = cell
+                .lock()
+                .expect("no worker panics")
+                .take()
+                .expect("each cell claimed once");
+            let out = run_shard_window(&mut ctx, h, coord, step_gen,
+                                       requests, cost);
+            (ctx, out)
+        });
+        let mut all_effects: Vec<FinishEffect> = Vec::new();
+        let mut shard_spaces: Vec<Vec<ProvEntry>> =
+            Vec::with_capacity(n);
+        for (s, (ctx, out)) in outcomes.into_iter().enumerate() {
+            q.shards.push(ctx.heap);
+            shard_spaces.push(ctx.space);
+            if out.clock > q.clocks[s] {
+                q.clocks[s] = out.clock;
+            }
+            q.stats.popped += out.popped;
+            st.events_processed += out.engine_events;
+            all_effects.extend(out.effects);
+        }
+        drop(cells);
+        let mut spaces = Vec::with_capacity(n + 1);
+        spaces.push(coord_space);
+        spaces.extend(shard_spaces);
+        q.arenas.spaces = spaces;
+        // ---- Barrier: merged replay in serial order. ------------
+        // Surviving provisional keys consume fresh sequence numbers
+        // and buffered completions run their coordinator half, in one
+        // merged `(generating key, ordinal)` order — precisely the
+        // order the serial loop interleaved pushes and completions
+        // in.
+        enum Replay {
+            Survivor(u32, u32),
+            Finish(FinishEffect),
+        }
+        let mut items: Vec<(Key, u32, Replay)> = q
+            .surviving_provs()
+            .into_iter()
+            .map(|((space, idx), e)| {
+                (e.gen, e.ordinal, Replay::Survivor(space, idx))
+            })
+            .collect();
+        for eff in all_effects {
+            items.push((eff.gen, eff.ordinal, Replay::Finish(eff)));
+        }
+        items.sort_by(|a, b| {
+            q.arenas.cmp_keys(a.0, b.0).then(a.1.cmp(&b.1))
+        });
+        let mut assign: HashMap<(u32, u32), u64> = HashMap::new();
+        for (_gen, _ord, item) in items {
+            match item {
+                Replay::Survivor(space, idx) => {
+                    assign.insert((space, idx), q.next_seq());
+                }
+                Replay::Finish(eff) => {
+                    let FinishEffect { time, instance, fin, .. } = eff;
+                    let mut push = |e: Event| q.push_final(e);
+                    self.apply_finish(st, instance, fin, time,
+                                      &mut push);
+                }
+            }
+        }
+        q.seal_window(&assign);
+    }
+}

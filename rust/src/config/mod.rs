@@ -557,6 +557,19 @@ pub struct ClusterConfig {
     /// scheduling decisions — the argmin is ordered by
     /// (predicted e2e, instance index).
     pub jobs: usize,
+    /// Event-loop shards for the mega-scale runner (`--shards`).
+    /// 1 = the legacy single-heap loop; `k > 1` partitions instances
+    /// into `k` contiguous chunks whose engine events advance in
+    /// parallel inside conservative time windows, coordinated at
+    /// window barriers.  Any value produces byte-identical results
+    /// (pinned by `prop_sharded_parity`); shard workers share the
+    /// `--jobs` thread budget.
+    pub shards: usize,
+    /// Maximum virtual-time span of one conservative window, seconds
+    /// (`--window`).  Only meaningful with `shards > 1`.  `0` degrades
+    /// to fully serialized merged execution — the always-correct
+    /// fallback the parity suite pins the windowed path against.
+    pub window: f64,
     /// Latency-model noise applied by the *engine* execution (the gap the
     /// predictor cannot see); 0 disables.
     pub exec_noise: f64,
@@ -582,6 +595,8 @@ impl Default for ClusterConfig {
             faults: FaultConfig::default(),
             detect: DetectConfig::default(),
             jobs: 1,
+            shards: 1,
+            window: 1.0,
             exec_noise: 0.06,
             seed: 42,
         }
@@ -637,6 +652,12 @@ impl ClusterConfig {
         }
         if self.jobs == 0 {
             bail!("jobs must be > 0 (1 = serial fan-out)");
+        }
+        if self.shards == 0 {
+            bail!("shards must be > 0 (1 = single-heap event loop)");
+        }
+        if !self.window.is_finite() || self.window < 0.0 {
+            bail!("window must be finite and >= 0 (0 = serialized merge)");
         }
         if self.frontends == 0 {
             bail!("frontends must be > 0 (1 = centralized dispatch)");
@@ -694,6 +715,8 @@ impl ClusterConfig {
         o.insert("faults", self.faults.to_json());
         o.insert("detect", self.detect.to_json());
         o.insert("jobs", self.jobs);
+        o.insert("shards", self.shards);
+        o.insert("window", self.window);
         o.insert("exec_noise", self.exec_noise);
         o.insert("seed", self.seed);
         Json::Obj(o)
@@ -810,6 +833,12 @@ impl ClusterConfig {
         if let Some(v) = j.opt("jobs") {
             c.jobs = v.as_usize()?;
         }
+        if let Some(v) = j.opt("shards") {
+            c.shards = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("window") {
+            c.window = v.as_f64()?;
+        }
         if let Some(v) = j.opt("exec_noise") {
             c.exec_noise = v.as_f64()?;
         }
@@ -883,6 +912,8 @@ mod tests {
         c.provision.scale_down_idle = 12.0;
         c.provision.min_instances = 2;
         c.jobs = 4;
+        c.shards = 3;
+        c.window = 0.5;
         c.frontends = 3;
         c.sync_interval = 2.5;
         c.shard_policy = ShardPolicy::Hash;
@@ -907,6 +938,8 @@ mod tests {
         assert!(c2.provision.enabled && !c2.provision.predictive);
         assert_eq!(c2.n_instances, c.n_instances);
         assert_eq!(c2.jobs, 4);
+        assert_eq!(c2.shards, 3);
+        assert!((c2.window - 0.5).abs() < 1e-12);
         assert_eq!(c2.frontends, 3);
         assert!((c2.sync_interval - 2.5).abs() < 1e-12);
         assert_eq!(c2.shard_policy, ShardPolicy::Hash);
@@ -1013,6 +1046,18 @@ mod tests {
 
         let mut c = ClusterConfig::default();
         c.jobs = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.shards = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.window = -0.5;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::default();
+        c.window = f64::NAN;
         assert!(c.validate().is_err());
 
         let mut c = ClusterConfig::default();

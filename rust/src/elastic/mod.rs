@@ -86,6 +86,11 @@ impl SlotState {
 /// because of `cause` ("scale-up", "scale-down", "retire", "fail",
 /// "rejoin", "prewarm", "bounce", "manifest-add", "manifest-remove",
 /// "straggler", "status-fail", "probation", "gray-fail").
+///
+/// Part of the byte-parity surface: `prop_sharded_parity` pins this
+/// log identical between `shards = 1` and `shards = k`, so lifecycle
+/// transitions must only ever be driven from serialized or
+/// barrier-class events — never from inside a shard's window.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LifecycleEvent {
     pub time: f64,

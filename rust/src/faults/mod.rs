@@ -135,6 +135,11 @@ impl FaultKind {
 }
 
 /// A scheduled fault.
+///
+/// In the sharded simulator every fault is a *barrier-class* event
+/// (`cluster::events::EventClass::Barrier`): it caps the window
+/// horizon, so its handler always observes a fully quiesced cluster —
+/// no shard's local clock is ever ahead of a fault it has yet to see.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultEvent {
     pub time: f64,

@@ -123,7 +123,7 @@ fn usage() -> ! {
          \x20          [--out DIR] [--seed N] [--jobs N] [--shard round-robin|hash|poisson] [--smoke]\n\
          \x20 simulate [--scheduler S] [--qps Q] [--requests N] [--instances K]\n\
          \x20          [--workload sharegpt|burstgpt] [--config FILE] [--manifest FILE]\n\
-         \x20          [--seed N] [--jobs N]\n\
+         \x20          [--seed N] [--jobs N] [--shards K] [--window S]\n\
          \x20          [--frontends N] [--sync-interval S] [--shard round-robin|hash|poisson]\n\
          \x20          [--sync-on-ack] [--local-echo] [--instance-mttf S] [--instance-mttr S]\n\
          \x20          [--frontend-mttf S] [--frontend-mttr S] [--detect-delay S]\n\
@@ -173,6 +173,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     }
     cfg.n_instances = args.flag_parse("instances", cfg.n_instances)?;
     cfg.jobs = args.flag_parse("jobs", cfg.jobs)?.max(1);
+    cfg.shards = args.flag_parse("shards", cfg.shards)?.max(1);
+    cfg.window = args.flag_parse("window", cfg.window)?;
     cfg.frontends = args.flag_parse("frontends", cfg.frontends)?.max(1);
     cfg.sync_interval = args.flag_parse("sync-interval", cfg.sync_interval)?;
     if let Some(s) = args.flag("shard") {
@@ -219,6 +221,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!("frontends={} sync_interval={}s shard={} dispatches={:?}",
                  cfg.frontends, cfg.sync_interval, cfg.shard_policy.name(),
                  res.frontend_dispatches);
+    }
+    if cfg.shards > 1 {
+        println!("shards={} window={}s events={} ({:.0} events/s wall)",
+                 cfg.shards, cfg.window, res.events_processed,
+                 res.events_processed as f64
+                     / res.wall_time.as_secs_f64().max(1e-9));
     }
     if cfg.faults.enabled() {
         let r = &res.recovery;

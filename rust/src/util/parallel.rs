@@ -1,41 +1,75 @@
 //! Deterministic ordered fan-out over scoped threads.
 //!
-//! One implementation ([`parallel_map`]) serves both parallel layers:
+//! One implementation ([`parallel_map`]) serves every parallel layer:
 //! Block's per-candidate prediction fan-out
-//! ([`crate::scheduler::BlockScheduler`]) and the experiment sweep
-//! driver ([`crate::experiments`]).  Work items are claimed from a
-//! shared atomic cursor — a long item cannot convoy a whole chunk
-//! behind it — and results are slotted back by input index, so output
-//! order (and therefore every downstream decision) is independent of
-//! thread scheduling.
+//! ([`crate::scheduler::BlockScheduler`]), the experiment sweep driver
+//! ([`crate::experiments`]), and the sharded simulator's phase-B shard
+//! workers ([`crate::cluster`]).  Work items are claimed from a shared
+//! atomic cursor — a long item cannot convoy a whole chunk behind it —
+//! and results are slotted back by input index, so output order (and
+//! therefore every downstream decision) is independent of thread
+//! scheduling.
 //!
 //! Threads are spawned per call rather than pooled: a spawn costs ~tens
 //! of µs while the workloads fanned out here (forward simulations,
-//! whole sweep points) cost hundreds of µs to seconds, and
-//! `std::thread::scope` lets the closure borrow from the caller's stack
-//! with no `'static` bounds or channel plumbing.
+//! shard windows, whole sweep points) cost hundreds of µs to seconds,
+//! and `std::thread::scope` lets the closure borrow from the caller's
+//! stack with no `'static` bounds or channel plumbing.
+//!
+//! One `--jobs` budget is shared across nesting levels: when a
+//! `parallel_map` call spawns `w` workers out of a tree budget of `k`
+//! threads, each worker's own nested `parallel_map` calls are clamped
+//! to `k / w`.  Without this, a sweep running shard workers (or Block
+//! fan-outs) inside its points would oversubscribe the machine with
+//! `jobs²` runnable threads.  The budget is advisory concurrency
+//! control only — results are a pure function of the items either way.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+thread_local! {
+    /// Worker-thread budget for the `parallel_map` call-tree rooted on
+    /// this thread.  `usize::MAX` = unconstrained (a fresh top-level
+    /// thread); workers spawned with a budget of `k` may keep at most
+    /// `k` threads of their own runnable.
+    static BUDGET: Cell<usize> = const { Cell::new(usize::MAX) };
+}
 
 /// Run `f` over every item on up to `jobs` worker threads, returning
 /// results in input order.  `jobs <= 1` runs inline with zero spawns.
 /// Deterministic as long as `f` is a pure function of the item.
+///
+/// Nested calls share the outermost `--jobs` budget (see the module
+/// docs): the bound is pinned by `nested_fanout_respects_one_budget`.
 pub fn parallel_map<T, R, F>(jobs: usize, items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
-    let jobs = jobs.max(1).min(items.len());
-    if jobs <= 1 {
-        return items.iter().map(f).collect();
+    let budget = BUDGET.with(|b| b.get());
+    // Total threads this call-tree may use: the caller's request,
+    // clamped by whatever budget an enclosing fan-out handed us.
+    let tree = jobs.max(1).min(budget.max(1));
+    let workers = tree.min(items.len());
+    if workers <= 1 {
+        // Inline on the calling thread; nested calls inside `f` may
+        // still use this subtree's full budget.
+        let prev = BUDGET.with(|b| b.replace(tree));
+        let out = items.iter().map(&f).collect();
+        BUDGET.with(|b| b.set(prev));
+        return out;
     }
+    // Split the remaining budget across the workers we spawn; the
+    // parent only blocks in join, so it holds no share.
+    let per_child = (tree / workers).max(1);
     let cursor = AtomicUsize::new(0);
     let mut slots: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
     std::thread::scope(|s| {
-        let handles: Vec<_> = (0..jobs)
+        let handles: Vec<_> = (0..workers)
             .map(|_| {
                 s.spawn(|| {
+                    BUDGET.with(|b| b.set(per_child));
                     let mut done = Vec::new();
                     loop {
                         let i = cursor.fetch_add(1, Ordering::Relaxed);
@@ -81,5 +115,53 @@ mod tests {
             ms
         });
         assert_eq!(out, items.to_vec());
+    }
+
+    #[test]
+    fn nested_fanout_respects_one_budget() {
+        // Oversubscription regression: an outer jobs=4 fan-out whose
+        // items each run their own jobs=4 fan-out must keep at most 4
+        // leaf executions concurrent — one --jobs budget across both
+        // levels, not jobs² threads.  (Before the shared budget, this
+        // peaked at 16.)
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let outer: Vec<u32> = (0..8).collect();
+        let inner: Vec<u32> = (0..16).collect();
+        parallel_map(4, &outer, |_| {
+            parallel_map(4, &inner, |&x| {
+                let l = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(l, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                live.fetch_sub(1, Ordering::SeqCst);
+                x
+            })
+        });
+        let peak = peak.load(Ordering::SeqCst);
+        assert!(peak <= 4, "nested fan-out oversubscribed: peak {peak}");
+        // The budget is scoped to the call-tree: a later top-level
+        // call is unconstrained again.
+        assert_eq!(BUDGET.with(|b| b.get()), usize::MAX);
+        let items: Vec<u64> = (0..32).collect();
+        let expect: Vec<u64> = items.iter().map(|x| x + 1).collect();
+        assert_eq!(parallel_map(8, &items, |&x| x + 1), expect);
+    }
+
+    #[test]
+    fn results_identical_under_any_budget_split() {
+        // Determinism across nesting shapes: outer×inner results match
+        // the fully serial run bit for bit.
+        let outer: Vec<u64> = (0..6).collect();
+        let serial: Vec<Vec<u64>> = outer
+            .iter()
+            .map(|&o| (0..10).map(|i| o * 100 + i).collect())
+            .collect();
+        for jobs in [1, 2, 4, 16] {
+            let got = parallel_map(jobs, &outer, |&o| {
+                let inner: Vec<u64> = (0..10).collect();
+                parallel_map(jobs, &inner, |&i| o * 100 + i)
+            });
+            assert_eq!(got, serial, "jobs={jobs}");
+        }
     }
 }

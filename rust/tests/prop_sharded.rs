@@ -1,0 +1,261 @@
+//! Property pins for the sharded simulator (`cluster::sharded`).
+//!
+//! Two laws hold for any configuration:
+//!
+//! * **Byte parity** — `shards = k` reproduces `shards = 1` exactly:
+//!   same placements, same per-request timestamps, same lifecycle log,
+//!   same telemetry.  Sharding is an execution strategy, never a model
+//!   change, whether a window ran split (phase A / phase B) or the run
+//!   fell back to the serialized path.
+//!
+//! * **Causality / conservation** — the conservative window
+//!   synchronizer never delivers a cross-shard event into a shard
+//!   whose local clock has passed the event's timestamp, and no event
+//!   is lost or duplicated at a barrier: once the store drains,
+//!   `pushed == popped` and `delivered_late == 0`, for any window size
+//!   including zero.
+
+use block::cluster::{run_experiment, SimOptions, SimResult};
+use block::config::{ClusterConfig, SchedulerKind, ShardPolicy,
+                    WorkloadConfig, WorkloadKind};
+use block::faults::{FaultEvent, FaultKind, FaultPlan};
+use block::testutil::prop::check;
+
+const KINDS: [SchedulerKind; 3] = [
+    SchedulerKind::Block,
+    SchedulerKind::MinQpm,
+    SchedulerKind::LlumnixMinus,
+];
+
+const SHARDS: [ShardPolicy; 3] = [
+    ShardPolicy::RoundRobin,
+    ShardPolicy::Hash,
+    ShardPolicy::Poisson,
+];
+
+fn run_sharded(cfg: &ClusterConfig, wl: &WorkloadConfig,
+               plan: &Option<FaultPlan>, shards: usize) -> SimResult {
+    let mut cfg = cfg.clone();
+    cfg.shards = shards;
+    run_experiment(
+        cfg,
+        wl,
+        SimOptions {
+            probes: false,
+            fault_plan: plan.clone(),
+            ..SimOptions::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Every observable a run produces, compared field by field (better
+/// panic messages than one mega-tuple).  `wall_time` is the only field
+/// excluded — it is the one thing sharding is *supposed* to change.
+fn assert_parity(base: &SimResult, got: &SimResult, k: usize) {
+    let recs = |r: &SimResult| {
+        r.metrics
+            .records
+            .iter()
+            .map(|m| {
+                (m.id, m.instance, m.prompt_tokens, m.response_tokens,
+                 m.arrival, m.dispatched, m.prefill_start,
+                 m.first_token, m.finish, m.preemptions,
+                 m.predicted_latency, m.sched_overhead)
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(recs(base), recs(got),
+               "request records diverged at shards={k}");
+    assert_eq!(base.events_processed, got.events_processed,
+               "event count diverged at shards={k}");
+    assert_eq!(base.frontend_dispatches, got.frontend_dispatches,
+               "front-end dispatch counts diverged at shards={k}");
+    assert_eq!(base.size_timeline, got.size_timeline,
+               "size timeline diverged at shards={k}");
+    assert_eq!(base.lifecycle, got.lifecycle,
+               "lifecycle log diverged at shards={k}");
+    let inst = |r: &SimResult| {
+        r.instances
+            .iter()
+            .map(|s| (s.steps, s.busy_time, s.preemptions,
+                      s.requests_served))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(inst(base), inst(got),
+               "instance stats diverged at shards={k}");
+    assert_eq!(base.recovery.dropped, got.recovery.dropped,
+               "drop count diverged at shards={k}");
+    assert_eq!(base.recovery.total_redispatched,
+               got.recovery.total_redispatched,
+               "redispatch count diverged at shards={k}");
+}
+
+/// A random scripted fault plan over `n_instances` x `frontends`,
+/// shaped like `prop_faults`' plans (deaths mostly followed by
+/// rejoins, occasional front-end crashes).
+fn random_plan(rng: &mut block::util::rng::Rng, n_instances: usize,
+               frontends: usize, span: f64) -> Option<FaultPlan> {
+    if rng.bernoulli(0.4) {
+        return None;
+    }
+    let mut events = Vec::new();
+    for i in 0..n_instances {
+        if rng.bernoulli(0.3) {
+            let t = rng.uniform(0.0, span);
+            events.push(FaultEvent {
+                time: t,
+                kind: FaultKind::InstanceFail(i),
+            });
+            if rng.bernoulli(0.8) {
+                events.push(FaultEvent {
+                    time: t + rng.uniform(0.5, span * 0.5),
+                    kind: FaultKind::InstanceRejoin(i),
+                });
+            }
+        }
+    }
+    for f in 0..frontends {
+        if f > 0 && rng.bernoulli(0.2) {
+            events.push(FaultEvent {
+                time: rng.uniform(0.0, span),
+                kind: FaultKind::FrontEndCrash(f),
+            });
+        }
+    }
+    Some(FaultPlan::scripted(events))
+}
+
+#[test]
+fn prop_sharded_parity() {
+    // shards = k must reproduce shards = 1 byte for byte, for every
+    // scheduler the paper compares, across random deployment shapes,
+    // fault plans and elasticity knobs.  Cases where the windowed
+    // overlap is ineligible (elasticity on, echo on, ...) exercise the
+    // serialized fallback's parity instead — the law is unconditional.
+    check(2024, 12, |rng, case| {
+        let kind = KINDS[case % KINDS.len()];
+        let n_instances = rng.randint(2, 9) as usize;
+        let frontends = rng.randint(1, 4) as usize;
+        let mut cfg = ClusterConfig {
+            n_instances,
+            scheduler: kind,
+            ..ClusterConfig::default()
+        };
+        cfg.frontends = frontends;
+        // Mostly distributed (the windowed path needs stale views);
+        // some centralized cases keep the fallback honest.
+        cfg.sync_interval = if rng.bernoulli(0.2) {
+            0.0
+        } else {
+            rng.uniform(0.3, 3.0)
+        };
+        cfg.shard_policy = SHARDS[rng.index(3)];
+        cfg.window = rng.uniform(0.05, 2.0);
+        cfg.jobs = rng.randint(1, 4) as usize;
+        cfg.sync_on_ack = rng.bernoulli(0.2);
+        cfg.local_echo = rng.bernoulli(0.2);
+        let wl = WorkloadConfig {
+            kind: WorkloadKind::ShareGpt,
+            qps: rng.uniform(4.0, 16.0),
+            n_requests: rng.randint(40, 120) as usize,
+            seed: rng.next_u64(),
+        };
+        let span = wl.n_requests as f64 / wl.qps;
+        if rng.bernoulli(0.25) {
+            cfg.provision.enabled = true;
+            cfg.provision.initial_instances = n_instances;
+            cfg.provision.max_instances = n_instances + rng.index(3);
+            cfg.provision.threshold = rng.uniform(5.0, 60.0);
+            cfg.provision.cold_start = rng.uniform(0.5, 3.0);
+            cfg.provision.cooldown = rng.uniform(1.0, 5.0);
+            if rng.bernoulli(0.5) {
+                cfg.provision.scale_down_idle = rng.uniform(1.0, span);
+            }
+        }
+        let plan = random_plan(rng, n_instances, frontends, span);
+
+        let base = run_sharded(&cfg, &wl, &plan, 1);
+        assert!(base.sync_stats.is_none(),
+                "shards=1 must run the legacy single-heap loop");
+        for k in [2usize, 3, 7] {
+            let got = run_sharded(&cfg, &wl, &plan, k);
+            assert_parity(&base, &got, k);
+            let stats = got.sync_stats
+                .expect("shards>1 must report synchronizer stats");
+            assert_eq!(stats.pushed, stats.popped,
+                       "event conservation violated at shards={k}");
+            assert_eq!(stats.delivered_late, 0,
+                       "late cross-shard delivery at shards={k}");
+        }
+    });
+}
+
+#[test]
+fn prop_window_causality() {
+    // The conservative synchronizer's own invariants, under random
+    // window sizes — including degenerate zero-width windows (fully
+    // serialized) and windows wider than the whole run (one barrier
+    // per ViewSync/fault).  No event is delivered into a shard's past,
+    // none is lost or duplicated at a barrier.
+    check(4242, 12, |rng, case| {
+        let kind = KINDS[case % KINDS.len()];
+        let n_instances = rng.randint(2, 10) as usize;
+        let frontends = rng.randint(1, 3) as usize;
+        let mut cfg = ClusterConfig {
+            n_instances,
+            scheduler: kind,
+            ..ClusterConfig::default()
+        };
+        cfg.frontends = frontends;
+        // Always window-overlap eligible: stale views, no echo/ack
+        // syncs, no detector, no provisioning — so the split phase
+        // A/phase B machinery (the thing under test) actually runs
+        // whenever window > 0.
+        cfg.sync_interval = rng.uniform(0.3, 2.0);
+        cfg.window = match rng.index(4) {
+            0 => 0.0,
+            1 => rng.uniform(0.01, 0.2),
+            2 => rng.uniform(0.2, 3.0),
+            _ => 1e6,
+        };
+        cfg.jobs = rng.randint(1, 4) as usize;
+        let wl = WorkloadConfig {
+            kind: WorkloadKind::ShareGpt,
+            qps: rng.uniform(4.0, 16.0),
+            n_requests: rng.randint(40, 120) as usize,
+            seed: rng.next_u64(),
+        };
+        let span = wl.n_requests as f64 / wl.qps;
+        let plan = random_plan(rng, n_instances, frontends, span);
+        let shards = rng.randint(2, 8) as usize;
+
+        let res = run_sharded(&cfg, &wl, &plan, shards);
+        let stats = res.sync_stats
+            .expect("shards>1 must report synchronizer stats");
+        assert_eq!(stats.delivered_late, 0,
+                   "a delivery entered a shard's past (window={})",
+                   cfg.window);
+        assert_eq!(stats.pushed, stats.popped,
+                   "an event was lost or duplicated at a barrier \
+                    (window={})", cfg.window);
+        assert!(stats.popped >= stats.serial_events,
+                "serial events are a subset of all pops");
+        if cfg.window == 0.0 {
+            // Zero-width windows degenerate to the serialized path.
+            assert_eq!(stats.windows, 0, "window=0 must not open windows");
+            assert_eq!(stats.delivered, 0);
+            assert_eq!(stats.popped, stats.serial_events);
+        } else {
+            // Eligible config, real window: every non-barrier minimum
+            // opens a window, and arrivals are never barrier events —
+            // the split machinery must actually have run.
+            assert!(stats.windows > 0,
+                    "eligible run with window={} opened no windows",
+                    cfg.window);
+        }
+        // Conservation of requests rides along.
+        assert_eq!(res.metrics.len() as u64 + res.recovery.dropped,
+                   wl.n_requests as u64);
+    });
+}
