@@ -399,6 +399,22 @@ pub struct SyncStats {
     pub serial_events: u64,
 }
 
+impl SyncStats {
+    /// Machine-readable form for the telemetry envelope every emitting
+    /// path carries (`simulate`, the experiment sweeps, the gateway's
+    /// `/status`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::JsonObj::new();
+        o.insert("pushed", self.pushed);
+        o.insert("popped", self.popped);
+        o.insert("delivered", self.delivered);
+        o.insert("delivered_late", self.delivered_late);
+        o.insert("windows", self.windows);
+        o.insert("serial_events", self.serial_events);
+        crate::util::json::Json::Obj(o)
+    }
+}
+
 /// The sharded runner's event store: control + barrier heaps owned by
 /// the coordinator, one heap per instance shard, the window's
 /// provenance ledger, and the global sequence counter that makes the

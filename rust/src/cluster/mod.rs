@@ -33,7 +33,7 @@ mod sharded;
 
 use std::collections::HashMap;
 
-use crate::config::ClusterConfig;
+use crate::config::{ClusterConfig, ObsConfig, TraceLevel};
 use crate::core::request::{Request, RequestId, RequestMetrics};
 use crate::engine::{FinishedSeq, InstanceEngine, InstanceLoad,
                     InstanceStatus};
@@ -41,10 +41,13 @@ use crate::exec::roofline::RooflineModel;
 use crate::faults::residual::ResidualTracker;
 use crate::faults::{FaultKind, FaultPlan, FaultRecord, RecoveryStats};
 use crate::metrics::MetricsCollector;
+use crate::obs::{DecisionRecord, DecisionTrace, FlightKind,
+                 FlightRecorder, MetricsRegistry, ObsReport};
 use crate::provision::AutoProvisioner;
 use crate::scheduler::{Decision, PredictorStats};
+use crate::util::json::{Json, JsonObj};
 use crate::util::rng::Rng;
-use events::{Event, EventKind, EventQueue};
+use events::{Arenas, Event, EventKind, EventQueue, Key, Provenance};
 use frontend::{ArrivalSharder, FrontEnd};
 
 /// Per-arrival cluster probe (Figure 7's memory telemetry).
@@ -112,7 +115,65 @@ pub struct SimResult {
     /// deliveries, and the late-delivery count that must stay zero —
     /// the observable pinned by `prop_window_causality`.
     pub sync_stats: Option<events::SyncStats>,
+    /// Observability capture — the flight-recorder ring, the decision
+    /// trace, and the end-of-run metrics snapshot.  `Some` only when
+    /// any [`crate::config::ObsConfig`] component was enabled; `None`
+    /// runs are byte-identical to pre-observability builds (pinned by
+    /// `obs_disabled_reproduces_baseline_exactly`).
+    pub obs: Option<ObsReport>,
     pub wall_time: std::time::Duration,
+}
+
+impl SimResult {
+    /// The uniform run-telemetry envelope every emitting path carries
+    /// (`simulate`, the experiment sweeps, the wire gateway's
+    /// `/status`): events processed, synchronizer conservation counters
+    /// (object, or null for single-shard runs), fault-recovery stats,
+    /// and the cluster-size timeline.
+    pub fn telemetry_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("events_processed", self.events_processed);
+        o.insert(
+            "sync_stats",
+            match &self.sync_stats {
+                Some(s) => s.to_json(),
+                None => Json::Null,
+            },
+        );
+        o.insert("recovery", self.recovery.to_json());
+        o.insert(
+            "size_timeline",
+            self.size_timeline
+                .iter()
+                .map(|&(t, n)| {
+                    let mut p = JsonObj::new();
+                    p.insert("t", t);
+                    p.insert("active", n);
+                    Json::Obj(p)
+                })
+                .collect::<Vec<_>>(),
+        );
+        o.insert("frontend_dispatches",
+                 self.frontend_dispatches.to_vec());
+        o.insert("wall_time_s", self.wall_time.as_secs_f64());
+        Json::Obj(o)
+    }
+
+    /// Full machine-readable result: latency summary plus the
+    /// telemetry envelope (and predictor / observability summaries
+    /// when the run produced them).
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("summary", self.metrics.summary().to_json());
+        o.insert("telemetry", self.telemetry_json());
+        if let Some(ps) = &self.predictor_stats {
+            o.insert("predictor_stats", ps.to_json());
+        }
+        if let Some(obs) = &self.obs {
+            o.insert("obs", obs.summary_json());
+        }
+        Json::Obj(o)
+    }
 }
 
 /// Runtime options orthogonal to the cluster config.
@@ -209,6 +270,8 @@ pub(crate) struct RunState {
     sampled: Vec<SampledArrival>,
     size_timeline: Vec<(f64, usize)>,
     events_processed: u64,
+    /// Observability hooks (fully inert with the default config).
+    obs: ObsState,
 }
 
 impl RunState {
@@ -219,6 +282,161 @@ impl RunState {
         if let Some(k) = self.redispatch_fault.remove(&id) {
             self.fault_records[k].last_landed =
                 self.fault_records[k].last_landed.max(now);
+        }
+    }
+}
+
+/// One window-buffered flight event.  `(gen, phase, idx)` is its serial
+/// position: the generating handler's synchronizer key, then the
+/// handler-internal phase (0 = milestones emitted inside the handler,
+/// 1 = the barrier's finish replay), then emission order within the
+/// phase.
+struct BufferedFlight {
+    gen: Key,
+    phase: u8,
+    idx: u32,
+    time: f64,
+    kind: FlightKind,
+}
+
+/// Observability bookkeeping threaded through the event handlers.
+///
+/// Fully inert under the default [`ObsConfig`]: every component is
+/// `None`, every hook reduces to an `Option` check, and no simulator
+/// state (RNG, event queue, engines, views) is ever touched — which is
+/// how the disabled-obs byte-parity contract holds.
+///
+/// The window fields exist for the sharded fast path ([`sharded`]):
+/// flight events emitted inside a synchronizer window are buffered
+/// under the generating event's [`Key`] and flushed at the barrier in
+/// exact serial order, so the recorded stream is identical across
+/// `shards` settings (pinned by `prop_trace_parity_under_shards`).
+pub(crate) struct ObsState {
+    recorder: Option<FlightRecorder>,
+    trace: Option<DecisionTrace>,
+    registry: Option<MetricsRegistry>,
+    /// Record per-step milestones (trace level `full`).
+    record_steps: bool,
+    /// `Some((gen, phase))` while executing inside a window.
+    win_tag: Option<(Key, u8)>,
+    win_idx: u32,
+    win_buf: Vec<BufferedFlight>,
+}
+
+impl ObsState {
+    fn new(cfg: &ObsConfig) -> Self {
+        ObsState {
+            recorder: if cfg.flight_enabled() {
+                Some(FlightRecorder::new(cfg.ring_capacity))
+            } else {
+                None
+            },
+            trace: if cfg.trace != TraceLevel::Off {
+                Some(DecisionTrace::new())
+            } else {
+                None
+            },
+            registry: if cfg.metrics {
+                Some(MetricsRegistry::new())
+            } else {
+                None
+            },
+            record_steps: cfg.trace == TraceLevel::Full,
+            win_tag: None,
+            win_idx: 0,
+            win_buf: Vec::new(),
+        }
+    }
+
+    /// Any component live?
+    fn enabled(&self) -> bool {
+        self.recorder.is_some() || self.trace.is_some()
+            || self.registry.is_some()
+    }
+
+    /// Step milestones wanted (trace level `full` with a live ring)?
+    fn steps_on(&self) -> bool {
+        self.record_steps && self.recorder.is_some()
+    }
+
+    /// Record a lifecycle milestone at `time`.  Inside a window the
+    /// event is buffered under the current provenance tag; outside
+    /// (the single-heap loop, serialized pops, barrier replays with no
+    /// tag) it appends directly — pop order *is* serial order there.
+    fn flight(&mut self, time: f64, kind: FlightKind) {
+        let Some(rec) = self.recorder.as_mut() else { return };
+        match self.win_tag {
+            Some((gen, phase)) => {
+                self.win_buf.push(BufferedFlight {
+                    gen,
+                    phase,
+                    idx: self.win_idx,
+                    time,
+                    kind,
+                });
+                self.win_idx += 1;
+            }
+            None => rec.record(time, kind),
+        }
+    }
+
+    /// Enter window context for a phase-A handler keyed `gen`.
+    fn win_begin(&mut self, gen: Key, phase: u8) {
+        if self.recorder.is_some() {
+            self.win_tag = Some((gen, phase));
+            self.win_idx = 0;
+        }
+    }
+
+    /// Enter window context at an explicit in-handler position (the
+    /// barrier's finish replay carries each effect's own ordinal).
+    fn win_begin_at(&mut self, gen: Key, phase: u8, idx: u32) {
+        if self.recorder.is_some() {
+            self.win_tag = Some((gen, phase));
+            self.win_idx = idx;
+        }
+    }
+
+    /// Leave window context (events append directly again).
+    fn win_end(&mut self) {
+        self.win_tag = None;
+    }
+
+    /// Buffer a shard worker's step milestone under the `StepDone`'s
+    /// key.  Phase 0 with idx 0: the serial handler records the step
+    /// milestone before that step's finishes (which replay as phase 1).
+    fn buffer_step(&mut self, gen: Key, time: f64, instance: usize) {
+        if self.steps_on() {
+            self.win_buf.push(BufferedFlight {
+                gen,
+                phase: 0,
+                idx: 0,
+                time,
+                kind: FlightKind::Step { instance },
+            });
+        }
+    }
+
+    /// Barrier flush: sort this window's buffered events into exact
+    /// serial order and append them to the ring.  Must run while the
+    /// window's provenance arenas are intact (before `seal_window`) —
+    /// provisional generating keys resolve through them.
+    fn flush_window(&mut self, arenas: &Arenas) {
+        self.win_tag = None;
+        if self.win_buf.is_empty() {
+            return;
+        }
+        let mut buf = std::mem::take(&mut self.win_buf);
+        buf.sort_by(|a, b| {
+            arenas
+                .cmp_keys(a.gen, b.gen)
+                .then(a.phase.cmp(&b.phase))
+                .then(a.idx.cmp(&b.idx))
+        });
+        if let Some(rec) = self.recorder.as_mut() {
+            for bf in buf {
+                rec.record(bf.time, bf.kind);
+            }
         }
     }
 }
@@ -481,6 +699,14 @@ impl ClusterSim {
             // dispatch decision sees the stale view.
             self.refresh_loads();
         }
+        // Counter snapshot bracketing the pick: the decision trace's
+        // per-decision cache/memo provenance is the delta across the
+        // call.  Only taken when tracing is on.
+        let stats_before = if st.obs.trace.is_some() {
+            self.frontends[f].predictor_stats()
+        } else {
+            None
+        };
         let decision = {
             let via_view = stale_views || self.opts.cloned_view_path;
             let fe = &mut self.frontends[f];
@@ -558,6 +784,42 @@ impl ClusterSim {
         let mut overhead = decision.overhead;
         if stale_views && self.cfg.sync_on_ack {
             overhead += self.cfg.overhead.sync_ack_cost;
+        }
+
+        st.obs.flight(now, FlightKind::Decision {
+            id: req.id,
+            frontend: f,
+            instance: decision.instance,
+            predicted_e2e: decision.predicted_e2e,
+        });
+        if st.obs.trace.is_some() {
+            let stats_delta =
+                match (self.frontends[f].predictor_stats(), stats_before) {
+                    (Some(after), Some(before)) => {
+                        Some(after.delta_since(&before))
+                    }
+                    (after, _) => after,
+                };
+            if let Some(tr) = st.obs.trace.as_mut() {
+                tr.record(DecisionRecord {
+                    id: req.id,
+                    arrival: req.arrival,
+                    time: now,
+                    frontend: f,
+                    chosen: decision.instance,
+                    overhead,
+                    predicted_e2e: decision.predicted_e2e,
+                    candidates: decision.all_predictions.clone(),
+                    stats_delta,
+                    actual_e2e: None,
+                    actual_instance: None,
+                });
+            }
+        }
+        if let Some(reg) = st.obs.registry.as_mut() {
+            let lbl = decision.instance.to_string();
+            reg.inc("block_dispatches_total",
+                    &[("instance", lbl.as_str())]);
         }
 
         // The request is now in transit to its instance until the
@@ -668,6 +930,7 @@ impl ClusterSim {
             sampled: Vec::new(),
             size_timeline: vec![(0.0, self.provisioner.active_count())],
             events_processed: 0,
+            obs: ObsState::new(&self.cfg.obs),
         }
     }
 
@@ -704,9 +967,35 @@ impl ClusterSim {
     fn handle_event(&mut self, st: &mut RunState, requests: &[Request],
                     ev: Event, push: &mut dyn FnMut(Event)) {
         let now = ev.time;
+        // Lifecycle transitions are scattered across the arms below
+        // (and only ever happen on serialized / barrier-class events —
+        // the byte-parity surface): record them as flights by diffing
+        // the transition log across the handler instead of hooking
+        // every call site.
+        let lc_mark = if st.obs.recorder.is_some() {
+            self.provisioner.lifecycle().log.len()
+        } else {
+            0
+        };
+        if let EventKind::Fault(kind) = ev.kind {
+            st.obs.flight(now, FlightKind::Fault {
+                kind: kind.name(),
+                target: kind.target(),
+            });
+            if let Some(reg) = st.obs.registry.as_mut() {
+                reg.inc("block_faults_total", &[("kind", kind.name())]);
+            }
+        }
         match ev.kind {
             EventKind::Arrival(idx, f0) => {
                 st.arrivals_remaining -= 1;
+                st.obs.flight(now, FlightKind::Arrival {
+                    id: requests[idx].id,
+                    frontend: f0,
+                });
+                if let Some(reg) = st.obs.registry.as_mut() {
+                    reg.inc("block_arrivals_total", &[]);
+                }
                 // Crash-aware sharding: an arrival headed to a dead
                 // front-end is redirected to a survivor; untouched
                 // arrivals keep exactly their healthy-run
@@ -728,6 +1017,9 @@ impl ClusterSim {
             EventKind::Redispatch(idx) => {
                 // A fault handed this request back: a surviving
                 // front-end re-decides its placement from scratch.
+                if let Some(reg) = st.obs.registry.as_mut() {
+                    reg.inc("block_redispatches_total", &[]);
+                }
                 match self.sharder.next_alive() {
                     Some(f) if self.can_dispatch(f, st.stale_views) => {
                         self.dispatch_request(st, requests, idx, f, now,
@@ -751,6 +1043,9 @@ impl ClusterSim {
                 }
                 self.engines[i].finish_step();
                 self.last_busy[i] = now;
+                if st.obs.steps_on() {
+                    st.obs.flight(now, FlightKind::Step { instance: i });
+                }
                 for f in self.engines[i].take_finished() {
                     self.apply_finish(st, i, f, now, push);
                 }
@@ -870,6 +1165,11 @@ impl ClusterSim {
                 }
                 self.sync_frontend(f, now, st.want_statuses,
                                    st.want_loads);
+                if let Some(reg) = st.obs.registry.as_mut() {
+                    let lbl = f.to_string();
+                    reg.inc("block_view_syncs_total",
+                            &[("frontend", lbl.as_str())]);
+                }
                 if !st.parked.is_empty()
                     && self.can_dispatch(f, st.stale_views)
                 {
@@ -1158,6 +1458,15 @@ impl ClusterSim {
                 }
             }
         }
+        if st.obs.recorder.is_some() {
+            let log = &self.provisioner.lifecycle().log;
+            for e in log.iter().skip(lc_mark) {
+                st.obs.flight(e.time, FlightKind::Lifecycle {
+                    instance: e.slot,
+                    state: e.state,
+                });
+            }
+        }
     }
 
     /// Wire-side half of a `Dispatch` landing: the front-end learns the
@@ -1179,7 +1488,15 @@ impl ClusterSim {
         let landed = self.provisioner.serving(instance)
             && !self.link_drop[instance];
         self.frontends[f].dispatch_landed(instance, req, landed);
+        st.obs.flight(now, if landed {
+            FlightKind::Land { id: req.id, instance }
+        } else {
+            FlightKind::Bounce { id: req.id, instance }
+        });
         if !landed {
+            if let Some(reg) = st.obs.registry.as_mut() {
+                reg.inc("block_bounces_total", &[]);
+            }
             // Connection refused: the target died while the
             // request was on the wire.  The failed attempt
             // is itself a view update — the sender now
@@ -1335,6 +1652,19 @@ impl ClusterSim {
                 });
             }
         }
+        st.obs.flight(now, FlightKind::Finish {
+            id: f.id,
+            instance: i,
+            e2e: m.e2e(),
+        });
+        if let Some(tr) = st.obs.trace.as_mut() {
+            tr.annotate(f.id, i, m.e2e());
+        }
+        if let Some(reg) = st.obs.registry.as_mut() {
+            reg.inc("block_finishes_total", &[]);
+            reg.observe("block_e2e_seconds", &[], m.e2e());
+            reg.observe("block_ttft_seconds", &[], m.ttft());
+        }
         st.metrics.push(m);
     }
 
@@ -1351,6 +1681,7 @@ impl ClusterSim {
             sampled,
             size_timeline,
             events_processed,
+            mut obs,
             ..
         } = st;
         let instances = self
@@ -1388,6 +1719,39 @@ impl ClusterSim {
             fault_records, parked.len() as u64, &metrics,
             self.cfg.faults.report_window);
 
+        // End-of-run gauges: point-in-time state the event hooks can't
+        // see (cluster size, slot states, predictor cache footprint).
+        if let Some(reg) = obs.registry.as_mut() {
+            reg.gauge_set("block_active_instances", &[],
+                          self.provisioner.active_count() as f64);
+            for (state, n) in self.provisioner.lifecycle().state_counts() {
+                reg.gauge_set("block_slots", &[("state", state)],
+                              n as f64);
+            }
+            if let Some(ps) = &predictor_stats {
+                reg.gauge_set("block_predictor_cache_hit_rate", &[],
+                              ps.cache_hit_rate());
+                reg.gauge_set("block_predictor_memo_hit_rate", &[],
+                              ps.memo_hit_rate());
+                reg.gauge_set("block_predictor_pool_reuse_rate", &[],
+                              ps.pool_reuse_rate());
+                reg.gauge_set("block_predictor_cache_entries", &[],
+                              ps.cache_entries as f64);
+            }
+        }
+        let obs_report = if obs.enabled() {
+            Some(ObsReport {
+                flight: obs
+                    .recorder
+                    .take()
+                    .unwrap_or_else(|| FlightRecorder::new(0)),
+                trace: obs.trace.take().unwrap_or_default(),
+                registry: obs.registry.take(),
+            })
+        } else {
+            None
+        };
+
         SimResult {
             recovery,
             metrics,
@@ -1405,6 +1769,7 @@ impl ClusterSim {
                 .collect(),
             events_processed,
             sync_stats: None,
+            obs: obs_report,
             wall_time: t0.elapsed(),
         }
     }
@@ -2223,5 +2588,128 @@ mod tests {
         assert!(!res.provision_events.is_empty(), "must have provisioned");
         let final_size = res.size_timeline.last().unwrap().1;
         assert!(final_size > 2 && final_size <= 4, "size {final_size}");
+    }
+
+    #[test]
+    fn obs_disabled_reproduces_baseline_exactly() {
+        // The observability tier's parity bar: turning the full tier on
+        // (flight ring, decision traces, metrics registry) must not
+        // perturb the simulation — same placements, same timings, same
+        // summaries as the disabled run, in both the centralized and the
+        // distributed front-end paths.  And off must really be off:
+        // `SimResult::obs` stays `None`.
+        use crate::config::TraceLevel;
+        let run = |distributed: bool, obs: bool| {
+            let mut cfg = small_cfg(SchedulerKind::Block);
+            if distributed {
+                cfg.frontends = 2;
+                cfg.sync_interval = 2.0;
+            }
+            if obs {
+                cfg.obs.trace = TraceLevel::Full;
+                cfg.obs.metrics = true;
+            }
+            run_experiment(cfg, &small_workload(8.0, 210),
+                           SimOptions::default())
+                .unwrap()
+        };
+        let placements = |r: &SimResult| -> Vec<(u64, usize, f64, f64)> {
+            r.metrics
+                .records
+                .iter()
+                .map(|m| (m.id, m.instance, m.dispatched, m.finish))
+                .collect()
+        };
+        for distributed in [false, true] {
+            let off = run(distributed, false);
+            let on = run(distributed, true);
+            assert!(off.obs.is_none(), "disabled obs must build nothing");
+            assert_eq!(placements(&off), placements(&on),
+                       "obs perturbed the run (distributed={distributed})");
+            assert_eq!(off.metrics.summary(), on.metrics.summary());
+            assert_eq!(off.events_processed, on.events_processed);
+
+            let obs = on.obs.expect("enabled obs must report");
+            // One decision per dispatch, every one back-annotated with
+            // the argmin invariant intact.
+            assert_eq!(obs.trace.len(), 210);
+            assert_eq!(obs.trace.annotated(), 210);
+            for rec in obs.trace.records() {
+                assert!(!rec.candidates.is_empty(),
+                        "Block decisions carry the candidate set");
+                let best = rec.candidates.iter()
+                    .map(|&(_, p)| p)
+                    .fold(f64::INFINITY, f64::min);
+                let chosen_pred = rec.candidates.iter()
+                    .find(|&&(i, _)| i == rec.chosen)
+                    .expect("chosen must be a candidate").1;
+                assert_eq!(chosen_pred, best, "chosen must be an argmin");
+                assert_eq!(rec.actual_instance, Some(rec.chosen),
+                           "no bounces here: annotation lands on chosen");
+            }
+            // Full tracing records per-request lifecycle milestones.
+            assert!(obs.flight.len() > 210 * 2,
+                    "flight ring too sparse: {}", obs.flight.len());
+            assert_eq!(obs.flight.dropped(), 0);
+            let reg = obs.registry.expect("metrics on must snapshot");
+            let finished: u64 = (0..4)
+                .map(|i| {
+                    let lbl = i.to_string();
+                    reg.counter_value("block_finished_requests_total",
+                                      &[("instance", lbl.as_str())])
+                })
+                .sum();
+            assert_eq!(finished, 210, "registry must count every finish");
+        }
+    }
+
+    #[test]
+    fn telemetry_json_schema_roundtrip() {
+        // The uniform telemetry envelope every emitting path shares:
+        // serialize the full result, parse it back, and check the
+        // schema — field names here are load-bearing for the smoke
+        // scripts and the wire gateway's /status mirror.
+        use crate::config::TraceLevel;
+        use crate::util::json::Json;
+        let mut cfg = small_cfg(SchedulerKind::Block);
+        cfg.obs.trace = TraceLevel::Decisions;
+        cfg.obs.metrics = true;
+        let res = run_experiment(cfg, &small_workload(8.0, 120),
+                                 SimOptions::default())
+            .unwrap();
+        let parsed = Json::parse(&res.to_json().to_string_pretty()).unwrap();
+        let summary = parsed.field("summary").expect("summary");
+        for key in ["n", "mean_ttft", "p99_ttft", "mean_e2e", "p99_e2e",
+                    "throughput"] {
+            assert!(summary.field(key).is_ok(), "summary.{key} missing");
+        }
+        let tel = parsed.field("telemetry").expect("telemetry");
+        assert!(tel.field("events_processed").unwrap().as_i64().unwrap() > 0);
+        assert_eq!(tel.field("sync_stats").unwrap(), &Json::Null,
+                   "single-shard runs report null sync_stats");
+        assert!(tel.field("recovery").is_ok());
+        let timeline = tel.field("size_timeline").unwrap().as_arr().unwrap();
+        assert!(!timeline.is_empty());
+        for p in timeline {
+            assert!(p.field("t").is_ok() && p.field("active").is_ok());
+        }
+        let fes = tel.field("frontend_dispatches").unwrap().as_arr().unwrap();
+        assert_eq!(fes.len(), 1);
+        assert_eq!(fes[0].as_i64().unwrap(), 120);
+        assert!(tel.field("wall_time_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(parsed.field("predictor_stats").is_ok(),
+                "Block runs carry predictor stats");
+        let obs = parsed.field("obs").expect("obs summary");
+        assert_eq!(obs.field("decisions").unwrap().as_i64().unwrap(), 120);
+        assert_eq!(obs.field("annotated").unwrap().as_i64().unwrap(), 120);
+        assert!(obs.field("metrics").unwrap().as_bool().unwrap());
+        // Decisions level still records lifecycle flights (arrival,
+        // decision, land, finish) — just no per-step milestones.
+        assert!(obs.field("flight_events").unwrap().as_i64().unwrap()
+                    >= 120 * 4,
+                "lifecycle flights missing: {obs:?}");
+        assert_eq!(obs.field("flight_recorded").unwrap().as_i64().unwrap(),
+                   obs.field("flight_events").unwrap().as_i64().unwrap(),
+                   "nothing dropped in a 65k ring");
     }
 }

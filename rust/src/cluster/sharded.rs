@@ -91,6 +91,10 @@ struct FinishEffect {
 /// What a shard worker hands back at the barrier.
 struct ShardOutcome {
     effects: Vec<FinishEffect>,
+    /// Step milestones `(StepDone key, time, instance)` observed by
+    /// the worker, for the flight recorder's barrier merge.  Only
+    /// collected at trace level `full`; empty otherwise.
+    flights: Vec<(Key, f64, usize)>,
     popped: u64,
     /// Pops that the serial loop would have counted as events of their
     /// own (`StepDone`s, including stale-generation ones).  Delivered
@@ -144,9 +148,11 @@ fn kick_shard(ctx: &mut ShardCtx<'_>, coord: &[ProvEntry], gen: Key,
 /// probe is never armed and no slot is ever draining.
 fn run_shard_window(ctx: &mut ShardCtx<'_>, h: Key, coord: &[ProvEntry],
                     step_gen: &[u64], requests: &[Request],
-                    cost: &RooflineModel) -> ShardOutcome {
+                    cost: &RooflineModel, record_steps: bool)
+                    -> ShardOutcome {
     let mut out = ShardOutcome {
         effects: Vec::new(),
+        flights: Vec::new(),
         popped: 0,
         engine_events: 0,
         clock: f64::NEG_INFINITY,
@@ -192,6 +198,12 @@ fn run_shard_window(ctx: &mut ShardCtx<'_>, h: Key, coord: &[ProvEntry],
                 let li = i - ctx.base;
                 ctx.engines[li].finish_step();
                 ctx.last_busy[li] = now;
+                if record_steps {
+                    // The serial handler records the step milestone
+                    // before that step's finishes; phase 0 keeps it
+                    // ahead of the phase-1 finish replay at the merge.
+                    out.flights.push((key, now, i));
+                }
                 for fin in ctx.engines[li].take_finished() {
                     out.effects.push(FinishEffect {
                         gen: key,
@@ -294,6 +306,9 @@ impl ClusterSim {
                      q: &mut ShardedQueues, key: Key, ev: Event) {
         let now = key.time;
         let mut ordinal: u32 = 0;
+        // Flight events emitted by this handler are buffered under its
+        // key (phase 0) and merged into serial order at the barrier.
+        st.obs.win_begin(key, 0);
         if let EventKind::Dispatch(idx, instance, f) = ev.kind {
             let landed = {
                 let mut push = |e: Event| {
@@ -318,6 +333,7 @@ impl ClusterSim {
             };
             self.handle_event(st, requests, ev, &mut push);
         }
+        st.obs.win_end();
     }
 
     /// Execute one window `[current minimum, h)`: phase A
@@ -375,6 +391,7 @@ impl ClusterSim {
         let coord = coord_space.as_slice();
         let step_gen = self.step_gen.as_slice();
         let cost = &self.cost;
+        let record_steps = st.obs.steps_on();
         let outcomes = parallel_map(jobs, &cells, |cell| {
             let mut ctx = cell
                 .lock()
@@ -382,7 +399,7 @@ impl ClusterSim {
                 .take()
                 .expect("each cell claimed once");
             let out = run_shard_window(&mut ctx, h, coord, step_gen,
-                                       requests, cost);
+                                       requests, cost, record_steps);
             (ctx, out)
         });
         let mut all_effects: Vec<FinishEffect> = Vec::new();
@@ -396,6 +413,9 @@ impl ClusterSim {
             }
             q.stats.popped += out.popped;
             st.events_processed += out.engine_events;
+            for (k, t, i) in out.flights {
+                st.obs.buffer_step(k, t, i);
+            }
             all_effects.extend(out.effects);
         }
         drop(cells);
@@ -433,13 +453,22 @@ impl ClusterSim {
                     assign.insert((space, idx), q.next_seq());
                 }
                 Replay::Finish(eff) => {
+                    // Flights from this replayed completion carry the
+                    // effect's own serial position (phase 1: after the
+                    // generating handler's phase-0 milestones).
+                    st.obs.win_begin_at(eff.gen, 1, eff.ordinal);
                     let FinishEffect { time, instance, fin, .. } = eff;
                     let mut push = |e: Event| q.push_final(e);
                     self.apply_finish(st, instance, fin, time,
                                       &mut push);
+                    st.obs.win_end();
                 }
             }
         }
+        // Merge this window's buffered flight events into the ring in
+        // exact serial order.  Must precede `seal_window`: provisional
+        // generating keys resolve through the window's arenas.
+        st.obs.flush_window(&q.arenas);
         q.seal_window(&assign);
     }
 }

@@ -512,6 +512,108 @@ impl DetectConfig {
     }
 }
 
+/// How much the decision tracer records per dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceLevel {
+    /// No decision records at all.
+    Off,
+    /// One record per dispatch decision (candidate set, argmin,
+    /// back-annotated actual latency).
+    Decisions,
+    /// Decisions plus per-step flight milestones (largest artifacts).
+    Full,
+}
+
+impl TraceLevel {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "off" => TraceLevel::Off,
+            "decisions" => TraceLevel::Decisions,
+            "full" => TraceLevel::Full,
+            other => bail!("unknown trace level '{other}' \
+                            (off|decisions|full)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Decisions => "decisions",
+            TraceLevel::Full => "full",
+        }
+    }
+}
+
+/// Observability tier (`obs` section): the request flight recorder, the
+/// scheduler decision tracer, and the live metrics registry.  All three
+/// default to off, and when off the tier is fully inert — disabled-obs
+/// runs reproduce current runs byte for byte (pinned by
+/// `obs_disabled_reproduces_baseline_exactly`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsConfig {
+    /// Flight-recorder ring capacity (events kept; older ones are
+    /// dropped and counted).  0 disables the recorder.
+    pub ring_capacity: usize,
+    /// Decision-trace verbosity (`simulate --trace` flips this on).
+    pub trace: TraceLevel,
+    /// Live metrics registry (counters/gauges/histograms snapshotted
+    /// into `SimResult` and served at `GET /metrics` on the wire).
+    pub metrics: bool,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            ring_capacity: 65_536,
+            trace: TraceLevel::Off,
+            metrics: false,
+        }
+    }
+}
+
+impl ObsConfig {
+    /// True when any obs component records anything.  The simulator
+    /// consults this once at init: `false` means no ObsState is built
+    /// and every hook is a no-op on a `None`.
+    pub fn any_enabled(&self) -> bool {
+        self.trace != TraceLevel::Off || self.metrics
+    }
+
+    /// True when lifecycle flight events should be recorded.
+    pub fn flight_enabled(&self) -> bool {
+        self.trace != TraceLevel::Off && self.ring_capacity > 0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.flight_enabled() && self.ring_capacity < 16 {
+            bail!("obs.ring_capacity must be 0 (off) or >= 16");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("ring_capacity", self.ring_capacity);
+        o.insert("trace", self.trace.name());
+        o.insert("metrics", self.metrics);
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = ObsConfig::default();
+        if let Some(v) = j.opt("ring_capacity") {
+            c.ring_capacity = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("trace") {
+            c.trace = TraceLevel::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.opt("metrics") {
+            c.metrics = v.as_bool()?;
+        }
+        Ok(c)
+    }
+}
+
 /// Whole-cluster configuration.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
@@ -552,6 +654,9 @@ pub struct ClusterConfig {
     pub faults: FaultConfig,
     /// Predictive straggler detection (`--detect`); inert by default.
     pub detect: DetectConfig,
+    /// Observability tier (`--trace`, manifest `obs` section); inert by
+    /// default.
+    pub obs: ObsConfig,
     /// Worker threads for Block's per-candidate prediction fan-out
     /// (`--jobs`).  1 = serial; any value produces bit-identical
     /// scheduling decisions — the argmin is ordered by
@@ -594,6 +699,7 @@ impl Default for ClusterConfig {
             local_echo: false,
             faults: FaultConfig::default(),
             detect: DetectConfig::default(),
+            obs: ObsConfig::default(),
             jobs: 1,
             shards: 1,
             window: 1.0,
@@ -667,6 +773,7 @@ impl ClusterConfig {
         }
         self.faults.validate()?;
         self.detect.validate()?;
+        self.obs.validate()?;
         Ok(())
     }
 
@@ -714,6 +821,7 @@ impl ClusterConfig {
         o.insert("local_echo", self.local_echo);
         o.insert("faults", self.faults.to_json());
         o.insert("detect", self.detect.to_json());
+        o.insert("obs", self.obs.to_json());
         o.insert("jobs", self.jobs);
         o.insert("shards", self.shards);
         o.insert("window", self.window);
@@ -830,6 +938,9 @@ impl ClusterConfig {
         if let Some(d) = j.opt("detect") {
             c.detect = DetectConfig::from_json(d)?;
         }
+        if let Some(d) = j.opt("obs") {
+            c.obs = ObsConfig::from_json(d)?;
+        }
         if let Some(v) = j.opt("jobs") {
             c.jobs = v.as_usize()?;
         }
@@ -931,6 +1042,9 @@ mod tests {
         c.detect.enabled = true;
         c.detect.trip = 3.0;
         c.detect.min_samples = 5;
+        c.obs.ring_capacity = 4096;
+        c.obs.trace = TraceLevel::Decisions;
+        c.obs.metrics = true;
         let j = c.to_json();
         let c2 = ClusterConfig::from_json(&j).unwrap();
         assert_eq!(c2.scheduler, SchedulerKind::LlumnixMinus);
@@ -960,6 +1074,12 @@ mod tests {
         assert_eq!(c2.detect.min_samples, 5);
         assert_eq!(c2.faults.seed, 99);
         assert!(c2.faults.enabled());
+        assert_eq!(c2.obs.ring_capacity, 4096);
+        assert_eq!(c2.obs.trace, TraceLevel::Decisions);
+        assert!(c2.obs.metrics);
+        assert!(c2.obs.any_enabled());
+        assert!(!ObsConfig::default().any_enabled(),
+                "obs must default to fully inert");
     }
 
     #[test]

@@ -318,6 +318,28 @@ impl ActiveSet {
     pub fn state_names(&self) -> Vec<&'static str> {
         self.slots.iter().map(|s| s.name()).collect()
     }
+
+    /// `(state name, slot count)` over the canonical state list — the
+    /// `block_slots{state=...}` gauge family of the observability
+    /// registry.  Every state is present (zero when unoccupied) so
+    /// scrapes always see the same series set.
+    pub fn state_counts(&self) -> Vec<(&'static str, usize)> {
+        const STATES: [&str; 7] = [
+            "backup", "pending", "active", "degraded", "draining",
+            "retired", "failed",
+        ];
+        STATES
+            .iter()
+            .map(|&name| {
+                let n = self
+                    .slots
+                    .iter()
+                    .filter(|s| s.name() == name)
+                    .count();
+                (name, n)
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -332,6 +354,21 @@ mod tests {
         assert_eq!(s.mask(), &[true, true, true, true, false, false]);
         assert_eq!(s.state(5), SlotState::Backup);
         assert!(s.log.is_empty(), "initial set is config, not transitions");
+    }
+
+    #[test]
+    fn state_counts_cover_every_state() {
+        let mut s = ActiveSet::new(6, 4);
+        s.begin_cold_start(4, 10.0, 0.0, "scale-up");
+        let counts = s.state_counts();
+        assert_eq!(counts.len(), 7, "all seven states present: {counts:?}");
+        let get = |name: &str| {
+            counts.iter().find(|&&(n, _)| n == name).unwrap().1
+        };
+        assert_eq!(get("active"), 4);
+        assert_eq!(get("pending"), 1);
+        assert_eq!(get("backup"), 1);
+        assert_eq!(get("failed"), 0);
     }
 
     #[test]

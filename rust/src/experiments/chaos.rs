@@ -81,6 +81,10 @@ struct Point {
     /// (`faults.prewarm = true`, identical fault plan) — only for
     /// levels with instance faults.
     prewarm: Option<(RunSummary, RecoveryStats)>,
+    /// Full run telemetry (`SimResult::telemetry_json` — events
+    /// processed, sync stats, recovery, size timeline), captured before
+    /// the result is dropped.
+    telemetry: Json,
 }
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
@@ -159,6 +163,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
                 kind,
                 requests: n,
                 summary: res.metrics.summary(),
+                telemetry: res.telemetry_json(),
                 recovery: res.recovery,
                 instance_mttf: inst_mult * span,
                 frontend_mttf: fe_mult * span,
@@ -212,6 +217,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             o.insert("instance_mttf", p.instance_mttf);
             o.insert("frontend_mttf", p.frontend_mttf);
             o.insert("recovery", r.to_json());
+            o.insert("telemetry", p.telemetry.clone());
             if let Some((ps, pr)) = &p.prewarm {
                 let mut pw = match ps.to_json() {
                     Json::Obj(pw) => pw,

@@ -24,6 +24,8 @@ struct Point {
     cdf_ttft: Vec<(f64, f64)>,
     cdf_e2e: Vec<(f64, f64)>,
     pstats: Option<crate::scheduler::PredictorStats>,
+    /// Full run telemetry (`SimResult::telemetry_json`).
+    telemetry: Json,
 }
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
@@ -49,6 +51,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             summary: res.metrics.summary(),
             cdf_ttft: res.metrics.cdf_ttft(40),
             cdf_e2e: res.metrics.cdf_e2e(40),
+            telemetry: res.telemetry_json(),
             pstats: res.predictor_stats,
         })
     });
@@ -79,6 +82,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             if let Some(ps) = &p.pstats {
                 o.insert("predictor_stats", ps.to_json());
             }
+            o.insert("telemetry", p.telemetry.clone());
             // Figure 9: CDFs at this point.
             o.insert("cdf_ttft",
                      Json::Arr(p.cdf_ttft.iter()

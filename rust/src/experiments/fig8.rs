@@ -92,6 +92,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
         if let Some(ps) = &res.predictor_stats {
             j.insert("predictor_stats", ps.to_json());
         }
+        j.insert("telemetry", res.telemetry_json());
         j.insert("provision_events",
                  Json::Arr(res.provision_events.iter().map(|e| {
                      let mut o = JsonObj::new();

@@ -73,6 +73,8 @@ struct Point {
     /// tracker never tripped).
     detect_latency: Option<f64>,
     degraded_events: usize,
+    /// Full run telemetry (`SimResult::telemetry_json`).
+    telemetry: Json,
 }
 
 pub fn run(ctx: &ExpContext) -> Result<()> {
@@ -156,6 +158,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
                 kind,
                 requests: n,
                 summary: res.metrics.summary(),
+                telemetry: res.telemetry_json(),
                 recovery: res.recovery,
                 detect_latency,
                 degraded_events,
@@ -209,6 +212,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
                 None => o.insert("detect_latency", Json::Null),
             }
             o.insert("recovery", r.to_json());
+            o.insert("telemetry", p.telemetry.clone());
         }
         pts.insert(
             format!("{}@{}/detect-{}", p.kind.name(), p.severity,

@@ -62,6 +62,8 @@ struct Point {
     summary: RunSummary,
     /// Coefficient of variation of per-front-end dispatch counts.
     gateway_skew: f64,
+    /// Full run telemetry (`SimResult::telemetry_json`).
+    telemetry: Json,
 }
 
 /// CV of the dispatch counts (population std-dev over mean).
@@ -117,6 +119,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
                 kind,
                 summary: res.metrics.summary(),
                 gateway_skew: dispatch_cv(&res.frontend_dispatches),
+                telemetry: res.telemetry_json(),
             })
         },
     );
@@ -148,6 +151,7 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             o.insert("sync_on_ack", p.sync_on_ack);
             o.insert("scheduler", p.kind.name());
             o.insert("gateway_skew", p.gateway_skew);
+            o.insert("telemetry", p.telemetry.clone());
         }
         out.insert(
             format!("{}@fe{}s{}{}", p.kind.name(), p.frontends,

@@ -165,12 +165,13 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
                 n_requests: ctx.scale.requests_for(block),
                 seed: ctx.seed,
             };
-            if let Some(stats) =
-                run_point((v.make_cfg)(SchedulerKind::Block), &wl,
-                          v.response_scale)
-                    .and_then(|r| r.predictor_stats)
-            {
-                j.insert("predictor_stats_at_capacity", stats.to_json());
+            if let Some(r) = run_point((v.make_cfg)(SchedulerKind::Block),
+                                       &wl, v.response_scale) {
+                j.insert("telemetry_at_capacity", r.telemetry_json());
+                if let Some(stats) = r.predictor_stats {
+                    j.insert("predictor_stats_at_capacity",
+                             stats.to_json());
+                }
             }
         }
         out.insert(v.name, j);

@@ -27,6 +27,7 @@ pub mod exec;
 pub mod experiments;
 pub mod faults;
 pub mod metrics;
+pub mod obs;
 pub mod predictor;
 pub mod provision;
 pub mod runtime;

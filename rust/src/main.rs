@@ -25,7 +25,11 @@
 //!    front-ends with a cold view, `--prewarm` cold-starts a
 //!    replacement on failure instead of waiting for the rejoin);
 //!    `--scale-down-idle`/`--min-instances` drain and retire idle
-//!    instances when provisioning is enabled.
+//!    instances when provisioning is enabled; `--trace FILE` dumps the
+//!    scheduler decision trace (Chrome trace-event JSON plus a raw
+//!    JSONL log), `--metrics` snapshots the live metrics registry into
+//!    the result, and `--json FILE` writes the full result envelope
+//!    (summary + telemetry + observability).
 //! * `block serve --role instance --manifest FILE --index N` — one
 //!    standalone engine daemon (sim-clock or PJRT backend) serving the
 //!    wire `status` API.
@@ -42,8 +46,8 @@ use anyhow::{bail, Context, Result};
 
 use block::cluster::{run_experiment, SimOptions};
 use block::config::manifest::{BackendKind, ClockKind, ClusterManifest};
-use block::config::{ClusterConfig, SchedulerKind, ShardPolicy, WorkloadConfig,
-                    WorkloadKind};
+use block::config::{ClusterConfig, SchedulerKind, ShardPolicy, TraceLevel,
+                    WorkloadConfig, WorkloadKind};
 use block::experiments::{self, ExpContext, Scale};
 use block::metrics::render_table;
 
@@ -58,8 +62,9 @@ impl Args {
     /// `--smoke true`).  Every other flag consumes the next token
     /// verbatim, so values that merely *look* like flags (a prompt
     /// starting with `--`) still parse.
-    const SWITCHES: [&'static str; 4] = ["smoke", "local-echo",
-                                         "sync-on-ack", "prewarm"];
+    const SWITCHES: [&'static str; 5] = ["smoke", "local-echo",
+                                         "sync-on-ack", "prewarm",
+                                         "metrics"];
 
     fn parse(argv: &[String]) -> Result<Args> {
         let mut positional = Vec::new();
@@ -129,6 +134,7 @@ fn usage() -> ! {
          \x20          [--frontend-mttf S] [--frontend-mttr S] [--detect-delay S]\n\
          \x20          [--rejoin-cold-start S] [--prewarm] [--fault-seed N]\n\
          \x20          [--scale-down-idle S] [--min-instances N]\n\
+         \x20          [--trace FILE] [--trace-level decisions|full] [--metrics] [--json FILE]\n\
          \x20 serve    [--role single|instance|gateway] [--manifest FILE] [--index N]\n\
          \x20          [--backend sim|pjrt] [--clock wall|virtual] [--time-scale X]\n\
          \x20          [--scheduler S] [--addr HOST:PORT] [--artifacts DIR] [--max-requests N]\n\
@@ -200,6 +206,24 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         args.flag_parse("scale-down-idle", cfg.provision.scale_down_idle)?;
     cfg.provision.min_instances =
         args.flag_parse("min-instances", cfg.provision.min_instances)?;
+    // Observability: `--trace FILE` turns on the decision tracer (and
+    // with it the flight recorder) and dumps the run's Chrome trace
+    // JSON plus a raw JSONL decision log; `--metrics` snapshots the
+    // live registry into the result.  Both default off — the disabled
+    // path is byte-identical to a run without them.
+    let trace_out = args.flag("trace").map(str::to_string);
+    if trace_out.is_some() {
+        cfg.obs.trace =
+            TraceLevel::parse(args.flag("trace-level")
+                                  .unwrap_or("decisions"))?;
+    }
+    if args.flag_parse("metrics", false)? {
+        cfg.obs.metrics = true;
+    }
+    if trace_out.is_some() && cfg.obs.trace == TraceLevel::Off {
+        bail!("--trace needs --trace-level decisions|full");
+    }
+    let json_out = args.flag("json").map(str::to_string);
     cfg.validate()?;
     let workload = WorkloadConfig {
         kind: match args.flag("workload").unwrap_or("sharegpt") {
@@ -261,6 +285,25 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         vec!["preemptions".into(), format!("{}", s.total_preemptions)],
     ];
     println!("{}", render_table(&["metric", "value"], &rows));
+    if let Some(path) = &trace_out {
+        let obs = res.obs.as_ref()
+            .context("trace requested but no observability report")?;
+        std::fs::write(path,
+                       obs.trace.to_chrome_trace().to_string_pretty())
+            .with_context(|| format!("writing {path}"))?;
+        let jsonl = format!("{}.jsonl",
+                            path.strip_suffix(".json").unwrap_or(path));
+        std::fs::write(&jsonl, obs.trace.to_jsonl())
+            .with_context(|| format!("writing {jsonl}"))?;
+        println!("[trace: {} decisions ({} annotated), {} flight events \
+                  -> {path} + {jsonl}]",
+                 obs.trace.len(), obs.trace.annotated(), obs.flight.len());
+    }
+    if let Some(path) = &json_out {
+        std::fs::write(path, res.to_json().to_string_pretty())
+            .with_context(|| format!("writing {path}"))?;
+        println!("[result -> {path}]");
+    }
     Ok(())
 }
 

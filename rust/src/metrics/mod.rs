@@ -138,6 +138,22 @@ impl MetricsCollector {
             .collect()
     }
 
+    /// Fill an observability registry from the collected records: the
+    /// latency histograms plus per-instance finish counters.  The wire
+    /// gateway rebuilds its `GET /metrics` exposition from its record
+    /// log through this, so scrape output and `/records` always agree.
+    pub fn fill_registry(&self, reg: &mut crate::obs::MetricsRegistry) {
+        for m in &self.records {
+            let lbl = m.instance.to_string();
+            reg.inc("block_finished_requests_total",
+                    &[("instance", lbl.as_str())]);
+            reg.observe("block_e2e_seconds", &[], m.e2e());
+            reg.observe("block_ttft_seconds", &[], m.ttft());
+            reg.observe("block_sched_overhead_seconds", &[],
+                        m.sched_overhead);
+        }
+    }
+
     /// CDF series for the appendix figures.
     pub fn cdf_e2e(&self, points: usize) -> Vec<(f64, f64)> {
         stats::cdf(&self.e2es(), points)
@@ -266,6 +282,23 @@ mod tests {
         }
         assert_eq!(c.cdf_e2e(20).len(), 20);
         assert_eq!(c.cdf_ttft(20).len(), 20);
+    }
+
+    #[test]
+    fn fill_registry_counts_and_observes() {
+        let mut c = MetricsCollector::new();
+        c.push(rec(1, 0.0, 1.0, 2.0, None));
+        c.push(rec(2, 1.0, 3.0, 5.0, None));
+        let mut reg = crate::obs::MetricsRegistry::new();
+        c.fill_registry(&mut reg);
+        assert_eq!(
+            reg.counter_value("block_finished_requests_total",
+                              &[("instance", "0")]),
+            2
+        );
+        let text = reg.render();
+        assert!(text.contains("block_e2e_seconds_count 2"),
+                "histogram count missing:\n{text}");
     }
 
     #[test]

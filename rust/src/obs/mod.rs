@@ -1,0 +1,67 @@
+//! Unified observability tier: the request flight recorder, the
+//! scheduler decision tracer, and the live metrics registry.
+//!
+//! All three components share one contract: **free when off**.  With
+//! the default [`crate::config::ObsConfig`] nothing here is even
+//! constructed — the simulator's hooks are `Option` checks on a `None`,
+//! no RNG is touched, no events are pushed, and disabled-observability
+//! runs reproduce current runs byte for byte (pinned by
+//! `obs_disabled_reproduces_baseline_exactly`).
+//!
+//! * [`recorder::FlightRecorder`] — a bounded ring buffer of structured
+//!   request-lifecycle events (arrival → dispatch decision → land /
+//!   bounce → step milestones → finish, plus fault injections), stamped
+//!   with the governing clock (virtual seconds in the simulator, scaled
+//!   wall seconds on the wire).  Under the sharded event loop, in-window
+//!   events are buffered per shard and merged at window barriers in the
+//!   exact order the serial run would have recorded them (see
+//!   `DESIGN.md` §Observability for the merge rule).
+//! * [`trace::DecisionTrace`] — one record per dispatch decision: the
+//!   candidate set with per-candidate predicted e2e, the predictor's
+//!   cache/memo provenance for the decision, and the chosen argmin;
+//!   completions back-annotate the actual e2e so per-decision
+//!   prediction residuals become a dumpable artifact
+//!   (`simulate --trace out.json`: Chrome trace-event JSON for
+//!   Perfetto, plus a raw JSONL decision log).
+//! * [`registry::MetricsRegistry`] — counters, gauges, and fixed-bucket
+//!   histograms rendered in the Prometheus text exposition format.
+//!   The simulator snapshots its registry into
+//!   [`crate::cluster::SimResult`]; the wire gateway and instance
+//!   daemons serve theirs live at `GET /metrics`.
+
+pub mod recorder;
+pub mod registry;
+pub mod trace;
+
+pub use recorder::{FlightEvent, FlightKind, FlightRecorder};
+pub use registry::MetricsRegistry;
+pub use trace::{DecisionRecord, DecisionTrace};
+
+use crate::util::json::{Json, JsonObj};
+
+/// Everything the observability tier captured over one simulator run;
+/// `Some` on [`crate::cluster::SimResult::obs`] only when any obs
+/// component was enabled.
+#[derive(Debug, Clone)]
+pub struct ObsReport {
+    pub flight: FlightRecorder,
+    pub trace: DecisionTrace,
+    /// End-of-run snapshot of the live registry (`None` when
+    /// `obs.metrics` was off).
+    pub registry: Option<MetricsRegistry>,
+}
+
+impl ObsReport {
+    /// Compact summary for result envelopes (the full artifacts are
+    /// dumped separately by `simulate --trace`).
+    pub fn summary_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("flight_events", self.flight.len());
+        o.insert("flight_dropped", self.flight.dropped());
+        o.insert("flight_recorded", self.flight.recorded());
+        o.insert("decisions", self.trace.len());
+        o.insert("annotated", self.trace.annotated());
+        o.insert("metrics", self.registry.is_some());
+        Json::Obj(o)
+    }
+}

@@ -1,0 +1,231 @@
+//! Request flight recorder: a bounded ring of structured lifecycle
+//! events stamped with the governing clock.
+//!
+//! The recorder never allocates per event beyond the ring slot and
+//! never inspects simulator state — every hook hands it a fully-formed
+//! [`FlightKind`].  When the ring is full the oldest event is evicted
+//! and `dropped` is bumped, so the tail of a long run is always
+//! retained and the loss is visible.
+
+use std::collections::VecDeque;
+
+use crate::util::json::{Json, JsonObj};
+
+/// One structured lifecycle milestone.
+///
+/// `id` is the request id where a request is involved; `instance` /
+/// `frontend` are slot indexes into the run's instance / front-end
+/// tables.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FlightKind {
+    /// Request entered the system at a front-end.
+    Arrival { id: u64, frontend: usize },
+    /// Front-end chose a target; `predicted_e2e` is the scheduler's
+    /// winning estimate when the policy produced one.
+    Decision {
+        id: u64,
+        frontend: usize,
+        instance: usize,
+        predicted_e2e: Option<f64>,
+    },
+    /// Dispatch landed on a serving instance and was enqueued.
+    Land { id: u64, instance: usize },
+    /// Dispatch arrived at a dead/draining instance and bounced back
+    /// for re-dispatch.
+    Bounce { id: u64, instance: usize },
+    /// An engine step milestone (recorded only at trace level `full`).
+    Step { instance: usize },
+    /// Request finished decoding; `e2e` is the measured latency.
+    Finish { id: u64, instance: usize, e2e: f64 },
+    /// A fault-plan event fired against `target` (instance or
+    /// front-end slot, per the kind).
+    Fault { kind: &'static str, target: usize },
+    /// Elasticity lifecycle transition on an instance slot.
+    Lifecycle { instance: usize, state: &'static str },
+}
+
+impl FlightKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FlightKind::Arrival { .. } => "arrival",
+            FlightKind::Decision { .. } => "decision",
+            FlightKind::Land { .. } => "land",
+            FlightKind::Bounce { .. } => "bounce",
+            FlightKind::Step { .. } => "step",
+            FlightKind::Finish { .. } => "finish",
+            FlightKind::Fault { .. } => "fault",
+            FlightKind::Lifecycle { .. } => "lifecycle",
+        }
+    }
+
+    fn fill(&self, o: &mut JsonObj) {
+        match *self {
+            FlightKind::Arrival { id, frontend } => {
+                o.insert("id", id);
+                o.insert("frontend", frontend);
+            }
+            FlightKind::Decision {
+                id,
+                frontend,
+                instance,
+                predicted_e2e,
+            } => {
+                o.insert("id", id);
+                o.insert("frontend", frontend);
+                o.insert("instance", instance);
+                if let Some(p) = predicted_e2e {
+                    o.insert("predicted_e2e", p);
+                }
+            }
+            FlightKind::Land { id, instance } | FlightKind::Bounce { id, instance } => {
+                o.insert("id", id);
+                o.insert("instance", instance);
+            }
+            FlightKind::Step { instance } => {
+                o.insert("instance", instance);
+            }
+            FlightKind::Finish { id, instance, e2e } => {
+                o.insert("id", id);
+                o.insert("instance", instance);
+                o.insert("e2e", e2e);
+            }
+            FlightKind::Fault { kind, target } => {
+                o.insert("fault", kind);
+                o.insert("target", target);
+            }
+            FlightKind::Lifecycle { instance, state } => {
+                o.insert("instance", instance);
+                o.insert("state", state);
+            }
+        }
+    }
+}
+
+/// A recorded milestone: governing-clock timestamp plus a global
+/// sequence number (total order of recording, stable across shard
+/// counts by construction of the barrier merge).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlightEvent {
+    pub time: f64,
+    pub seq: u64,
+    pub kind: FlightKind,
+}
+
+impl FlightEvent {
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("seq", self.seq);
+        o.insert("t", self.time);
+        o.insert("kind", self.kind.name());
+        self.kind.fill(&mut o);
+        Json::Obj(o)
+    }
+}
+
+/// Bounded ring of [`FlightEvent`]s.
+#[derive(Debug, Clone)]
+pub struct FlightRecorder {
+    ring: VecDeque<FlightEvent>,
+    capacity: usize,
+    recorded: u64,
+    dropped: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> Self {
+        FlightRecorder {
+            ring: VecDeque::with_capacity(capacity.min(4096)),
+            capacity,
+            recorded: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Append an event, stamping the next global sequence number.
+    /// Evicts the oldest entry when the ring is at capacity; a
+    /// zero-capacity recorder counts but retains nothing.
+    pub fn record(&mut self, time: f64, kind: FlightKind) {
+        let seq = self.recorded;
+        self.recorded += 1;
+        if self.capacity == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.ring.len() == self.capacity {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(FlightEvent { time, seq, kind });
+    }
+
+    /// Events currently retained, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &FlightEvent> {
+        self.ring.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Total events ever recorded (including evicted ones).
+    pub fn recorded(&self) -> u64 {
+        self.recorded
+    }
+
+    /// Events evicted from the ring because it was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("capacity", self.capacity);
+        o.insert("recorded", self.recorded);
+        o.insert("dropped", self.dropped);
+        o.insert(
+            "events",
+            self.ring.iter().map(|e| e.to_json()).collect::<Vec<_>>(),
+        );
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let mut r = FlightRecorder::new(3);
+        for i in 0..5u64 {
+            r.record(i as f64, FlightKind::Step { instance: i as usize });
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.recorded(), 5);
+        assert_eq!(r.dropped(), 2);
+        let seqs: Vec<u64> = r.events().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn event_json_carries_kind_fields() {
+        let mut r = FlightRecorder::new(8);
+        r.record(
+            1.5,
+            FlightKind::Finish {
+                id: 42,
+                instance: 3,
+                e2e: 0.75,
+            },
+        );
+        let j = r.to_json();
+        let ev = &j.field("events").unwrap().as_arr().unwrap()[0];
+        assert_eq!(ev.field("kind").unwrap().as_str().unwrap(), "finish");
+        assert_eq!(ev.field("id").unwrap().as_usize().unwrap(), 42);
+        assert_eq!(ev.field("e2e").unwrap().as_f64().unwrap(), 0.75);
+    }
+}

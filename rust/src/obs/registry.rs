@@ -1,0 +1,421 @@
+//! Live metrics registry: counters, gauges, and fixed-bucket
+//! histograms rendered in the Prometheus text exposition format.
+//!
+//! Series are keyed by `(name, sorted labels)` in a `BTreeMap`, so
+//! rendering order is deterministic regardless of update order.  The
+//! registry is plain data — the simulator owns one directly; the wire
+//! roles each build one on demand from their live counters when
+//! `GET /metrics` is scraped.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{Json, JsonObj};
+
+/// Default latency buckets (seconds) for e2e / TTFT histograms.
+pub const LATENCY_BUCKETS: &[f64] =
+    &[0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 60.0, 120.0];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SeriesType {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl SeriesType {
+    fn name(self) -> &'static str {
+        match self {
+            SeriesType::Counter => "counter",
+            SeriesType::Gauge => "gauge",
+            SeriesType::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Value {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(Histogram),
+}
+
+/// Fixed-bucket histogram with cumulative Prometheus semantics.
+#[derive(Debug, Clone)]
+struct Histogram {
+    /// Upper bounds, strictly increasing; an implicit `+Inf` bucket
+    /// follows.
+    bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; `counts.len() == bounds.len() + 1`,
+    /// the last slot being the `+Inf` bucket.
+    counts: Vec<u64>,
+    sum: f64,
+    count: u64,
+}
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Self {
+        Histogram {
+            bounds: bounds.to_vec(),
+            counts: vec![0; bounds.len() + 1],
+            sum: 0.0,
+            count: 0,
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or_else(|| self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+}
+
+/// Series identity: metric name + sorted label pairs.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct SeriesKey {
+    name: String,
+    labels: Vec<(String, String)>,
+}
+
+/// Registry of counters, gauges, and histograms.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    series: BTreeMap<SeriesKey, Value>,
+    types: BTreeMap<String, SeriesType>,
+}
+
+fn key(name: &str, labels: &[(&str, &str)]) -> SeriesKey {
+    let mut ls: Vec<(String, String)> = labels
+        .iter()
+        .map(|&(k, v)| (k.to_string(), v.to_string()))
+        .collect();
+    ls.sort();
+    SeriesKey { name: name.to_string(), labels: ls }
+}
+
+/// Escape a label value per the Prometheus text format: backslash,
+/// double-quote, and newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn render_labels(labels: &[(String, String)], extra: Option<(&str, String)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{}=\"{}\"", k, escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{}=\"{}\"", k, v));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Format a sample value the way Prometheus expects (`+Inf`-safe,
+/// integral values without a fraction).
+fn fmt_value(v: f64) -> String {
+    if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{}", v)
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        MetricsRegistry::default()
+    }
+
+    fn touch_type(&mut self, name: &str, t: SeriesType) {
+        self.types.entry(name.to_string()).or_insert(t);
+    }
+
+    /// Increment a counter by 1.
+    pub fn inc(&mut self, name: &str, labels: &[(&str, &str)]) {
+        self.add(name, labels, 1);
+    }
+
+    /// Increment a counter by `by`.
+    pub fn add(&mut self, name: &str, labels: &[(&str, &str)], by: u64) {
+        self.touch_type(name, SeriesType::Counter);
+        let k = key(name, labels);
+        match self.series.get_mut(&k) {
+            Some(Value::Counter(c)) => *c += by,
+            Some(_) => {}
+            None => {
+                self.series.insert(k, Value::Counter(by));
+            }
+        }
+    }
+
+    /// Set a gauge to `v`.
+    pub fn gauge_set(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.touch_type(name, SeriesType::Gauge);
+        let k = key(name, labels);
+        match self.series.get_mut(&k) {
+            Some(Value::Gauge(g)) => *g = v,
+            Some(_) => {}
+            None => {
+                self.series.insert(k, Value::Gauge(v));
+            }
+        }
+    }
+
+    /// Observe `v` into a histogram with [`LATENCY_BUCKETS`].
+    pub fn observe(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.observe_with(name, labels, v, LATENCY_BUCKETS);
+    }
+
+    /// Observe `v` into a histogram with explicit bucket bounds (used
+    /// on first touch; later observations reuse the existing bounds).
+    pub fn observe_with(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        v: f64,
+        bounds: &[f64],
+    ) {
+        self.touch_type(name, SeriesType::Histogram);
+        let k = key(name, labels);
+        match self.series.get_mut(&k) {
+            Some(Value::Histogram(h)) => h.observe(v),
+            Some(_) => {}
+            None => {
+                let mut h = Histogram::new(bounds);
+                h.observe(v);
+                self.series.insert(k, Value::Histogram(h));
+            }
+        }
+    }
+
+    /// Read back a counter (tests / snapshot assertions).
+    pub fn counter_value(&self, name: &str, labels: &[(&str, &str)]) -> u64 {
+        match self.series.get(&key(name, labels)) {
+            Some(Value::Counter(c)) => *c,
+            _ => 0,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.series.is_empty()
+    }
+
+    /// Render the whole registry in the Prometheus text exposition
+    /// format (version 0.0.4): `# TYPE` headers, escaped label values,
+    /// cumulative histogram buckets with a `+Inf` terminal bucket plus
+    /// `_sum` / `_count` samples.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut last_name: Option<&str> = None;
+        for (k, v) in &self.series {
+            if last_name != Some(k.name.as_str()) {
+                let t = self.types.get(&k.name).copied().unwrap_or(SeriesType::Gauge);
+                out.push_str(&format!("# TYPE {} {}\n", k.name, t.name()));
+                last_name = Some(k.name.as_str());
+            }
+            match v {
+                Value::Counter(c) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        k.name,
+                        render_labels(&k.labels, None),
+                        c
+                    ));
+                }
+                Value::Gauge(g) => {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        k.name,
+                        render_labels(&k.labels, None),
+                        fmt_value(*g)
+                    ));
+                }
+                Value::Histogram(h) => {
+                    let mut cum = 0u64;
+                    for (i, &b) in h.bounds.iter().enumerate() {
+                        cum += h.counts[i];
+                        out.push_str(&format!(
+                            "{}_bucket{} {}\n",
+                            k.name,
+                            render_labels(&k.labels, Some(("le", fmt_value(b)))),
+                            cum
+                        ));
+                    }
+                    cum += h.counts[h.bounds.len()];
+                    out.push_str(&format!(
+                        "{}_bucket{} {}\n",
+                        k.name,
+                        render_labels(&k.labels, Some(("le", "+Inf".to_string()))),
+                        cum
+                    ));
+                    out.push_str(&format!(
+                        "{}_sum{} {}\n",
+                        k.name,
+                        render_labels(&k.labels, None),
+                        h.sum
+                    ));
+                    out.push_str(&format!(
+                        "{}_count{} {}\n",
+                        k.name,
+                        render_labels(&k.labels, None),
+                        h.count
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON snapshot (stored in `SimResult` envelopes).
+    pub fn to_json(&self) -> Json {
+        let mut arr: Vec<Json> = Vec::with_capacity(self.series.len());
+        for (k, v) in &self.series {
+            let mut o = JsonObj::new();
+            o.insert("name", k.name.as_str());
+            if !k.labels.is_empty() {
+                let mut lo = JsonObj::new();
+                for (lk, lv) in &k.labels {
+                    lo.insert(lk.as_str(), lv.as_str());
+                }
+                o.insert("labels", lo);
+            }
+            match v {
+                Value::Counter(c) => {
+                    o.insert("type", "counter");
+                    o.insert("value", *c);
+                }
+                Value::Gauge(g) => {
+                    o.insert("type", "gauge");
+                    o.insert("value", *g);
+                }
+                Value::Histogram(h) => {
+                    o.insert("type", "histogram");
+                    o.insert("sum", h.sum);
+                    o.insert("count", h.count);
+                    o.insert("bounds", h.bounds.clone());
+                    o.insert(
+                        "counts",
+                        h.counts.iter().map(|&c| c as f64).collect::<Vec<_>>(),
+                    );
+                }
+            }
+            arr.push(Json::Obj(o));
+        }
+        Json::Arr(arr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render_with_type_headers() {
+        let mut r = MetricsRegistry::new();
+        r.inc("block_arrivals_total", &[]);
+        r.inc("block_arrivals_total", &[]);
+        r.gauge_set("block_active_instances", &[], 4.0);
+        let text = r.render();
+        assert!(text.contains("# TYPE block_arrivals_total counter\n"));
+        assert!(text.contains("block_arrivals_total 2\n"));
+        assert!(text.contains("# TYPE block_active_instances gauge\n"));
+        assert!(text.contains("block_active_instances 4\n"));
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut r = MetricsRegistry::new();
+        r.inc("x_total", &[("path", "a\\b\"c\nd")]);
+        let text = r.render();
+        assert!(text.contains("x_total{path=\"a\\\\b\\\"c\\nd\"} 1\n"));
+    }
+
+    #[test]
+    fn one_type_header_per_name_across_label_sets() {
+        let mut r = MetricsRegistry::new();
+        r.inc("block_dispatches_total", &[("instance", "0")]);
+        r.inc("block_dispatches_total", &[("instance", "1")]);
+        let text = r.render();
+        assert_eq!(text.matches("# TYPE block_dispatches_total").count(), 1);
+        assert!(text.contains("block_dispatches_total{instance=\"0\"} 1\n"));
+        assert!(text.contains("block_dispatches_total{instance=\"1\"} 1\n"));
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_monotone() {
+        let mut r = MetricsRegistry::new();
+        for v in [0.05, 0.2, 0.2, 3.0, 500.0] {
+            r.observe("block_e2e_seconds", &[], v);
+        }
+        let text = r.render();
+        // Parse back every bucket line and check monotone non-decreasing
+        // cumulative counts ending in the +Inf total.
+        let mut prev = 0u64;
+        let mut saw_inf = false;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("block_e2e_seconds_bucket{le=\"") {
+                let (le, count) = rest.split_once("\"} ").unwrap();
+                let c: u64 = count.parse().unwrap();
+                assert!(c >= prev, "bucket counts must be cumulative");
+                prev = c;
+                if le == "+Inf" {
+                    saw_inf = true;
+                    assert_eq!(c, 5);
+                }
+            }
+        }
+        assert!(saw_inf, "terminal +Inf bucket required");
+        assert!(text.contains("block_e2e_seconds_count 5\n"));
+        let sum_line = text
+            .lines()
+            .find(|l| l.starts_with("block_e2e_seconds_sum"))
+            .unwrap();
+        let sum: f64 = sum_line.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!((sum - 503.45).abs() < 1e-9);
+    }
+
+    #[test]
+    fn boundary_observation_lands_in_le_bucket() {
+        let mut r = MetricsRegistry::new();
+        r.observe_with("b_seconds", &[], 1.0, &[1.0, 2.0]);
+        let text = r.render();
+        assert!(text.contains("b_seconds_bucket{le=\"1\"} 1\n"));
+        assert!(text.contains("b_seconds_bucket{le=\"2\"} 1\n"));
+        assert!(text.contains("b_seconds_bucket{le=\"+Inf\"} 1\n"));
+    }
+
+    #[test]
+    fn json_snapshot_round_trips() {
+        let mut r = MetricsRegistry::new();
+        r.inc("a_total", &[("k", "v")]);
+        r.observe_with("h_seconds", &[], 0.3, &[0.5, 1.0]);
+        let j = Json::parse(&r.to_json().to_string_compact()).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        let a = &arr[0];
+        assert_eq!(a.field("name").unwrap().as_str().unwrap(), "a_total");
+        assert_eq!(
+            a.field("labels").unwrap().field("k").unwrap().as_str().unwrap(),
+            "v"
+        );
+        assert_eq!(a.field("value").unwrap().as_usize().unwrap(), 1);
+    }
+}

@@ -1,0 +1,255 @@
+//! Scheduler decision traces: what the policy saw, what it predicted,
+//! what it chose — and, once the request finishes, what actually
+//! happened.
+//!
+//! Each dispatch decision produces one [`DecisionRecord`]; completions
+//! back-annotate the record for the request's *latest* dispatch (a
+//! bounced request re-dispatches and gets a fresh record) so the
+//! predicted-vs-actual residual of the effective placement is exact.
+//! Two export formats:
+//!
+//! * [`DecisionTrace::to_jsonl`] — one compact JSON object per line,
+//!   the raw decision log.
+//! * [`DecisionTrace::to_chrome_trace`] — Chrome trace-event JSON
+//!   (loadable in Perfetto / `chrome://tracing`): annotated decisions
+//!   become complete (`ph:"X"`) slices on the chosen instance's track
+//!   spanning arrival → finish; unannotated ones become instants.
+
+use std::collections::HashMap;
+
+use crate::scheduler::PredictorStats;
+use crate::util::json::{Json, JsonObj};
+
+/// One scheduling decision, with its post-hoc annotation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionRecord {
+    pub id: u64,
+    /// Request arrival time at the front-end (governing clock).
+    pub arrival: f64,
+    /// When the decision was made.
+    pub time: f64,
+    pub frontend: usize,
+    /// Chosen instance (the argmin for the Block family).
+    pub chosen: usize,
+    /// Scheduling overhead charged to the request (seconds).
+    pub overhead: f64,
+    /// Predicted e2e on the chosen instance (None for heuristics).
+    pub predicted_e2e: Option<f64>,
+    /// Full candidate set: (instance, predicted e2e).  Empty for
+    /// heuristic schedulers that evaluate no predictions.
+    pub candidates: Vec<(usize, f64)>,
+    /// Predictor cache/memo/pool activity attributable to this
+    /// decision (counter delta across the `pick` call).
+    pub stats_delta: Option<PredictorStats>,
+    /// Measured e2e, filled in when the request finishes.
+    pub actual_e2e: Option<f64>,
+    /// Instance the request actually finished on (differs from
+    /// `chosen` only if this record was superseded by a re-dispatch).
+    pub actual_instance: Option<usize>,
+}
+
+impl DecisionRecord {
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("id", self.id);
+        o.insert("arrival", self.arrival);
+        o.insert("t", self.time);
+        o.insert("frontend", self.frontend);
+        o.insert("chosen", self.chosen);
+        o.insert("overhead", self.overhead);
+        if let Some(p) = self.predicted_e2e {
+            o.insert("predicted_e2e", p);
+        }
+        o.insert(
+            "candidates",
+            self.candidates
+                .iter()
+                .map(|&(i, p)| {
+                    let mut c = JsonObj::new();
+                    c.insert("instance", i);
+                    c.insert("predicted_e2e", p);
+                    Json::Obj(c)
+                })
+                .collect::<Vec<_>>(),
+        );
+        if let Some(s) = &self.stats_delta {
+            o.insert("predictor", s.to_json());
+        }
+        if let Some(a) = self.actual_e2e {
+            o.insert("actual_e2e", a);
+            if let Some(p) = self.predicted_e2e {
+                o.insert("residual", a - p);
+            }
+        }
+        if let Some(i) = self.actual_instance {
+            o.insert("actual_instance", i);
+        }
+        Json::Obj(o)
+    }
+}
+
+/// Append-only log of [`DecisionRecord`]s with an id → latest-record
+/// index for back-annotation.
+#[derive(Debug, Clone, Default)]
+pub struct DecisionTrace {
+    records: Vec<DecisionRecord>,
+    latest: HashMap<u64, usize>,
+}
+
+impl DecisionTrace {
+    pub fn new() -> Self {
+        DecisionTrace::default()
+    }
+
+    pub fn record(&mut self, rec: DecisionRecord) {
+        self.latest.insert(rec.id, self.records.len());
+        self.records.push(rec);
+    }
+
+    /// Back-annotate the latest decision for `id` with the measured
+    /// outcome.  No-op if the request was never traced (e.g. the ring
+    /// started mid-run on the wire).
+    pub fn annotate(&mut self, id: u64, instance: usize, e2e: f64) {
+        if let Some(&idx) = self.latest.get(&id) {
+            let r = &mut self.records[idx];
+            r.actual_e2e = Some(e2e);
+            r.actual_instance = Some(instance);
+        }
+    }
+
+    pub fn records(&self) -> &[DecisionRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Count of records whose outcome has been filled in.
+    pub fn annotated(&self) -> usize {
+        self.records.iter().filter(|r| r.actual_e2e.is_some()).count()
+    }
+
+    /// Raw decision log: one compact JSON object per line.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.records {
+            out.push_str(&r.to_json().to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome trace-event JSON (Perfetto-compatible).
+    ///
+    /// Annotated decisions become `ph:"X"` complete events on
+    /// `tid = actual instance`, `ts = arrival`, `dur = actual e2e`
+    /// (microseconds).  Unannotated decisions become `ph:"i"`
+    /// instants at decision time.
+    pub fn to_chrome_trace(&self) -> Json {
+        let us = 1.0e6;
+        let mut events: Vec<Json> = Vec::with_capacity(self.records.len());
+        for r in &self.records {
+            let mut e = JsonObj::new();
+            e.insert("name", format!("req {}", r.id));
+            e.insert("cat", "dispatch");
+            e.insert("pid", r.frontend);
+            let mut args = JsonObj::new();
+            args.insert("id", r.id);
+            args.insert("chosen", r.chosen);
+            if let Some(p) = r.predicted_e2e {
+                args.insert("predicted_e2e", p);
+            }
+            match (r.actual_e2e, r.actual_instance) {
+                (Some(a), Some(i)) => {
+                    e.insert("ph", "X");
+                    e.insert("tid", i);
+                    e.insert("ts", r.arrival * us);
+                    e.insert("dur", a * us);
+                    args.insert("actual_e2e", a);
+                    if let Some(p) = r.predicted_e2e {
+                        args.insert("residual", a - p);
+                    }
+                }
+                _ => {
+                    e.insert("ph", "i");
+                    e.insert("s", "t");
+                    e.insert("tid", r.chosen);
+                    e.insert("ts", r.time * us);
+                }
+            }
+            e.insert("args", args);
+            events.push(Json::Obj(e));
+        }
+        let mut top = JsonObj::new();
+        top.insert("traceEvents", events);
+        top.insert("displayTimeUnit", "ms");
+        Json::Obj(top)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, chosen: usize) -> DecisionRecord {
+        DecisionRecord {
+            id,
+            arrival: 1.0,
+            time: 1.25,
+            frontend: 0,
+            chosen,
+            overhead: 0.01,
+            predicted_e2e: Some(2.0),
+            candidates: vec![(0, 3.0), (chosen, 2.0)],
+            stats_delta: None,
+            actual_e2e: None,
+            actual_instance: None,
+        }
+    }
+
+    #[test]
+    fn annotate_targets_latest_dispatch() {
+        let mut t = DecisionTrace::new();
+        t.record(rec(7, 1));
+        t.record(rec(7, 2)); // re-dispatch after a bounce
+        t.annotate(7, 2, 4.5);
+        assert_eq!(t.annotated(), 1);
+        assert!(t.records()[0].actual_e2e.is_none());
+        assert_eq!(t.records()[1].actual_e2e, Some(4.5));
+        assert_eq!(t.records()[1].actual_instance, Some(2));
+    }
+
+    #[test]
+    fn chrome_trace_complete_event_spans_arrival_to_finish() {
+        let mut t = DecisionTrace::new();
+        t.record(rec(1, 2));
+        t.annotate(1, 2, 3.0);
+        let j = t.to_chrome_trace();
+        let evs = j.field("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].field("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(evs[0].field("ts").unwrap().as_f64().unwrap(), 1.0e6);
+        assert_eq!(evs[0].field("dur").unwrap().as_f64().unwrap(), 3.0e6);
+        let res = evs[0].field("args").unwrap().field("residual").unwrap();
+        assert_eq!(res.as_f64().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn jsonl_round_trips_per_line() {
+        let mut t = DecisionTrace::new();
+        t.record(rec(1, 2));
+        t.record(rec(2, 0));
+        let text = t.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.field("candidates").unwrap().as_arr().unwrap().len() == 2);
+        }
+    }
+}

@@ -158,6 +158,13 @@ impl Predictor {
         (self.cache.hits(), self.cache.misses())
     }
 
+    /// Resident entries in the batch-latency memo cache (a footprint
+    /// gauge for the observability registry, next to the hit/miss
+    /// counters from [`Self::cache_stats`]).
+    pub fn cache_entries(&self) -> usize {
+        self.cache.len()
+    }
+
     /// (engines created, engines reused) by the simulation pool.  The
     /// steady state creates at most one engine per concurrent fan-out
     /// worker and reuses them for every later prediction.

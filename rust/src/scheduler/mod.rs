@@ -125,6 +125,10 @@ pub struct PredictorStats {
     /// Simulation-engine pool.
     pub pool_created: u64,
     pub pool_reused: u64,
+    /// Resident batch-latency cache entries at capture time (a gauge,
+    /// not a counter: `merge` sums it across front-ends, `delta_since`
+    /// keeps the later snapshot's value).
+    pub cache_entries: u64,
 }
 
 impl PredictorStats {
@@ -137,6 +141,30 @@ impl PredictorStats {
         self.memo_misses += other.memo_misses;
         self.pool_created += other.pool_created;
         self.pool_reused += other.pool_reused;
+        self.cache_entries += other.cache_entries;
+    }
+
+    /// Counter delta `self − earlier`, both captured from the same
+    /// scheduler: the prediction-runtime activity attributable to the
+    /// interval between the two snapshots.  This is the per-decision
+    /// cache/memo provenance the decision trace records (bracket one
+    /// `pick` call with two snapshots).  Saturating, so snapshots from
+    /// a restarted front-end degrade to the later value instead of
+    /// wrapping.
+    pub fn delta_since(&self, earlier: &PredictorStats) -> PredictorStats {
+        PredictorStats {
+            cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
+            cache_misses: self
+                .cache_misses
+                .saturating_sub(earlier.cache_misses),
+            memo_hits: self.memo_hits.saturating_sub(earlier.memo_hits),
+            memo_misses: self.memo_misses.saturating_sub(earlier.memo_misses),
+            pool_created: self
+                .pool_created
+                .saturating_sub(earlier.pool_created),
+            pool_reused: self.pool_reused.saturating_sub(earlier.pool_reused),
+            cache_entries: self.cache_entries,
+        }
     }
 
     pub fn cache_hit_rate(&self) -> f64 {
@@ -166,6 +194,7 @@ impl PredictorStats {
         o.insert("pool_created", self.pool_created);
         o.insert("pool_reused", self.pool_reused);
         o.insert("pool_reuse_rate", self.pool_reuse_rate());
+        o.insert("cache_entries", self.cache_entries);
         crate::util::json::Json::Obj(o)
     }
 
@@ -620,6 +649,7 @@ impl BlockScheduler {
             memo_misses: self.memo_misses.load(Ordering::Relaxed),
             pool_created,
             pool_reused,
+            cache_entries: self.predictor.cache_entries() as u64,
         }
     }
 }

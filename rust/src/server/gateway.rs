@@ -28,7 +28,11 @@
 //!   and `POST /manifest` adds/removes instance daemons under live
 //!   traffic (removals drain and retire; additions join as Backup slots
 //!   the prober activates).  `GET /status` exports the per-slot states
-//!   and the transition timeline in `SimResult`'s vocabulary.
+//!   and the transition timeline in `SimResult`'s vocabulary;
+//! * a live Prometheus text exposition at `GET /metrics` — latency
+//!   histograms rebuilt from the record log plus the wire-loop counters
+//!   and lifecycle gauges, in the same metric vocabulary the simulator
+//!   snapshots into `SimResult` (see [`crate::obs::registry`]).
 //!
 //! Two clock modes ([`ClockKind`]): **wall** serves live traffic
 //! (`/generate` blocks until the generation completes on its instance);
@@ -879,6 +883,8 @@ impl Gateway {
         if !now.is_finite() || now < 0.0 {
             return (400, http::error_body("bad 'now'"));
         }
+        // Replay logs carry the trace's timeline, not wall-elapsed time.
+        crate::util::logging::set_virtual_now(now);
         let req = self.build_request(core, g, now);
         self.process_pending(core, Some(now));
         let f0 = core.sharder.assign(&req);
@@ -1115,6 +1121,37 @@ impl Gateway {
         (200, Json::Obj(o))
     }
 
+    /// Render the gateway's Prometheus exposition.  Request-latency
+    /// histograms and per-instance finish counters are rebuilt from the
+    /// completed-record log ([`MetricsCollector::fill_registry`]) so the
+    /// scrape always agrees with `/records`; the wire-loop counters
+    /// (bounces, rejections, sheds) and the lifecycle gauges come from
+    /// the live core state.
+    fn metrics_text(&self) -> String {
+        let core = self.core.lock().unwrap();
+        let mut reg = crate::obs::MetricsRegistry::new();
+        core.metrics.fill_registry(&mut reg);
+        reg.add("block_bounces_total", &[], core.bounced);
+        reg.add("block_rejects_total", &[], core.rejected);
+        reg.add("block_timeouts_total", &[], core.timed_out);
+        reg.add("block_shed_total", &[], core.shed);
+        for (i, &n) in core.served_by.iter().enumerate() {
+            let lbl = i.to_string();
+            reg.add("block_dispatches_total",
+                    &[("instance", lbl.as_str())], n);
+        }
+        for (f, fe) in core.frontends.iter().enumerate() {
+            let lbl = f.to_string();
+            reg.add("block_frontend_dispatches_total",
+                    &[("frontend", lbl.as_str())], fe.dispatched);
+        }
+        reg.gauge_set("block_in_flight", &[], core.in_flight.len() as f64);
+        for (state, n) in core.lifecycle.state_counts() {
+            reg.gauge_set("block_slots", &[("state", state)], n as f64);
+        }
+        reg.render()
+    }
+
     /// Gateway telemetry in the `SimResult` vocabulary: per-front-end
     /// dispatch counters, per-instance split, bounce/reject counts, and
     /// the completed-request latency summary.
@@ -1144,6 +1181,28 @@ impl Gateway {
         o.insert("detect_enabled", core.tracker.is_some());
         o.insert("in_flight", core.in_flight.len());
         o.insert("completed", core.metrics.len());
+        // One stable telemetry sub-object sharing the simulator result
+        // envelope's vocabulary (`SimResult::telemetry_json`), so a
+        // driver auditing both paths reads the same keys from either.
+        let mut tel = JsonObj::new();
+        tel.insert("wall_time_s", self.t0.elapsed().as_secs_f64());
+        tel.insert("bounced", core.bounced);
+        tel.insert("rejected", core.rejected);
+        tel.insert("timed_out", core.timed_out);
+        tel.insert("shed", core.shed);
+        tel.insert("in_flight", core.in_flight.len());
+        tel.insert("completed", core.metrics.len());
+        tel.insert(
+            "frontend_dispatches",
+            Json::Arr(core.frontends.iter()
+                          .map(|fe| fe.dispatched.into()).collect()),
+        );
+        let mut slots = JsonObj::new();
+        for (state, n) in core.lifecycle.state_counts() {
+            slots.insert(state, n);
+        }
+        tel.insert("slot_states", Json::Obj(slots));
+        o.insert("telemetry", Json::Obj(tel));
         // Live elasticity state in the `SimResult` vocabulary: per-slot
         // lifecycle states plus the full transition timeline (the wire
         // mirror of `SimResult::lifecycle`).
@@ -1392,8 +1451,9 @@ impl Gateway {
             }
             (
                 _,
-                "/health" | "/status" | "/records" | "/generate"
-                | "/predict" | "/manifest" | "/flush" | "/shutdown",
+                "/health" | "/status" | "/metrics" | "/records"
+                | "/generate" | "/predict" | "/manifest" | "/flush"
+                | "/shutdown",
             ) => (405, http::error_body("method not allowed"), false),
             _ => (404, http::error_body("not found"), false),
         }
@@ -1403,6 +1463,12 @@ impl Gateway {
 fn handle_conn(gw: &Gateway, mut stream: TcpStream) {
     let _ = stream.set_read_timeout(Some(Duration::from_millis(5000)));
     match http::read_request(&mut stream) {
+        Ok(req) if req.method == "GET" && req.path == "/metrics" => {
+            // Prometheus exposition is text, not the JSON envelope
+            // `route` speaks — answer it before routing.
+            let text = gw.metrics_text();
+            http::write_text(&mut stream, 200, &text);
+        }
         Ok(req) => {
             let (status, body, _) = gw.route(&req);
             http::write_json(&mut stream, status, &body);

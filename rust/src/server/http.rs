@@ -53,6 +53,26 @@ pub fn write_json(stream: &mut TcpStream, status: u16, body: &Json) -> bool {
     stream.write_all(&response_bytes(status, body)).is_ok()
 }
 
+/// Serialize a plain-text response.  The Prometheus exposition format
+/// (`GET /metrics`) is text, not JSON; version 0.0.4 of the format is
+/// what every scraper accepts.
+pub fn text_response_bytes(status: u16, body: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        status,
+        reason(status),
+        body.len(),
+        body
+    )
+    .into_bytes()
+}
+
+/// Write a plain-text response to a stream (the `/metrics` twin of
+/// [`write_json`]).
+pub fn write_text(stream: &mut TcpStream, status: u16, body: &str) -> bool {
+    stream.write_all(&text_response_bytes(status, body)).is_ok()
+}
+
 #[derive(Debug, Clone)]
 pub struct HttpRequest {
     pub method: String,

@@ -18,6 +18,8 @@
 //! * `GET  /health`, `POST /shutdown`, and `GET /healthz` — the O(1)
 //!   liveness probe the gateway's re-admission poller uses (no backend
 //!   call, unlike `/health`/`/status`).
+//! * `GET  /metrics` — Prometheus text exposition (lifetime counters
+//!   plus an engine gauge snapshot); see [`crate::obs::registry`].
 //!
 //! The loop is single-threaded by design: the PJRT client is `!Send`
 //! (one device, serialized execution), so one OS thread owns engine +
@@ -89,6 +91,14 @@ pub fn serve_instance(listener: TcpListener,
                     backend.advance(now);
                 }
                 match http::read_request(&mut stream) {
+                    Ok(req) if req.method == "GET"
+                        && req.path == "/metrics" =>
+                    {
+                        // Prometheus exposition is text, not the JSON
+                        // envelope `handle` speaks — answer it here.
+                        let text = metrics_text(backend.as_mut(), &counters);
+                        http::write_text(&mut stream, 200, &text);
+                    }
                     Ok(req) => {
                         let (status, body, shutdown) = handle(
                             backend.as_mut(), &opts, &req, wall, now,
@@ -115,6 +125,25 @@ pub fn serve_instance(listener: TcpListener,
             Err(e) => return Err(e.into()),
         }
     }
+}
+
+/// Render the daemon's Prometheus exposition: lifetime counters plus a
+/// point-in-time gauge snapshot of the engine (queue depths, KV blocks).
+fn metrics_text(backend: &mut dyn ServingBackend, counters: &Counters)
+                -> String {
+    let mut reg = crate::obs::MetricsRegistry::new();
+    reg.add("block_requests_enqueued_total", &[], counters.enqueued);
+    reg.add("block_requests_completed_total", &[], counters.completed);
+    reg.add("block_tokens_generated_total", &[], counters.tokens);
+    let st = backend.status();
+    reg.gauge_set("block_engine_running", &[], st.running.len() as f64);
+    reg.gauge_set("block_engine_waiting", &[], st.waiting.len() as f64);
+    reg.gauge_set("block_engine_free_blocks", &[], st.free_blocks as f64);
+    reg.gauge_set("block_engine_total_blocks", &[], st.total_blocks as f64);
+    reg.gauge_set("block_engine_preemptions", &[],
+                  st.total_preemptions as f64);
+    reg.gauge_set("block_engine_perf_factor", &[], st.perf_factor);
+    reg.render()
 }
 
 /// Route one request.  Returns (status, body, shutdown).
@@ -146,7 +175,10 @@ fn handle(backend: &mut dyn ServingBackend, opts: &InstanceOptions,
                 // snapshot reflects the last advance.
                 if let Some(t) = wire::query_param(&params, "now") {
                     match t.parse::<f64>() {
-                        Ok(t) if t.is_finite() => backend.advance(t),
+                        Ok(t) if t.is_finite() => {
+                            backend.advance(t);
+                            crate::util::logging::set_virtual_now(t);
+                        }
                         _ => {
                             return (400, http::error_body("bad 'now'"), false);
                         }
@@ -242,8 +274,8 @@ fn handle(backend: &mut dyn ServingBackend, opts: &InstanceOptions,
         }
         // Known paths with the wrong verb are method errors, everything
         // else is unrouted.
-        (_, "/health" | "/healthz" | "/status" | "/enqueue" | "/drain"
-         | "/degrade" | "/shutdown") => {
+        (_, "/health" | "/healthz" | "/status" | "/metrics" | "/enqueue"
+         | "/drain" | "/degrade" | "/shutdown") => {
             (405, http::error_body("method not allowed"), false)
         }
         _ => (404, http::error_body("not found"), false),

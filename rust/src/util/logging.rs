@@ -3,9 +3,20 @@
 //! Level comes from `BLOCK_LOG` (error|warn|info|debug|trace), default
 //! `info`.  Used by the coordinator event loop and the HTTP server; the
 //! discrete-event simulator stays silent on the hot path.
+//!
+//! Two observability extensions, both off by default:
+//!
+//! * `BLOCK_LOG_FORMAT=json` (or [`set_format`]) switches every line to
+//!   one compact JSON object (`t`, `clock`, `level`, `module`, `msg`) —
+//!   machine-ingestible without a parser for the bracketed text form.
+//! * [`set_virtual_now`] installs a process-wide virtual-clock cell:
+//!   once stamped with a finite time, log lines carry the *simulated*
+//!   timestamp instead of wall-elapsed seconds, so daemon logs from a
+//!   virtual-clock replay line up with the trace timeline.  Never
+//!   installed → wall behavior is unchanged.
 
-use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::OnceLock;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, OnceLock};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -37,10 +48,33 @@ impl Level {
             Level::Trace => "TRACE",
         }
     }
+
+    /// Unpadded lowercase name (the JSON form's `level` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+}
+
+/// Line format: bracketed text (default) or one JSON object per line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    Text = 0,
+    Json = 1,
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+static FORMAT: AtomicU8 = AtomicU8::new(u8::MAX);
 static START: OnceLock<std::time::Instant> = OnceLock::new();
+/// Process-wide virtual-clock cell (f64 bits).  `None` until installed;
+/// a non-finite stamp (the initial NaN) falls back to wall time, so a
+/// cell installed before the replay starts is harmless.
+static VCLOCK: OnceLock<Arc<AtomicU64>> = OnceLock::new();
 
 fn current_level() -> u8 {
     let v = LEVEL.load(Ordering::Relaxed);
@@ -60,6 +94,40 @@ pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+fn current_format() -> Format {
+    let v = FORMAT.load(Ordering::Relaxed);
+    if v != u8::MAX {
+        return if v == Format::Json as u8 { Format::Json } else { Format::Text };
+    }
+    let f = match std::env::var("BLOCK_LOG_FORMAT").ok().as_deref() {
+        Some("json") => Format::Json,
+        _ => Format::Text,
+    };
+    FORMAT.store(f as u8, Ordering::Relaxed);
+    f
+}
+
+/// Override the line format programmatically (tests; the env twin is
+/// `BLOCK_LOG_FORMAT=json`).
+pub fn set_format(f: Format) {
+    FORMAT.store(f as u8, Ordering::Relaxed);
+}
+
+/// The shared virtual-clock cell, installing it on first call.  Holds
+/// f64 bits; readers treat a non-finite value as "not stamped yet".
+pub fn virtual_clock() -> Arc<AtomicU64> {
+    VCLOCK
+        .get_or_init(|| Arc::new(AtomicU64::new(f64::NAN.to_bits())))
+        .clone()
+}
+
+/// Stamp the virtual clock: subsequent log lines carry `t` (simulated
+/// seconds) instead of wall-elapsed time.  Virtual-clock daemons call
+/// this as their replay advances.
+pub fn set_virtual_now(t: f64) {
+    virtual_clock().store(t.to_bits(), Ordering::Relaxed);
+}
+
 pub fn enabled(level: Level) -> bool {
     (level as u8) <= current_level()
 }
@@ -68,9 +136,32 @@ pub fn log(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if !enabled(level) {
         return;
     }
-    let start = START.get_or_init(std::time::Instant::now);
-    let t = start.elapsed().as_secs_f64();
-    eprintln!("[{t:9.3}s {} {module}] {msg}", level.tag());
+    let virt = VCLOCK
+        .get()
+        .map(|c| f64::from_bits(c.load(Ordering::Relaxed)))
+        .filter(|t| t.is_finite());
+    let (t, clock) = match virt {
+        Some(t) => (t, "virtual"),
+        None => {
+            let start = START.get_or_init(std::time::Instant::now);
+            (start.elapsed().as_secs_f64(), "wall")
+        }
+    };
+    match current_format() {
+        Format::Text => {
+            eprintln!("[{t:9.3}s {} {module}] {msg}", level.tag());
+        }
+        Format::Json => {
+            let mut o = crate::util::json::JsonObj::new();
+            o.insert("t", t);
+            o.insert("clock", clock);
+            o.insert("level", level.name());
+            o.insert("module", module);
+            o.insert("msg", format!("{msg}"));
+            eprintln!("{}",
+                      crate::util::json::Json::Obj(o).to_string_compact());
+        }
+    }
 }
 
 #[macro_export]
@@ -99,6 +190,21 @@ mod tests {
         assert_eq!(Level::parse("warn"), Some(Level::Warn));
         assert_eq!(Level::parse("TRACE"), Some(Level::Trace));
         assert_eq!(Level::parse("nope"), None);
+    }
+
+    #[test]
+    fn format_override() {
+        set_format(Format::Json);
+        assert_eq!(current_format(), Format::Json);
+        set_format(Format::Text);
+        assert_eq!(current_format(), Format::Text);
+    }
+
+    #[test]
+    fn virtual_clock_stamp_is_readable() {
+        set_virtual_now(12.5);
+        let c = virtual_clock();
+        assert_eq!(f64::from_bits(c.load(Ordering::Relaxed)), 12.5);
     }
 
     #[test]

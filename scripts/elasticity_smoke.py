@@ -15,7 +15,8 @@ loopback and drives the wire side of the elasticity lifecycle:
   (drain -> retire, no new dispatches) and a second update re-adds it
   (retired -> backup -> probed -> active);
 * telemetry — ``GET /status`` exposes the live active set and the
-  lifecycle transition timeline; ``GET /healthz`` answers on instances.
+  lifecycle transition timeline; ``GET /healthz`` answers on instances;
+  ``GET /metrics`` tracks the slot-state gauge through the episode.
 
 Usage: elasticity_smoke.py [--scheduler block|min-qpm] [--bin PATH]
 """
@@ -25,81 +26,13 @@ import json
 import subprocess
 import sys
 import tempfile
-import threading
-import time
-import urllib.error
-import urllib.request
+
+from smoke_common import (fire_batch, http, scrape_metrics, shutdown_all,
+                          wait_for_instance, wait_healthy)
 
 BASE_PORT = 18800
 N_INSTANCES = 3
-MAX_NEW = 16
 VICTIM = 2
-
-
-def http(method, addr, path, body=None, timeout=30):
-    data = json.dumps(body).encode() if body is not None else None
-    req = urllib.request.Request(
-        f"http://{addr}{path}", data=data, method=method,
-        headers={"Content-Type": "application/json"})
-    with urllib.request.urlopen(req, timeout=timeout) as resp:
-        return resp.status, json.loads(resp.read().decode() or "{}")
-
-
-def wait_healthy(addr, deadline=30.0):
-    t0 = time.time()
-    while time.time() - t0 < deadline:
-        try:
-            status, body = http("GET", addr, "/health", timeout=2)
-            if status == 200 and body.get("ok"):
-                return
-        except (urllib.error.URLError, ConnectionError, OSError):
-            pass
-        time.sleep(0.2)
-    raise SystemExit(f"{addr} did not come up within {deadline}s")
-
-
-def fire_batch(gw_addr, n, tag):
-    """n concurrent /generate calls; returns the landing instances.
-
-    Every call must return 200 with the full token budget — the
-    no-dropped-requests assertion rides on this.
-    """
-    results, errors = [], []
-
-    def fire(i):
-        try:
-            status, body = http(
-                "POST", gw_addr, "/generate",
-                {"prompt": f"{tag} {i}", "prompt_tokens": 200,
-                 "max_new": MAX_NEW}, timeout=120)
-            assert status == 200, body
-            assert body["tokens"] == MAX_NEW, body
-            results.append(body["instance"])
-        except Exception as e:  # noqa: BLE001 - smoke harness
-            errors.append(f"{tag} request {i}: {e}")
-
-    threads = [threading.Thread(target=fire, args=(i,)) for i in range(n)]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
-    assert not errors, errors
-    assert len(results) == n
-    return results
-
-
-def wait_for_instance(gw_addr, instance, tag, deadline=30.0, batch=6):
-    """Fire small batches until `instance` serves again (rebalance)."""
-    t0 = time.time()
-    seen = []
-    while time.time() - t0 < deadline:
-        seen = fire_batch(gw_addr, batch, tag)
-        if instance in seen:
-            return seen
-        time.sleep(0.3)
-    raise SystemExit(
-        f"instance {instance} never rejoined the split within "
-        f"{deadline}s (last batch: {seen})")
 
 
 def spawn_instance(args, mf_name, index):
@@ -158,6 +91,8 @@ def main():
         split_a = [a.count(i) for i in range(N_INSTANCES)]
         print(f"phase A split: {split_a}")
         assert all(n >= 1 for n in split_a), f"skewed: {split_a}"
+        gm, _ = scrape_metrics(gw_addr)
+        assert gm[("block_slots", (("state", "active"),))] == N_INSTANCES
 
         # Phase B: kill one daemon between batches; traffic must keep
         # completing on the survivors with zero dropped requests.
@@ -176,13 +111,16 @@ def main():
         for ev in gst["lifecycle"]:
             for field in ("time", "instance", "state", "cause"):
                 assert field in ev, ev
+        # The slot-state gauge mirrors the active set.
+        gm, _ = scrape_metrics(gw_addr)
+        assert gm[("block_slots", (("state", "active"),))] < N_INSTANCES
 
         # Phase C: restart the daemon on the same port; the gateway
         # re-admits it and the split rebalances.
         procs[VICTIM] = spawn_instance(args, mf.name, VICTIM)
         wait_healthy(inst_addrs[VICTIM])
-        c = wait_for_instance(gw_addr, VICTIM, "phase-c")
-        total_ok += len(c)
+        fired, _seen = wait_for_instance(gw_addr, VICTIM, "phase-c")
+        total_ok += fired
         print(f"phase C rebalanced: victim {VICTIM} back in split")
         _, gst = http("GET", gw_addr, "/status")
         assert gst["active_set"][VICTIM] == "active", gst["active_set"]
@@ -208,8 +146,8 @@ def main():
         # re-admits the (still running) daemon.
         status, resp = http("POST", gw_addr, "/manifest", manifest)
         assert status == 200, resp
-        e = wait_for_instance(gw_addr, VICTIM, "manifest-readd")
-        total_ok += len(e)
+        fired, _seen = wait_for_instance(gw_addr, VICTIM, "manifest-readd")
+        total_ok += fired
         _, gst = http("GET", gw_addr, "/status")
         assert gst["active_set"][VICTIM] == "active", gst["active_set"]
         states = {ev["state"] for ev in gst["lifecycle"]}
@@ -218,25 +156,19 @@ def main():
         assert "manifest-remove" in causes and "manifest-add" in causes, \
             gst["lifecycle"]
 
-        # Conservation on the wire: every accepted request completed.
+        # Conservation on the wire: every accepted request completed —
+        # in JSON status and in the Prometheus scrape alike.
         assert gst["completed"] == total_ok, (gst["completed"], total_ok)
         assert gst["rejected"] == 0, gst
+        gm, _ = scrape_metrics(gw_addr)
+        assert gm[("block_e2e_seconds_count", ())] == total_ok, gm
+        assert gm[("block_slots", (("state", "active"),))] == N_INSTANCES
 
         print(f"elasticity-smoke OK: {total_ok} requests, scheduler "
               f"{args.scheduler}, kill/restart + manifest add/remove "
               f"re-admission exercised")
     finally:
-        for addr in inst_addrs + [gw_addr]:
-            try:
-                http("POST", addr, "/shutdown", timeout=2)
-            except Exception:  # noqa: BLE001
-                pass
-        deadline = time.time() + 5
-        for p in procs.values():
-            try:
-                p.wait(timeout=max(0.1, deadline - time.time()))
-            except subprocess.TimeoutExpired:
-                p.kill()
+        shutdown_all(inst_addrs + [gw_addr], procs.values())
 
 
 if __name__ == "__main__":

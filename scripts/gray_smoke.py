@@ -28,38 +28,15 @@ import signal
 import subprocess
 import sys
 import tempfile
-import threading
 import time
-import urllib.error
-import urllib.request
+
+from smoke_common import (fire_batch, http, scrape_metrics, shutdown_all,
+                          wait_for_instance, wait_healthy)
 
 BASE_PORT = 18900
 N_INSTANCES = 2
-MAX_NEW = 16
 VICTIM = 1
 SURVIVOR = 0
-
-
-def http(method, addr, path, body=None, timeout=30):
-    data = json.dumps(body).encode() if body is not None else None
-    req = urllib.request.Request(
-        f"http://{addr}{path}", data=data, method=method,
-        headers={"Content-Type": "application/json"})
-    with urllib.request.urlopen(req, timeout=timeout) as resp:
-        return resp.status, json.loads(resp.read().decode() or "{}")
-
-
-def wait_healthy(addr, deadline=30.0):
-    t0 = time.time()
-    while time.time() - t0 < deadline:
-        try:
-            status, body = http("GET", addr, "/health", timeout=2)
-            if status == 200 and body.get("ok"):
-                return
-        except (urllib.error.URLError, ConnectionError, OSError):
-            pass
-        time.sleep(0.2)
-    raise SystemExit(f"{addr} did not come up within {deadline}s")
 
 
 def wait_state(gw_addr, instance, states, tag, deadline=60.0):
@@ -75,52 +52,6 @@ def wait_state(gw_addr, instance, states, tag, deadline=60.0):
     raise SystemExit(
         f"{tag}: instance {instance} never reached {states} within "
         f"{deadline}s (last state: {last})")
-
-
-def fire_batch(gw_addr, n, tag):
-    """n concurrent /generate calls; returns the landing instances.
-
-    Every call must return 200 with the full token budget — the
-    no-dropped-requests assertion rides on this.
-    """
-    results, errors = [], []
-
-    def fire(i):
-        try:
-            status, body = http(
-                "POST", gw_addr, "/generate",
-                {"prompt": f"{tag} {i}", "prompt_tokens": 200,
-                 "max_new": MAX_NEW}, timeout=120)
-            assert status == 200, body
-            assert body["tokens"] == MAX_NEW, body
-            results.append(body["instance"])
-        except Exception as e:  # noqa: BLE001 - smoke harness
-            errors.append(f"{tag} request {i}: {e}")
-
-    threads = [threading.Thread(target=fire, args=(i,)) for i in range(n)]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
-    assert not errors, errors
-    assert len(results) == n
-    return results
-
-
-def wait_for_instance(gw_addr, instance, tag, deadline=30.0, batch=6):
-    """Fire small batches until `instance` serves again (rebalance)."""
-    t0 = time.time()
-    seen = []
-    total = 0
-    while time.time() - t0 < deadline:
-        seen = fire_batch(gw_addr, batch, tag)
-        total += batch
-        if instance in seen:
-            return total
-        time.sleep(0.3)
-    raise SystemExit(
-        f"instance {instance} never rejoined the split within "
-        f"{deadline}s (last batch: {seen})")
 
 
 def main():
@@ -209,6 +140,10 @@ def main():
         assert any(ev["state"] == "failed" and ev["cause"] == "gray-fail"
                    for ev in gst["lifecycle"]), gst["lifecycle"]
         print("victim escalated: degraded -> failed (gray-fail)")
+        # The scrape exposes the quarantine: one slot out of rotation.
+        gm, _ = scrape_metrics(gw_addr)
+        assert gm[("block_slots", (("state", "active"),))] \
+            == N_INSTANCES - 1, gm
 
         # Thaw: SIGCONT wakes the daemon; the health prober re-admits
         # the Failed slot and the split rebalances onto it.
@@ -216,7 +151,8 @@ def main():
         gst = wait_state(gw_addr, VICTIM, ("active",), "thaw")
         assert any(ev["state"] == "active" and ev["cause"] == "rejoin"
                    for ev in gst["lifecycle"]), gst["lifecycle"]
-        total_ok += wait_for_instance(gw_addr, VICTIM, "thawed")
+        fired, _seen = wait_for_instance(gw_addr, VICTIM, "thawed")
+        total_ok += fired
         print("victim re-admitted: back in the dispatch split")
 
         # Conservation on the wire: every accepted request completed —
@@ -237,17 +173,7 @@ def main():
                 procs[i].send_signal(signal.SIGCONT)
             except Exception:  # noqa: BLE001
                 pass
-        for addr in inst_addrs + [gw_addr]:
-            try:
-                http("POST", addr, "/shutdown", timeout=2)
-            except Exception:  # noqa: BLE001
-                pass
-        deadline = time.time() + 5
-        for p in procs.values():
-            try:
-                p.wait(timeout=max(0.1, deadline - time.time()))
-            except subprocess.TimeoutExpired:
-                p.kill()
+        shutdown_all(inst_addrs + [gw_addr], procs.values())
 
 
 if __name__ == "__main__":

@@ -7,7 +7,9 @@ loopback, fires concurrent ``POST /generate`` requests, and asserts
 * completeness — every request returns 200 with the full token budget;
 * a balanced dispatch split across the instances;
 * a well-formed ``/status`` on every component (the gateway's telemetry
-  counters and the instances' full InstanceStatus schema).
+  counters and the instances' full InstanceStatus schema);
+* a live ``GET /metrics`` on every component in the Prometheus text
+  exposition format, consistent with the JSON counters.
 
 Usage: serve_smoke.py [--scheduler block|min-qpm|...] [--bin PATH]
 """
@@ -17,37 +19,14 @@ import json
 import subprocess
 import sys
 import tempfile
-import threading
-import time
-import urllib.error
-import urllib.request
+
+from smoke_common import (fire_batch, http, scrape_metrics, shutdown_all,
+                          sum_samples, wait_healthy)
 
 BASE_PORT = 18600
 N_INSTANCES = 2
 N_REQUESTS = 16
 MAX_NEW = 16
-
-
-def http(method, addr, path, body=None, timeout=30):
-    data = json.dumps(body).encode() if body is not None else None
-    req = urllib.request.Request(
-        f"http://{addr}{path}", data=data, method=method,
-        headers={"Content-Type": "application/json"})
-    with urllib.request.urlopen(req, timeout=timeout) as resp:
-        return resp.status, json.loads(resp.read().decode() or "{}")
-
-
-def wait_healthy(addr, deadline=30.0):
-    t0 = time.time()
-    while time.time() - t0 < deadline:
-        try:
-            status, body = http("GET", addr, "/health", timeout=2)
-            if status == 200 and body.get("ok"):
-                return
-        except (urllib.error.URLError, ConnectionError, OSError):
-            pass
-        time.sleep(0.2)
-    raise SystemExit(f"{addr} did not come up within {deadline}s")
 
 
 def main():
@@ -93,28 +72,7 @@ def main():
             wait_healthy(addr)
 
         # Concurrent generation.
-        results, errors = [], []
-
-        def fire(i):
-            try:
-                status, body = http(
-                    "POST", gw_addr, "/generate",
-                    {"prompt": f"smoke {i}", "prompt_tokens": 200,
-                     "max_new": MAX_NEW}, timeout=120)
-                assert status == 200, body
-                assert body["tokens"] == MAX_NEW, body
-                results.append(body["instance"])
-            except Exception as e:  # noqa: BLE001 - smoke harness
-                errors.append(f"request {i}: {e}")
-
-        threads = [threading.Thread(target=fire, args=(i,))
-                   for i in range(N_REQUESTS)]
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join()
-        assert not errors, errors
-        assert len(results) == N_REQUESTS
+        results = fire_batch(gw_addr, N_REQUESTS, "smoke", max_new=MAX_NEW)
 
         split = [results.count(i) for i in range(N_INSTANCES)]
         print(f"dispatch split: {split}")
@@ -130,9 +88,27 @@ def main():
         assert sum(gst["frontend_dispatches"]) == N_REQUESTS
         assert gst["bounced"] == 0 and gst["rejected"] == 0
         assert gst["summary"]["mean_e2e"] > 0
+        # The uniform telemetry sub-object mirrors the simulator's
+        # envelope vocabulary.
+        tel = gst["telemetry"]
+        assert tel["completed"] == N_REQUESTS, tel
+        assert tel["wall_time_s"] > 0
+        assert sum(tel["frontend_dispatches"]) == N_REQUESTS
+        assert tel["slot_states"]["active"] == N_INSTANCES, tel
 
-        # Instances export the full status schema + daemon counters.
-        for addr in inst_addrs:
+        # The gateway's Prometheus scrape agrees with its JSON status.
+        gm, gtypes = scrape_metrics(gw_addr)
+        assert gtypes["block_dispatches_total"] == "counter"
+        assert gtypes["block_e2e_seconds"] == "histogram"
+        assert sum_samples(gm, "block_dispatches_total") == N_REQUESTS
+        assert sum_samples(gm, "block_finished_requests_total") == N_REQUESTS
+        assert gm[("block_e2e_seconds_count", ())] == N_REQUESTS
+        assert gm[("block_in_flight", ())] == 0
+        assert gm[("block_slots", (("state", "active"),))] == N_INSTANCES
+
+        # Instances export the full status schema + daemon counters,
+        # and their own /metrics scrape matches.
+        for idx, addr in enumerate(inst_addrs):
             _, ist = http("GET", addr, "/status")
             for field in ("now", "epoch", "free_blocks", "total_blocks",
                           "watermark_blocks", "running", "waiting",
@@ -142,6 +118,18 @@ def main():
             assert ist["requests_enqueued"] > 0
             assert ist["requests_completed"] > 0
             assert ist["tokens_generated"] > 0
+            im, itypes = scrape_metrics(addr)
+            assert itypes["block_requests_completed_total"] == "counter"
+            assert im[("block_requests_completed_total", ())] \
+                == ist["requests_completed"], (addr, im)
+            assert im[("block_requests_enqueued_total", ())] \
+                == ist["requests_enqueued"], (addr, im)
+            assert im[("block_tokens_generated_total", ())] \
+                == ist["tokens_generated"], (addr, im)
+            assert im[("block_engine_free_blocks", ())] \
+                <= im[("block_engine_total_blocks", ())], (addr, im)
+            assert split[idx] == ist["requests_completed"], \
+                (split, idx, ist["requests_completed"])
 
         # The tagger path answers.
         _, pred = http("POST", gw_addr, "/predict",
@@ -149,19 +137,9 @@ def main():
         assert pred["predicted_tokens"] >= 1
 
         print(f"serve-smoke OK: {N_REQUESTS} requests, scheduler "
-              f"{args.scheduler}, split {split}")
+              f"{args.scheduler}, split {split}, /metrics consistent")
     finally:
-        for addr in inst_addrs + [gw_addr]:
-            try:
-                http("POST", addr, "/shutdown", timeout=2)
-            except Exception:  # noqa: BLE001
-                pass
-        deadline = time.time() + 5
-        for p in procs:
-            try:
-                p.wait(timeout=max(0.1, deadline - time.time()))
-            except subprocess.TimeoutExpired:
-                p.kill()
+        shutdown_all(inst_addrs + [gw_addr], procs)
 
 
 if __name__ == "__main__":

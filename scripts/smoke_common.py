@@ -1,0 +1,185 @@
+"""Shared plumbing for the wire smoke harnesses.
+
+Every smoke script (serve, elasticity, gray, obs) drives the same stack
+the same way: JSON HTTP against loopback daemons, a health-poll loop, a
+concurrent ``/generate`` batch with the no-dropped-requests assertion,
+and a teardown that always tries ``POST /shutdown`` first.  This module
+is that plumbing, factored once, plus the Prometheus text-exposition
+scraper/parser the ``/metrics`` checks are built on.
+
+Only the standard library is used — the smoke scripts must run on a
+bare CI runner.
+"""
+
+import json
+import subprocess
+import threading
+import time
+import urllib.error
+import urllib.request
+
+PROM_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+def http(method, addr, path, body=None, timeout=30):
+    """JSON request/response against a loopback daemon."""
+    data = json.dumps(body).encode() if body is not None else None
+    req = urllib.request.Request(
+        f"http://{addr}{path}", data=data, method=method,
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=timeout) as resp:
+        return resp.status, json.loads(resp.read().decode() or "{}")
+
+
+def http_text(addr, path, timeout=30):
+    """GET returning the raw body + Content-Type (for /metrics)."""
+    req = urllib.request.Request(f"http://{addr}{path}", method="GET")
+    with urllib.request.urlopen(req, timeout=timeout) as resp:
+        ctype = resp.headers.get("Content-Type", "")
+        return resp.status, ctype, resp.read().decode()
+
+
+def wait_healthy(addr, deadline=30.0):
+    """Poll GET /health until the daemon answers ``{"ok": true}``."""
+    t0 = time.time()
+    while time.time() - t0 < deadline:
+        try:
+            status, body = http("GET", addr, "/health", timeout=2)
+            if status == 200 and body.get("ok"):
+                return
+        except (urllib.error.URLError, ConnectionError, OSError):
+            pass
+        time.sleep(0.2)
+    raise SystemExit(f"{addr} did not come up within {deadline}s")
+
+
+def fire_batch(gw_addr, n, tag, prompt_tokens=200, max_new=16):
+    """n concurrent /generate calls; returns the landing instances.
+
+    Every call must return 200 with the full token budget — the
+    no-dropped-requests assertion rides on this.
+    """
+    results, errors = [], []
+
+    def fire(i):
+        try:
+            status, body = http(
+                "POST", gw_addr, "/generate",
+                {"prompt": f"{tag} {i}", "prompt_tokens": prompt_tokens,
+                 "max_new": max_new}, timeout=120)
+            assert status == 200, body
+            assert body["tokens"] == max_new, body
+            results.append(body["instance"])
+        except Exception as e:  # noqa: BLE001 - smoke harness
+            errors.append(f"{tag} request {i}: {e}")
+
+    threads = [threading.Thread(target=fire, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert len(results) == n
+    return results
+
+
+def wait_for_instance(gw_addr, instance, tag, deadline=30.0, batch=6):
+    """Fire small batches until `instance` serves again (rebalance).
+
+    Returns ``(total_fired, last_batch)`` so callers can both keep
+    their conservation count and inspect the rebalanced split.
+    """
+    t0 = time.time()
+    seen = []
+    total = 0
+    while time.time() - t0 < deadline:
+        seen = fire_batch(gw_addr, batch, tag)
+        total += batch
+        if instance in seen:
+            return total, seen
+        time.sleep(0.3)
+    raise SystemExit(
+        f"instance {instance} never rejoined the split within "
+        f"{deadline}s (last batch: {seen})")
+
+
+def parse_prometheus(text):
+    """Parse a Prometheus text-format 0.0.4 page.
+
+    Returns ``(samples, types)``: ``samples`` maps
+    ``(name, (("label", "value"), ...))`` — labels sorted — to the
+    float sample, ``types`` maps metric name to its declared TYPE.
+    Raises AssertionError on any line the grammar does not allow.
+    """
+    samples, types = {}, {}
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            assert len(parts) == 4, f"bad TYPE line: {line!r}"
+            assert parts[3] in ("counter", "gauge", "histogram",
+                                "summary", "untyped"), line
+            types[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue  # HELP / comments
+        metric, _, value = line.rpartition(" ")
+        assert metric, f"bad sample line: {line!r}"
+        float(value)  # must parse
+        if "{" in metric:
+            name, _, rest = metric.partition("{")
+            assert rest.endswith("}"), f"bad labels: {line!r}"
+            labels = []
+            body = rest[:-1]
+            if body:
+                for pair in body.split(","):
+                    k, _, v = pair.partition("=")
+                    assert v.startswith('"') and v.endswith('"'), line
+                    labels.append((k, v[1:-1]))
+            key = (name, tuple(sorted(labels)))
+        else:
+            key = (metric, ())
+        assert key not in samples, f"duplicate sample: {line!r}"
+        samples[key] = float(value)
+    assert types, "no TYPE declarations in exposition"
+    return samples, types
+
+
+def scrape_metrics(addr):
+    """GET /metrics, assert the exposition contract, return samples.
+
+    Checks the Prometheus content type and that the page parses under
+    :func:`parse_prometheus`; returns ``(samples, types)``.
+    """
+    status, ctype, text = http_text(addr, "/metrics")
+    assert status == 200, (addr, status)
+    assert ctype == PROM_CONTENT_TYPE, (addr, ctype)
+    samples, types = parse_prometheus(text)
+    for (name, _labels) in samples:
+        base = name
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix) and name[:-len(suffix)] in types:
+                base = name[:-len(suffix)]
+        assert base in types, f"{addr}: sample {name} missing TYPE"
+    return samples, types
+
+
+def sum_samples(samples, name):
+    """Sum every sample of `name` across its label sets."""
+    return sum(v for (n, _), v in samples.items() if n == name)
+
+
+def shutdown_all(addrs, procs, grace=5.0):
+    """Best-effort POST /shutdown, then wait (or kill) the daemons."""
+    for addr in addrs:
+        try:
+            http("POST", addr, "/shutdown", timeout=2)
+        except Exception:  # noqa: BLE001
+            pass
+    deadline = time.time() + grace
+    for p in procs:
+        try:
+            p.wait(timeout=max(0.1, deadline - time.time()))
+        except subprocess.TimeoutExpired:
+            p.kill()

@@ -1,0 +1,152 @@
+#!/usr/bin/env python3
+"""validate-trace: schema-check the artifacts of ``simulate --trace``.
+
+Validates the pair of decision-trace artifacts the simulator dumps:
+
+* the Chrome trace-event JSON (``--trace FILE``) — Perfetto-loadable
+  shape: a ``traceEvents`` list of ``ph:"X"`` complete slices (annotated
+  decisions, spanning arrival -> finish on the chosen instance's track)
+  and ``ph:"i"`` instants (unannotated ones);
+* the raw JSONL decision log (``FILE.jsonl``) — one decision per line,
+  checked for schema and for the scheduler's own invariants: the chosen
+  instance is the candidate-set argmin, the annotated instance is the
+  chosen one on fault-free runs, and ``residual == actual - predicted``.
+
+With ``--result out.json`` (the ``--json`` envelope of the same run)
+the artifact counts are cross-checked against the run's obs summary.
+
+Usage: validate_trace.py TRACE.json TRACE.jsonl [--result OUT.json]
+                         [--allow-redispatch]
+"""
+
+import argparse
+import json
+import sys
+
+NUM = (int, float)
+
+
+def fail(msg):
+    raise SystemExit(f"validate-trace: {msg}")
+
+
+def validate_chrome(path):
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents must be a non-empty list")
+    complete = 0
+    for ev in events:
+        for field in ("name", "cat", "pid", "ph", "tid", "ts", "args"):
+            if field not in ev:
+                fail(f"{path}: event missing {field}: {ev}")
+        if ev["cat"] != "dispatch":
+            fail(f"{path}: unexpected category: {ev}")
+        args = ev["args"]
+        if "id" not in args or "chosen" not in args:
+            fail(f"{path}: args missing id/chosen: {ev}")
+        if ev["ph"] == "X":
+            complete += 1
+            if not (isinstance(ev["dur"], NUM) and ev["dur"] >= 0):
+                fail(f"{path}: X event needs dur >= 0: {ev}")
+            if not isinstance(args.get("actual_e2e"), NUM):
+                fail(f"{path}: X event lacks actual_e2e: {ev}")
+            if ev["tid"] != args.get("actual_instance", ev["tid"]):
+                fail(f"{path}: X event off its instance track: {ev}")
+        elif ev["ph"] == "i":
+            if ev.get("s") != "t":
+                fail(f"{path}: instant needs scope 't': {ev}")
+        else:
+            fail(f"{path}: unexpected phase {ev['ph']!r}")
+    return len(events), complete
+
+
+def validate_jsonl(path, allow_redispatch):
+    n = annotated = 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                fail(f"{path}:{lineno}: bad JSON ({e})")
+            n += 1
+            for field in ("id", "arrival", "t", "frontend", "chosen",
+                          "overhead", "candidates"):
+                if field not in rec:
+                    fail(f"{path}:{lineno}: missing {field}")
+            if rec["t"] < rec["arrival"]:
+                fail(f"{path}:{lineno}: decision precedes arrival")
+            cands = rec["candidates"]
+            if cands:
+                for c in cands:
+                    if not isinstance(c.get("instance"), int) \
+                            or not isinstance(c.get("predicted_e2e"), NUM):
+                        fail(f"{path}:{lineno}: malformed candidate {c}")
+                by_inst = {c["instance"]: c["predicted_e2e"] for c in cands}
+                if rec["chosen"] not in by_inst:
+                    fail(f"{path}:{lineno}: chosen not in candidate set")
+                best = min(by_inst.values())
+                if by_inst[rec["chosen"]] > best:
+                    fail(f"{path}:{lineno}: chosen is not the argmin "
+                         f"({by_inst[rec['chosen']]} > {best})")
+            if "actual_e2e" in rec:
+                annotated += 1
+                if "predicted_e2e" in rec:
+                    want = rec["actual_e2e"] - rec["predicted_e2e"]
+                    if abs(rec.get("residual", want) - want) > 1e-9:
+                        fail(f"{path}:{lineno}: residual mismatch")
+                if not allow_redispatch \
+                        and rec.get("actual_instance") != rec["chosen"]:
+                    fail(f"{path}:{lineno}: annotated instance "
+                         f"{rec.get('actual_instance')} != chosen "
+                         f"{rec['chosen']} on a fault-free run")
+    if n == 0:
+        fail(f"{path}: no decision records")
+    return n, annotated
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome trace-event JSON")
+    ap.add_argument("jsonl", help="raw JSONL decision log")
+    ap.add_argument("--result", help="--json result envelope to cross-check")
+    ap.add_argument("--allow-redispatch", action="store_true",
+                    help="run had faults: annotated instance may differ "
+                         "from the (superseded) chosen one")
+    args = ap.parse_args()
+
+    events, complete = validate_chrome(args.trace)
+    decisions, annotated = validate_jsonl(args.jsonl,
+                                          args.allow_redispatch)
+    if events != decisions:
+        fail(f"artifact mismatch: {events} trace events vs "
+             f"{decisions} JSONL decisions")
+    if complete != annotated:
+        fail(f"artifact mismatch: {complete} complete slices vs "
+             f"{annotated} annotated decisions")
+
+    if args.result:
+        with open(args.result) as f:
+            res = json.load(f)
+        obs = res.get("obs")
+        if not obs:
+            fail(f"{args.result}: no obs summary in the envelope")
+        if obs["decisions"] != decisions or obs["annotated"] != annotated:
+            fail(f"envelope disagrees with artifacts: {obs} vs "
+                 f"{decisions}/{annotated}")
+        if obs["flight_recorded"] < decisions:
+            fail("flight recorder saw fewer events than decisions")
+        tel = res.get("telemetry")
+        if not tel or tel.get("events_processed", 0) <= 0:
+            fail(f"{args.result}: telemetry envelope missing/empty")
+
+    print(f"validate-trace OK: {decisions} decisions ({annotated} "
+          f"annotated), {events} trace events ({complete} complete)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())
