@@ -1,16 +1,37 @@
 //! `cargo bench --bench cluster` — the macro benchmark: whole-cluster
-//! simulation throughput at 16 / 128 / 1024 instances, single-heap
-//! (`shards = 1`) vs sharded (`shards = 8`) execution.
+//! simulation throughput, single-heap (`shards = 1`) vs sharded
+//! (`shards = 8`) execution, across the knob-eligibility matrix.
 //!
-//! Each size runs the same min-qpm workload through both backends and
+//! Two axes:
+//!
+//! * **Size** (vanilla config only): 16 / 128 / 1024 instances, the
+//!   1024 point being the paper's O(1000) mega-scale tier at >= 1M
+//!   requests.
+//! * **Knob config** (at 128 instances): `vanilla`, `+provision`
+//!   (relief auto-provisioning + idle scale-down), `+detect`
+//!   (gray-failure residual detection), `+echo+ack` (local echo and
+//!   ack-piggybacked view syncs) — the barrier-quantized knobs whose
+//!   serialized-fallback exclusions were lifted, i.e. the knob space
+//!   of the chaos / gray-chaos / elasticity sweeps.  Each config's row
+//!   proves the windowed fast path survives the knob (`serial_events`
+//!   strictly below the run's total event count) and still speeds up.
+//!
+//! Each cell runs the same min-qpm workload through both backends and
 //! reports events/sec and requests/sec; byte parity between the two is
 //! asserted on every pair (the bench doubles as an end-to-end parity
 //! gate at scales the property tests don't reach).  Results land in
-//! `BENCH_cluster.json` at the repo root so the mega-scale trajectory
-//! is tracked PR over PR.
+//! `BENCH_cluster.json` (`bench-cluster/v2`) at the repo root so the
+//! mega-scale trajectory is tracked PR over PR.
 //!
-//! `-- --smoke` shrinks to one small size so CI can validate the JSON
-//! schema and the parity assertion without paying for the 1024x1M run.
+//! `-- --smoke` shrinks every cell to 16 instances / 2k requests so CI
+//! can validate the JSON schema, the parity assertion, and the
+//! per-config fast-path assertion without paying for the 1024x1M run.
+//!
+//! Caveat on `+provision`: min-qpm produces no latency predictions, so
+//! the *preemptive* trigger and the residual detector's observation
+//! stream are inert under it — the config exercises the relief trigger
+//! and the idle scale-down machinery, which is what the elasticity
+//! sweep runs.
 
 use std::time::Instant;
 
@@ -35,10 +56,44 @@ fn bench_cfg(n_instances: usize, shards: usize) -> ClusterConfig {
     cfg
 }
 
-fn run_once(n_instances: usize, shards: usize, wl: &WorkloadConfig)
-            -> SimResult {
+fn knob_vanilla(_cfg: &mut ClusterConfig) {}
+
+fn knob_provision(cfg: &mut ClusterConfig) {
+    let n = cfg.n_instances;
+    cfg.provision.enabled = true;
+    // Relief trigger (observed latency), not preemptive: min-qpm has
+    // no predictions to feed the preemptive path.
+    cfg.provision.predictive = false;
+    cfg.provision.initial_instances = n;
+    cfg.provision.max_instances = n + (n / 8).max(1);
+    cfg.provision.threshold = 25.0;
+    cfg.provision.cold_start = 5.0;
+    cfg.provision.scale_down_idle = 10.0;
+}
+
+fn knob_detect(cfg: &mut ClusterConfig) {
+    cfg.detect.enabled = true;
+}
+
+fn knob_echo_ack(cfg: &mut ClusterConfig) {
+    cfg.sync_on_ack = true;
+    cfg.local_echo = true;
+}
+
+/// The eligibility matrix: `(config key, runs all sizes?, knob setter)`.
+const CONFIGS: &[(&str, bool, fn(&mut ClusterConfig))] = &[
+    ("vanilla", true, knob_vanilla),
+    ("provision", false, knob_provision),
+    ("detect", false, knob_detect),
+    ("echo_ack", false, knob_echo_ack),
+];
+
+fn run_once(n_instances: usize, shards: usize, wl: &WorkloadConfig,
+            knob: fn(&mut ClusterConfig)) -> SimResult {
+    let mut cfg = bench_cfg(n_instances, shards);
+    knob(&mut cfg);
     run_experiment(
-        bench_cfg(n_instances, shards),
+        cfg,
         wl,
         SimOptions { probes: false, ..SimOptions::default() },
     )
@@ -67,6 +122,8 @@ struct RunStat {
     events: u64,
     requests: usize,
     wall_s: f64,
+    windows: u64,
+    serial_events: u64,
 }
 
 impl RunStat {
@@ -81,71 +138,108 @@ impl RunStat {
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
-    // (instances, requests): the 1024-instance point is the paper's
-    // O(1000) mega-scale tier at >= 1M requests.
-    let sizes: &[(usize, usize)] = if smoke {
+    // (instances, requests) per matrix column.  The knob configs run
+    // the 128-instance point only — the eligibility matrix is about
+    // which knobs keep the fast path, not about re-measuring scale.
+    let all_sizes: &[(usize, usize)] = if smoke {
         &[(16, 2_000)]
     } else {
         &[(16, 50_000), (128, 200_000), (1024, 1_000_000)]
     };
+    let knob_sizes: &[(usize, usize)] = if smoke {
+        &[(16, 2_000)]
+    } else {
+        &[(128, 200_000)]
+    };
     const SHARDED: usize = 8;
 
-    let mut runs = JsonObj::new();
-    for &(n, n_requests) in sizes {
-        let wl = WorkloadConfig {
-            kind: WorkloadKind::ShareGpt,
-            qps: 12.0 * n as f64,
-            n_requests,
-            seed: 7,
-        };
-        let mut stats = Vec::new();
-        let mut base: Option<SimResult> = None;
-        for shards in [1usize, SHARDED] {
-            let t0 = Instant::now();
-            let res = run_once(n, shards, &wl);
-            let wall = t0.elapsed().as_secs_f64();
-            println!(
-                "instances={n:<5} shards={shards:<2} {:>12} events  \
-                 {:>10.0} ev/s  {:>9.0} req/s  ({wall:.2}s)",
-                res.events_processed,
-                res.events_processed as f64 / wall.max(1e-9),
-                res.metrics.len() as f64 / wall.max(1e-9),
-            );
-            stats.push(RunStat {
-                shards,
-                events: res.events_processed,
-                requests: res.metrics.len(),
-                wall_s: wall,
-            });
-            match &base {
-                None => base = Some(res),
-                Some(b) => assert_parity(b, &res, n, shards),
+    let mut configs = JsonObj::new();
+    for &(config, every_size, knob) in CONFIGS {
+        let sizes = if every_size { all_sizes } else { knob_sizes };
+        let mut runs = JsonObj::new();
+        for &(n, n_requests) in sizes {
+            let wl = WorkloadConfig {
+                kind: WorkloadKind::ShareGpt,
+                qps: 12.0 * n as f64,
+                n_requests,
+                seed: 7,
+            };
+            let mut stats = Vec::new();
+            let mut base: Option<SimResult> = None;
+            for shards in [1usize, SHARDED] {
+                let t0 = Instant::now();
+                let res = run_once(n, shards, &wl, knob);
+                let wall = t0.elapsed().as_secs_f64();
+                println!(
+                    "config={config:<9} instances={n:<5} shards={shards:<2} \
+                     {:>12} events  {:>10.0} ev/s  {:>9.0} req/s  \
+                     ({wall:.2}s)",
+                    res.events_processed,
+                    res.events_processed as f64 / wall.max(1e-9),
+                    res.metrics.len() as f64 / wall.max(1e-9),
+                );
+                let (windows, serial_events) = match &res.sync_stats {
+                    Some(s) => (s.windows, s.serial_events),
+                    None => (0, res.events_processed),
+                };
+                if shards > 1 {
+                    // The whole point of the matrix: every config in
+                    // it is window-overlap eligible, so the sharded
+                    // run must take the windowed fast path, not the
+                    // serialized fallback.
+                    let ss = res.sync_stats.as_ref()
+                        .expect("sharded run reports sync stats");
+                    assert!(ss.serialized_reason.is_none(),
+                            "config={config}: sharded run fell back to \
+                             the serialized path: {:?}",
+                            ss.serialized_reason);
+                    assert!(ss.serial_events < res.events_processed,
+                            "config={config}: no events ran windowed \
+                             ({} serial of {})",
+                            ss.serial_events, res.events_processed);
+                }
+                stats.push(RunStat {
+                    shards,
+                    events: res.events_processed,
+                    requests: res.metrics.len(),
+                    wall_s: wall,
+                    windows,
+                    serial_events,
+                });
+                match &base {
+                    None => base = Some(res),
+                    Some(b) => assert_parity(b, &res, n, shards),
+                }
             }
+            let mut run = JsonObj::new();
+            run.insert("requests", n_requests);
+            run.insert("peak_instances", n);
+            for s in &stats {
+                let mut o = JsonObj::new();
+                o.insert("events", s.events as f64);
+                o.insert("wall_s", s.wall_s);
+                o.insert("events_per_s", s.events_per_s());
+                o.insert("requests_per_s", s.requests_per_s());
+                o.insert("windows", s.windows as f64);
+                o.insert("serial_events", s.serial_events as f64);
+                run.insert(format!("shards={}", s.shards), Json::Obj(o));
+            }
+            let speedup = stats[0].wall_s / stats[1].wall_s.max(1e-9);
+            run.insert("speedup", speedup);
+            println!("config={config:<9} instances={n:<5} sharded \
+                      speedup {speedup:.2}x");
+            runs.insert(format!("instances={n}"), Json::Obj(run));
         }
-        let mut run = JsonObj::new();
-        run.insert("requests", n_requests);
-        run.insert("peak_instances", n);
-        for s in &stats {
-            let mut o = JsonObj::new();
-            o.insert("events", s.events as f64);
-            o.insert("wall_s", s.wall_s);
-            o.insert("events_per_s", s.events_per_s());
-            o.insert("requests_per_s", s.requests_per_s());
-            run.insert(format!("shards={}", s.shards), Json::Obj(o));
-        }
-        let speedup = stats[0].wall_s / stats[1].wall_s.max(1e-9);
-        run.insert("speedup", speedup);
-        println!("instances={n:<5} sharded speedup {speedup:.2}x");
-        runs.insert(format!("instances={n}"), Json::Obj(run));
+        configs.insert(config, Json::Obj(runs));
     }
 
     let mut root = JsonObj::new();
-    root.insert("schema", "bench-cluster/v1");
+    root.insert("schema", "bench-cluster/v2");
     root.insert("smoke", smoke);
     root.insert("generated_by", "cargo bench --bench cluster");
     root.insert("scheduler", "min-qpm");
     root.insert("sharded_shards", SHARDED);
-    root.insert("runs", Json::Obj(runs));
+    root.insert("configs", Json::Obj(configs));
     let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_cluster.json");
     let json = Json::Obj(root).to_string_pretty();
     if let Err(e) = std::fs::write(out, json) {

@@ -397,6 +397,11 @@ pub struct SyncStats {
     pub windows: u64,
     /// Events executed serially (barriers + the degenerate path).
     pub serial_events: u64,
+    /// Why the run executed fully serialized (`None` on the windowed
+    /// fast path).  Names the knob that forced the slow path so
+    /// `simulate --shards k` can tell the user why their run did not
+    /// speed up.
+    pub serialized_reason: Option<&'static str>,
 }
 
 impl SyncStats {
@@ -411,6 +416,13 @@ impl SyncStats {
         o.insert("delivered_late", self.delivered_late);
         o.insert("windows", self.windows);
         o.insert("serial_events", self.serial_events);
+        o.insert(
+            "serialized_reason",
+            match self.serialized_reason {
+                Some(r) => crate::util::json::Json::Str(r.to_string()),
+                None => crate::util::json::Json::Null,
+            },
+        );
         crate::util::json::Json::Obj(o)
     }
 }

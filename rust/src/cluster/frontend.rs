@@ -424,11 +424,15 @@ impl FrontEnd {
     /// sync — the inverse of the double-booking the echo repairs.
     ///
     /// Sharded loop (`cluster::sharded`): completions surface at the
-    /// window barrier, so this runs *deferred* relative to the serial
-    /// schedule.  That is invisible to in-window picks: scheduler
-    /// feedback is keyed by the finished id (which no live pick ever
-    /// queries), and the echo retire only exists under `local_echo`,
-    /// which disqualifies the windowed overlap outright.
+    /// window barrier, so this runs *deferred* relative to the legacy
+    /// serial schedule.  Scheduler feedback is keyed by the finished
+    /// id (which no live pick ever queries), so that half is
+    /// invisible to in-window picks.  The echo retire is not — a
+    /// phase-A dispatch later in the same window still sees the
+    /// phantom in-transit entry — which is why `local_echo` is a
+    /// barrier-quantized knob: the `shards = 1` twin reroutes through
+    /// the windowed schedule too, so the deferred retire is the
+    /// model's semantic on both sides of the parity contract.
     pub fn on_finish(&mut self, id: crate::core::request::RequestId,
                      true_tokens: u32) {
         self.scheduler.on_finish(id, true_tokens);

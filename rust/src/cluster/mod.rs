@@ -110,10 +110,14 @@ pub struct SimResult {
     /// boundary once, so the number is comparable across `shards`
     /// settings (the macro benchmark's events/sec numerator).
     pub events_processed: u64,
-    /// Window-synchronizer conservation counters (`Some` only when the
-    /// run used `shards > 1`): pushed/popped totals, cross-shard
-    /// deliveries, and the late-delivery count that must stay zero —
-    /// the observable pinned by `prop_window_causality`.
+    /// Window-synchronizer conservation counters (`Some` whenever the
+    /// run went through the synchronizer store: `shards > 1`, or a
+    /// `shards = 1` run rerouted through the windowed twin because a
+    /// barrier-quantized knob was on): pushed/popped totals, cross-shard
+    /// deliveries, the late-delivery count that must stay zero — the
+    /// observable pinned by `prop_window_causality` — and, when the run
+    /// executed fully serialized, the knob that forced it
+    /// (`serialized_reason`).
     pub sync_stats: Option<events::SyncStats>,
     /// Observability capture — the flight-recorder ring, the decision
     /// trace, and the end-of-run metrics snapshot.  `Some` only when
@@ -272,6 +276,15 @@ pub(crate) struct RunState {
     events_processed: u64,
     /// Observability hooks (fully inert with the default config).
     obs: ObsState,
+    // Window-synchronizer bookkeeping (both unused on the legacy loop).
+    /// Key of the phase-A handler currently executing, set only while a
+    /// window is open *and* scale-down is armed: every `inbound`
+    /// mutation is journaled under it so phase-B shard workers can
+    /// reconstruct the counter's value at any in-window point.
+    win_key: Option<Key>,
+    /// The journal: `(mutating handler's key, instance, delta)`.
+    /// Cleared at every barrier.
+    inbound_log: Vec<(Key, usize, i32)>,
 }
 
 impl RunState {
@@ -282,6 +295,16 @@ impl RunState {
         if let Some(k) = self.redispatch_fault.remove(&id) {
             self.fault_records[k].last_landed =
                 self.fault_records[k].last_landed.max(now);
+        }
+    }
+
+    /// Journal an `inbound` counter mutation while a scale-down-armed
+    /// window is open (an `Option` check — free — everywhere else).
+    /// The shard-side idle epilogue rolls these deltas back to evaluate
+    /// `inbound[i]` exactly as the serial loop would have mid-window.
+    fn note_inbound(&mut self, instance: usize, delta: i32) {
+        if let Some(k) = self.win_key {
+            self.inbound_log.push((k, instance, delta));
         }
     }
 }
@@ -828,6 +851,7 @@ impl ClusterSim {
         self.frontends[f].in_transit[decision.instance]
             .push(req.clone());
         self.inbound[decision.instance] += 1;
+        st.note_inbound(decision.instance, 1);
 
         // Link-delay faults stretch the wire leg: the request lands (and
         // counts as dispatched) only after the extra network latency.
@@ -931,6 +955,8 @@ impl ClusterSim {
             size_timeline: vec![(0.0, self.provisioner.active_count())],
             events_processed: 0,
             obs: ObsState::new(&self.cfg.obs),
+            win_key: None,
+            inbound_log: Vec::new(),
         }
     }
 
@@ -938,10 +964,19 @@ impl ClusterSim {
     ///
     /// `shards > 1` routes through the sharded event loop ([`sharded`]):
     /// per-shard heaps under a conservative time-window synchronizer,
-    /// byte-identical to this single-heap loop by construction (pinned
-    /// by `prop_sharded_parity`).
+    /// byte-identical to the `shards = 1` twin by construction (pinned
+    /// by `prop_sharded_parity`).  The twin itself has two shapes: with
+    /// only window-transparent knobs on, it is this single-heap loop;
+    /// with any barrier-quantized knob on (ack/echo retirement,
+    /// residual detection, provisioning, probe/sample capture — see
+    /// [`Self::window_quantized_knobs`]), the twin executes the same
+    /// windowed schedule at one shard, so the parity contract compares
+    /// two runs of one schedule instead of two different semantics.
     pub fn run(mut self, requests: &[Request]) -> SimResult {
-        if self.cfg.shards > 1 {
+        if self.cfg.shards > 1
+            || (self.window_overlap_eligible()
+                && self.window_quantized_knobs())
+        {
             return self.run_sharded(requests);
         }
         let t0 = std::time::Instant::now();
@@ -968,10 +1003,12 @@ impl ClusterSim {
                     ev: Event, push: &mut dyn FnMut(Event)) {
         let now = ev.time;
         // Lifecycle transitions are scattered across the arms below
-        // (and only ever happen on serialized / barrier-class events —
-        // the byte-parity surface): record them as flights by diffing
-        // the transition log across the handler instead of hooking
-        // every call site.
+        // (and only ever happen on serialized / barrier-class events or
+        // inside barrier effect replays — the byte-parity surface):
+        // record them as flights by diffing the transition log across
+        // the handler instead of hooking every call site.  The barrier
+        // replays in [`sharded`] bracket the same diff around
+        // `apply_finish` and the idle-retire effect.
         let lc_mark = if st.obs.recorder.is_some() {
             self.provisioner.lifecycle().log.len()
         } else {
@@ -1482,6 +1519,7 @@ impl ClusterSim {
                         push: &mut dyn FnMut(Event)) -> bool {
         let req = &requests[idx];
         self.inbound[instance] -= 1;
+        st.note_inbound(instance, -1);
         // Draining slots take no new *decisions* but still
         // serve dispatches already on the wire; only dead /
         // retired hosts — or blackholed routes — bounce.

@@ -1,10 +1,9 @@
 //! Sharded event loop: a conservative time-window synchronizer over
 //! per-shard event heaps.
 //!
-//! `shards = 1` (the default) never enters this module.  With
-//! `shards > 1` the run's instances are split into contiguous chunks,
-//! each owning a private event heap ([`ShardedQueues`]), and the run
-//! alternates between two regimes:
+//! With `shards > 1` the run's instances are split into contiguous
+//! chunks, each owning a private event heap ([`ShardedQueues`]), and
+//! the run alternates between two regimes:
 //!
 //! * **Serialized** — pop the globally minimal event and run the exact
 //!   legacy handler ([`ClusterSim::handle_event`]).  Used for every
@@ -16,7 +15,8 @@
 //!
 //! * **Windowed** — all events strictly below a horizon `H` (the next
 //!   barrier event, capped at `window` virtual seconds past the
-//!   current minimum) execute in two phases.  Phase A runs the
+//!   current minimum, tightened further when a barrier-replayed knob
+//!   pushes follow-up events) execute in two phases.  Phase A runs the
 //!   coordinator events (arrivals, dispatch decisions, wire landings,
 //!   re-dispatches, activations) serially in key order; a landed
 //!   dispatch's engine half is handed to the owning shard under the
@@ -30,15 +30,25 @@
 //! resolves them recursively, which reproduces exactly the single-heap
 //! `(time, seq)` order because sequence numbers are assigned in handler
 //! execution order.  At the window barrier, surviving provisional keys
-//! are re-ranked to final sequence numbers in comparator order and
-//! request completions buffered by the shard workers are replayed
-//! through [`ClusterSim::apply_finish`] in the same merged order — so
-//! coordinator state (front-end feedback, metrics, fault credit) is
-//! updated exactly as the serial run would have, and the next window
-//! opens from an identical store.  The assigned numbers differ from
-//! the serial run's (in-window pops never consume one) but are
-//! order-isomorphic to it, which is all the comparator observes:
-//! `prop_sharded_parity` pins the resulting byte-equality.
+//! are re-ranked to final sequence numbers in comparator order and the
+//! effects buffered by the shard workers — request completions, ack
+//! view syncs, idle/scale-down probes — are replayed in the same
+//! merged order — so coordinator state (front-end feedback, metrics,
+//! residual tracking, provisioning triggers, fault credit) is updated
+//! exactly as the one-shard twin would, and the next window opens from
+//! an identical store.  The assigned numbers differ from the serial
+//! run's (in-window pops never consume one) but are order-isomorphic
+//! to it, which is all the comparator observes: `prop_sharded_parity`
+//! pins the resulting byte-equality, `shards = k` vs `shards = 1`.
+//!
+//! The `shards = 1` twin has two shapes.  With only window-transparent
+//! knobs on it is the legacy single-heap loop, and the windowed path
+//! is byte-identical to it.  Knobs whose windowed mechanics quantize
+//! coordinator reads to barriers ([`ClusterSim::window_quantized_knobs`])
+//! reroute the twin through this module at one shard, so both sides of
+//! the parity contract execute the same windowed schedule — the
+//! barrier quantization is then an explicit semantic of the model, not
+//! a shard-count-dependent artifact.
 //!
 //! Causality is the conservative-synchronization invariant: a shard's
 //! local clock never passes `H`, and every cross-shard delivery
@@ -54,6 +64,7 @@ use std::sync::Mutex;
 use crate::core::request::Request;
 use crate::engine::{FinishedSeq, InstanceEngine};
 use crate::exec::roofline::RooflineModel;
+use crate::obs::FlightKind;
 use crate::util::parallel::parallel_map;
 
 use super::events::{Event, EventKind, Key, KeyedHeap, ProvEntry,
@@ -75,22 +86,70 @@ struct ShardCtx<'a> {
     last_busy: &'a mut [f64],
 }
 
-/// A request completion observed by a shard worker, deferred to the
-/// window barrier where the coordinator replays it in serial order.
-struct FinishEffect {
-    /// Key of the `StepDone` that completed the request.
+/// Read-only coordinator context threaded into every shard worker:
+/// the frozen phase-A ledger plus the snapshots the barrier-deferred
+/// effects are evaluated against.  Everything here is immutable for
+/// the whole of phase B, and — because in-window control events can
+/// only touch quiescent slots — equal to what the serial twin would
+/// read at any in-window engine event.
+struct WindowEnv<'a> {
+    coord: &'a [ProvEntry],
+    step_gen: &'a [u64],
+    requests: &'a [Request],
+    cost: &'a RooflineModel,
+    /// Collect step milestones for the flight recorder's barrier merge.
+    record_steps: bool,
+    /// `sync_on_ack`: emit an [`EffectKind::Ack`] per engine landing.
+    emit_acks: bool,
+    /// Drain-based scale-down armed: run the idle epilogue and emit
+    /// [`EffectKind::Idle`] effects.
+    scale_down: bool,
+    /// Frozen active / draining masks (empty unless `scale_down`).
+    /// Safe to freeze: in-window lifecycle transitions only ever touch
+    /// quiescent slots, so a slot with live `StepDone`s in this window
+    /// keeps its state through phase A.
+    active: &'a [bool],
+    draining: &'a [bool],
+    /// `inbound` after phase A, plus the journal of in-window deltas
+    /// (`(mutating handler's key, instance, delta)`) phase A recorded —
+    /// rolling back every delta keyed *after* an engine event
+    /// reconstructs the counter exactly as the serial twin read it.
+    inbound_end: &'a [usize],
+    inbound_log: &'a [(Key, usize, i32)],
+}
+
+/// What a barrier-deferred effect does when the coordinator replays it.
+enum EffectKind {
+    /// A request completion ([`ClusterSim::apply_finish`]): front-end
+    /// feedback, metrics, relief provisioning, residual detection.
+    Finish(FinishedSeq),
+    /// `sync_on_ack`: the enqueue ack carries the instance's state back
+    /// to the dispatching front-end.  Replayed against barrier-time
+    /// engine state — every shard is drained to `H`, so the read is
+    /// shard-count invariant.
+    Ack { frontend: usize },
+    /// The `StepDone` idle epilogue: arm a scale-down drain probe
+    /// (`retire: false`) or release a draining slot whose last
+    /// in-flight work just completed (`retire: true`).
+    Idle { retire: bool },
+}
+
+/// An effect observed by a shard worker, deferred to the window
+/// barrier where the coordinator replays it in serial order.
+struct Effect {
+    /// Key of the engine event that produced the effect.
     gen: Key,
-    /// Position within that handler's program order (completions and
+    /// Position within that handler's program order (effects and
     /// pushes share one counter, exactly like the serial handler body).
     ordinal: u32,
     time: f64,
     instance: usize,
-    fin: FinishedSeq,
+    kind: EffectKind,
 }
 
 /// What a shard worker hands back at the barrier.
 struct ShardOutcome {
-    effects: Vec<FinishEffect>,
+    effects: Vec<Effect>,
     /// Step milestones `(StepDone key, time, instance)` observed by
     /// the worker, for the flight recorder's barrier merge.  Only
     /// collected at trace level `full`; empty otherwise.
@@ -137,18 +196,40 @@ fn kick_shard(ctx: &mut ShardCtx<'_>, coord: &[ProvEntry], gen: Key,
     }
 }
 
+/// Reconstruct `inbound[i]` at in-window point `at`: start from the
+/// post-phase-A value and roll back every journaled delta whose
+/// mutating handler ran after `at` in the serial order.  A dispatch
+/// still on the wire at `at` (it lands later in this window) is
+/// thereby counted inbound, exactly as the serial twin's live counter
+/// would have it.
+fn inbound_at(ctx: &ShardCtx<'_>, env: &WindowEnv<'_>, i: usize,
+              at: Key) -> i64 {
+    let mut v = env.inbound_end[i] as i64;
+    if !env.inbound_log.is_empty() {
+        let led = ShardLedger {
+            coord: env.coord,
+            own_space: ctx.own_space,
+            own: ctx.space.as_slice(),
+        };
+        for &(k, inst, d) in env.inbound_log {
+            if inst == i && led.cmp_keys(k, at) == Ordering::Greater {
+                v -= i64::from(d);
+            }
+        }
+    }
+    v
+}
+
 /// Run one shard's heap up to (strictly below) the horizon `h`.
 ///
 /// The bodies mirror the engine-side statements of the corresponding
 /// [`ClusterSim::handle_event`] arms; everything that touches
 /// coordinator state is either already done (the dispatch wire half,
-/// in phase A) or deferred ([`FinishEffect`]).  The legacy
-/// idle/scale-down epilogue of `StepDone` is a structural no-op here:
-/// the windowed path requires provisioning disabled, so the drain
-/// probe is never armed and no slot is ever draining.
-fn run_shard_window(ctx: &mut ShardCtx<'_>, h: Key, coord: &[ProvEntry],
-                    step_gen: &[u64], requests: &[Request],
-                    cost: &RooflineModel, record_steps: bool)
+/// in phase A) or deferred ([`Effect`]).  The legacy idle/scale-down
+/// epilogue of `StepDone` evaluates its guards here — engine idleness
+/// locally, `inbound` by journal rollback, lifecycle state from the
+/// frozen masks — and defers the action to the barrier.
+fn run_shard_window(ctx: &mut ShardCtx<'_>, h: Key, env: &WindowEnv<'_>)
                     -> ShardOutcome {
     let mut out = ShardOutcome {
         effects: Vec::new(),
@@ -160,7 +241,7 @@ fn run_shard_window(ctx: &mut ShardCtx<'_>, h: Key, coord: &[ProvEntry],
     loop {
         let popped = {
             let led = ShardLedger {
-                coord,
+                coord: env.coord,
                 own_space: ctx.own_space,
                 own: ctx.space.as_slice(),
             };
@@ -177,45 +258,82 @@ fn run_shard_window(ctx: &mut ShardCtx<'_>, h: Key, coord: &[ProvEntry],
         let now = key.time;
         let mut ordinal: u32 = 0;
         match ev.kind {
-            EventKind::Dispatch(idx, instance, _f) => {
+            EventKind::Dispatch(idx, instance, f) => {
                 // Engine half of a landed dispatch, delivered by phase
                 // A under the wire event's own key (the wire half
                 // pushed nothing — it landed — so the shared push
                 // counter starts at 0 here, exactly as in the serial
                 // handler).
                 let li = instance - ctx.base;
-                ctx.engines[li].enqueue(&requests[idx], now);
+                ctx.engines[li].enqueue(&env.requests[idx], now);
                 ctx.last_busy[li] = now;
-                kick_shard(ctx, coord, key, &mut ordinal, instance,
-                           step_gen, cost);
+                kick_shard(ctx, env.coord, key, &mut ordinal, instance,
+                           env.step_gen, env.cost);
+                if env.emit_acks {
+                    // The serial handler syncs the dispatching
+                    // front-end's view right after the kick; the
+                    // windowed model quantizes that read to the
+                    // barrier.
+                    out.effects.push(Effect {
+                        gen: key,
+                        ordinal,
+                        time: now,
+                        instance,
+                        kind: EffectKind::Ack { frontend: f },
+                    });
+                }
             }
             EventKind::StepDone(i, gen) => {
                 out.engine_events += 1;
-                if gen != step_gen[i] {
+                if gen != env.step_gen[i] {
                     // Completion of a step that died with the host.
                     continue;
                 }
                 let li = i - ctx.base;
                 ctx.engines[li].finish_step();
                 ctx.last_busy[li] = now;
-                if record_steps {
+                if env.record_steps {
                     // The serial handler records the step milestone
                     // before that step's finishes; phase 0 keeps it
                     // ahead of the phase-1 finish replay at the merge.
                     out.flights.push((key, now, i));
                 }
                 for fin in ctx.engines[li].take_finished() {
-                    out.effects.push(FinishEffect {
+                    out.effects.push(Effect {
                         gen: key,
                         ordinal,
                         time: now,
                         instance: i,
-                        fin,
+                        kind: EffectKind::Finish(fin),
                     });
                     ordinal += 1;
                 }
-                kick_shard(ctx, coord, key, &mut ordinal, i, step_gen,
-                           cost);
+                kick_shard(ctx, env.coord, key, &mut ordinal, i,
+                           env.step_gen, env.cost);
+                // Idle epilogue: only ever acts with scale-down armed
+                // (a slot can only be draining once a drain probe ran).
+                if env.scale_down
+                    && ctx.engines[li].is_idle()
+                    && inbound_at(ctx, env, i, key) == 0
+                {
+                    if env.active[i] {
+                        out.effects.push(Effect {
+                            gen: key,
+                            ordinal,
+                            time: now,
+                            instance: i,
+                            kind: EffectKind::Idle { retire: false },
+                        });
+                    } else if env.draining[i] {
+                        out.effects.push(Effect {
+                            gen: key,
+                            ordinal,
+                            time: now,
+                            instance: i,
+                            kind: EffectKind::Idle { retire: true },
+                        });
+                    }
+                }
             }
             _ => unreachable!("non-engine event in a shard heap"),
         }
@@ -224,44 +342,90 @@ fn run_shard_window(ctx: &mut ShardCtx<'_>, h: Key, coord: &[ProvEntry],
 }
 
 impl ClusterSim {
-    /// Can windows overlap coordinator and shard work at all?
+    /// Why windows cannot overlap coordinator and shard work — or
+    /// `None` when they can.
     ///
-    /// The whitelist is exactly the set of knobs under which the
-    /// handler read/write sets factor cleanly across the boundary:
-    /// stale views only (`sync_interval > 0`: dispatch decisions read
-    /// front-end state, never live engines), no ack-piggybacked or
-    /// echoed view updates (both read engines at dispatch-landing
-    /// time), no straggler detector (completion-driven, reads
-    /// coordinator residual state mid-window), no auto-provisioning
-    /// (its latency observers run inside dispatch/finish handlers),
-    /// and no probe/sample capture (both snapshot live engines per
-    /// arrival).  Fault injection stays available — every fault is a
-    /// barrier-class event.  Ineligible runs still shard the store but
-    /// execute fully serialized, so `--shards` never changes results.
-    fn window_overlap_eligible(&self) -> bool {
-        self.cfg.sync_interval > 0.0
-            && self.cfg.window > 0.0
-            && !self.cfg.sync_on_ack
-            && !self.cfg.local_echo
-            && !self.cfg.detect.enabled
-            && !self.cfg.provision.enabled
-            && !self.opts.probes
-            && self.opts.sample_prob <= 0.0
+    /// After the knob-by-knob lifts (ack/echo retirement, residual
+    /// detection, provisioning and probe capture all replay through
+    /// barrier effects now), only two structural preconditions remain:
+    /// dispatch decisions must read front-end views rather than live
+    /// engines (`sync_interval > 0`), and the window span must be
+    /// positive.  Ineligible runs still shard the store but execute
+    /// fully serialized, so `--shards` never changes results.
+    pub(crate) fn serialized_reason(&self) -> Option<&'static str> {
+        if self.cfg.sync_interval <= 0.0 {
+            return Some("fresh views (sync_interval = 0): every \
+                         dispatch reads live engine state");
+        }
+        if self.cfg.window <= 0.0 {
+            return Some("window = 0");
+        }
+        None
     }
 
-    /// The `shards > 1` run loop.  See the module docs for the
-    /// protocol; [`ClusterSim::run`] is the `shards = 1` twin.
+    /// Can windows overlap coordinator and shard work at all?
+    pub(crate) fn window_overlap_eligible(&self) -> bool {
+        self.serialized_reason().is_none()
+    }
+
+    /// Is any knob on whose windowed mechanics quantize a coordinator
+    /// read to the window barrier?
+    ///
+    /// These knobs are *eligible* for the windowed fast path, but their
+    /// effects (ack view syncs, echo retirement on completion, residual
+    /// observation, provisioning triggers, probe/sample snapshots at
+    /// phase-A time) read state at barrier or phase-A points rather
+    /// than at the serial loop's exact instruction.  The reads are
+    /// shard-count invariant — every shard is drained to the same
+    /// horizon — but not byte-identical to the legacy single-heap
+    /// interleaving.  [`ClusterSim::run`] therefore routes the
+    /// `shards = 1` twin through the windowed schedule whenever one of
+    /// them is on, making the quantization a property of the model
+    /// rather than of the shard count: `prop_sharded_parity` compares
+    /// windowed against windowed, byte for byte.
+    pub(crate) fn window_quantized_knobs(&self) -> bool {
+        self.cfg.sync_on_ack
+            || self.cfg.local_echo
+            || self.cfg.detect.enabled
+            || self.cfg.provision.enabled
+            || self.opts.probes
+            || self.opts.sample_prob > 0.0
+    }
+
+    /// The synchronizer run loop: `shards > 1`, or the `shards = 1`
+    /// twin of a quantized-knob run.  See the module docs for the
+    /// protocol; [`ClusterSim::run`] is the transparent-knob
+    /// `shards = 1` twin.
     pub(crate) fn run_sharded(mut self, requests: &[Request])
                               -> SimResult {
         let t0 = std::time::Instant::now();
         let mut q = ShardedQueues::new(self.engines.len(),
                                        self.cfg.shards);
+        q.stats.serialized_reason = self.serialized_reason();
         let mut st = {
             let mut push = |ev: Event| q.push_final(ev);
             self.init_run(requests, &mut push)
         };
-        let fast = q.n_shards() > 1 && self.window_overlap_eligible();
-        let window = self.cfg.window;
+        let fast = self.window_overlap_eligible();
+        // Barrier-replayed effects may push follow-up events: relief
+        // cold-start boots at `finish + cold_start`, probation probes
+        // at `finish + restore_after`, drain probes at
+        // `idle + scale_down_idle`.  Cap the span so every such push
+        // lands at or beyond the horizon — a degenerate (zero) cap
+        // gracefully serializes event by event through the `next >= h`
+        // branch below.
+        let mut window = self.cfg.window;
+        if self.cfg.provision.enabled {
+            if !self.cfg.provision.predictive {
+                window = window.min(self.cfg.provision.cold_start);
+            }
+            if self.cfg.provision.scale_down_idle > 0.0 {
+                window = window.min(self.cfg.provision.scale_down_idle);
+            }
+        }
+        if self.cfg.detect.enabled {
+            window = window.min(self.cfg.detect.restore_after);
+        }
         loop {
             let next = match q.peek_min_key() {
                 Some(k) => k,
@@ -306,6 +470,11 @@ impl ClusterSim {
                      q: &mut ShardedQueues, key: Key, ev: Event) {
         let now = key.time;
         let mut ordinal: u32 = 0;
+        // With scale-down armed, journal this handler's inbound
+        // mutations under its key for the shard-side idle epilogue.
+        if st.scale_down {
+            st.win_key = Some(key);
+        }
         // Flight events emitted by this handler are buffered under its
         // key (phase 0) and merged into serial order at the barrier.
         st.obs.win_begin(key, 0);
@@ -334,12 +503,13 @@ impl ClusterSim {
             self.handle_event(st, requests, ev, &mut push);
         }
         st.obs.win_end();
+        st.win_key = None;
     }
 
     /// Execute one window `[current minimum, h)`: phase A
     /// (coordinator, serial), phase B (shards, parallel), then the
     /// barrier — re-rank surviving in-window pushes and replay the
-    /// workers' buffered completions, both in the comparator's merged
+    /// workers' buffered effects, both in the comparator's merged
     /// order.
     fn run_window(&mut self, st: &mut RunState, requests: &[Request],
                   q: &mut ShardedQueues, h: Key) {
@@ -370,6 +540,21 @@ impl ClusterSim {
             std::mem::take(&mut q.arenas.spaces).into_iter();
         let coord_space = space_iter.next().unwrap_or_default();
         let own_spaces: Vec<Vec<ProvEntry>> = space_iter.collect();
+        // Frozen lifecycle masks for the idle epilogue: in-window
+        // control events only ever activate quiescent slots, so any
+        // slot with a live `StepDone` below `h` holds its state
+        // through phase A and these snapshots equal the serial twin's
+        // live reads.
+        let scale_down = st.scale_down;
+        let (active_mask, draining_mask) = if scale_down {
+            let lc = self.provisioner.lifecycle();
+            (self.provisioner.active().to_vec(),
+             (0..self.engines.len())
+                 .map(|i| lc.is_draining(i))
+                 .collect::<Vec<bool>>())
+        } else {
+            (Vec::new(), Vec::new())
+        };
         let cells: Vec<Mutex<Option<ShardCtx<'_>>>> = heaps
             .into_iter()
             .zip(own_spaces)
@@ -388,21 +573,29 @@ impl ClusterSim {
             })
             .collect();
         let jobs = self.cfg.jobs.max(1);
-        let coord = coord_space.as_slice();
-        let step_gen = self.step_gen.as_slice();
-        let cost = &self.cost;
-        let record_steps = st.obs.steps_on();
+        let env = WindowEnv {
+            coord: coord_space.as_slice(),
+            step_gen: self.step_gen.as_slice(),
+            requests,
+            cost: &self.cost,
+            record_steps: st.obs.steps_on(),
+            emit_acks: self.cfg.sync_on_ack,
+            scale_down,
+            active: &active_mask,
+            draining: &draining_mask,
+            inbound_end: &self.inbound,
+            inbound_log: &st.inbound_log,
+        };
         let outcomes = parallel_map(jobs, &cells, |cell| {
             let mut ctx = cell
                 .lock()
                 .expect("no worker panics")
                 .take()
                 .expect("each cell claimed once");
-            let out = run_shard_window(&mut ctx, h, coord, step_gen,
-                                       requests, cost, record_steps);
+            let out = run_shard_window(&mut ctx, h, &env);
             (ctx, out)
         });
-        let mut all_effects: Vec<FinishEffect> = Vec::new();
+        let mut all_effects: Vec<Effect> = Vec::new();
         let mut shard_spaces: Vec<Vec<ProvEntry>> =
             Vec::with_capacity(n);
         for (s, (ctx, out)) in outcomes.into_iter().enumerate() {
@@ -425,13 +618,12 @@ impl ClusterSim {
         q.arenas.spaces = spaces;
         // ---- Barrier: merged replay in serial order. ------------
         // Surviving provisional keys consume fresh sequence numbers
-        // and buffered completions run their coordinator half, in one
+        // and buffered effects run their coordinator half, in one
         // merged `(generating key, ordinal)` order — precisely the
-        // order the serial loop interleaved pushes and completions
-        // in.
+        // order the one-shard twin interleaved pushes and effects in.
         enum Replay {
             Survivor(u32, u32),
-            Finish(FinishEffect),
+            Effect(Effect),
         }
         let mut items: Vec<(Key, u32, Replay)> = q
             .surviving_provs()
@@ -441,7 +633,7 @@ impl ClusterSim {
             })
             .collect();
         for eff in all_effects {
-            items.push((eff.gen, eff.ordinal, Replay::Finish(eff)));
+            items.push((eff.gen, eff.ordinal, Replay::Effect(eff)));
         }
         items.sort_by(|a, b| {
             q.arenas.cmp_keys(a.0, b.0).then(a.1.cmp(&b.1))
@@ -452,15 +644,77 @@ impl ClusterSim {
                 Replay::Survivor(space, idx) => {
                     assign.insert((space, idx), q.next_seq());
                 }
-                Replay::Finish(eff) => {
-                    // Flights from this replayed completion carry the
+                Replay::Effect(eff) => {
+                    // Flights from this replayed effect carry the
                     // effect's own serial position (phase 1: after the
-                    // generating handler's phase-0 milestones).
+                    // generating handler's phase-0 milestones), and
+                    // lifecycle transitions it performs (relief
+                    // triggers, straggler quarantines, retires) are
+                    // recorded by the same log diff the serial handler
+                    // tail uses.
                     st.obs.win_begin_at(eff.gen, 1, eff.ordinal);
-                    let FinishEffect { time, instance, fin, .. } = eff;
-                    let mut push = |e: Event| q.push_final(e);
-                    self.apply_finish(st, instance, fin, time,
-                                      &mut push);
+                    let lc_mark = if st.obs.recorder.is_some() {
+                        self.provisioner.lifecycle().log.len()
+                    } else {
+                        0
+                    };
+                    let Effect { time, instance, kind, .. } = eff;
+                    match kind {
+                        EffectKind::Finish(fin) => {
+                            let mut push = |e: Event| q.push_final(e);
+                            self.apply_finish(st, instance, fin, time,
+                                              &mut push);
+                        }
+                        EffectKind::Ack { frontend } => {
+                            if st.stale_views
+                                && self.cfg.sync_on_ack
+                                && self.frontends[frontend].alive
+                            {
+                                let up =
+                                    self.provisioner.active()[instance];
+                                let fe = &mut self.frontends[frontend];
+                                fe.view.sync_instance(
+                                    instance, &self.engines[instance],
+                                    up, time);
+                                fe.clear_echo(instance);
+                            }
+                        }
+                        EffectKind::Idle { retire } => {
+                            if retire {
+                                // Guarded: an earlier replay this
+                                // barrier may already have released
+                                // the slot (the serial twin's second
+                                // epilogue would then have seen
+                                // `is_draining == false` and no-oped).
+                                if self.provisioner
+                                       .lifecycle()
+                                       .is_draining(instance)
+                                {
+                                    self.provisioner
+                                        .lifecycle_mut()
+                                        .retire(instance, time,
+                                                "retire");
+                                }
+                            } else {
+                                q.push_final(Event {
+                                    time: time
+                                        + self.cfg.provision
+                                              .scale_down_idle,
+                                    kind:
+                                        EventKind::DrainCheck(instance),
+                                });
+                            }
+                        }
+                    }
+                    if st.obs.recorder.is_some() {
+                        let log = &self.provisioner.lifecycle().log;
+                        for e in log.iter().skip(lc_mark) {
+                            st.obs.flight(e.time, FlightKind::Lifecycle {
+                                instance: e.slot,
+                                state: e.state,
+                            });
+                        }
+                    }
                     st.obs.win_end();
                 }
             }
@@ -470,5 +724,6 @@ impl ClusterSim {
         // generating keys resolve through the window's arenas.
         st.obs.flush_window(&q.arenas);
         q.seal_window(&assign);
+        st.inbound_log.clear();
     }
 }

@@ -89,8 +89,11 @@ impl SlotState {
 ///
 /// Part of the byte-parity surface: `prop_sharded_parity` pins this
 /// log identical between `shards = 1` and `shards = k`, so lifecycle
-/// transitions must only ever be driven from serialized or
-/// barrier-class events — never from inside a shard's window.
+/// transitions must only ever be driven from serialized events,
+/// barrier-class events, or barrier effect replays (completion and
+/// idle-retire effects buffered by shard workers and applied in
+/// serial order at the window barrier) — never live from inside a
+/// shard's window.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LifecycleEvent {
     pub time: f64,

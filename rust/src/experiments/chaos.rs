@@ -118,6 +118,11 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             cfg.frontends = frontends;
             cfg.sync_interval = if frontends == 1 { 0.0 } else { 1.0 };
             cfg.shard_policy = ctx.shard;
+            // `--shards`: multi-frontend points are window-overlap
+            // eligible (faults are barrier-class), so the sharded loop
+            // is a pure wall-clock win; single-frontend points run
+            // fresh views and fall back to the serialized path.
+            cfg.shards = ctx.shards;
             cfg.faults.instance_mttf = inst_mult * span;
             cfg.faults.instance_mttr = span / 4.0;
             cfg.faults.frontend_mttf = fe_mult * span;

@@ -112,6 +112,10 @@ pub fn run(ctx: &ExpContext) -> Result<()> {
             cfg.frontends = 2;
             cfg.sync_interval = 1.0;
             cfg.shard_policy = ctx.shard;
+            // `--shards`: slowdown plans are barrier-class and residual
+            // detection is barrier-quantized, so every grid point runs
+            // the windowed fast path with byte-identical results.
+            cfg.shards = ctx.shards;
             cfg.detect.enabled = detect;
             cfg.faults.report_window = (span / 3.0).clamp(1.0, 15.0);
             let plan = FaultPlan::scripted(vec![

@@ -90,6 +90,11 @@ pub struct ExpContext {
     /// other experiments ignore it — their CI sizing is
     /// `Scale::Quick`).
     pub smoke: bool,
+    /// Event-loop shards per simulation (`--shards`; read by [`chaos`]
+    /// and [`graychaos`], whose knob space is window-overlap eligible
+    /// since the quantized-knob lifts).  Results are byte-identical to
+    /// `shards = 1` — this is purely a wall-clock knob.
+    pub shards: usize,
 }
 
 impl Default for ExpContext {
@@ -101,6 +106,7 @@ impl Default for ExpContext {
             jobs: default_jobs(),
             shard: ShardPolicy::RoundRobin,
             smoke: false,
+            shards: 1,
         }
     }
 }

@@ -34,6 +34,14 @@
 //! from `record_completion` (wall time).  The detection *config*
 //! ([`crate::config::DetectConfig`]) is shared, so thresholds tuned in
 //! simulation carry to the wire.
+//!
+//! Sharded event loop: completions reach the tracker through the
+//! window barrier's buffered finish effects (`cluster::sharded`), so
+//! observations, trips and restore-probe arming are quantized to
+//! barriers.  The detector's hysteresis makes that a pure
+//! execution-strategy change, and the `shards = 1` twin reads
+//! residuals at the same barrier points — `detect.enabled` runs the
+//! windowed fast path on the byte-parity surface.
 
 use crate::config::DetectConfig;
 

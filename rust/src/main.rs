@@ -125,7 +125,8 @@ fn usage() -> ! {
          \n\
          commands:\n\
          \x20 experiment <tab1|fig5|fig6|fig7|fig8|tab2|staleness|chaos|graychaos|all> [--scale quick|full]\n\
-         \x20          [--out DIR] [--seed N] [--jobs N] [--shard round-robin|hash|poisson] [--smoke]\n\
+         \x20          [--out DIR] [--seed N] [--jobs N] [--shards K]\n\
+         \x20          [--shard round-robin|hash|poisson] [--smoke]\n\
          \x20 simulate [--scheduler S] [--qps Q] [--requests N] [--instances K]\n\
          \x20          [--workload sharegpt|burstgpt] [--config FILE] [--manifest FILE]\n\
          \x20          [--seed N] [--jobs N] [--shards K] [--window S]\n\
@@ -161,6 +162,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             Some(s) => ShardPolicy::parse(s)?,
         },
         smoke: args.flag_parse("smoke", false)?,
+        shards: args.flag_parse("shards", 1usize)?.max(1),
     };
     experiments::run(name, &ctx)
 }
@@ -251,6 +253,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                  cfg.shards, cfg.window, res.events_processed,
                  res.events_processed as f64
                      / res.wall_time.as_secs_f64().max(1e-9));
+        if let Some(reason) =
+            res.sync_stats.as_ref().and_then(|s| s.serialized_reason)
+        {
+            eprintln!("warning: --shards {} ran fully serialized: {}",
+                      cfg.shards, reason);
+        }
     }
     if cfg.faults.enabled() {
         let r = &res.recovery;

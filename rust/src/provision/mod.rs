@@ -16,6 +16,14 @@
 //! `cold_start` seconds (model load).  Scale-down (drain + retire),
 //! failure, pre-warming, and rejoin all flow through the same per-slot
 //! state machine — see [`crate::elastic`].
+//!
+//! Sharded event loop: both observers only need barrier-consistent
+//! state.  Preemptive observations run during serial phase-A dispatch
+//! handling; relief observations, cold-start triggers and the idle
+//! scale-down probes replay inside the window barrier's buffered
+//! effects (`cluster::sharded`), in exact serial order with
+//! finish-time timestamps — so `provision.enabled` runs the windowed
+//! fast path and stays on the byte-parity surface.
 
 use crate::config::ProvisionConfig;
 use crate::elastic::ActiveSet;

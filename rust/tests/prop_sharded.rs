@@ -6,7 +6,11 @@
 //!   same placements, same per-request timestamps, same lifecycle log,
 //!   same telemetry.  Sharding is an execution strategy, never a model
 //!   change, whether a window ran split (phase A / phase B) or the run
-//!   fell back to the serialized path.
+//!   fell back to the serialized path.  Barrier-quantized knobs
+//!   (ack/echo view refreshes, residual detection, provisioning,
+//!   probe/sample capture) reroute the `shards = 1` twin through the
+//!   windowed schedule too, so the contract compares two runs of one
+//!   schedule — the generator below draws every one of those knobs.
 //!
 //! * **Causality / conservation** — the conservative window
 //!   synchronizer never delivers a cross-shard event into a shard
@@ -34,14 +38,16 @@ const SHARDS: [ShardPolicy; 3] = [
 ];
 
 fn run_sharded(cfg: &ClusterConfig, wl: &WorkloadConfig,
-               plan: &Option<FaultPlan>, shards: usize) -> SimResult {
+               plan: &Option<FaultPlan>, shards: usize, probes: bool,
+               sample_prob: f64) -> SimResult {
     let mut cfg = cfg.clone();
     cfg.shards = shards;
     run_experiment(
         cfg,
         wl,
         SimOptions {
-            probes: false,
+            probes,
+            sample_prob,
             fault_plan: plan.clone(),
             ..SimOptions::default()
         },
@@ -89,11 +95,25 @@ fn assert_parity(base: &SimResult, got: &SimResult, k: usize) {
     assert_eq!(base.recovery.total_redispatched,
                got.recovery.total_redispatched,
                "redispatch count diverged at shards={k}");
+    // Probe / sample telemetry (quantized to phase-A arrival handling
+    // on the windowed path — but identically so at every shard count).
+    let probes = |r: &SimResult| {
+        r.probes
+            .iter()
+            .map(|p| (p.time, p.free_blocks.clone(), p.cum_preemptions,
+                      p.active_instances))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(probes(base), probes(got),
+               "probe telemetry diverged at shards={k}");
+    assert_eq!(base.sampled.len(), got.sampled.len(),
+               "sampled-arrival count diverged at shards={k}");
 }
 
 /// A random scripted fault plan over `n_instances` x `frontends`,
-/// shaped like `prop_faults`' plans (deaths mostly followed by
-/// rejoins, occasional front-end crashes).
+/// shaped like `prop_faults`' plans: deaths mostly followed by
+/// rejoins, occasional front-end crashes, and gray-failure slowdowns
+/// (mostly recovered) for the residual detector to chew on.
 fn random_plan(rng: &mut block::util::rng::Rng, n_instances: usize,
                frontends: usize, span: f64) -> Option<FaultPlan> {
     if rng.bernoulli(0.4) {
@@ -113,6 +133,21 @@ fn random_plan(rng: &mut block::util::rng::Rng, n_instances: usize,
                     kind: FaultKind::InstanceRejoin(i),
                 });
             }
+        } else if rng.bernoulli(0.25) {
+            let t = rng.uniform(0.0, span * 0.6);
+            events.push(FaultEvent {
+                time: t,
+                kind: FaultKind::InstanceSlowdown {
+                    instance: i,
+                    factor: rng.uniform(2.0, 8.0),
+                },
+            });
+            if rng.bernoulli(0.7) {
+                events.push(FaultEvent {
+                    time: t + rng.uniform(1.0, span * 0.4),
+                    kind: FaultKind::InstanceRecover(i),
+                });
+            }
         }
     }
     for f in 0..frontends {
@@ -130,8 +165,10 @@ fn random_plan(rng: &mut block::util::rng::Rng, n_instances: usize,
 fn prop_sharded_parity() {
     // shards = k must reproduce shards = 1 byte for byte, for every
     // scheduler the paper compares, across random deployment shapes,
-    // fault plans and elasticity knobs.  Cases where the windowed
-    // overlap is ineligible (elasticity on, echo on, ...) exercise the
+    // fault/slowdown plans, residual detection, elasticity knobs,
+    // echo/ack view refreshes and probe/sample capture — the full
+    // knob space of the chaos, gray-chaos and elasticity sweeps.
+    // Ineligible cases (fresh views, zero window) exercise the
     // serialized fallback's parity instead — the law is unconditional.
     check(2024, 12, |rng, case| {
         let kind = KINDS[case % KINDS.len()];
@@ -155,6 +192,12 @@ fn prop_sharded_parity() {
         cfg.jobs = rng.randint(1, 4) as usize;
         cfg.sync_on_ack = rng.bernoulli(0.2);
         cfg.local_echo = rng.bernoulli(0.2);
+        if rng.bernoulli(0.3) {
+            cfg.detect.enabled = true;
+            cfg.detect.restore_after = rng.uniform(2.0, 10.0);
+        }
+        let probes = rng.bernoulli(0.3);
+        let sample_prob = if rng.bernoulli(0.2) { 0.25 } else { 0.0 };
         let wl = WorkloadConfig {
             kind: WorkloadKind::ShareGpt,
             qps: rng.uniform(4.0, 16.0),
@@ -164,6 +207,7 @@ fn prop_sharded_parity() {
         let span = wl.n_requests as f64 / wl.qps;
         if rng.bernoulli(0.25) {
             cfg.provision.enabled = true;
+            cfg.provision.predictive = rng.bernoulli(0.3);
             cfg.provision.initial_instances = n_instances;
             cfg.provision.max_instances = n_instances + rng.index(3);
             cfg.provision.threshold = rng.uniform(5.0, 60.0);
@@ -175,11 +219,28 @@ fn prop_sharded_parity() {
         }
         let plan = random_plan(rng, n_instances, frontends, span);
 
-        let base = run_sharded(&cfg, &wl, &plan, 1);
-        assert!(base.sync_stats.is_none(),
-                "shards=1 must run the legacy single-heap loop");
+        let eligible = cfg.sync_interval > 0.0 && cfg.window > 0.0;
+        let quantized = cfg.sync_on_ack
+            || cfg.local_echo
+            || cfg.detect.enabled
+            || cfg.provision.enabled
+            || probes
+            || sample_prob > 0.0;
+
+        let base = run_sharded(&cfg, &wl, &plan, 1, probes, sample_prob);
+        // The shards = 1 twin: legacy single-heap loop for
+        // window-transparent configs, the windowed schedule (with
+        // synchronizer stats) when a barrier-quantized knob is on.
+        assert_eq!(base.sync_stats.is_some(), eligible && quantized,
+                   "wrong shards=1 twin for eligible={eligible} \
+                    quantized={quantized}");
+        if let Some(stats) = &base.sync_stats {
+            assert!(stats.serialized_reason.is_none(),
+                    "rerouted twin must take the windowed fast path");
+        }
         for k in [2usize, 3, 7] {
-            let got = run_sharded(&cfg, &wl, &plan, k);
+            let got = run_sharded(&cfg, &wl, &plan, k, probes,
+                                  sample_prob);
             assert_parity(&base, &got, k);
             let stats = got.sync_stats
                 .expect("shards>1 must report synchronizer stats");
@@ -187,8 +248,58 @@ fn prop_sharded_parity() {
                        "event conservation violated at shards={k}");
             assert_eq!(stats.delivered_late, 0,
                        "late cross-shard delivery at shards={k}");
+            assert_eq!(stats.serialized_reason.is_some(), !eligible,
+                       "serialized_reason must name the slow path \
+                        exactly when the run is ineligible");
         }
     });
+}
+
+#[test]
+fn prop_serialized_reason_reported() {
+    // Regression: the one remaining ineligible combination — fresh
+    // views (`sync_interval = 0`), under which every dispatch reads
+    // live engine state — must (a) name itself in
+    // `sync_stats.serialized_reason`, (b) open no windows and run
+    // every event on the serialized path, and (c) still hold byte
+    // parity against the `shards = 1` legacy loop, even with every
+    // quantized knob armed at once.
+    let mut cfg = ClusterConfig {
+        n_instances: 6,
+        scheduler: SchedulerKind::Block,
+        ..ClusterConfig::default()
+    };
+    cfg.frontends = 1;
+    cfg.sync_interval = 0.0;
+    cfg.window = 1.0;
+    cfg.sync_on_ack = true;
+    cfg.local_echo = true;
+    cfg.detect.enabled = true;
+    cfg.provision.enabled = true;
+    cfg.provision.initial_instances = 6;
+    cfg.provision.max_instances = 8;
+    cfg.provision.threshold = 20.0;
+    cfg.provision.cold_start = 2.0;
+    cfg.provision.scale_down_idle = 4.0;
+    let wl = WorkloadConfig {
+        kind: WorkloadKind::ShareGpt,
+        qps: 10.0,
+        n_requests: 120,
+        seed: 11,
+    };
+    let base = run_sharded(&cfg, &wl, &None, 1, true, 0.0);
+    assert!(base.sync_stats.is_none(),
+            "fresh views at shards=1 stay on the legacy loop");
+    let got = run_sharded(&cfg, &wl, &None, 4, true, 0.0);
+    assert_parity(&base, &got, 4);
+    let stats = got.sync_stats.expect("shards>1 reports stats");
+    let reason = stats.serialized_reason
+        .expect("ineligible run must name the knob that serialized it");
+    assert!(reason.contains("fresh views"),
+            "unexpected serialized_reason: {reason}");
+    assert_eq!(stats.windows, 0, "ineligible run must open no windows");
+    assert_eq!(stats.popped, stats.serial_events,
+               "every pop must take the serialized path");
 }
 
 #[test]
@@ -230,7 +341,7 @@ fn prop_window_causality() {
         let plan = random_plan(rng, n_instances, frontends, span);
         let shards = rng.randint(2, 8) as usize;
 
-        let res = run_sharded(&cfg, &wl, &plan, shards);
+        let res = run_sharded(&cfg, &wl, &plan, shards, false, 0.0);
         let stats = res.sync_stats
             .expect("shards>1 must report synchronizer stats");
         assert_eq!(stats.delivered_late, 0,
@@ -246,6 +357,9 @@ fn prop_window_causality() {
             assert_eq!(stats.windows, 0, "window=0 must not open windows");
             assert_eq!(stats.delivered, 0);
             assert_eq!(stats.popped, stats.serial_events);
+            assert!(stats.serialized_reason
+                        .is_some_and(|r| r.contains("window")),
+                    "window=0 must name itself as the slow-path cause");
         } else {
             // Eligible config, real window: every non-barrier minimum
             // opens a window, and arrivals are never barrier events —
@@ -253,6 +367,7 @@ fn prop_window_causality() {
             assert!(stats.windows > 0,
                     "eligible run with window={} opened no windows",
                     cfg.window);
+            assert!(stats.serialized_reason.is_none());
         }
         // Conservation of requests rides along.
         assert_eq!(res.metrics.len() as u64 + res.recovery.dropped,
@@ -307,12 +422,12 @@ fn prop_trace_parity_under_shards() {
         let span = wl.n_requests as f64 / wl.qps;
         let plan = random_plan(rng, n_instances, frontends, span);
 
-        let base = run_sharded(&cfg, &wl, &plan, 1);
+        let base = run_sharded(&cfg, &wl, &plan, 1, false, 0.0);
         let base_obs = base.obs.as_ref().expect("obs enabled");
         assert!(!base_obs.trace.is_empty(),
                 "every dispatch leaves a decision record");
         for k in [2usize, 5] {
-            let got = run_sharded(&cfg, &wl, &plan, k);
+            let got = run_sharded(&cfg, &wl, &plan, k, false, 0.0);
             assert_parity(&base, &got, k);
             let obs = got.obs.as_ref().expect("obs enabled");
             let flights = |r: &block::obs::ObsReport| {

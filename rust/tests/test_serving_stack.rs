@@ -186,6 +186,11 @@ fn parity_case(scheduler: SchedulerKind, sync_interval: f64,
         sync_interval,
         shard_policy: ShardPolicy::RoundRobin,
         sync_on_ack,
+        // The wire gateway acks immediately after enqueue; the windowed
+        // simulator quantizes ack syncs to window barriers.  `window: 0`
+        // keeps the sim on the legacy immediate-ack loop so the two
+        // stacks stay step-for-step comparable.
+        window: 0.0,
         ..ClusterConfig::default()
     };
     let wl = WorkloadConfig {
